@@ -1,0 +1,57 @@
+//! Shared mini-bench harness: criterion-style timing rows without criterion
+//! (offline build). Each measurement warms up once, then reports
+//! median/min/max over `iters` runs.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    pub iters: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        let iters = std::env::var("FSEAD_BENCH_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3);
+        Bench { name: name.to_string(), iters }
+    }
+
+    /// Time `f` and print a criterion-style row. Returns median seconds.
+    pub fn run<F: FnMut()>(&self, case: &str, mut f: F) -> f64 {
+        f(); // warm-up
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = times[times.len() / 2];
+        println!(
+            "{}/{case}  time: [{} {} {}]",
+            self.name,
+            fmt(times[0]),
+            fmt(med),
+            fmt(times[times.len() - 1])
+        );
+        med
+    }
+}
+
+pub fn fmt(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.1} µs", secs * 1e6)
+    }
+}
+
+/// Sample cap for bench workloads (override with FSEAD_BENCH_SAMPLES).
+#[allow(dead_code)] // not every bench binary streams a dataset
+pub fn cap() -> usize {
+    std::env::var("FSEAD_BENCH_SAMPLES").ok().and_then(|v| v.parse().ok()).unwrap_or(10_000)
+}

@@ -1,0 +1,58 @@
+//! Bench: Tables 8–10 end-to-end — CPU baseline vs PJRT fabric per
+//! detector per dataset (capped streams; FSEAD_BENCH_SAMPLES to change).
+
+mod bench_util;
+use bench_util::{cap, fmt, Bench};
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::ensemble::run_threaded;
+use fsead::exp::DATASETS;
+use fsead::fabric::Fabric;
+use fsead::hw::timing::FpgaTimingModel;
+
+fn main() {
+    let b = Bench::new("tables8_10");
+    let have_artifacts = std::path::Path::new("artifacts/manifest.txt").exists();
+    let model = FpgaTimingModel::default();
+    for kind in DetectorKind::ALL {
+        for dataset in DATASETS {
+            let ds = fsead::data::Dataset::load(dataset, 42, None).unwrap().prefix(cap());
+            // CPU baseline (paper's 4-thread GCC analogue).
+            let r = 7 * kind.pblock_r();
+            let spec = DetectorSpec::new(kind, ds.d, r, 42);
+            let cpu = b.run(&format!("cpu4/{}/{dataset}", kind.as_str()), || {
+                let s = run_threaded(&spec, &ds, 4);
+                assert_eq!(s.len(), ds.n());
+            });
+            // PJRT fabric (7 pblocks), if artifacts are present.
+            let mut sim = f64::NAN;
+            if have_artifacts {
+                let mut cfg = FseadConfig::default();
+                cfg.chunk = 256;
+                for id in 1..=7usize {
+                    cfg.pblocks.push(PblockCfg {
+                        id,
+                        rm: RmKind::Detector(kind),
+                        r: kind.pblock_r(),
+                        stream: 0,
+                    });
+                }
+                let mut fabric = Fabric::new(cfg, vec![ds.clone()]).unwrap();
+                sim = b.run(&format!("pjrt/{}/{dataset}", kind.as_str()), || {
+                    fabric.reset_all().unwrap();
+                    fabric.run().unwrap();
+                });
+            }
+            let fpga = model.exec_time_s(kind, ds.n(), ds.d);
+            println!(
+                "  -> {}/{dataset}: cpu {} | fpga-model {} | pjrt-sim {} | speedup(model) {:.2}x",
+                kind.as_str(),
+                fmt(cpu),
+                fmt(fpga),
+                if sim.is_nan() { "n/a".into() } else { fmt(sim) },
+                cpu / fpga
+            );
+        }
+    }
+}

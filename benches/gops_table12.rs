@@ -1,0 +1,34 @@
+//! Bench: Table 12 — GOPS achieved by the CPU baseline and modelled for
+//! fSEAD, from the Table 11 operation counts.
+
+mod bench_util;
+use bench_util::{cap, Bench};
+
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::ensemble::run_threaded;
+use fsead::exp::table11_12::params_for;
+use fsead::exp::DATASETS;
+use fsead::hw::opcount::{gops, op_count, paper_gops};
+use fsead::hw::timing::FpgaTimingModel;
+
+fn main() {
+    let b = Bench::new("table12");
+    let model = FpgaTimingModel::default();
+    for kind in DetectorKind::ALL {
+        for dataset in DATASETS {
+            let ds = fsead::data::Dataset::load(dataset, 42, None).unwrap().prefix(cap());
+            let p = params_for(kind, ds.n(), ds.d);
+            let ops = op_count(kind, p);
+            let spec = DetectorSpec::new(kind, ds.d, p.r as usize, 42);
+            let t = b.run(&format!("{}/{dataset}", kind.as_str()), || {
+                run_threaded(&spec, &ds, 4);
+            });
+            let (p_cpu, p_fsead) = paper_gops(kind, dataset).unwrap();
+            println!(
+                "  -> GOPS: cpu {:.2} | fsead-model {:.2} | paper {p_cpu:.2}/{p_fsead:.2}",
+                gops(ops, t),
+                gops(ops, model.exec_time_s(kind, ds.n(), ds.d)),
+            );
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench: Table 13 — RM swap cost in this system (CPU RM rebuild and PJRT
+//! artifact compile) next to the calibrated DFX download model.
+
+mod bench_util;
+use bench_util::Bench;
+
+use fsead::config::{DetectorHyper, RmKind};
+use fsead::detectors::DetectorKind;
+use fsead::fabric::pblock::Pblock;
+use fsead::fabric::reconfig::{DfxManager, ReconfigModel};
+
+fn main() {
+    let b = Bench::new("table13");
+    let hyper = DetectorHyper::default();
+    let mgr = DfxManager::default();
+    let warmup: Vec<f32> = (0..hyper.window * 3).map(|i| (i as f32 * 0.31).sin()).collect();
+    for kind in DetectorKind::ALL {
+        let mut pb = Pblock::new(1);
+        b.run(&format!("swap-cpu/{}", kind.as_str()), || {
+            mgr.reconfigure(&mut pb, RmKind::Detector(kind), 8, 3, 1, &hyper, &warmup, None, false)
+                .unwrap();
+        });
+    }
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let rt = fsead::runtime::Runtime::start("artifacts").unwrap();
+        for name in ["loda_d3_r4", "rshash_d3_r4", "xstream_d3_r4"] {
+            // First compile is the "bitstream download"; cache hits after.
+            let cold = rt.handle().precompile(name).unwrap();
+            println!("table13/compile-cold/{name}  time: [{:.1} ms]", cold * 1e3);
+            b.run(&format!("compile-cached/{name}"), || {
+                rt.handle().precompile(name).unwrap();
+            });
+        }
+    }
+    let model = ReconfigModel::default();
+    println!(
+        "  -> DFX download model: RP-1 {:.1} ms … RP-6 {:.1} ms, COMBO3 {:.1} ms (paper: 604–610 / 580)",
+        model.time_ms("RP-1", true).unwrap(),
+        model.time_ms("RP-6", true).unwrap(),
+        model.time_ms("COMBO3", true).unwrap()
+    );
+}

@@ -1,0 +1,26 @@
+//! Bench: Figures 12–14 — CPU execution time vs ensemble size (linear)
+//! against the flat FPGA model.
+
+mod bench_util;
+use bench_util::{cap, fmt, Bench};
+
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::ensemble::run_sequential;
+use fsead::hw::timing::FpgaTimingModel;
+
+fn main() {
+    let b = Bench::new("figs12_14");
+    let ds = fsead::data::Dataset::load("shuttle", 42, None).unwrap().prefix(cap());
+    let model = FpgaTimingModel::default();
+    for kind in DetectorKind::ALL {
+        let fpga = model.exec_time_s(kind, ds.n(), ds.d);
+        for mult in [1usize, 2, 4, 7] {
+            let r = mult * kind.pblock_r();
+            let spec = DetectorSpec::new(kind, ds.d, r, 42);
+            let t = b.run(&format!("{}/R={r}", kind.as_str()), || {
+                run_sequential(&spec, &ds);
+            });
+            println!("  -> cpu {} vs fpga-model {} (flat in R)", fmt(t), fmt(fpga));
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench: Figure 11 — multi-threaded CPU baseline vs thread count
+//! (xStream, HTTP-3 prefix), per-sample mutex+barrier synchronisation.
+
+mod bench_util;
+use bench_util::{cap, Bench};
+
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::ensemble::run_threaded;
+
+fn main() {
+    let b = Bench::new("fig11");
+    let ds = fsead::data::Dataset::load("http3", 42, None).unwrap().prefix(cap());
+    let kind = DetectorKind::XStream;
+    let spec = DetectorSpec::new(kind, ds.d, 7 * kind.pblock_r(), 42);
+    let mut base = None;
+    for threads in [1usize, 2, 4, 8, 16] {
+        let t = b.run(&format!("xstream/http3/threads={threads}"), || {
+            run_threaded(&spec, &ds, threads);
+        });
+        let b0 = *base.get_or_insert(t);
+        println!("  -> speedup vs 1 thread: {:.2}x (paper peaks at 4 threads)", b0 / t);
+    }
+}

@@ -1,0 +1,68 @@
+"""AOT compile path: lower every manifest variant to HLO *text*.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the rust
+binary is self-contained afterwards — python never sits on the request path.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .manifest import default_variants
+from .model import build_fn_and_specs
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (returns a tuple root)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant) -> str:
+    fn, example_args = build_fn_and_specs(variant)
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated variant names to (re)build")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = {s for s in args.only.split(",") if s}
+    variants = default_variants()
+    lines = []
+    for v in variants:
+        path = os.path.join(args.out_dir, f"{v.name}.hlo.txt")
+        lines.append(v.manifest_line())
+        if only and v.name not in only:
+            continue
+        text = lower_variant(v)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"[aot] {v.name}: {len(text)} chars -> {path}", flush=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest_path, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    print(f"[aot] wrote manifest with {len(lines)} variants -> {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+# L1: Pallas kernels for the detector front-ends (projection + hashing),
+# plus the pure-jnp/numpy oracles in ref.py.
+from .jenkins import jenkins_hash, jenkins_mod
+from .loda import loda_frontend
+from .rshash import rshash_frontend
+from .xstream import xstream_frontend
+
+__all__ = [
+    "jenkins_hash",
+    "jenkins_mod",
+    "loda_frontend",
+    "rshash_frontend",
+    "xstream_frontend",
+]

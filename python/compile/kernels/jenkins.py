@@ -1,0 +1,39 @@
+"""Jenkins one-at-a-time hash (paper Algorithm 4), vectorised for JAX.
+
+The rust CPU baseline (``rust/src/detectors/jenkins.rs``) implements the
+identical uint32 wrapping sequence; ``python/tests/test_jenkins.py`` checks
+bit-exactness against shared test vectors.
+
+All arithmetic is uint32 with natural wraparound (jnp uint32 == rust
+``u32.wrapping_*``).
+"""
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def jenkins_hash(keys: jnp.ndarray, seed) -> jnp.ndarray:
+    """Hash the trailing axis of ``keys``.
+
+    keys : int32/uint32 array [..., L] — the key words (paper hashes the
+           quantised projection values).
+    seed : scalar or array broadcastable to keys[..., 0] — paper uses the
+           CMS row index (1-based).
+    Returns uint32 array [...] — raw hash (caller applies ``% MOD``).
+    """
+    k = keys.astype(U32)
+    h = jnp.broadcast_to(jnp.asarray(seed, dtype=U32), k.shape[:-1])
+    for i in range(k.shape[-1]):  # L is static → unrolled, matches HLS PIPELINE
+        h = h + k[..., i]
+        h = h + (h << U32(10))
+        h = h ^ (h >> U32(6))
+    h = h + (h << U32(3))
+    h = h ^ (h >> U32(11))
+    h = h + (h << U32(15))
+    return h
+
+
+def jenkins_mod(keys: jnp.ndarray, seed, mod: int) -> jnp.ndarray:
+    """``jenkins_hash % mod`` as int32 (table index)."""
+    return (jenkins_hash(keys, seed) % U32(mod)).astype(jnp.int32)

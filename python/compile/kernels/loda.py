@@ -1,0 +1,43 @@
+"""Loda front-end Pallas kernel (paper Algorithm 1, blocks ③+④a).
+
+The FPGA design runs R sub-detector projection pipelines spatially in
+parallel (HLS ``DATAFLOW`` + ``PIPELINE II=1``). On the TPU-shaped Pallas
+model this becomes ONE matmul ``[C,d] × [d,R]`` feeding the MXU, followed by
+element-wise binning on the VPU — projection is state-independent, so the
+whole chunk is computed up front and only the sliding-window update (⑤)
+remains sequential (handled in the L2 scan).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact runs on any
+backend. Real-TPU VMEM/MXU estimates live in DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _loda_kernel(x_ref, prj_ref, pmin_ref, pmax_ref, idx_ref, *, bins: int):
+    # ③ Projection: one MXU matmul replaces R parallel dot-product pipelines.
+    x = x_ref[...]                      # [C,d] f32 (VMEM block)
+    prj = prj_ref[...]                  # [R,d] f32
+    z = jnp.dot(x, prj.T, preferred_element_type=jnp.float32)   # [C,R]
+    # ④a Histogram binning (the gather/update against state happens in L2).
+    pmin = pmin_ref[...]                # [R]
+    span = jnp.maximum(pmax_ref[...] - pmin, 1e-12)
+    idx = jnp.floor((z - pmin[None, :]) / span[None, :] * bins)
+    idx_ref[...] = jnp.clip(idx, 0, bins - 1).astype(jnp.int32)
+
+
+def loda_frontend(x, prj, pmin, pmax, *, bins: int):
+    """x [C,d], prj [R,d], pmin/pmax [R] → histogram bin indices [C,R] i32."""
+    c, _ = x.shape
+    r, _ = prj.shape
+    kernel = functools.partial(_loda_kernel, bins=bins)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((c, r), jnp.int32),
+        interpret=True,
+    )(x, prj, pmin, pmax)

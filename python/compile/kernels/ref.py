@@ -1,0 +1,200 @@
+"""Pure-jnp / numpy correctness oracles.
+
+Two tiers:
+
+1. ``*_frontend_ref`` — pure jnp implementations of the state-independent
+   front-end (projection ③ + core hashing/binning ④) that the Pallas kernels
+   accelerate. pytest asserts kernel == ref.
+2. ``Streaming*Ref`` — slow, obviously-correct per-sample numpy
+   implementations of the full detectors (①–⑦), used to validate the
+   scan-based L2 model end to end.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from .jenkins import jenkins_mod
+
+# ---------------------------------------------------------------------------
+# Tier 1: batched front-end oracles (match the Pallas kernels exactly)
+# ---------------------------------------------------------------------------
+
+
+def loda_frontend_ref(x, prj, pmin, pmax, bins: int):
+    """x [C,d] f32, prj [R,d], pmin/pmax [R] → bin index [C,R] int32."""
+    z = x @ prj.T                                            # [C,R]
+    span = jnp.maximum(pmax - pmin, 1e-12)
+    idx = jnp.floor((z - pmin) / span * bins)
+    return jnp.clip(idx, 0, bins - 1).astype(jnp.int32)
+
+
+def rshash_frontend_ref(x, dmin, dmax, alpha, f, w: int, mod: int):
+    """x [C,d], dmin/dmax [d], alpha [R,d], f [R] → CMS index [C,R,w] int32."""
+    span = jnp.maximum(dmax - dmin, 1e-12)
+    norm = (x - dmin) / span                                 # [C,d]
+    prj = (norm[:, None, :] + alpha[None, :, :]) / f[None, :, None]  # [C,R,d]
+    g = jnp.floor(prj).astype(jnp.int32)                     # integer grid key
+    rows = []
+    for row in range(w):
+        rows.append(jenkins_mod(g, row + 1, mod))            # seed = 1-based row
+    return jnp.stack(rows, axis=-1)                          # [C,R,w]
+
+
+def xstream_frontend_ref(x, proj, shift, width, w: int, mod: int):
+    """x [C,d], proj [R,d,K], shift [R,w,K], width [R,K] → [C,R,w] int32.
+
+    Half-space-chain binning: row i (1-based) uses bin width ``width / 2^i``.
+    """
+    z = jnp.einsum("cd,rdk->crk", x, proj)                   # [C,R,K]
+    rows = []
+    for row in range(w):
+        scale = (2.0 ** (row + 1)) / jnp.maximum(width, 1e-12)   # [R,K]
+        b = jnp.floor((z - shift[:, row, :][None]) * scale[None])
+        rows.append(jenkins_mod(b.astype(jnp.int32), row + 1, mod))
+    return jnp.stack(rows, axis=-1)                          # [C,R,w]
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: per-sample streaming references (numpy, slow, obviously correct)
+# ---------------------------------------------------------------------------
+
+
+def _jenkins_np(key_words, seed):
+    h = np.uint32(seed)
+    with np.errstate(over="ignore"):
+        for kw in key_words:
+            h = np.uint32(h + np.uint32(kw))
+            h = np.uint32(h + np.uint32(h << np.uint32(10)))
+            h = np.uint32(h ^ (h >> np.uint32(6)))
+        h = np.uint32(h + np.uint32(h << np.uint32(3)))
+        h = np.uint32(h ^ (h >> np.uint32(11)))
+        h = np.uint32(h + np.uint32(h << np.uint32(15)))
+    return h
+
+
+def quantize_q16_16(v):
+    """Q16.16 fixed point (ap_fixed<32,16> analogue)."""
+    q = np.round(np.asarray(v, np.float64) * 65536.0).astype(np.int64)
+    return np.float32(q.astype(np.float64) / 65536.0)
+
+
+class _StreamBase:
+    """Shared sliding-window machinery (⑤) — ring of inserted table indices."""
+
+    def __init__(self, window):
+        self.window = window
+        self.pos = 0
+        self.n = 0
+
+    def _denom(self):
+        return max(min(self.n, self.window), 1)
+
+
+class StreamingLodaRef(_StreamBase):
+    def __init__(self, prj, pmin, pmax, bins, window):
+        super().__init__(window)
+        self.prj = np.asarray(prj, np.float32)
+        self.pmin = np.asarray(pmin, np.float32)
+        self.pmax = np.asarray(pmax, np.float32)
+        self.bins = bins
+        self.R = self.prj.shape[0]
+        self.hist = np.zeros((self.R, bins), np.int32)
+        self.ring = np.zeros((self.R, window), np.int32)
+
+    def update(self, x):
+        x = np.asarray(x, np.float32)
+        z = self.prj @ x                                     # [R]
+        span = np.maximum(self.pmax - self.pmin, 1e-12)
+        idx = np.floor((z - self.pmin) / span * self.bins)
+        idx = np.clip(idx, 0, self.bins - 1).astype(np.int32)
+        c = self.hist[np.arange(self.R), idx]
+        score = np.mean(np.log2(self._denom()) - np.log2(np.maximum(c, 1)))
+        if self.n >= self.window:
+            old = self.ring[:, self.pos]
+            self.hist[np.arange(self.R), old] -= 1
+        self.hist[np.arange(self.R), idx] += 1
+        self.ring[:, self.pos] = idx
+        self.pos = (self.pos + 1) % self.window
+        self.n += 1
+        return np.float32(score)
+
+
+class StreamingRsHashRef(_StreamBase):
+    def __init__(self, dmin, dmax, alpha, f, w, mod, window):
+        super().__init__(window)
+        self.dmin = np.asarray(dmin, np.float32)
+        self.dmax = np.asarray(dmax, np.float32)
+        self.alpha = np.asarray(alpha, np.float32)
+        self.f = np.asarray(f, np.float32)
+        self.w, self.mod = w, mod
+        self.R = self.alpha.shape[0]
+        self.cms = np.zeros((self.R, w, mod), np.int32)
+        self.ring = np.zeros((self.R, w, window), np.int32)
+
+    def _indices(self, x):
+        span = np.maximum(self.dmax - self.dmin, 1e-12)
+        norm = (np.asarray(x, np.float32) - self.dmin) / span
+        idx = np.zeros((self.R, self.w), np.int32)
+        for r in range(self.R):
+            g = np.floor((norm + self.alpha[r]) / self.f[r]).astype(np.int32)
+            for row in range(self.w):
+                idx[r, row] = _jenkins_np(g.astype(np.uint32), row + 1) % self.mod
+        return idx
+
+    def update(self, x):
+        idx = self._indices(x)
+        rr = np.arange(self.R)[:, None]
+        ww = np.arange(self.w)[None, :]
+        c = self.cms[rr, ww, idx]                            # [R,w]
+        mins = c.min(axis=1)                                 # [R]
+        score = np.mean(np.log2(self._denom()) - np.log2(1.0 + mins))
+        if self.n >= self.window:
+            old = self.ring[:, :, self.pos]
+            np.add.at(self.cms, (rr, ww, old), -1)
+        np.add.at(self.cms, (rr, ww, idx), 1)
+        self.ring[:, :, self.pos] = idx
+        self.pos = (self.pos + 1) % self.window
+        self.n += 1
+        return np.float32(score)
+
+
+class StreamingXStreamRef(_StreamBase):
+    def __init__(self, proj, shift, width, w, mod, window):
+        super().__init__(window)
+        self.proj = np.asarray(proj, np.float32)             # [R,d,K]
+        self.shift = np.asarray(shift, np.float32)           # [R,w,K]
+        self.width = np.asarray(width, np.float32)           # [R,K]
+        self.w, self.mod = w, mod
+        self.R = self.proj.shape[0]
+        self.cms = np.zeros((self.R, w, mod), np.int32)
+        self.ring = np.zeros((self.R, w, window), np.int32)
+
+    def _indices(self, x):
+        x = np.asarray(x, np.float32)
+        idx = np.zeros((self.R, self.w), np.int32)
+        for r in range(self.R):
+            z = x @ self.proj[r]                             # [K]
+            for row in range(self.w):
+                scale = np.float32(2.0 ** (row + 1)) / np.maximum(
+                    self.width[r], np.float32(1e-12)
+                )
+                b = np.floor((z - self.shift[r, row]) * scale).astype(np.int32)
+                idx[r, row] = _jenkins_np(b.astype(np.uint32), row + 1) % self.mod
+        return idx
+
+    def update(self, x):
+        idx = self._indices(x)
+        rr = np.arange(self.R)[:, None]
+        ww = np.arange(self.w)[None, :]
+        c = self.cms[rr, ww, idx].astype(np.float64)         # [R,w]
+        weighted = c * (2.0 ** (np.arange(self.w)[None, :] + 1))
+        mins = weighted.min(axis=1)
+        score = np.mean(np.log2(self._denom()) - np.log2(1.0 + mins))
+        if self.n >= self.window:
+            old = self.ring[:, :, self.pos]
+            np.add.at(self.cms, (rr, ww, old), -1)
+        np.add.at(self.cms, (rr, ww, idx), 1)
+        self.ring[:, :, self.pos] = idx
+        self.pos = (self.pos + 1) % self.window
+        self.n += 1
+        return np.float32(score)

@@ -1,0 +1,54 @@
+"""RS-Hash front-end Pallas kernel (paper Algorithm 2, blocks ③+④).
+
+Per sample: min-max normalise, shift by α_r, scale by 1/f_r, floor to the
+integer grid, then Jenkins-hash the d grid cells once per CMS row
+(seed = 1-based row). The FPGA unrolls the w CMS rows (HLS ``UNROLL``) and
+pipelines the per-dimension loop (``PIPELINE II=1``); here both become array
+axes evaluated in one kernel invocation — [C,R] lanes per row on the VPU,
+with the d-step Jenkins recurrence unrolled (d is static).
+
+Output: CMS table indices [C,R,w] int32 for the L2 sliding-window scan.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+
+
+def _rshash_kernel(x_ref, dmin_ref, dmax_ref, alpha_ref, f_ref, idx_ref,
+                   *, w: int, mod: int):
+    x = x_ref[...]                                    # [C,d]
+    dmin = dmin_ref[...]                              # [d]
+    span = jnp.maximum(dmax_ref[...] - dmin, 1e-12)
+    norm = (x - dmin[None, :]) / span[None, :]        # [C,d]
+    alpha = alpha_ref[...]                            # [R,d]
+    f = f_ref[...]                                    # [R]
+    prj = (norm[:, None, :] + alpha[None, :, :]) / f[None, :, None]  # [C,R,d]
+    g = jnp.floor(prj).astype(jnp.int32).astype(U32)  # integer grid key
+    d = g.shape[-1]
+    for row in range(w):                              # HLS UNROLL over CMS rows
+        h = jnp.full(g.shape[:-1], row + 1, dtype=U32)
+        for i in range(d):                            # HLS PIPELINE: d static
+            h = h + g[..., i]
+            h = h + (h << U32(10))
+            h = h ^ (h >> U32(6))
+        h = h + (h << U32(3))
+        h = h ^ (h >> U32(11))
+        h = h + (h << U32(15))
+        idx_ref[..., row] = (h % U32(mod)).astype(jnp.int32)
+
+
+def rshash_frontend(x, dmin, dmax, alpha, f, *, w: int, mod: int):
+    """x [C,d], dmin/dmax [d], alpha [R,d], f [R] → CMS indices [C,R,w] i32."""
+    c, _ = x.shape
+    r, _ = alpha.shape
+    kernel = functools.partial(_rshash_kernel, w=w, mod=mod)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((c, r, w), jnp.int32),
+        interpret=True,
+    )(x, dmin, dmax, alpha, f)

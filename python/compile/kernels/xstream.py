@@ -1,0 +1,58 @@
+"""xStream front-end Pallas kernel (paper Algorithm 3, blocks ③+④).
+
+Per sub-detector r the sample is densely projected ``[d] → [K]`` (the paper
+UNROLLs the K-wide accumulation; here the R·K lanes become one contracted
+einsum on the MXU), then *perbins* half-space-chain binning is applied per
+CMS row — row i (1-based) halves the bin width: ``Δ_k / 2^i`` — and the K
+bins are Jenkins-hashed (seed = 1-based row) into the CMS index space.
+
+Output: CMS table indices [C,R,w] int32 for the L2 sliding-window scan.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+
+
+def _xstream_kernel(x_ref, proj_ref, shift_ref, width_ref, idx_ref,
+                    *, w: int, mod: int):
+    x = x_ref[...]                                    # [C,d]
+    proj = proj_ref[...]                              # [R,d,K]
+    r_dim, d, k = proj.shape
+    # ③ Projection: contraction over d → [C,R,K] (MXU-shaped).
+    z = jax.lax.dot_general(
+        x, proj,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                 # [C,R,K]
+    width = jnp.maximum(width_ref[...], 1e-12)        # [R,K]
+    shift = shift_ref[...]                            # [R,w,K]
+    for row in range(w):                              # HLS UNROLL over CMS rows
+        scale = (2.0 ** (row + 1)) / width            # [R,K]
+        b = jnp.floor((z - shift[None, :, row, :]) * scale[None])
+        g = b.astype(jnp.int32).astype(U32)           # [C,R,K]
+        h = jnp.full(g.shape[:-1], row + 1, dtype=U32)
+        for i in range(k):                            # HLS PIPELINE: K static
+            h = h + g[..., i]
+            h = h + (h << U32(10))
+            h = h ^ (h >> U32(6))
+        h = h + (h << U32(3))
+        h = h ^ (h >> U32(11))
+        h = h + (h << U32(15))
+        idx_ref[..., row] = (h % U32(mod)).astype(jnp.int32)
+
+
+def xstream_frontend(x, proj, shift, width, *, w: int, mod: int):
+    """x [C,d], proj [R,d,K], shift [R,w,K], width [R,K] → [C,R,w] i32."""
+    c, _ = x.shape
+    r = proj.shape[0]
+    kernel = functools.partial(_xstream_kernel, w=w, mod=mod)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((c, r, w), jnp.int32),
+        interpret=True,
+    )(x, proj, shift, width)

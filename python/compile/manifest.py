@@ -1,0 +1,93 @@
+"""Artifact manifest: the single source of truth for which AOT variants exist.
+
+Mirrors paper Table 4 hyper-parameters:
+  window W=128, Loda bins B=20, CMS rows w=2 (Loda uses a 1-row histogram),
+  CMS width MOD=128, xStream projection size K=20.
+
+Per-pblock ensemble sizes follow paper Table 7: 35 Loda / 25 RS-Hash /
+20 xStream sub-detectors fit the smallest pblock (RP-3).
+
+The rust coordinator parses ``artifacts/manifest.txt`` (one line per
+artifact, ``key=value`` tokens) — keep that format stable.
+"""
+
+from dataclasses import dataclass, field
+
+
+# -- paper Table 4 defaults ------------------------------------------------
+WINDOW = 128          # sliding-window length W
+LODA_BINS = 20        # histogram bins
+CMS_ROWS = 2          # w: hash functions per CMS
+CMS_MOD = 128         # CMS table width (power of two)
+XSTREAM_K = 20        # xStream projection size
+CHUNK = 256           # streaming chunk size C per executable invocation
+
+# paper Table 7: sub-detectors per pblock (sized for the smallest pblock RP-3)
+PBLOCK_R = {"loda": 35, "rshash": 25, "xstream": 20}
+
+# paper Table 3 dataset dimensionalities: cardio=21, shuttle=9, smtp3/http3=3
+DATASET_DIMS = (3, 9, 21)
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One AOT artifact = one 'reconfigurable module bitstream'."""
+
+    kind: str                 # loda | rshash | xstream | bypass | combo
+    d: int = 0                # input feature dimension (0 for combos)
+    r: int = 0                # ensemble size within the pblock
+    chunk: int = CHUNK
+    window: int = WINDOW
+    bins: int = LODA_BINS
+    w: int = CMS_ROWS
+    mod: int = CMS_MOD
+    k: int = XSTREAM_K
+    combo: str = ""           # avg | max | wavg | or | vote
+    quantize: bool = True     # Q16.16 score quantisation (ap_fixed<32,16>)
+
+    @property
+    def name(self) -> str:
+        if self.kind == "bypass":
+            return f"bypass_d{self.d}"
+        if self.kind == "combo":
+            return f"combo_{self.combo}"
+        q = "" if self.quantize else "_f32"
+        return f"{self.kind}_d{self.d}_r{self.r}{q}"
+
+    def manifest_line(self) -> str:
+        toks = [
+            f"name={self.name}",
+            f"kind={self.kind}",
+            f"d={self.d}",
+            f"r={self.r}",
+            f"chunk={self.chunk}",
+            f"window={self.window}",
+            f"bins={self.bins}",
+            f"w={self.w}",
+            f"mod={self.mod}",
+            f"k={self.k}",
+            f"combo={self.combo or '-'}",
+            f"quantize={int(self.quantize)}",
+            f"file={self.name}.hlo.txt",
+        ]
+        return " ".join(toks)
+
+
+def default_variants() -> list[Variant]:
+    """Everything ``make artifacts`` builds."""
+    out: list[Variant] = []
+    # Full-size pblock detectors for every dataset dimensionality.
+    for kind, r in PBLOCK_R.items():
+        for d in DATASET_DIMS:
+            out.append(Variant(kind=kind, d=d, r=r))
+    # Small test variants: fast to execute in rust integration tests.
+    for kind in PBLOCK_R:
+        out.append(Variant(kind=kind, d=3, r=4))
+        out.append(Variant(kind=kind, d=3, r=4, quantize=False))
+    # Bypass (identity) RMs: d-wide passthrough, plus d=1 for score streams.
+    for d in (1,) + DATASET_DIMS:
+        out.append(Variant(kind="bypass", d=d))
+    # Combo RMs (paper Table 2): 4 input score/label streams.
+    for combo in ("avg", "max", "wavg", "or", "vote"):
+        out.append(Variant(kind="combo", combo=combo))
+    return out

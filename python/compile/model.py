@@ -1,0 +1,299 @@
+"""L2: streaming detector models (paper Algorithms 1–3, blocks ①–⑦).
+
+Each detector is a *chunk step*: it consumes a chunk of C samples plus the
+sliding-window state, and returns per-sample ensemble anomaly scores plus the
+updated state. The state-independent front-end (projection ③ + hashing ④) is
+computed for the whole chunk by one Pallas kernel call (L1); only the
+sliding-window update (⑤) is sequential, expressed as a ``lax.scan``.
+
+The rust coordinator executes these as AOT-compiled HLO with state threaded
+through successive invocations — streaming semantics are exact (sample i's
+score never sees sample j ≥ i).
+
+Padding: the final chunk of a stream is padded; ``mask`` marks valid samples.
+Masked samples produce score 0 and leave the state untouched.
+
+Scores: ``log2(min(n,W)) − log2(count-term)`` — a monotone transform of the
+paper's ``−log2(c/W)`` family (Table 1), so ROC-AUC is identical; higher
+means more anomalous. With ``quantize=True`` scores are rounded to Q16.16,
+the ap_fixed<32,16> analogue (paper §4.4).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import loda_frontend, rshash_frontend, xstream_frontend
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    """Static configuration baked into one artifact (see manifest.Variant)."""
+
+    d: int
+    r: int
+    chunk: int = 256
+    window: int = 128
+    bins: int = 20
+    w: int = 2
+    mod: int = 128
+    k: int = 20
+    quantize: bool = True
+
+
+def _q16(scores):
+    """Q16.16 fixed-point rounding (ap_fixed<32,16> analogue)."""
+    return jnp.round(scores * 65536.0).astype(jnp.int32).astype(jnp.float32) / 65536.0
+
+
+def _finish(cfg, scores):
+    return _q16(scores) if cfg.quantize else scores
+
+
+# ---------------------------------------------------------------------------
+# Loda (Algorithm 1): histogram core, 1×W window
+# ---------------------------------------------------------------------------
+
+
+def loda_init_state(cfg: DetectorConfig):
+    return (
+        jnp.zeros((cfg.r, cfg.bins), jnp.int32),    # hist
+        jnp.zeros((cfg.r, cfg.window), jnp.int32),  # ring of inserted bins
+        jnp.zeros((1,), jnp.int32),                 # pos
+        jnp.zeros((1,), jnp.int32),                 # n (samples seen)
+    )
+
+
+#: lax.scan unroll factor for the sliding-window loops.
+#: §Perf ablation (EXPERIMENTS.md): on jaxlib 0.8.2's XLA, unroll=16 wins
+#: 2.8× for Loda (6.9 → 2.5 µs/sample); on the *deployed* runtime
+#: (xla_extension 0.5.1) it is neutral-to-slightly-worse while costing 10×
+#: in compile time, so the shipped default is 1. Override with
+#: FSEAD_SCAN_UNROLL=16 when targeting a modern PJRT runtime.
+import os as _os
+
+SCAN_UNROLL = int(_os.environ.get("FSEAD_SCAN_UNROLL", "1"))
+
+
+def loda_chunk(cfg: DetectorConfig, x, mask, prj, pmin, pmax,
+               hist, ring, pos, n, *, use_ref: bool = False):
+    """x [C,d] f32, mask [C] f32 → (scores [C], hist', ring', pos', n')."""
+    frontend = kref.loda_frontend_ref if use_ref else loda_frontend
+    idx = frontend(x, prj, pmin, pmax, bins=cfg.bins)        # [C,R] i32
+    rr = jnp.arange(cfg.r)
+    rr2 = jnp.concatenate([rr, rr])
+    ones_r = jnp.ones(cfg.r, jnp.int32)
+    win = jnp.int32(cfg.window)
+
+    def step(carry, inp):
+        hist, ring, pos, n = carry
+        idx_c, m = inp
+        valid = m > 0.5
+        p = pos[0]
+        nn = n[0]
+        # ⑥ Score (read-before-insert, per Algorithm 1 line 15/19)
+        denom = jnp.maximum(jnp.minimum(nn, win), 1).astype(jnp.float32)
+        c = hist[rr, idx_c].astype(jnp.float32)
+        score = jnp.mean(jnp.log2(denom) - jnp.log2(jnp.maximum(c, 1.0)))
+        # ⑤ Sliding-window update: insert new + evict oldest as ONE fused
+        #   scatter-add (§Perf: halves the scatter count; adds commute).
+        evict = (nn >= win) & valid
+        old = ring[:, p]
+        upd = jnp.concatenate([
+            jnp.where(valid, 1, 0) * ones_r,
+            jnp.where(evict, -1, 0) * ones_r,
+        ])
+        hist = hist.at[rr2, jnp.concatenate([idx_c, old])].add(upd)
+        ring = ring.at[:, p].set(jnp.where(valid, idx_c, old))
+        pos = jnp.where(valid, (pos + 1) % win, pos)
+        n = jnp.where(valid, n + 1, n)
+        return (hist, ring, pos, n), jnp.where(valid, score, 0.0)
+
+    (hist, ring, pos, n), scores = lax.scan(
+        step, (hist, ring, pos, n), (idx, mask), unroll=SCAN_UNROLL
+    )
+    return (_finish(cfg, scores), hist, ring, pos, n)
+
+
+# ---------------------------------------------------------------------------
+# RS-Hash (Algorithm 2) and xStream (Algorithm 3): CMS core, w×W window
+# ---------------------------------------------------------------------------
+
+
+def cms_init_state(cfg: DetectorConfig):
+    return (
+        jnp.zeros((cfg.r, cfg.w, cfg.mod), jnp.int32),     # cms
+        jnp.zeros((cfg.r, cfg.w, cfg.window), jnp.int32),  # ring of indices
+        jnp.zeros((1,), jnp.int32),                        # pos
+        jnp.zeros((1,), jnp.int32),                        # n
+    )
+
+
+def _cms_scan(cfg: DetectorConfig, idx, mask, cms, ring, pos, n, row_weights):
+    """Shared CMS sliding-window scan. idx [C,R,w]; row_weights [w] scales the
+    per-row counts before the min (1 for RS-Hash, 2^row for xStream)."""
+    rr = jnp.arange(cfg.r)[:, None]
+    ww = jnp.arange(cfg.w)[None, :]
+    win = jnp.int32(cfg.window)
+    rw = row_weights[None, :]                                # [1,w]
+
+    def step(carry, inp):
+        cms, ring, pos, n = carry
+        idx_c, m = inp                                       # [R,w], scalar
+        valid = m > 0.5
+        p = pos[0]
+        nn = n[0]
+        denom = jnp.maximum(jnp.minimum(nn, win), 1).astype(jnp.float32)
+        c = cms[rr, ww, idx_c].astype(jnp.float32)           # [R,w]
+        mins = jnp.min(c * rw, axis=1)                       # [R]
+        score = jnp.mean(jnp.log2(denom) - jnp.log2(1.0 + mins))
+        evict = (nn >= win) & valid
+        old = ring[:, :, p]
+        cms = cms.at[rr, ww, old].add(jnp.where(evict, -1, 0))
+        cms = cms.at[rr, ww, idx_c].add(jnp.where(valid, 1, 0))
+        ring = ring.at[:, :, p].set(jnp.where(valid, idx_c, old))
+        pos = jnp.where(valid, (pos + 1) % win, pos)
+        n = jnp.where(valid, n + 1, n)
+        return (cms, ring, pos, n), jnp.where(valid, score, 0.0)
+
+    (cms, ring, pos, n), scores = lax.scan(
+        step, (cms, ring, pos, n), (idx, mask), unroll=SCAN_UNROLL
+    )
+    return scores, cms, ring, pos, n
+
+
+def rshash_chunk(cfg: DetectorConfig, x, mask, dmin, dmax, alpha, f,
+                 cms, ring, pos, n, *, use_ref: bool = False):
+    """x [C,d] → (scores [C], cms', ring', pos', n')."""
+    frontend = kref.rshash_frontend_ref if use_ref else rshash_frontend
+    idx = frontend(x, dmin, dmax, alpha, f, w=cfg.w, mod=cfg.mod)
+    weights = jnp.ones((cfg.w,), jnp.float32)
+    scores, cms, ring, pos, n = _cms_scan(cfg, idx, mask, cms, ring, pos, n, weights)
+    return (_finish(cfg, scores), cms, ring, pos, n)
+
+
+def xstream_chunk(cfg: DetectorConfig, x, mask, proj, shift, width,
+                  cms, ring, pos, n, *, use_ref: bool = False):
+    """x [C,d] → (scores [C], cms', ring', pos', n')."""
+    frontend = kref.xstream_frontend_ref if use_ref else xstream_frontend
+    idx = frontend(x, proj, shift, width, w=cfg.w, mod=cfg.mod)
+    weights = 2.0 ** (jnp.arange(cfg.w, dtype=jnp.float32) + 1.0)
+    scores, cms, ring, pos, n = _cms_scan(cfg, idx, mask, cms, ring, pos, n, weights)
+    return (_finish(cfg, scores), cms, ring, pos, n)
+
+
+# ---------------------------------------------------------------------------
+# Bypass + Combo RMs (paper Table 2, Figure 20)
+# ---------------------------------------------------------------------------
+
+
+def bypass(x):
+    """Identity RM — the paper's default/bypass pblock logic."""
+    return (x,)
+
+
+def combo_avg(scores, active):
+    """Averaging (GG_A). scores [C,4], active [4] ∈ {0,1}."""
+    tot = jnp.maximum(jnp.sum(active), 1.0)
+    return (jnp.sum(scores * active[None, :], axis=1) / tot,)
+
+
+def combo_max(scores, active):
+    """Maximization (GG_M)."""
+    neg = jnp.float32(-3.0e38)
+    masked = jnp.where(active[None, :] > 0.5, scores, neg)
+    return (jnp.max(masked, axis=1),)
+
+
+def combo_wavg(scores, active, weights):
+    """Weighted average (GG_WA); weights renormalised over active inputs."""
+    aw = active * weights
+    tot = jnp.maximum(jnp.sum(aw), 1e-12)
+    return (jnp.sum(scores * aw[None, :], axis=1) / tot,)
+
+
+def combo_or(labels, active):
+    """OR combination of binary labels: anomaly if any active input is 1."""
+    return (jnp.max(labels * active[None, :], axis=1),)
+
+
+def combo_vote(labels, active):
+    """Majority voting; ties resolve to anomaly (consistent with OR's
+    don't-miss-an-anomaly bias, paper §4.2)."""
+    votes = jnp.sum(labels * active[None, :], axis=1)
+    quorum = jnp.sum(active)
+    return ((2.0 * votes >= quorum).astype(jnp.float32),)
+
+
+# ---------------------------------------------------------------------------
+# Variant → (callable, example args) for AOT lowering
+# ---------------------------------------------------------------------------
+
+
+def build_fn_and_specs(variant):
+    """Return (fn, example_args) for ``jax.jit(fn).lower(*example_args)``."""
+    f32, i32 = jnp.float32, jnp.int32
+    S = jax.ShapeDtypeStruct
+    if variant.kind == "bypass":
+        return bypass, (S((variant.chunk, variant.d), f32),)
+    if variant.kind == "combo":
+        sc = S((variant.chunk, 4), f32)
+        a = S((4,), f32)
+        fns = {
+            "avg": (combo_avg, (sc, a)),
+            "max": (combo_max, (sc, a)),
+            "wavg": (combo_wavg, (sc, a, S((4,), f32))),
+            "or": (combo_or, (sc, a)),
+            "vote": (combo_vote, (sc, a)),
+        }
+        return fns[variant.combo]
+
+    cfg = DetectorConfig(
+        d=variant.d, r=variant.r, chunk=variant.chunk, window=variant.window,
+        bins=variant.bins, w=variant.w, mod=variant.mod, k=variant.k,
+        quantize=variant.quantize,
+    )
+    x = S((cfg.chunk, cfg.d), f32)
+    mask = S((cfg.chunk,), f32)
+    pos = S((1,), i32)
+    n = S((1,), i32)
+    if variant.kind == "loda":
+        fn = functools.partial(loda_chunk, cfg)
+        args = (
+            x, mask,
+            S((cfg.r, cfg.d), f32),               # prj
+            S((cfg.r,), f32), S((cfg.r,), f32),   # pmin, pmax
+            S((cfg.r, cfg.bins), i32),            # hist
+            S((cfg.r, cfg.window), i32),          # ring
+            pos, n,
+        )
+        return fn, args
+    if variant.kind == "rshash":
+        fn = functools.partial(rshash_chunk, cfg)
+        args = (
+            x, mask,
+            S((cfg.d,), f32), S((cfg.d,), f32),   # dmin, dmax
+            S((cfg.r, cfg.d), f32),               # alpha
+            S((cfg.r,), f32),                     # f
+            S((cfg.r, cfg.w, cfg.mod), i32),      # cms
+            S((cfg.r, cfg.w, cfg.window), i32),   # ring
+            pos, n,
+        )
+        return fn, args
+    if variant.kind == "xstream":
+        fn = functools.partial(xstream_chunk, cfg)
+        args = (
+            x, mask,
+            S((cfg.r, cfg.d, cfg.k), f32),        # proj
+            S((cfg.r, cfg.w, cfg.k), f32),        # shift
+            S((cfg.r, cfg.k), f32),               # width
+            S((cfg.r, cfg.w, cfg.mod), i32),      # cms
+            S((cfg.r, cfg.w, cfg.window), i32),   # ring
+            pos, n,
+        )
+        return fn, args
+    raise ValueError(f"unknown variant kind: {variant.kind}")

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Allow `import compile.*` when pytest is invoked from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Pallas interpret mode is slow; keep sweeps tight but meaningful.
+settings.register_profile("fsead", max_examples=20, deadline=None)
+settings.load_profile("fsead")

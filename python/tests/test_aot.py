@@ -1,0 +1,56 @@
+"""AOT path: every variant kind lowers to loadable HLO text; the manifest is
+well-formed and enumerates every artifact the rust coordinator expects."""
+
+import pytest
+
+from compile.manifest import Variant, default_variants, PBLOCK_R, DATASET_DIMS
+from compile.aot import lower_variant
+
+
+SMALL = dict(chunk=8, window=4, bins=5, w=2, mod=16, k=3)
+
+
+@pytest.mark.parametrize("kind", ["loda", "rshash", "xstream"])
+def test_detector_variant_lowers(kind):
+    v = Variant(kind=kind, d=3, r=2, **SMALL)
+    text = lower_variant(v)
+    assert text.startswith("HloModule")
+    # 5-tuple output: scores + 4 state arrays.
+    assert "->(f32[8]{0}, " in text.replace("\n", "")
+
+
+@pytest.mark.parametrize("combo", ["avg", "max", "wavg", "or", "vote"])
+def test_combo_variant_lowers(combo):
+    v = Variant(kind="combo", combo=combo, chunk=8)
+    text = lower_variant(v)
+    assert text.startswith("HloModule")
+
+
+def test_bypass_variant_lowers():
+    text = lower_variant(Variant(kind="bypass", d=3, chunk=8))
+    assert "f32[8,3]" in text
+
+
+def test_manifest_covers_all_pblock_detectors():
+    names = {v.name for v in default_variants()}
+    for kind, r in PBLOCK_R.items():
+        for d in DATASET_DIMS:
+            assert f"{kind}_d{d}_r{r}" in names
+    for combo in ("avg", "max", "wavg", "or", "vote"):
+        assert f"combo_{combo}" in names
+    assert "bypass_d1" in names
+
+
+def test_manifest_lines_parse_as_kv():
+    for v in default_variants():
+        toks = v.manifest_line().split()
+        kv = dict(t.split("=", 1) for t in toks)
+        assert kv["name"] == v.name
+        assert kv["file"] == f"{v.name}.hlo.txt"
+        assert int(kv["chunk"]) > 0
+        assert kv["kind"] in ("loda", "rshash", "xstream", "bypass", "combo")
+
+
+def test_variant_names_are_unique():
+    names = [v.name for v in default_variants()]
+    assert len(names) == len(set(names))

@@ -1,0 +1,81 @@
+"""Combo RMs (paper Table 2): averaging / maximization / weighted average
+for scores, OR / voting for labels."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.model import combo_avg, combo_max, combo_wavg, combo_or, combo_vote
+
+
+def _scores(seed, c=8):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(c, 4)).astype(np.float32)
+
+
+@given(st.integers(0, 2**31), st.integers(1, 4))
+def test_avg_matches_numpy(seed, k):
+    s = _scores(seed)
+    active = np.zeros(4, np.float32)
+    active[:k] = 1
+    got = np.asarray(combo_avg(jnp.asarray(s), jnp.asarray(active))[0])
+    np.testing.assert_allclose(got, s[:, :k].mean(axis=1), rtol=1e-6)
+
+
+@given(st.integers(0, 2**31), st.integers(1, 4))
+def test_max_matches_numpy(seed, k):
+    s = _scores(seed)
+    active = np.zeros(4, np.float32)
+    active[:k] = 1
+    got = np.asarray(combo_max(jnp.asarray(s), jnp.asarray(active))[0])
+    np.testing.assert_allclose(got, s[:, :k].max(axis=1), rtol=1e-6)
+
+
+@given(st.integers(0, 2**31))
+def test_wavg_weights_renormalise_over_active(seed):
+    rng = np.random.default_rng(seed)
+    s = _scores(seed)
+    w = rng.uniform(0.1, 1, size=4).astype(np.float32)
+    active = np.array([1, 1, 0, 1], np.float32)
+    got = np.asarray(combo_wavg(jnp.asarray(s), jnp.asarray(active), jnp.asarray(w))[0])
+    aw = active * w
+    want = (s * aw).sum(axis=1) / aw.sum()
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_wavg_equal_weights_is_avg():
+    s = _scores(1)
+    active = np.ones(4, np.float32)
+    w = np.full(4, 0.25, np.float32)
+    a = np.asarray(combo_avg(jnp.asarray(s), jnp.asarray(active))[0])
+    b = np.asarray(combo_wavg(jnp.asarray(s), jnp.asarray(active), jnp.asarray(w))[0])
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+@given(st.integers(0, 2**31), st.integers(1, 4))
+def test_or_is_any(seed, k):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 2, size=(8, 4)).astype(np.float32)
+    active = np.zeros(4, np.float32)
+    active[:k] = 1
+    got = np.asarray(combo_or(jnp.asarray(labels), jnp.asarray(active))[0])
+    np.testing.assert_array_equal(got, labels[:, :k].max(axis=1))
+
+
+def test_vote_majority_with_tie_to_anomaly():
+    labels = np.array([
+        [1, 1, 0, 0],   # 2/4 tie → anomaly
+        [1, 0, 0, 0],   # 1/4 → normal
+        [1, 1, 1, 0],   # 3/4 → anomaly
+        [0, 0, 0, 0],   # 0/4 → normal
+    ], np.float32)
+    active = np.ones(4, np.float32)
+    got = np.asarray(combo_vote(jnp.asarray(labels), jnp.asarray(active))[0])
+    np.testing.assert_array_equal(got, [1, 0, 1, 0])
+
+
+def test_vote_respects_active_mask():
+    labels = np.array([[1, 1, 0, 0]], np.float32)
+    active = np.array([1, 1, 0, 0], np.float32)   # quorum = 2, votes = 2 → anomaly
+    got = np.asarray(combo_vote(jnp.asarray(labels), jnp.asarray(active))[0])
+    assert got[0] == 1

@@ -1,0 +1,75 @@
+"""Jenkins one-at-a-time hash: bit-exactness (paper Algorithm 4).
+
+The same sequence is implemented three times — jnp (kernels.jenkins), numpy
+(kernels.ref._jenkins_np) and rust (detectors/jenkins.rs). The golden vectors
+below are shared verbatim with the rust unit tests; any drift breaks parity
+between the CPU baseline and the FPGA artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.kernels.jenkins import jenkins_hash, jenkins_mod
+from compile.kernels.ref import _jenkins_np
+
+# (key_words, seed, expected_hash) — keep in sync with rust::detectors::jenkins tests.
+GOLDEN = [
+    ([0], 0, 0x00000000),
+    ([1, 2, 3], 1, 0x54EE7BFA),
+    ([0xFFFFFFFF], 7, 0x6DC75B8D),
+    ([42, 0, 42, 0xDEADBEEF], 2, 0x1FF9CDF1),
+    ([5, 4, 3, 2, 1, 0], 123456, 0x1C57948C),
+]
+
+
+def test_golden_vectors_numpy():
+    for key, seed, want in GOLDEN:
+        got = int(_jenkins_np(np.array(key, np.uint32), seed))
+        assert got == want, f"key={key} seed={seed}: got {got:#x}, want {want:#x}"
+
+
+def test_golden_vectors_jnp():
+    for key, seed, want in GOLDEN:
+        got = int(jenkins_hash(jnp.array([key], jnp.uint32), seed)[0])
+        assert got == want, f"key={key} seed={seed}: got {got:#x}, want {want:#x}"
+
+
+@given(
+    st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=24),
+    st.integers(0, 2**32 - 1),
+)
+def test_jnp_matches_numpy(key, seed):
+    a = int(jenkins_hash(jnp.array([key], jnp.uint32), seed)[0])
+    b = int(_jenkins_np(np.array(key, np.uint32), seed))
+    assert a == b
+
+
+@given(
+    st.integers(1, 8),       # batch
+    st.integers(1, 8),       # key length
+    st.integers(0, 31),      # seed
+    st.integers(0, 2**31),   # data seed
+)
+def test_vectorised_equals_rowwise(b, l, seed, data_seed):
+    rng = np.random.default_rng(data_seed)
+    keys = rng.integers(0, 2**32, size=(b, l), dtype=np.uint32)
+    vec = np.asarray(jenkins_hash(jnp.asarray(keys), seed))
+    for i in range(b):
+        assert vec[i] == _jenkins_np(keys[i], seed)
+
+
+@given(st.integers(1, 6), st.integers(1, 10))
+def test_mod_in_range(l, mod):
+    rng = np.random.default_rng(l * 31 + mod)
+    keys = rng.integers(-(2**31), 2**31, size=(5, l), dtype=np.int64).astype(np.int32)
+    idx = np.asarray(jenkins_mod(jnp.asarray(keys), 1, mod))
+    assert idx.dtype == np.int32
+    assert (idx >= 0).all() and (idx < mod).all()
+
+
+def test_negative_int32_keys_wrap_like_u32():
+    # int32 -1 must hash identically to uint32 0xFFFFFFFF (rust `as u32`).
+    a = int(jenkins_hash(jnp.array([[-1]], jnp.int32), 7)[0])
+    b = int(jenkins_hash(jnp.array([[0xFFFFFFFF]], jnp.uint32), 7)[0])
+    assert a == b

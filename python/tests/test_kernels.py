@@ -1,0 +1,95 @@
+"""L1 Pallas kernels vs pure-jnp oracles (the CORE correctness signal).
+
+Hypothesis sweeps chunk size, ensemble size, dimensionality and value ranges;
+every kernel output must equal the ref bit-for-bit (indices are integers, and
+the float math is identical op-for-op).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, strategies as st
+
+from compile.kernels import loda_frontend, rshash_frontend, xstream_frontend
+from compile.kernels import ref as kref
+
+dims = st.integers(1, 24)
+chunks = st.integers(1, 16)
+ensembles = st.integers(1, 12)
+
+
+def _data(seed, c, d, scale=10.0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(c, d)) * scale).astype(np.float32), rng
+
+
+@given(chunks, dims, ensembles, st.integers(2, 40), st.integers(0, 2**31))
+def test_loda_kernel_matches_ref(c, d, r, bins, seed):
+    x, rng = _data(seed, c, d)
+    prj = rng.normal(size=(r, d)).astype(np.float32)
+    pmin = rng.normal(size=r).astype(np.float32) - 5
+    pmax = pmin + rng.uniform(0.5, 10, size=r).astype(np.float32)
+    got = np.asarray(loda_frontend(jnp.asarray(x), prj, pmin, pmax, bins=bins))
+    want = np.asarray(kref.loda_frontend_ref(jnp.asarray(x), prj, pmin, pmax, bins))
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int32
+    assert (got >= 0).all() and (got < bins).all()
+
+
+@given(chunks, dims, ensembles, st.integers(1, 4), st.sampled_from([16, 64, 128]),
+       st.integers(0, 2**31))
+def test_rshash_kernel_matches_ref(c, d, r, w, mod, seed):
+    x, rng = _data(seed, c, d)
+    dmin = x.min(axis=0) - 0.1
+    dmax = x.max(axis=0) + 0.1
+    alpha = rng.uniform(0, 1, size=(r, d)).astype(np.float32)
+    f = rng.uniform(0.1, 0.9, size=r).astype(np.float32)
+    got = np.asarray(rshash_frontend(jnp.asarray(x), dmin, dmax, alpha, f, w=w, mod=mod))
+    want = np.asarray(kref.rshash_frontend_ref(jnp.asarray(x), dmin, dmax, alpha, f, w, mod))
+    np.testing.assert_array_equal(got, want)
+    assert (got >= 0).all() and (got < mod).all()
+
+
+@given(chunks, dims, st.integers(1, 6), st.integers(1, 3), st.integers(1, 8),
+       st.integers(0, 2**31))
+def test_xstream_kernel_matches_ref(c, d, r, w, k, seed):
+    mod = 128
+    x, rng = _data(seed, c, d, scale=3.0)
+    proj = rng.normal(size=(r, d, k)).astype(np.float32)
+    shift = rng.uniform(0, 1, size=(r, w, k)).astype(np.float32)
+    width = rng.uniform(0.5, 4.0, size=(r, k)).astype(np.float32)
+    got = np.asarray(xstream_frontend(jnp.asarray(x), proj, shift, width, w=w, mod=mod))
+    want = np.asarray(kref.xstream_frontend_ref(jnp.asarray(x), proj, shift, width, w, mod))
+    np.testing.assert_array_equal(got, want)
+    assert (got >= 0).all() and (got < mod).all()
+
+
+def test_loda_clips_out_of_range_projections():
+    # Samples far outside [pmin, pmax] must clip to the edge bins, never wrap.
+    x = np.array([[1e6], [-1e6]], np.float32)
+    prj = np.ones((1, 1), np.float32)
+    idx = np.asarray(loda_frontend(jnp.asarray(x), prj,
+                                   np.zeros(1, np.float32), np.ones(1, np.float32),
+                                   bins=20))
+    assert idx[0, 0] == 19 and idx[1, 0] == 0
+
+
+def test_rshash_degenerate_span_is_finite():
+    # A constant feature (dmin == dmax) must not produce NaN/inf indices.
+    x = np.ones((4, 2), np.float32)
+    dmin = np.array([1.0, 0.0], np.float32)
+    dmax = np.array([1.0, 2.0], np.float32)
+    alpha = np.full((3, 2), 0.5, np.float32)
+    f = np.full(3, 0.5, np.float32)
+    idx = np.asarray(rshash_frontend(jnp.asarray(x), dmin, dmax, alpha, f, w=2, mod=64))
+    assert (idx >= 0).all() and (idx < 64).all()
+
+
+def test_xstream_kernel_f32_dtype_and_shape():
+    c, d, r, w, k = 5, 3, 2, 2, 4
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(c, d)).astype(np.float32)
+    proj = rng.normal(size=(r, d, k)).astype(np.float32)
+    shift = rng.uniform(size=(r, w, k)).astype(np.float32)
+    width = rng.uniform(0.5, 1, size=(r, k)).astype(np.float32)
+    out = xstream_frontend(jnp.asarray(x), proj, shift, width, w=w, mod=32)
+    assert out.shape == (c, r, w) and out.dtype == jnp.int32

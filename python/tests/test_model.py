@@ -1,0 +1,189 @@
+"""L2 streaming models vs per-sample numpy references.
+
+Checks the full ①–⑦ pipeline: scores, state evolution, chunk-boundary
+equivalence (two chunks == one stream), mask/padding semantics and Q16.16
+quantisation.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    DetectorConfig, loda_chunk, loda_init_state,
+    rshash_chunk, xstream_chunk, cms_init_state,
+)
+from compile.kernels import ref as kref
+
+
+def _cfg(c=16, d=3, r=4, window=8, quantize=False):
+    return DetectorConfig(d=d, r=r, chunk=c, window=window,
+                          bins=5, w=2, mod=32, k=4, quantize=quantize)
+
+
+def _loda_params(rng, cfg):
+    prj = rng.normal(size=(cfg.r, cfg.d)).astype(np.float32)
+    pmin = np.full(cfg.r, -4, np.float32)
+    pmax = np.full(cfg.r, 4, np.float32)
+    return prj, pmin, pmax
+
+
+def _rshash_params(rng, cfg, x):
+    dmin = x.min(axis=0)
+    dmax = x.max(axis=0)
+    alpha = rng.uniform(0, 1, size=(cfg.r, cfg.d)).astype(np.float32)
+    f = rng.uniform(0.2, 0.8, size=cfg.r).astype(np.float32)
+    return dmin, dmax, alpha, f
+
+
+def _xstream_params(rng, cfg):
+    proj = rng.normal(size=(cfg.r, cfg.d, cfg.k)).astype(np.float32)
+    shift = rng.uniform(0, 1, size=(cfg.r, cfg.w, cfg.k)).astype(np.float32)
+    width = rng.uniform(0.5, 2, size=(cfg.r, cfg.k)).astype(np.float32)
+    return proj, shift, width
+
+
+def _run(detector, cfg, x, mask, params, state, use_ref=False):
+    fn = {"loda": loda_chunk, "rshash": rshash_chunk, "xstream": xstream_chunk}[detector]
+    return fn(cfg, jnp.asarray(x), jnp.asarray(mask), *params, *state, use_ref=use_ref)
+
+
+def _streaming_ref(detector, cfg, params):
+    if detector == "loda":
+        return kref.StreamingLodaRef(*params, cfg.bins, cfg.window)
+    if detector == "rshash":
+        return kref.StreamingRsHashRef(*params, cfg.w, cfg.mod, cfg.window)
+    return kref.StreamingXStreamRef(*params, cfg.w, cfg.mod, cfg.window)
+
+
+@pytest.mark.parametrize("detector", ["loda", "rshash", "xstream"])
+@pytest.mark.parametrize("use_ref", [False, True], ids=["pallas", "jnp-ref"])
+def test_chunk_matches_per_sample_reference(detector, use_ref):
+    cfg = _cfg(c=24, window=8)
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(cfg.chunk, cfg.d)).astype(np.float32)
+    mask = np.ones(cfg.chunk, np.float32)
+    if detector == "loda":
+        params = _loda_params(rng, cfg)
+        state = loda_init_state(cfg)
+    elif detector == "rshash":
+        params = _rshash_params(rng, cfg, x)
+        state = cms_init_state(cfg)
+    else:
+        params = _xstream_params(rng, cfg)
+        state = cms_init_state(cfg)
+    out = _run(detector, cfg, x, mask, params, state, use_ref)
+    ref = _streaming_ref(detector, cfg, params)
+    want = np.array([ref.update(xi) for xi in x])
+    np.testing.assert_allclose(np.asarray(out[0]), want, atol=1e-5)
+    # State parity: count table and ring identical, window invariant holds.
+    np.testing.assert_array_equal(np.asarray(out[1]),
+                                  ref.hist if detector == "loda" else ref.cms)
+    table = np.asarray(out[1])
+    per_det_total = table.reshape(cfg.r, -1).sum(axis=1)
+    expect = min(cfg.chunk, cfg.window) * (1 if detector == "loda" else cfg.w)
+    assert (per_det_total == expect).all()
+
+
+@pytest.mark.parametrize("detector", ["loda", "rshash", "xstream"])
+def test_two_chunks_equal_one_stream(detector):
+    """State threading across executable invocations is exact."""
+    rng = np.random.default_rng(3)
+    d = 3
+    full_cfg = _cfg(c=20, d=d, window=6)
+    half_cfg = _cfg(c=10, d=d, window=6)
+    x = rng.normal(size=(20, d)).astype(np.float32)
+    ones = np.ones(20, np.float32)
+    if detector == "loda":
+        params = _loda_params(rng, full_cfg)
+        init = lambda cfg: loda_init_state(cfg)
+    elif detector == "rshash":
+        params = _rshash_params(rng, full_cfg, x)
+        init = lambda cfg: cms_init_state(cfg)
+    else:
+        params = _xstream_params(rng, full_cfg)
+        init = lambda cfg: cms_init_state(cfg)
+
+    out_full = _run(detector, full_cfg, x, ones, params, init(full_cfg))
+    o1 = _run(detector, half_cfg, x[:10], ones[:10], params, init(half_cfg))
+    o2 = _run(detector, half_cfg, x[10:], ones[10:], params, o1[1:])
+    got = np.concatenate([np.asarray(o1[0]), np.asarray(o2[0])])
+    np.testing.assert_allclose(got, np.asarray(out_full[0]), atol=1e-6)
+    for a, b in zip(out_full[1:], o2[1:]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("detector", ["loda", "rshash", "xstream"])
+def test_masked_tail_does_not_touch_state(detector):
+    """Padded samples in the final chunk must not score or mutate state."""
+    rng = np.random.default_rng(11)
+    cfg = _cfg(c=16, window=8)
+    x = rng.normal(size=(cfg.chunk, cfg.d)).astype(np.float32)
+    mask = np.ones(cfg.chunk, np.float32)
+    mask[10:] = 0.0
+    # Poison the padded region: masked garbage must be inert.
+    x[10:] = 1e9
+    if detector == "loda":
+        params = _loda_params(rng, cfg)
+        state = loda_init_state(cfg)
+    elif detector == "rshash":
+        params = _rshash_params(rng, cfg, x[:10])
+        state = cms_init_state(cfg)
+    else:
+        params = _xstream_params(rng, cfg)
+        state = cms_init_state(cfg)
+    out = _run(detector, cfg, x, mask, params, state)
+    scores = np.asarray(out[0])
+    assert (scores[10:] == 0).all()
+    assert int(np.asarray(out[4])[0]) == 10       # n counts valid samples only
+    ref = _streaming_ref(detector, cfg, params)
+    want = np.array([ref.update(xi) for xi in x[:10]])
+    np.testing.assert_allclose(scores[:10], want, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out[1]),
+                                  ref.hist if detector == "loda" else ref.cms)
+
+
+def test_quantized_scores_are_q16_16():
+    rng = np.random.default_rng(5)
+    cfg = _cfg(c=16, quantize=True)
+    x = rng.normal(size=(cfg.chunk, cfg.d)).astype(np.float32)
+    mask = np.ones(cfg.chunk, np.float32)
+    params = _loda_params(rng, cfg)
+    out = _run("loda", cfg, x, mask, params, loda_init_state(cfg))
+    scores = np.asarray(out[0], np.float64)
+    np.testing.assert_allclose(scores * 65536.0, np.round(scores * 65536.0), atol=1e-3)
+    # Quantised and float scores agree to 2^-16-ish.
+    cfg_f = _cfg(c=16, quantize=False)
+    out_f = _run("loda", cfg_f, x, mask, params, loda_init_state(cfg_f))
+    np.testing.assert_allclose(scores, np.asarray(out_f[0]), atol=1.0 / 65536.0)
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 2**31), st.integers(1, 12), st.integers(2, 10))
+def test_window_eviction_bounds_counts(seed, c, window):
+    """Property: no count may exceed the window length, none may go negative."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(c=c, window=window)
+    x = rng.normal(size=(cfg.chunk, cfg.d)).astype(np.float32)
+    mask = np.ones(cfg.chunk, np.float32)
+    params = _loda_params(rng, cfg)
+    out = _run("loda", cfg, x, mask, params, loda_init_state(cfg))
+    hist = np.asarray(out[1])
+    assert (hist >= 0).all() and (hist <= window).all()
+    assert hist.sum(axis=1).max() <= window
+
+
+@pytest.mark.parametrize("detector", ["rshash", "xstream"])
+def test_scores_nonnegative_and_finite(detector):
+    rng = np.random.default_rng(2)
+    cfg = _cfg(c=32, window=8)
+    x = rng.normal(size=(cfg.chunk, cfg.d)).astype(np.float32)
+    mask = np.ones(cfg.chunk, np.float32)
+    if detector == "rshash":
+        params = _rshash_params(rng, cfg, x)
+    else:
+        params = _xstream_params(rng, cfg)
+    out = _run(detector, cfg, x, mask, params, cms_init_state(cfg))
+    s = np.asarray(out[0])
+    assert np.isfinite(s).all()

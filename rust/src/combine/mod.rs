@@ -1,0 +1,159 @@
+//! Model-combination methods (paper Table 2): Averaging, Maximization and
+//! Weighted Average for continuous scores; OR and majority Voting for
+//! binary labels. These are the native-rust counterparts of the combo-RM
+//! artifacts (`combo_*.hlo.txt`) and are used by the CPU baseline and as a
+//! software fallback inside combo pblocks.
+
+/// Score combination methods (general & global, §2.2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScoreCombiner {
+    /// GG_A: arithmetic mean.
+    Averaging,
+    /// GG_M: element-wise maximum.
+    Maximization,
+    /// GG_WA: weighted mean; weights are renormalised over present inputs.
+    WeightedAverage(Vec<f32>),
+}
+
+impl ScoreCombiner {
+    /// Combine `inputs[k][i]` (k streams × n samples) into one score stream.
+    pub fn combine(&self, inputs: &[&[f32]]) -> Vec<f32> {
+        assert!(!inputs.is_empty());
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|s| s.len() == n), "misaligned score streams");
+        match self {
+            ScoreCombiner::Averaging => (0..n)
+                .map(|i| inputs.iter().map(|s| s[i]).sum::<f32>() / inputs.len() as f32)
+                .collect(),
+            ScoreCombiner::Maximization => (0..n)
+                .map(|i| inputs.iter().map(|s| s[i]).fold(f32::NEG_INFINITY, f32::max))
+                .collect(),
+            ScoreCombiner::WeightedAverage(w) => {
+                assert!(w.len() >= inputs.len(), "need one weight per input");
+                let tot: f32 = w[..inputs.len()].iter().sum();
+                let tot = if tot.abs() < 1e-12 { 1.0 } else { tot };
+                (0..n)
+                    .map(|i| {
+                        inputs.iter().zip(w).map(|(s, &wi)| s[i] * wi).sum::<f32>() / tot
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScoreCombiner> {
+        match s.to_ascii_lowercase().as_str() {
+            "avg" | "averaging" | "gg_a" => Some(ScoreCombiner::Averaging),
+            "max" | "maximization" | "gg_m" => Some(ScoreCombiner::Maximization),
+            "wavg" | "weighted" | "gg_wa" => Some(ScoreCombiner::WeightedAverage(vec![])),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScoreCombiner::Averaging => "avg",
+            ScoreCombiner::Maximization => "max",
+            ScoreCombiner::WeightedAverage(_) => "wavg",
+        }
+    }
+}
+
+/// Label combination methods.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LabelCombiner {
+    /// Anomaly if any input says anomaly (the paper's default for labels).
+    Or,
+    /// Majority vote; ties resolve to anomaly (don't-miss bias, §4.2).
+    Voting,
+}
+
+impl LabelCombiner {
+    pub fn combine(&self, inputs: &[&[bool]]) -> Vec<bool> {
+        assert!(!inputs.is_empty());
+        let n = inputs[0].len();
+        assert!(inputs.iter().all(|s| s.len() == n), "misaligned label streams");
+        match self {
+            LabelCombiner::Or => (0..n).map(|i| inputs.iter().any(|s| s[i])).collect(),
+            LabelCombiner::Voting => (0..n)
+                .map(|i| {
+                    let votes = inputs.iter().filter(|s| s[i]).count();
+                    2 * votes >= inputs.len()
+                })
+                .collect(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LabelCombiner> {
+        match s.to_ascii_lowercase().as_str() {
+            "or" => Some(LabelCombiner::Or),
+            "vote" | "voting" => Some(LabelCombiner::Voting),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averaging_is_mean() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        assert_eq!(ScoreCombiner::Averaging.combine(&[&a, &b]), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn maximization_is_elementwise_max() {
+        let a = [1.0f32, 5.0];
+        let b = [3.0f32, 4.0];
+        assert_eq!(ScoreCombiner::Maximization.combine(&[&a, &b]), vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn weighted_average_renormalises() {
+        let a = [1.0f32];
+        let b = [3.0f32];
+        let c = ScoreCombiner::WeightedAverage(vec![0.75, 0.25]);
+        assert_eq!(c.combine(&[&a, &b]), vec![1.5]);
+    }
+
+    #[test]
+    fn weighted_equal_weights_matches_avg() {
+        let a = [0.5f32, 1.0];
+        let b = [1.5f32, 3.0];
+        let w = ScoreCombiner::WeightedAverage(vec![0.5, 0.5]);
+        assert_eq!(w.combine(&[&a, &b]), ScoreCombiner::Averaging.combine(&[&a, &b]));
+    }
+
+    #[test]
+    fn or_is_any() {
+        let a = [true, false, false];
+        let b = [false, false, true];
+        assert_eq!(LabelCombiner::Or.combine(&[&a, &b]), vec![true, false, true]);
+    }
+
+    #[test]
+    fn voting_majority_with_anomaly_ties() {
+        let a = [true, true, false];
+        let b = [false, true, false];
+        // tie (1/2) → anomaly; 2/2 → anomaly; 0/2 → normal
+        assert_eq!(LabelCombiner::Voting.combine(&[&a, &b]), vec![true, true, false]);
+    }
+
+    #[test]
+    fn single_input_is_identity() {
+        let a = [0.1f32, 0.9];
+        assert_eq!(ScoreCombiner::Averaging.combine(&[&a]), a.to_vec());
+        let l = [true, false];
+        assert_eq!(LabelCombiner::Voting.combine(&[&l]), l.to_vec());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(ScoreCombiner::parse("avg"), Some(ScoreCombiner::Averaging));
+        assert_eq!(LabelCombiner::parse("or"), Some(LabelCombiner::Or));
+        assert_eq!(ScoreCombiner::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,500 @@
+//! Configuration system: a TOML-subset file describes the fabric topology
+//! (which RM occupies each pblock, which stream feeds it, how combos
+//! aggregate), detector hyper-parameters and the dataset. Presets reproduce
+//! the paper's Figure 7 composition examples.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+use toml::Doc;
+
+use crate::defaults;
+use crate::detectors::DetectorKind;
+
+/// What occupies a reconfigurable partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RmKind {
+    /// A detector ensemble RM.
+    Detector(DetectorKind),
+    /// Identity/bypass RM (paper Fig 20).
+    Bypass,
+    /// Default empty RM (power saving until configured, §3.2).
+    Empty,
+}
+
+impl RmKind {
+    pub fn parse(s: &str) -> Option<RmKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "bypass" | "identity" => Some(RmKind::Bypass),
+            "empty" | "default" => Some(RmKind::Empty),
+            other => DetectorKind::parse(other).map(RmKind::Detector),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RmKind::Detector(k) => k.as_str(),
+            RmKind::Bypass => "bypass",
+            RmKind::Empty => "empty",
+        }
+    }
+}
+
+/// Detector hyper-parameters (paper Table 4).
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorHyper {
+    pub window: usize,
+    pub bins: usize,
+    pub w: usize,
+    pub modulus: usize,
+    pub k: usize,
+}
+
+impl Default for DetectorHyper {
+    fn default() -> Self {
+        DetectorHyper {
+            window: defaults::WINDOW,
+            bins: defaults::LODA_BINS,
+            w: defaults::CMS_ROWS,
+            modulus: defaults::CMS_MOD,
+            k: defaults::XSTREAM_K,
+        }
+    }
+}
+
+/// One pblock assignment.
+#[derive(Clone, Debug)]
+pub struct PblockCfg {
+    /// 1-based pblock id (RP-1 … RP-7).
+    pub id: usize,
+    pub rm: RmKind,
+    /// Ensemble size (defaults to the paper's per-pblock R).
+    pub r: usize,
+    /// Which input stream (DMA channel) feeds this pblock.
+    pub stream: usize,
+}
+
+/// One combo-pblock assignment.
+#[derive(Clone, Debug)]
+pub struct ComboCfg {
+    /// 1-based combo id (COMBO1 … COMBO3).
+    pub id: usize,
+    /// avg | max | wavg (scores) — label combining is configured separately.
+    pub method: String,
+    /// AD pblock ids whose score streams feed this combo (max 4 — the
+    /// paper's combo pblocks have four input ports).
+    pub inputs: Vec<usize>,
+    /// Weights for wavg.
+    pub weights: Vec<f32>,
+}
+
+/// Dataset selection.
+#[derive(Clone, Debug)]
+pub struct DatasetCfg {
+    pub name: String,
+    pub data_dir: Option<String>,
+    /// 0 = the full stream.
+    pub max_samples: usize,
+}
+
+/// Top-level configuration.
+#[derive(Clone, Debug)]
+pub struct FseadConfig {
+    pub seed: u64,
+    pub chunk: usize,
+    pub artifact_dir: String,
+    /// Execute detector RMs on the PJRT "FPGA" (false = CPU-native RMs,
+    /// useful for fast tests and the CPU baseline comparison).
+    pub use_fpga: bool,
+    pub hyper: DetectorHyper,
+    pub dataset: DatasetCfg,
+    pub pblocks: Vec<PblockCfg>,
+    pub combos: Vec<ComboCfg>,
+}
+
+impl Default for FseadConfig {
+    fn default() -> Self {
+        FseadConfig {
+            seed: 42,
+            chunk: defaults::CHUNK,
+            artifact_dir: "artifacts".to_string(),
+            use_fpga: true,
+            hyper: DetectorHyper::default(),
+            dataset: DatasetCfg { name: "cardio".into(), data_dir: None, max_samples: 0 },
+            pblocks: vec![],
+            combos: vec![],
+        }
+    }
+}
+
+impl FseadConfig {
+    pub fn from_str(text: &str) -> Result<FseadConfig> {
+        let doc = toml::parse(text)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_file(path: &str) -> Result<FseadConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_str(&text).with_context(|| format!("parsing {path}"))
+    }
+
+    fn from_doc(doc: &Doc) -> Result<FseadConfig> {
+        let mut cfg = FseadConfig::default();
+        if let Some(v) = doc.get_int("fabric", "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_int("fabric", "chunk") {
+            cfg.chunk = v as usize;
+        }
+        if let Some(v) = doc.get_str("fabric", "artifacts") {
+            cfg.artifact_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_bool("fabric", "use_fpga") {
+            cfg.use_fpga = v;
+        }
+        if let Some(v) = doc.get_int("detector", "window") {
+            cfg.hyper.window = v as usize;
+        }
+        if let Some(v) = doc.get_int("detector", "bins") {
+            cfg.hyper.bins = v as usize;
+        }
+        if let Some(v) = doc.get_int("detector", "cms_rows") {
+            cfg.hyper.w = v as usize;
+        }
+        if let Some(v) = doc.get_int("detector", "cms_mod") {
+            cfg.hyper.modulus = v as usize;
+        }
+        if let Some(v) = doc.get_int("detector", "k") {
+            cfg.hyper.k = v as usize;
+        }
+        if let Some(v) = doc.get_str("dataset", "name") {
+            cfg.dataset.name = v.to_string();
+        }
+        if let Some(v) = doc.get_str("dataset", "data_dir") {
+            if !v.is_empty() {
+                cfg.dataset.data_dir = Some(v.to_string());
+            }
+        }
+        if let Some(v) = doc.get_int("dataset", "max_samples") {
+            cfg.dataset.max_samples = v as usize;
+        }
+        // [pblock.N] sections
+        for name in doc.sections_with_prefix("pblock.") {
+            let id: usize = name["pblock.".len()..]
+                .parse()
+                .with_context(|| format!("bad pblock id in [{name}]"))?;
+            if !(1..=defaults::NUM_AD_PBLOCKS).contains(&id) {
+                bail!("[{name}]: pblock id must be 1..={}", defaults::NUM_AD_PBLOCKS);
+            }
+            let rm_str = doc.get_str(name, "rm").unwrap_or("empty");
+            let rm = RmKind::parse(rm_str)
+                .with_context(|| format!("[{name}]: unknown rm {rm_str:?}"))?;
+            let default_r = match rm {
+                RmKind::Detector(k) => k.pblock_r(),
+                _ => 0,
+            };
+            let r = doc.get_int(name, "r").map(|v| v as usize).unwrap_or(default_r);
+            let stream = doc.get_int(name, "stream").map(|v| v as usize).unwrap_or(0);
+            cfg.pblocks.push(PblockCfg { id, rm, r, stream });
+        }
+        cfg.pblocks.sort_by_key(|p| p.id);
+        // [combo.N] sections
+        for name in doc.sections_with_prefix("combo.") {
+            let id: usize = name["combo.".len()..]
+                .parse()
+                .with_context(|| format!("bad combo id in [{name}]"))?;
+            if !(1..=defaults::NUM_COMBO_PBLOCKS).contains(&id) {
+                bail!("[{name}]: combo id must be 1..={}", defaults::NUM_COMBO_PBLOCKS);
+            }
+            let method = doc.get_str(name, "method").unwrap_or("avg").to_string();
+            let inputs: Vec<usize> = doc
+                .get(name, "inputs")
+                .and_then(|v| v.as_array())
+                .map(|a| a.iter().filter_map(|v| v.as_int()).map(|v| v as usize).collect())
+                .unwrap_or_default();
+            let weights: Vec<f32> = doc
+                .get(name, "weights")
+                .and_then(|v| v.as_array())
+                .map(|a| a.iter().filter_map(|v| v.as_float()).map(|v| v as f32).collect())
+                .unwrap_or_default();
+            cfg.combos.push(ComboCfg { id, method, inputs, weights });
+        }
+        cfg.combos.sort_by_key(|c| c.id);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Structural validation: distinct ids, combo fan-in ≤ 4, combo inputs
+    /// reference configured detector pblocks, no pblock feeds two combos.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for p in &self.pblocks {
+            if !seen.insert(p.id) {
+                bail!("duplicate pblock id {}", p.id);
+            }
+            if matches!(p.rm, RmKind::Detector(_)) && p.r == 0 {
+                bail!("pblock {} has a detector RM with r = 0", p.id);
+            }
+        }
+        let mut consumed = std::collections::HashSet::new();
+        let mut combo_ids = std::collections::HashSet::new();
+        for c in &self.combos {
+            if !combo_ids.insert(c.id) {
+                bail!("duplicate combo id {}", c.id);
+            }
+            if c.inputs.is_empty() || c.inputs.len() > 4 {
+                bail!("combo {} must have 1..=4 inputs (has {})", c.id, c.inputs.len());
+            }
+            for &input in &c.inputs {
+                let Some(p) = self.pblocks.iter().find(|p| p.id == input) else {
+                    bail!("combo {} references unconfigured pblock {input}", c.id);
+                };
+                if p.rm == RmKind::Empty {
+                    bail!("combo {} references empty pblock {input}", c.id);
+                }
+                if !consumed.insert(input) {
+                    bail!("pblock {input} feeds more than one combo");
+                }
+            }
+            if c.method == "wavg" && c.weights.len() < c.inputs.len() {
+                bail!("combo {}: wavg needs one weight per input", c.id);
+            }
+        }
+        Ok(())
+    }
+
+    /// Pblock ids whose outputs are routed straight to the host (not into a
+    /// combo) — the switch-1 → output-DMA routes of Fig 7(a).
+    pub fn direct_outputs(&self) -> Vec<usize> {
+        let consumed: std::collections::HashSet<usize> =
+            self.combos.iter().flat_map(|c| c.inputs.iter().copied()).collect();
+        self.pblocks
+            .iter()
+            .filter(|p| p.rm != RmKind::Empty && !consumed.contains(&p.id))
+            .map(|p| p.id)
+            .collect()
+    }
+
+    // -- paper Figure 7 presets --------------------------------------------
+
+    /// Fig 7(a): seven independent pblocks on seven streams, no combos.
+    pub fn fig7a(kind: DetectorKind) -> FseadConfig {
+        let mut cfg = FseadConfig::default();
+        for id in 1..=7 {
+            cfg.pblocks.push(PblockCfg {
+                id,
+                rm: RmKind::Detector(kind),
+                r: kind.pblock_r(),
+                stream: id - 1,
+            });
+        }
+        cfg
+    }
+
+    /// Fig 7(b): three applications — Loda×3 → COMBO1 on stream 0, RS-Hash×2
+    /// → COMBO2 on stream 1, xStream×2 → COMBO3 on stream 2.
+    pub fn fig7b() -> FseadConfig {
+        let mut cfg = FseadConfig::default();
+        let mk = |id: usize, kind: DetectorKind, stream: usize| PblockCfg {
+            id,
+            rm: RmKind::Detector(kind),
+            r: kind.pblock_r(),
+            stream,
+        };
+        cfg.pblocks = vec![
+            mk(1, DetectorKind::Loda, 0),
+            mk(2, DetectorKind::Loda, 0),
+            mk(3, DetectorKind::Loda, 0),
+            mk(4, DetectorKind::RsHash, 1),
+            mk(5, DetectorKind::RsHash, 1),
+            mk(6, DetectorKind::XStream, 2),
+            mk(7, DetectorKind::XStream, 2),
+        ];
+        cfg.combos = vec![
+            ComboCfg { id: 1, method: "avg".into(), inputs: vec![1, 2, 3], weights: vec![] },
+            ComboCfg { id: 2, method: "avg".into(), inputs: vec![4, 5], weights: vec![] },
+            ComboCfg { id: 3, method: "avg".into(), inputs: vec![6, 7], weights: vec![] },
+        ];
+        cfg
+    }
+
+    /// Fig 7(c): maximally parallel homogeneous ensemble — all seven pblocks
+    /// on one stream, averaged by COMBO1(+2 cascade modelled as one combo
+    /// stage with fan-in 7 split 4+3 via COMBO1/COMBO2 into COMBO3).
+    pub fn fig7c(kind: DetectorKind) -> FseadConfig {
+        let mut cfg = FseadConfig::default();
+        for id in 1..=7 {
+            cfg.pblocks.push(PblockCfg {
+                id,
+                rm: RmKind::Detector(kind),
+                r: kind.pblock_r(),
+                stream: 0,
+            });
+        }
+        cfg.combos = vec![
+            ComboCfg { id: 1, method: "avg".into(), inputs: vec![1, 2, 3, 4], weights: vec![] },
+            ComboCfg { id: 2, method: "avg".into(), inputs: vec![5, 6, 7], weights: vec![] },
+        ];
+        cfg
+    }
+
+    /// Fig 7(d): heterogeneous ensemble — Loda×3 + RS-Hash×2 + xStream×2 on
+    /// one stream, aggregated per type then combined.
+    pub fn fig7d() -> FseadConfig {
+        let mut cfg = FseadConfig::fig7b();
+        for p in &mut cfg.pblocks {
+            p.stream = 0;
+        }
+        cfg
+    }
+
+    /// Paper Table 5 combination id, e.g. "A7", "C223" (A=Loda ×k, B=RS-Hash
+    /// ×k, C=xStream ×k in pblock order).
+    pub fn from_combo_code(code: &str) -> Result<FseadConfig> {
+        let mut cfg = FseadConfig::default();
+        let bytes = code.as_bytes();
+        let mut id = 1usize;
+        let mut i = 0;
+        while i < bytes.len() {
+            let kind = match bytes[i] {
+                b'A' | b'a' => DetectorKind::Loda,
+                b'B' | b'b' => DetectorKind::RsHash,
+                b'C' | b'c' => DetectorKind::XStream,
+                other => bail!("bad detector letter {:?} in {code}", other as char),
+            };
+            i += 1;
+            let mut count = 0usize;
+            while i < bytes.len() && bytes[i].is_ascii_digit() {
+                count = count * 10 + (bytes[i] - b'0') as usize;
+                i += 1;
+            }
+            // Code like "C223" means counts per letter-position; a single
+            // letter+number pair like "A7" means 7 pblocks of A.
+            if count == 0 {
+                bail!("missing count after detector letter in {code}");
+            }
+            for _ in 0..count {
+                if id > defaults::NUM_AD_PBLOCKS {
+                    bail!("{code} needs more than {} pblocks", defaults::NUM_AD_PBLOCKS);
+                }
+                cfg.pblocks.push(PblockCfg {
+                    id,
+                    rm: RmKind::Detector(kind),
+                    r: kind.pblock_r(),
+                    stream: 0,
+                });
+                id += 1;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[fabric]
+seed = 7
+chunk = 128
+use_fpga = false
+
+[detector]
+window = 64
+bins = 10
+
+[dataset]
+name = "shuttle"
+max_samples = 1000
+
+[pblock.1]
+rm = "loda"
+stream = 0
+
+[pblock.2]
+rm = "xstream"
+r = 5
+stream = 0
+
+[combo.1]
+method = "avg"
+inputs = [1, 2]
+"#;
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.chunk, 128);
+        assert!(!cfg.use_fpga);
+        assert_eq!(cfg.hyper.window, 64);
+        assert_eq!(cfg.dataset.name, "shuttle");
+        assert_eq!(cfg.pblocks.len(), 2);
+        assert_eq!(cfg.pblocks[0].rm, RmKind::Detector(DetectorKind::Loda));
+        assert_eq!(cfg.pblocks[0].r, 35); // default pblock R
+        assert_eq!(cfg.pblocks[1].r, 5);
+        assert_eq!(cfg.combos[0].inputs, vec![1, 2]);
+        assert!(cfg.direct_outputs().is_empty());
+    }
+
+    #[test]
+    fn rejects_combo_referencing_unknown_pblock() {
+        let bad = "[pblock.1]\nrm = \"loda\"\n[combo.1]\ninputs = [1, 5]\n";
+        assert!(FseadConfig::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_fan_in_over_four() {
+        let mut cfg = FseadConfig::fig7a(DetectorKind::Loda);
+        cfg.combos.push(ComboCfg {
+            id: 1,
+            method: "avg".into(),
+            inputs: vec![1, 2, 3, 4, 5],
+            weights: vec![],
+        });
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_pblock_feeding_two_combos() {
+        let mut cfg = FseadConfig::fig7a(DetectorKind::Loda);
+        cfg.combos = vec![
+            ComboCfg { id: 1, method: "avg".into(), inputs: vec![1, 2], weights: vec![] },
+            ComboCfg { id: 2, method: "avg".into(), inputs: vec![2, 3], weights: vec![] },
+        ];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn presets_validate() {
+        FseadConfig::fig7a(DetectorKind::Loda).validate().unwrap();
+        FseadConfig::fig7b().validate().unwrap();
+        FseadConfig::fig7c(DetectorKind::RsHash).validate().unwrap();
+        FseadConfig::fig7d().validate().unwrap();
+    }
+
+    #[test]
+    fn fig7a_routes_directly_to_host() {
+        let cfg = FseadConfig::fig7a(DetectorKind::XStream);
+        assert_eq!(cfg.direct_outputs(), vec![1, 2, 3, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn combo_codes_parse() {
+        let a7 = FseadConfig::from_combo_code("A7").unwrap();
+        assert_eq!(a7.pblocks.len(), 7);
+        assert!(a7.pblocks.iter().all(|p| p.rm == RmKind::Detector(DetectorKind::Loda)));
+        let c223 = FseadConfig::from_combo_code("A2B2C3").unwrap();
+        assert_eq!(c223.pblocks.len(), 7);
+        assert_eq!(c223.pblocks[6].rm, RmKind::Detector(DetectorKind::XStream));
+        assert!(FseadConfig::from_combo_code("A9").is_err());
+        assert!(FseadConfig::from_combo_code("X2").is_err());
+    }
+
+    #[test]
+    fn wavg_requires_weights() {
+        let bad = "[pblock.1]\nrm = \"loda\"\n[pblock.2]\nrm = \"loda\"\n[combo.1]\nmethod = \"wavg\"\ninputs = [1, 2]\n";
+        assert!(FseadConfig::from_str(bad).is_err());
+    }
+}

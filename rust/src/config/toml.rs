@@ -1,0 +1,255 @@
+//! Minimal TOML-subset parser (serde/toml are unavailable offline —
+//! DESIGN.md §6 substitution 4). Supports what fSEAD configs need:
+//! `[section]` and `[section.sub]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, comments and blank lines.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path section name → key → value.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    /// Keys at the root (before any section header) live under "".
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        self.get(section, key)?.as_int()
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_float()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+
+    /// All section names with the given prefix (e.g. every `[pblock.*]`).
+    pub fn sections_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.sections.keys().filter(move |s| s.starts_with(prefix)).map(|s| s.as_str())
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut current = String::new();
+    doc.sections.entry(current.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            let name = name.trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            current = name.to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.sections.get_mut(&current).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string: {s}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let Some(inner) = rest.strip_suffix(']') else {
+            bail!("unterminated array: {s}");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>> =
+            split_top_level(inner).into_iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+/// Split on commas that are not inside quotes (flat arrays only).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\n").unwrap();
+        assert_eq!(doc.get_int("", "a"), Some(1));
+        assert_eq!(doc.get_float("", "b"), Some(2.5));
+        assert_eq!(doc.get_str("", "c"), Some("hi"));
+        assert_eq!(doc.get_bool("", "d"), Some(true));
+    }
+
+    #[test]
+    fn parses_sections_and_subsections() {
+        let doc = parse("[fabric]\npblocks = 7\n[pblock.1]\nkind = \"loda\"\n").unwrap();
+        assert_eq!(doc.get_int("fabric", "pblocks"), Some(7));
+        assert_eq!(doc.get_str("pblock.1", "kind"), Some("loda"));
+        let subs: Vec<_> = doc.sections_with_prefix("pblock.").collect();
+        assert_eq!(subs, vec!["pblock.1"]);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("xs = [1, 2, 3]\nys = [\"a\", \"b\"]\n").unwrap();
+        let xs = doc.get("", "xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_int(), Some(3));
+        let ys = doc.get("", "ys").unwrap().as_array().unwrap();
+        assert_eq!(ys[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = parse("# header\n\na = 1 # trailing\ns = \"with # hash\"\n").unwrap();
+        assert_eq!(doc.get_int("", "a"), Some(1));
+        assert_eq!(doc.get_str("", "s"), Some("with # hash"));
+    }
+
+    #[test]
+    fn int_coerces_to_float_but_not_reverse() {
+        let doc = parse("a = 3\nb = 1.5\n").unwrap();
+        assert_eq!(doc.get_float("", "a"), Some(3.0));
+        assert_eq!(doc.get_int("", "b"), None);
+    }
+
+    #[test]
+    fn errors_are_reported_with_line_numbers() {
+        let err = parse("a = 1\nbroken line\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("k = \"open\n").is_err());
+        assert!(parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_is_fine() {
+        let doc = parse("").unwrap();
+        assert!(doc.get("", "x").is_none());
+    }
+}

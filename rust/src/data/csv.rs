@@ -1,0 +1,89 @@
+//! Minimal CSV loader for real datasets (ODDS export convention: numeric
+//! feature columns, last column = label with non-zero ⇒ anomaly). Supports
+//! an optional header row and blank-line tolerance. No quoting — anomaly
+//! benchmarks are plain numeric matrices.
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+
+pub fn load_csv(path: &str, name: &str) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    parse_csv(&text, name)
+}
+
+pub fn parse_csv(text: &str, name: &str) -> Result<Dataset> {
+    let mut data = Vec::new();
+    let mut labels = Vec::new();
+    let mut d: Option<usize> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() < 2 {
+            bail!("{name}:{} has {} fields, need >= 2", lineno + 1, fields.len());
+        }
+        let parsed: Result<Vec<f32>, _> = fields.iter().map(|f| f.parse::<f32>()).collect();
+        let row = match parsed {
+            Ok(row) => row,
+            Err(_) if lineno == 0 => continue, // header row
+            Err(e) => bail!("{name}:{}: {e}", lineno + 1),
+        };
+        let dim = row.len() - 1;
+        match d {
+            None => d = Some(dim),
+            Some(expect) if expect != dim => {
+                bail!("{name}:{}: {dim} features, expected {expect}", lineno + 1)
+            }
+            _ => {}
+        }
+        data.extend_from_slice(&row[..dim]);
+        labels.push(row[dim] != 0.0);
+    }
+    let d = d.context("empty CSV")?;
+    Ok(Dataset { name: name.to_string(), d, data, labels })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_numeric_csv() {
+        let ds = parse_csv("1.0,2.0,0\n3.0,4.0,1\n", "t").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.labels, vec![false, true]);
+        assert_eq!(ds.sample(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn skips_header_and_blank_lines() {
+        let ds = parse_csv("f1,f2,label\n\n1,2,0\n\n5,6,1\n", "t").unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.labels, vec![false, true]);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(parse_csv("1,2,0\n1,2,3,0\n", "t").is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric_data_row() {
+        assert!(parse_csv("1,2,0\nx,y,1\n", "t").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_csv("", "t").is_err());
+        assert!(parse_csv("header,only,row\n", "t").is_err());
+    }
+
+    #[test]
+    fn nonzero_label_is_anomaly() {
+        let ds = parse_csv("0,1\n0,2\n0,0\n", "t").unwrap();
+        assert_eq!(ds.labels, vec![true, true, false]);
+    }
+}

@@ -1,0 +1,105 @@
+//! Dataset substrate: the paper's four evaluation datasets (Table 3) as
+//! seeded synthetic generators (see DESIGN.md §6 substitution 2), a CSV
+//! loader for dropping in the real ODDS files, and a chunking streamer that
+//! feeds the fabric.
+
+pub mod csv;
+pub mod stream;
+pub mod synth;
+
+pub use stream::{ChunkStream, Chunk};
+pub use synth::{DatasetProfile, PROFILES};
+
+/// An in-memory labelled dataset (row-major `[n, d]`).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub d: usize,
+    /// Row-major samples `[n * d]`.
+    pub data: Vec<f32>,
+    /// Ground truth: true = anomaly.
+    pub labels: Vec<bool>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        if self.d == 0 {
+            0
+        } else {
+            self.data.len() / self.d
+        }
+    }
+
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn outliers(&self) -> usize {
+        self.labels.iter().filter(|&&l| l).count()
+    }
+
+    /// Fraction of anomalies — the paper's contamination rate.
+    pub fn contamination(&self) -> f64 {
+        if self.labels.is_empty() {
+            0.0
+        } else {
+            self.outliers() as f64 / self.labels.len() as f64
+        }
+    }
+
+    /// First `n` samples (stream prefix) — used to cap experiment run time.
+    pub fn prefix(&self, n: usize) -> Dataset {
+        let n = n.min(self.n());
+        Dataset {
+            name: self.name.clone(),
+            d: self.d,
+            data: self.data[..n * self.d].to_vec(),
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+
+    /// Warm-up prefix used for parameter-range estimation (min(W·4, n)).
+    pub fn warmup(&self, window: usize) -> &[f32] {
+        let n = (window * 4).min(self.n());
+        &self.data[..n * self.d]
+    }
+
+    /// Load a named paper dataset: real CSV from `data_dir` if present
+    /// (`<name>.csv`), else the synthetic generator.
+    pub fn load(name: &str, seed: u64, data_dir: Option<&str>) -> Option<Dataset> {
+        if let Some(dir) = data_dir {
+            let path = format!("{dir}/{name}.csv");
+            if std::path::Path::new(&path).exists() {
+                if let Ok(ds) = csv::load_csv(&path, name) {
+                    return Some(ds);
+                }
+            }
+        }
+        synth::generate(name, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_truncates() {
+        let ds = synth::generate("cardio", 0).unwrap();
+        let p = ds.prefix(100);
+        assert_eq!(p.n(), 100);
+        assert_eq!(p.d, ds.d);
+        assert_eq!(p.sample(5), ds.sample(5));
+    }
+
+    #[test]
+    fn load_falls_back_to_synth() {
+        let ds = Dataset::load("smtp3", 1, Some("/nonexistent")).unwrap();
+        assert_eq!(ds.d, 3);
+    }
+
+    #[test]
+    fn unknown_dataset_is_none() {
+        assert!(Dataset::load("nope", 1, None).is_none());
+    }
+}

@@ -1,0 +1,132 @@
+//! Chunked streaming (paper block ①, the WINDOWER, at transfer granularity).
+//!
+//! Streams are cut into fixed-size chunks matching the artifact chunk size;
+//! the final chunk is zero-padded with a validity mask — masked samples
+//! neither score nor touch detector state (enforced by the JAX model and
+//! checked in `python/tests/test_model.py`).
+
+/// One streaming transfer unit: `chunk × d` samples + validity mask.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    /// Monotone sequence number within the stream.
+    pub seq: u64,
+    /// Row-major `[chunk, d]`, zero-padded past `n_valid`.
+    pub data: Vec<f32>,
+    /// 1.0 for valid rows, 0.0 for padding.
+    pub mask: Vec<f32>,
+    /// Number of valid leading rows.
+    pub n_valid: usize,
+    /// True on the final chunk of the stream.
+    pub last: bool,
+}
+
+impl Chunk {
+    pub fn rows(&self) -> usize {
+        self.mask.len()
+    }
+}
+
+/// Iterator cutting a row-major `[n, d]` slice into padded chunks.
+pub struct ChunkStream<'a> {
+    data: &'a [f32],
+    d: usize,
+    chunk: usize,
+    offset: usize, // in samples
+    seq: u64,
+}
+
+impl<'a> ChunkStream<'a> {
+    pub fn new(data: &'a [f32], d: usize, chunk: usize) -> Self {
+        assert!(d > 0 && chunk > 0);
+        assert_eq!(data.len() % d, 0, "data not a whole number of samples");
+        ChunkStream { data, d, chunk, offset: 0, seq: 0 }
+    }
+
+    pub fn total_samples(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    pub fn total_chunks(&self) -> usize {
+        self.total_samples().div_ceil(self.chunk).max(1)
+    }
+}
+
+impl<'a> Iterator for ChunkStream<'a> {
+    type Item = Chunk;
+
+    fn next(&mut self) -> Option<Chunk> {
+        let n = self.total_samples();
+        if self.offset >= n && !(n == 0 && self.seq == 0) {
+            return None;
+        }
+        let valid = (n - self.offset).min(self.chunk);
+        let mut data = vec![0f32; self.chunk * self.d];
+        data[..valid * self.d]
+            .copy_from_slice(&self.data[self.offset * self.d..(self.offset + valid) * self.d]);
+        let mut mask = vec![0f32; self.chunk];
+        mask[..valid].fill(1.0);
+        let chunk = Chunk {
+            seq: self.seq,
+            data,
+            mask,
+            n_valid: valid,
+            last: self.offset + valid >= n,
+        };
+        self.offset += self.chunk;
+        self.seq += 1;
+        Some(chunk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_multiple_has_no_padding() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 6 samples, d=2
+        let chunks: Vec<Chunk> = ChunkStream::new(&data, 2, 3).collect();
+        assert_eq!(chunks.len(), 2);
+        assert!(chunks.iter().all(|c| c.n_valid == 3));
+        assert!(chunks[1].last && !chunks[0].last);
+        assert_eq!(chunks[0].data, &data[..6]);
+    }
+
+    #[test]
+    fn tail_chunk_is_padded_and_masked() {
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect(); // 5 samples, d=2
+        let chunks: Vec<Chunk> = ChunkStream::new(&data, 2, 4).collect();
+        assert_eq!(chunks.len(), 2);
+        let tail = &chunks[1];
+        assert_eq!(tail.n_valid, 1);
+        assert_eq!(tail.mask, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&tail.data[..2], &data[8..10]);
+        assert!(tail.data[2..].iter().all(|&v| v == 0.0));
+        assert!(tail.last);
+    }
+
+    #[test]
+    fn seq_numbers_monotone() {
+        let data = vec![0f32; 20 * 2];
+        let seqs: Vec<u64> = ChunkStream::new(&data, 2, 4).map(|c| c.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_stream_yields_one_empty_last_chunk() {
+        let chunks: Vec<Chunk> = ChunkStream::new(&[], 3, 4).collect();
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].n_valid, 0);
+        assert!(chunks[0].last);
+    }
+
+    #[test]
+    fn total_chunks_matches_iteration() {
+        for n in [1usize, 4, 5, 8, 9] {
+            let data = vec![0f32; n * 3];
+            let cs = ChunkStream::new(&data, 3, 4);
+            let expect = cs.total_chunks();
+            assert_eq!(ChunkStream::new(&data, 3, 4).count(), expect, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Jenkins one-at-a-time hash (paper Algorithm 4).
+//!
+//! Bit-exact counterpart of `python/compile/kernels/jenkins.py` — the golden
+//! vectors below are shared verbatim with `python/tests/test_jenkins.py`.
+//! Any divergence here breaks CPU↔FPGA-artifact parity.
+
+/// Hash a key of u32 words with the given seed (the paper seeds with the
+/// 1-based CMS row index).
+#[inline]
+pub fn jenkins_hash(key: &[u32], seed: u32) -> u32 {
+    let mut h = seed;
+    for &k in key {
+        h = h.wrapping_add(k);
+        h = h.wrapping_add(h << 10);
+        h ^= h >> 6;
+    }
+    h = h.wrapping_add(h << 3);
+    h ^= h >> 11;
+    h = h.wrapping_add(h << 15);
+    h
+}
+
+/// `jenkins_hash % mod` as a table index.
+#[inline]
+pub fn jenkins_mod(key: &[u32], seed: u32, modulus: u32) -> i32 {
+    (jenkins_hash(key, seed) % modulus) as i32
+}
+
+/// Hash a key of i32 grid values (two's-complement reinterpretation, matching
+/// jnp's `astype(uint32)`).
+#[inline]
+pub fn jenkins_mod_i32(key: &[i32], seed: u32, modulus: u32) -> i32 {
+    let mut h = seed;
+    for &k in key {
+        h = h.wrapping_add(k as u32);
+        h = h.wrapping_add(h << 10);
+        h ^= h >> 6;
+    }
+    h = h.wrapping_add(h << 3);
+    h ^= h >> 11;
+    h = h.wrapping_add(h << 15);
+    (h % modulus) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared with python/tests/test_jenkins.py::GOLDEN.
+    const GOLDEN: &[(&[u32], u32, u32)] = &[
+        (&[0], 0, 0x0000_0000),
+        (&[1, 2, 3], 1, 0x54EE_7BFA),
+        (&[0xFFFF_FFFF], 7, 0x6DC7_5B8D),
+        (&[42, 0, 42, 0xDEAD_BEEF], 2, 0x1FF9_CDF1),
+        (&[5, 4, 3, 2, 1, 0], 123456, 0x1C57_948C),
+    ];
+
+    #[test]
+    fn golden_vectors_match_python() {
+        for &(key, seed, want) in GOLDEN {
+            assert_eq!(jenkins_hash(key, seed), want, "key={key:?} seed={seed}");
+        }
+    }
+
+    #[test]
+    fn i32_wraps_like_u32() {
+        assert_eq!(jenkins_mod_i32(&[-1], 7, 1 << 31), jenkins_mod(&[0xFFFF_FFFF], 7, 1 << 31));
+        assert_eq!(jenkins_mod_i32(&[i32::MIN], 3, 997), jenkins_mod(&[0x8000_0000], 3, 997));
+    }
+
+    #[test]
+    fn mod_in_range() {
+        for m in [2u32, 16, 128, 997] {
+            for s in 0..8 {
+                let idx = jenkins_mod(&[s * 7919, s], s, m);
+                assert!((0..m as i32).contains(&idx));
+            }
+        }
+    }
+
+    #[test]
+    fn seed_changes_hash() {
+        let key = [10u32, 20, 30];
+        assert_ne!(jenkins_hash(&key, 1), jenkins_hash(&key, 2));
+    }
+}

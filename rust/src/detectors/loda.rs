@@ -1,0 +1,165 @@
+//! Loda (paper Algorithm 1) — projection + histogram core, 1×W window.
+//!
+//! This is the CPU baseline (the paper's GCC implementation, in rust).
+//! Semantics match the JAX model exactly: read-count-before-insert, denom
+//! `max(min(n,W),1)`, score `log2(denom) − log2(max(c,1))` averaged over R.
+
+use super::params::LodaParams;
+use super::quantize::q16;
+use super::window::SlidingCounts;
+use super::Detector;
+
+#[derive(Clone, Debug)]
+pub struct Loda {
+    params: LodaParams,
+    bins: usize,
+    counts: SlidingCounts,
+    /// Apply Q16.16 to the ensemble score (FPGA-flavoured arithmetic).
+    pub quantize: bool,
+    idx_buf: Vec<i32>,
+}
+
+impl Loda {
+    pub fn new(params: LodaParams, bins: usize, window: usize) -> Self {
+        let r = params.r;
+        Loda {
+            params,
+            bins,
+            counts: SlidingCounts::new(r, bins, window),
+            quantize: false,
+            idx_buf: vec![0; r],
+        }
+    }
+
+    #[inline]
+    fn bin_index(&self, ri: usize, z: f32) -> i32 {
+        let pmin = self.params.pmin[ri];
+        let span = (self.params.pmax[ri] - pmin).max(1e-12);
+        let idx = ((z - pmin) / span * self.bins as f32).floor();
+        (idx as i32).clamp(0, self.bins as i32 - 1)
+    }
+}
+
+impl Detector for Loda {
+    fn update(&mut self, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.params.d);
+        let (r, d) = (self.params.r, self.params.d);
+        let denom = self.counts.denom();
+        let mut sum = 0f32;
+        for ri in 0..r {
+            // ③ Projection (sparse dot product)
+            let w = &self.params.prj[ri * d..(ri + 1) * d];
+            let mut z = 0f32;
+            for (wi, xi) in w.iter().zip(x) {
+                z += wi * xi;
+            }
+            // ④ Histogram lookup
+            let idx = self.bin_index(ri, z);
+            self.idx_buf[ri] = idx;
+            let c = self.counts.get(ri, idx) as f32;
+            // ⑥ Score
+            sum += denom.log2() - c.max(1.0).log2();
+        }
+        // ⑤ Sliding-window update
+        self.counts.insert(&self.idx_buf);
+        // ⑦ Score averaging
+        let score = sum / r as f32;
+        if self.quantize {
+            q16(score)
+        } else {
+            score
+        }
+    }
+
+    fn reset(&mut self) {
+        self.counts.reset();
+    }
+
+    fn r(&self) -> usize {
+        self.params.r
+    }
+
+    fn d(&self) -> usize {
+        self.params.d
+    }
+
+    fn name(&self) -> &'static str {
+        "loda"
+    }
+}
+
+impl Loda {
+    /// Count-table snapshot (for parity tests against the PJRT state).
+    pub fn hist(&self) -> &[i32] {
+        self.counts.counts()
+    }
+
+    pub fn params(&self) -> &LodaParams {
+        &self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detectors::prng::Prng;
+
+    fn mk(r: usize, d: usize, seed: u64) -> (Loda, Vec<f32>) {
+        let mut p = Prng::new(seed);
+        let data: Vec<f32> = (0..64 * d).map(|_| p.gaussian() as f32).collect();
+        let params = LodaParams::generate(seed, r, d, &data[..16 * d]);
+        (Loda::new(params, 8, 8), data)
+    }
+
+    #[test]
+    fn first_sample_scores_zero() {
+        let (mut det, data) = mk(4, 3, 1);
+        // denom=1, c clamp 1 → log2(1)-log2(1) = 0
+        assert_eq!(det.update(&data[0..3]), 0.0);
+    }
+
+    #[test]
+    fn repeated_sample_becomes_unsurprising() {
+        let (mut det, data) = mk(4, 3, 2);
+        let x = &data[0..3];
+        let mut last = f32::INFINITY;
+        for _ in 0..8 {
+            last = det.update(x);
+        }
+        // After the window fills with x, count==window → score ≈ 0.
+        assert!(last.abs() < 1e-6, "score={last}");
+    }
+
+    #[test]
+    fn outlier_scores_higher_than_inliers() {
+        let (mut det, data) = mk(8, 3, 3);
+        let mut inlier_score = 0f32;
+        for s in 0..20 {
+            inlier_score = det.update(&data[s * 3..(s + 1) * 3]);
+        }
+        let outlier = [50.0f32, -50.0, 50.0];
+        let outlier_score = det.update(&outlier);
+        assert!(outlier_score > inlier_score, "{outlier_score} <= {inlier_score}");
+    }
+
+    #[test]
+    fn reset_restores_initial_behaviour() {
+        let (mut det, data) = mk(4, 3, 4);
+        let s0 = det.update(&data[0..3]);
+        for s in 1..10 {
+            det.update(&data[s * 3..(s + 1) * 3]);
+        }
+        det.reset();
+        assert_eq!(det.update(&data[0..3]), s0);
+    }
+
+    #[test]
+    fn quantized_scores_on_q16_grid() {
+        let (mut det, data) = mk(4, 3, 5);
+        det.quantize = true;
+        for s in 0..20 {
+            let sc = det.update(&data[s * 3..(s + 1) * 3]) as f64;
+            assert!((sc * 65536.0 - (sc * 65536.0).round()).abs() < 1e-3);
+        }
+    }
+}

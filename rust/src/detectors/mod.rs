@@ -1,0 +1,207 @@
+//! CPU baseline detectors (the paper's GCC implementations, in rust) and
+//! the substrates they share: PRNG, Jenkins hash, sliding-window counts,
+//! parameter generation and Q16.16 quantisation.
+//!
+//! Each detector consumes one sample per [`Detector::update`] call and
+//! returns the ensemble-averaged anomaly score — higher ⇒ more anomalous.
+
+pub mod jenkins;
+pub mod loda;
+pub mod params;
+pub mod prng;
+pub mod quantize;
+pub mod rshash;
+pub mod window;
+pub mod xstream;
+
+pub use loda::Loda;
+pub use rshash::RsHash;
+pub use xstream::XStream;
+
+use crate::defaults;
+use params::{LodaParams, RsHashParams, XStreamParams};
+
+/// A streaming ensemble anomaly detector (blocks ①–⑦ of paper Table 1).
+pub trait Detector: Send {
+    /// Score one sample and update the sliding-window state.
+    fn update(&mut self, x: &[f32]) -> f32;
+    /// Clear all window state (parameters are kept).
+    fn reset(&mut self);
+    /// Ensemble size (number of sub-detectors).
+    fn r(&self) -> usize;
+    /// Input dimensionality.
+    fn d(&self) -> usize;
+    fn name(&self) -> &'static str;
+
+    /// Convenience: score a whole row-major `[n, d]` stream.
+    fn run_stream(&mut self, xs: &[f32]) -> Vec<f32> {
+        let d = self.d();
+        xs.chunks_exact(d).map(|x| self.update(x)).collect()
+    }
+}
+
+/// Detector algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DetectorKind {
+    Loda,
+    RsHash,
+    XStream,
+}
+
+impl DetectorKind {
+    pub const ALL: [DetectorKind; 3] = [DetectorKind::Loda, DetectorKind::RsHash, DetectorKind::XStream];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DetectorKind::Loda => "loda",
+            DetectorKind::RsHash => "rshash",
+            DetectorKind::XStream => "xstream",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DetectorKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "loda" | "a" => Some(DetectorKind::Loda),
+            "rshash" | "rs-hash" | "b" => Some(DetectorKind::RsHash),
+            "xstream" | "c" => Some(DetectorKind::XStream),
+            _ => None,
+        }
+    }
+
+    /// Paper Table 7 per-pblock ensemble size.
+    pub fn pblock_r(&self) -> usize {
+        match self {
+            DetectorKind::Loda => defaults::PBLOCK_R_LODA,
+            DetectorKind::RsHash => defaults::PBLOCK_R_RSHASH,
+            DetectorKind::XStream => defaults::PBLOCK_R_XSTREAM,
+        }
+    }
+}
+
+/// Hyper-parameters for detector construction (paper Table 4 defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct DetectorSpec {
+    pub kind: DetectorKind,
+    pub r: usize,
+    pub d: usize,
+    pub window: usize,
+    pub bins: usize,
+    pub w: usize,
+    pub modulus: usize,
+    pub k: usize,
+    pub quantize: bool,
+    pub seed: u64,
+}
+
+impl DetectorSpec {
+    pub fn new(kind: DetectorKind, d: usize, r: usize, seed: u64) -> Self {
+        DetectorSpec {
+            kind,
+            r,
+            d,
+            window: defaults::WINDOW,
+            bins: defaults::LODA_BINS,
+            w: defaults::CMS_ROWS,
+            modulus: defaults::CMS_MOD,
+            k: defaults::XSTREAM_K,
+            quantize: false,
+            seed,
+        }
+    }
+
+    /// Build a detector owning only sub-detectors `[r0, r1)` of the full
+    /// ensemble — used to partition an ensemble across CPU threads (paper
+    /// §4.4) while keeping parameters identical to the unpartitioned build.
+    pub fn build_slice(&self, warmup: &[f32], r0: usize, r1: usize) -> Box<dyn Detector> {
+        assert!(r0 < r1 && r1 <= self.r);
+        match self.kind {
+            DetectorKind::Loda => {
+                let p = LodaParams::generate(self.seed, self.r, self.d, warmup).slice(r0, r1);
+                let mut det = Loda::new(p, self.bins, self.window);
+                det.quantize = self.quantize;
+                Box::new(det)
+            }
+            DetectorKind::RsHash => {
+                let p = RsHashParams::generate(self.seed, self.r, self.d, self.window, warmup)
+                    .slice(r0, r1);
+                let mut det = RsHash::new(p, self.w, self.modulus, self.window);
+                det.quantize = self.quantize;
+                Box::new(det)
+            }
+            DetectorKind::XStream => {
+                let p =
+                    XStreamParams::generate(self.seed, self.r, self.d, self.k, self.w, warmup)
+                        .slice(r0, r1);
+                let mut det = XStream::new(p, self.modulus, self.window);
+                det.quantize = self.quantize;
+                Box::new(det)
+            }
+        }
+    }
+
+    /// Build the detector, estimating ranges from a warm-up prefix
+    /// (row-major `[n, d]`, may be empty).
+    pub fn build(&self, warmup: &[f32]) -> Box<dyn Detector> {
+        match self.kind {
+            DetectorKind::Loda => {
+                let p = LodaParams::generate(self.seed, self.r, self.d, warmup);
+                let mut det = Loda::new(p, self.bins, self.window);
+                det.quantize = self.quantize;
+                Box::new(det)
+            }
+            DetectorKind::RsHash => {
+                let p = RsHashParams::generate(self.seed, self.r, self.d, self.window, warmup);
+                let mut det = RsHash::new(p, self.w, self.modulus, self.window);
+                det.quantize = self.quantize;
+                Box::new(det)
+            }
+            DetectorKind::XStream => {
+                let p = XStreamParams::generate(self.seed, self.r, self.d, self.k, self.w, warmup);
+                let mut det = XStream::new(p, self.modulus, self.window);
+                det.quantize = self.quantize;
+                Box::new(det)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use prng::Prng;
+
+    #[test]
+    fn spec_builds_all_kinds() {
+        let mut p = Prng::new(0);
+        let warmup: Vec<f32> = (0..32 * 3).map(|_| p.gaussian() as f32).collect();
+        for kind in DetectorKind::ALL {
+            let mut det = DetectorSpec::new(kind, 3, 4, 1).build(&warmup);
+            assert_eq!(det.r(), 4);
+            assert_eq!(det.d(), 3);
+            let scores = det.run_stream(&warmup);
+            assert_eq!(scores.len(), 32);
+            assert!(scores.iter().all(|s| s.is_finite()));
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in DetectorKind::ALL {
+            assert_eq!(DetectorKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(DetectorKind::parse("A"), Some(DetectorKind::Loda));
+        assert_eq!(DetectorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn run_stream_equals_update_loop() {
+        let mut p = Prng::new(3);
+        let data: Vec<f32> = (0..20 * 3).map(|_| p.gaussian() as f32).collect();
+        let spec = DetectorSpec::new(DetectorKind::RsHash, 3, 3, 7);
+        let mut a = spec.build(&data);
+        let mut b = spec.build(&data);
+        let batch = a.run_stream(&data);
+        let single: Vec<f32> = data.chunks_exact(3).map(|x| b.update(x)).collect();
+        assert_eq!(batch, single);
+    }
+}

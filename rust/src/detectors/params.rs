@@ -1,0 +1,315 @@
+//! Detector parameter generation (the paper's "parameters in on-chip
+//! memory"). The rust coordinator owns the parameters: the same values feed
+//! the CPU baseline and — as runtime inputs — the PJRT artifacts, enabling
+//! exact parity experiments (paper Tables 8–10 AUC columns).
+//!
+//! Ranges (Loda's projection min/max, RS-Hash's per-dim min/max, xStream's
+//! bin widths) are estimated from a warm-up prefix of the stream, mirroring
+//! the paper's host-side initialisation before streaming starts.
+
+use super::prng::Prng;
+
+/// Loda (Algorithm 1): sparse random projections + histogram range.
+#[derive(Clone, Debug)]
+pub struct LodaParams {
+    pub r: usize,
+    pub d: usize,
+    /// Row-major `[R, d]` projection matrix (√d-sparse N(0,1) rows).
+    pub prj: Vec<f32>,
+    /// Per-sub-detector histogram range `[R]`.
+    pub pmin: Vec<f32>,
+    pub pmax: Vec<f32>,
+}
+
+/// RS-Hash (Algorithm 2): normalisation stats + per-sub-detector grid.
+#[derive(Clone, Debug)]
+pub struct RsHashParams {
+    pub r: usize,
+    pub d: usize,
+    /// Per-dimension min/max `[d]` for normalisation to [0,1].
+    pub dmin: Vec<f32>,
+    pub dmax: Vec<f32>,
+    /// Grid offsets `[R, d]`, α ∈ U[0, f_r).
+    pub alpha: Vec<f32>,
+    /// Grid cell sizes `[R]`, f ∈ U(1/√W, 1−1/√W).
+    pub f: Vec<f32>,
+}
+
+/// xStream (Algorithm 3): dense projections + half-space-chain bins.
+#[derive(Clone, Debug)]
+pub struct XStreamParams {
+    pub r: usize,
+    pub d: usize,
+    pub k: usize,
+    pub w: usize,
+    /// `[R, d, K]` dense N(0,1)/√K projections.
+    pub proj: Vec<f32>,
+    /// `[R, w, K]` random bin shifts.
+    pub shift: Vec<f32>,
+    /// `[R, K]` base bin widths (row i uses width/2^i).
+    pub width: Vec<f32>,
+}
+
+impl LodaParams {
+    /// Generate for `r` sub-detectors over `d` dims; `warmup` is a prefix of
+    /// the stream (row-major `[n, d]`) used to set histogram ranges.
+    pub fn generate(seed: u64, r: usize, d: usize, warmup: &[f32]) -> Self {
+        let root = Prng::new(seed);
+        let nnz = (d as f64).sqrt().ceil() as usize;
+        let mut prj = vec![0f32; r * d];
+        for ri in 0..r {
+            let mut p = root.child(ri as u64);
+            for dim in p.choose_k(d, nnz) {
+                prj[ri * d + dim] = p.gaussian() as f32;
+            }
+        }
+        let (pmin, pmax) = project_range(&prj, r, d, warmup);
+        LodaParams { r, d, prj, pmin, pmax }
+    }
+
+    /// Sub-range view for thread partitioning (sub-detectors `[r0, r1)`).
+    pub fn slice(&self, r0: usize, r1: usize) -> Self {
+        LodaParams {
+            r: r1 - r0,
+            d: self.d,
+            prj: self.prj[r0 * self.d..r1 * self.d].to_vec(),
+            pmin: self.pmin[r0..r1].to_vec(),
+            pmax: self.pmax[r0..r1].to_vec(),
+        }
+    }
+}
+
+/// Project the warm-up prefix and return per-sub-detector [min, max] with a
+/// 10 % margin each side (fallback ±3σ of the projection norm when empty).
+fn project_range(prj: &[f32], r: usize, d: usize, warmup: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = if d == 0 { 0 } else { warmup.len() / d };
+    let mut pmin = vec![f32::INFINITY; r];
+    let mut pmax = vec![f32::NEG_INFINITY; r];
+    for s in 0..n {
+        let x = &warmup[s * d..(s + 1) * d];
+        for ri in 0..r {
+            let w = &prj[ri * d..(ri + 1) * d];
+            let z: f32 = w.iter().zip(x).map(|(a, b)| a * b).sum();
+            pmin[ri] = pmin[ri].min(z);
+            pmax[ri] = pmax[ri].max(z);
+        }
+    }
+    for ri in 0..r {
+        if n == 0 || pmin[ri] >= pmax[ri] {
+            let norm: f32 = prj[ri * d..(ri + 1) * d].iter().map(|w| w * w).sum::<f32>().sqrt();
+            let s = 3.0 * norm.max(1e-6);
+            pmin[ri] = -s;
+            pmax[ri] = s;
+        } else {
+            let margin = 0.1 * (pmax[ri] - pmin[ri]).max(1e-6);
+            pmin[ri] -= margin;
+            pmax[ri] += margin;
+        }
+    }
+    (pmin, pmax)
+}
+
+impl RsHashParams {
+    pub fn generate(seed: u64, r: usize, d: usize, window: usize, warmup: &[f32]) -> Self {
+        let root = Prng::new(seed);
+        let (dmin, dmax) = dim_range(d, warmup);
+        let srt = 1.0 / (window as f64).sqrt();
+        let (flo, fhi) = (srt.min(0.49), (1.0 - srt).max(0.51));
+        let mut alpha = vec![0f32; r * d];
+        let mut f = vec![0f32; r];
+        for ri in 0..r {
+            let mut p = root.child(ri as u64);
+            let fr = p.uniform_in(flo, fhi) as f32;
+            f[ri] = fr;
+            for dim in 0..d {
+                alpha[ri * d + dim] = (p.uniform() as f32) * fr;
+            }
+        }
+        RsHashParams { r, d, dmin, dmax, alpha, f }
+    }
+
+    pub fn slice(&self, r0: usize, r1: usize) -> Self {
+        RsHashParams {
+            r: r1 - r0,
+            d: self.d,
+            dmin: self.dmin.clone(),
+            dmax: self.dmax.clone(),
+            alpha: self.alpha[r0 * self.d..r1 * self.d].to_vec(),
+            f: self.f[r0..r1].to_vec(),
+        }
+    }
+}
+
+/// Per-dimension [min, max] of the warm-up prefix (fallback [0,1]).
+fn dim_range(d: usize, warmup: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = if d == 0 { 0 } else { warmup.len() / d };
+    let mut dmin = vec![f32::INFINITY; d];
+    let mut dmax = vec![f32::NEG_INFINITY; d];
+    for s in 0..n {
+        for dim in 0..d {
+            let v = warmup[s * d + dim];
+            dmin[dim] = dmin[dim].min(v);
+            dmax[dim] = dmax[dim].max(v);
+        }
+    }
+    for dim in 0..d {
+        if n == 0 || dmin[dim] > dmax[dim] {
+            dmin[dim] = 0.0;
+            dmax[dim] = 1.0;
+        }
+    }
+    (dmin, dmax)
+}
+
+impl XStreamParams {
+    pub fn generate(seed: u64, r: usize, d: usize, k: usize, w: usize, warmup: &[f32]) -> Self {
+        let root = Prng::new(seed);
+        let scale = 1.0 / (k as f64).sqrt();
+        let mut proj = vec![0f32; r * d * k];
+        let mut shift = vec![0f32; r * w * k];
+        let mut width = vec![0f32; r * k];
+        let n = if d == 0 { 0 } else { warmup.len() / d };
+        for ri in 0..r {
+            let mut p = root.child(ri as u64);
+            for di in 0..d {
+                for ki in 0..k {
+                    proj[(ri * d + di) * k + ki] = (p.gaussian() * scale) as f32;
+                }
+            }
+            // Base bin width per projected dim: the full warm-up range, so
+            // CMS row i (width/2^i) yields 2^i bins per dimension. All K
+            // dims are hashed into one cell key (Algorithm 3's perbins), so
+            // coarse top rows are essential — finer widths make every cell
+            // unique and the density estimate degenerates to zero counts.
+            for ki in 0..k {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for s in 0..n {
+                    let x = &warmup[s * d..(s + 1) * d];
+                    let mut z = 0f32;
+                    for di in 0..d {
+                        z += x[di] * proj[(ri * d + di) * k + ki];
+                    }
+                    lo = lo.min(z);
+                    hi = hi.max(z);
+                }
+                let wdt = if n == 0 || hi <= lo { 1.0 } else { (hi - lo).max(1e-3) };
+                width[ri * k + ki] = wdt;
+                for wi in 0..w {
+                    shift[(ri * w + wi) * k + ki] = (p.uniform() as f32) * wdt;
+                }
+            }
+        }
+        XStreamParams { r, d, k, w, proj, shift, width }
+    }
+
+    pub fn slice(&self, r0: usize, r1: usize) -> Self {
+        let (d, k, w) = (self.d, self.k, self.w);
+        XStreamParams {
+            r: r1 - r0,
+            d,
+            k,
+            w,
+            proj: self.proj[r0 * d * k..r1 * d * k].to_vec(),
+            shift: self.shift[r0 * w * k..r1 * w * k].to_vec(),
+            width: self.width[r0 * k..r1 * k].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn warmup(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..n * d).map(|_| p.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn loda_rows_are_sqrt_d_sparse() {
+        let d = 16;
+        let lp = LodaParams::generate(1, 8, d, &warmup(32, d, 2));
+        for ri in 0..8 {
+            let nnz = lp.prj[ri * d..(ri + 1) * d].iter().filter(|&&v| v != 0.0).count();
+            assert_eq!(nnz, 4); // ceil(sqrt(16))
+        }
+    }
+
+    #[test]
+    fn loda_range_covers_warmup_projections() {
+        let d = 5;
+        let wu = warmup(64, d, 3);
+        let lp = LodaParams::generate(7, 4, d, &wu);
+        for s in 0..64 {
+            for ri in 0..4 {
+                let z: f32 = (0..d).map(|i| lp.prj[ri * d + i] * wu[s * d + i]).sum();
+                assert!(z >= lp.pmin[ri] && z <= lp.pmax[ri]);
+            }
+        }
+    }
+
+    #[test]
+    fn loda_empty_warmup_fallback_is_symmetric() {
+        let lp = LodaParams::generate(1, 3, 4, &[]);
+        for ri in 0..3 {
+            assert!(lp.pmin[ri] < 0.0 && lp.pmax[ri] > 0.0);
+            assert!((lp.pmin[ri] + lp.pmax[ri]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rshash_f_in_paper_range() {
+        let rp = RsHashParams::generate(2, 16, 3, 128, &warmup(16, 3, 4));
+        let srt = 1.0 / 128f64.sqrt();
+        for &f in &rp.f {
+            assert!((f as f64) > srt - 1e-6 && (f as f64) < 1.0 - srt + 1e-6);
+        }
+        // alpha ∈ [0, f)
+        for ri in 0..16 {
+            for di in 0..3 {
+                let a = rp.alpha[ri * 3 + di];
+                assert!(a >= 0.0 && a < rp.f[ri]);
+            }
+        }
+    }
+
+    #[test]
+    fn xstream_widths_positive() {
+        let xp = XStreamParams::generate(3, 4, 6, 5, 2, &warmup(40, 6, 5));
+        assert!(xp.width.iter().all(|&w| w > 0.0));
+        // shift ∈ [0, width)
+        for ri in 0..4 {
+            for wi in 0..2 {
+                for ki in 0..5 {
+                    let s = xp.shift[(ri * 2 + wi) * 5 + ki];
+                    assert!(s >= 0.0 && s < xp.width[ri * 5 + ki]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = LodaParams::generate(9, 4, 6, &warmup(8, 6, 1));
+        let b = LodaParams::generate(9, 4, 6, &warmup(8, 6, 1));
+        assert_eq!(a.prj, b.prj);
+        assert_eq!(a.pmin, b.pmin);
+    }
+
+    #[test]
+    fn slice_matches_full_generation_subrange() {
+        let full = XStreamParams::generate(11, 6, 4, 3, 2, &warmup(16, 4, 6));
+        let part = full.slice(2, 5);
+        assert_eq!(part.r, 3);
+        assert_eq!(part.proj[..], full.proj[2 * 4 * 3..5 * 4 * 3]);
+        assert_eq!(part.width[..], full.width[2 * 3..5 * 3]);
+    }
+
+    #[test]
+    fn different_subdetectors_get_different_params() {
+        let lp = LodaParams::generate(5, 8, 9, &[]);
+        let r0 = &lp.prj[0..9];
+        let r1 = &lp.prj[9..18];
+        assert_ne!(r0, r1);
+    }
+}

@@ -1,0 +1,189 @@
+//! Deterministic PRNG substrate: SplitMix64 seeding + xoshiro256\*\*.
+//!
+//! Detector parameters (projection vectors, α/f, bin shifts…) are generated
+//! here and fed both to the CPU baseline and — as runtime inputs — to the
+//! PJRT artifacts, so both paths see *identical* parameters (the FPGA paper
+//! stores them in on-chip memory; we pass them as arguments).
+
+/// SplitMix64 — used to expand a user seed into xoshiro state.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256\*\* — the workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+    /// Cached second Box-Muller deviate.
+    gauss_spare: Option<f64>,
+}
+
+impl Prng {
+    /// Seeded construction; distinct seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64(seed);
+        Prng { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()], gauss_spare: None }
+    }
+
+    /// Derive an independent child stream (used to give each sub-detector
+    /// its own reproducible parameter stream regardless of generation order).
+    pub fn child(&self, stream: u64) -> Prng {
+        let mut sm = SplitMix64(self.s[0] ^ stream.wrapping_mul(0xA24BAED4963EE407));
+        Prng { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()], gauss_spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 high bits → [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.uniform() * n as f64) as usize % n
+    }
+
+    /// Standard normal via Box–Muller (polar-free, cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // Avoid ln(0).
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fisher–Yates shuffle prefix: pick `k` distinct indices out of `n`.
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        let k = k.min(n);
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_give_distinct_streams() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn child_streams_independent_of_call_order() {
+        let root = Prng::new(7);
+        let mut c1 = root.child(3);
+        let mut c2 = root.child(3);
+        assert_eq!(c1.next_u64(), c2.next_u64());
+        let mut c3 = root.child(4);
+        assert_ne!(c1.next_u64(), c3.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut p = Prng::new(9);
+        for _ in 0..10_000 {
+            let u = p.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments_sane() {
+        let mut p = Prng::new(11);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn choose_k_distinct_and_in_range() {
+        let mut p = Prng::new(5);
+        for _ in 0..50 {
+            let k = p.below(10) + 1;
+            let picks = p.choose_k(20, k);
+            assert_eq!(picks.len(), k);
+            let mut sorted = picks.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k);
+            assert!(picks.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn below_covers_range() {
+        let mut p = Prng::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..500 {
+            seen[p.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,55 @@
+//! Q16.16 fixed point — the software analogue of the paper's
+//! `ap_fixed<32,16,AP_TRN,AP_WRAP>` (§4.4). Matches `model._q16` in the
+//! JAX model: round-to-nearest into a 32-bit integer with 16 fraction bits.
+
+/// Quantise an f32 to the Q16.16 grid (round-to-nearest-even like jnp.round).
+#[inline]
+pub fn q16(v: f32) -> f32 {
+    let scaled = (v as f64) * 65536.0;
+    // jnp.round uses banker's rounding; f64::round_ties_even matches.
+    let q = scaled.round_ties_even() as i64 as i32; // wraps like AP_WRAP
+    q as f32 / 65536.0
+}
+
+/// Quantise a slice in place.
+pub fn q16_slice(vs: &mut [f32]) {
+    for v in vs {
+        *v = q16(*v);
+    }
+}
+
+/// Max representable magnitude before wrap.
+pub const Q16_MAX: f32 = 32767.999_98;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_spacing_is_2_pow_minus_16() {
+        assert_eq!(q16(1.0 / 65536.0), 1.0 / 65536.0);
+        assert_eq!(q16(1.0 / 131072.0 + 1e-9), 1.0 / 65536.0);
+        assert_eq!(q16(0.0), 0.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        for v in [-3.75, 0.1, 2.5, 1000.125, -0.000_01] {
+            assert_eq!(q16(q16(v)), q16(v));
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_ulp() {
+        for i in 0..1000 {
+            let v = (i as f32) * 0.003_7 - 1.85;
+            assert!((q16(v) - v).abs() <= 0.5 / 65536.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn negative_values_quantise() {
+        assert_eq!(q16(-1.5), -1.5);
+        assert!((q16(-0.1) - (-0.1)).abs() < 1.0 / 65536.0);
+    }
+}

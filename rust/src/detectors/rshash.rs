@@ -1,0 +1,166 @@
+//! RS-Hash (paper Algorithm 2) — randomized subspace grid + CMS core.
+
+use super::jenkins::jenkins_mod_i32;
+use super::params::RsHashParams;
+use super::quantize::q16;
+use super::window::SlidingCounts;
+use super::Detector;
+
+#[derive(Clone, Debug)]
+pub struct RsHash {
+    params: RsHashParams,
+    w: usize,
+    modulus: usize,
+    counts: SlidingCounts, // rows = R*w
+    pub quantize: bool,
+    idx_buf: Vec<i32>,
+    key_buf: Vec<i32>,
+}
+
+impl RsHash {
+    pub fn new(params: RsHashParams, w: usize, modulus: usize, window: usize) -> Self {
+        let (r, d) = (params.r, params.d);
+        RsHash {
+            params,
+            w,
+            modulus,
+            counts: SlidingCounts::new(r * w, modulus, window),
+            quantize: false,
+            idx_buf: vec![0; r * w],
+            key_buf: vec![0; d],
+        }
+    }
+}
+
+impl Detector for RsHash {
+    fn update(&mut self, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.params.d);
+        let (r, d, w) = (self.params.r, self.params.d, self.w);
+        let denom = self.counts.denom();
+        let mut sum = 0f32;
+        for ri in 0..r {
+            // ③ Projection: normalise + integer grid (matches the kernel's
+            //    f32 op order: norm, +α, /f, floor).
+            let f = self.params.f[ri];
+            for di in 0..d {
+                let span = (self.params.dmax[di] - self.params.dmin[di]).max(1e-12);
+                let norm = (x[di] - self.params.dmin[di]) / span;
+                let prj = (norm + self.params.alpha[ri * d + di]) / f;
+                self.key_buf[di] = prj.floor() as i32;
+            }
+            // ④ Hash per CMS row (seed = 1-based row), gather counts.
+            let mut min_c = i32::MAX;
+            for row in 0..w {
+                let idx = jenkins_mod_i32(&self.key_buf, (row + 1) as u32, self.modulus as u32);
+                self.idx_buf[ri * w + row] = idx;
+                min_c = min_c.min(self.counts.get(ri * w + row, idx));
+            }
+            // ⑥ Score
+            sum += denom.log2() - (1.0 + min_c as f32).log2();
+        }
+        // ⑤ Sliding-window update
+        self.counts.insert(&self.idx_buf);
+        let score = sum / r as f32;
+        if self.quantize {
+            q16(score)
+        } else {
+            score
+        }
+    }
+
+    fn reset(&mut self) {
+        self.counts.reset();
+    }
+
+    fn r(&self) -> usize {
+        self.params.r
+    }
+
+    fn d(&self) -> usize {
+        self.params.d
+    }
+
+    fn name(&self) -> &'static str {
+        "rshash"
+    }
+}
+
+impl RsHash {
+    pub fn cms(&self) -> &[i32] {
+        self.counts.counts()
+    }
+
+    pub fn params(&self) -> &RsHashParams {
+        &self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detectors::prng::Prng;
+
+    fn mk(r: usize, d: usize, seed: u64) -> (RsHash, Vec<f32>) {
+        let mut p = Prng::new(seed);
+        let data: Vec<f32> = (0..128 * d).map(|_| p.gaussian() as f32).collect();
+        let params = RsHashParams::generate(seed, r, d, 16, &data[..32 * d]);
+        (RsHash::new(params, 2, 64, 16), data)
+    }
+
+    #[test]
+    fn scores_finite_and_nonnegative_after_warmup() {
+        let (mut det, data) = mk(6, 4, 1);
+        for s in 0..64 {
+            let sc = det.update(&data[s * 4..(s + 1) * 4]);
+            assert!(sc.is_finite());
+            assert!(sc >= -1e-5, "score={sc}");
+        }
+    }
+
+    #[test]
+    fn repeated_sample_scores_drop() {
+        let (mut det, data) = mk(6, 4, 2);
+        let x = &data[0..4];
+        let first = det.update(x);
+        let mut last = first;
+        for _ in 0..16 {
+            last = det.update(x);
+        }
+        assert!(last <= first);
+    }
+
+    #[test]
+    fn novel_region_scores_high() {
+        let (mut det, data) = mk(8, 4, 3);
+        let mut base = 0f32;
+        for s in 0..32 {
+            base = det.update(&data[s * 4..(s + 1) * 4]);
+        }
+        let sc = det.update(&[100.0, -100.0, 100.0, -100.0]);
+        assert!(sc >= base);
+    }
+
+    #[test]
+    fn cms_row_totals_respect_window() {
+        let (mut det, data) = mk(3, 4, 4);
+        for s in 0..40 {
+            det.update(&data[s * 4..(s + 1) * 4]);
+        }
+        // rows = R*w = 6; each row total == window
+        let cms = det.cms();
+        for row in 0..6 {
+            let total: i32 = cms[row * 64..(row + 1) * 64].iter().sum();
+            assert_eq!(total, 16);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let (mut a, data) = mk(4, 3, 5);
+        let (mut b, _) = mk(4, 3, 5);
+        for s in 0..32 {
+            let x = &data[s * 3..(s + 1) * 3];
+            assert_eq!(a.update(x), b.update(x));
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Sliding-window count tables (paper block ⑤).
+//!
+//! One structure serves both cores: Loda's per-sub-detector histogram
+//! (`rows = R`, `width = bins`) and the CMS of RS-Hash/xStream
+//! (`rows = R·w`, `width = MOD`). A ring buffer remembers the table index
+//! each of the last `W` samples touched per row, so the oldest sample can be
+//! evicted exactly — identical semantics to the JAX model's scan state.
+
+/// Windowed count tables: `rows × width` counts + `rows × window` ring.
+#[derive(Clone, Debug)]
+pub struct SlidingCounts {
+    rows: usize,
+    width: usize,
+    window: usize,
+    counts: Vec<i32>,
+    ring: Vec<i32>,
+    pos: usize,
+    n: u64,
+}
+
+impl SlidingCounts {
+    pub fn new(rows: usize, width: usize, window: usize) -> Self {
+        assert!(rows > 0 && width > 0 && window > 0);
+        SlidingCounts {
+            rows,
+            width,
+            window,
+            counts: vec![0; rows * width],
+            ring: vec![0; rows * window],
+            pos: 0,
+            n: 0,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    #[inline]
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Samples inserted so far.
+    #[inline]
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Score denominator: samples currently represented in the window.
+    #[inline]
+    pub fn denom(&self) -> f32 {
+        (self.n.min(self.window as u64)).max(1) as f32
+    }
+
+    /// Current count for (row, idx).
+    #[inline]
+    pub fn get(&self, row: usize, idx: i32) -> i32 {
+        debug_assert!((0..self.width as i32).contains(&idx));
+        self.counts[row * self.width + idx as usize]
+    }
+
+    /// Insert one sample: `idxs[row]` is the table index the sample maps to
+    /// in each row. Evicts the sample that falls out of the window.
+    pub fn insert(&mut self, idxs: &[i32]) {
+        debug_assert_eq!(idxs.len(), self.rows);
+        let evict = self.n >= self.window as u64;
+        for (row, &idx) in idxs.iter().enumerate() {
+            debug_assert!((0..self.width as i32).contains(&idx));
+            if evict {
+                let old = self.ring[row * self.window + self.pos];
+                self.counts[row * self.width + old as usize] -= 1;
+            }
+            self.counts[row * self.width + idx as usize] += 1;
+            self.ring[row * self.window + self.pos] = idx;
+        }
+        self.pos = (self.pos + 1) % self.window;
+        self.n += 1;
+    }
+
+    /// Reset to the empty state.
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.ring.fill(0);
+        self.pos = 0;
+        self.n = 0;
+    }
+
+    /// Raw count table (row-major), e.g. for exporting to the PJRT state.
+    pub fn counts(&self) -> &[i32] {
+        &self.counts
+    }
+
+    /// Total count in one row — invariant: `min(n, window)`.
+    pub fn row_total(&self, row: usize) -> i64 {
+        self.counts[row * self.width..(row + 1) * self.width]
+            .iter()
+            .map(|&c| c as i64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detectors::prng::Prng;
+
+    #[test]
+    fn counts_track_inserts_before_window_fills() {
+        let mut sc = SlidingCounts::new(2, 8, 4);
+        sc.insert(&[1, 2]);
+        sc.insert(&[1, 3]);
+        assert_eq!(sc.get(0, 1), 2);
+        assert_eq!(sc.get(1, 2), 1);
+        assert_eq!(sc.get(1, 3), 1);
+        assert_eq!(sc.denom(), 2.0);
+    }
+
+    #[test]
+    fn eviction_keeps_row_total_at_window() {
+        let mut sc = SlidingCounts::new(3, 16, 5);
+        let mut p = Prng::new(1);
+        for _ in 0..100 {
+            let idxs: Vec<i32> = (0..3).map(|_| p.below(16) as i32).collect();
+            sc.insert(&idxs);
+            let expect = sc.n().min(5) as i64;
+            for row in 0..3 {
+                assert_eq!(sc.row_total(row), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn no_negative_counts_ever() {
+        let mut sc = SlidingCounts::new(1, 4, 3);
+        let mut p = Prng::new(2);
+        for _ in 0..500 {
+            sc.insert(&[p.below(4) as i32]);
+            assert!(sc.counts().iter().all(|&c| c >= 0));
+        }
+    }
+
+    #[test]
+    fn oldest_is_evicted_fifo() {
+        let mut sc = SlidingCounts::new(1, 8, 2);
+        sc.insert(&[5]);
+        sc.insert(&[6]);
+        sc.insert(&[7]); // evicts 5
+        assert_eq!(sc.get(0, 5), 0);
+        assert_eq!(sc.get(0, 6), 1);
+        assert_eq!(sc.get(0, 7), 1);
+    }
+
+    #[test]
+    fn reset_restores_empty_state() {
+        let mut sc = SlidingCounts::new(2, 4, 2);
+        sc.insert(&[0, 1]);
+        sc.reset();
+        assert_eq!(sc.n(), 0);
+        assert!(sc.counts().iter().all(|&c| c == 0));
+        assert_eq!(sc.denom(), 1.0);
+    }
+
+    #[test]
+    fn denom_saturates_at_window() {
+        let mut sc = SlidingCounts::new(1, 4, 3);
+        for i in 0..10 {
+            sc.insert(&[(i % 4) as i32]);
+        }
+        assert_eq!(sc.denom(), 3.0);
+    }
+}

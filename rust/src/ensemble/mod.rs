@@ -1,0 +1,42 @@
+//! CPU-baseline ensemble runners — the paper's GCC+pthread comparison
+//! system (§4.4), reimplemented with std::thread.
+//!
+//! The sequential runner iterates sub-detectors in a loop (the paper's
+//! single-thread case, Figures 12–14: time grows linearly with R); the
+//! threaded runner partitions sub-detectors equally across threads with a
+//! per-sample mutex + barrier synchronisation, reproducing the contention
+//! behaviour of Figure 11.
+
+pub mod threaded;
+
+pub use threaded::run_threaded;
+
+use crate::data::Dataset;
+use crate::detectors::DetectorSpec;
+
+/// Run the full ensemble on one thread; returns per-sample ensemble scores.
+pub fn run_sequential(spec: &DetectorSpec, ds: &Dataset) -> Vec<f32> {
+    let mut det = spec.build(ds.warmup(spec.window));
+    det.run_stream(&ds.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_profile, DatasetProfile};
+    use crate::detectors::{DetectorKind, DetectorSpec};
+
+    fn tiny_ds() -> Dataset {
+        let p = DatasetProfile { name: "t", n: 200, d: 4, outliers: 10, clusters: 2 };
+        generate_profile(&p, 1)
+    }
+
+    #[test]
+    fn sequential_scores_whole_stream() {
+        let ds = tiny_ds();
+        let spec = DetectorSpec::new(DetectorKind::Loda, 4, 8, 3);
+        let scores = run_sequential(&spec, &ds);
+        assert_eq!(scores.len(), 200);
+        assert!(scores.iter().all(|s| s.is_finite()));
+    }
+}

@@ -1,0 +1,83 @@
+//! Figure 10: ensemble accuracy vs ensemble size on Cardio.
+//! AUC mean and variance over repeated runs with different seeds, for
+//! R ∈ [3, 200] (paper sweeps the same range; AUC rises then converges,
+//! variance falls then converges).
+
+use anyhow::Result;
+
+use super::report::Table;
+use super::ExpCtx;
+use crate::detectors::{DetectorKind, DetectorSpec};
+use crate::ensemble::run_sequential;
+use crate::metrics::{mean, normalize_scores, variance, auc_roc};
+
+pub const SWEEP_R: [usize; 7] = [3, 5, 10, 20, 50, 100, 200];
+
+/// AUC samples for one detector/size across seeds.
+pub fn auc_sweep(ctx: &ExpCtx, kind: DetectorKind, r: usize) -> Result<Vec<f64>> {
+    let mut aucs = Vec::with_capacity(ctx.seeds);
+    let ds = ctx.dataset("cardio", ctx.seed)?;
+    for s in 0..ctx.seeds {
+        let spec = DetectorSpec::new(kind, ds.d, r, ctx.seed.wrapping_add(1_000 + s as u64));
+        let scores = run_sequential(&spec, &ds);
+        aucs.push(auc_roc(&normalize_scores(&scores), &ds.labels));
+    }
+    Ok(aucs)
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let mut out = String::from(
+        "== Figure 10: Ensemble performance vs ensemble size (Cardio) ==\n\
+         (paper: AUC rises then converges; variance falls then converges)\n",
+    );
+    for kind in DetectorKind::ALL {
+        out.push_str(&format!("\n-- {} --\n", kind.as_str()));
+        let mut t = Table::new(vec!["R", "AUC mean", "AUC var (1e-3)"]);
+        let mut means = Vec::new();
+        let mut vars = Vec::new();
+        for r in SWEEP_R {
+            let aucs = auc_sweep(ctx, kind, r)?;
+            let m = mean(&aucs);
+            let v = variance(&aucs);
+            means.push(m);
+            vars.push(v);
+            t.row(vec![r.to_string(), format!("{m:.4}"), format!("{:.4}", v * 1e3)]);
+        }
+        out.push_str(&t.render());
+        // Trend summary: large ensembles should beat tiny ones on average,
+        // and late-sweep variance should not exceed early variance.
+        let early = means[0];
+        let late = means[means.len() - 1];
+        out.push_str(&format!(
+            "trend: AUC {early:.4} (R=3) -> {late:.4} (R=200); var {:.2e} -> {:.2e}\n",
+            vars[0],
+            vars[vars.len() - 1]
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_ctx() -> ExpCtx {
+        ExpCtx { seeds: 3, max_samples: Some(1831), ..Default::default() }
+    }
+
+    #[test]
+    fn bigger_ensembles_do_not_hurt_loda() {
+        let ctx = fast_ctx();
+        let small = mean(&auc_sweep(&ctx, DetectorKind::Loda, 3).unwrap());
+        let large = mean(&auc_sweep(&ctx, DetectorKind::Loda, 50).unwrap());
+        assert!(large >= small - 0.05, "AUC degraded: {small:.3} -> {large:.3}");
+    }
+
+    #[test]
+    fn variance_shrinks_with_ensemble_size() {
+        let ctx = ExpCtx { seeds: 5, max_samples: Some(1831), ..Default::default() };
+        let v_small = variance(&auc_sweep(&ctx, DetectorKind::RsHash, 3).unwrap());
+        let v_large = variance(&auc_sweep(&ctx, DetectorKind::RsHash, 50).unwrap());
+        assert!(v_large <= v_small * 2.0 + 1e-6, "variance grew: {v_small:.2e} -> {v_large:.2e}");
+    }
+}

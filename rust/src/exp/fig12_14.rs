@@ -1,0 +1,83 @@
+//! Figures 12–14: execution time vs ensemble size, CPU vs FPGA, per
+//! detector. CPU time is measured (linear in R — the sequential sub-
+//! detector loop); FPGA time comes from the calibrated model and is flat in
+//! R while the ensemble fits the fabric (spatial parallelism — the paper's
+//! headline architectural claim).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::report::Table;
+use super::ExpCtx;
+use crate::detectors::{DetectorKind, DetectorSpec};
+use crate::ensemble::run_sequential;
+use crate::hw::timing::FpgaTimingModel;
+
+pub fn sweep_r(kind: DetectorKind) -> Vec<usize> {
+    let unit = kind.pblock_r();
+    (1..=7).map(|k| k * unit).collect()
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let cap = ctx.max_samples.unwrap_or(10_000).min(10_000);
+    let ds = ctx.dataset("shuttle", ctx.seed)?.prefix(cap);
+    let model = FpgaTimingModel::default();
+    let mut out = format!(
+        "== Figures 12-14: execution time vs ensemble size (shuttle prefix n={}) ==\n",
+        ds.n()
+    );
+    for (fig, kind) in [(12, DetectorKind::Loda), (13, DetectorKind::RsHash), (14, DetectorKind::XStream)]
+    {
+        out.push_str(&format!("\n-- Figure {fig}: {} --\n", kind.as_str()));
+        let mut t = Table::new(vec!["R", "t_cpu (measured)", "t_fpga (model)", "ratio"]);
+        let mut cpu_times = Vec::new();
+        for r in sweep_r(kind) {
+            let spec = DetectorSpec::new(kind, ds.d, r, ctx.seed);
+            let t0 = Instant::now();
+            let scores = run_sequential(&spec, &ds);
+            let dt = t0.elapsed().as_secs_f64();
+            assert_eq!(scores.len(), ds.n());
+            cpu_times.push(dt);
+            let fpga = model.exec_time_s(kind, ds.n(), ds.d);
+            t.row(vec![
+                r.to_string(),
+                format!("{:.1} ms", dt * 1e3),
+                format!("{:.1} ms", fpga * 1e3),
+                format!("{:.1}x", dt / fpga),
+            ]);
+        }
+        out.push_str(&t.render());
+        let first = cpu_times[0].max(1e-9);
+        let last = cpu_times[cpu_times.len() - 1];
+        out.push_str(&format!(
+            "CPU scaling: t(R=7u)/t(R=u) = {:.1} (paper: linear in R ⇒ ≈7); FPGA flat.\n",
+            last / first
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_time_grows_with_r() {
+        let ctx = ExpCtx { max_samples: Some(2_000), ..Default::default() };
+        let ds = ctx.dataset("shuttle", 1).unwrap();
+        let mut times = Vec::new();
+        for r in [10usize, 70] {
+            let spec = DetectorSpec::new(DetectorKind::Loda, ds.d, r, 3);
+            let t0 = Instant::now();
+            run_sequential(&spec, &ds);
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        assert!(times[1] > times[0] * 2.0, "no linear scaling: {times:?}");
+    }
+
+    #[test]
+    fn sweep_covers_full_fabric() {
+        assert_eq!(sweep_r(DetectorKind::Loda).last(), Some(&245));
+        assert_eq!(sweep_r(DetectorKind::XStream).last(), Some(&140));
+    }
+}

@@ -1,0 +1,105 @@
+//! Figures 15 & 16: roofline models (CPU and FPGA). For every
+//! detector×dataset point we compute arithmetic intensity from the op-count
+//! formulas and achieved GOPS from the timing model / paper CPU times, and
+//! place it under the machine rooflines.
+
+use anyhow::Result;
+
+use super::report::Table;
+use super::table11_12::params_for;
+use super::{ExpCtx, DATASETS};
+use crate::detectors::DetectorKind;
+use crate::hw::opcount::{arithmetic_intensity, gops, op_count, paper_gops};
+use crate::hw::roofline::{RooflinePoint, CPU_ROOFLINE, FPGA_ROOFLINE, FSEAD_ROOFLINE};
+use crate::hw::timing::FpgaTimingModel;
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let model = FpgaTimingModel::default();
+    let mut out = format!(
+        "== Figures 15-16: Roofline models ==\n\
+         CPU roof:   {} — peak {:.1} GOPS, {:.1} GB/s (ridge at {:.1} op/B)\n\
+         FPGA roof:  {} — peak {:.1} GOPS, {:.1} GB/s\n\
+         fSEAD roof: {} — peak {:.1} GOPS (paper: 110.4 from 61.57% of pblock resources)\n\n",
+        CPU_ROOFLINE.name,
+        CPU_ROOFLINE.peak_gops,
+        CPU_ROOFLINE.mem_bw_gbs,
+        CPU_ROOFLINE.ridge(),
+        FPGA_ROOFLINE.name,
+        FPGA_ROOFLINE.peak_gops,
+        FPGA_ROOFLINE.mem_bw_gbs,
+        FSEAD_ROOFLINE.name,
+        FSEAD_ROOFLINE.peak_gops,
+    );
+    let mut t = Table::new(vec![
+        "point",
+        "AI (op/B)",
+        "GOPS cpu(paper)",
+        "roof@AI cpu",
+        "GOPS fsead(model)",
+        "roof@AI fsead",
+        "fsead eff",
+    ]);
+    let mut best_eff = 0.0f64;
+    for kind in DetectorKind::ALL {
+        for dataset in DATASETS {
+            let ds = ctx.dataset(dataset, ctx.seed)?;
+            let p = params_for(kind, ds.n(), ds.d);
+            let ai = arithmetic_intensity(kind, p);
+            let g_cpu = paper_gops(kind, dataset).map(|(c, _)| c).unwrap_or(0.0);
+            let g_fsead = gops(op_count(kind, p), model.exec_time_s(kind, ds.n(), ds.d));
+            let pt = RooflinePoint {
+                label: format!("{}/{}", kind.as_str(), dataset),
+                ai,
+                gops: g_fsead,
+            };
+            let eff = pt.efficiency(&FSEAD_ROOFLINE);
+            best_eff = best_eff.max(eff);
+            t.row(vec![
+                pt.label.clone(),
+                format!("{ai:.2}"),
+                format!("{g_cpu:.2}"),
+                format!("{:.1}", CPU_ROOFLINE.attainable(ai)),
+                format!("{g_fsead:.2}"),
+                format!("{:.1}", FSEAD_ROOFLINE.attainable(ai)),
+                format!("{:.0}%", eff * 100.0),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "paper: no algorithm reaches the roof; xStream is closest (their best point 67.96 GOPS = 62% of the 110.4 bound; ours peaks at {:.0}%).\n",
+        best_eff * 100.0
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xstream_has_highest_ai() {
+        let ctx = ExpCtx { max_samples: Some(1000), ..Default::default() };
+        let ds = ctx.dataset("http3", 1).unwrap();
+        let ai = |k| arithmetic_intensity(k, params_for(k, ds.n(), ds.d));
+        assert!(ai(DetectorKind::XStream) > ai(DetectorKind::RsHash));
+        assert!(ai(DetectorKind::RsHash) > ai(DetectorKind::Loda));
+    }
+
+    #[test]
+    fn no_point_exceeds_device_roof() {
+        let ctx = ExpCtx { max_samples: Some(5000), ..Default::default() };
+        let model = FpgaTimingModel::default();
+        for kind in DetectorKind::ALL {
+            for dsn in DATASETS {
+                let ds = ctx.dataset(dsn, 1).unwrap();
+                let p = params_for(kind, ds.n(), ds.d);
+                let g = gops(op_count(kind, p), model.exec_time_s(kind, ds.n(), ds.d));
+                assert!(
+                    g <= FPGA_ROOFLINE.peak_gops * 1.05,
+                    "{kind:?}/{dsn}: {g:.1} GOPS above device roof"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Figures 18 & 19: chip and system power. The resource-proportional power
+//! model is calibrated at the paper's measured operating point (full-fabric
+//! xStream on HTTP-3 ⇒ 5.232 W dynamic; 30 W board idle ⇒ 35 W working).
+//! The CPU numbers are the paper's RAPL measurements, reproduced as the
+//! comparison column.
+
+use anyhow::Result;
+
+use super::report::Table;
+use super::ExpCtx;
+use crate::defaults::FPGA_CLOCK_HZ;
+use crate::hw::power::*;
+use crate::hw::resources::{Resources, TABLE6_BLOCKS};
+
+pub fn run(_ctx: &ExpCtx) -> Result<String> {
+    let model = PowerModel::default();
+    let all: Vec<Resources> = TABLE6_BLOCKS.iter().map(|b| b.absolute()).collect();
+    let mut out = String::from("== Figure 18: chip power (model) ==\n");
+    let mut t = Table::new(vec!["configuration", "static W", "dynamic W", "chip W"]);
+    // Idle fabric: static only (default empty RMs, clock-gated pblocks).
+    t.row(vec![
+        "idle (empty RMs)".to_string(),
+        format!("{CHIP_STATIC_W:.2}"),
+        "0.00".to_string(),
+        format!("{CHIP_STATIC_W:.2}"),
+    ]);
+    // Single-pblock configurations.
+    for blocks in [1usize, 3, 7] {
+        let active: Vec<Resources> = TABLE6_BLOCKS[..blocks]
+            .iter()
+            .chain(&TABLE6_BLOCKS[7..]) // infrastructure always on
+            .map(|b| b.absolute())
+            .collect();
+        let dyn_w = model.dynamic_w(&active, FPGA_CLOCK_HZ);
+        t.row(vec![
+            format!("{blocks} AD pblock(s) + infra"),
+            format!("{CHIP_STATIC_W:.2}"),
+            format!("{dyn_w:.3}"),
+            format!("{:.3}", CHIP_STATIC_W + dyn_w),
+        ]);
+    }
+    let dyn_full = model.dynamic_w(&all, FPGA_CLOCK_HZ);
+    t.row(vec![
+        "full fabric (paper meas: 5.232 W dyn)".to_string(),
+        format!("{CHIP_STATIC_W:.2}"),
+        format!("{dyn_full:.3}"),
+        format!("{:.3}", CHIP_STATIC_W + dyn_full),
+    ]);
+    out.push_str(&t.render());
+
+    out.push_str("\n== Figure 19: system power (model vs paper) ==\n");
+    let mut t = Table::new(vec!["platform", "idle W", "working W", "dynamic W"]);
+    t.row(vec![
+        "fSEAD/ZCU111 (model; paper: 30/35/5.232)".to_string(),
+        format!("{PAPER_FPGA_SYSTEM_IDLE_W:.1}"),
+        format!("{:.2}", model.system_w(&all, FPGA_CLOCK_HZ)),
+        format!("{dyn_full:.3}"),
+    ]);
+    t.row(vec![
+        "CPU i7-10700F (paper RAPL)".to_string(),
+        format!("{PAPER_CPU_IDLE_W:.1}"),
+        format!("{PAPER_CPU_WORKING_W:.1}"),
+        format!("{PAPER_CPU_DYNAMIC_W:.1}"),
+    ]);
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "CPU dynamic / fSEAD dynamic = {:.1}x (paper: >8x)\n",
+        PAPER_CPU_DYNAMIC_W / dyn_full
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_reproduces_calibration() {
+        let out = run(&ExpCtx::default()).unwrap();
+        assert!(out.contains("5.232"));
+        assert!(out.contains(">8x"));
+    }
+}

@@ -1,0 +1,300 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§4). `fsead exp <id>` prints paper-reported values next to
+//! modelled/measured values (see DESIGN.md §5 for the index).
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig12_14;
+pub mod fig15_16;
+pub mod fig17;
+pub mod fig18_19;
+pub mod fig20;
+pub mod perf;
+pub mod report;
+pub mod table3_4;
+pub mod table5;
+pub mod table6_7;
+pub mod table8_10;
+pub mod table11_12;
+pub mod table13;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+
+/// Shared experiment context (CLI flags).
+#[derive(Clone, Debug)]
+pub struct ExpCtx {
+    pub seed: u64,
+    /// Repetitions for mean/variance experiments (paper uses 10).
+    pub seeds: usize,
+    pub data_dir: Option<String>,
+    /// Per-dataset sample cap (None = full streams).
+    pub max_samples: Option<usize>,
+    pub artifact_dir: String,
+    /// Use the PJRT path where an experiment supports it.
+    pub use_fpga: bool,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx {
+            seed: 42,
+            seeds: 3,
+            data_dir: None,
+            max_samples: Some(30_000),
+            artifact_dir: "artifacts".into(),
+            use_fpga: true,
+        }
+    }
+}
+
+impl ExpCtx {
+    /// Load a paper dataset, honouring the sample cap.
+    pub fn dataset(&self, name: &str, seed: u64) -> Result<Dataset> {
+        let ds = Dataset::load(name, seed, self.data_dir.as_deref())
+            .with_context(|| format!("unknown dataset {name:?}"))?;
+        Ok(match self.max_samples {
+            Some(cap) => ds.prefix(cap),
+            None => ds,
+        })
+    }
+
+    pub fn artifacts_available(&self) -> bool {
+        std::path::Path::new(&self.artifact_dir).join("manifest.txt").exists()
+    }
+}
+
+pub const DATASETS: [&str; 4] = ["cardio", "shuttle", "smtp3", "http3"];
+
+/// CLI dispatch.
+pub fn cli_main(args: &[String]) -> Result<i32> {
+    let mut ctx = ExpCtx::default();
+    let mut positional: Vec<&str> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--seed" => {
+                ctx.seed = next(args, &mut i)?.parse().context("--seed")?;
+            }
+            "--seeds" => {
+                ctx.seeds = next(args, &mut i)?.parse().context("--seeds")?;
+            }
+            "--data-dir" => {
+                ctx.data_dir = Some(next(args, &mut i)?.to_string());
+            }
+            "--max-samples" => {
+                let v: usize = next(args, &mut i)?.parse().context("--max-samples")?;
+                ctx.max_samples = if v == 0 { None } else { Some(v) };
+            }
+            "--full" => {
+                ctx.max_samples = None;
+                ctx.seeds = 10;
+            }
+            "--artifacts" => {
+                ctx.artifact_dir = next(args, &mut i)?.to_string();
+            }
+            "--no-fpga" => {
+                ctx.use_fpga = false;
+            }
+            other => positional.push(other),
+        }
+        i += 1;
+    }
+    match positional.first().copied() {
+        None | Some("help") | Some("--help") => {
+            print!("{}", usage());
+            Ok(0)
+        }
+        Some("version") => {
+            println!("fsead 0.1.0 — composable streaming ensemble anomaly detection");
+            Ok(0)
+        }
+        Some("resources") => {
+            let floor = positional.contains(&"--floorplan");
+            print!("{}", table6_7::run_with_floorplan(&ctx, floor)?);
+            Ok(0)
+        }
+        Some("artifacts") => {
+            let reg = crate::runtime::Registry::load(&ctx.artifact_dir)?;
+            for name in reg.names() {
+                let meta = reg.get(name).unwrap();
+                let ok = if reg.available(meta) { "ok" } else { "MISSING" };
+                println!("{name:<24} [{ok}] {}", meta.file);
+            }
+            Ok(0)
+        }
+        Some("run") => {
+            let config = positional.get(1).copied().context("usage: fsead run <config.toml>")?;
+            run_config(&ctx, config)?;
+            Ok(0)
+        }
+        Some("exp") => {
+            let id = positional.get(1).copied().unwrap_or("all");
+            let out = run_experiment(&ctx, id)?;
+            print!("{out}");
+            Ok(0)
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n{}", usage());
+            Ok(2)
+        }
+    }
+}
+
+fn next<'a>(args: &'a [String], i: &mut usize) -> Result<&'a str> {
+    *i += 1;
+    args.get(*i).map(|s| s.as_str()).context("missing flag value")
+}
+
+fn usage() -> String {
+    "fsead — composable streaming ensemble anomaly detection (fSEAD reproduction)
+
+USAGE:
+  fsead exp <id>            regenerate a paper table/figure (see below)
+  fsead run <config.toml>   stream a dataset through a configured fabric
+  fsead resources [--floorplan]   print the FPGA resource model
+  fsead artifacts           list AOT artifacts and their status
+  fsead version
+
+EXPERIMENTS (fsead exp …):
+  table3 table4 fig10 table5 table6 table7 table8 table9 table10
+  fig11 fig12 table11 table12 fig15 fig16 fig17 fig18 fig19
+  table13 fig20 all
+
+FLAGS:
+  --seed N          base RNG seed (default 42)
+  --seeds N         repetitions for mean/variance experiments (default 3)
+  --max-samples N   per-dataset stream cap (0 = full; default 30000)
+  --full            full streams + 10 seeds (paper-scale, slow)
+  --data-dir DIR    use real CSV datasets (<name>.csv) when present
+  --artifacts DIR   AOT artifact directory (default artifacts/)
+  --no-fpga         CPU-native RMs instead of the PJRT device
+"
+    .to_string()
+}
+
+/// Run one experiment by id (or "all").
+pub fn run_experiment(ctx: &ExpCtx, id: &str) -> Result<String> {
+    let one = |id: &str| -> Result<String> {
+        Ok(match id {
+            "table3" | "table4" => table3_4::run(ctx)?,
+            "fig10" => fig10::run(ctx)?,
+            "table5" => table5::run(ctx)?,
+            "table6" | "table7" => table6_7::run(ctx)?,
+            "table8" => table8_10::run(ctx, crate::detectors::DetectorKind::Loda)?,
+            "table9" => table8_10::run(ctx, crate::detectors::DetectorKind::RsHash)?,
+            "table10" => table8_10::run(ctx, crate::detectors::DetectorKind::XStream)?,
+            "fig11" => fig11::run(ctx)?,
+            "fig12" | "fig13" | "fig14" | "fig12-14" => fig12_14::run(ctx)?,
+            "table11" | "table12" => table11_12::run(ctx)?,
+            "fig15" | "fig16" => fig15_16::run(ctx)?,
+            "fig17" => fig17::run(ctx)?,
+            "fig18" | "fig19" => fig18_19::run(ctx)?,
+            "table13" => table13::run(ctx)?,
+            "fig20" => fig20::run(ctx)?,
+            "perf" => perf::run(ctx)?,
+            other => bail!("unknown experiment {other:?}"),
+        })
+    };
+    if id == "all" {
+        let ids = [
+            "table3", "fig10", "table5", "table6", "table8", "table9", "table10", "fig11",
+            "fig12", "table11", "fig15", "fig17", "fig18", "table13", "fig20",
+        ];
+        let mut out = String::new();
+        for id in ids {
+            out.push_str(&one(id)?);
+            out.push('\n');
+        }
+        Ok(out)
+    } else {
+        one(id)
+    }
+}
+
+/// `fsead run <config>`: stream the configured dataset through the fabric.
+fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
+    use crate::metrics::{auc_roc, normalize_scores};
+    let mut cfg = crate::config::FseadConfig::from_file(path)?;
+    if !ctx.use_fpga {
+        cfg.use_fpga = false;
+    }
+    cfg.artifact_dir = ctx.artifact_dir.clone();
+    if cfg.dataset.data_dir.is_none() {
+        cfg.dataset.data_dir = ctx.data_dir.clone();
+    }
+    let max_streams =
+        cfg.pblocks.iter().map(|p| p.stream + 1).max().unwrap_or(1);
+    let mut streams = Vec::new();
+    for s in 0..max_streams {
+        let mut ds = crate::data::Dataset::load(
+            &cfg.dataset.name,
+            ctx.seed.wrapping_add(s as u64),
+            cfg.dataset.data_dir.as_deref(),
+        )
+        .with_context(|| format!("dataset {:?}", cfg.dataset.name))?;
+        if cfg.dataset.max_samples > 0 {
+            ds = ds.prefix(cfg.dataset.max_samples);
+        } else if let Some(cap) = ctx.max_samples {
+            ds = ds.prefix(cap);
+        }
+        streams.push(ds);
+    }
+    let contamination = streams[0].contamination();
+    let truth = streams[0].labels.clone();
+    println!(
+        "fabric: {} pblocks, {} combos, dataset {} (n={}, d={}, {:.2}% outliers), fpga={}",
+        cfg.pblocks.len(),
+        cfg.combos.len(),
+        cfg.dataset.name,
+        streams[0].n(),
+        streams[0].d,
+        contamination * 100.0,
+        cfg.use_fpga,
+    );
+    let mut fabric = crate::fabric::Fabric::new(cfg, streams)?;
+    for (id, rm) in fabric.assignments() {
+        println!("  RP-{id}: {rm}");
+    }
+    let out = fabric.run()?;
+    println!(
+        "run: wall {:.1} ms, modelled FPGA {:.1} ms, {} switch flits",
+        out.wall_secs * 1e3,
+        out.modeled_fpga_secs * 1e3,
+        out.switch_flits
+    );
+    for (id, scores) in &out.pblock_scores {
+        let auc = auc_roc(&normalize_scores(scores), &truth);
+        println!("  pblock {id}: {} scores, AUC-S {:.4}", scores.len(), auc);
+    }
+    for (id, scores) in &out.combo_scores {
+        let auc = auc_roc(&normalize_scores(scores), &truth);
+        println!("  combo {id}: {} scores, AUC-S {:.4}", scores.len(), auc);
+    }
+    if let Some(stats) = fabric.runtime_stats() {
+        println!(
+            "device: {} executions, {:.1} ms on device, {} compiles",
+            stats.executions,
+            stats.execute_secs * 1e3,
+            stats.compiles
+        );
+    }
+    Ok(())
+}
+
+/// Helper shared by accuracy experiments: run a detector ensemble (CPU
+/// baseline path) and return (scores, labels, truth) with normalisation
+/// and contamination thresholding applied (paper §4.1).
+pub fn score_label_auc(
+    scores: &[f32],
+    truth: &[bool],
+    contamination: f64,
+) -> (f64, f64) {
+    use crate::metrics::{auc::auc_labels, auc_roc, labels_from_scores, normalize_scores};
+    let norm = normalize_scores(scores);
+    let auc_s = auc_roc(&norm, truth);
+    let labels = labels_from_scores(&norm, contamination);
+    let auc_l = auc_labels(&labels, truth);
+    (auc_s, auc_l)
+}

@@ -1,0 +1,98 @@
+//! §Perf profiling harness (`fsead exp perf`): per-layer hot-path
+//! measurements used for the EXPERIMENTS.md §Perf iteration log.
+//!
+//! - device time per chunk / per sample for every full-size detector
+//!   artifact (the L1+L2 cost as compiled by XLA);
+//! - marshalling overhead: wall time around the device call (L3 cost:
+//!   literal construction, channel hops, state threading);
+//! - CPU-baseline per-sample cost for reference.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::report::Table;
+use super::ExpCtx;
+use crate::data::stream::ChunkStream;
+use crate::detectors::{DetectorKind, DetectorSpec};
+use crate::runtime::{generate_params, Runtime};
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let mut out = String::from("== §Perf: hot-path profile ==\n");
+    if !ctx.artifacts_available() {
+        out.push_str("artifacts missing — run `make artifacts` first\n");
+        return Ok(out);
+    }
+    let rt = Runtime::start(&ctx.artifact_dir)?;
+    let handle = rt.handle();
+    let hyper = crate::config::DetectorHyper::default();
+    let mut t = Table::new(vec![
+        "artifact",
+        "chunks",
+        "wall ms/chunk",
+        "device ms/chunk",
+        "marshal %",
+        "device µs/sample",
+        "cpu µs/sample",
+    ]);
+    let d = 9usize;
+    let ds = ctx.dataset("shuttle", ctx.seed)?.prefix(ctx.max_samples.unwrap_or(10_000).min(10_000));
+    for kind in DetectorKind::ALL {
+        let r = kind.pblock_r();
+        let meta = rt.registry().find_detector(kind, d, r, true)?.clone();
+        let params = generate_params(kind, ctx.seed, r, d, &hyper, ds.warmup(hyper.window));
+        let inst = handle.load_detector(&meta, params)?;
+        // Warm-up chunk (first execution includes lazy initialisation).
+        let mut chunks = ChunkStream::new(&ds.data, d, meta.chunk);
+        let first = chunks.next().unwrap();
+        handle.run_chunk(inst, first.data, first.mask)?;
+        let before = handle.stats()?;
+        let t0 = Instant::now();
+        let mut n_chunks = 0u64;
+        let mut n_samples = 0u64;
+        for c in chunks {
+            n_samples += c.n_valid as u64;
+            handle.run_chunk(inst, c.data, c.mask)?;
+            n_chunks += 1;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let after = handle.stats()?;
+        let dev = after.execute_secs - before.execute_secs;
+        // CPU baseline per-sample (same R).
+        let spec = DetectorSpec::new(kind, d, r, ctx.seed);
+        let mut det = spec.build(ds.warmup(hyper.window));
+        let t1 = Instant::now();
+        det.run_stream(&ds.data);
+        let cpu = t1.elapsed().as_secs_f64();
+        t.row(vec![
+            meta.name.clone(),
+            n_chunks.to_string(),
+            format!("{:.3}", wall * 1e3 / n_chunks as f64),
+            format!("{:.3}", dev * 1e3 / n_chunks as f64),
+            format!("{:.1}", (wall - dev) / wall * 100.0),
+            format!("{:.2}", dev * 1e6 / n_samples as f64),
+            format!("{:.2}", cpu * 1e6 / ds.n() as f64),
+        ]);
+    }
+    out.push_str(&t.render());
+    let stats = handle.stats()?;
+    out.push_str(&format!(
+        "device totals: {} executions, {:.1} ms execute, {} compiles ({:.1} ms)\n",
+        stats.executions,
+        stats.execute_secs * 1e3,
+        stats.compiles,
+        stats.compile_secs * 1e3
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perf_harness_runs_when_artifacts_present() {
+        let ctx = ExpCtx { max_samples: Some(1500), ..Default::default() };
+        let out = run(&ctx).unwrap();
+        assert!(out.contains("§Perf"));
+    }
+}

@@ -1,0 +1,89 @@
+//! Tables 11 & 12: operation-count formulas and GOPS comparison.
+//! OPs come from the paper's closed forms; CPU GOPS uses our measured
+//! baseline time, fSEAD GOPS uses the calibrated FPGA timing model.
+//! Paper GOPS are printed alongside.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::report::Table;
+use super::{ExpCtx, DATASETS};
+use crate::detectors::{DetectorKind, DetectorSpec};
+use crate::ensemble::run_threaded;
+use crate::hw::opcount::{gops, op_count, paper_gops, OpParams};
+use crate::hw::timing::FpgaTimingModel;
+
+pub fn params_for(kind: DetectorKind, n: usize, d: usize) -> OpParams {
+    OpParams {
+        n: n as u64,
+        d: d as u64,
+        r: (7 * kind.pblock_r()) as u64,
+        w: crate::defaults::CMS_ROWS as u64,
+        k: crate::defaults::XSTREAM_K as u64,
+    }
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let mut out = String::from(
+        "== Table 11: Operation counts ==\n\
+         Loda:    OP = N(2Rd + 7R + 2)\n\
+         RS-Hash: OP = N(5Rdw + 4Rd + 11Rw + R + 2)\n\
+         xStream: OP = N(2Rdk + 5Rdw + 15Rw + 2R + 2)\n\n\
+         == Table 12: GOPS (CPU measured | fSEAD model | paper cpu/fsead) ==\n",
+    );
+    let model = FpgaTimingModel::default();
+    let mut t = Table::new(vec![
+        "Detector",
+        "Dataset",
+        "OPs (1e9)",
+        "GOPS cpu",
+        "GOPS fsead",
+        "paper cpu",
+        "paper fsead",
+    ]);
+    for kind in DetectorKind::ALL {
+        for dataset in DATASETS {
+            let ds = ctx.dataset(dataset, ctx.seed)?;
+            let p = params_for(kind, ds.n(), ds.d);
+            let ops = op_count(kind, p);
+            let spec = DetectorSpec::new(kind, ds.d, p.r as usize, ctx.seed);
+            let t0 = Instant::now();
+            run_threaded(&spec, &ds, 4);
+            let cpu_secs = t0.elapsed().as_secs_f64();
+            let fpga_secs = model.exec_time_s(kind, ds.n(), ds.d);
+            let (p_cpu, p_fpga) = paper_gops(kind, dataset).unwrap();
+            t.row(vec![
+                kind.as_str().to_string(),
+                dataset.to_string(),
+                format!("{:.3}", ops as f64 / 1e9),
+                format!("{:.2}", gops(ops, cpu_secs)),
+                format!("{:.2}", gops(ops, fpga_secs)),
+                format!("{p_cpu:.2}"),
+                format!("{p_fpga:.2}"),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push_str("shape check: fSEAD GOPS > CPU GOPS everywhere; xStream highest of the three.\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fsead_model_gops_beats_cpu_shape() {
+        // Using paper stream sizes and the timing model only (no wall-clock),
+        // the GOPS ordering of Table 12 must reproduce.
+        let model = FpgaTimingModel::default();
+        for kind in DetectorKind::ALL {
+            for p in &crate::data::synth::PROFILES {
+                let op = op_count(kind, params_for(kind, p.n, p.d));
+                let g_fpga = gops(op, model.exec_time_s(kind, p.n, p.d));
+                let g_cpu = gops(op, FpgaTimingModel::paper_cpu_ms(kind, p.name).unwrap() / 1e3);
+                assert!(g_fpga > g_cpu, "{kind:?}/{}", p.name);
+            }
+        }
+    }
+}

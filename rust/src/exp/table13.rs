@@ -1,0 +1,109 @@
+//! Table 13: partial-reconfiguration time per pblock, both directions
+//! (Function → Identity and Identity → Function). The DFX download model is
+//! calibrated to the paper's PYNQ measurements; our fabric's *actual* swap
+//! cost (RM build + artifact compile) is measured separately and reported
+//! under "swap (this system)".
+
+use anyhow::Result;
+
+use super::report::Table;
+use super::ExpCtx;
+use crate::config::{DetectorHyper, RmKind};
+use crate::detectors::DetectorKind;
+use crate::fabric::pblock::Pblock;
+use crate::fabric::reconfig::{DfxManager, ReconfigModel};
+
+/// Paper Table 13 (ms) for reference: (block, fn→id, id→fn).
+pub const PAPER: [(&str, f64, f64); 10] = [
+    ("RP-1", 607.8, 606.3),
+    ("RP-2", 606.1, 611.3),
+    ("RP-3", 604.5, 607.2),
+    ("RP-4", 606.1, 606.0),
+    ("RP-5", 608.9, 606.9),
+    ("RP-6", 609.6, 608.1),
+    ("RP-7", 609.5, 607.5),
+    ("COMBO1", 587.2, 582.9),
+    ("COMBO2", 582.7, 580.1),
+    ("COMBO3", 579.8, 581.9),
+];
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let model = ReconfigModel::default();
+    let mut out = String::from("== Table 13: partial reconfiguration time (ms) ==\n");
+    let mut t = Table::new(vec![
+        "block",
+        "model fn->id",
+        "paper fn->id",
+        "model id->fn",
+        "paper id->fn",
+    ]);
+    for (block, p_fi, p_if) in PAPER {
+        let m_fi = model.time_ms(block, false).unwrap();
+        let m_if = model.time_ms(block, true).unwrap();
+        t.row(vec![
+            block.to_string(),
+            format!("{m_fi:.1}"),
+            format!("{p_fi:.1}"),
+            format!("{m_if:.1}"),
+            format!("{p_if:.1}"),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // Measured: actual swap cost in this system (CPU RM rebuild; and the
+    // PJRT artifact compile when artifacts are present).
+    out.push_str("\nswap (this system):\n");
+    let hyper = DetectorHyper::default();
+    let mgr = DfxManager::default();
+    let mut pb = Pblock::new(1);
+    let warmup: Vec<f32> = (0..hyper.window * 3).map(|i| (i as f32 * 0.37).sin()).collect();
+    let rep = mgr.reconfigure(
+        &mut pb,
+        RmKind::Detector(DetectorKind::Loda),
+        8,
+        3,
+        ctx.seed,
+        &hyper,
+        &warmup,
+        None,
+        false,
+    )?;
+    out.push_str(&format!(
+        "  RP-1 empty -> loda(cpu): {:.3} ms measured (model {:.1} ms)\n",
+        rep.actual_ms, rep.model_ms
+    ));
+    if ctx.use_fpga && ctx.artifacts_available() {
+        let rt = crate::runtime::Runtime::start(&ctx.artifact_dir)?;
+        let secs = rt.handle().precompile("loda_d3_r4")?;
+        let cached = rt.handle().precompile("loda_d3_r4")?;
+        out.push_str(&format!(
+            "  artifact compile (loda_d3_r4): {:.1} ms cold, {:.3} ms cached — the analogue of the bitstream download\n",
+            secs * 1e3,
+            cached * 1e3
+        ));
+    }
+    out.push_str("paper trend: larger region ⇒ longer download; COMBO blocks ~25-30 ms faster than AD pblocks.\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_within_paper_noise_everywhere() {
+        // Table 13's own direction-to-direction spread is up to ±2.6 ms
+        // (e.g. RP-2: 606.1 vs 611.3), so the model is held to 6 ms of every
+        // individual cell and 3 ms of each block's two-direction mean.
+        let model = ReconfigModel::default();
+        for (block, p_fi, p_if) in PAPER {
+            let m_fi = model.time_ms(block, false).unwrap();
+            let m_if = model.time_ms(block, true).unwrap();
+            assert!((m_fi - p_fi).abs() < 6.0, "{block}: {m_fi} vs {p_fi}");
+            assert!((m_if - p_if).abs() < 6.0, "{block}: {m_if} vs {p_if}");
+            let mean_model = (m_fi + m_if) / 2.0;
+            let mean_paper = (p_fi + p_if) / 2.0;
+            assert!((mean_model - mean_paper).abs() < 3.0, "{block} mean: {mean_model} vs {mean_paper}");
+        }
+    }
+}

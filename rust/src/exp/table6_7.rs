@@ -1,0 +1,97 @@
+//! Tables 6 & 7: FPGA resource partition and per-pblock ensemble sizing
+//! (the resource-model experiments; values are the calibrated model, with
+//! the paper's figures as the reference column).
+
+use anyhow::Result;
+
+use super::report::Table;
+use super::ExpCtx;
+use crate::detectors::DetectorKind;
+use crate::hw::floorplan;
+use crate::hw::resources::{
+    pblock_ensemble_resources, ResourceModel, RP3_CAPACITY, TABLE6_BLOCKS,
+};
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    run_with_floorplan(ctx, false)
+}
+
+pub fn run_with_floorplan(_ctx: &ExpCtx, with_floorplan: bool) -> Result<String> {
+    let mut out = String::from("== Table 6: Resource partition of FPGA blocks ==\n");
+    let mut t = Table::new(vec!["Block", "LUT %", "DSP %", "BRAM %", "FF %"]);
+    for b in &TABLE6_BLOCKS {
+        t.row(vec![
+            b.name.to_string(),
+            format!("{:.2}", b.lut_pct),
+            format!("{:.2}", b.dsp_pct),
+            format!("{:.2}", b.bram_pct),
+            format!("{:.3}", b.ff_pct),
+        ]);
+    }
+    let (lut, dsp, bram, ff) = ResourceModel::total_pct(&TABLE6_BLOCKS);
+    t.row(vec![
+        "Total (paper: 62.5/52.69/56.67/60.42)".to_string(),
+        format!("{lut:.2}"),
+        format!("{dsp:.2}"),
+        format!("{bram:.2}"),
+        format!("{ff:.2}"),
+    ]);
+    out.push_str(&t.render());
+
+    out.push_str("\n== Table 7: Max ensemble per pblock (RP-3, the smallest) ==\n");
+    let mut t = Table::new(vec![
+        "Detector",
+        "R (paper)",
+        "R (model)",
+        "LUT",
+        "DSP",
+        "BRAM",
+        "FF",
+        "binding util",
+    ]);
+    for kind in DetectorKind::ALL {
+        let (r_paper, res) = pblock_ensemble_resources(kind);
+        let r_model = ResourceModel::max_ensemble(kind, &RP3_CAPACITY);
+        t.row(vec![
+            kind.as_str().to_string(),
+            r_paper.to_string(),
+            r_model.to_string(),
+            format!("{:.0}", res.lut),
+            format!("{:.0}", res.dsp),
+            format!("{:.1}", res.bram),
+            format!("{:.0}", res.ff),
+            format!("{:.1}%", res.max_utilisation(&RP3_CAPACITY) * 100.0),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nFull-fabric homogeneous capacity: {} Loda / {} RS-Hash / {} xStream sub-detectors (paper: 245/175/140)\n",
+        7 * DetectorKind::Loda.pblock_r(),
+        7 * DetectorKind::RsHash.pblock_r(),
+        7 * DetectorKind::XStream.pblock_r(),
+    ));
+    if with_floorplan {
+        out.push_str("\n== Figure 8/9: floorplan (abstract grid) ==\n");
+        out.push_str(&floorplan::render());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_both_tables() {
+        let out = run(&ExpCtx::default()).unwrap();
+        assert!(out.contains("Table 6") && out.contains("Table 7"));
+        assert!(out.contains("RP-3"));
+        assert!(out.contains("245/175/140"));
+    }
+
+    #[test]
+    fn floorplan_rendering_included_when_requested() {
+        let out = run_with_floorplan(&ExpCtx::default(), true).unwrap();
+        assert!(out.contains("Figure 8/9"));
+    }
+}

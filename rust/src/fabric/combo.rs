@@ -1,0 +1,165 @@
+//! Combo pblocks (paper §3.3, Table 2): aggregate up to four score streams
+//! into one. Inputs are joined in seq lock-step (the four AXI inputs of a
+//! combo pblock advance together); the combination itself runs either
+//! through the combo artifact on the device or natively.
+
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::{Receiver, Sender};
+
+use super::message::{score_chunk, Flit};
+use crate::combine::ScoreCombiner;
+use crate::runtime::RuntimeHandle;
+
+/// How the combination is computed.
+pub enum ComboEngine {
+    Native(ScoreCombiner),
+    /// Through the `combo_<method>` artifact on the PJRT device.
+    Fpga { handle: RuntimeHandle, method: String, weights: Vec<f32>, chunk: usize },
+}
+
+/// Per-run combo statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ComboReport {
+    pub flits_out: u64,
+    pub samples: u64,
+}
+
+/// Join `inputs` (1..=4 score streams) and emit the combined stream.
+pub fn service(
+    engine: &ComboEngine,
+    inputs: Vec<Receiver<Flit>>,
+    tx: Sender<Flit>,
+) -> Result<ComboReport> {
+    if inputs.is_empty() || inputs.len() > 4 {
+        bail!("combo pblocks have 1..=4 input ports (got {})", inputs.len());
+    }
+    let mut report = ComboReport::default();
+    'stream: loop {
+        // Lock-step join: one flit from every input.
+        let mut flits = Vec::with_capacity(inputs.len());
+        for (i, rx) in inputs.iter().enumerate() {
+            match rx.recv() {
+                Ok(f) => flits.push(f),
+                Err(_) => {
+                    if i == 0 && flits.is_empty() {
+                        break 'stream; // clean end of stream
+                    }
+                    bail!("combo input {i} closed mid-join");
+                }
+            }
+        }
+        let first = &flits[0];
+        for (i, f) in flits.iter().enumerate() {
+            if f.seq != first.seq || f.n_valid != first.n_valid || f.mask.len() != first.mask.len()
+            {
+                bail!(
+                    "combo misalignment: input {i} at seq {} ({} valid), input 0 at seq {} ({} valid)",
+                    f.seq,
+                    f.n_valid,
+                    first.seq,
+                    first.n_valid
+                );
+            }
+        }
+        let rows = first.mask.len();
+        let combined: Vec<f32> = match engine {
+            ComboEngine::Native(c) => {
+                let views: Vec<&[f32]> = flits.iter().map(|f| f.data.as_slice()).collect();
+                c.combine(&views)
+            }
+            ComboEngine::Fpga { handle, method, weights, chunk } => {
+                if rows != *chunk {
+                    bail!("combo artifact chunk {} != flit rows {rows}", chunk);
+                }
+                // Interleave into [C,4] with an active mask over inputs.
+                let mut scores = vec![0f32; rows * 4];
+                let mut active = [0f32; 4];
+                for (k, f) in flits.iter().enumerate() {
+                    active[k] = 1.0;
+                    for (i, &v) in f.data.iter().enumerate() {
+                        scores[i * 4 + k] = v;
+                    }
+                }
+                handle
+                    .run_combo(method, scores, active.to_vec(), weights.clone())
+                    .context("combo artifact execution")?
+            }
+        };
+        let last = flits.iter().any(|f| f.last);
+        report.flits_out += 1;
+        report.samples += first.n_valid as u64;
+        let out = score_chunk(first.seq, combined, first.mask.clone(), first.n_valid, last);
+        if tx.send(out).is_err() || last {
+            break;
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::message::Port;
+
+    fn feed(vals: Vec<Vec<f32>>, last_at: usize) -> Receiver<Flit> {
+        let (tx, rx) = Port::link();
+        for (seq, data) in vals.into_iter().enumerate() {
+            let n = data.len();
+            tx.send(score_chunk(seq as u64, data, vec![1.0; n], n, seq == last_at)).unwrap();
+        }
+        rx
+    }
+
+    #[test]
+    fn averages_two_streams_in_lockstep() {
+        let a = feed(vec![vec![1.0, 3.0], vec![5.0, 7.0]], 1);
+        let b = feed(vec![vec![3.0, 5.0], vec![7.0, 9.0]], 1);
+        let (tx, rx) = Port::link();
+        let engine = ComboEngine::Native(ScoreCombiner::Averaging);
+        let report = service(&engine, vec![a, b], tx).unwrap();
+        assert_eq!(report.flits_out, 2);
+        let f0 = rx.recv().unwrap();
+        assert_eq!(f0.data, vec![2.0, 4.0]);
+        let f1 = rx.recv().unwrap();
+        assert_eq!(f1.data, vec![6.0, 8.0]);
+        assert!(f1.last);
+    }
+
+    #[test]
+    fn detects_misaligned_sequences() {
+        let (tx_a, rx_a) = Port::link();
+        tx_a.send(score_chunk(0, vec![1.0], vec![1.0], 1, true)).unwrap();
+        let (tx_b, rx_b) = Port::link();
+        tx_b.send(score_chunk(3, vec![1.0], vec![1.0], 1, true)).unwrap();
+        let (tx, _rx) = Port::link();
+        let engine = ComboEngine::Native(ScoreCombiner::Averaging);
+        assert!(service(&engine, vec![rx_a, rx_b], tx).is_err());
+    }
+
+    #[test]
+    fn rejects_more_than_four_inputs() {
+        let rxs: Vec<Receiver<Flit>> = (0..5).map(|_| Port::link().1).collect();
+        let (tx, _rx) = Port::link();
+        let engine = ComboEngine::Native(ScoreCombiner::Averaging);
+        assert!(service(&engine, rxs, tx).is_err());
+    }
+
+    #[test]
+    fn maximization_native() {
+        let a = feed(vec![vec![1.0, 9.0]], 0);
+        let b = feed(vec![vec![5.0, 2.0]], 0);
+        let (tx, rx) = Port::link();
+        let engine = ComboEngine::Native(ScoreCombiner::Maximization);
+        service(&engine, vec![a, b], tx).unwrap();
+        assert_eq!(rx.recv().unwrap().data, vec![5.0, 9.0]);
+    }
+
+    #[test]
+    fn single_input_passthrough() {
+        let a = feed(vec![vec![1.5, 2.5]], 0);
+        let (tx, rx) = Port::link();
+        let engine = ComboEngine::Native(ScoreCombiner::Averaging);
+        service(&engine, vec![a], tx).unwrap();
+        assert_eq!(rx.recv().unwrap().data, vec![1.5, 2.5]);
+    }
+}

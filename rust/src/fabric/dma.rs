@@ -1,0 +1,121 @@
+//! DMA engines: host↔fabric stream endpoints (the blue blocks of Fig 6).
+//!
+//! An input DMA reads a row-major sample buffer and produces chunk flits; an
+//! output DMA collects score flits back into a host buffer, unpadding via
+//! the validity mask. Each pblock has its own fixed input DMA channel
+//! (paper §3.3), so the same dataset fanned out to several pblocks is sent
+//! once per channel, exactly like the board.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::message::Flit;
+use crate::data::stream::ChunkStream;
+
+/// Input DMA: streams `data` ([n, d] row-major) as padded chunks.
+pub struct InputDma;
+
+impl InputDma {
+    pub fn spawn(
+        name: String,
+        data: Arc<Vec<f32>>,
+        d: usize,
+        chunk: usize,
+        tx: Sender<Flit>,
+    ) -> JoinHandle<DmaReport> {
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                let mut report = DmaReport::default();
+                for flit in ChunkStream::new(&data, d, chunk) {
+                    report.flits += 1;
+                    report.bytes += (flit.data.len() * 4) as u64;
+                    report.samples += flit.n_valid as u64;
+                    if tx.send(flit).is_err() {
+                        break; // fabric tore down mid-stream
+                    }
+                }
+                report
+            })
+            .expect("spawn input dma")
+    }
+}
+
+/// Output DMA: collects score flits into a contiguous host vector.
+pub struct OutputDma;
+
+impl OutputDma {
+    pub fn spawn(name: String, rx: Receiver<Flit>) -> JoinHandle<(Vec<f32>, DmaReport)> {
+        std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                let mut out = Vec::new();
+                let mut report = DmaReport::default();
+                for flit in rx.iter() {
+                    report.flits += 1;
+                    report.bytes += (flit.data.len() * 4) as u64;
+                    report.samples += flit.n_valid as u64;
+                    // Unpad: keep only valid rows (d = data.len()/mask.len()).
+                    let d = if flit.mask.is_empty() { 1 } else { flit.data.len() / flit.mask.len() };
+                    out.extend_from_slice(&flit.data[..flit.n_valid * d]);
+                    if flit.last {
+                        break;
+                    }
+                }
+                (out, report)
+            })
+            .expect("spawn output dma")
+    }
+}
+
+/// Transfer statistics per DMA channel.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DmaReport {
+    pub flits: u64,
+    pub bytes: u64,
+    pub samples: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::message::Port;
+
+    #[test]
+    fn roundtrip_through_both_dmas() {
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect(); // 5 samples d=2
+        let (tx, rx) = Port::link();
+        let input = InputDma::spawn("in".into(), Arc::new(data.clone()), 2, 4, tx);
+        let output = OutputDma::spawn("out".into(), rx);
+        let in_report = input.join().unwrap();
+        let (collected, out_report) = output.join().unwrap();
+        assert_eq!(collected, data); // unpadded
+        assert_eq!(in_report.samples, 5);
+        assert_eq!(out_report.samples, 5);
+        assert_eq!(in_report.flits, 2); // 4 + 1(padded)
+    }
+
+    #[test]
+    fn output_dma_stops_at_last() {
+        let (tx, rx) = Port::link();
+        let output = OutputDma::spawn("out".into(), rx);
+        tx.send(crate::fabric::message::score_chunk(0, vec![1.0, 2.0], vec![1.0, 1.0], 2, false))
+            .unwrap();
+        tx.send(crate::fabric::message::score_chunk(1, vec![3.0, 0.0], vec![1.0, 0.0], 1, true))
+            .unwrap();
+        let (collected, report) = output.join().unwrap();
+        assert_eq!(collected, vec![1.0, 2.0, 3.0]);
+        assert_eq!(report.flits, 2);
+    }
+
+    #[test]
+    fn input_dma_survives_dropped_consumer() {
+        let data = vec![0f32; 100 * 3];
+        let (tx, rx) = Port::link();
+        drop(rx);
+        let input = InputDma::spawn("in".into(), Arc::new(data), 3, 8, tx);
+        let report = input.join().unwrap(); // must not panic
+        assert!(report.flits <= 1);
+    }
+}

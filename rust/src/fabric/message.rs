@@ -1,0 +1,51 @@
+//! Fabric message types: AXI4-Stream transfers at chunk granularity.
+//!
+//! A [`Flit`] is one chunked transfer (the paper streams one f32 per beat;
+//! we batch `chunk` samples per transfer to amortise channel overhead — the
+//! chunk size is the artifact chunk size, so one flit = one executable
+//! invocation). `Chunk.last` models the AXI TLAST sideband.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+pub use crate::data::stream::Chunk;
+
+/// One AXI-stream transfer.
+pub type Flit = Chunk;
+
+/// A point-to-point stream link (master → slave).
+pub struct Port;
+
+impl Port {
+    /// Create a stream link. Unbounded like a register-sliced AXI channel;
+    /// backpressure is applied by the consumer's service rate.
+    pub fn link() -> (Sender<Flit>, Receiver<Flit>) {
+        channel()
+    }
+}
+
+/// Score flits have d = 1: length of data == length of mask.
+pub fn score_chunk(seq: u64, scores: Vec<f32>, mask: Vec<f32>, n_valid: usize, last: bool) -> Flit {
+    debug_assert_eq!(scores.len(), mask.len());
+    Chunk { seq, data: scores, mask, n_valid, last }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_moves_flits() {
+        let (tx, rx) = Port::link();
+        tx.send(score_chunk(0, vec![1.0, 0.0], vec![1.0, 0.0], 1, true)).unwrap();
+        let f = rx.recv().unwrap();
+        assert_eq!(f.n_valid, 1);
+        assert!(f.last);
+    }
+
+    #[test]
+    fn dropped_sender_closes_stream() {
+        let (tx, rx) = Port::link();
+        drop(tx);
+        assert!(rx.recv().is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! The composable fabric — the paper's system contribution (§3.3).
+//!
+//! Reconfigurable pblocks hold RMs (detector / bypass / combo), AXI-stream
+//! switches route chunked streams between DMAs, pblocks and combos under a
+//! register-programmed crossbar, and the DFX manager swaps RMs at run time.
+
+pub mod combo;
+pub mod decoupler;
+pub mod dma;
+pub mod message;
+pub mod pblock;
+pub mod reconfig;
+pub mod switch;
+pub mod topology;
+
+pub use message::{Flit, Port};
+pub use switch::AxiSwitch;
+pub use topology::Fabric;

@@ -1,0 +1,312 @@
+//! Reconfigurable partitions (pblocks): each holds one loaded RM —
+//! a detector ensemble (CPU-native or a PJRT artifact, the "bitstream"),
+//! a bypass, or the default empty logic (paper §3.2–3.3). The RM persists
+//! across stream runs (sliding-window state is streaming state), and is
+//! swapped at run time by the DFX manager.
+
+use anyhow::{bail, Context, Result};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::decoupler::Decoupler;
+use super::message::{score_chunk, Flit};
+use crate::config::{DetectorHyper, RmKind};
+use crate::detectors::{Detector, DetectorSpec};
+use crate::runtime::{generate_params, InstanceId, Registry, RuntimeHandle};
+
+/// A loaded reconfigurable module.
+pub enum LoadedRm {
+    /// Default RM: consumes nothing, produces nothing (power-save).
+    Empty,
+    /// Identity logic, native implementation.
+    BypassNative,
+    /// Identity logic executed through the bypass artifact on the device.
+    BypassFpga { handle: RuntimeHandle, d: usize },
+    /// Detector ensemble on the CPU (baseline / fast tests).
+    DetectorCpu { det: Box<dyn Detector> },
+    /// Detector ensemble as a compiled artifact on the PJRT device.
+    DetectorFpga { handle: RuntimeHandle, inst: InstanceId, chunk: usize, d: usize },
+}
+
+impl LoadedRm {
+    pub fn describe(&self) -> String {
+        match self {
+            LoadedRm::Empty => "empty".into(),
+            LoadedRm::BypassNative => "bypass(native)".into(),
+            LoadedRm::BypassFpga { d, .. } => format!("bypass(fpga,d={d})"),
+            LoadedRm::DetectorCpu { det } => format!("{}(cpu,r={})", det.name(), det.r()),
+            LoadedRm::DetectorFpga { d, .. } => format!("detector(fpga,d={d})"),
+        }
+    }
+
+    /// Build an RM from its config description.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        rm: RmKind,
+        r: usize,
+        d: usize,
+        seed: u64,
+        hyper: &DetectorHyper,
+        warmup: &[f32],
+        fpga: Option<(&RuntimeHandle, &Registry)>,
+        quantize: bool,
+    ) -> Result<LoadedRm> {
+        match rm {
+            RmKind::Empty => Ok(LoadedRm::Empty),
+            RmKind::Bypass => match fpga {
+                Some((handle, reg)) if reg.find_bypass(d).is_ok() => {
+                    Ok(LoadedRm::BypassFpga { handle: handle.clone(), d })
+                }
+                _ => Ok(LoadedRm::BypassNative),
+            },
+            RmKind::Detector(kind) => match fpga {
+                Some((handle, reg)) => {
+                    let meta = reg.find_detector(kind, d, r, quantize)?;
+                    let params = generate_params(kind, seed, r, d, hyper, warmup);
+                    let inst = handle
+                        .load_detector(meta, params)
+                        .with_context(|| format!("loading {}", meta.name))?;
+                    Ok(LoadedRm::DetectorFpga { handle: handle.clone(), inst, chunk: meta.chunk, d })
+                }
+                None => {
+                    let mut spec = DetectorSpec::new(kind, d, r, seed);
+                    spec.window = hyper.window;
+                    spec.bins = hyper.bins;
+                    spec.w = hyper.w;
+                    spec.modulus = hyper.modulus;
+                    spec.k = hyper.k;
+                    spec.quantize = quantize;
+                    Ok(LoadedRm::DetectorCpu { det: spec.build(warmup) })
+                }
+            },
+        }
+    }
+
+    /// Process one flit; returns the output flit (None for Empty logic).
+    pub fn process(&mut self, flit: &Flit) -> Result<Option<Flit>> {
+        match self {
+            LoadedRm::Empty => Ok(None),
+            LoadedRm::BypassNative => Ok(Some(flit.clone())),
+            LoadedRm::BypassFpga { handle, d } => {
+                let out = handle.run_bypass(*d, flit.data.clone())?;
+                Ok(Some(Flit {
+                    seq: flit.seq,
+                    data: out,
+                    mask: flit.mask.clone(),
+                    n_valid: flit.n_valid,
+                    last: flit.last,
+                }))
+            }
+            LoadedRm::DetectorCpu { det } => {
+                let d = det.d();
+                let rows = flit.mask.len();
+                let mut scores = vec![0f32; rows];
+                for i in 0..flit.n_valid {
+                    scores[i] = det.update(&flit.data[i * d..(i + 1) * d]);
+                }
+                Ok(Some(score_chunk(flit.seq, scores, flit.mask.clone(), flit.n_valid, flit.last)))
+            }
+            LoadedRm::DetectorFpga { handle, inst, chunk, d } => {
+                if flit.data.len() != *chunk * *d {
+                    bail!(
+                        "pblock chunk mismatch: flit has {} values, artifact expects [{},{}]",
+                        flit.data.len(),
+                        chunk,
+                        d
+                    );
+                }
+                let scores = handle.run_chunk(*inst, flit.data.clone(), flit.mask.clone())?;
+                Ok(Some(score_chunk(flit.seq, scores, flit.mask.clone(), flit.n_valid, flit.last)))
+            }
+        }
+    }
+
+    /// Reset streaming state (window contents), keeping parameters.
+    pub fn reset(&mut self) -> Result<()> {
+        match self {
+            LoadedRm::DetectorCpu { det } => {
+                det.reset();
+                Ok(())
+            }
+            LoadedRm::DetectorFpga { handle, inst, .. } => handle.reset_state(*inst),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Per-run pblock statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PblockReport {
+    pub flits_in: u64,
+    pub flits_out: u64,
+    pub samples: u64,
+    /// Seconds spent inside the RM (compute, not waiting).
+    pub busy_secs: f64,
+}
+
+/// A reconfigurable partition of the fabric.
+pub struct Pblock {
+    pub id: usize,
+    pub rm: LoadedRm,
+    pub decoupler: Arc<Decoupler>,
+}
+
+impl Pblock {
+    pub fn new(id: usize) -> Pblock {
+        Pblock { id, rm: LoadedRm::Empty, decoupler: Arc::new(Decoupler::new()) }
+    }
+
+    /// Service one stream: pull flits from `rx`, run them through the RM,
+    /// push results to `tx`. Returns when the stream ends (TLAST or closed).
+    pub fn service(
+        rm: &mut LoadedRm,
+        decoupler: &Decoupler,
+        rx: Receiver<Flit>,
+        tx: Sender<Flit>,
+    ) -> Result<PblockReport> {
+        let mut report = PblockReport::default();
+        for flit in rx.iter() {
+            report.flits_in += 1;
+            if decoupler.is_decoupled() {
+                // DFX decoupler isolates the region during reconfiguration:
+                // traffic is dropped, never handed to half-configured logic.
+                if flit.last {
+                    break;
+                }
+                continue;
+            }
+            let last = flit.last;
+            let t0 = Instant::now();
+            let out = rm.process(&flit)?;
+            report.busy_secs += t0.elapsed().as_secs_f64();
+            report.samples += flit.n_valid as u64;
+            if let Some(out) = out {
+                report.flits_out += 1;
+                if tx.send(out).is_err() {
+                    break; // downstream disabled
+                }
+            }
+            if last {
+                break;
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DetectorHyper;
+    use crate::data::stream::ChunkStream;
+    use crate::detectors::prng::Prng;
+    use crate::detectors::DetectorKind;
+    use crate::fabric::message::Port;
+
+    fn hyper() -> DetectorHyper {
+        DetectorHyper { window: 16, bins: 8, w: 2, modulus: 32, k: 4 }
+    }
+
+    fn stream_data(n: usize, d: usize) -> Vec<f32> {
+        let mut p = Prng::new(9);
+        (0..n * d).map(|_| p.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn cpu_detector_rm_scores_stream() {
+        let data = stream_data(40, 3);
+        let mut rm = LoadedRm::build(
+            RmKind::Detector(DetectorKind::Loda),
+            4,
+            3,
+            1,
+            &hyper(),
+            &data[..30],
+            None,
+            false,
+        )
+        .unwrap();
+        let (tx_out, rx_out) = Port::link();
+        let (tx_in, rx_in) = Port::link();
+        for f in ChunkStream::new(&data, 3, 8) {
+            tx_in.send(f).unwrap();
+        }
+        drop(tx_in);
+        let dec = Decoupler::new();
+        let report = Pblock::service(&mut rm, &dec, rx_in, tx_out).unwrap();
+        assert_eq!(report.samples, 40);
+        assert_eq!(report.flits_in, 5);
+        let mut n_scores = 0;
+        for f in rx_out.iter() {
+            n_scores += f.n_valid;
+        }
+        assert_eq!(n_scores, 40);
+    }
+
+    #[test]
+    fn bypass_rm_is_identity() {
+        let data = stream_data(10, 2);
+        let mut rm = LoadedRm::BypassNative;
+        let flit = ChunkStream::new(&data, 2, 16).next().unwrap();
+        let out = rm.process(&flit).unwrap().unwrap();
+        assert_eq!(out.data, flit.data);
+    }
+
+    #[test]
+    fn empty_rm_produces_nothing() {
+        let mut rm = LoadedRm::Empty;
+        let flit = ChunkStream::new(&[1.0, 2.0], 2, 4).next().unwrap();
+        assert!(rm.process(&flit).unwrap().is_none());
+    }
+
+    #[test]
+    fn decoupled_pblock_drops_traffic() {
+        let data = stream_data(16, 2);
+        let mut rm = LoadedRm::BypassNative;
+        let (tx_in, rx_in) = Port::link();
+        let (tx_out, rx_out) = Port::link();
+        for f in ChunkStream::new(&data, 2, 8) {
+            tx_in.send(f).unwrap();
+        }
+        drop(tx_in);
+        let dec = Decoupler::new();
+        dec.decouple();
+        let report = Pblock::service(&mut rm, &dec, rx_in, tx_out).unwrap();
+        assert_eq!(report.flits_out, 0);
+        assert!(rx_out.recv().is_err());
+        assert!(report.flits_in >= 1);
+    }
+
+    #[test]
+    fn cpu_rm_scores_match_plain_detector() {
+        let data = stream_data(32, 3);
+        let hy = hyper();
+        let mut rm = LoadedRm::build(
+            RmKind::Detector(DetectorKind::RsHash),
+            3,
+            3,
+            5,
+            &hy,
+            &data[..30],
+            None,
+            false,
+        )
+        .unwrap();
+        let mut spec = DetectorSpec::new(DetectorKind::RsHash, 3, 3, 5);
+        spec.window = hy.window;
+        spec.bins = hy.bins;
+        spec.w = hy.w;
+        spec.modulus = hy.modulus;
+        spec.k = hy.k;
+        let mut det = spec.build(&data[..30]);
+        let expect = det.run_stream(&data);
+        let mut got = Vec::new();
+        for flit in ChunkStream::new(&data, 3, 8) {
+            if let Some(out) = rm.process(&flit).unwrap() {
+                got.extend_from_slice(&out.data[..out.n_valid]);
+            }
+        }
+        assert_eq!(got, expect);
+    }
+}

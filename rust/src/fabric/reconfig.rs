@@ -1,0 +1,179 @@
+//! DFX manager (paper §3.2, Table 13): swaps RMs in and out of pblocks at
+//! run time and models partial-reconfiguration latency.
+//!
+//! The latency model is calibrated against paper Table 13: PYNQ bitstream
+//! download cost is dominated by a fixed overhead (~578 ms) plus a term
+//! proportional to the region size (LUT share of the device), reaching
+//! ~610 ms for the largest AD pblock. The *actual* swap work here —
+//! compiling/instantiating the artifact — is measured and reported
+//! separately; `emulate_latency` optionally sleeps out the modelled time to
+//! reproduce end-to-end behaviour.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::pblock::{LoadedRm, Pblock};
+use crate::config::{DetectorHyper, RmKind};
+use crate::hw::resources::TABLE6_BLOCKS;
+use crate::runtime::{Registry, RuntimeHandle};
+
+/// Latency model parameters (fit to Table 13).
+#[derive(Clone, Copy, Debug)]
+pub struct ReconfigModel {
+    /// Fixed PYNQ DFX download overhead (ms).
+    pub base_ms: f64,
+    /// ms per √(% of device LUTs) — Table 13's times grow sublinearly with
+    /// region size (per-frame transfer amortises against driver overhead).
+    pub per_sqrt_lut_pct_ms: f64,
+    /// Extra cost when the incoming bitstream is non-trivial logic
+    /// (Table 13: Identity→Function is marginally slower on average).
+    pub function_bias_ms: f64,
+}
+
+impl Default for ReconfigModel {
+    fn default() -> Self {
+        // Fit over Table 13's clusters: combo blocks (~0.63 % LUT, ~582 ms)
+        // and AD pblocks (6.2–8.7 % LUT, 604–610 ms). Max residual ≈ 2.5 ms.
+        ReconfigModel { base_ms: 571.8, per_sqrt_lut_pct_ms: 13.3, function_bias_ms: 0.4 }
+    }
+}
+
+impl ReconfigModel {
+    /// Modelled reconfiguration time for a named block (RP-1..7, COMBO1..3).
+    pub fn time_ms(&self, block: &str, to_function: bool) -> Option<f64> {
+        let b = TABLE6_BLOCKS.iter().find(|b| b.name.eq_ignore_ascii_case(block))?;
+        let bias = if to_function { self.function_bias_ms } else { 0.0 };
+        Some(self.base_ms + self.per_sqrt_lut_pct_ms * b.lut_pct.sqrt() + bias)
+    }
+
+    /// Model time for an AD pblock by 1-based id.
+    pub fn time_ms_pblock(&self, id: usize, to_function: bool) -> Option<f64> {
+        self.time_ms(&format!("RP-{id}"), to_function)
+    }
+}
+
+/// Outcome of one partial reconfiguration.
+#[derive(Clone, Debug)]
+pub struct ReconfigReport {
+    pub pblock: usize,
+    pub from: String,
+    pub to: String,
+    /// Modelled DFX bitstream-download latency (Table 13 analogue).
+    pub model_ms: f64,
+    /// Measured swap time in this system (artifact compile + instantiate).
+    pub actual_ms: f64,
+}
+
+/// The DFX controller.
+pub struct DfxManager {
+    pub model: ReconfigModel,
+    /// Sleep out the modelled latency (off by default: experiments report
+    /// the model without paying 600 ms per swap).
+    pub emulate_latency: bool,
+}
+
+impl Default for DfxManager {
+    fn default() -> Self {
+        DfxManager { model: ReconfigModel::default(), emulate_latency: false }
+    }
+}
+
+impl DfxManager {
+    /// Swap the RM in `pblock`: decouple → build/load new RM → reset →
+    /// recouple. `warmup` seeds parameter ranges for detector RMs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn reconfigure(
+        &self,
+        pblock: &mut Pblock,
+        rm: RmKind,
+        r: usize,
+        d: usize,
+        seed: u64,
+        hyper: &DetectorHyper,
+        warmup: &[f32],
+        fpga: Option<(&RuntimeHandle, &Registry)>,
+        quantize: bool,
+    ) -> Result<ReconfigReport> {
+        let from = pblock.rm.describe();
+        let t0 = Instant::now();
+        pblock.decoupler.decouple();
+        let new_rm = LoadedRm::build(rm, r, d, seed, hyper, warmup, fpga, quantize)?;
+        let old = std::mem::replace(&mut pblock.rm, new_rm);
+        drop(old);
+        pblock.rm.reset()?;
+        pblock.decoupler.recouple();
+        let actual_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let to_function = rm != RmKind::Empty && rm != RmKind::Bypass;
+        let model_ms =
+            self.model.time_ms_pblock(pblock.id, to_function).unwrap_or(self.model.base_ms);
+        if self.emulate_latency {
+            let remaining = model_ms - actual_ms;
+            if remaining > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(remaining / 1e3));
+            }
+        }
+        Ok(ReconfigReport { pblock: pblock.id, from, to: pblock.rm.describe(), model_ms, actual_ms })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detectors::DetectorKind;
+
+    #[test]
+    fn model_tracks_paper_table13() {
+        let m = ReconfigModel::default();
+        // Paper: RP-6 ≈ 609.6 ms (largest), COMBO3 ≈ 579.8 ms (smallest).
+        let rp6 = m.time_ms("RP-6", false).unwrap();
+        assert!((rp6 - 609.6).abs() < 3.0, "rp6={rp6}");
+        let combo3 = m.time_ms("COMBO3", false).unwrap();
+        assert!((combo3 - 579.8).abs() < 3.0, "combo3={combo3}");
+        // Bigger region ⇒ longer download.
+        assert!(rp6 > m.time_ms("RP-3", false).unwrap());
+    }
+
+    #[test]
+    fn unknown_block_is_none() {
+        assert!(ReconfigModel::default().time_ms("RP-9", true).is_none());
+    }
+
+    #[test]
+    fn reconfigure_swaps_cpu_rms() {
+        let hyper = DetectorHyper { window: 8, bins: 4, w: 2, modulus: 16, k: 3 };
+        let mut pb = Pblock::new(3);
+        let mgr = DfxManager::default();
+        let warmup: Vec<f32> = (0..60).map(|i| (i as f32).sin()).collect();
+        let rep = mgr
+            .reconfigure(
+                &mut pb,
+                RmKind::Detector(DetectorKind::Loda),
+                2,
+                3,
+                1,
+                &hyper,
+                &warmup,
+                None,
+                false,
+            )
+            .unwrap();
+        assert_eq!(rep.from, "empty");
+        assert!(rep.to.contains("loda"));
+        assert!(rep.model_ms > 595.0);
+        assert!(!pb.decoupler.is_decoupled());
+        // Swap back to bypass.
+        let rep2 = mgr
+            .reconfigure(&mut pb, RmKind::Bypass, 0, 3, 1, &hyper, &[], None, false)
+            .unwrap();
+        assert!(rep2.from.contains("loda"));
+        assert_eq!(rep2.to, "bypass(native)");
+    }
+
+    #[test]
+    fn function_bias_orders_directions() {
+        let m = ReconfigModel::default();
+        let to_fn = m.time_ms("RP-1", true).unwrap();
+        let to_id = m.time_ms("RP-1", false).unwrap();
+        assert!(to_fn > to_id);
+    }
+}

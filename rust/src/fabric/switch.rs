@@ -1,0 +1,221 @@
+//! AXI4-Stream switch model (paper §3.3, Xilinx PG085 semantics).
+//!
+//! Register-programmed crossbar: one register per master selects the slave
+//! it listens to. Arbitration follows the paper exactly: "when a slave
+//! interface is connected to multiple masters, only the lowest numbered one
+//! is used … the other is disabled", so each (master, slave) pair resolves
+//! to at most one point-to-point connection. Routing is configured over the
+//! AXI-Lite analogue ([`AxiSwitch::set_route`]) while the switch is idle,
+//! then [`AxiSwitch::spawn`] instantiates the resolved connections as pump
+//! threads.
+
+use anyhow::{bail, Result};
+use std::sync::mpsc::{Receiver, Sender};
+use std::thread::JoinHandle;
+
+use super::message::Flit;
+
+/// Maximum ports per switch (Xilinx AXI4-Stream Switch IP limit the paper
+/// works around by cascading switches).
+pub const MAX_PORTS: usize = 16;
+
+#[derive(Clone, Debug)]
+pub struct AxiSwitch {
+    name: String,
+    n_slaves: usize,
+    n_masters: usize,
+    /// Routing registers: reg[master] = Some(slave).
+    reg: Vec<Option<usize>>,
+}
+
+impl AxiSwitch {
+    pub fn new(name: &str, n_slaves: usize, n_masters: usize) -> Result<AxiSwitch> {
+        if n_slaves > MAX_PORTS || n_masters > MAX_PORTS {
+            bail!("switch {name}: at most {MAX_PORTS} slave and master ports (cascade switches instead)");
+        }
+        Ok(AxiSwitch { name: name.to_string(), n_slaves, n_masters, reg: vec![None; n_masters] })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn n_slaves(&self) -> usize {
+        self.n_slaves
+    }
+
+    pub fn n_masters(&self) -> usize {
+        self.n_masters
+    }
+
+    /// Program one routing register (AXI-Lite write).
+    pub fn set_route(&mut self, master: usize, slave: usize) -> Result<()> {
+        if master >= self.n_masters {
+            bail!("{}: master {master} out of range (< {})", self.name, self.n_masters);
+        }
+        if slave >= self.n_slaves {
+            bail!("{}: slave {slave} out of range (< {})", self.name, self.n_slaves);
+        }
+        self.reg[master] = Some(slave);
+        Ok(())
+    }
+
+    /// Disable a master interface (AXI-Lite write).
+    pub fn disable(&mut self, master: usize) -> Result<()> {
+        if master >= self.n_masters {
+            bail!("{}: master {master} out of range", self.name);
+        }
+        self.reg[master] = None;
+        Ok(())
+    }
+
+    pub fn route_of(&self, master: usize) -> Option<usize> {
+        self.reg.get(master).copied().flatten()
+    }
+
+    /// Apply the arbitration rule: for each slave, the lowest-numbered
+    /// master requesting it wins; higher-numbered requesters are disabled.
+    /// Returns the effective master → slave map.
+    pub fn resolve(&self) -> Vec<Option<usize>> {
+        let mut taken = vec![false; self.n_slaves];
+        let mut eff = vec![None; self.n_masters];
+        for (m, reg) in self.reg.iter().enumerate() {
+            if let Some(s) = *reg {
+                if !taken[s] {
+                    taken[s] = true;
+                    eff[m] = Some(s);
+                }
+            }
+        }
+        eff
+    }
+
+    /// Instantiate the resolved crossbar over real channels: takes the slave
+    /// receivers and master senders, spawns one pump thread per effective
+    /// connection. Slots for disabled ports may be `None`.
+    pub fn spawn(
+        &self,
+        mut slave_rx: Vec<Option<Receiver<Flit>>>,
+        mut master_tx: Vec<Option<Sender<Flit>>>,
+    ) -> Result<SwitchRun> {
+        if slave_rx.len() != self.n_slaves || master_tx.len() != self.n_masters {
+            bail!(
+                "{}: port count mismatch (got {} slaves / {} masters)",
+                self.name,
+                slave_rx.len(),
+                master_tx.len()
+            );
+        }
+        let mut pumps = Vec::new();
+        for (m, slave) in self.resolve().into_iter().enumerate() {
+            let Some(s) = slave else { continue };
+            let Some(rx) = slave_rx[s].take() else {
+                bail!("{}: route M{m}←S{s} but slave {s} has no upstream", self.name);
+            };
+            let Some(tx) = master_tx[m].take() else {
+                bail!("{}: route M{m}←S{s} but master {m} has no downstream", self.name);
+            };
+            let name = format!("{}-m{}", self.name, m);
+            pumps.push(
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(move || {
+                        let mut flits = 0u64;
+                        // Forward until the upstream closes (TLAST + close).
+                        for flit in rx.iter() {
+                            if tx.send(flit).is_err() {
+                                break; // downstream gone: disable route
+                            }
+                            flits += 1;
+                        }
+                        flits
+                    })
+                    .expect("spawn switch pump"),
+            );
+        }
+        Ok(SwitchRun { pumps })
+    }
+}
+
+/// Handle over a running crossbar; join to collect per-connection counters.
+pub struct SwitchRun {
+    pumps: Vec<JoinHandle<u64>>,
+}
+
+impl SwitchRun {
+    /// Wait for every connection to drain; returns total flits moved.
+    pub fn join(self) -> u64 {
+        self.pumps.into_iter().map(|p| p.join().unwrap_or(0)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::message::{score_chunk, Port};
+
+    #[test]
+    fn arbitration_lowest_master_wins() {
+        let mut sw = AxiSwitch::new("t", 4, 4).unwrap();
+        sw.set_route(1, 2).unwrap();
+        sw.set_route(3, 2).unwrap(); // loses to master 1
+        let eff = sw.resolve();
+        assert_eq!(eff, vec![None, Some(2), None, None]);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let mut sw = AxiSwitch::new("t", 2, 2).unwrap();
+        assert!(sw.set_route(2, 0).is_err());
+        assert!(sw.set_route(0, 2).is_err());
+        assert!(AxiSwitch::new("big", 17, 4).is_err());
+    }
+
+    #[test]
+    fn disable_clears_route() {
+        let mut sw = AxiSwitch::new("t", 2, 2).unwrap();
+        sw.set_route(0, 1).unwrap();
+        sw.disable(0).unwrap();
+        assert_eq!(sw.resolve(), vec![None, None]);
+    }
+
+    #[test]
+    fn pumps_move_flits_end_to_end() {
+        let mut sw = AxiSwitch::new("t", 2, 2).unwrap();
+        sw.set_route(0, 1).unwrap(); // M0 ← S1
+        sw.set_route(1, 0).unwrap(); // M1 ← S0
+        let (s0_tx, s0_rx) = Port::link();
+        let (s1_tx, s1_rx) = Port::link();
+        let (m0_tx, m0_rx) = Port::link();
+        let (m1_tx, m1_rx) = Port::link();
+        let run = sw
+            .spawn(vec![Some(s0_rx), Some(s1_rx)], vec![Some(m0_tx), Some(m1_tx)])
+            .unwrap();
+        s0_tx.send(score_chunk(0, vec![1.0], vec![1.0], 1, true)).unwrap();
+        s1_tx.send(score_chunk(0, vec![2.0], vec![1.0], 1, true)).unwrap();
+        drop((s0_tx, s1_tx));
+        assert_eq!(m0_rx.recv().unwrap().data, vec![2.0]); // M0 ← S1
+        assert_eq!(m1_rx.recv().unwrap().data, vec![1.0]); // M1 ← S0
+        assert_eq!(run.join(), 2);
+    }
+
+    #[test]
+    fn unrouted_slave_is_dropped() {
+        let sw = AxiSwitch::new("t", 1, 1).unwrap(); // no routes programmed
+        let (s_tx, s_rx) = Port::link();
+        let (m_tx, m_rx) = Port::link();
+        let run = sw.spawn(vec![Some(s_rx)], vec![Some(m_tx)]).unwrap();
+        drop(s_tx);
+        assert_eq!(run.join(), 0);
+        assert!(m_rx.recv().is_err()); // master sender dropped unused
+    }
+
+    #[test]
+    fn route_to_missing_upstream_errors() {
+        let mut sw = AxiSwitch::new("t", 2, 2).unwrap();
+        sw.set_route(0, 0).unwrap();
+        let (m_tx, _m_rx) = Port::link();
+        let res = sw.spawn(vec![None, None], vec![Some(m_tx), None]);
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,437 @@
+//! Fabric topology (paper Fig 6): seven AD pblocks fed by fixed input DMAs,
+//! outputs into Switch-1, Switch-1 masters either to output DMAs (direct
+//! host routes, Fig 7a) or across to Switch-2, which feeds the combo
+//! pblocks; combo outputs return through Switch-2 to output DMAs.
+//!
+//! `Fabric::new` loads every configured RM (through the DFX manager);
+//! `Fabric::run` wires the switches for the current configuration, streams
+//! the datasets through, and collects per-pblock / per-combo score streams.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::combo::{self, ComboEngine};
+use super::dma::{DmaReport, InputDma, OutputDma};
+use super::message::{Flit, Port};
+use super::pblock::{Pblock, PblockReport};
+use super::reconfig::{DfxManager, ReconfigReport};
+use super::switch::AxiSwitch;
+use crate::combine::ScoreCombiner;
+use crate::config::{ComboCfg, FseadConfig, RmKind};
+use crate::data::Dataset;
+use crate::defaults;
+use crate::detectors::DetectorKind;
+use crate::hw::timing::FpgaTimingModel;
+use crate::runtime::{Runtime, RuntimeStats};
+
+/// Result of one streaming pass.
+#[derive(Clone, Debug, Default)]
+pub struct RunOutput {
+    /// Scores from pblocks routed directly to the host, by pblock id.
+    pub pblock_scores: BTreeMap<usize, Vec<f32>>,
+    /// Scores from combo pblocks, by combo id.
+    pub combo_scores: BTreeMap<usize, Vec<f32>>,
+    /// Wall-clock of the pass.
+    pub wall_secs: f64,
+    /// Modelled FPGA execution time for this pass (DESIGN.md §6).
+    pub modeled_fpga_secs: f64,
+    /// Total flits moved by the two switches.
+    pub switch_flits: u64,
+    /// Per-pblock service reports.
+    pub pblock_reports: BTreeMap<usize, PblockReport>,
+    /// Input DMA reports by pblock id.
+    pub dma_reports: BTreeMap<usize, DmaReport>,
+}
+
+/// The composable fabric.
+pub struct Fabric {
+    cfg: FseadConfig,
+    streams: Vec<Dataset>,
+    runtime: Option<Runtime>,
+    pblocks: Vec<Pblock>,
+    dfx: DfxManager,
+}
+
+impl Fabric {
+    /// Build the fabric: start the PJRT device (if `use_fpga`), then load
+    /// every configured RM. `streams[i]` backs DMA channel `i`.
+    pub fn new(cfg: FseadConfig, streams: Vec<Dataset>) -> Result<Fabric> {
+        cfg.validate()?;
+        Self::validate_streams(&cfg, &streams)?;
+        let runtime = if cfg.use_fpga {
+            Some(Runtime::start(&cfg.artifact_dir).context("starting PJRT runtime")?)
+        } else {
+            None
+        };
+        let pblocks: Vec<Pblock> = (1..=defaults::NUM_AD_PBLOCKS).map(Pblock::new).collect();
+        let mut fabric = Fabric { cfg, streams, runtime, pblocks, dfx: DfxManager::default() };
+        fabric.load_all_rms()?;
+        Ok(fabric)
+    }
+
+    fn validate_streams(cfg: &FseadConfig, streams: &[Dataset]) -> Result<()> {
+        for p in &cfg.pblocks {
+            if p.rm == RmKind::Empty {
+                continue;
+            }
+            let ds = streams
+                .get(p.stream)
+                .with_context(|| format!("pblock {} references missing stream {}", p.id, p.stream))?;
+            if ds.d == 0 || ds.n() == 0 {
+                bail!("stream {} is empty", p.stream);
+            }
+        }
+        for c in &cfg.combos {
+            let stream_of = |id: usize| cfg.pblocks.iter().find(|p| p.id == id).map(|p| p.stream);
+            let first = stream_of(c.inputs[0]);
+            for &i in &c.inputs[1..] {
+                if stream_of(i) != first {
+                    bail!("combo {} joins pblocks on different streams", c.id);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn load_all_rms(&mut self) -> Result<()> {
+        let cfg = self.cfg.clone();
+        for pcfg in &cfg.pblocks {
+            self.reconfigure(pcfg.id, pcfg.rm, pcfg.r, pcfg.stream)?;
+        }
+        Ok(())
+    }
+
+    /// Swap the RM in pblock `id` (run-time DFX). Returns the report with
+    /// modelled and measured latency.
+    pub fn reconfigure(
+        &mut self,
+        id: usize,
+        rm: RmKind,
+        r: usize,
+        stream: usize,
+    ) -> Result<ReconfigReport> {
+        if !(1..=self.pblocks.len()).contains(&id) {
+            bail!("no pblock {id}");
+        }
+        let ds = self.streams.get(stream);
+        let (d, warmup): (usize, &[f32]) = match ds {
+            Some(ds) => (ds.d, ds.warmup(self.cfg.hyper.window)),
+            None if rm == RmKind::Empty => (0, &[]),
+            None => bail!("pblock {id}: stream {stream} does not exist"),
+        };
+        let fpga = self.runtime.as_ref().map(|rt| (rt.handle(), rt.registry().clone()));
+        let seed = self.cfg.seed.wrapping_add(id as u64 * 1009);
+        let report = self.dfx.reconfigure(
+            &mut self.pblocks[id - 1],
+            rm,
+            r,
+            d,
+            seed,
+            &self.cfg.hyper,
+            warmup,
+            fpga.as_ref().map(|(h, r)| (h, r)),
+            self.cfg.use_fpga, // artifacts are the quantized builds
+        )?;
+        // Track the new assignment in the config (so run() wires it).
+        if let Some(pcfg) = self.cfg.pblocks.iter_mut().find(|p| p.id == id) {
+            pcfg.rm = rm;
+            pcfg.r = r;
+            pcfg.stream = stream;
+        } else {
+            self.cfg.pblocks.push(crate::config::PblockCfg { id, rm, r, stream });
+            self.cfg.pblocks.sort_by_key(|p| p.id);
+        }
+        Ok(report)
+    }
+
+    /// Update combo assignments (run-time switch re-programming).
+    pub fn set_combos(&mut self, combos: Vec<ComboCfg>) -> Result<()> {
+        let mut cfg = self.cfg.clone();
+        cfg.combos = combos;
+        cfg.validate()?;
+        self.cfg = cfg;
+        Ok(())
+    }
+
+    pub fn config(&self) -> &FseadConfig {
+        &self.cfg
+    }
+
+    pub fn runtime_stats(&self) -> Option<RuntimeStats> {
+        self.runtime.as_ref().and_then(|rt| rt.handle().stats().ok())
+    }
+
+    /// Reset all detector sliding-window state.
+    pub fn reset_all(&mut self) -> Result<()> {
+        for pb in &mut self.pblocks {
+            pb.rm.reset()?;
+        }
+        Ok(())
+    }
+
+    fn combo_engine(&self, c: &ComboCfg) -> Result<ComboEngine> {
+        if let Some(rt) = &self.runtime {
+            if let Ok(meta) = rt.registry().find_combo(&c.method) {
+                return Ok(ComboEngine::Fpga {
+                    handle: rt.handle(),
+                    method: c.method.clone(),
+                    weights: c.weights.clone(),
+                    chunk: meta.chunk,
+                });
+            }
+        }
+        let combiner = match c.method.as_str() {
+            "wavg" => ScoreCombiner::WeightedAverage(c.weights.clone()),
+            m => ScoreCombiner::parse(m)
+                .with_context(|| format!("combo {}: unknown method {m:?}", c.id))?,
+        };
+        Ok(ComboEngine::Native(combiner))
+    }
+
+    /// Modelled FPGA time of this pass: pblocks run spatially in parallel,
+    /// so the fabric finishes with its slowest configured pblock.
+    fn model_pass_time(&self) -> f64 {
+        let model = FpgaTimingModel::default();
+        let mut worst = 0f64;
+        for p in &self.cfg.pblocks {
+            if let (RmKind::Detector(kind), Some(ds)) = (p.rm, self.streams.get(p.stream)) {
+                worst = worst.max(model.exec_time_s(kind, ds.n(), ds.d));
+            }
+        }
+        worst
+    }
+
+    /// One streaming pass over all configured streams.
+    pub fn run(&mut self) -> Result<RunOutput> {
+        let cfg = self.cfg.clone();
+        let chunk = cfg.chunk;
+        let active: Vec<_> = cfg.pblocks.iter().filter(|p| p.rm != RmKind::Empty).collect();
+        if active.is_empty() {
+            bail!("no pblocks configured — nothing to run");
+        }
+        let direct = cfg.direct_outputs();
+        let modeled = self.model_pass_time();
+
+        // ---- Switch-1: slaves = pblock outputs; masters = direct-out DMAs
+        //      then feeds toward Switch-2 (one per combo input).
+        let mut sw1 = AxiSwitch::new("switch1", defaults::NUM_AD_PBLOCKS, 16)?;
+        let mut sw1_master = 0usize;
+        // master index → role
+        enum Sw1Role {
+            DirectOut(usize),            // pblock id
+            ComboFeed(usize, usize),     // (combo id, input slot)
+        }
+        let mut sw1_roles: Vec<Sw1Role> = Vec::new();
+        for &id in &direct {
+            sw1.set_route(sw1_master, id - 1)?;
+            sw1_roles.push(Sw1Role::DirectOut(id));
+            sw1_master += 1;
+        }
+        for c in &cfg.combos {
+            for (slot, &input) in c.inputs.iter().enumerate() {
+                sw1.set_route(sw1_master, input - 1)?;
+                sw1_roles.push(Sw1Role::ComboFeed(c.id, slot));
+                sw1_master += 1;
+            }
+        }
+
+        // ---- Switch-2: slaves = combo feeds (from switch-1) + combo
+        //      outputs; masters = combo input ports + combo out DMAs.
+        let n_feeds = cfg.combos.iter().map(|c| c.inputs.len()).sum::<usize>();
+        let n_combos = cfg.combos.len();
+        let mut sw2 = AxiSwitch::new("switch2", n_feeds + n_combos, n_feeds + n_combos)
+            .context("switch-2 port budget (cascade limit)")?;
+        for j in 0..n_feeds {
+            sw2.set_route(j, j)?; // feed j → combo input port j
+        }
+        for ci in 0..n_combos {
+            sw2.set_route(n_feeds + ci, n_feeds + ci)?; // combo out → DMA
+        }
+
+        // ---- Channels.
+        let mut sw1_slave_rx: Vec<Option<Receiver<Flit>>> = (0..7).map(|_| None).collect();
+        let mut sw1_master_tx: Vec<Option<Sender<Flit>>> = (0..16).map(|_| None).collect();
+        let mut sw2_slave_rx: Vec<Option<Receiver<Flit>>> =
+            (0..n_feeds + n_combos).map(|_| None).collect();
+        let mut sw2_master_tx: Vec<Option<Sender<Flit>>> =
+            (0..n_feeds + n_combos).map(|_| None).collect();
+
+        let mut input_dmas = Vec::new();
+        let mut output_dmas: BTreeMap<(bool, usize), std::thread::JoinHandle<(Vec<f32>, DmaReport)>> =
+            BTreeMap::new();
+        let mut pblock_inputs: BTreeMap<usize, Receiver<Flit>> = BTreeMap::new();
+
+        // Input DMA per active pblock (fixed channel per pblock, Fig 6) and
+        // the pblock-output → switch-1-slave links.
+        let mut pblock_out_tx: BTreeMap<usize, Sender<Flit>> = BTreeMap::new();
+        for p in &active {
+            let ds = &self.streams[p.stream];
+            let (tx, rx) = Port::link();
+            input_dmas.push((
+                p.id,
+                InputDma::spawn(
+                    format!("dma-in-{}", p.id),
+                    Arc::new(ds.data.clone()),
+                    ds.d,
+                    chunk,
+                    tx,
+                ),
+            ));
+            pblock_inputs.insert(p.id, rx);
+            let (pb_tx, pb_rx) = Port::link();
+            sw1_slave_rx[p.id - 1] = Some(pb_rx);
+            pblock_out_tx.insert(p.id, pb_tx);
+        }
+
+        // Switch-1 master endpoints.
+        let mut combo_feed_rx: BTreeMap<(usize, usize), Receiver<Flit>> = BTreeMap::new();
+        for (m, role) in sw1_roles.iter().enumerate() {
+            match role {
+                Sw1Role::DirectOut(id) => {
+                    let (tx, rx) = Port::link();
+                    sw1_master_tx[m] = Some(tx);
+                    output_dmas
+                        .insert((false, *id), OutputDma::spawn(format!("dma-out-p{id}"), rx));
+                }
+                Sw1Role::ComboFeed(cid, slot) => {
+                    let (tx, rx) = Port::link();
+                    sw1_master_tx[m] = Some(tx);
+                    combo_feed_rx.insert((*cid, *slot), rx);
+                }
+            }
+        }
+
+        // Switch-2 wiring: feeds in config order.
+        let mut feed_idx = 0usize;
+        let mut combo_input_rx: BTreeMap<usize, Vec<Receiver<Flit>>> = BTreeMap::new();
+        for c in &cfg.combos {
+            let mut ports = Vec::new();
+            for slot in 0..c.inputs.len() {
+                // slave side: receiver produced by switch-1 master pump
+                let rx = combo_feed_rx.remove(&(c.id, slot)).expect("feed exists");
+                sw2_slave_rx[feed_idx] = Some(rx);
+                // master side: link to the combo's input port
+                let (tx, port_rx) = Port::link();
+                sw2_master_tx[feed_idx] = Some(tx);
+                ports.push(port_rx);
+                feed_idx += 1;
+            }
+            combo_input_rx.insert(c.id, ports);
+        }
+        let mut combo_out_tx: BTreeMap<usize, Sender<Flit>> = BTreeMap::new();
+        for (ci, c) in cfg.combos.iter().enumerate() {
+            let (tx, rx) = Port::link();
+            sw2_slave_rx[n_feeds + ci] = Some(rx);
+            combo_out_tx.insert(c.id, tx);
+            let (out_tx, out_rx) = Port::link();
+            sw2_master_tx[n_feeds + ci] = Some(out_tx);
+            output_dmas.insert((true, c.id), OutputDma::spawn(format!("dma-out-c{}", c.id), out_rx));
+        }
+
+        // ---- Spawn the crossbars.
+        let sw1_run = sw1.spawn(sw1_slave_rx, sw1_master_tx)?;
+        let sw2_run = if n_feeds + n_combos > 0 {
+            Some(sw2.spawn(sw2_slave_rx, sw2_master_tx)?)
+        } else {
+            None
+        };
+
+        // ---- Combo engines (built before the scope so threads can move them).
+        let mut combo_threads = Vec::new();
+        for c in &cfg.combos {
+            let engine = self.combo_engine(c)?;
+            let inputs = combo_input_rx.remove(&c.id).unwrap();
+            let tx = combo_out_tx.remove(&c.id).unwrap();
+            let cid = c.id;
+            combo_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("combo-{cid}"))
+                    .spawn(move || combo::service(&engine, inputs, tx))
+                    .expect("spawn combo"),
+            );
+        }
+
+        // ---- Pblock service threads (scoped: they borrow the RMs).
+        let t0 = Instant::now();
+        let mut pblock_reports: BTreeMap<usize, PblockReport> = BTreeMap::new();
+        let mut service_err: Option<anyhow::Error> = None;
+        {
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for pb in self.pblocks.iter_mut() {
+                    let Some(rx) = pblock_inputs.remove(&pb.id) else { continue };
+                    let Some(tx) = pblock_out_tx.remove(&pb.id) else { continue };
+                    let id = pb.id;
+                    let dec = Arc::clone(&pb.decoupler);
+                    let rm = &mut pb.rm;
+                    handles.push((
+                        id,
+                        s.spawn(move || Pblock::service(rm, &dec, rx, tx)),
+                    ));
+                }
+                for (id, h) in handles.drain(..) {
+                    match h.join() {
+                        Ok(Ok(rep)) => {
+                            pblock_reports.insert(id, rep);
+                        }
+                        Ok(Err(e)) => service_err = Some(e.context(format!("pblock {id}"))),
+                        Err(_) => service_err = Some(anyhow::anyhow!("pblock {id} panicked")),
+                    }
+                }
+            });
+        }
+        if let Some(e) = service_err {
+            return Err(e);
+        }
+
+        // ---- Drain and collect.
+        let mut out = RunOutput { modeled_fpga_secs: modeled, ..Default::default() };
+        for t in combo_threads {
+            t.join().map_err(|_| anyhow::anyhow!("combo thread panicked"))??;
+        }
+        out.switch_flits = sw1_run.join() + sw2_run.map(|r| r.join()).unwrap_or(0);
+        for ((is_combo, id), h) in output_dmas {
+            let (scores, _rep) = h.join().map_err(|_| anyhow::anyhow!("output dma panicked"))?;
+            if is_combo {
+                out.combo_scores.insert(id, scores);
+            } else {
+                out.pblock_scores.insert(id, scores);
+            }
+        }
+        for (id, h) in input_dmas {
+            let rep = h.join().map_err(|_| anyhow::anyhow!("input dma panicked"))?;
+            out.dma_reports.insert(id, rep);
+        }
+        out.pblock_reports = pblock_reports;
+        out.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Detector kinds currently loaded, by pblock id (for reporting).
+    pub fn assignments(&self) -> Vec<(usize, String)> {
+        self.cfg
+            .pblocks
+            .iter()
+            .map(|p| {
+                (
+                    p.id,
+                    match p.rm {
+                        RmKind::Detector(k) => format!("{}(r={})", k.as_str(), p.r),
+                        other => other.as_str().to_string(),
+                    },
+                )
+            })
+            .collect()
+    }
+}
+
+/// Convenience: detector kind of a pblock config, if any.
+pub fn kind_of(rm: RmKind) -> Option<DetectorKind> {
+    match rm {
+        RmKind::Detector(k) => Some(k),
+        _ => None,
+    }
+}

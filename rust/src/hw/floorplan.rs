@@ -1,0 +1,140 @@
+//! Floorplan model (paper Figures 8–9): pblock placement on an abstract
+//! ZCU111 grid, with the two switches in the centre, combo pblocks beside
+//! them, and the seven AD pblocks surrounding the infrastructure. Used by
+//! the `fsead resources` CLI to render the layout and by tests that check
+//! the floorplanning invariants the paper calls out.
+
+/// A rectangular region on the abstract device grid (cols × rows).
+#[derive(Clone, Copy, Debug)]
+pub struct Region {
+    pub name: &'static str,
+    pub x: usize,
+    pub y: usize,
+    pub w: usize,
+    pub h: usize,
+}
+
+impl Region {
+    pub fn centre(&self) -> (f64, f64) {
+        (self.x as f64 + self.w as f64 / 2.0, self.y as f64 + self.h as f64 / 2.0)
+    }
+
+    pub fn area(&self) -> usize {
+        self.w * self.h
+    }
+
+    pub fn intersects(&self, o: &Region) -> bool {
+        self.x < o.x + o.w && o.x < self.x + self.w && self.y < o.y + o.h && o.y < self.y + self.h
+    }
+}
+
+/// Grid dimensions of the abstract device.
+pub const GRID_W: usize = 60;
+pub const GRID_H: usize = 30;
+
+/// The fSEAD floorplan (mirrors Fig 8's arrangement qualitatively):
+/// switches central, combos adjacent, AD pblocks around the edge.
+pub const FLOORPLAN: [Region; 12] = [
+    Region { name: "RP-1", x: 0, y: 0, w: 14, h: 10 },
+    Region { name: "RP-2", x: 0, y: 10, w: 14, h: 12 },
+    Region { name: "RP-3", x: 0, y: 22, w: 14, h: 8 },
+    Region { name: "RP-4", x: 46, y: 0, w: 14, h: 10 },
+    Region { name: "RP-5", x: 46, y: 10, w: 14, h: 12 },
+    Region { name: "RP-6", x: 46, y: 22, w: 14, h: 8 },
+    Region { name: "RP-7", x: 18, y: 0, w: 24, h: 8 },
+    Region { name: "SW1", x: 24, y: 12, w: 12, h: 8 },
+    Region { name: "SW2", x: 24, y: 20, w: 8, h: 5 },
+    Region { name: "CMB1", x: 18, y: 25, w: 8, h: 5 },
+    Region { name: "CMB2", x: 27, y: 25, w: 8, h: 5 },
+    Region { name: "CMB3", x: 36, y: 25, w: 8, h: 5 },
+];
+
+/// Render the floorplan as ASCII art (for `fsead resources --floorplan`).
+pub fn render() -> String {
+    let mut grid = vec![vec![b'.'; GRID_W]; GRID_H];
+    for (i, r) in FLOORPLAN.iter().enumerate() {
+        let ch = match r.name {
+            n if n.starts_with("RP") => b'1' + (i as u8),
+            "SW1" => b'S',
+            "SW2" => b's',
+            _ => b'C',
+        };
+        for y in r.y..(r.y + r.h).min(GRID_H) {
+            for x in r.x..(r.x + r.w).min(GRID_W) {
+                grid[y][x] = ch;
+            }
+        }
+    }
+    let mut out = String::new();
+    for row in grid {
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out
+}
+
+fn find(name: &str) -> &'static Region {
+    FLOORPLAN.iter().find(|r| r.name == name).unwrap()
+}
+
+/// Manhattan distance between region centres — the routing-delay proxy that
+/// drives the paper's AXI register-slice pipelining decisions.
+pub fn centre_distance(a: &str, b: &str) -> f64 {
+    let (ax, ay) = find(a).centre();
+    let (bx, by) = find(b).centre();
+    (ax - bx).abs() + (ay - by).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_regions_overlap() {
+        for (i, a) in FLOORPLAN.iter().enumerate() {
+            for b in &FLOORPLAN[i + 1..] {
+                assert!(!a.intersects(b), "{} overlaps {}", a.name, b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn switch1_is_central() {
+        // Paper: "We place Switch-1 in the centre of the FPGA".
+        let (x, y) = find("SW1").centre();
+        assert!((x - GRID_W as f64 / 2.0).abs() < 6.0);
+        assert!((y - GRID_H as f64 / 2.0).abs() < 6.0);
+    }
+
+    #[test]
+    fn switch2_adjacent_to_switch1() {
+        assert!(centre_distance("SW1", "SW2") < 10.0);
+    }
+
+    #[test]
+    fn switch1_larger_than_switch2() {
+        // Paper: Switch-1 gets a larger area (it serves seven pblocks).
+        assert!(find("SW1").area() > find("SW2").area());
+    }
+
+    #[test]
+    fn combos_connect_to_switch2_nearer_than_to_pblocks() {
+        for c in ["CMB1", "CMB2", "CMB3"] {
+            assert!(centre_distance(c, "SW2") < centre_distance(c, "RP-1"));
+        }
+    }
+
+    #[test]
+    fn every_pblock_within_grid() {
+        for r in &FLOORPLAN {
+            assert!(r.x + r.w <= GRID_W && r.y + r.h <= GRID_H, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn render_has_expected_shape() {
+        let art = render();
+        assert_eq!(art.lines().count(), GRID_H);
+        assert!(art.contains('S') && art.contains('C'));
+    }
+}

@@ -1,0 +1,18 @@
+//! FPGA hardware models (DESIGN.md §6 substitution 1).
+//!
+//! The ZCU111 board is not available, so resource use, timing, power and
+//! reconfiguration latency are analytic models calibrated against the
+//! paper's own measurements (Tables 6–13, Figures 15–19). The *computation*
+//! itself still really executes — through the PJRT artifacts — so scores
+//! and AUC are measured, not modelled.
+
+pub mod floorplan;
+pub mod opcount;
+pub mod power;
+pub mod resources;
+pub mod roofline;
+pub mod timing;
+
+pub use opcount::op_count;
+pub use resources::{BlockResources, ResourceModel, ZCU111};
+pub use timing::FpgaTimingModel;

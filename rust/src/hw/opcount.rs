@@ -1,0 +1,130 @@
+//! Operation-count formulas (paper Table 11) and GOPS (Table 12).
+
+use crate::detectors::DetectorKind;
+
+/// Workload descriptor for the closed-form op counts.
+#[derive(Clone, Copy, Debug)]
+pub struct OpParams {
+    /// Stream length N.
+    pub n: u64,
+    /// Dimensionality d.
+    pub d: u64,
+    /// Ensemble size R.
+    pub r: u64,
+    /// CMS rows w.
+    pub w: u64,
+    /// xStream projection size k.
+    pub k: u64,
+}
+
+/// Paper Table 11 — total operations to process the stream.
+pub fn op_count(kind: DetectorKind, p: OpParams) -> u64 {
+    let OpParams { n, d, r, w, k } = p;
+    match kind {
+        // OP = N * (2Rd + 7R + 2)
+        DetectorKind::Loda => n * (2 * r * d + 7 * r + 2),
+        // OP = N * (5Rdw + 4Rd + 11Rw + R + 2)
+        DetectorKind::RsHash => n * (5 * r * d * w + 4 * r * d + 11 * r * w + r + 2),
+        // OP = N * (2Rdk + 5Rdw + 15Rw + 2R + 2)
+        DetectorKind::XStream => n * (2 * r * d * k + 5 * r * d * w + 15 * r * w + 2 * r + 2),
+    }
+}
+
+/// Giga-operations per second given a runtime.
+pub fn gops(ops: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    ops as f64 / seconds / 1.0e9
+}
+
+/// Arithmetic intensity: ops per byte moved over the stream interface
+/// (f32 in, f32 score out — matches the paper's roofline byte accounting).
+pub fn arithmetic_intensity(kind: DetectorKind, p: OpParams) -> f64 {
+    let bytes = p.n * (p.d + 1) * 4;
+    op_count(kind, p) as f64 / bytes as f64
+}
+
+/// Paper Table 12 values for side-by-side reporting (CPU, fSEAD) GOPS.
+pub fn paper_gops(kind: DetectorKind, dataset: &str) -> Option<(f64, f64)> {
+    let v = match (kind, dataset) {
+        (DetectorKind::Loda, "cardio") => (1.690, 4.748),
+        (DetectorKind::Loda, "shuttle") => (2.049, 8.789),
+        (DetectorKind::Loda, "smtp3") => (1.402, 7.924),
+        (DetectorKind::Loda, "http3") => (0.776, 4.748),
+        (DetectorKind::RsHash, "cardio") => (6.772, 20.858),
+        (DetectorKind::RsHash, "shuttle") => (6.353, 29.797),
+        (DetectorKind::RsHash, "smtp3") => (4.197, 27.533),
+        (DetectorKind::RsHash, "http3") => (4.331, 28.282),
+        (DetectorKind::XStream, "cardio") => (15.427, 57.544),
+        (DetectorKind::XStream, "shuttle") => (11.050, 67.959),
+        (DetectorKind::XStream, "smtp3") => (6.623, 47.554),
+        (DetectorKind::XStream, "http3") => (5.878, 48.551),
+        _ => return None,
+    };
+    Some(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(n: u64, d: u64, r: u64) -> OpParams {
+        OpParams { n, d, r, w: 2, k: 20 }
+    }
+
+    #[test]
+    fn loda_formula_exact() {
+        // N=10, R=3, d=4 → 10 * (2*3*4 + 7*3 + 2) = 10 * 47
+        assert_eq!(op_count(DetectorKind::Loda, p(10, 4, 3)), 470);
+    }
+
+    #[test]
+    fn rshash_formula_exact() {
+        // N=1, R=2, d=3, w=2 → 5*2*3*2 + 4*2*3 + 11*2*2 + 2 + 2 = 60+24+44+4
+        assert_eq!(op_count(DetectorKind::RsHash, p(1, 3, 2)), 132);
+    }
+
+    #[test]
+    fn xstream_formula_exact() {
+        // N=1, R=2, d=3, w=2, k=20 → 2*2*3*20 + 5*2*3*2 + 15*2*2 + 2*2 + 2
+        assert_eq!(op_count(DetectorKind::XStream, p(1, 3, 2)), 240 + 60 + 60 + 6);
+    }
+
+    #[test]
+    fn op_count_monotone_in_every_parameter() {
+        let base = p(100, 5, 10);
+        for kind in DetectorKind::ALL {
+            let b = op_count(kind, base);
+            assert!(op_count(kind, OpParams { n: 200, ..base }) > b);
+            assert!(op_count(kind, OpParams { d: 6, ..base }) > b);
+            assert!(op_count(kind, OpParams { r: 11, ..base }) > b);
+        }
+    }
+
+    #[test]
+    fn xstream_has_most_ops_per_sample() {
+        // §4.4: xStream is the most compute-intensive of the three.
+        let q = p(1, 3, 20);
+        assert!(
+            op_count(DetectorKind::XStream, q) > op_count(DetectorKind::RsHash, q)
+                && op_count(DetectorKind::XStream, q) > op_count(DetectorKind::Loda, q)
+        );
+    }
+
+    #[test]
+    fn gops_of_known_quantities() {
+        assert!((gops(2_000_000_000, 2.0) - 1.0).abs() < 1e-12);
+        assert_eq!(gops(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn paper_gops_table_complete() {
+        for kind in DetectorKind::ALL {
+            for ds in ["cardio", "shuttle", "smtp3", "http3"] {
+                let (cpu, fpga) = paper_gops(kind, ds).unwrap();
+                assert!(fpga > cpu, "{kind:?}/{ds}: fSEAD must beat CPU in Table 12");
+            }
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! FPGA resource model: device totals, the paper's floorplanned block
+//! partition (Table 6) and the per-detector-instance costs (Table 7).
+
+use crate::detectors::DetectorKind;
+
+/// Absolute resource vector.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub lut: f64,
+    pub dsp: f64,
+    pub bram: f64,
+    pub ff: f64,
+}
+
+impl Resources {
+    pub const fn new(lut: f64, dsp: f64, bram: f64, ff: f64) -> Self {
+        Resources { lut, dsp, bram, ff }
+    }
+
+    pub fn scale(&self, k: f64) -> Resources {
+        Resources::new(self.lut * k, self.dsp * k, self.bram * k, self.ff * k)
+    }
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources::new(self.lut + o.lut, self.dsp + o.dsp, self.bram + o.bram, self.ff + o.ff)
+    }
+
+    /// Does `self` fit within `cap`?
+    pub fn fits(&self, cap: &Resources) -> bool {
+        self.lut <= cap.lut && self.dsp <= cap.dsp && self.bram <= cap.bram && self.ff <= cap.ff
+    }
+
+    /// Utilisation of the binding resource against `cap` (0..1+).
+    pub fn max_utilisation(&self, cap: &Resources) -> f64 {
+        [
+            self.lut / cap.lut,
+            self.dsp / cap.dsp,
+            self.bram / cap.bram,
+            self.ff / cap.ff,
+        ]
+        .into_iter()
+        .fold(0.0, f64::max)
+    }
+}
+
+/// Zynq UltraScale+ XCZU28DR (ZCU111) device totals.
+pub const ZCU111: Resources = Resources::new(425_280.0, 4_272.0, 1_080.0, 850_560.0);
+
+/// One floorplanned block: name + % of device resources (paper Table 6).
+#[derive(Clone, Copy, Debug)]
+pub struct BlockResources {
+    pub name: &'static str,
+    /// Percent of device LUT/DSP/BRAM/FF.
+    pub lut_pct: f64,
+    pub dsp_pct: f64,
+    pub bram_pct: f64,
+    pub ff_pct: f64,
+}
+
+impl BlockResources {
+    pub fn absolute(&self) -> Resources {
+        Resources::new(
+            ZCU111.lut * self.lut_pct / 100.0,
+            ZCU111.dsp * self.dsp_pct / 100.0,
+            ZCU111.bram * self.bram_pct / 100.0,
+            ZCU111.ff * self.ff_pct / 100.0,
+        )
+    }
+}
+
+/// Paper Table 6: resource partition of the fSEAD floorplan.
+pub const TABLE6_BLOCKS: [BlockResources; 16] = [
+    BlockResources { name: "RP-1", lut_pct: 6.73, dsp_pct: 4.49, bram_pct: 6.67, ff_pct: 6.73 },
+    BlockResources { name: "RP-2", lut_pct: 8.57, dsp_pct: 7.54, bram_pct: 8.52, ff_pct: 8.57 },
+    BlockResources { name: "RP-3", lut_pct: 6.24, dsp_pct: 6.46, bram_pct: 6.39, ff_pct: 6.24 },
+    BlockResources { name: "RP-4", lut_pct: 6.72, dsp_pct: 4.49, bram_pct: 6.67, ff_pct: 6.72 },
+    BlockResources { name: "RP-5", lut_pct: 6.24, dsp_pct: 6.46, bram_pct: 6.39, ff_pct: 6.24 },
+    BlockResources { name: "RP-6", lut_pct: 8.74, dsp_pct: 8.24, bram_pct: 8.15, ff_pct: 8.74 },
+    BlockResources { name: "RP-7", lut_pct: 7.32, dsp_pct: 7.30, bram_pct: 7.22, ff_pct: 7.32 },
+    BlockResources { name: "COMBO1", lut_pct: 0.72, dsp_pct: 0.56, bram_pct: 0.74, ff_pct: 0.72 },
+    BlockResources { name: "COMBO2", lut_pct: 0.59, dsp_pct: 0.84, bram_pct: 0.83, ff_pct: 0.59 },
+    BlockResources { name: "COMBO3", lut_pct: 0.59, dsp_pct: 0.84, bram_pct: 0.83, ff_pct: 0.59 },
+    BlockResources { name: "Switch-1", lut_pct: 3.46, dsp_pct: 4.49, bram_pct: 2.96, ff_pct: 3.46 },
+    BlockResources { name: "Switch-2", lut_pct: 1.81, dsp_pct: 0.98, bram_pct: 0.0, ff_pct: 1.82 },
+    BlockResources { name: "DMA", lut_pct: 2.25, dsp_pct: 0.0, bram_pct: 1.30, ff_pct: 0.48 },
+    BlockResources { name: "DFX-Decoupler", lut_pct: 0.04, dsp_pct: 0.0, bram_pct: 0.0, ff_pct: 0.008 },
+    BlockResources { name: "AXI-Interconnect", lut_pct: 0.67, dsp_pct: 0.0, bram_pct: 0.0, ff_pct: 0.58 },
+    BlockResources { name: "Other-static", lut_pct: 2.41, dsp_pct: 0.0, bram_pct: 0.0, ff_pct: 1.61 },
+];
+
+/// Paper Table 7: smallest-pblock (RP-3) capacity used for sizing.
+pub const RP3_CAPACITY: Resources = Resources::new(26_480.0, 276.0, 69.0, 52_960.0);
+
+/// Paper Table 7: resources of a full-size per-pblock ensemble.
+pub fn pblock_ensemble_resources(kind: DetectorKind) -> (usize, Resources) {
+    match kind {
+        DetectorKind::Loda => (35, Resources::new(16_783.0, 122.0, 54.5, 11_478.0)),
+        DetectorKind::RsHash => (25, Resources::new(23_732.0, 68.0, 50.0, 14_012.0)),
+        DetectorKind::XStream => (20, Resources::new(23_908.0, 80.0, 60.0, 12_617.0)),
+    }
+}
+
+/// Per-sub-detector marginal cost (Table 7 aggregate / R).
+pub fn per_instance_resources(kind: DetectorKind) -> Resources {
+    let (r, total) = pblock_ensemble_resources(kind);
+    total.scale(1.0 / r as f64)
+}
+
+/// Resource model: answers "how many sub-detectors fit in this pblock?" and
+/// tracks the fabric's total utilisation (used by Table 6/7 experiments and
+/// the Fig 17 scalability sweep).
+#[derive(Clone, Debug)]
+pub struct ResourceModel;
+
+impl ResourceModel {
+    /// Maximum ensemble size of `kind` fitting in `cap` (paper §4.3).
+    pub fn max_ensemble(kind: DetectorKind, cap: &Resources) -> usize {
+        let unit = per_instance_resources(kind);
+        let mut r = 0usize;
+        loop {
+            let next = unit.scale((r + 1) as f64);
+            if !next.fits(cap) {
+                return r;
+            }
+            r += 1;
+            if r > 100_000 {
+                return r; // degenerate caps
+            }
+        }
+    }
+
+    /// Device-level utilisation summary for a set of blocks.
+    pub fn total_pct(blocks: &[BlockResources]) -> (f64, f64, f64, f64) {
+        let mut t = (0.0, 0.0, 0.0, 0.0);
+        for b in blocks {
+            t.0 += b.lut_pct;
+            t.1 += b.dsp_pct;
+            t.2 += b.bram_pct;
+            t.3 += b.ff_pct;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_totals_match_paper() {
+        // Paper total row: 62.5% LUT, 52.69% DSP, 56.67% BRAM, 60.42% FF.
+        let (lut, dsp, bram, ff) = ResourceModel::total_pct(&TABLE6_BLOCKS);
+        // LUT tolerance is wider: the paper's per-row figures sum to 63.1
+        // against its own 62.5 total (rounding in the published table).
+        assert!((lut - 62.5).abs() < 0.7, "lut={lut}");
+        assert!((dsp - 52.69).abs() < 0.4, "dsp={dsp}");
+        assert!((bram - 56.67).abs() < 0.4, "bram={bram}");
+        assert!((ff - 60.42).abs() < 0.4, "ff={ff}");
+    }
+
+    #[test]
+    fn paper_ensembles_fit_rp3() {
+        // Paper §4.3: 35 Loda / 25 RS-Hash / 20 xStream fit the smallest pblock.
+        for kind in DetectorKind::ALL {
+            let (r, total) = pblock_ensemble_resources(kind);
+            assert!(total.fits(&RP3_CAPACITY), "{kind:?}");
+            let max = ResourceModel::max_ensemble(kind, &RP3_CAPACITY);
+            assert!(max >= r, "{kind:?}: model says only {max} fit");
+            // The paper sized these to ~80-90% utilisation; one-few more may
+            // fit the linear model, but not 25% more.
+            assert!(max <= r + r / 4 + 1, "{kind:?}: model says {max} fit");
+        }
+    }
+
+    #[test]
+    fn utilisation_of_full_ensembles_is_80_to_95_pct() {
+        // Paper §4.4: "80%-90% logic use of all seven partial blocks".
+        for kind in DetectorKind::ALL {
+            let (_, total) = pblock_ensemble_resources(kind);
+            let u = total.max_utilisation(&RP3_CAPACITY);
+            assert!((0.7..=0.95).contains(&u), "{kind:?}: {u}");
+        }
+    }
+
+    #[test]
+    fn fits_and_scale_behave() {
+        let a = Resources::new(10.0, 1.0, 1.0, 10.0);
+        assert!(a.fits(&a));
+        assert!(!a.scale(1.01).fits(&a));
+        assert_eq!(a.scale(2.0).lut, 20.0);
+        assert_eq!(a.add(&a).ff, 20.0);
+    }
+
+    #[test]
+    fn rp3_is_smallest_ad_pblock() {
+        let rp3 = TABLE6_BLOCKS[2];
+        for b in &TABLE6_BLOCKS[..7] {
+            assert!(rp3.lut_pct <= b.lut_pct);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! Roofline models (paper Figures 15–16).
+//!
+//! CPU (Fig 15): i7-10700F — peak f32 throughput from 8 cores × AVX2 FMA,
+//! DRAM bandwidth from the paper's Intel Advisor run. FPGA (Fig 16): the
+//! paper derives a 218.3 GOP/s compute bound for the whole ZCU111 and a
+//! 110.4 GOP/s bound for the fSEAD partial-block region, with 13.4 GB/s
+//! off-chip memory bandwidth.
+
+/// A machine roofline: performance = min(peak, AI × bandwidth).
+#[derive(Clone, Copy, Debug)]
+pub struct Roofline {
+    pub name: &'static str,
+    /// Peak compute (GOP/s).
+    pub peak_gops: f64,
+    /// Memory bandwidth (GB/s).
+    pub mem_bw_gbs: f64,
+}
+
+/// Attainable performance at arithmetic intensity `ai` (ops/byte).
+impl Roofline {
+    pub fn attainable(&self, ai: f64) -> f64 {
+        (ai * self.mem_bw_gbs).min(self.peak_gops)
+    }
+
+    /// The ridge point: AI above which the machine is compute-bound.
+    pub fn ridge(&self) -> f64 {
+        self.peak_gops / self.mem_bw_gbs
+    }
+}
+
+/// Intel i7-10700F (paper Fig 15): 8 cores × 2.9 GHz × 16 f32 FLOP/cycle.
+pub const CPU_ROOFLINE: Roofline =
+    Roofline { name: "i7-10700F", peak_gops: 371.2, mem_bw_gbs: 45.8 };
+
+/// Whole-ZCU111 compute bound (paper: 218.3 GOP/s, 13.4 GB/s PL DDR).
+pub const FPGA_ROOFLINE: Roofline =
+    Roofline { name: "ZCU111", peak_gops: 218.3, mem_bw_gbs: 13.4 };
+
+/// fSEAD partial-block region bound (paper: 110.4 GOP/s).
+pub const FSEAD_ROOFLINE: Roofline =
+    Roofline { name: "fSEAD pblocks", peak_gops: 110.4, mem_bw_gbs: 13.4 };
+
+/// One measured application point on a roofline chart.
+#[derive(Clone, Debug)]
+pub struct RooflinePoint {
+    pub label: String,
+    pub ai: f64,
+    pub gops: f64,
+}
+
+impl RooflinePoint {
+    /// Fraction of the attainable roof achieved at this AI.
+    pub fn efficiency(&self, roof: &Roofline) -> f64 {
+        self.gops / roof.attainable(self.ai)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_bound_below_ridge() {
+        let r = FPGA_ROOFLINE;
+        let ai = r.ridge() / 2.0;
+        assert!((r.attainable(ai) - ai * r.mem_bw_gbs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_bound_above_ridge() {
+        let r = FPGA_ROOFLINE;
+        assert_eq!(r.attainable(r.ridge() * 10.0), r.peak_gops);
+    }
+
+    #[test]
+    fn fsead_region_is_subset_of_device() {
+        assert!(FSEAD_ROOFLINE.peak_gops < FPGA_ROOFLINE.peak_gops);
+        // Paper: 110.4 ≈ 218.3 × (fSEAD share of resources ≈ 61.57% × 82%).
+        let ratio = FSEAD_ROOFLINE.peak_gops / FPGA_ROOFLINE.peak_gops;
+        assert!((0.4..0.6).contains(&ratio));
+    }
+
+    #[test]
+    fn paper_best_point_is_under_the_roof() {
+        // xStream/Shuttle: 67.959 GOPS — below the 110.4 fSEAD bound.
+        let p = RooflinePoint { label: "xstream/shuttle".into(), ai: 20.0, gops: 67.959 };
+        assert!(p.efficiency(&FSEAD_ROOFLINE) <= 1.0);
+        assert!(p.efficiency(&FSEAD_ROOFLINE) > 0.5, "paper's own point is >50% of roof");
+    }
+
+    #[test]
+    fn cpu_peak_from_microarchitecture() {
+        // 8 cores × 2.9 GHz × (2 FMA ports × 8 f32) = 371.2 GOP/s.
+        assert!((CPU_ROOFLINE.peak_gops - 8.0 * 2.9 * 16.0).abs() < 1e-9);
+    }
+}

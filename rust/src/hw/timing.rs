@@ -1,0 +1,159 @@
+//! FPGA execution-time model (paper Tables 8–10, Figures 12–14).
+//!
+//! The paper measures end-to-end time "from the start of the input DMA
+//! transfer to when all data is obtained from the output DMA" on a PYNQ
+//! host. Back-fitting their numbers shows two regimes:
+//!
+//! - Loda / RS-Hash at every dataset are **transfer-bound**: effective PYNQ
+//!   DMA bandwidth ≈ 30–50 MB/s (Linux host overhead, not AXI limits),
+//!   e.g. HTTP-3: 6.8 MB / 227 ms ≈ 30 MB/s for both detectors.
+//! - xStream at small d is **compute-bound**: HTTP-3 costs
+//!   0.52 µs/sample ≈ 98 cycles @188 MHz — the K=20 projection/Jenkins
+//!   drain — vs 75-cycle transfer time.
+//!
+//! The model is `t = t_cfg + max(t_dma, t_compute)` with
+//! `t_dma = N·d·4 B / BW_eff` and `t_compute = N·(d + c_det)/f_clk`.
+//! Sub-detector parallelism means R does not appear — that is the paper's
+//! headline claim (latency flat in R on FPGA, linear on CPU).
+
+use crate::defaults::FPGA_CLOCK_HZ;
+use crate::detectors::DetectorKind;
+
+/// Calibrated timing model.
+#[derive(Clone, Copy, Debug)]
+pub struct FpgaTimingModel {
+    /// Fixed PYNQ/driver overhead per run (paper Fig 20: 0.80 ms).
+    pub overhead_s: f64,
+    /// Effective host↔fabric DMA bandwidth (bytes/s).
+    pub dma_bw: f64,
+    /// FPGA clock.
+    pub clock_hz: f64,
+}
+
+impl Default for FpgaTimingModel {
+    fn default() -> Self {
+        FpgaTimingModel { overhead_s: 0.8e-3, dma_bw: 33.0e6, clock_hz: FPGA_CLOCK_HZ }
+    }
+}
+
+impl FpgaTimingModel {
+    /// Extra pipeline cycles per sample beyond the d-cycle windower
+    /// (per-detector drain; xStream's K-wide projection + Jenkins dominates).
+    pub fn extra_cycles(kind: DetectorKind) -> f64 {
+        match kind {
+            DetectorKind::Loda => 0.0,
+            DetectorKind::RsHash => 4.0,
+            DetectorKind::XStream => 95.0,
+        }
+    }
+
+    /// Modelled end-to-end execution time for a stream of `n` samples of
+    /// dimension `d`. Independent of ensemble size while the ensemble fits
+    /// the fabric (spatial parallelism).
+    pub fn exec_time_s(&self, kind: DetectorKind, n: usize, d: usize) -> f64 {
+        let t_dma = (n as f64) * (d as f64) * 4.0 / self.dma_bw;
+        let cycles = d as f64 + Self::extra_cycles(kind);
+        let t_compute = (n as f64) * cycles / self.clock_hz;
+        self.overhead_s + t_dma.max(t_compute)
+    }
+
+    /// Paper-reported FPGA execution times (ms) for side-by-side reporting.
+    pub fn paper_exec_ms(kind: DetectorKind, dataset: &str) -> Option<f64> {
+        let v = match (kind, dataset) {
+            (DetectorKind::Loda, "cardio") => 4.63,
+            (DetectorKind::Loda, "shuttle") => 34.23,
+            (DetectorKind::Loda, "smtp3") => 39.31,
+            (DetectorKind::Loda, "http3") => 228.25,
+            (DetectorKind::RsHash, "cardio") => 4.87,
+            (DetectorKind::RsHash, "shuttle") => 35.80,
+            (DetectorKind::RsHash, "smtp3") => 39.63,
+            (DetectorKind::RsHash, "http3") => 228.29,
+            (DetectorKind::XStream, "cardio") => 4.82,
+            (DetectorKind::XStream, "shuttle") => 40.62,
+            (DetectorKind::XStream, "smtp3") => 50.99,
+            (DetectorKind::XStream, "http3") => 297.85,
+            _ => return None,
+        };
+        Some(v)
+    }
+
+    /// Paper-reported CPU execution times (ms) — the GCC 4-thread baseline.
+    pub fn paper_cpu_ms(kind: DetectorKind, dataset: &str) -> Option<f64> {
+        let v = match (kind, dataset) {
+            (DetectorKind::Loda, "cardio") => 13.0,
+            (DetectorKind::Loda, "shuttle") => 147.0,
+            (DetectorKind::Loda, "smtp3") => 222.0,
+            (DetectorKind::Loda, "http3") => 1396.0,
+            (DetectorKind::RsHash, "cardio") => 15.0,
+            (DetectorKind::RsHash, "shuttle") => 168.0,
+            (DetectorKind::RsHash, "smtp3") => 260.0,
+            (DetectorKind::RsHash, "http3") => 1490.0,
+            (DetectorKind::XStream, "cardio") => 18.0,
+            (DetectorKind::XStream, "shuttle") => 250.0,
+            (DetectorKind::XStream, "smtp3") => 366.0,
+            (DetectorKind::XStream, "http3") => 2460.0,
+            _ => return None,
+        };
+        Some(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::PROFILES;
+
+    #[test]
+    fn model_tracks_paper_fpga_times_within_2x() {
+        let m = FpgaTimingModel::default();
+        for kind in DetectorKind::ALL {
+            for p in &PROFILES {
+                let model_ms = m.exec_time_s(kind, p.n, p.d) * 1e3;
+                let paper_ms = FpgaTimingModel::paper_exec_ms(kind, p.name).unwrap();
+                let ratio = model_ms / paper_ms;
+                assert!(
+                    (0.5..=2.0).contains(&ratio),
+                    "{kind:?}/{}: model {model_ms:.2} ms vs paper {paper_ms:.2} ms",
+                    p.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn xstream_slower_than_loda_at_small_d() {
+        let m = FpgaTimingModel::default();
+        let tx = m.exec_time_s(DetectorKind::XStream, 100_000, 3);
+        let tl = m.exec_time_s(DetectorKind::Loda, 100_000, 3);
+        assert!(tx > tl);
+    }
+
+    #[test]
+    fn time_independent_of_ensemble_size_by_construction() {
+        // The model has no R argument — spatial parallelism; this test
+        // documents that invariant.
+        let m = FpgaTimingModel::default();
+        let t = m.exec_time_s(DetectorKind::Loda, 1000, 5);
+        assert!(t > m.overhead_s);
+    }
+
+    #[test]
+    fn paper_speedups_reproduced_by_model_and_paper_cpu() {
+        // Paper speed-up range: 2.81×–8.26×, growing with dataset size.
+        for kind in DetectorKind::ALL {
+            let small = FpgaTimingModel::paper_cpu_ms(kind, "cardio").unwrap()
+                / FpgaTimingModel::paper_exec_ms(kind, "cardio").unwrap();
+            let large = FpgaTimingModel::paper_cpu_ms(kind, "http3").unwrap()
+                / FpgaTimingModel::paper_exec_ms(kind, "http3").unwrap();
+            assert!(large > small, "{kind:?}: speed-up should grow with N");
+            assert!((2.5..=9.0).contains(&small) || (2.5..=9.0).contains(&large));
+        }
+    }
+
+    #[test]
+    fn overhead_dominates_tiny_streams() {
+        let m = FpgaTimingModel::default();
+        let t = m.exec_time_s(DetectorKind::Loda, 10, 3);
+        assert!(t < 1.0e-3 + m.overhead_s);
+    }
+}

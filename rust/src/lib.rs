@@ -1,0 +1,55 @@
+//! # fSEAD — composable streaming ensemble anomaly detection
+//!
+//! Reproduction of "fSEAD: a Composable FPGA-based Streaming Ensemble
+//! Anomaly Detection Library" (Lou, Boland, Leong — ACM TRETS 2024) as a
+//! three-layer rust + JAX + Pallas system. See `DESIGN.md` for the full
+//! FPGA → software mapping and the experiment index.
+//!
+//! Layer map:
+//! - **L1/L2** (build time, python): Pallas detector front-end kernels and
+//!   the JAX streaming models, AOT-lowered to `artifacts/*.hlo.txt`.
+//! - **L3** (this crate): the composable fabric — AXI-stream switches,
+//!   reconfigurable pblocks, DMA endpoints, combo blocks, the DFX manager —
+//!   plus the CPU baseline detectors, dataset substrate, hardware models
+//!   and the experiment harness that regenerates every paper table/figure.
+//!
+//! The PJRT "FPGA device" is confined to a single service thread
+//! ([`runtime`]); pblocks talk to it via channels, so python never sits on
+//! the request path and `xla`'s `!Send` types never cross threads.
+
+pub mod combine;
+pub mod config;
+pub mod data;
+pub mod detectors;
+pub mod ensemble;
+pub mod exp;
+pub mod fabric;
+pub mod hw;
+pub mod metrics;
+pub mod runtime;
+pub mod testutil;
+
+/// Paper Table 4 hyper-parameters (shared with `python/compile/manifest.py`).
+pub mod defaults {
+    /// Sliding-window length W.
+    pub const WINDOW: usize = 128;
+    /// Loda histogram bins.
+    pub const LODA_BINS: usize = 20;
+    /// CMS rows w (hash functions per sketch).
+    pub const CMS_ROWS: usize = 2;
+    /// CMS table width (power of two).
+    pub const CMS_MOD: usize = 128;
+    /// xStream projection size K.
+    pub const XSTREAM_K: usize = 20;
+    /// Streaming chunk size C per executable invocation.
+    pub const CHUNK: usize = 256;
+    /// Paper Table 7: sub-detectors per pblock (sized for RP-3).
+    pub const PBLOCK_R_LODA: usize = 35;
+    pub const PBLOCK_R_RSHASH: usize = 25;
+    pub const PBLOCK_R_XSTREAM: usize = 20;
+    /// Number of detector pblocks / combo pblocks in the prototype fabric.
+    pub const NUM_AD_PBLOCKS: usize = 7;
+    pub const NUM_COMBO_PBLOCKS: usize = 3;
+    /// FPGA clock (paper §4.4).
+    pub const FPGA_CLOCK_HZ: f64 = 188.0e6;
+}

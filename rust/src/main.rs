@@ -1,0 +1,14 @@
+//! fSEAD CLI — the leader entrypoint. Subcommands are filled in by the
+//! experiment harness (`fsead exp …`), the runner (`fsead run …`) and the
+//! resource/reconfiguration inspectors.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match fsead::exp::cli_main(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

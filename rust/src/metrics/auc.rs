@@ -1,0 +1,166 @@
+//! ROC-AUC via the Mann–Whitney U statistic (rank-based, tie-aware) plus the
+//! paper's score post-processing: normalisation to [0,1) and thresholding by
+//! the known contamination rate (§4.1).
+
+/// Area under the ROC curve for `scores` against binary `truth`
+/// (true = anomaly). Tie-aware: tied scores get average ranks.
+/// Returns 0.5 when either class is empty.
+pub fn auc_roc(scores: &[f32], truth: &[bool]) -> f64 {
+    assert_eq!(scores.len(), truth.len());
+    let n_pos = truth.iter().filter(|&&t| t).count();
+    let n_neg = truth.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // Average ranks over tie groups; accumulate rank-sum of positives.
+    let mut rank_sum_pos = 0f64;
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        // 1-based ranks i+1 ..= j+1 → average
+        let avg_rank = (i + 1 + j + 1) as f64 / 2.0;
+        for &idx in &order[i..=j] {
+            if truth[idx] {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let u = rank_sum_pos - (n_pos as f64 * (n_pos as f64 + 1.0)) / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Min-max normalise scores to [0, 1) (paper §4.1). Constant vectors map to 0.
+pub fn normalize_scores(scores: &[f32]) -> Vec<f32> {
+    let lo = scores.iter().copied().fold(f32::INFINITY, f32::min);
+    let hi = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !(hi > lo) {
+        return vec![0.0; scores.len()];
+    }
+    let span = (hi - lo) * (1.0 + 1e-6); // keep strictly < 1
+    scores.iter().map(|&s| (s - lo) / span).collect()
+}
+
+/// Binarise scores by contamination rate: the top `contamination` fraction
+/// becomes label 1 (paper §4.1 — "the anomaly percentage ... the users know
+/// in advance").
+pub fn labels_from_scores(scores: &[f32], contamination: f64) -> Vec<bool> {
+    if scores.is_empty() {
+        return vec![];
+    }
+    let k = ((scores.len() as f64) * contamination).round() as usize;
+    let k = k.clamp(0, scores.len());
+    if k == 0 {
+        return vec![false; scores.len()];
+    }
+    let mut sorted: Vec<f32> = scores.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    let threshold = sorted[k - 1];
+    scores.iter().map(|&s| s >= threshold).collect()
+}
+
+/// AUC of binary labels against truth — used for the paper's AUC-L columns.
+pub fn auc_labels(labels: &[bool], truth: &[bool]) -> f64 {
+    let as_scores: Vec<f32> = labels.iter().map(|&l| if l { 1.0 } else { 0.0 }).collect();
+    auc_roc(&as_scores, truth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_gives_one() {
+        let scores = [0.1, 0.2, 0.3, 0.9, 0.95];
+        let truth = [false, false, false, true, true];
+        assert!((auc_roc(&scores, &truth) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverted_separation_gives_zero() {
+        let scores = [0.9, 0.8, 0.1, 0.2];
+        let truth = [false, false, true, true];
+        assert!(auc_roc(&scores, &truth).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetric_interleave_is_half() {
+        // Positive ranks {1,4}, negative ranks {2,3} → U = 2 → AUC = 0.5.
+        let scores = [0.1, 0.2, 0.3, 0.4];
+        let truth = [true, false, false, true];
+        assert!((auc_roc(&scores, &truth) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mostly_inverted_interleave_is_quarter() {
+        // Positive ranks {1,3} → U = 1 → AUC = 0.25.
+        let scores = [0.1, 0.2, 0.3, 0.4];
+        let truth = [true, false, true, false];
+        assert!((auc_roc(&scores, &truth) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_ties_is_half() {
+        let scores = [0.5; 6];
+        let truth = [true, false, true, false, false, true];
+        assert!((auc_roc(&scores, &truth) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_class_returns_half() {
+        assert_eq!(auc_roc(&[1.0, 2.0], &[false, false]), 0.5);
+        assert_eq!(auc_roc(&[1.0, 2.0], &[true, true]), 0.5);
+    }
+
+    #[test]
+    fn auc_invariant_under_monotone_transform() {
+        let scores = [0.3f32, 1.5, -0.2, 0.9, 2.4, 0.01];
+        let truth = [false, true, false, false, true, false];
+        let a = auc_roc(&scores, &truth);
+        let transformed: Vec<f32> = scores.iter().map(|&s| (2.0 * s).exp()).collect();
+        let b = auc_roc(&transformed, &truth);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_maps_into_unit_interval() {
+        let n = normalize_scores(&[3.0, -1.0, 5.0, 0.0]);
+        assert!(n.iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert_eq!(n[1], 0.0);
+        assert!(n[2] > 0.999);
+    }
+
+    #[test]
+    fn normalize_constant_is_zero() {
+        assert_eq!(normalize_scores(&[2.0, 2.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn labels_pick_top_contamination_fraction() {
+        let scores = [0.1, 0.9, 0.2, 0.8, 0.3, 0.7, 0.4, 0.6, 0.5, 0.0];
+        let labels = labels_from_scores(&scores, 0.2);
+        let n_pos = labels.iter().filter(|&&l| l).count();
+        assert_eq!(n_pos, 2);
+        assert!(labels[1] && labels[3]);
+    }
+
+    #[test]
+    fn zero_contamination_gives_no_labels() {
+        assert!(labels_from_scores(&[1.0, 2.0, 3.0], 0.0).iter().all(|&l| !l));
+    }
+
+    #[test]
+    fn label_auc_matches_balanced_accuracy_identity() {
+        // For binary predictions AUC = (TPR + TNR) / 2.
+        let labels = [true, true, false, false, true, false];
+        let truth = [true, false, false, false, true, true];
+        let tpr = 2.0 / 3.0;
+        let tnr = 2.0 / 3.0;
+        assert!((auc_labels(&labels, &truth) - (tpr + tnr) / 2.0).abs() < 1e-12);
+    }
+}

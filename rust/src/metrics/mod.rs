@@ -1,0 +1,8 @@
+//! Evaluation metrics: ROC-AUC (the paper's standard metric, §4.1),
+//! score normalisation, thresholding to labels, and summary statistics.
+
+pub mod auc;
+pub mod stats;
+
+pub use auc::{auc_roc, labels_from_scores, normalize_scores};
+pub use stats::{mean, variance, OnlineStats};

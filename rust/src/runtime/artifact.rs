@@ -1,0 +1,216 @@
+//! Artifact registry: parses `artifacts/manifest.txt` (written by
+//! `python/compile/aot.py`) and resolves detector/bypass/combo variants to
+//! their HLO-text files. One artifact ≙ one "RM bitstream" of the paper.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::detectors::DetectorKind;
+
+/// Metadata of one AOT artifact (mirrors `manifest.Variant` in python).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// loda | rshash | xstream | bypass | combo
+    pub kind: String,
+    pub d: usize,
+    pub r: usize,
+    pub chunk: usize,
+    pub window: usize,
+    pub bins: usize,
+    pub w: usize,
+    pub modulus: usize,
+    pub k: usize,
+    /// avg | max | wavg | or | vote | "-"
+    pub combo: String,
+    pub quantize: bool,
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    pub fn detector_kind(&self) -> Option<DetectorKind> {
+        DetectorKind::parse(&self.kind)
+    }
+
+    fn parse_line(line: &str) -> Result<ArtifactMeta> {
+        let mut kv = BTreeMap::new();
+        for tok in line.split_whitespace() {
+            let Some((k, v)) = tok.split_once('=') else {
+                bail!("bad manifest token {tok:?}");
+            };
+            kv.insert(k.to_string(), v.to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).with_context(|| format!("manifest line missing key {k:?}: {line}"))
+        };
+        let num = |k: &str| -> Result<usize> {
+            get(k)?.parse::<usize>().with_context(|| format!("bad {k} in manifest: {line}"))
+        };
+        Ok(ArtifactMeta {
+            name: get("name")?.clone(),
+            kind: get("kind")?.clone(),
+            d: num("d")?,
+            r: num("r")?,
+            chunk: num("chunk")?,
+            window: num("window")?,
+            bins: num("bins")?,
+            w: num("w")?,
+            modulus: num("mod")?,
+            k: num("k")?,
+            combo: get("combo")?.clone(),
+            quantize: get("quantize")? == "1",
+            file: get("file")?.clone(),
+        })
+    }
+}
+
+/// All artifacts in a directory.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &str) -> Result<Registry> {
+        let dir = PathBuf::from(dir);
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("reading {} — run `make artifacts` first", manifest.display())
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: PathBuf, text: &str) -> Result<Registry> {
+        let mut by_name = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let meta = ArtifactMeta::parse_line(line)?;
+            by_name.insert(meta.name.clone(), meta);
+        }
+        Ok(Registry { dir, by_name })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name)
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Does the HLO file actually exist on disk?
+    pub fn available(&self, meta: &ArtifactMeta) -> bool {
+        self.path(meta).exists()
+    }
+
+    /// Resolve a detector variant.
+    pub fn find_detector(
+        &self,
+        kind: DetectorKind,
+        d: usize,
+        r: usize,
+        quantize: bool,
+    ) -> Result<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .find(|m| {
+                m.kind == kind.as_str() && m.d == d && m.r == r && m.quantize == quantize
+            })
+            .with_context(|| {
+                format!(
+                    "no artifact for {} d={d} r={r} quantize={quantize}; available: [{}]",
+                    kind.as_str(),
+                    self.names().collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+
+    pub fn find_bypass(&self, d: usize) -> Result<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .find(|m| m.kind == "bypass" && m.d == d)
+            .with_context(|| format!("no bypass artifact for d={d}"))
+    }
+
+    pub fn find_combo(&self, method: &str) -> Result<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .find(|m| m.kind == "combo" && m.combo == method)
+            .with_context(|| format!("no combo artifact for method {method:?}"))
+    }
+
+    /// Path of `manifest.txt` relative checks for staleness, used by `make`.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+name=loda_d3_r4 kind=loda d=3 r=4 chunk=256 window=128 bins=20 w=2 mod=128 k=20 combo=- quantize=1 file=loda_d3_r4.hlo.txt
+name=bypass_d3 kind=bypass d=3 r=0 chunk=256 window=128 bins=20 w=2 mod=128 k=20 combo=- quantize=1 file=bypass_d3.hlo.txt
+name=combo_avg kind=combo d=0 r=0 chunk=256 window=128 bins=20 w=2 mod=128 k=20 combo=avg quantize=1 file=combo_avg.hlo.txt
+";
+
+    #[test]
+    fn parses_sample_manifest() {
+        let reg = Registry::parse(PathBuf::from("/tmp"), SAMPLE).unwrap();
+        assert_eq!(reg.len(), 3);
+        let loda = reg.find_detector(DetectorKind::Loda, 3, 4, true).unwrap();
+        assert_eq!(loda.window, 128);
+        assert_eq!(loda.file, "loda_d3_r4.hlo.txt");
+        assert!(reg.find_bypass(3).is_ok());
+        assert!(reg.find_combo("avg").is_ok());
+    }
+
+    #[test]
+    fn missing_variant_lists_alternatives() {
+        let reg = Registry::parse(PathBuf::from("/tmp"), SAMPLE).unwrap();
+        let err = reg.find_detector(DetectorKind::XStream, 3, 4, true).unwrap_err().to_string();
+        assert!(err.contains("loda_d3_r4"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Registry::parse(PathBuf::from("/tmp"), "name=x garbage\n").is_err());
+        assert!(Registry::parse(PathBuf::from("/tmp"), "kind=loda\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_built() {
+        // Integration sanity: if `make artifacts` has run, the real manifest
+        // must parse and contain the full-size pblock variants.
+        if let Ok(reg) = Registry::load("artifacts") {
+            for kind in DetectorKind::ALL {
+                for d in [3usize, 9, 21] {
+                    assert!(
+                        reg.find_detector(kind, d, kind.pblock_r(), true).is_ok(),
+                        "{kind:?} d={d}"
+                    );
+                }
+            }
+        }
+    }
+}

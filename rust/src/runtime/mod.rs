@@ -1,0 +1,39 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the CPU PJRT client from a single device-service thread.
+//! See `service.rs` for why PJRT is confined to one thread.
+
+pub mod artifact;
+pub mod service;
+
+pub use artifact::{ArtifactMeta, Registry};
+pub use service::{DetectorParams, InstanceId, Runtime, RuntimeHandle, RuntimeStats};
+
+use crate::config::DetectorHyper;
+use crate::detectors::params::{LodaParams, RsHashParams, XStreamParams};
+use crate::detectors::DetectorKind;
+
+/// Generate coordinator-owned parameters for a detector instance — the same
+/// values the CPU baseline uses, enabling exact parity runs.
+pub fn generate_params(
+    kind: DetectorKind,
+    seed: u64,
+    r: usize,
+    d: usize,
+    hyper: &DetectorHyper,
+    warmup: &[f32],
+) -> DetectorParams {
+    match kind {
+        DetectorKind::Loda => DetectorParams::Loda(LodaParams::generate(seed, r, d, warmup)),
+        DetectorKind::RsHash => {
+            DetectorParams::RsHash(RsHashParams::generate(seed, r, d, hyper.window, warmup))
+        }
+        DetectorKind::XStream => DetectorParams::XStream(XStreamParams::generate(
+            seed,
+            r,
+            d,
+            hyper.k,
+            hyper.w,
+            warmup,
+        )),
+    }
+}

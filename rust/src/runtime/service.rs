@@ -1,0 +1,473 @@
+//! The PJRT device service: a single thread owning the CPU PJRT client,
+//! compiled executables and per-instance detector state.
+//!
+//! `xla`'s wrapper types hold raw pointers and are `!Send`, so everything
+//! PJRT lives here; the rest of the system (pblocks, experiments, the CLI)
+//! talks to it through [`RuntimeHandle`] over channels with plain `Vec<f32>`
+//! payloads. This also faithfully models *one physical FPGA* shared by all
+//! pblocks — requests serialise at the device boundary exactly like DMA
+//! transactions serialise on the real board.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use super::artifact::{ArtifactMeta, Registry};
+use crate::detectors::params::{LodaParams, RsHashParams, XStreamParams};
+
+/// Parameters for a detector instance (owned by the coordinator).
+#[derive(Clone, Debug)]
+pub enum DetectorParams {
+    Loda(LodaParams),
+    RsHash(RsHashParams),
+    XStream(XStreamParams),
+}
+
+/// Handle to a loaded detector instance (executable + streaming state).
+pub type InstanceId = u64;
+
+/// Execution statistics (for §Perf and the GOPS experiments).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+    pub samples: u64,
+}
+
+enum Job {
+    LoadDetector { meta: ArtifactMeta, params: Box<DetectorParams>, reply: Sender<Result<InstanceId>> },
+    RunChunk { inst: InstanceId, data: Vec<f32>, mask: Vec<f32>, reply: Sender<Result<Vec<f32>>> },
+    ResetState { inst: InstanceId, reply: Sender<Result<()>> },
+    DropInstance { inst: InstanceId, reply: Sender<Result<()>> },
+    RunBypass { d: usize, data: Vec<f32>, reply: Sender<Result<Vec<f32>>> },
+    RunCombo { method: String, scores: Vec<f32>, active: Vec<f32>, weights: Vec<f32>, reply: Sender<Result<Vec<f32>>> },
+    /// Compile an artifact without instantiating (reconfiguration timing).
+    Precompile { name: String, reply: Sender<Result<f64>> },
+    Stats { reply: Sender<RuntimeStats> },
+    Shutdown,
+}
+
+/// Cheap cloneable handle used across the fabric.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Job>,
+}
+
+macro_rules! ask {
+    ($self:ident, $job:expr) => {{
+        let (reply, rx) = channel();
+        let job = $job(reply);
+        $self
+            .tx
+            .send(job)
+            .map_err(|_| anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))?
+    }};
+}
+
+impl RuntimeHandle {
+    pub fn load_detector(&self, meta: &ArtifactMeta, params: DetectorParams) -> Result<InstanceId> {
+        ask!(self, |reply| Job::LoadDetector {
+            meta: meta.clone(),
+            params: Box::new(params),
+            reply
+        })
+    }
+
+    /// Run one padded chunk; returns per-sample scores (0 beyond the mask).
+    pub fn run_chunk(&self, inst: InstanceId, data: Vec<f32>, mask: Vec<f32>) -> Result<Vec<f32>> {
+        ask!(self, |reply| Job::RunChunk { inst, data, mask, reply })
+    }
+
+    pub fn reset_state(&self, inst: InstanceId) -> Result<()> {
+        ask!(self, |reply| Job::ResetState { inst, reply })
+    }
+
+    pub fn drop_instance(&self, inst: InstanceId) -> Result<()> {
+        ask!(self, |reply| Job::DropInstance { inst, reply })
+    }
+
+    pub fn run_bypass(&self, d: usize, data: Vec<f32>) -> Result<Vec<f32>> {
+        ask!(self, |reply| Job::RunBypass { d, data, reply })
+    }
+
+    /// Combine up to 4 score streams (flattened row-major `[C,4]`).
+    pub fn run_combo(
+        &self,
+        method: &str,
+        scores: Vec<f32>,
+        active: Vec<f32>,
+        weights: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        ask!(self, |reply| Job::RunCombo {
+            method: method.to_string(),
+            scores,
+            active,
+            weights,
+            reply
+        })
+    }
+
+    /// Compile (or hit the cache for) an artifact; returns compile seconds.
+    pub fn precompile(&self, name: &str) -> Result<f64> {
+        ask!(self, |reply| Job::Precompile { name: name.to_string(), reply })
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let (reply, rx) = channel();
+        self.tx.send(Job::Stats { reply }).map_err(|_| anyhow!("runtime service is down"))?;
+        rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))
+    }
+}
+
+/// The running service; drop or call [`Runtime::shutdown`] to stop.
+pub struct Runtime {
+    tx: Sender<Job>,
+    join: Option<std::thread::JoinHandle<()>>,
+    registry: Registry,
+}
+
+impl Runtime {
+    /// Start the device thread over an artifact directory.
+    pub fn start(artifact_dir: &str) -> Result<Runtime> {
+        // Quiet the TFRT client's INFO chatter unless the user overrides.
+        if std::env::var_os("TF_CPP_MIN_LOG_LEVEL").is_none() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let registry = Registry::load(artifact_dir)?;
+        let (tx, rx) = channel();
+        let reg = registry.clone();
+        let join = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || service_main(reg, rx))
+            .context("spawning device thread")?;
+        Ok(Runtime { tx, join: Some(join), registry })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle { tx: self.tx.clone() }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service internals (PJRT-side; never leaves the device thread)
+// ---------------------------------------------------------------------------
+
+struct Instance {
+    meta: ArtifactMeta,
+    exe_name: String,
+    params: Vec<xla::Literal>,
+    state: Vec<xla::Literal>,
+}
+
+struct Service {
+    client: xla::PjRtClient,
+    registry: Registry,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    instances: HashMap<InstanceId, Instance>,
+    next_id: InstanceId,
+    stats: RuntimeStats,
+}
+
+fn service_main(registry: Registry, rx: Receiver<Job>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Drain jobs with errors; cannot operate without a client.
+            for job in rx.iter() {
+                fail_job(job, &format!("PJRT client failed to start: {e}"));
+            }
+            return;
+        }
+    };
+    let mut svc = Service {
+        client,
+        registry,
+        exes: HashMap::new(),
+        instances: HashMap::new(),
+        next_id: 1,
+        stats: RuntimeStats::default(),
+    };
+    for job in rx.iter() {
+        match job {
+            Job::Shutdown => break,
+            Job::Stats { reply } => {
+                let _ = reply.send(svc.stats.clone());
+            }
+            Job::LoadDetector { meta, params, reply } => {
+                let _ = reply.send(svc.load_detector(&meta, *params));
+            }
+            Job::RunChunk { inst, data, mask, reply } => {
+                let _ = reply.send(svc.run_chunk(inst, &data, &mask));
+            }
+            Job::ResetState { inst, reply } => {
+                let _ = reply.send(svc.reset_state(inst));
+            }
+            Job::DropInstance { inst, reply } => {
+                let _ = reply.send(svc.drop_instance(inst));
+            }
+            Job::RunBypass { d, data, reply } => {
+                let _ = reply.send(svc.run_bypass(d, data));
+            }
+            Job::RunCombo { method, scores, active, weights, reply } => {
+                let _ = reply.send(svc.run_combo(&method, scores, active, weights));
+            }
+            Job::Precompile { name, reply } => {
+                let _ = reply.send(svc.precompile(&name));
+            }
+        }
+    }
+}
+
+fn fail_job(job: Job, msg: &str) {
+    let err = || anyhow!("{msg}");
+    match job {
+        Job::LoadDetector { reply, .. } => drop(reply.send(Err(err()))),
+        Job::RunChunk { reply, .. } => drop(reply.send(Err(err()))),
+        Job::ResetState { reply, .. } => drop(reply.send(Err(err()))),
+        Job::DropInstance { reply, .. } => drop(reply.send(Err(err()))),
+        Job::RunBypass { reply, .. } => drop(reply.send(Err(err()))),
+        Job::RunCombo { reply, .. } => drop(reply.send(Err(err()))),
+        Job::Precompile { reply, .. } => drop(reply.send(Err(err()))),
+        Job::Stats { reply } => drop(reply.send(RuntimeStats::default())),
+        Job::Shutdown => {}
+    }
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+impl Service {
+    /// Compile an artifact (cached by name); returns compile seconds.
+    fn ensure_exe(&mut self, name: &str) -> Result<f64> {
+        if self.exes.contains_key(name) {
+            return Ok(0.0);
+        }
+        let meta = self
+            .registry
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?
+            .clone();
+        let path = self.registry.path(&meta);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.compiles += 1;
+        self.stats.compile_secs += dt;
+        self.exes.insert(name.to_string(), exe);
+        Ok(dt)
+    }
+
+    fn precompile(&mut self, name: &str) -> Result<f64> {
+        self.ensure_exe(name)
+    }
+
+    fn zero_state(meta: &ArtifactMeta) -> Result<Vec<xla::Literal>> {
+        let (r, window) = (meta.r as i64, meta.window as i64);
+        let mut state = Vec::with_capacity(4);
+        match meta.kind.as_str() {
+            "loda" => {
+                let bins = meta.bins as i64;
+                state.push(lit_i32(&vec![0; (r * bins) as usize], &[r, bins])?);
+                state.push(lit_i32(&vec![0; (r * window) as usize], &[r, window])?);
+            }
+            "rshash" | "xstream" => {
+                let (w, m) = (meta.w as i64, meta.modulus as i64);
+                state.push(lit_i32(&vec![0; (r * w * m) as usize], &[r, w, m])?);
+                state.push(lit_i32(&vec![0; (r * w * window) as usize], &[r, w, window])?);
+            }
+            other => bail!("artifact kind {other:?} has no detector state"),
+        }
+        state.push(lit_i32(&[0], &[1])?); // pos
+        state.push(lit_i32(&[0], &[1])?); // n
+        Ok(state)
+    }
+
+    fn param_literals(meta: &ArtifactMeta, params: &DetectorParams) -> Result<Vec<xla::Literal>> {
+        let (r, d) = (meta.r as i64, meta.d as i64);
+        match (meta.kind.as_str(), params) {
+            ("loda", DetectorParams::Loda(p)) => {
+                if p.r != meta.r || p.d != meta.d {
+                    bail!("loda params [r={} d={}] mismatch artifact {}", p.r, p.d, meta.name);
+                }
+                Ok(vec![
+                    lit_f32(&p.prj, &[r, d])?,
+                    lit_f32(&p.pmin, &[r])?,
+                    lit_f32(&p.pmax, &[r])?,
+                ])
+            }
+            ("rshash", DetectorParams::RsHash(p)) => {
+                if p.r != meta.r || p.d != meta.d {
+                    bail!("rshash params [r={} d={}] mismatch artifact {}", p.r, p.d, meta.name);
+                }
+                Ok(vec![
+                    lit_f32(&p.dmin, &[d])?,
+                    lit_f32(&p.dmax, &[d])?,
+                    lit_f32(&p.alpha, &[r, d])?,
+                    lit_f32(&p.f, &[r])?,
+                ])
+            }
+            ("xstream", DetectorParams::XStream(p)) => {
+                if p.r != meta.r || p.d != meta.d || p.k != meta.k || p.w != meta.w {
+                    bail!("xstream params mismatch artifact {}", meta.name);
+                }
+                let (k, w) = (meta.k as i64, meta.w as i64);
+                Ok(vec![
+                    lit_f32(&p.proj, &[r, d, k])?,
+                    lit_f32(&p.shift, &[r, w, k])?,
+                    lit_f32(&p.width, &[r, k])?,
+                ])
+            }
+            (kind, _) => bail!("params do not match artifact kind {kind:?}"),
+        }
+    }
+
+    fn load_detector(&mut self, meta: &ArtifactMeta, params: DetectorParams) -> Result<InstanceId> {
+        if !self.registry.available(meta) {
+            bail!("artifact file missing for {} — run `make artifacts`", meta.name);
+        }
+        self.ensure_exe(&meta.name)?;
+        let inst = Instance {
+            meta: meta.clone(),
+            exe_name: meta.name.clone(),
+            params: Self::param_literals(meta, &params)?,
+            state: Self::zero_state(meta)?,
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        self.instances.insert(id, inst);
+        Ok(id)
+    }
+
+    fn run_chunk(&mut self, id: InstanceId, data: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
+        let inst = self.instances.get(&id).with_context(|| format!("no instance {id}"))?;
+        let meta = &inst.meta;
+        let (c, d) = (meta.chunk, meta.d);
+        if data.len() != c * d || mask.len() != c {
+            bail!(
+                "chunk shape mismatch for {}: got data={} mask={}, want [{c},{d}]",
+                meta.name,
+                data.len(),
+                mask.len()
+            );
+        }
+        let x = lit_f32(data, &[c as i64, d as i64])?;
+        let m = lit_f32(mask, &[c as i64])?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + inst.params.len() + 4);
+        args.push(&x);
+        args.push(&m);
+        for p in &inst.params {
+            args.push(p);
+        }
+        for s in &inst.state {
+            args.push(s);
+        }
+        let exe = self.exes.get(&inst.exe_name).expect("exe loaded with instance");
+        let t0 = Instant::now();
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut parts = result.to_tuple()?;
+        if parts.len() != 1 + inst.state.len() {
+            bail!("artifact {} returned {}-tuple, expected {}", meta.name, parts.len(), 1 + inst.state.len());
+        }
+        let scores = parts.remove(0).to_vec::<f32>()?;
+        let valid = mask.iter().filter(|&&v| v > 0.5).count() as u64;
+        // Thread the updated state into the next invocation.
+        let inst = self.instances.get_mut(&id).unwrap();
+        inst.state = parts;
+        self.stats.executions += 1;
+        self.stats.execute_secs += dt;
+        self.stats.samples += valid;
+        Ok(scores)
+    }
+
+    fn reset_state(&mut self, id: InstanceId) -> Result<()> {
+        let inst = self.instances.get_mut(&id).with_context(|| format!("no instance {id}"))?;
+        inst.state = Self::zero_state(&inst.meta)?;
+        Ok(())
+    }
+
+    fn drop_instance(&mut self, id: InstanceId) -> Result<()> {
+        self.instances.remove(&id).map(|_| ()).with_context(|| format!("no instance {id}"))
+    }
+
+    fn run_bypass(&mut self, d: usize, data: Vec<f32>) -> Result<Vec<f32>> {
+        let meta = self.registry.find_bypass(d)?.clone();
+        if data.len() != meta.chunk * d {
+            bail!("bypass d={d}: got {} values, want {}", data.len(), meta.chunk * d);
+        }
+        self.ensure_exe(&meta.name)?;
+        let x = lit_f32(&data, &[meta.chunk as i64, d as i64])?;
+        let exe = self.exes.get(&meta.name).unwrap();
+        let t0 = Instant::now();
+        let result = exe.execute::<&xla::Literal>(&[&x])?[0][0].to_literal_sync()?;
+        self.stats.executions += 1;
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        result.to_tuple1()?.to_vec::<f32>().map_err(Into::into)
+    }
+
+    fn run_combo(
+        &mut self,
+        method: &str,
+        scores: Vec<f32>,
+        active: Vec<f32>,
+        weights: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let meta = self.registry.find_combo(method)?.clone();
+        if scores.len() != meta.chunk * 4 || active.len() != 4 {
+            bail!(
+                "combo {method}: got scores={} active={}, want [{},4] and [4]",
+                scores.len(),
+                active.len(),
+                meta.chunk
+            );
+        }
+        self.ensure_exe(&meta.name)?;
+        let s = lit_f32(&scores, &[meta.chunk as i64, 4])?;
+        let a = lit_f32(&active, &[4])?;
+        let exe = self.exes.get(&meta.name).unwrap();
+        let t0 = Instant::now();
+        let result = if method == "wavg" {
+            let mut w4 = weights;
+            w4.resize(4, 0.0);
+            let w = lit_f32(&w4, &[4])?;
+            exe.execute::<&xla::Literal>(&[&s, &a, &w])?[0][0].to_literal_sync()?
+        } else {
+            exe.execute::<&xla::Literal>(&[&s, &a])?[0][0].to_literal_sync()?
+        };
+        self.stats.executions += 1;
+        self.stats.execute_secs += t0.elapsed().as_secs_f64();
+        result.to_tuple1()?.to_vec::<f32>().map_err(Into::into)
+    }
+}

@@ -1,0 +1,148 @@
+//! Property-testing mini-framework (proptest is unavailable offline —
+//! DESIGN.md §6 substitution 4).
+//!
+//! `forall` runs a property over `cases` randomly generated inputs from a
+//! seeded [`Gen`]; on failure it retries with progressively simpler sizes
+//! (a light-weight stand-in for shrinking) and reports the failing seed so
+//! the case can be replayed deterministically.
+
+use crate::detectors::prng::Prng;
+
+/// Random input source handed to generators and properties.
+pub struct Gen {
+    pub rng: Prng,
+    /// Size hint in [0, 1]: generators should scale magnitude/length by it.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Prng::new(seed), size }
+    }
+
+    /// usize in [lo, hi], scaled down for small sizes.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64 * self.size).ceil() as usize).min(span);
+        lo + if scaled == 0 { 0 } else { self.rng.below(scaled + 1) }
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn gaussian_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.gaussian() as f32).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics with the failing seed.
+/// Case sizes ramp from small to large so early failures are simple ones.
+pub fn forall<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = fx64(name);
+    for case in 0..cases {
+        let size = 0.1 + 0.9 * (case as f64 / cases.max(1) as f64);
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // "Shrink": retry the same seed at smaller sizes to report the
+            // simplest reproduction we can find.
+            let mut simplest = (size, msg.clone());
+            for shrink in 1..=4 {
+                let s = size / (1 << shrink) as f64;
+                let mut g = Gen::new(seed, s);
+                if let Err(m) = prop(&mut g) {
+                    simplest = (s, m);
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, size {:.3}):\n  {}",
+                simplest.0, simplest.1
+            );
+        }
+    }
+}
+
+/// Convenience assert for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+fn fx64(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add-commutes", 50, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            prop_assert!(a + b == b + a, "{a} + {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_reports_seed() {
+        forall("always-fails", 3, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_len = 0;
+        forall("size-ramp", 20, |g| {
+            let len = g.usize_in(0, 100);
+            if len > max_len {
+                max_len = len;
+            }
+            Ok(())
+        });
+        assert!(max_len > 50, "sizes never ramped: {max_len}");
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        let mut first: Vec<usize> = vec![];
+        forall("det", 5, |g| {
+            first.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = vec![];
+        forall("det", 5, |g| {
+            second.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

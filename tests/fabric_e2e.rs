@@ -1,0 +1,250 @@
+//! Fabric end-to-end: the composable topology (switches, DMAs, pblocks,
+//! combos) over real streams, in both CPU-native and PJRT modes, covering
+//! the paper's Fig 7 composition patterns and run-time reconfiguration.
+
+use fsead::config::{ComboCfg, FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::data::Dataset;
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::run_sequential;
+use fsead::detectors::DetectorSpec;
+use fsead::fabric::Fabric;
+
+fn tiny(name: &'static str, n: usize, d: usize, seed: u64) -> Dataset {
+    let p = DatasetProfile { name, n, d, outliers: n / 20, clusters: 2 };
+    generate_profile(&p, seed)
+}
+
+fn cpu_cfg() -> FseadConfig {
+    let mut cfg = FseadConfig::default();
+    cfg.use_fpga = false;
+    cfg.chunk = 64;
+    cfg
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+#[test]
+fn fig7a_direct_routes_cpu() {
+    // Seven pblocks, seven independent streams, no combos.
+    let mut cfg = cpu_cfg();
+    for id in 1..=7usize {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 3,
+            stream: id - 1,
+        });
+    }
+    let streams: Vec<Dataset> = (0..7).map(|i| tiny("s", 150, 3, i as u64)).collect();
+    let mut fabric = Fabric::new(cfg, streams.clone()).unwrap();
+    let out = fabric.run().unwrap();
+    assert_eq!(out.pblock_scores.len(), 7);
+    assert!(out.combo_scores.is_empty());
+    for (id, scores) in &out.pblock_scores {
+        assert_eq!(scores.len(), 150, "pblock {id}");
+        assert!(scores.iter().all(|s| s.is_finite()));
+    }
+    // Each pblock's scores must match a standalone sequential run with the
+    // fabric's per-pblock seed.
+    let cfg2 = fabric.config().clone();
+    for p in &cfg2.pblocks {
+        let seed = cfg2.seed.wrapping_add(p.id as u64 * 1009);
+        let mut spec = DetectorSpec::new(DetectorKind::Loda, 3, 3, seed);
+        spec.window = cfg2.hyper.window;
+        spec.bins = cfg2.hyper.bins;
+        let expect = run_sequential(&spec, &streams[p.stream]);
+        let got = &out.pblock_scores[&p.id];
+        for (a, b) in got.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5, "pblock {}: {a} vs {b}", p.id);
+        }
+    }
+}
+
+#[test]
+fn fig7c_homogeneous_combo_cpu() {
+    // All pblocks on one stream, averaged through combos.
+    let mut cfg = cpu_cfg();
+    for id in 1..=4usize {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::RsHash),
+            r: 2,
+            stream: 0,
+        });
+    }
+    cfg.combos.push(ComboCfg {
+        id: 1,
+        method: "avg".into(),
+        inputs: vec![1, 2, 3, 4],
+        weights: vec![],
+    });
+    let ds = tiny("one", 200, 3, 5);
+    let mut fabric = Fabric::new(cfg, vec![ds.clone()]).unwrap();
+    let out = fabric.run().unwrap();
+    assert!(out.pblock_scores.is_empty(), "all pblocks consumed by the combo");
+    let combined = &out.combo_scores[&1];
+    assert_eq!(combined.len(), 200);
+    // The combo average must equal the mean of standalone pblock runs.
+    let cfg2 = fabric.config().clone();
+    let mut acc = vec![0f32; 200];
+    for p in &cfg2.pblocks {
+        let seed = cfg2.seed.wrapping_add(p.id as u64 * 1009);
+        let mut spec = DetectorSpec::new(DetectorKind::RsHash, 3, 2, seed);
+        spec.window = cfg2.hyper.window;
+        spec.w = cfg2.hyper.w;
+        spec.modulus = cfg2.hyper.modulus;
+        for (a, b) in acc.iter_mut().zip(run_sequential(&spec, &ds)) {
+            *a += b / 4.0;
+        }
+    }
+    for (i, (a, b)) in combined.iter().zip(&acc).enumerate() {
+        assert!((a - b).abs() < 1e-4, "sample {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn fig7d_heterogeneous_mixture_cpu() {
+    let mut cfg = cpu_cfg();
+    let kinds = [
+        DetectorKind::Loda,
+        DetectorKind::Loda,
+        DetectorKind::RsHash,
+        DetectorKind::XStream,
+    ];
+    for (i, k) in kinds.iter().enumerate() {
+        cfg.pblocks.push(PblockCfg { id: i + 1, rm: RmKind::Detector(*k), r: 2, stream: 0 });
+    }
+    cfg.combos.push(ComboCfg {
+        id: 1,
+        method: "max".into(),
+        inputs: vec![1, 2, 3, 4],
+        weights: vec![],
+    });
+    let ds = tiny("mix", 120, 3, 7);
+    let mut fabric = Fabric::new(cfg, vec![ds]).unwrap();
+    let out = fabric.run().unwrap();
+    let scores = &out.combo_scores[&1];
+    assert_eq!(scores.len(), 120);
+    assert!(scores.iter().all(|s| s.is_finite()));
+    assert!(out.switch_flits > 0);
+}
+
+#[test]
+fn runtime_reconfiguration_swaps_detectors() {
+    // Run Loda, reconfigure the pblock to xStream at run time, run again.
+    let mut cfg = cpu_cfg();
+    cfg.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 2,
+        stream: 0,
+    });
+    let ds = tiny("reconf", 100, 3, 9);
+    let mut fabric = Fabric::new(cfg, vec![ds]).unwrap();
+    let first = fabric.run().unwrap();
+    assert_eq!(first.pblock_scores[&1].len(), 100);
+
+    let report = fabric
+        .reconfigure(1, RmKind::Detector(DetectorKind::XStream), 2, 0)
+        .unwrap();
+    assert!(report.from.contains("loda"), "{}", report.from);
+    assert!(report.to.contains("xstream"), "{}", report.to);
+    assert!(report.model_ms > 570.0 && report.model_ms < 640.0);
+
+    let second = fabric.run().unwrap();
+    assert_eq!(second.pblock_scores[&1].len(), 100);
+    // Different algorithm ⇒ different scores.
+    let diff = first.pblock_scores[&1]
+        .iter()
+        .zip(&second.pblock_scores[&1])
+        .filter(|(a, b)| (*a - *b).abs() > 1e-6)
+        .count();
+    assert!(diff > 50, "only {diff} samples changed after reconfig");
+}
+
+#[test]
+fn streaming_state_persists_across_runs() {
+    // Two consecutive runs without reset: the second starts with a warm
+    // window (and a saturated score denominator), so early samples score
+    // differently — the state genuinely persisted.
+    let mut cfg = cpu_cfg();
+    cfg.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::RsHash),
+        r: 2,
+        stream: 0,
+    });
+    let ds = tiny("warm", 80, 3, 11);
+    let mut fabric = Fabric::new(cfg, vec![ds]).unwrap();
+    let cold = fabric.run().unwrap().pblock_scores[&1].clone();
+    let warm = fabric.run().unwrap().pblock_scores[&1].clone();
+    assert_ne!(cold, warm, "window state did not persist across runs");
+    // After reset, the cold scores reproduce exactly.
+    fabric.reset_all().unwrap();
+    let cold2 = fabric.run().unwrap().pblock_scores[&1].clone();
+    assert_eq!(cold, cold2);
+}
+
+#[test]
+fn fabric_on_pjrt_matches_cpu_fabric() {
+    if !have_artifacts() {
+        eprintln!("artifacts not built — skipping PJRT fabric test");
+        return;
+    }
+    let ds = tiny("pjrt", 520, 3, 13);
+    let mk_cfg = |fpga: bool| {
+        let mut cfg = FseadConfig::default();
+        cfg.use_fpga = fpga;
+        cfg.chunk = 256; // artifact chunk
+        for id in 1..=2usize {
+            cfg.pblocks.push(PblockCfg {
+                id,
+                rm: RmKind::Detector(DetectorKind::Loda),
+                r: 4, // test artifact size
+                stream: 0,
+            });
+        }
+        cfg.combos.push(ComboCfg { id: 1, method: "avg".into(), inputs: vec![1, 2], weights: vec![] });
+        cfg
+    };
+    let mut cpu = Fabric::new(mk_cfg(false), vec![ds.clone()]).unwrap();
+    let mut cpu_cfg_q = cpu.config().clone();
+    drop(cpu);
+    // The artifacts are quantized; make the CPU fabric quantize too by
+    // running the FPGA-quantized artifacts against CPU RMs built with
+    // quantize=false and comparing with a loose tolerance instead.
+    cpu_cfg_q.use_fpga = false;
+    let mut cpu = Fabric::new(cpu_cfg_q, vec![ds.clone()]).unwrap();
+    let cpu_out = cpu.run().unwrap();
+
+    let mut fpga = Fabric::new(mk_cfg(true), vec![ds.clone()]).unwrap();
+    let fpga_out = fpga.run().unwrap();
+
+    let a = &cpu_out.combo_scores[&1];
+    let b = &fpga_out.combo_scores[&1];
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() < 3e-3, "sample {i}: cpu={x} fpga={y}");
+    }
+    assert!(fpga_out.modeled_fpga_secs > 0.0);
+}
+
+#[test]
+fn empty_fabric_errors() {
+    let cfg = cpu_cfg();
+    let err = Fabric::new(cfg, vec![]).and_then(|mut f| f.run());
+    assert!(err.is_err());
+}
+
+#[test]
+fn combo_across_streams_rejected() {
+    let mut cfg = cpu_cfg();
+    cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Detector(DetectorKind::Loda), r: 2, stream: 0 });
+    cfg.pblocks.push(PblockCfg { id: 2, rm: RmKind::Detector(DetectorKind::Loda), r: 2, stream: 1 });
+    cfg.combos.push(ComboCfg { id: 1, method: "avg".into(), inputs: vec![1, 2], weights: vec![] });
+    let streams = vec![tiny("a", 50, 3, 1), tiny("b", 50, 3, 2)];
+    assert!(Fabric::new(cfg, streams).is_err());
+}

@@ -1,0 +1,263 @@
+//! Property-based tests over coordinator invariants (routing, chunking,
+//! windowing, scoring, configuration) using the in-repo mini-framework
+//! (`fsead::testutil` — proptest is unavailable offline, DESIGN.md §6).
+
+use fsead::combine::{LabelCombiner, ScoreCombiner};
+use fsead::config::{ComboCfg, FseadConfig, PblockCfg, RmKind};
+use fsead::data::stream::ChunkStream;
+use fsead::detectors::window::SlidingCounts;
+use fsead::detectors::{quantize::q16, DetectorKind, DetectorSpec};
+use fsead::fabric::AxiSwitch;
+use fsead::metrics::{auc_roc, normalize_scores};
+use fsead::prop_assert;
+use fsead::testutil::forall;
+
+#[test]
+fn switch_arbitration_invariants() {
+    forall("switch-arbitration", 200, |g| {
+        let n_s = g.usize_in(1, 16);
+        let n_m = g.usize_in(1, 16);
+        let mut sw = AxiSwitch::new("p", n_s, n_m).unwrap();
+        let programs = g.usize_in(0, 24);
+        for _ in 0..programs {
+            let m = g.usize_in(0, n_m - 1);
+            if g.bool() {
+                sw.set_route(m, g.usize_in(0, n_s - 1)).unwrap();
+            } else {
+                sw.disable(m).unwrap();
+            }
+        }
+        let eff = sw.resolve();
+        // 1. No slave is connected to two masters.
+        let mut used = vec![false; n_s];
+        for (m, s) in eff.iter().enumerate() {
+            if let Some(s) = *s {
+                prop_assert!(!used[s], "slave {s} double-assigned");
+                used[s] = true;
+                // 2. Every effective route was actually requested.
+                prop_assert!(sw.route_of(m) == Some(s), "M{m} got unrequested S{s}");
+                // 3. The winner is the lowest-numbered requester.
+                for lower in 0..m {
+                    prop_assert!(
+                        sw.route_of(lower) != Some(s),
+                        "M{lower} < M{m} requested S{s} but lost arbitration"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chunk_stream_reassembles_exactly() {
+    forall("chunk-reassembly", 100, |g| {
+        let n = g.usize_in(0, 400);
+        let d = g.usize_in(1, 8);
+        let chunk = g.usize_in(1, 64);
+        let data = g.f32_vec(n * d, -10.0, 10.0);
+        let mut rebuilt = Vec::new();
+        let mut valid = 0usize;
+        let mut last_seen = false;
+        for f in ChunkStream::new(&data, d, chunk) {
+            prop_assert!(!last_seen, "flit after TLAST");
+            prop_assert!(f.data.len() == chunk * d, "padded size wrong");
+            prop_assert!(f.mask.len() == chunk, "mask size wrong");
+            let mask_count = f.mask.iter().filter(|&&m| m > 0.5).count();
+            prop_assert!(mask_count == f.n_valid, "mask disagrees with n_valid");
+            rebuilt.extend_from_slice(&f.data[..f.n_valid * d]);
+            valid += f.n_valid;
+            last_seen = f.last;
+        }
+        prop_assert!(last_seen, "no TLAST emitted");
+        prop_assert!(valid == n, "valid {valid} != n {n}");
+        prop_assert!(rebuilt == data, "payload corrupted");
+        Ok(())
+    });
+}
+
+#[test]
+fn sliding_counts_conservation() {
+    forall("window-conservation", 150, |g| {
+        let rows = g.usize_in(1, 6);
+        let width = g.usize_in(2, 64);
+        let window = g.usize_in(1, 32);
+        let mut sc = SlidingCounts::new(rows, width, window);
+        let inserts = g.usize_in(0, 200);
+        for _ in 0..inserts {
+            let idxs: Vec<i32> =
+                (0..rows).map(|_| g.usize_in(0, width - 1) as i32).collect();
+            sc.insert(&idxs);
+        }
+        for row in 0..rows {
+            let total = sc.row_total(row);
+            let expect = (inserts as i64).min(window as i64);
+            prop_assert!(total == expect, "row {row}: total {total} != {expect}");
+        }
+        prop_assert!(sc.counts().iter().all(|&c| c >= 0), "negative count");
+        prop_assert!(
+            sc.counts().iter().all(|&c| c <= window as i32),
+            "count exceeds window"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn auc_monotone_invariance_and_symmetry() {
+    forall("auc-invariance", 100, |g| {
+        let n = g.usize_in(4, 200);
+        let scores = g.f32_vec(n, -5.0, 5.0);
+        let truth: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+        if truth.iter().all(|&t| t) || truth.iter().all(|&t| !t) {
+            return Ok(()); // degenerate: AUC fixed at 0.5 by definition
+        }
+        let a = auc_roc(&scores, &truth);
+        // Monotone transform invariance.
+        let transformed: Vec<f32> = scores.iter().map(|&s| s.exp()).collect();
+        let b = auc_roc(&transformed, &truth);
+        prop_assert!((a - b).abs() < 1e-9, "monotone transform changed AUC: {a} vs {b}");
+        // Normalisation invariance.
+        let c = auc_roc(&normalize_scores(&scores), &truth);
+        prop_assert!((a - c).abs() < 1e-6, "normalisation changed AUC: {a} vs {c}");
+        // Negation symmetry.
+        let neg: Vec<f32> = scores.iter().map(|s| -s).collect();
+        let d = auc_roc(&neg, &truth);
+        prop_assert!((a + d - 1.0).abs() < 1e-9, "negation asymmetry: {a} + {d} != 1");
+        Ok(())
+    });
+}
+
+#[test]
+fn combiner_order_relations() {
+    forall("combiner-relations", 100, |g| {
+        let n = g.usize_in(1, 50);
+        let k = g.usize_in(1, 4);
+        let streams: Vec<Vec<f32>> = (0..k).map(|_| g.f32_vec(n, -3.0, 3.0)).collect();
+        let views: Vec<&[f32]> = streams.iter().map(|v| v.as_slice()).collect();
+        let avg = ScoreCombiner::Averaging.combine(&views);
+        let max = ScoreCombiner::Maximization.combine(&views);
+        for i in 0..n {
+            prop_assert!(avg[i] <= max[i] + 1e-5, "avg > max at {i}");
+        }
+        // OR dominates voting: vote(i) ⇒ or(i).
+        let labels: Vec<Vec<bool>> =
+            (0..k).map(|_| (0..n).map(|_| g.bool()).collect()).collect();
+        let lviews: Vec<&[bool]> = labels.iter().map(|v| v.as_slice()).collect();
+        let or = LabelCombiner::Or.combine(&lviews);
+        let vote = LabelCombiner::Voting.combine(&lviews);
+        for i in 0..n {
+            prop_assert!(!vote[i] || or[i], "vote set but OR clear at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn q16_quantisation_error_bound() {
+    forall("q16-bound", 200, |g| {
+        let v = g.f32_in(-1000.0, 1000.0);
+        let q = q16(v);
+        prop_assert!((q - v).abs() <= 0.5 / 65536.0 + 1e-6, "error too large for {v}");
+        prop_assert!(q16(q) == q, "not idempotent at {v}");
+        Ok(())
+    });
+}
+
+#[test]
+fn detectors_deterministic_and_finite() {
+    forall("detector-sanity", 30, |g| {
+        let kind = *g.pick(&DetectorKind::ALL);
+        let d = g.usize_in(1, 8);
+        let r = g.usize_in(1, 6);
+        let n = g.usize_in(2, 120);
+        let seed = g.usize_in(0, 1_000_000) as u64;
+        let data = g.gaussian_vec(n * d);
+        let mut spec = DetectorSpec::new(kind, d, r, seed);
+        spec.window = g.usize_in(1, 64);
+        let mut det_a = spec.build(&data);
+        let mut det_b = spec.build(&data);
+        let a = det_a.run_stream(&data);
+        let b = det_b.run_stream(&data);
+        prop_assert!(a == b, "{kind:?} nondeterministic");
+        prop_assert!(a.iter().all(|s| s.is_finite()), "{kind:?} non-finite score");
+        prop_assert!(a.len() == n, "{kind:?} wrong score count");
+        Ok(())
+    });
+}
+
+#[test]
+fn fabric_conserves_samples_cpu() {
+    forall("fabric-conservation", 12, |g| {
+        let n = g.usize_in(20, 300);
+        let d = g.usize_in(2, 6);
+        let n_pblocks = g.usize_in(1, 4);
+        let use_combo = g.bool() && n_pblocks >= 2;
+        let mut cfg = FseadConfig::default();
+        cfg.use_fpga = false;
+        cfg.chunk = g.usize_in(8, 64);
+        for id in 1..=n_pblocks {
+            let kind = *g.pick(&DetectorKind::ALL);
+            cfg.pblocks.push(PblockCfg {
+                id,
+                rm: RmKind::Detector(kind),
+                r: g.usize_in(1, 4),
+                stream: 0,
+            });
+        }
+        if use_combo {
+            cfg.combos.push(ComboCfg {
+                id: 1,
+                method: "avg".into(),
+                inputs: (1..=n_pblocks).collect(),
+                weights: vec![],
+            });
+        }
+        let data = g.gaussian_vec(n * d);
+        let ds = fsead::data::Dataset {
+            name: "prop".into(),
+            d,
+            data,
+            labels: vec![false; n],
+        };
+        let mut fabric = match fsead::fabric::Fabric::new(cfg, vec![ds]) {
+            Ok(f) => f,
+            Err(e) => return Err(format!("fabric build failed: {e}")),
+        };
+        let out = fabric.run().map_err(|e| format!("run failed: {e}"))?;
+        let total: usize = out
+            .pblock_scores
+            .values()
+            .chain(out.combo_scores.values())
+            .map(|v| v.len())
+            .sum();
+        let expected = if use_combo { n } else { n * n_pblocks };
+        prop_assert!(total == expected, "sample conservation: {total} != {expected}");
+        Ok(())
+    });
+}
+
+#[test]
+fn config_combo_codes_total_seven() {
+    forall("combo-codes", 60, |g| {
+        // Random valid 3-way splits of 7 pblocks always build and validate.
+        let a = g.usize_in(0, 7);
+        let b = g.usize_in(0, 7 - a);
+        let c = 7 - a - b;
+        let mut code = String::new();
+        if a > 0 {
+            code.push_str(&format!("A{a}"));
+        }
+        if b > 0 {
+            code.push_str(&format!("B{b}"));
+        }
+        if c > 0 {
+            code.push_str(&format!("C{c}"));
+        }
+        let cfg = FseadConfig::from_combo_code(&code)
+            .map_err(|e| format!("{code}: {e}"))?;
+        prop_assert!(cfg.pblocks.len() == 7, "{code}: {} pblocks", cfg.pblocks.len());
+        cfg.validate().map_err(|e| format!("{code}: {e}"))?;
+        Ok(())
+    });
+}

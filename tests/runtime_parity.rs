@@ -1,0 +1,189 @@
+//! CPU-baseline ↔ PJRT-artifact parity (the paper's Tables 8–10 AUC
+//! columns): the same parameters drive both paths; scores must agree to
+//! float tolerance and AUC must be essentially identical.
+//!
+//! Requires `make artifacts`; tests are skipped (not failed) if the
+//! artifact directory is missing so `cargo test` works pre-AOT.
+
+use fsead::config::DetectorHyper;
+use fsead::data::stream::ChunkStream;
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::metrics::auc_roc;
+use fsead::runtime::{generate_params, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts not built — skipping PJRT parity test");
+        return None;
+    }
+    Some(Runtime::start("artifacts").expect("runtime starts"))
+}
+
+fn tiny_dataset(n: usize) -> fsead::data::Dataset {
+    let p = DatasetProfile { name: "parity", n, d: 3, outliers: n / 20, clusters: 3 };
+    generate_profile(&p, 77)
+}
+
+/// Run one detector through the FPGA path and the CPU path with identical
+/// parameters; return (fpga_scores, cpu_scores).
+fn run_both(kind: DetectorKind, quantize: bool, n: usize) -> Option<(Vec<f32>, Vec<f32>, Vec<bool>)> {
+    let rt = runtime()?;
+    let handle = rt.handle();
+    let reg = rt.registry();
+    let ds = tiny_dataset(n);
+    let hyper = DetectorHyper::default();
+    let (r, d) = (4usize, 3usize);
+    let meta = reg.find_detector(kind, d, r, quantize).expect("test artifact exists");
+    assert_eq!(meta.window, hyper.window);
+    let warmup = ds.warmup(hyper.window);
+    let seed = 4242;
+    let params = generate_params(kind, seed, r, d, &hyper, warmup);
+    let inst = handle.load_detector(meta, params).expect("load detector");
+
+    let mut fpga_scores = Vec::with_capacity(ds.n());
+    for chunk in ChunkStream::new(&ds.data, d, meta.chunk) {
+        let scores = handle.run_chunk(inst, chunk.data, chunk.mask).expect("run chunk");
+        fpga_scores.extend_from_slice(&scores[..chunk.n_valid]);
+    }
+
+    let mut spec = DetectorSpec::new(kind, d, r, seed);
+    spec.quantize = quantize;
+    let mut det = spec.build(warmup);
+    let cpu_scores = det.run_stream(&ds.data);
+    Some((fpga_scores, cpu_scores, ds.labels))
+}
+
+fn assert_close(kind: DetectorKind, fpga: &[f32], cpu: &[f32], labels: &[bool], tol: f32) {
+    assert_eq!(fpga.len(), cpu.len());
+    let mut worst = 0f32;
+    for (i, (a, b)) in fpga.iter().zip(cpu).enumerate() {
+        let diff = (a - b).abs();
+        if diff > worst {
+            worst = diff;
+        }
+        assert!(
+            diff < tol || diff / b.abs().max(1.0) < tol,
+            "{kind:?} sample {i}: fpga={a} cpu={b}"
+        );
+    }
+    let auc_f = auc_roc(fpga, labels);
+    let auc_c = auc_roc(cpu, labels);
+    // Paper Tables 8–10: CPU and FPGA AUC agree to ~1e-3.
+    assert!(
+        (auc_f - auc_c).abs() < 5e-3,
+        "{kind:?}: AUC fpga={auc_f:.4} cpu={auc_c:.4} (worst |Δscore|={worst})"
+    );
+    eprintln!("{kind:?}: AUC fpga={auc_f:.4} cpu={auc_c:.4} worst |Δ|={worst:.2e}");
+}
+
+#[test]
+fn loda_fpga_matches_cpu_unquantized() {
+    if let Some((f, c, l)) = run_both(DetectorKind::Loda, false, 600) {
+        assert_close(DetectorKind::Loda, &f, &c, &l, 2e-3);
+    }
+}
+
+#[test]
+fn rshash_fpga_matches_cpu_unquantized() {
+    if let Some((f, c, l)) = run_both(DetectorKind::RsHash, false, 600) {
+        assert_close(DetectorKind::RsHash, &f, &c, &l, 2e-3);
+    }
+}
+
+#[test]
+fn xstream_fpga_matches_cpu_unquantized() {
+    if let Some((f, c, l)) = run_both(DetectorKind::XStream, false, 600) {
+        assert_close(DetectorKind::XStream, &f, &c, &l, 2e-3);
+    }
+}
+
+#[test]
+fn quantized_artifacts_agree_with_quantized_cpu() {
+    for kind in DetectorKind::ALL {
+        if let Some((f, c, l)) = run_both(kind, true, 400) {
+            // Q16.16 grid: differences are at most a few ulps of 2^-16
+            // plus occasional bin-boundary flips.
+            assert_close(kind, &f, &c, &l, 3e-3);
+        }
+    }
+}
+
+#[test]
+fn state_threading_is_exact_across_chunks() {
+    // Same stream through chunked invocations twice: identical scores
+    // (the device instance carries no hidden nondeterminism).
+    let Some(rt) = runtime() else { return };
+    let handle = rt.handle();
+    let ds = tiny_dataset(300);
+    let hyper = DetectorHyper::default();
+    let meta = rt
+        .registry()
+        .find_detector(DetectorKind::Loda, 3, 4, false)
+        .unwrap();
+    let params = generate_params(DetectorKind::Loda, 9, 4, 3, &hyper, ds.warmup(hyper.window));
+    let inst = handle.load_detector(meta, params).unwrap();
+
+    let mut pass = || -> Vec<f32> {
+        handle.reset_state(inst).unwrap();
+        let mut out = Vec::new();
+        for chunk in ChunkStream::new(&ds.data, 3, meta.chunk) {
+            let s = handle.run_chunk(inst, chunk.data, chunk.mask).unwrap();
+            out.extend_from_slice(&s[..chunk.n_valid]);
+        }
+        out
+    };
+    let a = pass();
+    let b = pass();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn bypass_artifact_is_identity() {
+    let Some(rt) = runtime() else { return };
+    let handle = rt.handle();
+    let meta = rt.registry().find_bypass(3).unwrap();
+    let data: Vec<f32> = (0..meta.chunk * 3).map(|i| i as f32 * 0.25).collect();
+    let out = handle.run_bypass(3, data.clone()).unwrap();
+    assert_eq!(out, data);
+}
+
+#[test]
+fn combo_artifacts_match_native_combiners() {
+    let Some(rt) = runtime() else { return };
+    let handle = rt.handle();
+    let chunk = rt.registry().find_combo("avg").unwrap().chunk;
+    let mut scores = vec![0f32; chunk * 4];
+    for i in 0..chunk {
+        for k in 0..4 {
+            scores[i * 4 + k] = (i as f32 * 0.1) + k as f32;
+        }
+    }
+    let active = vec![1.0, 1.0, 1.0, 0.0];
+    let avg = handle.run_combo("avg", scores.clone(), active.clone(), vec![]).unwrap();
+    let max = handle.run_combo("max", scores.clone(), active.clone(), vec![]).unwrap();
+    let wavg = handle
+        .run_combo("wavg", scores.clone(), active.clone(), vec![0.5, 0.25, 0.25, 0.0])
+        .unwrap();
+    for i in 0..chunk {
+        let row: Vec<f32> = (0..3).map(|k| scores[i * 4 + k]).collect();
+        let want_avg = row.iter().sum::<f32>() / 3.0;
+        assert!((avg[i] - want_avg).abs() < 1e-5);
+        assert!((max[i] - row.iter().cloned().fold(f32::MIN, f32::max)).abs() < 1e-5);
+        let want_wavg = (row[0] * 0.5 + row[1] * 0.25 + row[2] * 0.25) / 1.0;
+        assert!((wavg[i] - want_wavg).abs() < 1e-5);
+    }
+    // Label combos.
+    let mut labels = vec![0f32; chunk * 4];
+    labels[0] = 1.0; // sample 0: one vote
+    labels[4] = 1.0;
+    labels[5] = 1.0; // sample 1: two votes
+    let or = handle.run_combo("or", labels.clone(), active.clone(), vec![]).unwrap();
+    let vote = handle.run_combo("vote", labels.clone(), active.clone(), vec![]).unwrap();
+    assert_eq!(or[0], 1.0);
+    assert_eq!(or[1], 1.0);
+    assert_eq!(or[2], 0.0);
+    // quorum = 3 active: 1 vote is not a majority (2·1 < 3); 2 votes are.
+    assert_eq!(vote[0], 0.0);
+    assert_eq!(vote[1], 1.0);
+}
