@@ -1,0 +1,66 @@
+//! Bench: execution-mode throughput — sequential vs lock-step (paper §4.4)
+//! vs the lock-free batched engine — for all three detectors on the Fig-11
+//! workload shape (R=64, synthetic stream, 4 threads).
+//!
+//! Emits `BENCH_throughput.json` (samples/sec per detector × mode) to seed
+//! the perf trajectory; the acceptance bar is batched ≥ 3× lock-step at
+//! 4 threads.
+
+mod bench_util;
+use bench_util::{cap, Bench};
+
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::ensemble::{run_batched, run_sequential, run_threaded};
+
+const R: usize = 64;
+const THREADS: usize = 4;
+
+fn main() {
+    let b = Bench::new("throughput_modes");
+    let n = cap();
+    let p = DatasetProfile { name: "modes", n, d: 8, outliers: n / 100, clusters: 3 };
+    let ds = generate_profile(&p, 42);
+    let n = ds.n();
+    let mut rows: Vec<(&str, &str, f64)> = Vec::new();
+    for kind in DetectorKind::ALL {
+        let spec = DetectorSpec::new(kind, ds.d, R, 42);
+        let t_seq = b.run(&format!("{}/sequential", kind.as_str()), || {
+            run_sequential(&spec, &ds);
+        });
+        let t_lock = b.run(&format!("{}/lockstep/t{THREADS}", kind.as_str()), || {
+            run_threaded(&spec, &ds, THREADS);
+        });
+        let t_bat = b.run(&format!("{}/batched/t{THREADS}", kind.as_str()), || {
+            run_batched(&spec, &ds, THREADS);
+        });
+        println!(
+            "  -> {}: batched {:.2}x vs lock-step, {:.2}x vs sequential ({:.0} samples/s)",
+            kind.as_str(),
+            t_lock / t_bat,
+            t_seq / t_bat,
+            n as f64 / t_bat
+        );
+        rows.push((kind.as_str(), "sequential", t_seq));
+        rows.push((kind.as_str(), "lockstep", t_lock));
+        rows.push((kind.as_str(), "batched", t_bat));
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"throughput_modes\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n},\n  \"d\": {},\n  \"r\": {R},\n  \"threads\": {THREADS},\n  \"rows\": [\n",
+        ds.d
+    ));
+    for (i, (kind, mode, secs)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"detector\": \"{kind}\", \"mode\": \"{mode}\", \"seconds\": {secs:.6}, \"samples_per_sec\": {:.1}}}{}\n",
+            n as f64 / secs,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_throughput.json", &json) {
+        Ok(()) => println!("wrote BENCH_throughput.json"),
+        Err(e) => eprintln!("could not write BENCH_throughput.json: {e}"),
+    }
+}

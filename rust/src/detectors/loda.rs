@@ -17,25 +17,29 @@ pub struct Loda {
     /// Apply Q16.16 to the ensemble score (FPGA-flavoured arithmetic).
     pub quantize: bool,
     idx_buf: Vec<i32>,
+    /// Per-sub-detector histogram span, hoisted out of the per-sample loop.
+    span: Vec<f32>,
 }
 
 impl Loda {
     pub fn new(params: LodaParams, bins: usize, window: usize) -> Self {
         let r = params.r;
+        let span: Vec<f32> =
+            (0..r).map(|ri| (params.pmax[ri] - params.pmin[ri]).max(1e-12)).collect();
         Loda {
             params,
             bins,
             counts: SlidingCounts::new(r, bins, window),
             quantize: false,
             idx_buf: vec![0; r],
+            span,
         }
     }
 
     #[inline]
     fn bin_index(&self, ri: usize, z: f32) -> i32 {
         let pmin = self.params.pmin[ri];
-        let span = (self.params.pmax[ri] - pmin).max(1e-12);
-        let idx = ((z - pmin) / span * self.bins as f32).floor();
+        let idx = ((z - pmin) / self.span[ri] * self.bins as f32).floor();
         (idx as i32).clamp(0, self.bins as i32 - 1)
     }
 }
@@ -68,6 +72,38 @@ impl Detector for Loda {
             q16(score)
         } else {
             score
+        }
+    }
+
+    /// Batch fast path: bit-identical to the `update` loop, but log2(denom)
+    /// is computed once per sample instead of R times, the histogram span is
+    /// precomputed, and lookup + window insert are fused per row.
+    fn update_batch(&mut self, xs: &[f32], out: &mut [f32]) {
+        let (r, d) = (self.params.r, self.params.d);
+        debug_assert_eq!(xs.len(), out.len() * d);
+        let binsf = self.bins as f32;
+        let bmax = self.bins as i32 - 1;
+        for (x, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
+            let dl = self.counts.denom().log2();
+            let mut sum = 0f32;
+            for ri in 0..r {
+                // ③ Projection (sparse dot product)
+                let w = &self.params.prj[ri * d..(ri + 1) * d];
+                let mut z = 0f32;
+                for (wi, xi) in w.iter().zip(x) {
+                    z += wi * xi;
+                }
+                // ④+⑤ Histogram lookup fused with the window insert
+                let pmin = self.params.pmin[ri];
+                let idx = (((z - pmin) / self.span[ri] * binsf).floor() as i32).clamp(0, bmax);
+                let c = self.counts.get_insert(ri, idx) as f32;
+                // ⑥ Score
+                sum += dl - c.max(1.0).log2();
+            }
+            self.counts.advance();
+            // ⑦ Score averaging
+            let score = sum / r as f32;
+            *o = if self.quantize { q16(score) } else { score };
         }
     }
 
@@ -151,6 +187,17 @@ mod tests {
         }
         det.reset();
         assert_eq!(det.update(&data[0..3]), s0);
+    }
+
+    #[test]
+    fn update_batch_matches_update_exactly() {
+        let (mut a, data) = mk(6, 3, 9);
+        let (mut b, _) = mk(6, 3, 9);
+        let single: Vec<f32> = data.chunks_exact(3).map(|x| a.update(x)).collect();
+        let mut batch = vec![0f32; 64];
+        b.update_batch(&data, &mut batch);
+        assert_eq!(single, batch);
+        assert_eq!(a.hist(), b.hist());
     }
 
     #[test]

@@ -33,6 +33,23 @@ pub trait Detector: Send {
     fn d(&self) -> usize;
     fn name(&self) -> &'static str;
 
+    /// Score a row-major `[n, d]` batch into `out` (`n = out.len()`).
+    ///
+    /// Semantically identical to calling [`Detector::update`] per sample
+    /// (bit-identical scores, same window state afterwards), but detectors
+    /// override it with a hand-optimised loop: per-sample `log2(denom)` and
+    /// parameter-derived spans/scales are hoisted out of the R-loop, and
+    /// the count-table get+insert pair is fused
+    /// ([`window::SlidingCounts::get_insert`]). This is the hot path of the
+    /// batched execution engine ([`crate::ensemble::run_batched`]).
+    fn update_batch(&mut self, xs: &[f32], out: &mut [f32]) {
+        let d = self.d();
+        debug_assert_eq!(xs.len(), out.len() * d);
+        for (x, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
+            *o = self.update(x);
+        }
+    }
+
     /// Convenience: score a whole row-major `[n, d]` stream.
     fn run_stream(&mut self, xs: &[f32]) -> Vec<f32> {
         let d = self.d();
@@ -191,6 +208,26 @@ mod tests {
         }
         assert_eq!(DetectorKind::parse("A"), Some(DetectorKind::Loda));
         assert_eq!(DetectorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn update_batch_is_bit_identical_to_update_loop() {
+        let mut p = Prng::new(11);
+        let data: Vec<f32> = (0..60 * 4).map(|_| p.gaussian() as f32).collect();
+        for kind in DetectorKind::ALL {
+            let mut spec = DetectorSpec::new(kind, 4, 5, 13);
+            spec.window = 16;
+            let mut a = spec.build(&data[..16 * 4]);
+            let mut b = spec.build(&data[..16 * 4]);
+            let single: Vec<f32> = data.chunks_exact(4).map(|x| a.update(x)).collect();
+            let mut batched = vec![0f32; 60];
+            // Uneven batch splits so mid-stream state hand-off is covered.
+            for (lo, hi) in [(0usize, 1usize), (1, 16), (16, 47), (47, 60)] {
+                let (xs, out) = (&data[lo * 4..hi * 4], &mut batched[lo..hi]);
+                b.update_batch(xs, out);
+            }
+            assert_eq!(single, batched, "{kind:?} batch path diverged");
+        }
     }
 
     #[test]

@@ -15,11 +15,15 @@ pub struct RsHash {
     pub quantize: bool,
     idx_buf: Vec<i32>,
     key_buf: Vec<i32>,
+    /// Per-dimension normalisation span, hoisted out of the per-sample loop.
+    span: Vec<f32>,
 }
 
 impl RsHash {
     pub fn new(params: RsHashParams, w: usize, modulus: usize, window: usize) -> Self {
         let (r, d) = (params.r, params.d);
+        let span: Vec<f32> =
+            (0..d).map(|di| (params.dmax[di] - params.dmin[di]).max(1e-12)).collect();
         RsHash {
             params,
             w,
@@ -28,6 +32,7 @@ impl RsHash {
             quantize: false,
             idx_buf: vec![0; r * w],
             key_buf: vec![0; d],
+            span,
         }
     }
 }
@@ -43,8 +48,7 @@ impl Detector for RsHash {
             //    f32 op order: norm, +α, /f, floor).
             let f = self.params.f[ri];
             for di in 0..d {
-                let span = (self.params.dmax[di] - self.params.dmin[di]).max(1e-12);
-                let norm = (x[di] - self.params.dmin[di]) / span;
+                let norm = (x[di] - self.params.dmin[di]) / self.span[di];
                 let prj = (norm + self.params.alpha[ri * d + di]) / f;
                 self.key_buf[di] = prj.floor() as i32;
             }
@@ -65,6 +69,40 @@ impl Detector for RsHash {
             q16(score)
         } else {
             score
+        }
+    }
+
+    /// Batch fast path: bit-identical to the `update` loop, with log2(denom)
+    /// computed once per sample instead of R times and the per-row CMS
+    /// get+insert pair fused (no idx_buf round-trip).
+    fn update_batch(&mut self, xs: &[f32], out: &mut [f32]) {
+        let (r, d, w) = (self.params.r, self.params.d, self.w);
+        debug_assert_eq!(xs.len(), out.len() * d);
+        let modulus = self.modulus as u32;
+        for (x, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
+            let dl = self.counts.denom().log2();
+            let mut sum = 0f32;
+            for ri in 0..r {
+                // ③ Projection: normalise + integer grid
+                let f = self.params.f[ri];
+                let alpha = &self.params.alpha[ri * d..(ri + 1) * d];
+                for di in 0..d {
+                    let norm = (x[di] - self.params.dmin[di]) / self.span[di];
+                    let prj = (norm + alpha[di]) / f;
+                    self.key_buf[di] = prj.floor() as i32;
+                }
+                // ④+⑤ Hash per CMS row, count fused with the window insert
+                let mut min_c = i32::MAX;
+                for row in 0..w {
+                    let idx = jenkins_mod_i32(&self.key_buf, (row + 1) as u32, modulus);
+                    min_c = min_c.min(self.counts.get_insert(ri * w + row, idx));
+                }
+                // ⑥ Score
+                sum += dl - (1.0 + min_c as f32).log2();
+            }
+            self.counts.advance();
+            let score = sum / r as f32;
+            *o = if self.quantize { q16(score) } else { score };
         }
     }
 
@@ -152,6 +190,17 @@ mod tests {
             let total: i32 = cms[row * 64..(row + 1) * 64].iter().sum();
             assert_eq!(total, 16);
         }
+    }
+
+    #[test]
+    fn update_batch_matches_update_exactly() {
+        let (mut a, data) = mk(5, 4, 9);
+        let (mut b, _) = mk(5, 4, 9);
+        let single: Vec<f32> = data.chunks_exact(4).map(|x| a.update(x)).collect();
+        let mut batch = vec![0f32; 128];
+        b.update_batch(&data, &mut batch);
+        assert_eq!(single, batch);
+        assert_eq!(a.cms(), b.cms());
     }
 
     #[test]

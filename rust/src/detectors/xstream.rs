@@ -15,11 +15,24 @@ pub struct XStream {
     idx_buf: Vec<i32>,
     z_buf: Vec<f32>,
     key_buf: Vec<i32>,
+    /// Precomputed `[R, w, K]` bin scales (2^(row+1) / width), hoisting a
+    /// division per projection dim per row out of the per-sample loop.
+    scale: Vec<f32>,
 }
 
 impl XStream {
     pub fn new(params: XStreamParams, modulus: usize, window: usize) -> Self {
         let (r, w, k) = (params.r, params.w, params.k);
+        let mut scale = vec![0f32; r * w * k];
+        for ri in 0..r {
+            for row in 0..w {
+                let pow = (1u32 << (row + 1)) as f32;
+                for ki in 0..k {
+                    let width = params.width[ri * k + ki].max(1e-12);
+                    scale[(ri * w + row) * k + ki] = pow / width;
+                }
+            }
+        }
         XStream {
             params,
             modulus,
@@ -28,6 +41,7 @@ impl XStream {
             idx_buf: vec![0; r * w],
             z_buf: vec![0.0; k],
             key_buf: vec![0; k],
+            scale,
         }
     }
 }
@@ -51,11 +65,11 @@ impl Detector for XStream {
             let mut min_weighted = f32::INFINITY;
             for row in 0..w {
                 let pow = (1u32 << (row + 1)) as f32; // 2^(row+1)
+                let base = (ri * w + row) * k;
                 for ki in 0..k {
-                    let width = self.params.width[ri * k + ki].max(1e-12);
-                    let scale = pow / width;
-                    let shift = self.params.shift[(ri * w + row) * k + ki];
-                    self.key_buf[ki] = ((self.z_buf[ki] - shift) * scale).floor() as i32;
+                    let shift = self.params.shift[base + ki];
+                    self.key_buf[ki] =
+                        ((self.z_buf[ki] - shift) * self.scale[base + ki]).floor() as i32;
                 }
                 let idx = jenkins_mod_i32(&self.key_buf, (row + 1) as u32, self.modulus as u32);
                 self.idx_buf[ri * w + row] = idx;
@@ -72,6 +86,49 @@ impl Detector for XStream {
             q16(score)
         } else {
             score
+        }
+    }
+
+    /// Batch fast path: bit-identical to the `update` loop. log2(denom) is
+    /// computed once per sample (not R times), bin scales come from the
+    /// precomputed table (a division per dim per row in `update`), and the
+    /// per-row CMS get+insert pair is fused.
+    fn update_batch(&mut self, xs: &[f32], out: &mut [f32]) {
+        let (r, d, k, w) = (self.params.r, self.params.d, self.params.k, self.params.w);
+        debug_assert_eq!(xs.len(), out.len() * d);
+        let modulus = self.modulus as u32;
+        for (x, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
+            let dl = self.counts.denom().log2();
+            let mut sum = 0f32;
+            for ri in 0..r {
+                // ③ Projection [d] → [K]
+                for ki in 0..k {
+                    let mut z = 0f32;
+                    for di in 0..d {
+                        z += x[di] * self.params.proj[(ri * d + di) * k + ki];
+                    }
+                    self.z_buf[ki] = z;
+                }
+                // ④+⑤ perbins + hash per CMS row, fused with the window insert
+                let mut min_weighted = f32::INFINITY;
+                for row in 0..w {
+                    let pow = (1u32 << (row + 1)) as f32;
+                    let base = (ri * w + row) * k;
+                    for ki in 0..k {
+                        let shift = self.params.shift[base + ki];
+                        self.key_buf[ki] =
+                            ((self.z_buf[ki] - shift) * self.scale[base + ki]).floor() as i32;
+                    }
+                    let idx = jenkins_mod_i32(&self.key_buf, (row + 1) as u32, modulus);
+                    let c = self.counts.get_insert(ri * w + row, idx) as f32;
+                    min_weighted = min_weighted.min(c * pow);
+                }
+                // ⑥ Score
+                sum += dl - (1.0 + min_weighted).log2();
+            }
+            self.counts.advance();
+            let score = sum / r as f32;
+            *o = if self.quantize { q16(score) } else { score };
         }
     }
 
@@ -148,6 +205,17 @@ mod tests {
         // Not a strict theorem under hashing, but with 64 buckets / 16 window
         // collisions are rare; the deterministic seed keeps this stable.
         assert!(max_row2 <= max_row1 + 1);
+    }
+
+    #[test]
+    fn update_batch_matches_update_exactly() {
+        let (mut a, data) = mk(4, 3, 9);
+        let (mut b, _) = mk(4, 3, 9);
+        let single: Vec<f32> = data.chunks_exact(3).map(|x| a.update(x)).collect();
+        let mut batch = vec![0f32; 128];
+        b.update_batch(&data, &mut batch);
+        assert_eq!(single, batch);
+        assert_eq!(a.cms(), b.cms());
     }
 
     #[test]

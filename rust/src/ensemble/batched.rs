@@ -1,0 +1,187 @@
+//! Batched, lock-free execution engine — the fast path beside the
+//! paper-faithful lock-step baseline (`threaded.rs`).
+//!
+//! The paper's CPU comparison system merges every sample under a mutex and
+//! a barrier, which caps its speed-up at 4 threads (Fig 11). That
+//! contention is an artifact of the synchronisation scheme, not of the
+//! computation: sub-detectors partitioned across threads share *no* state
+//! (each slice owns its own windows), so nothing forces per-sample
+//! synchronisation. This runner exploits that:
+//!
+//! - each worker owns its sub-detector slice **and its own partial-score
+//!   vector**, scoring the stream chunk-by-chunk through the detectors'
+//!   hand-optimised [`crate::detectors::Detector::update_batch`] loops;
+//! - no mutex, no barrier — workers never touch shared mutable state;
+//! - partials are merged in a single pass after the scoped join.
+//!
+//! Scores are numerically equivalent to [`super::run_sequential`] within
+//! 1e-4 (the partition changes only the f32 summation order — the same
+//! tolerance `run_threaded` is held to) and the per-thread chunk loop is
+//! bit-identical to that thread's `update` loop.
+
+use crate::data::Dataset;
+use crate::defaults;
+use crate::detectors::DetectorSpec;
+
+/// Default samples per `update_batch` call. Large enough to amortise the
+/// virtual dispatch and keep the inner loops hot; small enough that a
+/// worker's working set (chunk × d inputs + chunk partials) stays cached.
+pub const DEFAULT_CHUNK: usize = defaults::CHUNK;
+
+/// Run `spec` over `ds` with `threads` workers, lock-free, merging once.
+/// Returns per-sample ensemble scores (mean over all R sub-detectors).
+pub fn run_batched(spec: &DetectorSpec, ds: &Dataset, threads: usize) -> Vec<f32> {
+    run_batched_chunked(spec, ds, threads, DEFAULT_CHUNK)
+}
+
+/// [`run_batched`] with an explicit chunk size (exposed for the parity
+/// property tests and chunk-size sweeps; chunk is clamped to ≥ 1).
+pub fn run_batched_chunked(
+    spec: &DetectorSpec,
+    ds: &Dataset,
+    threads: usize,
+    chunk: usize,
+) -> Vec<f32> {
+    let threads = threads.max(1).min(spec.r);
+    let chunk = chunk.max(1);
+    let n = ds.n();
+    let warmup = ds.warmup(spec.window);
+    let data: &[f32] = &ds.data;
+    let d = ds.d;
+
+    if threads == 1 {
+        // Single worker: still the batch fast path, no partition overhead.
+        let mut det = spec.build(warmup);
+        let mut out = vec![0f32; n];
+        let mut i = 0;
+        while i < n {
+            let m = chunk.min(n - i);
+            det.update_batch(&data[i * d..(i + m) * d], &mut out[i..i + m]);
+            i += m;
+        }
+        return out;
+    }
+
+    // Equal partition of sub-detectors, identical to the lock-step runner.
+    let ranges = super::partition_r(spec.r, threads);
+    let r_total = spec.r as f32;
+
+    let partials: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                let mut det = spec.build_slice(warmup, lo, hi);
+                let weight = (hi - lo) as f32 / r_total;
+                scope.spawn(move || {
+                    // Contention-free: this vector is exclusively ours until
+                    // the scoped join hands it back for the merge pass.
+                    let mut part = vec![0f32; n];
+                    let mut i = 0;
+                    while i < n {
+                        let m = chunk.min(n - i);
+                        det.update_batch(&data[i * d..(i + m) * d], &mut part[i..i + m]);
+                        i += m;
+                    }
+                    for v in &mut part {
+                        *v *= weight;
+                    }
+                    part
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Single merge pass over all partials — the only cross-thread step.
+    let mut iter = partials.into_iter();
+    let mut out = iter.next().unwrap_or_else(|| vec![0f32; n]);
+    for part in iter {
+        for (o, p) in out.iter_mut().zip(&part) {
+            *o += p;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_profile, DatasetProfile};
+    use crate::detectors::{DetectorKind, DetectorSpec};
+    use crate::ensemble::{run_sequential, run_threaded};
+
+    fn tiny_ds() -> Dataset {
+        let p = DatasetProfile { name: "t", n: 180, d: 3, outliers: 9, clusters: 2 };
+        generate_profile(&p, 4)
+    }
+
+    #[test]
+    fn batched_matches_sequential_for_all_kinds() {
+        let ds = tiny_ds();
+        for kind in DetectorKind::ALL {
+            let spec = DetectorSpec::new(kind, 3, 6, 5);
+            let seq = run_sequential(&spec, &ds);
+            for t in [1, 2, 3, 4] {
+                let fast = run_batched(&spec, &ds, t);
+                for (i, (a, b)) in seq.iter().zip(&fast).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-4,
+                        "{kind:?} t={t} sample {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_thread_is_bit_identical_to_sequential() {
+        // A single worker runs the full ensemble in sequential accumulation
+        // order, so even the f32 bits agree.
+        let ds = tiny_ds();
+        for chunk in [1usize, 7, 180, 1000] {
+            let spec = DetectorSpec::new(DetectorKind::Loda, 3, 4, 1);
+            let fast = run_batched_chunked(&spec, &ds, 1, chunk);
+            assert_eq!(fast, run_sequential(&spec, &ds), "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_scores() {
+        let ds = tiny_ds();
+        let spec = DetectorSpec::new(DetectorKind::RsHash, 3, 5, 7);
+        let base = run_batched_chunked(&spec, &ds, 2, 64);
+        for chunk in [1usize, 3, 179, 181] {
+            assert_eq!(run_batched_chunked(&spec, &ds, 2, chunk), base, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn batched_matches_lockstep_partition() {
+        // Same sub-detector partition + same weighted merge arithmetic as
+        // the lock-step baseline (only the f32 merge order differs — the
+        // lock-step accumulator adds partials in thread-arrival order).
+        let ds = tiny_ds();
+        for kind in DetectorKind::ALL {
+            let spec = DetectorSpec::new(kind, 3, 7, 9); // 7 % 3 != 0: uneven
+            for t in [2, 3] {
+                let slow = run_threaded(&spec, &ds, t);
+                let fast = run_batched(&spec, &ds, t);
+                for (i, (a, b)) in slow.iter().zip(&fast).enumerate() {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "{kind:?} t={t} sample {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_threads_than_subdetectors_is_clamped() {
+        let ds = tiny_ds();
+        let spec = DetectorSpec::new(DetectorKind::XStream, 3, 3, 1);
+        let scores = run_batched(&spec, &ds, 16);
+        assert_eq!(scores.len(), 180);
+        assert!(scores.iter().all(|s| s.is_finite()));
+    }
+}

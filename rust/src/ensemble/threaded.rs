@@ -5,7 +5,7 @@
 //! threads to guarantee the streaming mode execution", §4.4). This is the
 //! contention source that caps the paper's speed-up at 4 threads (Fig 11).
 
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Barrier, Mutex};
 
 use crate::data::Dataset;
 use crate::detectors::DetectorSpec;
@@ -19,29 +19,18 @@ pub fn run_threaded(spec: &DetectorSpec, ds: &Dataset, threads: usize) -> Vec<f3
     }
     let n = ds.n();
     let warmup = ds.warmup(spec.window);
-    // Equal partition of sub-detectors (paper: "equally distribute the same
-    // number of sub-detectors to each CPU thread").
-    let base = spec.r / threads;
-    let extra = spec.r % threads;
-    let mut ranges = Vec::with_capacity(threads);
-    let mut r0 = 0;
-    for t in 0..threads {
-        let len = base + usize::from(t < extra);
-        ranges.push((r0, r0 + len));
-        r0 += len;
-    }
+    let ranges = super::partition_r(spec.r, threads);
 
-    let acc: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(vec![0f32; n]));
-    let barrier = Arc::new(Barrier::new(threads));
-    let data: Arc<Vec<f32>> = Arc::new(ds.data.clone());
+    let acc: Mutex<Vec<f32>> = Mutex::new(vec![0f32; n]);
+    let barrier = Barrier::new(threads);
+    // Scoped threads borrow the dataset directly — no per-call clone.
+    let data: &[f32] = &ds.data;
     let d = ds.d;
     let r_total = spec.r as f32;
 
     std::thread::scope(|scope| {
         for &(lo, hi) in &ranges {
-            let acc = Arc::clone(&acc);
-            let barrier = Arc::clone(&barrier);
-            let data = Arc::clone(&data);
+            let (acc, barrier) = (&acc, &barrier);
             let mut det = spec.build_slice(warmup, lo, hi);
             let weight = (hi - lo) as f32 / r_total;
             scope.spawn(move || {
@@ -61,7 +50,7 @@ pub fn run_threaded(spec: &DetectorSpec, ds: &Dataset, threads: usize) -> Vec<f3
         }
     });
 
-    Arc::try_unwrap(acc).unwrap().into_inner().unwrap()
+    acc.into_inner().unwrap()
 }
 
 #[cfg(test)]

@@ -11,7 +11,7 @@ use std::time::Instant;
 use super::report::Table;
 use super::ExpCtx;
 use crate::detectors::{DetectorKind, DetectorSpec};
-use crate::ensemble::run_threaded;
+use crate::ensemble::{run_batched, run_threaded};
 
 pub const THREADS: [usize; 5] = [1, 2, 4, 8, 16];
 
@@ -43,11 +43,13 @@ pub fn run(ctx: &ExpCtx) -> Result<String> {
     ));
     let mut t = Table::new(vec!["threads", "time", "speedup (measured)", "speedup (paper)"]);
     let mut t1 = None;
+    let mut lockstep_times = Vec::new();
     for threads in THREADS {
         let t0 = Instant::now();
         let scores = run_threaded(&spec, &ds, threads);
         let dt = t0.elapsed().as_secs_f64();
         assert_eq!(scores.len(), ds.n());
+        lockstep_times.push(dt);
         let base = *t1.get_or_insert(dt);
         t.row(vec![
             threads.to_string(),
@@ -58,6 +60,24 @@ pub fn run(ctx: &ExpCtx) -> Result<String> {
     }
     out.push_str(&t.render());
     out.push_str("paper: 4 threads always best; mutex sync overhead dominates beyond that.\n");
+
+    // The batched lock-free fast path (ExecMode::Batched) on the same
+    // workload — same partition, no mutex/barrier. The lock-step table
+    // above is the untouched Fig 11 reproduction.
+    out.push_str("\n-- batched fast path (lock-free, same partition) --\n");
+    let mut tb = Table::new(vec!["threads", "time", "speedup vs lock-step @same threads"]);
+    for (i, &threads) in THREADS.iter().enumerate() {
+        let t0 = Instant::now();
+        let scores = run_batched(&spec, &ds, threads);
+        let dt = t0.elapsed().as_secs_f64();
+        assert_eq!(scores.len(), ds.n());
+        tb.row(vec![
+            threads.to_string(),
+            format!("{:.1} ms", dt * 1e3),
+            format!("{:.2}x", lockstep_times[i] / dt),
+        ]);
+    }
+    out.push_str(&tb.render());
     Ok(out)
 }
 

@@ -9,6 +9,7 @@ pub mod fig15_16;
 pub mod fig17;
 pub mod fig18_19;
 pub mod fig20;
+pub mod modes;
 pub mod perf;
 pub mod report;
 pub mod table3_4;
@@ -161,6 +162,8 @@ EXPERIMENTS (fsead exp …):
   table3 table4 fig10 table5 table6 table7 table8 table9 table10
   fig11 fig12 table11 table12 fig15 fig16 fig17 fig18 fig19
   table13 fig20 all
+  modes                     sequential / lock-step / batched CPU engines
+  perf                      per-layer hot-path profile
 
 FLAGS:
   --seed N          base RNG seed (default 42)
@@ -193,6 +196,7 @@ pub fn run_experiment(ctx: &ExpCtx, id: &str) -> Result<String> {
             "fig18" | "fig19" => fig18_19::run(ctx)?,
             "table13" => table13::run(ctx)?,
             "fig20" => fig20::run(ctx)?,
+            "modes" => modes::run(ctx)?,
             "perf" => perf::run(ctx)?,
             other => bail!("unknown experiment {other:?}"),
         })

@@ -1,0 +1,86 @@
+//! Execution modes (`fsead exp modes`): sequential vs lock-step (the paper's
+//! §4.4 scheme) vs the lock-free batched engine, on the Fig-11 workload
+//! shape — R=64 sub-detectors over a synthetic stream, 4 worker threads.
+//! This is the CPU-side half of the perf trajectory recorded by
+//! `benches/throughput_modes.rs` (`BENCH_throughput.json`).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::report::Table;
+use super::ExpCtx;
+use crate::data::synth::{generate_profile, DatasetProfile};
+use crate::detectors::{DetectorKind, DetectorSpec};
+use crate::ensemble::{run_ensemble, run_sequential, ExecMode};
+
+/// Acceptance workload: R=64 sub-detectors, 4 threads.
+pub const R: usize = 64;
+pub const THREADS: usize = 4;
+
+pub fn run(ctx: &ExpCtx) -> Result<String> {
+    let n = ctx.max_samples.unwrap_or(20_000).min(20_000);
+    let profile = DatasetProfile { name: "modes", n, d: 8, outliers: n / 100, clusters: 3 };
+    let ds = generate_profile(&profile, ctx.seed);
+    let mut out = format!(
+        "== Execution modes: sequential / lock-step / batched (synthetic n={} d={} R={R}, {THREADS} threads) ==\n",
+        ds.n(),
+        ds.d
+    );
+    let mut t = Table::new(vec!["detector", "mode", "time", "samples/s", "vs lock-step"]);
+    for kind in DetectorKind::ALL {
+        let spec = DetectorSpec::new(kind, ds.d, R, ctx.seed);
+        let t0 = Instant::now();
+        let seq = run_sequential(&spec, &ds);
+        let t_seq = t0.elapsed().as_secs_f64();
+        let mut t_lock = f64::NAN;
+        for mode in ExecMode::ALL {
+            let t0 = Instant::now();
+            let scores = run_ensemble(&spec, &ds, THREADS, mode);
+            let dt = t0.elapsed().as_secs_f64();
+            if mode == ExecMode::LockStep {
+                t_lock = dt;
+            }
+            // Every mode must agree with the sequential reference.
+            for (i, (a, b)) in seq.iter().zip(&scores).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "{kind:?} {mode:?} diverged at sample {i}: {a} vs {b}"
+                );
+            }
+            t.row(vec![
+                kind.as_str().into(),
+                mode.as_str().into(),
+                format!("{:.1} ms", dt * 1e3),
+                format!("{:.0}", ds.n() as f64 / dt),
+                format!("{:.2}x", t_lock / dt),
+            ]);
+        }
+        t.row(vec![
+            kind.as_str().into(),
+            "sequential".into(),
+            format!("{:.1} ms", t_seq * 1e3),
+            format!("{:.0}", ds.n() as f64 / t_seq),
+            format!("{:.2}x", t_lock / t_seq),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "lock-step reproduces Fig 11's mutex+barrier contention; batched is the\n\
+         production path (lock-free chunked workers, one merge pass).\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_quickly_on_small_prefix() {
+        let ctx = ExpCtx { max_samples: Some(400), ..Default::default() };
+        let out = run(&ctx).unwrap();
+        assert!(out.contains("batched"));
+        assert!(out.contains("lockstep"));
+        assert!(out.contains("sequential"));
+    }
+}

@@ -29,6 +29,7 @@ pub fn run(ctx: &ExpCtx) -> Result<String> {
         "artifact",
         "chunks",
         "wall ms/chunk",
+        "burst ms/chunk",
         "device ms/chunk",
         "marshal %",
         "device µs/sample",
@@ -57,6 +58,18 @@ pub fn run(ctx: &ExpCtx) -> Result<String> {
         let wall = t0.elapsed().as_secs_f64();
         let after = handle.stats()?;
         let dev = after.execute_secs - before.execute_secs;
+        // Burst submission: one channel round-trip for the whole stream
+        // (the fast-path plumbing) — isolates the per-chunk hop cost.
+        // Skip the warm-up chunk so the burst covers the same chunk set as
+        // the per-chunk wall measurement above and the columns compare.
+        let burst: Vec<(Vec<f32>, Vec<f32>)> = ChunkStream::new(&ds.data, d, meta.chunk)
+            .skip(1)
+            .map(|c| (c.data, c.mask))
+            .collect();
+        let n_burst = burst.len().max(1) as f64;
+        let t2 = Instant::now();
+        handle.run_chunks(inst, burst)?;
+        let burst_wall = t2.elapsed().as_secs_f64();
         // CPU baseline per-sample (same R).
         let spec = DetectorSpec::new(kind, d, r, ctx.seed);
         let mut det = spec.build(ds.warmup(hyper.window));
@@ -67,6 +80,7 @@ pub fn run(ctx: &ExpCtx) -> Result<String> {
             meta.name.clone(),
             n_chunks.to_string(),
             format!("{:.3}", wall * 1e3 / n_chunks as f64),
+            format!("{:.3}", burst_wall * 1e3 / n_burst),
             format!("{:.3}", dev * 1e3 / n_chunks as f64),
             format!("{:.1}", (wall - dev) / wall * 100.0),
             format!("{:.2}", dev * 1e6 / n_samples as f64),

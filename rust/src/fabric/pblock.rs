@@ -102,9 +102,10 @@ impl LoadedRm {
                 let d = det.d();
                 let rows = flit.mask.len();
                 let mut scores = vec![0f32; rows];
-                for i in 0..flit.n_valid {
-                    scores[i] = det.update(&flit.data[i * d..(i + 1) * d]);
-                }
+                // Batch fast path over the whole flit (bit-identical to the
+                // per-sample update loop); padding rows stay zero-scored.
+                let n = flit.n_valid;
+                det.update_batch(&flit.data[..n * d], &mut scores[..n]);
                 Ok(Some(score_chunk(flit.seq, scores, flit.mask.clone(), flit.n_valid, flit.last)))
             }
             LoadedRm::DetectorFpga { handle, inst, chunk, d } => {

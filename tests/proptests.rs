@@ -7,6 +7,7 @@ use fsead::config::{ComboCfg, FseadConfig, PblockCfg, RmKind};
 use fsead::data::stream::ChunkStream;
 use fsead::detectors::window::SlidingCounts;
 use fsead::detectors::{quantize::q16, DetectorKind, DetectorSpec};
+use fsead::ensemble::{run_batched_chunked, run_sequential};
 use fsead::fabric::AxiSwitch;
 use fsead::metrics::{auc_roc, normalize_scores};
 use fsead::prop_assert;
@@ -182,6 +183,42 @@ fn detectors_deterministic_and_finite() {
         prop_assert!(a == b, "{kind:?} nondeterministic");
         prop_assert!(a.iter().all(|s| s.is_finite()), "{kind:?} non-finite score");
         prop_assert!(a.len() == n, "{kind:?} wrong score count");
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_engine_matches_sequential() {
+    // The lock-free batched engine must agree with the sequential reference
+    // within 1e-4 for every detector kind, uneven R/thread splits, and
+    // chunk sizes {1, W-1, W, 3W+1} straddling the sliding window.
+    forall("batched-parity", 16, |g| {
+        let kind = *g.pick(&DetectorKind::ALL);
+        let d = g.usize_in(1, 6);
+        let r = g.usize_in(1, 9);
+        let n = g.usize_in(2, 160);
+        let seed = g.usize_in(0, 1_000_000) as u64;
+        let threads = g.usize_in(1, 5); // r % threads != 0 ⇒ uneven splits
+        let mut spec = DetectorSpec::new(kind, d, r, seed);
+        spec.window = g.usize_in(1, 48);
+        let w = spec.window;
+        let ds = fsead::data::Dataset {
+            name: "prop".into(),
+            d,
+            data: g.gaussian_vec(n * d),
+            labels: vec![false; n],
+        };
+        let seq = run_sequential(&spec, &ds);
+        for chunk in [1, w.saturating_sub(1).max(1), w, 3 * w + 1] {
+            let fast = run_batched_chunked(&spec, &ds, threads, chunk);
+            prop_assert!(fast.len() == n, "{kind:?}: {} scores != {n}", fast.len());
+            for (i, (a, b)) in seq.iter().zip(&fast).enumerate() {
+                prop_assert!(
+                    (a - b).abs() < 1e-4,
+                    "{kind:?} r={r} t={threads} chunk={chunk} sample {i}: {a} vs {b}"
+                );
+            }
+        }
         Ok(())
     });
 }
