@@ -1,0 +1,123 @@
+//! Bench: fabric data-plane throughput — the per-flit (lock-step) service
+//! loop vs zero-copy burst servicing — on the 4-pblock synthetic topology
+//! (4 Loda pblocks on one shared stream; once routed direct to host, once
+//! joined by an averaging combo).
+//!
+//! The flit granularity is deliberately fine (`CHUNK = 4` samples per
+//! transfer) so the measurement isolates what the burst data plane
+//! amortises: per-transfer channel hops, per-flit RM invocations and
+//! per-flit allocation. At the artifact chunk size (256) both paths are
+//! compute-bound and converge. Scores are asserted bit-identical between
+//! the two modes before timing starts.
+//!
+//! Emits `BENCH_fabric.json` (seconds + samples/sec per topology × mode,
+//! plus the burst speed-up) for the perf trajectory; the acceptance bar is
+//! burst ≥ 2× per-flit samples/sec on this topology.
+
+mod bench_util;
+use bench_util::{cap, Bench};
+
+use fsead::config::{ComboCfg, FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::ExecMode;
+use fsead::fabric::Fabric;
+
+/// Samples per flit for the timed runs (fine-grained on purpose, see above).
+const CHUNK: usize = 4;
+
+fn topology(exec: ExecMode, combo: bool, chunk: usize) -> FseadConfig {
+    let mut cfg = FseadConfig::default();
+    cfg.use_fpga = false;
+    cfg.exec = exec;
+    cfg.chunk = chunk;
+    for id in 1..=4usize {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 2,
+            stream: 0,
+        });
+    }
+    if combo {
+        cfg.combos.push(ComboCfg {
+            id: 1,
+            method: "avg".into(),
+            inputs: vec![1, 2, 3, 4],
+            weights: vec![],
+        });
+    }
+    cfg
+}
+
+fn main() {
+    let bench = Bench::new("fabric_pipeline");
+    let n = cap();
+    let p = DatasetProfile { name: "fabric", n, d: 4, outliers: n / 100, clusters: 3 };
+    let ds = generate_profile(&p, 42);
+    let n = ds.n();
+
+    // Parity gate before timing: the burst path must reproduce the
+    // per-flit path bit-for-bit on CPU RMs.
+    {
+        let mut a = Fabric::new(topology(ExecMode::LockStep, true, 64), vec![ds.clone()]).unwrap();
+        let mut b = Fabric::new(topology(ExecMode::Batched, true, 64), vec![ds.clone()]).unwrap();
+        let oa = a.run().unwrap();
+        let ob = b.run().unwrap();
+        assert_eq!(
+            oa.combo_scores[&1], ob.combo_scores[&1],
+            "burst scores drifted from the per-flit path"
+        );
+        println!("parity: burst == per-flit on {n} samples (bit-identical)");
+    }
+
+    let mut rows: Vec<(&str, &str, f64)> = Vec::new();
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+    for (topo, combo) in [("direct4", false), ("combo4", true)] {
+        let mut secs = [0f64; 2];
+        for (mi, mode) in ExecMode::ALL.iter().enumerate() {
+            let mut fabric =
+                Fabric::new(topology(*mode, combo, CHUNK), vec![ds.clone()]).unwrap();
+            let t = bench.run(&format!("{topo}/{}", mode.as_str()), || {
+                fabric.reset_all().unwrap();
+                let out = fabric.run().unwrap();
+                assert!(out.switch_flits > 0);
+            });
+            secs[mi] = t;
+            rows.push((topo, mode.as_str(), t));
+        }
+        let sp = secs[0] / secs[1]; // lock-step seconds / batched seconds
+        println!(
+            "  -> {topo}: burst {:.2}x vs per-flit ({:.0} samples/s burst, {:.0} per-flit)",
+            sp,
+            n as f64 / secs[1],
+            n as f64 / secs[0]
+        );
+        speedups.push((topo, sp));
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"fabric_pipeline\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n},\n  \"d\": {},\n  \"chunk\": {CHUNK},\n  \"pblocks\": 4,\n  \"rows\": [\n",
+        ds.d
+    ));
+    for (i, (topo, mode, secs)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"topology\": \"{topo}\", \"mode\": \"{mode}\", \"seconds\": {secs:.6}, \"samples_per_sec\": {:.1}}}{}\n",
+            n as f64 / secs,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"burst_speedup\": {\n");
+    for (i, (topo, sp)) in speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{topo}\": {sp:.3}{}\n",
+            if i + 1 < speedups.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    match std::fs::write("BENCH_fabric.json", &json) {
+        Ok(()) => println!("wrote BENCH_fabric.json"),
+        Err(e) => eprintln!("could not write BENCH_fabric.json: {e}"),
+    }
+}

@@ -10,6 +10,7 @@ use toml::Doc;
 
 use crate::defaults;
 use crate::detectors::DetectorKind;
+use crate::ensemble::ExecMode;
 
 /// What occupies a reconfigurable partition.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -106,6 +107,10 @@ pub struct FseadConfig {
     /// Execute detector RMs on the PJRT "FPGA" (false = CPU-native RMs,
     /// useful for fast tests and the CPU baseline comparison).
     pub use_fpga: bool,
+    /// How pblocks drain their inboxes: `Batched` (burst servicing, the
+    /// production fast path — default) or `LockStep` (paper-faithful
+    /// per-flit loop). TOML: `exec = "batched" | "lockstep"` in `[fabric]`.
+    pub exec: ExecMode,
     pub hyper: DetectorHyper,
     pub dataset: DatasetCfg,
     pub pblocks: Vec<PblockCfg>,
@@ -119,6 +124,7 @@ impl Default for FseadConfig {
             chunk: defaults::CHUNK,
             artifact_dir: "artifacts".to_string(),
             use_fpga: true,
+            exec: ExecMode::Batched,
             hyper: DetectorHyper::default(),
             dataset: DatasetCfg { name: "cardio".into(), data_dir: None, max_samples: 0 },
             pblocks: vec![],
@@ -151,6 +157,10 @@ impl FseadConfig {
         }
         if let Some(v) = doc.get_bool("fabric", "use_fpga") {
             cfg.use_fpga = v;
+        }
+        if let Some(v) = doc.get_str("fabric", "exec") {
+            cfg.exec = ExecMode::parse(v)
+                .with_context(|| format!("[fabric]: unknown exec mode {v:?}"))?;
         }
         if let Some(v) = doc.get_int("detector", "window") {
             cfg.hyper.window = v as usize;
@@ -436,6 +446,17 @@ inputs = [1, 2]
         assert_eq!(cfg.pblocks[1].r, 5);
         assert_eq!(cfg.combos[0].inputs, vec![1, 2]);
         assert!(cfg.direct_outputs().is_empty());
+    }
+
+    #[test]
+    fn exec_mode_parses_and_defaults_to_batched() {
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert_eq!(cfg.exec, ExecMode::Batched);
+        let lock = FseadConfig::from_str("[fabric]\nexec = \"lockstep\"\n").unwrap();
+        assert_eq!(lock.exec, ExecMode::LockStep);
+        let fast = FseadConfig::from_str("[fabric]\nexec = \"batched\"\n").unwrap();
+        assert_eq!(fast.exec, ExecMode::Batched);
+        assert!(FseadConfig::from_str("[fabric]\nexec = \"warp\"\n").is_err());
     }
 
     #[test]

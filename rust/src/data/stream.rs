@@ -4,16 +4,24 @@
 //! the final chunk is zero-padded with a validity mask — masked samples
 //! neither score nor touch detector state (enforced by the JAX model and
 //! checked in `python/tests/test_model.py`).
+//!
+//! Payloads are shared, immutable `Arc<[f32]>` buffers: a chunk fanned out
+//! to several consumers (switch pumps, bypass RMs, DMA channels, the
+//! combiner) clones the pointer, never the samples. Every full chunk of a
+//! stream also shares one all-ones mask allocation.
+
+use std::sync::Arc;
 
 /// One streaming transfer unit: `chunk × d` samples + validity mask.
 #[derive(Clone, Debug)]
 pub struct Chunk {
     /// Monotone sequence number within the stream.
     pub seq: u64,
-    /// Row-major `[chunk, d]`, zero-padded past `n_valid`.
-    pub data: Vec<f32>,
-    /// 1.0 for valid rows, 0.0 for padding.
-    pub mask: Vec<f32>,
+    /// Row-major `[chunk, d]`, zero-padded past `n_valid`. Shared and
+    /// immutable — fan-out clones the `Arc`, not the buffer.
+    pub data: Arc<[f32]>,
+    /// 1.0 for valid rows, 0.0 for padding. Shared like `data`.
+    pub mask: Arc<[f32]>,
     /// Number of valid leading rows.
     pub n_valid: usize,
     /// True on the final chunk of the stream.
@@ -33,13 +41,16 @@ pub struct ChunkStream<'a> {
     chunk: usize,
     offset: usize, // in samples
     seq: u64,
+    /// The all-ones mask shared by every full chunk of this stream.
+    full_mask: Arc<[f32]>,
 }
 
 impl<'a> ChunkStream<'a> {
     pub fn new(data: &'a [f32], d: usize, chunk: usize) -> Self {
         assert!(d > 0 && chunk > 0);
         assert_eq!(data.len() % d, 0, "data not a whole number of samples");
-        ChunkStream { data, d, chunk, offset: 0, seq: 0 }
+        let full_mask: Arc<[f32]> = vec![1.0f32; chunk].into();
+        ChunkStream { data, d, chunk, offset: 0, seq: 0, full_mask }
     }
 
     pub fn total_samples(&self) -> usize {
@@ -63,11 +74,16 @@ impl<'a> Iterator for ChunkStream<'a> {
         let mut data = vec![0f32; self.chunk * self.d];
         data[..valid * self.d]
             .copy_from_slice(&self.data[self.offset * self.d..(self.offset + valid) * self.d]);
-        let mut mask = vec![0f32; self.chunk];
-        mask[..valid].fill(1.0);
+        let mask: Arc<[f32]> = if valid == self.chunk {
+            self.full_mask.clone()
+        } else {
+            let mut m = vec![0f32; self.chunk];
+            m[..valid].fill(1.0);
+            m.into()
+        };
         let chunk = Chunk {
             seq: self.seq,
-            data,
+            data: data.into(),
             mask,
             n_valid: valid,
             last: self.offset + valid >= n,
@@ -89,7 +105,7 @@ mod tests {
         assert_eq!(chunks.len(), 2);
         assert!(chunks.iter().all(|c| c.n_valid == 3));
         assert!(chunks[1].last && !chunks[0].last);
-        assert_eq!(chunks[0].data, &data[..6]);
+        assert_eq!(&chunks[0].data[..], &data[..6]);
     }
 
     #[test]
@@ -99,7 +115,7 @@ mod tests {
         assert_eq!(chunks.len(), 2);
         let tail = &chunks[1];
         assert_eq!(tail.n_valid, 1);
-        assert_eq!(tail.mask, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&tail.mask[..], &[1.0, 0.0, 0.0, 0.0]);
         assert_eq!(&tail.data[..2], &data[8..10]);
         assert!(tail.data[2..].iter().all(|&v| v == 0.0));
         assert!(tail.last);
@@ -128,5 +144,17 @@ mod tests {
             let expect = cs.total_chunks();
             assert_eq!(ChunkStream::new(&data, 3, 4).count(), expect, "n={n}");
         }
+    }
+
+    #[test]
+    fn full_chunks_share_one_mask_allocation() {
+        let data = vec![0f32; 9 * 2]; // 9 samples, chunk 4 → 2 full + 1 padded
+        let chunks: Vec<Chunk> = ChunkStream::new(&data, 2, 4).collect();
+        assert_eq!(chunks.len(), 3);
+        assert!(Arc::ptr_eq(&chunks[0].mask, &chunks[1].mask));
+        assert!(!Arc::ptr_eq(&chunks[0].mask, &chunks[2].mask));
+        // Cloning a chunk shares payloads instead of copying them.
+        let dup = chunks[0].clone();
+        assert!(Arc::ptr_eq(&dup.data, &chunks[0].data));
     }
 }

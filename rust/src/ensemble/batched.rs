@@ -18,6 +18,13 @@
 //! 1e-4 (the partition changes only the f32 summation order — the same
 //! tolerance `run_threaded` is held to) and the per-thread chunk loop is
 //! bit-identical to that thread's `update` loop.
+//!
+//! The `chunk_size_does_not_change_scores` property below is also what the
+//! fabric's burst data plane leans on: a pblock that drains its inbox and
+//! scores the concatenated backlog through one `update_batch` call
+//! (`fabric::pblock::LoadedRm::process_burst`) produces bit-identical
+//! scores to the per-flit loop, because chunk boundaries never affect
+//! `update_batch` arithmetic.
 
 use crate::data::Dataset;
 use crate::defaults;

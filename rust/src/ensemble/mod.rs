@@ -30,12 +30,18 @@ pub use threaded::run_threaded;
 use crate::data::Dataset;
 use crate::detectors::DetectorSpec;
 
-/// Multi-threaded execution strategy selector.
+/// Execution strategy selector, shared by the CPU ensemble runners and the
+/// fabric data plane: for the runners it picks lock-step vs lock-free
+/// threading; for fabric pblocks it picks per-flit vs burst inbox
+/// servicing (`fabric::pblock`). Routed through `[fabric] exec` in the
+/// TOML config and `fsead --exec`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ExecMode {
-    /// Paper §4.4: per-sample mutex merge + barrier (Fig 11 baseline).
+    /// Paper-faithful baseline: per-sample mutex merge + barrier in the
+    /// runners (§4.4, Fig 11); one flit per RM invocation in the fabric.
     LockStep,
-    /// Lock-free chunked workers, single merge pass (the fast path).
+    /// The fast path: lock-free chunked workers / burst-drained pblock
+    /// inboxes, amortising per-transfer overhead.
     Batched,
 }
 

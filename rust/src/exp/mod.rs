@@ -35,6 +35,9 @@ pub struct ExpCtx {
     pub artifact_dir: String,
     /// Use the PJRT path where an experiment supports it.
     pub use_fpga: bool,
+    /// Override the fabric execution mode (`--exec lockstep|batched`);
+    /// None keeps whatever the config file selects.
+    pub exec: Option<crate::ensemble::ExecMode>,
 }
 
 impl Default for ExpCtx {
@@ -46,6 +49,7 @@ impl Default for ExpCtx {
             max_samples: Some(30_000),
             artifact_dir: "artifacts".into(),
             use_fpga: true,
+            exec: None,
         }
     }
 }
@@ -97,6 +101,13 @@ pub fn cli_main(args: &[String]) -> Result<i32> {
             }
             "--no-fpga" => {
                 ctx.use_fpga = false;
+            }
+            "--exec" => {
+                let v = next(args, &mut i)?;
+                ctx.exec = Some(
+                    crate::ensemble::ExecMode::parse(v)
+                        .with_context(|| format!("--exec: unknown mode {v:?}"))?,
+                );
             }
             other => positional.push(other),
         }
@@ -173,6 +184,9 @@ FLAGS:
   --data-dir DIR    use real CSV datasets (<name>.csv) when present
   --artifacts DIR   AOT artifact directory (default artifacts/)
   --no-fpga         CPU-native RMs instead of the PJRT device
+  --exec MODE       fabric pblock servicing: batched (burst fast path,
+                    default) or lockstep (paper-faithful per-flit loop);
+                    also settable per config via `exec` in [fabric]
 "
     .to_string()
 }
@@ -224,6 +238,9 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
     if !ctx.use_fpga {
         cfg.use_fpga = false;
     }
+    if let Some(mode) = ctx.exec {
+        cfg.exec = mode;
+    }
     cfg.artifact_dir = ctx.artifact_dir.clone();
     if cfg.dataset.data_dir.is_none() {
         cfg.dataset.data_dir = ctx.data_dir.clone();
@@ -248,7 +265,7 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
     let contamination = streams[0].contamination();
     let truth = streams[0].labels.clone();
     println!(
-        "fabric: {} pblocks, {} combos, dataset {} (n={}, d={}, {:.2}% outliers), fpga={}",
+        "fabric: {} pblocks, {} combos, dataset {} (n={}, d={}, {:.2}% outliers), fpga={}, exec={}",
         cfg.pblocks.len(),
         cfg.combos.len(),
         cfg.dataset.name,
@@ -256,6 +273,7 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
         streams[0].d,
         contamination * 100.0,
         cfg.use_fpga,
+        cfg.exec.as_str(),
     );
     let mut fabric = crate::fabric::Fabric::new(cfg, streams)?;
     for (id, rm) in fabric.assignments() {

@@ -8,6 +8,7 @@
 //! - CPU-baseline per-sample cost for reference.
 
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::report::Table;
@@ -60,9 +61,10 @@ pub fn run(ctx: &ExpCtx) -> Result<String> {
         let dev = after.execute_secs - before.execute_secs;
         // Burst submission: one channel round-trip for the whole stream
         // (the fast-path plumbing) — isolates the per-chunk hop cost.
+        // Payloads are shared Arcs, so building the burst copies nothing.
         // Skip the warm-up chunk so the burst covers the same chunk set as
         // the per-chunk wall measurement above and the columns compare.
-        let burst: Vec<(Vec<f32>, Vec<f32>)> = ChunkStream::new(&ds.data, d, meta.chunk)
+        let burst: Vec<(Arc<[f32]>, Arc<[f32]>)> = ChunkStream::new(&ds.data, d, meta.chunk)
             .skip(1)
             .map(|c| (c.data, c.mask))
             .collect();

@@ -1,10 +1,12 @@
 //! Combo pblocks (paper §3.3, Table 2): aggregate up to four score streams
 //! into one. Inputs are joined in seq lock-step (the four AXI inputs of a
 //! combo pblock advance together); the combination itself runs either
-//! through the combo artifact on the device or natively.
+//! through the combo artifact on the device or natively. Stream-invariant
+//! state (wavg weights) is prepared once per stream and shared per flit.
 
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 use super::message::{score_chunk, Flit};
 use crate::combine::ScoreCombiner;
@@ -13,8 +15,21 @@ use crate::runtime::RuntimeHandle;
 /// How the combination is computed.
 pub enum ComboEngine {
     Native(ScoreCombiner),
-    /// Through the `combo_<method>` artifact on the PJRT device.
-    Fpga { handle: RuntimeHandle, method: String, weights: Vec<f32>, chunk: usize },
+    /// Through the `combo_<method>` artifact on the PJRT device. `weights`
+    /// is pre-padded to the device shape `[4]` at construction
+    /// ([`ComboEngine::fpga`]) and shared — per flit the engine clones the
+    /// pointer, never the buffer.
+    Fpga { handle: RuntimeHandle, method: String, weights: Arc<[f32]>, chunk: usize },
+}
+
+impl ComboEngine {
+    /// Build the device engine, padding `weights` to the artifact's fixed
+    /// `[4]` input once so the per-flit path never copies or resizes.
+    pub fn fpga(handle: RuntimeHandle, method: String, weights: Vec<f32>, chunk: usize) -> Self {
+        let mut w4 = weights;
+        w4.resize(4, 0.0);
+        ComboEngine::Fpga { handle, method, weights: w4.into(), chunk }
+    }
 }
 
 /// Per-run combo statistics.
@@ -34,9 +49,10 @@ pub fn service(
         bail!("combo pblocks have 1..=4 input ports (got {})", inputs.len());
     }
     let mut report = ComboReport::default();
+    let mut flits: Vec<Flit> = Vec::with_capacity(inputs.len());
     'stream: loop {
         // Lock-step join: one flit from every input.
-        let mut flits = Vec::with_capacity(inputs.len());
+        flits.clear();
         for (i, rx) in inputs.iter().enumerate() {
             match rx.recv() {
                 Ok(f) => flits.push(f),
@@ -64,7 +80,7 @@ pub fn service(
         let rows = first.mask.len();
         let combined: Vec<f32> = match engine {
             ComboEngine::Native(c) => {
-                let views: Vec<&[f32]> = flits.iter().map(|f| f.data.as_slice()).collect();
+                let views: Vec<&[f32]> = flits.iter().map(|f| &f.data[..]).collect();
                 c.combine(&views)
             }
             ComboEngine::Fpga { handle, method, weights, chunk } => {
@@ -119,9 +135,9 @@ mod tests {
         let report = service(&engine, vec![a, b], tx).unwrap();
         assert_eq!(report.flits_out, 2);
         let f0 = rx.recv().unwrap();
-        assert_eq!(f0.data, vec![2.0, 4.0]);
+        assert_eq!(&f0.data[..], &[2.0, 4.0]);
         let f1 = rx.recv().unwrap();
-        assert_eq!(f1.data, vec![6.0, 8.0]);
+        assert_eq!(&f1.data[..], &[6.0, 8.0]);
         assert!(f1.last);
     }
 
@@ -151,7 +167,7 @@ mod tests {
         let (tx, rx) = Port::link();
         let engine = ComboEngine::Native(ScoreCombiner::Maximization);
         service(&engine, vec![a, b], tx).unwrap();
-        assert_eq!(rx.recv().unwrap().data, vec![5.0, 9.0]);
+        assert_eq!(&rx.recv().unwrap().data[..], &[5.0, 9.0]);
     }
 
     #[test]
@@ -160,6 +176,26 @@ mod tests {
         let (tx, rx) = Port::link();
         let engine = ComboEngine::Native(ScoreCombiner::Averaging);
         service(&engine, vec![a], tx).unwrap();
-        assert_eq!(rx.recv().unwrap().data, vec![1.5, 2.5]);
+        assert_eq!(&rx.recv().unwrap().data[..], &[1.5, 2.5]);
+    }
+
+    #[test]
+    fn combined_flit_shares_the_input_mask() {
+        let a = feed(vec![vec![1.0, 3.0]], 0);
+        let (tx, rx) = Port::link();
+        let engine = ComboEngine::Native(ScoreCombiner::Averaging);
+        service(&engine, vec![a], tx).unwrap();
+        let f = rx.recv().unwrap();
+        assert_eq!(&f.mask[..], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn fpga_engine_pads_weights_once() {
+        let handle = crate::runtime::RuntimeHandle::disconnected();
+        let engine = ComboEngine::fpga(handle, "wavg".into(), vec![0.5, 0.5], 8);
+        match engine {
+            ComboEngine::Fpga { weights, .. } => assert_eq!(&weights[..], &[0.5, 0.5, 0.0, 0.0]),
+            _ => unreachable!(),
+        }
     }
 }

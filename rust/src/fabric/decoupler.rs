@@ -1,7 +1,9 @@
 //! DFX decoupler (paper §3.4): isolates a reconfigurable partition while
 //! its RM is being swapped, so in-flight traffic never reaches
 //! half-configured logic. Atomically toggled by the DFX manager; checked by
-//! the pblock service loop on every flit.
+//! the pblock service loop on every flit — in burst mode the check runs
+//! once per drained flit while filtering the backlog, so drop counting and
+//! isolation semantics are identical across both drain strategies.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 

@@ -4,7 +4,10 @@
 //! output DMA collects score flits back into a host buffer, unpadding via
 //! the validity mask. Each pblock has its own fixed input DMA channel
 //! (paper §3.3), so the same dataset fanned out to several pblocks is sent
-//! once per channel, exactly like the board.
+//! once per channel, exactly like the board. Channels serving the same
+//! stream share one host buffer (`Arc<Vec<f32>>`), and the flits they cut
+//! carry shared `Arc<[f32]>` payloads — the samples are copied exactly
+//! once, at chunking time.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -107,6 +110,41 @@ mod tests {
         let (collected, report) = output.join().unwrap();
         assert_eq!(collected, vec![1.0, 2.0, 3.0]);
         assert_eq!(report.flits, 2);
+    }
+
+    #[test]
+    fn output_dma_unpads_flits_with_shared_masks() {
+        // Several flits sharing one Arc mask (the zero-copy fan-out case)
+        // unpad exactly like flits with private masks.
+        let mask: Arc<[f32]> = vec![1.0, 1.0, 0.0].into();
+        let (tx, rx) = Port::link();
+        let output = OutputDma::spawn("out".into(), rx);
+        for seq in 0..3u64 {
+            let base = seq as f32 * 10.0;
+            tx.send(crate::fabric::message::score_chunk(
+                seq,
+                vec![base, base + 1.0, -1.0], // padding row must be dropped
+                mask.clone(),
+                2,
+                seq == 2,
+            ))
+            .unwrap();
+        }
+        let (collected, report) = output.join().unwrap();
+        assert_eq!(collected, vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0]);
+        assert_eq!(report.flits, 3);
+        assert_eq!(report.samples, 6);
+    }
+
+    #[test]
+    fn input_dma_flits_share_the_full_mask() {
+        let data = vec![0f32; 8 * 2]; // 8 samples, chunk 4 → 2 full chunks
+        let (tx, rx) = Port::link();
+        let input = InputDma::spawn("in".into(), Arc::new(data), 2, 4, tx);
+        input.join().unwrap();
+        let flits: Vec<Flit> = rx.iter().collect();
+        assert_eq!(flits.len(), 2);
+        assert!(Arc::ptr_eq(&flits[0].mask, &flits[1].mask));
     }
 
     #[test]

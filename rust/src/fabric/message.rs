@@ -4,8 +4,19 @@
 //! we batch `chunk` samples per transfer to amortise channel overhead — the
 //! chunk size is the artifact chunk size, so one flit = one executable
 //! invocation). `Chunk.last` models the AXI TLAST sideband.
+//!
+//! # Zero-copy data plane
+//!
+//! Flit payloads (`data`, `mask`) are shared immutable `Arc<[f32]>`
+//! buffers. Moving a flit through a channel moves two pointers; fanning a
+//! flit out to several consumers (switch pumps, a bypass RM, the FPGA
+//! submission queue, the combiner) clones pointers. The samples themselves
+//! are written exactly once, when the input DMA cuts the stream into
+//! chunks — every later hop shares that allocation, mirroring how the
+//! board's DMA engines hand the same DDR buffer to each pblock channel.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 pub use crate::data::stream::Chunk;
 
@@ -23,8 +34,17 @@ impl Port {
     }
 }
 
-/// Score flits have d = 1: length of data == length of mask.
-pub fn score_chunk(seq: u64, scores: Vec<f32>, mask: Vec<f32>, n_valid: usize, last: bool) -> Flit {
+/// Score flits have d = 1: length of data == length of mask. Accepts either
+/// freshly-computed `Vec<f32>` buffers or already-shared `Arc<[f32]>`
+/// payloads (e.g. a mask forwarded from the input flit).
+pub fn score_chunk(
+    seq: u64,
+    scores: impl Into<Arc<[f32]>>,
+    mask: impl Into<Arc<[f32]>>,
+    n_valid: usize,
+    last: bool,
+) -> Flit {
+    let (scores, mask) = (scores.into(), mask.into());
     debug_assert_eq!(scores.len(), mask.len());
     Chunk { seq, data: scores, mask, n_valid, last }
 }
@@ -47,5 +67,12 @@ mod tests {
         let (tx, rx) = Port::link();
         drop(tx);
         assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn score_chunk_shares_forwarded_masks() {
+        let mask: Arc<[f32]> = vec![1.0, 1.0].into();
+        let f = score_chunk(3, vec![0.5, 0.7], mask.clone(), 2, false);
+        assert!(Arc::ptr_eq(&f.mask, &mask));
     }
 }

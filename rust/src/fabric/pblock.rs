@@ -3,6 +3,28 @@
 //! a bypass, or the default empty logic (paper §3.2–3.3). The RM persists
 //! across stream runs (sliding-window state is streaming state), and is
 //! swapped at run time by the DFX manager.
+//!
+//! # Burst servicing
+//!
+//! A pblock drains its inbox in one of two modes, selected per run by
+//! [`ExecMode`]:
+//!
+//! - **[`ExecMode::LockStep`]** ([`Pblock::service`]) — the paper-faithful
+//!   per-flit loop: one receive, one RM invocation, one send per transfer.
+//! - **[`ExecMode::Batched`]** ([`Pblock::service_burst`]) — the production
+//!   fast path: block for the head flit, then drain everything already
+//!   queued and score the whole backlog as **one burst** — CPU RMs through
+//!   a single `update_batch` call over the concatenated valid rows, FPGA
+//!   RMs through a single [`RuntimeHandle::run_chunks`] round-trip instead
+//!   of one hop per flit.
+//!
+//! The two modes are bit-identical on CPU RMs (chunk boundaries never
+//! change `update_batch` arithmetic — property-tested in
+//! `ensemble::batched`) and preserve flit order, per-flit TLAST and
+//! decoupler semantics exactly; only the per-transfer overhead is
+//! amortised. Flit payloads are shared `Arc` buffers throughout, so
+//! neither mode copies sample data when forwarding, bypassing or
+//! submitting to the device.
 
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{Receiver, Sender};
@@ -13,6 +35,7 @@ use super::decoupler::Decoupler;
 use super::message::{score_chunk, Flit};
 use crate::config::{DetectorHyper, RmKind};
 use crate::detectors::{Detector, DetectorSpec};
+use crate::ensemble::ExecMode;
 use crate::runtime::{generate_params, InstanceId, Registry, RuntimeHandle};
 
 /// A loaded reconfigurable module.
@@ -84,6 +107,8 @@ impl LoadedRm {
     }
 
     /// Process one flit; returns the output flit (None for Empty logic).
+    /// Payloads are shared: bypass outputs and forwarded masks clone the
+    /// input `Arc`s instead of copying buffers.
     pub fn process(&mut self, flit: &Flit) -> Result<Option<Flit>> {
         match self {
             LoadedRm::Empty => Ok(None),
@@ -92,7 +117,7 @@ impl LoadedRm {
                 let out = handle.run_bypass(*d, flit.data.clone())?;
                 Ok(Some(Flit {
                     seq: flit.seq,
-                    data: out,
+                    data: out.into(),
                     mask: flit.mask.clone(),
                     n_valid: flit.n_valid,
                     last: flit.last,
@@ -119,6 +144,82 @@ impl LoadedRm {
                 }
                 let scores = handle.run_chunk(*inst, flit.data.clone(), flit.mask.clone())?;
                 Ok(Some(score_chunk(flit.seq, scores, flit.mask.clone(), flit.n_valid, flit.last)))
+            }
+        }
+    }
+
+    /// Score a backlog of flits in stream order as one burst, appending the
+    /// output flits to `out`. Results are bit-identical to calling
+    /// [`LoadedRm::process`] once per flit:
+    ///
+    /// - CPU RMs concatenate the valid rows of the backlog and score them
+    ///   through a **single** `update_batch` call — same rows, same order,
+    ///   same arithmetic (chunk boundaries never change scores; see the
+    ///   `chunk_size_does_not_change_scores` proptest in
+    ///   `ensemble::batched`);
+    /// - FPGA RMs submit the whole backlog through **one**
+    ///   [`RuntimeHandle::run_chunks`] round-trip, with state threading
+    ///   chunk-to-chunk exactly as repeated `run_chunk` calls would;
+    /// - bypass/empty logic degenerate to pointer clones / nothing.
+    pub fn process_burst(&mut self, flits: &[Flit], out: &mut Vec<Flit>) -> Result<()> {
+        match self {
+            LoadedRm::Empty => Ok(()),
+            LoadedRm::BypassNative => {
+                // Identity: share the payloads, copy nothing.
+                out.extend(flits.iter().cloned());
+                Ok(())
+            }
+            LoadedRm::BypassFpga { handle, d } => {
+                // No burst artifact API for the bypass; per-flit device
+                // hops, but submission still shares the payload pointers.
+                for f in flits {
+                    let o = handle.run_bypass(*d, f.data.clone())?;
+                    out.push(Flit {
+                        seq: f.seq,
+                        data: o.into(),
+                        mask: f.mask.clone(),
+                        n_valid: f.n_valid,
+                        last: f.last,
+                    });
+                }
+                Ok(())
+            }
+            LoadedRm::DetectorCpu { det } => {
+                let d = det.d();
+                let total: usize = flits.iter().map(|f| f.n_valid).sum();
+                let mut rows = Vec::with_capacity(total * d);
+                for f in flits {
+                    rows.extend_from_slice(&f.data[..f.n_valid * d]);
+                }
+                let mut scores = vec![0f32; total];
+                det.update_batch(&rows, &mut scores);
+                let mut off = 0;
+                for f in flits {
+                    let mut s = vec![0f32; f.rows()];
+                    s[..f.n_valid].copy_from_slice(&scores[off..off + f.n_valid]);
+                    off += f.n_valid;
+                    out.push(score_chunk(f.seq, s, f.mask.clone(), f.n_valid, f.last));
+                }
+                Ok(())
+            }
+            LoadedRm::DetectorFpga { handle, inst, chunk, d } => {
+                for f in flits {
+                    if f.data.len() != *chunk * *d {
+                        bail!(
+                            "pblock chunk mismatch: flit has {} values, artifact expects [{},{}]",
+                            f.data.len(),
+                            chunk,
+                            d
+                        );
+                    }
+                }
+                let burst: Vec<(Arc<[f32]>, Arc<[f32]>)> =
+                    flits.iter().map(|f| (f.data.clone(), f.mask.clone())).collect();
+                let scores = handle.run_chunks(*inst, burst)?;
+                for (f, s) in flits.iter().zip(scores) {
+                    out.push(score_chunk(f.seq, s, f.mask.clone(), f.n_valid, f.last));
+                }
+                Ok(())
             }
         }
     }
@@ -158,8 +259,23 @@ impl Pblock {
         Pblock { id, rm: LoadedRm::Empty, decoupler: Arc::new(Decoupler::new()) }
     }
 
-    /// Service one stream: pull flits from `rx`, run them through the RM,
-    /// push results to `tx`. Returns when the stream ends (TLAST or closed).
+    /// Service one stream under the selected execution mode.
+    pub fn service_mode(
+        rm: &mut LoadedRm,
+        decoupler: &Decoupler,
+        rx: Receiver<Flit>,
+        tx: Sender<Flit>,
+        mode: ExecMode,
+    ) -> Result<PblockReport> {
+        match mode {
+            ExecMode::LockStep => Self::service(rm, decoupler, rx, tx),
+            ExecMode::Batched => Self::service_burst(rm, decoupler, rx, tx),
+        }
+    }
+
+    /// Service one stream per flit: pull flits from `rx`, run them through
+    /// the RM one at a time, push results to `tx`. Returns when the stream
+    /// ends (TLAST or closed). The paper-faithful baseline data plane.
     pub fn service(
         rm: &mut LoadedRm,
         decoupler: &Decoupler,
@@ -194,6 +310,52 @@ impl Pblock {
         }
         Ok(report)
     }
+
+    /// Service one stream in bursts: block for the head flit, drain the
+    /// rest of the inbox without blocking, and score the whole backlog as
+    /// one burst through [`LoadedRm::process_burst`]. Flit order, per-flit
+    /// TLAST and decoupler drops match [`Pblock::service`] exactly; only
+    /// the per-transfer overhead is amortised.
+    pub fn service_burst(
+        rm: &mut LoadedRm,
+        decoupler: &Decoupler,
+        rx: Receiver<Flit>,
+        tx: Sender<Flit>,
+    ) -> Result<PblockReport> {
+        let mut report = PblockReport::default();
+        let mut outputs: Vec<Flit> = Vec::new();
+        loop {
+            let Ok(first) = rx.recv() else { return Ok(report) };
+            let mut done = first.last;
+            let mut backlog = vec![first];
+            while !done {
+                let Ok(f) = rx.try_recv() else { break };
+                done = f.last;
+                backlog.push(f);
+            }
+            report.flits_in += backlog.len() as u64;
+            // The decoupler is consulted once per flit, like the per-flit
+            // path — drops are counted and isolated traffic never reaches
+            // the RM.
+            backlog.retain(|_| !decoupler.is_decoupled());
+            if !backlog.is_empty() {
+                let t0 = Instant::now();
+                outputs.clear();
+                rm.process_burst(&backlog, &mut outputs)?;
+                report.busy_secs += t0.elapsed().as_secs_f64();
+                report.samples += backlog.iter().map(|f| f.n_valid as u64).sum::<u64>();
+                for out in outputs.drain(..) {
+                    report.flits_out += 1;
+                    if tx.send(out).is_err() {
+                        return Ok(report); // downstream disabled
+                    }
+                }
+            }
+            if done {
+                return Ok(report);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -214,20 +376,14 @@ mod tests {
         (0..n * d).map(|_| p.gaussian() as f32).collect()
     }
 
+    fn detector_rm(kind: DetectorKind, r: usize, d: usize, seed: u64, warmup: &[f32]) -> LoadedRm {
+        LoadedRm::build(RmKind::Detector(kind), r, d, seed, &hyper(), warmup, None, false).unwrap()
+    }
+
     #[test]
     fn cpu_detector_rm_scores_stream() {
         let data = stream_data(40, 3);
-        let mut rm = LoadedRm::build(
-            RmKind::Detector(DetectorKind::Loda),
-            4,
-            3,
-            1,
-            &hyper(),
-            &data[..30],
-            None,
-            false,
-        )
-        .unwrap();
+        let mut rm = detector_rm(DetectorKind::Loda, 4, 3, 1, &data[..30]);
         let (tx_out, rx_out) = Port::link();
         let (tx_in, rx_in) = Port::link();
         for f in ChunkStream::new(&data, 3, 8) {
@@ -246,12 +402,15 @@ mod tests {
     }
 
     #[test]
-    fn bypass_rm_is_identity() {
+    fn bypass_rm_is_identity_and_zero_copy() {
         let data = stream_data(10, 2);
         let mut rm = LoadedRm::BypassNative;
         let flit = ChunkStream::new(&data, 2, 16).next().unwrap();
         let out = rm.process(&flit).unwrap().unwrap();
         assert_eq!(out.data, flit.data);
+        // Identity shares the payload allocation, it does not copy it.
+        assert!(Arc::ptr_eq(&out.data, &flit.data));
+        assert!(Arc::ptr_eq(&out.mask, &flit.mask));
     }
 
     #[test]
@@ -259,18 +418,21 @@ mod tests {
         let mut rm = LoadedRm::Empty;
         let flit = ChunkStream::new(&[1.0, 2.0], 2, 4).next().unwrap();
         assert!(rm.process(&flit).unwrap().is_none());
+        let mut out = Vec::new();
+        rm.process_burst(std::slice::from_ref(&flit), &mut out).unwrap();
+        assert!(out.is_empty());
     }
 
     #[test]
     fn decoupled_pblock_drops_traffic() {
         let data = stream_data(16, 2);
-        let mut rm = LoadedRm::BypassNative;
         let (tx_in, rx_in) = Port::link();
         let (tx_out, rx_out) = Port::link();
         for f in ChunkStream::new(&data, 2, 8) {
             tx_in.send(f).unwrap();
         }
         drop(tx_in);
+        let mut rm = LoadedRm::BypassNative;
         let dec = Decoupler::new();
         dec.decouple();
         let report = Pblock::service(&mut rm, &dec, rx_in, tx_out).unwrap();
@@ -280,20 +442,29 @@ mod tests {
     }
 
     #[test]
+    fn decoupled_pblock_drops_traffic_in_burst_mode() {
+        let data = stream_data(16, 2);
+        let (tx_in, rx_in) = Port::link();
+        let (tx_out, rx_out) = Port::link();
+        for f in ChunkStream::new(&data, 2, 8) {
+            tx_in.send(f).unwrap();
+        }
+        drop(tx_in);
+        let mut rm = LoadedRm::BypassNative;
+        let dec = Decoupler::new();
+        dec.decouple();
+        let report = Pblock::service_burst(&mut rm, &dec, rx_in, tx_out).unwrap();
+        assert_eq!(report.flits_out, 0);
+        assert_eq!(report.flits_in, 2);
+        assert!(rx_out.recv().is_err());
+        assert_eq!(dec.dropped(), 2);
+    }
+
+    #[test]
     fn cpu_rm_scores_match_plain_detector() {
         let data = stream_data(32, 3);
         let hy = hyper();
-        let mut rm = LoadedRm::build(
-            RmKind::Detector(DetectorKind::RsHash),
-            3,
-            3,
-            5,
-            &hy,
-            &data[..30],
-            None,
-            false,
-        )
-        .unwrap();
+        let mut rm = detector_rm(DetectorKind::RsHash, 3, 3, 5, &data[..30]);
         let mut spec = DetectorSpec::new(DetectorKind::RsHash, 3, 3, 5);
         spec.window = hy.window;
         spec.bins = hy.bins;
@@ -309,5 +480,62 @@ mod tests {
             }
         }
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn burst_service_is_bit_identical_to_per_flit() {
+        // The whole stream queued up-front forces the burst path to drain
+        // it as one backlog — the hardest case for parity.
+        let data = stream_data(50, 3);
+        for kind in DetectorKind::ALL {
+            let mut per_flit: Vec<Flit> = Vec::new();
+            {
+                let mut rm = detector_rm(kind, 4, 3, 7, &data[..30]);
+                let (tx_in, rx_in) = Port::link();
+                let (tx_out, rx_out) = Port::link();
+                for f in ChunkStream::new(&data, 3, 8) {
+                    tx_in.send(f).unwrap();
+                }
+                drop(tx_in);
+                let dec = Decoupler::new();
+                Pblock::service(&mut rm, &dec, rx_in, tx_out).unwrap();
+                per_flit.extend(rx_out.iter());
+            }
+            let mut burst: Vec<Flit> = Vec::new();
+            {
+                let mut rm = detector_rm(kind, 4, 3, 7, &data[..30]);
+                let (tx_in, rx_in) = Port::link();
+                let (tx_out, rx_out) = Port::link();
+                for f in ChunkStream::new(&data, 3, 8) {
+                    tx_in.send(f).unwrap();
+                }
+                drop(tx_in);
+                let dec = Decoupler::new();
+                let report = Pblock::service_burst(&mut rm, &dec, rx_in, tx_out).unwrap();
+                assert_eq!(report.samples, 50, "{kind:?}");
+                burst.extend(rx_out.iter());
+            }
+            assert_eq!(per_flit.len(), burst.len(), "{kind:?}");
+            for (a, b) in per_flit.iter().zip(&burst) {
+                assert_eq!(a.seq, b.seq, "{kind:?}");
+                assert_eq!(a.n_valid, b.n_valid, "{kind:?}");
+                assert_eq!(a.last, b.last, "{kind:?}");
+                assert_eq!(&a.data[..], &b.data[..], "{kind:?} seq {}", a.seq);
+                assert_eq!(&a.mask[..], &b.mask[..], "{kind:?} seq {}", a.seq);
+            }
+        }
+    }
+
+    #[test]
+    fn burst_bypass_shares_payloads() {
+        let data = stream_data(12, 2);
+        let flits: Vec<Flit> = ChunkStream::new(&data, 2, 4).collect();
+        let mut rm = LoadedRm::BypassNative;
+        let mut out = Vec::new();
+        rm.process_burst(&flits, &mut out).unwrap();
+        assert_eq!(out.len(), flits.len());
+        for (i, o) in out.iter().enumerate() {
+            assert!(Arc::ptr_eq(&o.data, &flits[i].data));
+        }
     }
 }

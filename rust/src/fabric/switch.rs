@@ -7,7 +7,9 @@
 //! to at most one point-to-point connection. Routing is configured over the
 //! AXI-Lite analogue ([`AxiSwitch::set_route`]) while the switch is idle,
 //! then [`AxiSwitch::spawn`] instantiates the resolved connections as pump
-//! threads.
+//! threads. Pumps move flits whose payloads are shared `Arc<[f32]>`
+//! buffers, so forwarding a transfer moves two pointers — the crossbar
+//! never touches sample data.
 
 use anyhow::{bail, Result};
 use std::sync::mpsc::{Receiver, Sender};
@@ -194,8 +196,8 @@ mod tests {
         s0_tx.send(score_chunk(0, vec![1.0], vec![1.0], 1, true)).unwrap();
         s1_tx.send(score_chunk(0, vec![2.0], vec![1.0], 1, true)).unwrap();
         drop((s0_tx, s1_tx));
-        assert_eq!(m0_rx.recv().unwrap().data, vec![2.0]); // M0 ← S1
-        assert_eq!(m1_rx.recv().unwrap().data, vec![1.0]); // M1 ← S0
+        assert_eq!(&m0_rx.recv().unwrap().data[..], &[2.0]); // M0 ← S1
+        assert_eq!(&m1_rx.recv().unwrap().data[..], &[1.0]); // M1 ← S0
         assert_eq!(run.join(), 2);
     }
 

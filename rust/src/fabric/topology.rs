@@ -6,6 +6,11 @@
 //! `Fabric::new` loads every configured RM (through the DFX manager);
 //! `Fabric::run` wires the switches for the current configuration, streams
 //! the datasets through, and collects per-pblock / per-combo score streams.
+//!
+//! The data plane is zero-copy: flit payloads are shared `Arc<[f32]>`
+//! buffers, pblocks fed by the same stream share one host buffer, and each
+//! pblock drains its inbox in bursts or per flit according to
+//! `FseadConfig::exec` (see `fabric::pblock` for the burst design).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -175,12 +180,14 @@ impl Fabric {
     fn combo_engine(&self, c: &ComboCfg) -> Result<ComboEngine> {
         if let Some(rt) = &self.runtime {
             if let Ok(meta) = rt.registry().find_combo(&c.method) {
-                return Ok(ComboEngine::Fpga {
-                    handle: rt.handle(),
-                    method: c.method.clone(),
-                    weights: c.weights.clone(),
-                    chunk: meta.chunk,
-                });
+                // Weights are padded to the device shape once here and
+                // shared per flit by the combo service.
+                return Ok(ComboEngine::fpga(
+                    rt.handle(),
+                    c.method.clone(),
+                    c.weights.clone(),
+                    meta.chunk,
+                ));
             }
         }
         let combiner = match c.method.as_str() {
@@ -265,7 +272,16 @@ impl Fabric {
         let mut pblock_inputs: BTreeMap<usize, Receiver<Flit>> = BTreeMap::new();
 
         // Input DMA per active pblock (fixed channel per pblock, Fig 6) and
-        // the pblock-output → switch-1-slave links.
+        // the pblock-output → switch-1-slave links. Pblocks fed by the same
+        // stream share one host buffer — the DMA channels read it
+        // concurrently, like the board's DMA engines reading one DDR
+        // region, instead of each owning a copy.
+        let mut stream_bufs: BTreeMap<usize, Arc<Vec<f32>>> = BTreeMap::new();
+        for p in &active {
+            stream_bufs
+                .entry(p.stream)
+                .or_insert_with(|| Arc::new(self.streams[p.stream].data.clone()));
+        }
         let mut pblock_out_tx: BTreeMap<usize, Sender<Flit>> = BTreeMap::new();
         for p in &active {
             let ds = &self.streams[p.stream];
@@ -274,7 +290,7 @@ impl Fabric {
                 p.id,
                 InputDma::spawn(
                     format!("dma-in-{}", p.id),
-                    Arc::new(ds.data.clone()),
+                    Arc::clone(&stream_bufs[&p.stream]),
                     ds.d,
                     chunk,
                     tx,
@@ -367,9 +383,10 @@ impl Fabric {
                     let id = pb.id;
                     let dec = Arc::clone(&pb.decoupler);
                     let rm = &mut pb.rm;
+                    let mode = cfg.exec;
                     handles.push((
                         id,
-                        s.spawn(move || Pblock::service(rm, &dec, rx, tx)),
+                        s.spawn(move || Pblock::service_mode(rm, &dec, rx, tx, mode)),
                     ));
                 }
                 for (id, h) in handles.drain(..) {

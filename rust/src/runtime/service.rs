@@ -11,6 +11,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::artifact::{ArtifactMeta, Registry};
@@ -39,12 +40,12 @@ pub struct RuntimeStats {
 
 enum Job {
     LoadDetector { meta: ArtifactMeta, params: Box<DetectorParams>, reply: Sender<Result<InstanceId>> },
-    RunChunk { inst: InstanceId, data: Vec<f32>, mask: Vec<f32>, reply: Sender<Result<Vec<f32>>> },
-    RunChunks { inst: InstanceId, chunks: Vec<(Vec<f32>, Vec<f32>)>, reply: Sender<Result<Vec<Vec<f32>>>> },
+    RunChunk { inst: InstanceId, data: Arc<[f32]>, mask: Arc<[f32]>, reply: Sender<Result<Vec<f32>>> },
+    RunChunks { inst: InstanceId, chunks: Vec<(Arc<[f32]>, Arc<[f32]>)>, reply: Sender<Result<Vec<Vec<f32>>>> },
     ResetState { inst: InstanceId, reply: Sender<Result<()>> },
     DropInstance { inst: InstanceId, reply: Sender<Result<()>> },
-    RunBypass { d: usize, data: Vec<f32>, reply: Sender<Result<Vec<f32>>> },
-    RunCombo { method: String, scores: Vec<f32>, active: Vec<f32>, weights: Vec<f32>, reply: Sender<Result<Vec<f32>>> },
+    RunBypass { d: usize, data: Arc<[f32]>, reply: Sender<Result<Vec<f32>>> },
+    RunCombo { method: String, scores: Vec<f32>, active: Vec<f32>, weights: Arc<[f32]>, reply: Sender<Result<Vec<f32>>> },
     /// Compile an artifact without instantiating (reconfiguration timing).
     Precompile { name: String, reply: Sender<Result<f64>> },
     Stats { reply: Sender<RuntimeStats> },
@@ -79,20 +80,29 @@ impl RuntimeHandle {
     }
 
     /// Run one padded chunk; returns per-sample scores (0 beyond the mask).
-    pub fn run_chunk(&self, inst: InstanceId, data: Vec<f32>, mask: Vec<f32>) -> Result<Vec<f32>> {
+    /// Accepts `Vec<f32>` or shared `Arc<[f32]>` payloads — flit payloads
+    /// are submitted without copying.
+    pub fn run_chunk(
+        &self,
+        inst: InstanceId,
+        data: impl Into<Arc<[f32]>>,
+        mask: impl Into<Arc<[f32]>>,
+    ) -> Result<Vec<f32>> {
+        let (data, mask) = (data.into(), mask.into());
         ask!(self, |reply| Job::RunChunk { inst, data, mask, reply })
     }
 
     /// Batched submission: run a burst of `(data, mask)` chunks in stream
     /// order with a single channel round-trip (the fast-path plumbing — the
     /// per-chunk request/reply hop is part of the L3 marshalling overhead
-    /// measured by `fsead exp perf`). State threads through the burst
-    /// exactly as it does across individual [`RuntimeHandle::run_chunk`]
-    /// calls; scores come back per chunk.
+    /// measured by `fsead exp perf`). Payloads are shared `Arc` buffers, so
+    /// submitting a burst of flits clones pointers, never samples. State
+    /// threads through the burst exactly as it does across individual
+    /// [`RuntimeHandle::run_chunk`] calls; scores come back per chunk.
     pub fn run_chunks(
         &self,
         inst: InstanceId,
-        chunks: Vec<(Vec<f32>, Vec<f32>)>,
+        chunks: Vec<(Arc<[f32]>, Arc<[f32]>)>,
     ) -> Result<Vec<Vec<f32>>> {
         ask!(self, |reply| Job::RunChunks { inst, chunks, reply })
     }
@@ -105,18 +115,22 @@ impl RuntimeHandle {
         ask!(self, |reply| Job::DropInstance { inst, reply })
     }
 
-    pub fn run_bypass(&self, d: usize, data: Vec<f32>) -> Result<Vec<f32>> {
+    pub fn run_bypass(&self, d: usize, data: impl Into<Arc<[f32]>>) -> Result<Vec<f32>> {
+        let data = data.into();
         ask!(self, |reply| Job::RunBypass { d, data, reply })
     }
 
     /// Combine up to 4 score streams (flattened row-major `[C,4]`).
+    /// `weights` is shared — combo pblocks pad it once per stream and clone
+    /// the pointer per flit.
     pub fn run_combo(
         &self,
         method: &str,
         scores: Vec<f32>,
         active: Vec<f32>,
-        weights: Vec<f32>,
+        weights: impl Into<Arc<[f32]>>,
     ) -> Result<Vec<f32>> {
+        let weights = weights.into();
         ask!(self, |reply| Job::RunCombo {
             method: method.to_string(),
             scores,
@@ -135,6 +149,14 @@ impl RuntimeHandle {
         let (reply, rx) = channel();
         self.tx.send(Job::Stats { reply }).map_err(|_| anyhow!("runtime service is down"))?;
         rx.recv().map_err(|_| anyhow!("runtime service dropped reply"))
+    }
+
+    /// A handle not backed by any device thread — every request errors with
+    /// "runtime service is down". For unit tests that need a
+    /// `RuntimeHandle` value without starting PJRT.
+    pub fn disconnected() -> RuntimeHandle {
+        let (tx, _rx) = channel();
+        RuntimeHandle { tx }
     }
 }
 
@@ -236,7 +258,12 @@ fn service_main(registry: Registry, rx: Receiver<Job>) {
                 let _ = reply.send(svc.load_detector(&meta, *params));
             }
             Job::RunChunk { inst, data, mask, reply } => {
-                let _ = reply.send(svc.run_chunk(inst, &data, &mask));
+                // One-chunk burst: the single-flit path shares the burst
+                // executor, so there is one device-invocation protocol.
+                let _ = reply.send(
+                    svc.run_chunks(inst, &[(data, mask)])
+                        .map(|mut v| v.pop().expect("one chunk in, one score out")),
+                );
             }
             Job::RunChunks { inst, chunks, reply } => {
                 let _ = reply.send(svc.run_chunks(inst, &chunks));
@@ -248,7 +275,7 @@ fn service_main(registry: Registry, rx: Receiver<Job>) {
                 let _ = reply.send(svc.drop_instance(inst));
             }
             Job::RunBypass { d, data, reply } => {
-                let _ = reply.send(svc.run_bypass(d, data));
+                let _ = reply.send(svc.run_bypass(d, &data));
             }
             Job::RunCombo { method, scores, active, weights, reply } => {
                 let _ = reply.send(svc.run_combo(&method, scores, active, weights));
@@ -278,6 +305,58 @@ fn fail_job(job: Job, msg: &str) {
 
 fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Results accumulated across a burst; survives a mid-burst error so the
+/// caller can record the work that actually ran.
+#[derive(Default)]
+struct BurstAcc {
+    scores: Vec<Vec<f32>>,
+    valid: u64,
+    exec_secs: f64,
+}
+
+/// Inner loop of [`Service::run_chunks`] — and, via a one-chunk burst, of
+/// the single-flit path — split out so the threaded state and the per-chunk
+/// accounting can be written back even when a chunk fails mid-burst.
+fn execute_burst(
+    exe: &xla::PjRtLoadedExecutable,
+    meta: &ArtifactMeta,
+    params: &[xla::Literal],
+    state: &mut Vec<xla::Literal>,
+    chunks: &[(Arc<[f32]>, Arc<[f32]>)],
+    acc: &mut BurstAcc,
+) -> Result<()> {
+    let dims_x = [meta.chunk as i64, meta.d as i64];
+    let dims_m = [meta.chunk as i64];
+    let n_outputs = 1 + state.len();
+    acc.scores.reserve(chunks.len());
+    for (data, mask) in chunks {
+        let x = lit_f32(data, &dims_x)?;
+        let m = lit_f32(mask, &dims_m)?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + params.len() + state.len());
+        args.push(&x);
+        args.push(&m);
+        for p in params {
+            args.push(p);
+        }
+        for s in state.iter() {
+            args.push(s);
+        }
+        let t0 = Instant::now();
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        acc.exec_secs += t0.elapsed().as_secs_f64();
+        drop(args);
+        let mut parts = result.to_tuple()?;
+        if parts.len() != n_outputs {
+            bail!("artifact {} returned {}-tuple, expected {n_outputs}", meta.name, parts.len());
+        }
+        let scores = parts.remove(0).to_vec::<f32>()?;
+        acc.valid += mask.iter().filter(|&&v| v > 0.5).count() as u64;
+        *state = parts; // thread the updated state into the next chunk
+        acc.scores.push(scores);
+    }
+    Ok(())
 }
 
 fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
@@ -389,54 +468,44 @@ impl Service {
         Ok(id)
     }
 
-    fn run_chunk(&mut self, id: InstanceId, data: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
-        let inst = self.instances.get(&id).with_context(|| format!("no instance {id}"))?;
-        let meta = &inst.meta;
-        let (c, d) = (meta.chunk, meta.d);
-        if data.len() != c * d || mask.len() != c {
-            bail!(
-                "chunk shape mismatch for {}: got data={} mask={}, want [{c},{d}]",
-                meta.name,
-                data.len(),
-                mask.len()
-            );
+    /// Burst execution with everything burst-invariant hoisted — one
+    /// instance lookup, one shape validation pass, one executable lookup
+    /// and one stats update for the whole backlog. The single-flit path
+    /// (`Job::RunChunk`) runs through here as a one-chunk burst, so there
+    /// is exactly one device-invocation protocol. State threads
+    /// chunk-to-chunk; on a mid-burst device error both the threaded state
+    /// and the stats reflect the chunks that completed, exactly as they
+    /// would across repeated single-chunk calls.
+    fn run_chunks(
+        &mut self,
+        id: InstanceId,
+        chunks: &[(Arc<[f32]>, Arc<[f32]>)],
+    ) -> Result<Vec<Vec<f32>>> {
+        if chunks.is_empty() {
+            return Ok(Vec::new());
         }
-        let x = lit_f32(data, &[c as i64, d as i64])?;
-        let m = lit_f32(mask, &[c as i64])?;
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + inst.params.len() + 4);
-        args.push(&x);
-        args.push(&m);
-        for p in &inst.params {
-            args.push(p);
-        }
-        for s in &inst.state {
-            args.push(s);
+        let inst = self.instances.get_mut(&id).with_context(|| format!("no instance {id}"))?;
+        let (c, d) = (inst.meta.chunk, inst.meta.d);
+        for (i, (data, mask)) in chunks.iter().enumerate() {
+            if data.len() != c * d || mask.len() != c {
+                bail!(
+                    "burst chunk {i} shape mismatch for {}: got data={} mask={}, want [{c},{d}]",
+                    inst.meta.name,
+                    data.len(),
+                    mask.len()
+                );
+            }
         }
         let exe = self.exes.get(&inst.exe_name).expect("exe loaded with instance");
-        let t0 = Instant::now();
-        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let dt = t0.elapsed().as_secs_f64();
-        let mut parts = result.to_tuple()?;
-        if parts.len() != 1 + inst.state.len() {
-            bail!("artifact {} returned {}-tuple, expected {}", meta.name, parts.len(), 1 + inst.state.len());
-        }
-        let scores = parts.remove(0).to_vec::<f32>()?;
-        let valid = mask.iter().filter(|&&v| v > 0.5).count() as u64;
-        // Thread the updated state into the next invocation.
-        let inst = self.instances.get_mut(&id).unwrap();
-        inst.state = parts;
-        self.stats.executions += 1;
-        self.stats.execute_secs += dt;
-        self.stats.samples += valid;
-        Ok(scores)
-    }
-
-    fn run_chunks(&mut self, id: InstanceId, chunks: &[(Vec<f32>, Vec<f32>)]) -> Result<Vec<Vec<f32>>> {
-        let mut out = Vec::with_capacity(chunks.len());
-        for (data, mask) in chunks {
-            out.push(self.run_chunk(id, data, mask)?);
-        }
-        Ok(out)
+        let mut state = std::mem::take(&mut inst.state);
+        let mut acc = BurstAcc::default();
+        let res = execute_burst(exe, &inst.meta, &inst.params, &mut state, chunks, &mut acc);
+        inst.state = state;
+        self.stats.executions += acc.scores.len() as u64;
+        self.stats.execute_secs += acc.exec_secs;
+        self.stats.samples += acc.valid;
+        res?;
+        Ok(acc.scores)
     }
 
     fn reset_state(&mut self, id: InstanceId) -> Result<()> {
@@ -449,13 +518,13 @@ impl Service {
         self.instances.remove(&id).map(|_| ()).with_context(|| format!("no instance {id}"))
     }
 
-    fn run_bypass(&mut self, d: usize, data: Vec<f32>) -> Result<Vec<f32>> {
+    fn run_bypass(&mut self, d: usize, data: &[f32]) -> Result<Vec<f32>> {
         let meta = self.registry.find_bypass(d)?.clone();
         if data.len() != meta.chunk * d {
             bail!("bypass d={d}: got {} values, want {}", data.len(), meta.chunk * d);
         }
         self.ensure_exe(&meta.name)?;
-        let x = lit_f32(&data, &[meta.chunk as i64, d as i64])?;
+        let x = lit_f32(data, &[meta.chunk as i64, d as i64])?;
         let exe = self.exes.get(&meta.name).unwrap();
         let t0 = Instant::now();
         let result = exe.execute::<&xla::Literal>(&[&x])?[0][0].to_literal_sync()?;
@@ -469,7 +538,7 @@ impl Service {
         method: &str,
         scores: Vec<f32>,
         active: Vec<f32>,
-        weights: Vec<f32>,
+        weights: Arc<[f32]>,
     ) -> Result<Vec<f32>> {
         let meta = self.registry.find_combo(method)?.clone();
         if scores.len() != meta.chunk * 4 || active.len() != 4 {
@@ -486,9 +555,15 @@ impl Service {
         let exe = self.exes.get(&meta.name).unwrap();
         let t0 = Instant::now();
         let result = if method == "wavg" {
-            let mut w4 = weights;
-            w4.resize(4, 0.0);
-            let w = lit_f32(&w4, &[4])?;
+            // Combo pblocks pre-pad the shared weights to 4 once per stream;
+            // pad a local copy only for direct callers that did not.
+            let w = if weights.len() == 4 {
+                lit_f32(&weights, &[4])?
+            } else {
+                let mut w4 = weights.to_vec();
+                w4.resize(4, 0.0);
+                lit_f32(&w4, &[4])?
+            };
             exe.execute::<&xla::Literal>(&[&s, &a, &w])?[0][0].to_literal_sync()?
         } else {
             exe.execute::<&xla::Literal>(&[&s, &a])?[0][0].to_literal_sync()?

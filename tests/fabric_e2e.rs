@@ -6,8 +6,8 @@ use fsead::config::{ComboCfg, FseadConfig, PblockCfg, RmKind};
 use fsead::data::synth::{generate_profile, DatasetProfile};
 use fsead::data::Dataset;
 use fsead::detectors::DetectorKind;
-use fsead::ensemble::run_sequential;
 use fsead::detectors::DetectorSpec;
+use fsead::ensemble::{run_sequential, ExecMode};
 use fsead::fabric::Fabric;
 
 fn tiny(name: &'static str, n: usize, d: usize, seed: u64) -> Dataset {
@@ -230,6 +230,52 @@ fn fabric_on_pjrt_matches_cpu_fabric() {
         assert!((x - y).abs() < 3e-3, "sample {i}: cpu={x} fpga={y}");
     }
     assert!(fpga_out.modeled_fpga_secs > 0.0);
+}
+
+#[test]
+fn burst_fabric_matches_per_flit_fabric_exactly() {
+    // The whole data plane — DMAs, switches, burst-drained pblocks, a wavg
+    // combo and direct outputs — must produce *bit-identical* scores under
+    // ExecMode::Batched (burst servicing) and ExecMode::LockStep (the
+    // per-flit seed path) on CPU RMs. chunk=16 over 150 samples forces a
+    // padded tail flit through the burst splitter.
+    let kinds = [
+        DetectorKind::Loda,
+        DetectorKind::RsHash,
+        DetectorKind::XStream,
+        DetectorKind::Loda,
+    ];
+    let run = |exec: ExecMode| {
+        let mut cfg = cpu_cfg();
+        cfg.exec = exec;
+        cfg.chunk = 16;
+        for (i, k) in kinds.iter().enumerate() {
+            cfg.pblocks.push(PblockCfg { id: i + 1, rm: RmKind::Detector(*k), r: 2, stream: 0 });
+        }
+        cfg.combos.push(ComboCfg {
+            id: 1,
+            method: "wavg".into(),
+            inputs: vec![1, 2],
+            weights: vec![0.25, 0.75],
+        });
+        let ds = tiny("parity", 150, 3, 21);
+        let mut fabric = Fabric::new(cfg, vec![ds]).unwrap();
+        fabric.run().unwrap()
+    };
+    let per_flit = run(ExecMode::LockStep);
+    let burst = run(ExecMode::Batched);
+    assert_eq!(per_flit.combo_scores[&1].len(), 150);
+    assert_eq!(per_flit.combo_scores[&1], burst.combo_scores[&1]);
+    assert_eq!(per_flit.pblock_scores.len(), 2); // pblocks 3 and 4
+    for (id, scores) in &per_flit.pblock_scores {
+        assert_eq!(scores, &burst.pblock_scores[id], "pblock {id}");
+    }
+    // Same samples serviced, whatever the drain granularity.
+    for id in 1..=4usize {
+        assert_eq!(per_flit.pblock_reports[&id].samples, 150);
+        assert_eq!(burst.pblock_reports[&id].samples, 150);
+        assert_eq!(per_flit.pblock_reports[&id].flits_out, 10);
+    }
 }
 
 #[test]
