@@ -1,0 +1,156 @@
+//! Bench: live DFX — swap latency and dark-window flit loss vs the Table-13
+//! model, measured on a streaming fabric (2 Loda pblocks on one stream,
+//! chunk 16). Each timed pass hot-swaps pblock 1 mid-stream while pblock 2
+//! keeps scoring; a no-swap pass of the same workload gives the overhead
+//! baseline.
+//!
+//! Emits `BENCH_dfx.json`: per-mode wall times with and without a swap, the
+//! modelled download latency, the measured in-system swap cost (RM replace +
+//! reset inside the service thread), the dark-window length and the flits
+//! actually lost/bypassed — plus the model's residual against the paper's
+//! Table 13 measurement for RP-1 (gate: residual ≤ 6 ms, the bound the
+//! `table13` unit tests hold every block to).
+
+mod bench_util;
+use bench_util::{cap, Bench};
+
+use fsead::config::{DarkPolicy, FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::ExecMode;
+use fsead::fabric::hotswap::model_dark_flits;
+use fsead::fabric::reconfig::ReconfigModel;
+use fsead::fabric::Fabric;
+
+const CHUNK: usize = 16;
+/// Modelled stream rate for ms → flit conversion: slow enough that the
+/// ~606 ms download maps to a dark window well inside the bench stream.
+const RATE: f64 = 2_000.0;
+/// Paper Table 13, RP-1 Identity → Function (ms).
+const PAPER_RP1_MS: f64 = 606.3;
+
+fn topology(exec: ExecMode) -> FseadConfig {
+    let mut cfg = FseadConfig::default();
+    cfg.use_fpga = false;
+    cfg.exec = exec;
+    cfg.chunk = CHUNK;
+    cfg.dfx.samples_per_sec = RATE;
+    cfg.dfx.policy = DarkPolicy::Bypass;
+    for id in 1..=2usize {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 2,
+            stream: 0,
+        });
+    }
+    cfg
+}
+
+struct Row {
+    mode: &'static str,
+    secs_noswap: f64,
+    secs_swap: f64,
+    model_ms: f64,
+    actual_ms: f64,
+    dark_flits: u64,
+    flits_lost: u64,
+}
+
+fn main() {
+    let bench = Bench::new("dfx_swap");
+    let n = cap();
+    let p = DatasetProfile { name: "dfx", n, d: 4, outliers: n / 100, clusters: 3 };
+    let ds = generate_profile(&p, 42);
+    let n = ds.n();
+    let total_flits = n.div_ceil(CHUNK) as u64;
+    // Table-13-modelled dark window, clamped so it always completes inside
+    // the bench stream (tiny FSEAD_BENCH_SAMPLES runs stay green).
+    let model_only_ms = ReconfigModel::default().time_ms_pblock(1, true).unwrap();
+    let dark = model_dark_flits(model_only_ms, RATE, CHUNK).min(total_flits / 2).max(1);
+
+    let mut rows: Vec<Row> = Vec::new();
+    for mode in ExecMode::ALL {
+        // Baseline: the same workload with no swap scheduled.
+        let mut plain = Fabric::new(topology(mode), vec![ds.clone()]).unwrap();
+        let secs_noswap = bench.run(&format!("noswap/{}", mode.as_str()), || {
+            plain.reset_all().unwrap();
+            let out = plain.run().unwrap();
+            assert!(out.swap_events.is_empty());
+        });
+
+        // Live: hot-swap pblock 1 (Loda → Loda keeps the workload constant)
+        // mid-stream on every pass; the dark window comes from the Table-13
+        // model at RATE.
+        let mut live = Fabric::new(topology(mode), vec![ds.clone()]).unwrap();
+        let mut last = None;
+        let secs_swap = bench.run(&format!("swap/{}", mode.as_str()), || {
+            live.reset_all().unwrap();
+            live.schedule_swap(1, 10, RmKind::Detector(DetectorKind::Loda), 2, Some(dark))
+                .unwrap();
+            let out = live.run().unwrap();
+            assert_eq!(out.swap_events.len(), 1, "swap must execute mid-stream");
+            // Pblock 2 streams through a full pass regardless of the swap.
+            assert_eq!(out.pblock_scores[&2].len(), n);
+            last = Some(out.swap_events[0].clone());
+        });
+        let ev = last.expect("at least one timed pass");
+        assert_eq!(ev.dark_flits, dark, "dark window must follow the schedule");
+        assert!(ev.dark_complete, "bench stream must cover the dark window");
+        assert_eq!(ev.bypassed + ev.dropped, ev.dark_flits, "every dark flit is accounted");
+        println!(
+            "  -> {}: swap pass {:.1} ms vs {:.1} ms plain; model {:.1} ms, in-system swap \
+             {:.3} ms, dark {} flits ({} bypassed)",
+            mode.as_str(),
+            secs_swap * 1e3,
+            secs_noswap * 1e3,
+            ev.model_ms,
+            ev.actual_ms,
+            ev.dark_flits,
+            ev.bypassed
+        );
+        rows.push(Row {
+            mode: mode.as_str(),
+            secs_noswap,
+            secs_swap,
+            model_ms: ev.model_ms,
+            actual_ms: ev.actual_ms,
+            dark_flits: ev.dark_flits,
+            flits_lost: ev.bypassed + ev.dropped,
+        });
+    }
+
+    // Gate: the calibrated model must sit within the Table-13 residual the
+    // unit tests enforce (±6 ms of every paper cell).
+    let model_ms = rows[0].model_ms;
+    let residual_ms = (model_ms - PAPER_RP1_MS).abs();
+    assert!(residual_ms <= 6.0, "model {model_ms:.1} ms vs paper {PAPER_RP1_MS:.1} ms");
+    println!("  -> RP-1 model residual vs paper Table 13: {residual_ms:.2} ms");
+
+    let mut json = String::from("{\n  \"bench\": \"dfx_swap\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n},\n  \"chunk\": {CHUNK},\n  \"samples_per_sec\": {RATE},\n  \
+         \"paper_rp1_ms\": {PAPER_RP1_MS},\n  \"model_residual_ms\": {residual_ms:.3},\n  \
+         \"rows\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"seconds_noswap\": {:.6}, \"seconds_swap\": {:.6}, \
+             \"model_ms\": {:.3}, \"actual_ms\": {:.4}, \"dark_flits\": {}, \
+             \"flits_lost\": {}}}{}\n",
+            r.mode,
+            r.secs_noswap,
+            r.secs_swap,
+            r.model_ms,
+            r.actual_ms,
+            r.dark_flits,
+            r.flits_lost,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_dfx.json", &json) {
+        Ok(()) => println!("wrote BENCH_dfx.json"),
+        Err(e) => eprintln!("could not write BENCH_dfx.json: {e}"),
+    }
+}

@@ -2,12 +2,19 @@
 //! applications, one per pblock, each on its own DMA channel — the
 //! configuration a monitoring deployment would use for seven sensors.
 //!
+//! Two of the sensors misbehave half-way through (an abrupt level shift in
+//! every feature — the classic "sensor recalibrated itself" drift), and the
+//! adaptive live-DFX controller is on: it watches each pblock's score
+//! stream, and when the drift proxy trips it hot-swaps the drifting
+//! pblock's detector from the configured pool while the other six streams
+//! keep flowing. The ensemble reshapes itself mid-run.
+//!
 //! ```sh
 //! cargo run --release --example multi_stream
 //! ```
 
 use anyhow::Result;
-use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::config::{FseadConfig, PblockCfg, PoolEntry, RmKind};
 use fsead::data::synth::{generate_profile, DatasetProfile};
 use fsead::data::Dataset;
 use fsead::detectors::DetectorKind;
@@ -16,7 +23,7 @@ use fsead::fabric::Fabric;
 
 fn main() -> Result<()> {
     // Seven independent sensor streams with different characteristics.
-    let streams: Vec<Dataset> = (0..7)
+    let mut streams: Vec<Dataset> = (0..7)
         .map(|i| {
             let p = DatasetProfile {
                 name: "sensor",
@@ -28,6 +35,13 @@ fn main() -> Result<()> {
             generate_profile(&p, 100 + i as u64)
         })
         .collect();
+    // Sensors 2 and 5 drift abruptly half-way: every feature jumps by +6.
+    for &s in &[2usize, 5] {
+        let mid = streams[s].data.len() / 2;
+        for v in streams[s].data[mid..].iter_mut() {
+            *v += 6.0;
+        }
+    }
 
     let mut cfg = FseadConfig::default();
     cfg.use_fpga = std::path::Path::new("artifacts/manifest.txt").exists();
@@ -37,6 +51,24 @@ fn main() -> Result<()> {
         let kind = kinds[(id - 1) % 3];
         cfg.pblocks.push(PblockCfg { id, rm: RmKind::Detector(kind), r: kind.pblock_r(), stream: id - 1 });
     }
+    // Adaptive live DFX: watch every pblock's score stream; on drift, swap
+    // the drifting pblock to the next pool detector while the fabric keeps
+    // streaming (dark windows priced by the Table-13 model at the declared
+    // stream rate; bypass policy keeps every stream sample-aligned).
+    cfg.dfx.adaptive = true;
+    cfg.dfx.window = 64;
+    cfg.dfx.baseline = 256;
+    cfg.dfx.threshold = 2.5;
+    cfg.dfx.cooldown_flits = 8;
+    cfg.dfx.samples_per_sec = 1_700.0;
+    cfg.dfx.pool = vec![
+        PoolEntry { kind: DetectorKind::Loda, r: 8 },
+        PoolEntry { kind: DetectorKind::RsHash, r: 8 },
+        PoolEntry { kind: DetectorKind::XStream, r: 8 },
+    ];
+    // Finer flits (~125-200 per stream) give the controller flit-level
+    // resolution to act within the run.
+    cfg.chunk = 64;
 
     let truths: Vec<Vec<bool>> = streams.iter().map(|d| d.labels.clone()).collect();
     let contaminations: Vec<f64> = streams.iter().map(|d| d.contamination()).collect();
@@ -59,6 +91,17 @@ fn main() -> Result<()> {
             scores.len(),
             report.busy_secs * 1e3
         );
+    }
+    println!(
+        "adaptive live DFX: {} swap(s) issued, {} executed mid-run",
+        out.adaptive_swaps_issued,
+        out.swap_events.len()
+    );
+    for ev in &out.swap_events {
+        println!("  {ev}");
+    }
+    if out.swap_events.is_empty() {
+        println!("  (stream ended before the controller acted — rerun or raise n for a longer run)");
     }
     Ok(())
 }

@@ -41,6 +41,108 @@ impl RmKind {
     }
 }
 
+/// What the shell does with a pblock's traffic during the DFX dark window
+/// (the Table-13 bitstream-download interval while the region is isolated).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DarkPolicy {
+    /// Emit zero-score placeholder flits so downstream framing (combo
+    /// joins, output DMAs) stays sample-aligned across the swap. Default.
+    Bypass,
+    /// Drop the flits at the decoupler (the raw isolation behaviour); the
+    /// pblock's output stream is shorter by the dark window.
+    Drop,
+}
+
+impl DarkPolicy {
+    pub fn parse(s: &str) -> Option<DarkPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "bypass" => Some(DarkPolicy::Bypass),
+            "drop" => Some(DarkPolicy::Drop),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DarkPolicy::Bypass => "bypass",
+            DarkPolicy::Drop => "drop",
+        }
+    }
+}
+
+/// One detector choice in the adaptive controller's pool: a kind plus an
+/// ensemble size (`r = 0` means the paper's per-pblock default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolEntry {
+    pub kind: DetectorKind,
+    pub r: usize,
+}
+
+impl PoolEntry {
+    /// Parse `"loda"` or `"loda:8"`.
+    pub fn parse(s: &str) -> Option<PoolEntry> {
+        let (kind, r) = match s.split_once(':') {
+            Some((k, r)) => (k, r.trim().parse().ok()?),
+            None => (s, 0),
+        };
+        Some(PoolEntry { kind: DetectorKind::parse(kind.trim())?, r })
+    }
+}
+
+/// One scripted hot-swap: at pblock-input flit `at_flit` of the next run,
+/// replace the RM in `pblock` with `rm`.
+#[derive(Clone, Copy, Debug)]
+pub struct ScriptedSwap {
+    pub pblock: usize,
+    pub at_flit: u64,
+    pub rm: RmKind,
+    pub r: usize,
+    /// Dark-window length in flits; None derives it from the Table-13
+    /// model at `DfxCfg::samples_per_sec`.
+    pub dark_flits: Option<u64>,
+}
+
+/// Live-DFX configuration (`[fabric.dfx]` + `[fabric.dfx.swap.N]`).
+#[derive(Clone, Debug)]
+pub struct DfxCfg {
+    /// Run the adaptive reconfiguration controller during `Fabric::run`.
+    pub adaptive: bool,
+    /// Dark-window traffic handling.
+    pub policy: DarkPolicy,
+    /// Modelled stream rate used to convert the Table-13 download latency
+    /// into a dark window measured in flits.
+    pub samples_per_sec: f64,
+    /// Sliding window (scores) the drift detector compares against the
+    /// baseline.
+    pub window: usize,
+    /// Scores used to establish the per-pblock baseline statistics.
+    pub baseline: usize,
+    /// Drift threshold in baseline standard deviations.
+    pub threshold: f64,
+    /// Minimum flits between adaptive swaps of the same pblock.
+    pub cooldown_flits: u64,
+    /// Detector pool the controller cycles through on drift.
+    pub pool: Vec<PoolEntry>,
+    /// Scripted swap schedule, armed at fabric construction.
+    pub swaps: Vec<ScriptedSwap>,
+}
+
+impl Default for DfxCfg {
+    fn default() -> Self {
+        DfxCfg {
+            adaptive: false,
+            policy: DarkPolicy::Bypass,
+            samples_per_sec: 100_000.0,
+            window: 128,
+            baseline: 256,
+            threshold: 4.0,
+            cooldown_flits: 256,
+            pool: vec![],
+            swaps: vec![],
+        }
+    }
+}
+
 /// Detector hyper-parameters (paper Table 4).
 #[derive(Clone, Copy, Debug)]
 pub struct DetectorHyper {
@@ -115,6 +217,9 @@ pub struct FseadConfig {
     pub dataset: DatasetCfg,
     pub pblocks: Vec<PblockCfg>,
     pub combos: Vec<ComboCfg>,
+    /// Live-DFX: dark-window policy, scripted swap schedule, adaptive
+    /// controller settings.
+    pub dfx: DfxCfg,
 }
 
 impl Default for FseadConfig {
@@ -129,6 +234,7 @@ impl Default for FseadConfig {
             dataset: DatasetCfg { name: "cardio".into(), data_dir: None, max_samples: 0 },
             pblocks: vec![],
             combos: vec![],
+            dfx: DfxCfg::default(),
         }
     }
 }
@@ -188,6 +294,61 @@ impl FseadConfig {
         if let Some(v) = doc.get_int("dataset", "max_samples") {
             cfg.dataset.max_samples = v as usize;
         }
+        // [fabric.dfx] — live reconfiguration
+        if let Some(v) = doc.get_bool("fabric.dfx", "enabled") {
+            cfg.dfx.adaptive = v;
+        }
+        if let Some(v) = doc.get_str("fabric.dfx", "policy") {
+            cfg.dfx.policy = DarkPolicy::parse(v)
+                .with_context(|| format!("[fabric.dfx]: unknown dark-window policy {v:?}"))?;
+        }
+        if let Some(v) = doc.get_float("fabric.dfx", "samples_per_sec") {
+            cfg.dfx.samples_per_sec = v;
+        }
+        if let Some(v) = doc.get_int("fabric.dfx", "window") {
+            cfg.dfx.window = v as usize;
+        }
+        if let Some(v) = doc.get_int("fabric.dfx", "baseline") {
+            cfg.dfx.baseline = v as usize;
+        }
+        if let Some(v) = doc.get_float("fabric.dfx", "threshold") {
+            cfg.dfx.threshold = v;
+        }
+        if let Some(v) = doc.get_int("fabric.dfx", "cooldown_flits") {
+            cfg.dfx.cooldown_flits = v as u64;
+        }
+        if let Some(arr) = doc.get("fabric.dfx", "pool").and_then(|v| v.as_array()) {
+            for v in arr {
+                let s = v
+                    .as_str()
+                    .context("[fabric.dfx]: pool entries are \"kind\" or \"kind:r\" strings")?;
+                let entry = PoolEntry::parse(s)
+                    .with_context(|| format!("[fabric.dfx]: bad pool entry {s:?}"))?;
+                cfg.dfx.pool.push(entry);
+            }
+        }
+        // [fabric.dfx.swap.N] — scripted swap schedule
+        for name in doc.sections_with_prefix("fabric.dfx.swap.") {
+            let pblock = doc
+                .get_int(name, "pblock")
+                .with_context(|| format!("[{name}]: missing pblock id"))?
+                as usize;
+            let at_flit =
+                doc.get_int(name, "at_flit").with_context(|| format!("[{name}]: missing at_flit"))?
+                    as u64;
+            let rm_str =
+                doc.get_str(name, "rm").with_context(|| format!("[{name}]: missing rm"))?;
+            let rm = RmKind::parse(rm_str)
+                .with_context(|| format!("[{name}]: unknown rm {rm_str:?}"))?;
+            let default_r = match rm {
+                RmKind::Detector(k) => k.pblock_r(),
+                _ => 0,
+            };
+            let r = doc.get_int(name, "r").map(|v| v as usize).unwrap_or(default_r);
+            let dark_flits = doc.get_int(name, "dark_flits").map(|v| v as u64);
+            cfg.dfx.swaps.push(ScriptedSwap { pblock, at_flit, rm, r, dark_flits });
+        }
+        cfg.dfx.swaps.sort_by_key(|s| (s.at_flit, s.pblock));
         // [pblock.N] sections
         for name in doc.sections_with_prefix("pblock.") {
             let id: usize = name["pblock.".len()..]
@@ -268,6 +429,49 @@ impl FseadConfig {
             }
             if c.method == "wavg" && c.weights.len() < c.inputs.len() {
                 bail!("combo {}: wavg needs one weight per input", c.id);
+            }
+        }
+        if self.dfx.samples_per_sec <= 0.0 {
+            bail!("[fabric.dfx]: samples_per_sec must be > 0");
+        }
+        // A drop-policy dark window deletes flits from one input of a
+        // lock-step combo join, desynchronising the seq numbers mid-run —
+        // reject it up front instead of failing deep inside the pass.
+        if self.dfx.policy == DarkPolicy::Drop {
+            for s in &self.dfx.swaps {
+                if consumed.contains(&s.pblock) {
+                    bail!(
+                        "[fabric.dfx]: drop policy would desynchronise the combo fed by \
+                         pblock {} — use policy = \"bypass\" for combo-fed pblocks",
+                        s.pblock
+                    );
+                }
+            }
+            if self.dfx.adaptive && !consumed.is_empty() {
+                bail!(
+                    "[fabric.dfx]: the adaptive controller with drop policy cannot run on a \
+                     fabric with combo-fed pblocks — use policy = \"bypass\""
+                );
+            }
+        }
+        if self.dfx.adaptive {
+            if self.dfx.pool.is_empty() {
+                bail!("[fabric.dfx]: adaptive controller enabled with an empty detector pool");
+            }
+            if self.dfx.window == 0 || self.dfx.baseline == 0 {
+                bail!("[fabric.dfx]: window and baseline must be > 0");
+            }
+        }
+        for s in &self.dfx.swaps {
+            if !(1..=defaults::NUM_AD_PBLOCKS).contains(&s.pblock) {
+                bail!(
+                    "[fabric.dfx.swap]: pblock id must be 1..={} (got {})",
+                    defaults::NUM_AD_PBLOCKS,
+                    s.pblock
+                );
+            }
+            if matches!(s.rm, RmKind::Detector(_)) && s.r == 0 {
+                bail!("[fabric.dfx.swap]: detector swap for pblock {} has r = 0", s.pblock);
             }
         }
         Ok(())
@@ -511,6 +715,111 @@ inputs = [1, 2]
         assert_eq!(c223.pblocks[6].rm, RmKind::Detector(DetectorKind::XStream));
         assert!(FseadConfig::from_combo_code("A9").is_err());
         assert!(FseadConfig::from_combo_code("X2").is_err());
+    }
+
+    #[test]
+    fn dfx_section_parses() {
+        let text = r#"
+[pblock.1]
+rm = "loda"
+
+[fabric.dfx]
+enabled = true
+policy = "drop"
+samples_per_sec = 50000
+window = 64
+baseline = 128
+threshold = 2.5
+cooldown_flits = 32
+pool = ["loda:8", "rshash", "xstream:4"]
+
+[fabric.dfx.swap.1]
+pblock = 1
+at_flit = 40
+rm = "rshash"
+r = 4
+dark_flits = 3
+
+[fabric.dfx.swap.2]
+pblock = 1
+at_flit = 10
+rm = "xstream"
+r = 2
+"#;
+        let cfg = FseadConfig::from_str(text).unwrap();
+        assert!(cfg.dfx.adaptive);
+        assert_eq!(cfg.dfx.policy, DarkPolicy::Drop);
+        assert_eq!(cfg.dfx.samples_per_sec, 50_000.0);
+        assert_eq!(cfg.dfx.window, 64);
+        assert_eq!(cfg.dfx.baseline, 128);
+        assert_eq!(cfg.dfx.threshold, 2.5);
+        assert_eq!(cfg.dfx.cooldown_flits, 32);
+        assert_eq!(
+            cfg.dfx.pool,
+            vec![
+                PoolEntry { kind: DetectorKind::Loda, r: 8 },
+                PoolEntry { kind: DetectorKind::RsHash, r: 0 },
+                PoolEntry { kind: DetectorKind::XStream, r: 4 },
+            ]
+        );
+        // Schedule is sorted by (at_flit, pblock); default r comes from the
+        // paper's per-pblock sizes, explicit dark_flits is preserved.
+        assert_eq!(cfg.dfx.swaps.len(), 2);
+        assert_eq!(cfg.dfx.swaps[0].at_flit, 10);
+        assert_eq!(cfg.dfx.swaps[0].rm, RmKind::Detector(DetectorKind::XStream));
+        assert_eq!(cfg.dfx.swaps[0].dark_flits, None);
+        assert_eq!(cfg.dfx.swaps[1].at_flit, 40);
+        assert_eq!(cfg.dfx.swaps[1].dark_flits, Some(3));
+    }
+
+    #[test]
+    fn dfx_defaults_are_off() {
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert!(!cfg.dfx.adaptive);
+        assert_eq!(cfg.dfx.policy, DarkPolicy::Bypass);
+        assert!(cfg.dfx.swaps.is_empty());
+    }
+
+    #[test]
+    fn dfx_validation_rejects_bad_sections() {
+        // Adaptive without a pool.
+        assert!(FseadConfig::from_str("[fabric.dfx]\nenabled = true\n").is_err());
+        // Unknown policy.
+        assert!(FseadConfig::from_str("[fabric.dfx]\npolicy = \"vanish\"\n").is_err());
+        // Swap targeting a pblock outside the fabric.
+        let bad = "[fabric.dfx.swap.1]\npblock = 9\nat_flit = 1\nrm = \"loda\"\n";
+        assert!(FseadConfig::from_str(bad).is_err());
+        // Detector swap with r = 0.
+        let bad = "[fabric.dfx.swap.1]\npblock = 1\nat_flit = 1\nrm = \"loda\"\nr = 0\n";
+        assert!(FseadConfig::from_str(bad).is_err());
+    }
+
+    #[test]
+    fn drop_policy_rejected_for_combo_fed_swap_targets() {
+        let base = "[pblock.1]\nrm = \"loda\"\n[pblock.2]\nrm = \"loda\"\n\
+                    [combo.1]\ninputs = [1, 2]\n\
+                    [fabric.dfx.swap.1]\npblock = 1\nat_flit = 2\nrm = \"rshash\"\nr = 2\n";
+        // Bypass (default) keeps the join aligned — accepted.
+        assert!(FseadConfig::from_str(base).is_ok());
+        // Drop would desynchronise the combo join — rejected at load time.
+        let drop = format!("[fabric.dfx]\npolicy = \"drop\"\n{base}");
+        assert!(FseadConfig::from_str(&drop).is_err());
+        // Adaptive + drop on a combo-carrying fabric is rejected too.
+        let adaptive = "[fabric.dfx]\npolicy = \"drop\"\nenabled = true\npool = [\"loda:2\"]\n\
+                        [pblock.1]\nrm = \"loda\"\n[pblock.2]\nrm = \"loda\"\n\
+                        [combo.1]\ninputs = [1, 2]\n";
+        assert!(FseadConfig::from_str(adaptive).is_err());
+    }
+
+    #[test]
+    fn pool_entries_parse() {
+        assert_eq!(
+            PoolEntry::parse("loda:12"),
+            Some(PoolEntry { kind: DetectorKind::Loda, r: 12 })
+        );
+        assert_eq!(PoolEntry::parse("rshash"), Some(PoolEntry { kind: DetectorKind::RsHash, r: 0 }));
+        assert_eq!(PoolEntry::parse("loda:x"), None);
+        assert_eq!(PoolEntry::parse("nope"), None);
     }
 
     #[test]

@@ -38,6 +38,9 @@ pub struct ExpCtx {
     /// Override the fabric execution mode (`--exec lockstep|batched`);
     /// None keeps whatever the config file selects.
     pub exec: Option<crate::ensemble::ExecMode>,
+    /// Force the adaptive live-DFX controller on (`--dfx`), regardless of
+    /// `[fabric.dfx] enabled` in the config.
+    pub dfx: bool,
 }
 
 impl Default for ExpCtx {
@@ -50,6 +53,7 @@ impl Default for ExpCtx {
             artifact_dir: "artifacts".into(),
             use_fpga: true,
             exec: None,
+            dfx: false,
         }
     }
 }
@@ -108,6 +112,9 @@ pub fn cli_main(args: &[String]) -> Result<i32> {
                     crate::ensemble::ExecMode::parse(v)
                         .with_context(|| format!("--exec: unknown mode {v:?}"))?,
                 );
+            }
+            "--dfx" => {
+                ctx.dfx = true;
             }
             other => positional.push(other),
         }
@@ -187,6 +194,10 @@ FLAGS:
   --exec MODE       fabric pblock servicing: batched (burst fast path,
                     default) or lockstep (paper-faithful per-flit loop);
                     also settable per config via `exec` in [fabric]
+  --dfx             enable the adaptive live-DFX controller for `fsead run`
+                    (hot-swaps drifting pblocks from the [fabric.dfx] pool
+                    while the fabric streams; scripted swaps come from
+                    [fabric.dfx.swap.N] sections)
 "
     .to_string()
 }
@@ -241,6 +252,9 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
     if let Some(mode) = ctx.exec {
         cfg.exec = mode;
     }
+    if ctx.dfx {
+        cfg.dfx.adaptive = true;
+    }
     cfg.artifact_dir = ctx.artifact_dir.clone();
     if cfg.dataset.data_dir.is_none() {
         cfg.dataset.data_dir = ctx.data_dir.clone();
@@ -286,6 +300,17 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
         out.modeled_fpga_secs * 1e3,
         out.switch_flits
     );
+    for ev in &out.swap_events {
+        println!("  DFX swap {ev}");
+    }
+    if fabric.config().dfx.adaptive {
+        println!(
+            "  adaptive controller issued {} swap(s); {} swap(s) executed in total this run \
+             (scripted + adaptive)",
+            out.adaptive_swaps_issued,
+            out.swap_events.len()
+        );
+    }
     for (id, scores) in &out.pblock_scores {
         let auc = auc_roc(&normalize_scores(scores), &truth);
         println!("  pblock {id}: {} scores, AUC-S {:.4}", scores.len(), auc);

@@ -7,11 +7,25 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Decoupler {
     decoupled: AtomicBool,
+    /// A shell can be built without decoupling IP for a region; such a
+    /// pblock cannot be isolated, and the DFX manager refuses to swap it
+    /// (half-configured logic would see live traffic). Enabled by default.
+    enabled: AtomicBool,
     /// Count of flits dropped while isolated (telemetry).
     dropped: AtomicU64,
+}
+
+impl Default for Decoupler {
+    fn default() -> Self {
+        Decoupler {
+            decoupled: AtomicBool::new(false),
+            enabled: AtomicBool::new(true),
+            dropped: AtomicU64::new(0),
+        }
+    }
 }
 
 impl Decoupler {
@@ -19,9 +33,21 @@ impl Decoupler {
         Decoupler::default()
     }
 
-    /// Isolate the partition (assert DECOUPLE).
+    /// Model a shell with/without decoupling IP for this region.
+    pub fn set_enabled(&self, enabled: bool) {
+        self.enabled.store(enabled, Ordering::SeqCst);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::SeqCst)
+    }
+
+    /// Isolate the partition (assert DECOUPLE). No-op when the decoupler
+    /// is disabled — callers must check [`Decoupler::is_enabled`] first.
     pub fn decouple(&self) {
-        self.decoupled.store(true, Ordering::SeqCst);
+        if self.is_enabled() {
+            self.decoupled.store(true, Ordering::SeqCst);
+        }
     }
 
     /// Release the partition after reconfiguration + reset.
@@ -35,6 +61,13 @@ impl Decoupler {
             self.dropped.fetch_add(1, Ordering::Relaxed);
         }
         d
+    }
+
+    /// Explicitly charge one dropped flit to the telemetry counter (used by
+    /// the DFX gate's dark window, where the drop decision is made without
+    /// probing `is_decoupled`).
+    pub fn count_drop(&self) {
+        self.dropped.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn dropped(&self) -> u64 {
@@ -67,6 +100,18 @@ mod tests {
         d.recouple();
         assert!(!d.is_decoupled());
         assert_eq!(d.dropped(), 5);
+    }
+
+    #[test]
+    fn disabled_decoupler_cannot_isolate() {
+        let d = Decoupler::new();
+        assert!(d.is_enabled());
+        d.set_enabled(false);
+        d.decouple();
+        assert!(!d.is_decoupled(), "disabled decoupler must not isolate");
+        d.set_enabled(true);
+        d.decouple();
+        assert!(d.is_decoupled());
     }
 
     #[test]

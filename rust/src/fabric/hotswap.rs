@@ -1,0 +1,898 @@
+//! Live DFX: hot-swapping RMs while the fabric is streaming.
+//!
+//! The offline path ([`super::reconfig::DfxManager::reconfigure`]) swaps an
+//! RM between runs. This module makes reconfiguration a first-class
+//! in-flight operation, following the paper's §3.2 shell protocol:
+//!
+//! 1. **Stage** — the replacement RM is built up front
+//!    ([`DfxManager::stage`]): parameters generated, artifact compiled and
+//!    loaded on the device. This mirrors staging the partial bitstream in
+//!    DDR; it happens *outside* the dark window, so staging cost never
+//!    interrupts the stream.
+//! 2. **Quiesce** — when the pblock's service loop reaches the scheduled
+//!    flit, it asserts the region's decoupler. Because the swap executes
+//!    *in* the service thread between two flits, the RM is quiescent by
+//!    construction: no in-flight flit is ever handed to half-configured
+//!    logic, and every other pblock keeps streaming untouched (they share
+//!    no state with the target region).
+//! 3. **Dark window** — the Table-13-calibrated download latency is charged
+//!    in stream terms: `dark_flits = ceil(model_ms × samples_per_sec /
+//!    chunk)` flits arriving while the region is dark are either dropped at
+//!    the decoupler ([`DarkPolicy::Drop`]) or answered with zero-score
+//!    placeholder flits ([`DarkPolicy::Bypass`], the default — it keeps
+//!    combo joins and output DMAs sample-aligned across the swap).
+//! 4. **Re-enable** — the old RM is dropped, the new RM is reset and the
+//!    decoupler releases; the next flit flows through the new detector.
+//!
+//! Accounting rules: the flit that triggers the swap is the first dark
+//! flit; exactly `dark_flits` flits are charged unless TLAST ends the
+//! stream early (the event is then recorded with `dark_complete = false`);
+//! dropped and bypassed flits are counted per swap in [`SwapEvent`] and
+//! dropped ones also increment the decoupler's telemetry counter.
+//!
+//! On top sits the **adaptive reconfiguration controller**
+//! ([`spawn_controller`]): it watches each monitored pblock's score stream
+//! through [`ScoreStats`] (baseline mean/std vs a sliding recent window — a
+//! drift proxy) and, when the drift z-score crosses the configured
+//! threshold, stages a swap to the next detector in the TOML-declared pool
+//! (`[fabric.dfx]`). While the controller is watching, burst servicing
+//! bounds its backlog drain so scores surface at flit-bounded intervals —
+//! otherwise a fast producer's whole stream would be admitted as one burst
+//! and the controller could never act within the run (see
+//! `Pblock::service_burst`).
+
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::decoupler::Decoupler;
+use super::message::{score_chunk, Flit};
+use super::pblock::LoadedRm;
+use super::reconfig::DfxManager;
+use crate::config::{DarkPolicy, DetectorHyper, DfxCfg, RmKind};
+use crate::detectors::DetectorKind;
+use crate::runtime::{Registry, RuntimeHandle};
+
+/// Convert the modelled DFX download latency into a dark window measured in
+/// flits at the declared stream rate. Always at least one flit: a swap is
+/// never free while the stream is live.
+pub fn model_dark_flits(model_ms: f64, samples_per_sec: f64, chunk: usize) -> u64 {
+    let samples = model_ms / 1e3 * samples_per_sec;
+    let flits = (samples / chunk.max(1) as f64).ceil();
+    (flits as u64).max(1)
+}
+
+/// A staged swap: the replacement RM is already built ("bitstream in DDR");
+/// executing it only costs the dark window.
+pub struct PendingSwap {
+    pub pblock: usize,
+    /// Pblock-input flit index (0-based, per run) at which the swap fires.
+    /// Fires on the first flit with index >= `at_flit`.
+    pub at_flit: u64,
+    pub rm: LoadedRm,
+    pub to: RmKind,
+    pub r: usize,
+    pub dark_flits: u64,
+    pub model_ms: f64,
+    pub policy: DarkPolicy,
+}
+
+/// Record of one executed in-flight swap.
+#[derive(Clone, Debug)]
+pub struct SwapEvent {
+    pub pblock: usize,
+    pub from: String,
+    pub to: String,
+    pub to_kind: RmKind,
+    pub r: usize,
+    /// Flit index at which the region went dark.
+    pub at_flit: u64,
+    /// Scheduled dark-window length.
+    pub dark_flits: u64,
+    /// Flits dropped at the decoupler during the dark window.
+    pub dropped: u64,
+    /// Zero-score placeholder flits emitted during the dark window.
+    pub bypassed: u64,
+    /// Table-13 modelled download latency.
+    pub model_ms: f64,
+    /// Measured RM replace + reset time inside the service thread.
+    pub actual_ms: f64,
+    /// False when TLAST truncated the dark window.
+    pub dark_complete: bool,
+}
+
+impl std::fmt::Display for SwapEvent {
+    /// Canonical one-line rendering, shared by the CLI and the examples.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "RP-{}: {} -> {} @ flit {} — dark {} flits ({} bypassed, {} dropped{}), \
+             model {:.1} ms, swap here {:.2} ms",
+            self.pblock,
+            self.from,
+            self.to,
+            self.at_flit,
+            self.dark_flits,
+            self.bypassed,
+            self.dropped,
+            if self.dark_complete { "" } else { "; truncated by stream end" },
+            self.model_ms,
+            self.actual_ms
+        )
+    }
+}
+
+/// Per-pblock swap mailbox, shared between the service thread (executes
+/// swaps), the fabric (scripted schedules) and the adaptive controller.
+pub struct SwapPort {
+    pending: Mutex<Vec<PendingSwap>>,
+    /// Earliest pending `at_flit` (u64::MAX when none) — one relaxed load
+    /// per flit on the hot path.
+    next_at: AtomicU64,
+    /// Pblock-input flits seen this run (reset by `begin_run`).
+    flits_seen: AtomicU64,
+    events: Mutex<Vec<SwapEvent>>,
+}
+
+impl Default for SwapPort {
+    fn default() -> Self {
+        SwapPort {
+            pending: Mutex::new(Vec::new()),
+            next_at: AtomicU64::new(u64::MAX),
+            flits_seen: AtomicU64::new(0),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl SwapPort {
+    /// Arm a staged swap. Pending swaps persist until their flit index is
+    /// reached in some run.
+    pub fn schedule(&self, swap: PendingSwap) {
+        let mut p = self.pending.lock().unwrap();
+        p.push(swap);
+        p.sort_by_key(|s| s.at_flit);
+        self.next_at.store(p[0].at_flit, Ordering::SeqCst);
+    }
+
+    /// Cheap hot-path probe: is a swap due at the current flit?
+    pub(crate) fn due_now(&self) -> bool {
+        self.next_at.load(Ordering::SeqCst) <= self.flits_seen.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn try_take_due(&self) -> Option<PendingSwap> {
+        if !self.due_now() {
+            return None;
+        }
+        let mut p = self.pending.lock().unwrap();
+        let idx = self.flits_seen.load(Ordering::SeqCst);
+        if !matches!(p.first(), Some(s) if s.at_flit <= idx) {
+            return None;
+        }
+        let swap = p.remove(0);
+        self.next_at.store(p.first().map(|s| s.at_flit).unwrap_or(u64::MAX), Ordering::SeqCst);
+        Some(swap)
+    }
+
+    /// Pblock-input flits seen this run (monotone within a run).
+    pub fn flits_seen(&self) -> u64 {
+        self.flits_seen.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn advance(&self) {
+        self.flits_seen.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Reset the per-run flit counter (scheduled indices are per run).
+    pub(crate) fn begin_run(&self) {
+        self.flits_seen.store(0, Ordering::SeqCst);
+    }
+
+    pub(crate) fn push_event(&self, ev: SwapEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    /// Drain the events recorded since the last call.
+    pub fn take_events(&self) -> Vec<SwapEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Drop all armed swaps; returns how many were discarded.
+    pub fn clear_pending(&self) -> usize {
+        let mut p = self.pending.lock().unwrap();
+        let n = p.len();
+        p.clear();
+        self.next_at.store(u64::MAX, Ordering::SeqCst);
+        n
+    }
+}
+
+/// Snapshot of a pblock's score statistics (drift proxy).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StatSnapshot {
+    pub total: u64,
+    pub window: usize,
+    pub baseline: usize,
+    pub baseline_n: u64,
+    pub baseline_mean: f64,
+    pub baseline_std: f64,
+    pub window_len: usize,
+    pub window_mean: f64,
+}
+
+impl StatSnapshot {
+    /// Baseline established and the recent window full.
+    pub fn ready(&self) -> bool {
+        self.baseline > 0
+            && self.baseline_n >= self.baseline as u64
+            && self.window_len >= self.window
+    }
+
+    /// |recent mean − baseline mean| in baseline standard deviations.
+    pub fn drift_z(&self) -> f64 {
+        (self.window_mean - self.baseline_mean).abs() / self.baseline_std.max(1e-6)
+    }
+}
+
+#[derive(Default)]
+struct StatsInner {
+    window: usize,
+    baseline: usize,
+    total: u64,
+    base_n: u64,
+    base_mean: f64,
+    base_m2: f64,
+    ring: VecDeque<f64>,
+    ring_sum: f64,
+}
+
+/// Sliding score statistics published by the pblock service loop, read by
+/// the adaptive controller. Disabled (zero-cost fast path: one relaxed
+/// atomic load per output flit) until [`ScoreStats::arm`] is called.
+#[derive(Default)]
+pub struct ScoreStats {
+    enabled: AtomicBool,
+    inner: Mutex<StatsInner>,
+}
+
+impl ScoreStats {
+    /// Enable collection with the given window/baseline sizes (in scores).
+    pub fn arm(&self, window: usize, baseline: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner =
+            StatsInner { window: window.max(1), baseline: baseline.max(1), ..Default::default() };
+        drop(inner);
+        self.enabled.store(true, Ordering::SeqCst);
+    }
+
+    /// Push the valid scores of one output flit.
+    pub fn push(&self, scores: &[f32], n_valid: usize) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let window = inner.window;
+        for &s in scores.iter().take(n_valid) {
+            let s = s as f64;
+            inner.total += 1;
+            if inner.base_n < inner.baseline as u64 {
+                // Welford update of the baseline mean/variance.
+                inner.base_n += 1;
+                let delta = s - inner.base_mean;
+                inner.base_mean += delta / inner.base_n as f64;
+                inner.base_m2 += delta * (s - inner.base_mean);
+            }
+            inner.ring.push_back(s);
+            inner.ring_sum += s;
+            if inner.ring.len() > window {
+                let old = inner.ring.pop_front().unwrap_or(0.0);
+                inner.ring_sum -= old;
+            }
+        }
+    }
+
+    /// True once [`ScoreStats::arm`] has enabled collection (the adaptive
+    /// controller is watching this pblock).
+    pub fn is_armed(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Forget the baseline and window — called when a swap lands a new
+    /// detector (its score scale is unrelated to the old baseline).
+    pub fn rebase(&self) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.base_n = 0;
+        inner.base_mean = 0.0;
+        inner.base_m2 = 0.0;
+        inner.ring.clear();
+        inner.ring_sum = 0.0;
+    }
+
+    pub fn snapshot(&self) -> StatSnapshot {
+        let inner = self.inner.lock().unwrap();
+        StatSnapshot {
+            total: inner.total,
+            window: inner.window,
+            baseline: inner.baseline,
+            baseline_n: inner.base_n,
+            baseline_mean: inner.base_mean,
+            baseline_std: if inner.base_n > 1 {
+                (inner.base_m2 / inner.base_n as f64).sqrt()
+            } else {
+                0.0
+            },
+            window_len: inner.ring.len(),
+            window_mean: if inner.ring.is_empty() {
+                0.0
+            } else {
+                inner.ring_sum / inner.ring.len() as f64
+            },
+        }
+    }
+}
+
+/// Shared control surface of one pblock: swap mailbox + score statistics.
+#[derive(Default)]
+pub struct PblockCtl {
+    pub swap: SwapPort,
+    pub stats: ScoreStats,
+}
+
+/// Per-flit verdict of the DFX gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admit {
+    /// Hand the flit to the RM.
+    Process,
+    /// Isolated (dark window with Drop policy, or externally decoupled):
+    /// the flit vanishes at the decoupler.
+    Drop,
+    /// Dark window with Bypass policy: emit a zero-score placeholder flit.
+    Bypass,
+}
+
+struct DarkRun {
+    remaining: u64,
+    policy: DarkPolicy,
+    event: SwapEvent,
+}
+
+/// The in-flight swap state machine, driven by the pblock service loop once
+/// per flit (both execution modes). Owns no RM — the service thread passes
+/// its `&mut LoadedRm` in, which is exactly what makes the swap race-free.
+pub struct DfxGate<'a> {
+    ctl: &'a PblockCtl,
+    decoupler: &'a Decoupler,
+    dark: Option<DarkRun>,
+}
+
+impl<'a> DfxGate<'a> {
+    pub fn new(ctl: &'a PblockCtl, decoupler: &'a Decoupler) -> DfxGate<'a> {
+        DfxGate { ctl, decoupler, dark: None }
+    }
+
+    /// True when the next call to [`DfxGate::admit`] will execute a swap —
+    /// burst servicing uses this to flush the backlog segment scored by the
+    /// *old* RM before the replacement happens.
+    pub fn swap_imminent(&self) -> bool {
+        self.dark.is_none() && self.ctl.swap.due_now()
+    }
+
+    /// Admit one flit: maybe execute a due swap (quiesce → replace → reset),
+    /// then classify the flit against the dark window / decoupler.
+    ///
+    /// `may_swap = false` defers a due swap to a later flit — burst
+    /// servicing passes `seg.is_empty()` so a swap scheduled concurrently
+    /// (adaptive controller) between its `swap_imminent` check and this
+    /// call can never replace the RM while unflushed flits still belong to
+    /// the old one. The per-flit path always passes `true`.
+    pub fn admit(&mut self, rm: &mut LoadedRm, last: bool, may_swap: bool) -> Result<Admit> {
+        let idx = self.ctl.swap.flits_seen();
+        // A due swap executes only while the region's decoupler is enabled
+        // (no isolation → no swap, same refusal as `schedule_swap` /
+        // `reconfigure`); a swap armed before the decoupler was disabled
+        // stays pending until it is re-enabled.
+        let due = if may_swap
+            && self.dark.is_none()
+            && self.ctl.swap.due_now()
+            && self.decoupler.is_enabled()
+        {
+            self.ctl.swap.try_take_due()
+        } else {
+            None
+        };
+        if let Some(swap) = due {
+            // Quiesce: the region goes dark. The swap runs here, in the
+            // service thread, between flits — the RM is quiescent by
+            // construction and no other pblock is touched.
+            self.decoupler.decouple();
+            let from = rm.describe();
+            let t0 = Instant::now();
+            let old = std::mem::replace(rm, swap.rm);
+            drop(old);
+            rm.reset()?;
+            let actual_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.ctl.stats.rebase();
+            let event = SwapEvent {
+                pblock: swap.pblock,
+                from,
+                to: rm.describe(),
+                to_kind: swap.to,
+                r: swap.r,
+                at_flit: idx,
+                dark_flits: swap.dark_flits,
+                dropped: 0,
+                bypassed: 0,
+                model_ms: swap.model_ms,
+                actual_ms,
+                dark_complete: false,
+            };
+            self.dark =
+                Some(DarkRun { remaining: swap.dark_flits.max(1), policy: swap.policy, event });
+        }
+        self.ctl.swap.advance();
+        if self.dark.is_some() {
+            let (admit, finished) = {
+                let dark = self.dark.as_mut().unwrap();
+                dark.remaining -= 1;
+                let admit = match dark.policy {
+                    DarkPolicy::Drop => {
+                        // Count in the decoupler's telemetry like any
+                        // isolated-traffic drop, and in the event.
+                        self.decoupler.count_drop();
+                        dark.event.dropped += 1;
+                        Admit::Drop
+                    }
+                    DarkPolicy::Bypass => {
+                        dark.event.bypassed += 1;
+                        Admit::Bypass
+                    }
+                };
+                (admit, dark.remaining == 0)
+            };
+            if finished || last {
+                let mut ev = self.dark.take().unwrap().event;
+                ev.dark_complete = finished;
+                self.decoupler.recouple();
+                self.ctl.swap.push_event(ev);
+            }
+            return Ok(admit);
+        }
+        if self.decoupler.is_decoupled() {
+            return Ok(Admit::Drop);
+        }
+        Ok(Admit::Process)
+    }
+
+    /// Close out a dark window cut short by the stream ending (channel
+    /// closed without TLAST) so the event is still recorded and the region
+    /// re-enabled for the next run.
+    pub fn finish(&mut self) {
+        if let Some(dark) = self.dark.take() {
+            let mut ev = dark.event;
+            ev.dark_complete = false;
+            self.decoupler.recouple();
+            self.ctl.swap.push_event(ev);
+        }
+    }
+}
+
+/// Zero-score placeholder emitted while a region is dark under
+/// [`DarkPolicy::Bypass`] — same seq/mask/n_valid/TLAST framing as the
+/// input flit, so downstream joins stay aligned.
+pub fn dark_flit(f: &Flit) -> Flit {
+    score_chunk(f.seq, vec![0f32; f.rows()], f.mask.clone(), f.n_valid, f.last)
+}
+
+impl DfxManager {
+    /// Stage a swap: build the replacement RM now (params, artifact
+    /// compile/load — the "bitstream into DDR" step) and price the dark
+    /// window from the Table-13 model, so executing the swap later only
+    /// costs `dark_flits` of stream time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn stage(
+        &self,
+        pblock_id: usize,
+        to: RmKind,
+        r: usize,
+        d: usize,
+        seed: u64,
+        hyper: &DetectorHyper,
+        warmup: &[f32],
+        fpga: Option<(&RuntimeHandle, &Registry)>,
+        quantize: bool,
+        at_flit: u64,
+        dark_flits: Option<u64>,
+        policy: DarkPolicy,
+        chunk: usize,
+        samples_per_sec: f64,
+    ) -> Result<PendingSwap> {
+        let to_function = to != RmKind::Empty && to != RmKind::Bypass;
+        let model_ms =
+            self.model.time_ms_pblock(pblock_id, to_function).unwrap_or(self.model.base_ms);
+        let rm = LoadedRm::build(to, r, d, seed, hyper, warmup, fpga, quantize)?;
+        // At least one dark flit: a swap is never free while streaming.
+        let dark = dark_flits
+            .unwrap_or_else(|| model_dark_flits(model_ms, samples_per_sec, chunk))
+            .max(1);
+        Ok(PendingSwap { pblock: pblock_id, at_flit, rm, to, r, dark_flits: dark, model_ms, policy })
+    }
+}
+
+/// One pblock monitored by the adaptive controller.
+pub struct ControllerTarget {
+    pub pblock: usize,
+    pub ctl: Arc<PblockCtl>,
+    /// Detector currently loaded (tracked locally as swaps are issued).
+    pub kind: DetectorKind,
+    pub d: usize,
+    pub warmup: Vec<f32>,
+    pub seed: u64,
+}
+
+/// Everything the controller thread owns.
+pub struct ControllerEnv {
+    pub dfx: DfxManager,
+    pub cfg: DfxCfg,
+    pub hyper: DetectorHyper,
+    pub chunk: usize,
+    pub quantize: bool,
+    pub fpga: Option<(RuntimeHandle, Registry)>,
+}
+
+/// Spawn the adaptive reconfiguration controller. It polls each target's
+/// [`ScoreStats`] and, when the drift z-score crosses `cfg.threshold`
+/// (baseline established, window full, cooldown elapsed), stages a swap to
+/// the next pool detector with a different algorithm and arms it at the
+/// pblock's current flit. Returns the number of swaps issued when `stop`
+/// is raised.
+pub fn spawn_controller(
+    env: ControllerEnv,
+    mut targets: Vec<ControllerTarget>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<u64> {
+    std::thread::Builder::new()
+        .name("dfx-controller".into())
+        .spawn(move || {
+            // Give up on a target after this many consecutive staging
+            // failures (e.g. a pool detector whose artifact is missing) —
+            // never rebuild-and-fail at the poll rate forever.
+            const MAX_STAGE_FAILURES: u32 = 3;
+            let mut issued = 0u64;
+            let mut pool_pos = 0usize;
+            let mut last_swap: Vec<Option<u64>> = vec![None; targets.len()];
+            let mut stage_failures: Vec<u32> = vec![0; targets.len()];
+            if env.cfg.pool.is_empty() {
+                return issued;
+            }
+            while !stop.load(Ordering::SeqCst) {
+                for (ti, t) in targets.iter_mut().enumerate() {
+                    if stage_failures[ti] >= MAX_STAGE_FAILURES {
+                        continue;
+                    }
+                    if t.ctl.swap.pending_count() > 0 {
+                        continue;
+                    }
+                    let snap = t.ctl.stats.snapshot();
+                    if !snap.ready() || snap.drift_z() < env.cfg.threshold {
+                        continue;
+                    }
+                    let seen = t.ctl.swap.flits_seen();
+                    if let Some(at) = last_swap[ti] {
+                        if seen.saturating_sub(at) < env.cfg.cooldown_flits {
+                            continue;
+                        }
+                    }
+                    // Next pool entry running a different algorithm (any
+                    // entry if the pool is homogeneous).
+                    let n = env.cfg.pool.len();
+                    let mut chosen = None;
+                    for k in 0..n {
+                        let pos = (pool_pos + k) % n;
+                        let e = env.cfg.pool[pos];
+                        if e.kind != t.kind || n == 1 {
+                            chosen = Some((pos, e));
+                            break;
+                        }
+                    }
+                    let Some((pos, entry)) = chosen else { continue };
+                    let r = if entry.r == 0 { entry.kind.pblock_r() } else { entry.r };
+                    let staged = env.dfx.stage(
+                        t.pblock,
+                        RmKind::Detector(entry.kind),
+                        r,
+                        t.d,
+                        t.seed,
+                        &env.hyper,
+                        &t.warmup,
+                        env.fpga.as_ref().map(|(h, reg)| (h, reg)),
+                        env.quantize,
+                        seen,
+                        None,
+                        env.cfg.policy,
+                        env.chunk,
+                        env.cfg.samples_per_sec,
+                    );
+                    match staged {
+                        Ok(swap) => {
+                            t.ctl.swap.schedule(swap);
+                            t.kind = entry.kind;
+                            last_swap[ti] = Some(seen);
+                            pool_pos = pos + 1;
+                            stage_failures[ti] = 0;
+                            issued += 1;
+                        }
+                        Err(e) => {
+                            // Back off by the cooldown and count the strike;
+                            // the drift condition would otherwise re-fire a
+                            // full detector build every poll tick.
+                            stage_failures[ti] += 1;
+                            last_swap[ti] = Some(seen);
+                            eprintln!(
+                                "dfx-controller: staging {} for pblock {} failed \
+                                 (strike {}/{MAX_STAGE_FAILURES}): {e:#}",
+                                entry.kind.as_str(),
+                                t.pblock,
+                                stage_failures[ti]
+                            );
+                        }
+                    }
+                }
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            issued
+        })
+        .expect("spawn dfx controller")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hyper() -> DetectorHyper {
+        DetectorHyper { window: 8, bins: 4, w: 2, modulus: 16, k: 3 }
+    }
+
+    fn staged(at_flit: u64, dark: u64, policy: DarkPolicy) -> PendingSwap {
+        let warmup: Vec<f32> = (0..40).map(|i| (i as f32 * 0.3).sin()).collect();
+        DfxManager::default()
+            .stage(
+                1,
+                RmKind::Detector(DetectorKind::Loda),
+                2,
+                2,
+                7,
+                &hyper(),
+                &warmup,
+                None,
+                false,
+                at_flit,
+                Some(dark),
+                policy,
+                8,
+                100_000.0,
+            )
+            .unwrap()
+    }
+
+    fn input_flit(seq: u64, last: bool) -> Flit {
+        score_chunk(seq, vec![0.5f32; 8], vec![1.0f32; 4], 4, last)
+    }
+
+    #[test]
+    fn model_dark_flits_scales_with_rate() {
+        // 600 ms at 100k samples/s, chunk 256 → ceil(60000/256) = 235.
+        assert_eq!(model_dark_flits(600.0, 100_000.0, 256), 235);
+        // Never zero, even for absurdly slow streams.
+        assert_eq!(model_dark_flits(600.0, 0.001, 256), 1);
+    }
+
+    #[test]
+    fn swap_port_orders_and_drains() {
+        let port = SwapPort::default();
+        port.schedule(staged(5, 1, DarkPolicy::Drop));
+        port.schedule(staged(2, 1, DarkPolicy::Drop));
+        assert_eq!(port.pending_count(), 2);
+        assert!(!port.due_now()); // flits_seen = 0 < 2
+        for _ in 0..2 {
+            port.advance();
+        }
+        assert!(port.due_now());
+        let s = port.try_take_due().unwrap();
+        assert_eq!(s.at_flit, 2);
+        assert!(!port.due_now()); // next is at 5
+        assert_eq!(port.clear_pending(), 1);
+        assert!(!port.due_now());
+    }
+
+    #[test]
+    fn gate_executes_swap_with_dark_window() {
+        let ctl = PblockCtl::default();
+        let dec = Decoupler::new();
+        ctl.swap.schedule(staged(2, 2, DarkPolicy::Bypass));
+        let mut rm = LoadedRm::BypassNative;
+        let mut gate = DfxGate::new(&ctl, &dec);
+        // Flits 0,1 process; 2,3 dark; 4 processes through the new RM.
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Process);
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Process);
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Bypass);
+        assert!(dec.is_decoupled(), "region must be dark mid-window");
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Bypass);
+        assert!(!dec.is_decoupled(), "region must re-enable after the window");
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Process);
+        assert!(matches!(rm, LoadedRm::DetectorCpu { .. }), "RM was not replaced");
+        let evs = ctl.swap.take_events();
+        assert_eq!(evs.len(), 1);
+        let ev = &evs[0];
+        assert_eq!(ev.at_flit, 2);
+        assert_eq!(ev.bypassed, 2);
+        assert_eq!(ev.dropped, 0);
+        assert!(ev.dark_complete);
+        assert_eq!(ev.from, "bypass(native)");
+        assert!(ev.to.contains("loda"));
+    }
+
+    #[test]
+    fn gate_drop_policy_counts_at_decoupler() {
+        let ctl = PblockCtl::default();
+        let dec = Decoupler::new();
+        ctl.swap.schedule(staged(0, 3, DarkPolicy::Drop));
+        let mut rm = LoadedRm::BypassNative;
+        let mut gate = DfxGate::new(&ctl, &dec);
+        for _ in 0..3 {
+            assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Drop);
+        }
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Process);
+        let evs = ctl.swap.take_events();
+        assert_eq!(evs[0].dropped, 3);
+        assert_eq!(dec.dropped(), 3);
+    }
+
+    #[test]
+    fn gate_truncates_dark_window_at_tlast() {
+        let ctl = PblockCtl::default();
+        let dec = Decoupler::new();
+        ctl.swap.schedule(staged(1, 10, DarkPolicy::Bypass));
+        let mut rm = LoadedRm::BypassNative;
+        let mut gate = DfxGate::new(&ctl, &dec);
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Process);
+        assert_eq!(gate.admit(&mut rm, true, true).unwrap(), Admit::Bypass);
+        let evs = ctl.swap.take_events();
+        assert_eq!(evs.len(), 1);
+        assert!(!evs[0].dark_complete, "TLAST must truncate the window");
+        assert_eq!(evs[0].bypassed, 1);
+        assert!(!dec.is_decoupled(), "truncated window must still re-enable");
+    }
+
+    #[test]
+    fn gate_defers_swap_while_decoupler_disabled() {
+        let ctl = PblockCtl::default();
+        let dec = Decoupler::new();
+        ctl.swap.schedule(staged(0, 1, DarkPolicy::Bypass));
+        dec.set_enabled(false);
+        let mut rm = LoadedRm::BypassNative;
+        let mut gate = DfxGate::new(&ctl, &dec);
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Process);
+        assert!(matches!(rm, LoadedRm::BypassNative), "no isolation -> no swap");
+        assert_eq!(ctl.swap.pending_count(), 1, "swap stays armed");
+        // Re-enabling the decoupler lets the pending swap fire.
+        dec.set_enabled(true);
+        assert_eq!(gate.admit(&mut rm, false, true).unwrap(), Admit::Bypass);
+        assert!(matches!(rm, LoadedRm::DetectorCpu { .. }));
+    }
+
+    #[test]
+    fn gate_finish_records_interrupted_swap() {
+        let ctl = PblockCtl::default();
+        let dec = Decoupler::new();
+        ctl.swap.schedule(staged(0, 5, DarkPolicy::Drop));
+        let mut rm = LoadedRm::BypassNative;
+        let mut gate = DfxGate::new(&ctl, &dec);
+        let _ = gate.admit(&mut rm, false, true).unwrap();
+        gate.finish();
+        let evs = ctl.swap.take_events();
+        assert_eq!(evs.len(), 1);
+        assert!(!evs[0].dark_complete);
+        assert!(!dec.is_decoupled());
+    }
+
+    #[test]
+    fn dark_flit_preserves_framing() {
+        let f = input_flit(3, true);
+        let d = dark_flit(&f);
+        assert_eq!(d.seq, 3);
+        assert_eq!(d.n_valid, 4);
+        assert!(d.last);
+        assert_eq!(d.data.len(), d.mask.len());
+        assert!(d.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn score_stats_detect_level_shift() {
+        let stats = ScoreStats::default();
+        stats.arm(8, 16);
+        let flat = [1.0f32; 4];
+        for _ in 0..6 {
+            stats.push(&flat, 4); // 24 scores ≈ N(1, 0): std clamps at eps
+        }
+        let snap = stats.snapshot();
+        assert!(snap.ready());
+        assert!(snap.drift_z() < 1.0, "no drift yet: z={}", snap.drift_z());
+        let shifted = [5.0f32; 4];
+        for _ in 0..4 {
+            stats.push(&shifted, 4);
+        }
+        let snap = stats.snapshot();
+        assert!(snap.drift_z() > 100.0, "level shift must trip: z={}", snap.drift_z());
+        stats.rebase();
+        let snap = stats.snapshot();
+        assert!(!snap.ready(), "rebase must forget the baseline");
+    }
+
+    #[test]
+    fn controller_schedules_swap_on_drift() {
+        use crate::config::PoolEntry;
+        let ctl = Arc::new(PblockCtl::default());
+        ctl.stats.arm(8, 16);
+        // Flat baseline, then a hard level shift — drift z explodes.
+        ctl.stats.push(&[1.0f32; 16], 16);
+        ctl.stats.push(&[9.0f32; 8], 8);
+        for _ in 0..40 {
+            ctl.swap.advance(); // pretend 40 flits streamed
+        }
+        let env = ControllerEnv {
+            dfx: DfxManager::default(),
+            cfg: DfxCfg {
+                adaptive: true,
+                threshold: 3.0,
+                cooldown_flits: 0,
+                pool: vec![PoolEntry { kind: DetectorKind::RsHash, r: 2 }],
+                ..Default::default()
+            },
+            hyper: hyper(),
+            chunk: 8,
+            quantize: false,
+            fpga: None,
+        };
+        let warmup: Vec<f32> = (0..40).map(|i| (i as f32 * 0.3).sin()).collect();
+        let targets = vec![ControllerTarget {
+            pblock: 1,
+            ctl: Arc::clone(&ctl),
+            kind: DetectorKind::Loda,
+            d: 2,
+            warmup,
+            seed: 3,
+        }];
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = spawn_controller(env, targets, Arc::clone(&stop));
+        let t0 = Instant::now();
+        while ctl.swap.pending_count() == 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        stop.store(true, Ordering::SeqCst);
+        let issued = handle.join().unwrap();
+        assert_eq!(issued, 1, "one swap while it stays pending");
+        let swap = ctl.swap.try_take_due().expect("armed swap must be due at flit 40");
+        assert_eq!(swap.pblock, 1);
+        assert_eq!(swap.to, RmKind::Detector(DetectorKind::RsHash));
+        assert_eq!(swap.at_flit, 40);
+        assert!(swap.dark_flits >= 1);
+        assert!(matches!(swap.rm, LoadedRm::DetectorCpu { .. }), "RM staged up front");
+    }
+
+    #[test]
+    fn score_stats_disabled_is_noop() {
+        let stats = ScoreStats::default();
+        stats.push(&[1.0, 2.0], 2);
+        assert_eq!(stats.snapshot().total, 0);
+    }
+}

@@ -2,17 +2,22 @@
 //!
 //! Reconfigurable pblocks hold RMs (detector / bypass / combo), AXI-stream
 //! switches route chunked streams between DMAs, pblocks and combos under a
-//! register-programmed crossbar, and the DFX manager swaps RMs at run time.
+//! register-programmed crossbar, and the DFX manager swaps RMs at run time
+//! — between runs ([`reconfig`]) or in flight while the fabric is
+//! streaming ([`hotswap`]: quiesce through the decoupler, dark-window
+//! accounting, adaptive reconfiguration controller).
 
 pub mod combo;
 pub mod decoupler;
 pub mod dma;
+pub mod hotswap;
 pub mod message;
 pub mod pblock;
 pub mod reconfig;
 pub mod switch;
 pub mod topology;
 
+pub use hotswap::SwapEvent;
 pub use message::{Flit, Port};
 pub use switch::AxiSwitch;
 pub use topology::Fabric;

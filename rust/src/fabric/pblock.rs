@@ -32,6 +32,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::decoupler::Decoupler;
+use super::hotswap::{self, Admit, DfxGate, PblockCtl};
 use super::message::{score_chunk, Flit};
 use crate::config::{DetectorHyper, RmKind};
 use crate::detectors::{Detector, DetectorSpec};
@@ -252,53 +253,83 @@ pub struct Pblock {
     pub id: usize,
     pub rm: LoadedRm,
     pub decoupler: Arc<Decoupler>,
+    /// Live-DFX control surface: swap mailbox + score statistics, shared
+    /// with the fabric and the adaptive controller while the service
+    /// thread owns the RM.
+    pub ctl: Arc<PblockCtl>,
 }
 
 impl Pblock {
     pub fn new(id: usize) -> Pblock {
-        Pblock { id, rm: LoadedRm::Empty, decoupler: Arc::new(Decoupler::new()) }
+        Pblock {
+            id,
+            rm: LoadedRm::Empty,
+            decoupler: Arc::new(Decoupler::new()),
+            ctl: Arc::new(PblockCtl::default()),
+        }
     }
 
     /// Service one stream under the selected execution mode.
     pub fn service_mode(
         rm: &mut LoadedRm,
         decoupler: &Decoupler,
+        ctl: &PblockCtl,
         rx: Receiver<Flit>,
         tx: Sender<Flit>,
         mode: ExecMode,
     ) -> Result<PblockReport> {
         match mode {
-            ExecMode::LockStep => Self::service(rm, decoupler, rx, tx),
-            ExecMode::Batched => Self::service_burst(rm, decoupler, rx, tx),
+            ExecMode::LockStep => Self::service(rm, decoupler, ctl, rx, tx),
+            ExecMode::Batched => Self::service_burst(rm, decoupler, ctl, rx, tx),
         }
     }
 
     /// Service one stream per flit: pull flits from `rx`, run them through
     /// the RM one at a time, push results to `tx`. Returns when the stream
     /// ends (TLAST or closed). The paper-faithful baseline data plane.
+    ///
+    /// Every flit first passes the DFX gate, which executes scheduled
+    /// hot-swaps between flits and classifies dark-window traffic (see
+    /// `fabric::hotswap` for the quiesce protocol and accounting rules).
     pub fn service(
         rm: &mut LoadedRm,
         decoupler: &Decoupler,
+        ctl: &PblockCtl,
         rx: Receiver<Flit>,
         tx: Sender<Flit>,
     ) -> Result<PblockReport> {
         let mut report = PblockReport::default();
+        let mut gate = DfxGate::new(ctl, decoupler);
         for flit in rx.iter() {
             report.flits_in += 1;
-            if decoupler.is_decoupled() {
-                // DFX decoupler isolates the region during reconfiguration:
-                // traffic is dropped, never handed to half-configured logic.
-                if flit.last {
-                    break;
-                }
-                continue;
-            }
             let last = flit.last;
+            match gate.admit(rm, last, true)? {
+                Admit::Drop => {
+                    // Isolated (reconfiguration dark window, or externally
+                    // decoupled): traffic is dropped, never handed to
+                    // half-configured logic.
+                    if last {
+                        break;
+                    }
+                    continue;
+                }
+                Admit::Bypass => {
+                    // Dark window, bypass policy: keep downstream framing
+                    // alive with a zero-score placeholder.
+                    report.flits_out += 1;
+                    if tx.send(hotswap::dark_flit(&flit)).is_err() || last {
+                        break;
+                    }
+                    continue;
+                }
+                Admit::Process => {}
+            }
             let t0 = Instant::now();
             let out = rm.process(&flit)?;
             report.busy_secs += t0.elapsed().as_secs_f64();
             report.samples += flit.n_valid as u64;
             if let Some(out) = out {
+                ctl.stats.push(&out.data, out.n_valid);
                 report.flits_out += 1;
                 if tx.send(out).is_err() {
                     break; // downstream disabled
@@ -308,6 +339,7 @@ impl Pblock {
                 break;
             }
         }
+        gate.finish();
         Ok(report)
     }
 
@@ -316,45 +348,112 @@ impl Pblock {
     /// one burst through [`LoadedRm::process_burst`]. Flit order, per-flit
     /// TLAST and decoupler drops match [`Pblock::service`] exactly; only
     /// the per-transfer overhead is amortised.
+    ///
+    /// The DFX gate is consulted per drained flit, so a hot-swap scheduled
+    /// mid-backlog splits the burst: flits before the swap are scored by
+    /// the old RM (the segment is flushed before the RM is replaced),
+    /// dark-window flits are dropped or bypassed, and the tail is scored
+    /// by the new RM — identical flit-level semantics to the per-flit
+    /// path.
     pub fn service_burst(
         rm: &mut LoadedRm,
         decoupler: &Decoupler,
+        ctl: &PblockCtl,
         rx: Receiver<Flit>,
         tx: Sender<Flit>,
     ) -> Result<PblockReport> {
+        // When the adaptive controller is watching this pblock (stats
+        // armed), bound the backlog so scores are published — and newly
+        // scheduled swaps consulted — at flit-bounded intervals mid-stream.
+        // With an unbounded drain a fast producer's whole stream becomes
+        // one burst: every admit() decision would be made before the first
+        // score reaches the controller, making adaptive swaps unreachable
+        // in this mode. Throughput-only runs keep the unbounded drain.
+        const ADAPTIVE_MAX_BURST: usize = 32;
+        let max_burst = if ctl.stats.is_armed() { ADAPTIVE_MAX_BURST } else { usize::MAX };
         let mut report = PblockReport::default();
+        let mut gate = DfxGate::new(ctl, decoupler);
         let mut outputs: Vec<Flit> = Vec::new();
+        let mut seg: Vec<Flit> = Vec::new();
         loop {
-            let Ok(first) = rx.recv() else { return Ok(report) };
+            let Ok(first) = rx.recv() else {
+                gate.finish();
+                return Ok(report);
+            };
             let mut done = first.last;
             let mut backlog = vec![first];
-            while !done {
+            while !done && backlog.len() < max_burst {
                 let Ok(f) = rx.try_recv() else { break };
                 done = f.last;
                 backlog.push(f);
             }
             report.flits_in += backlog.len() as u64;
-            // The decoupler is consulted once per flit, like the per-flit
-            // path — drops are counted and isolated traffic never reaches
-            // the RM.
-            backlog.retain(|_| !decoupler.is_decoupled());
-            if !backlog.is_empty() {
-                let t0 = Instant::now();
-                outputs.clear();
-                rm.process_burst(&backlog, &mut outputs)?;
-                report.busy_secs += t0.elapsed().as_secs_f64();
-                report.samples += backlog.iter().map(|f| f.n_valid as u64).sum::<u64>();
-                for out in outputs.drain(..) {
-                    report.flits_out += 1;
-                    if tx.send(out).is_err() {
-                        return Ok(report); // downstream disabled
+            seg.clear();
+            for flit in backlog.drain(..) {
+                if gate.swap_imminent() && !seg.is_empty() {
+                    // Flush the segment owned by the outgoing RM before the
+                    // gate replaces it.
+                    if !Self::flush_seg(rm, ctl, &mut seg, &mut outputs, &tx, &mut report)? {
+                        gate.finish();
+                        return Ok(report);
                     }
                 }
+                let last = flit.last;
+                match gate.admit(rm, last, seg.is_empty())? {
+                    Admit::Drop => {}
+                    Admit::Bypass => {
+                        if !seg.is_empty()
+                            && !Self::flush_seg(rm, ctl, &mut seg, &mut outputs, &tx, &mut report)?
+                        {
+                            gate.finish();
+                            return Ok(report);
+                        }
+                        report.flits_out += 1;
+                        if tx.send(hotswap::dark_flit(&flit)).is_err() {
+                            gate.finish();
+                            return Ok(report);
+                        }
+                    }
+                    Admit::Process => seg.push(flit),
+                }
+            }
+            if !seg.is_empty()
+                && !Self::flush_seg(rm, ctl, &mut seg, &mut outputs, &tx, &mut report)?
+            {
+                gate.finish();
+                return Ok(report);
             }
             if done {
+                gate.finish();
                 return Ok(report);
             }
         }
+    }
+
+    /// Score one backlog segment through the RM and forward the outputs.
+    /// Returns `Ok(false)` when downstream is disabled (send failed).
+    fn flush_seg(
+        rm: &mut LoadedRm,
+        ctl: &PblockCtl,
+        seg: &mut Vec<Flit>,
+        outputs: &mut Vec<Flit>,
+        tx: &Sender<Flit>,
+        report: &mut PblockReport,
+    ) -> Result<bool> {
+        let t0 = Instant::now();
+        outputs.clear();
+        rm.process_burst(seg, outputs)?;
+        report.busy_secs += t0.elapsed().as_secs_f64();
+        report.samples += seg.iter().map(|f| f.n_valid as u64).sum::<u64>();
+        seg.clear();
+        for out in outputs.drain(..) {
+            ctl.stats.push(&out.data, out.n_valid);
+            report.flits_out += 1;
+            if tx.send(out).is_err() {
+                return Ok(false); // downstream disabled
+            }
+        }
+        Ok(true)
     }
 }
 
@@ -391,7 +490,8 @@ mod tests {
         }
         drop(tx_in);
         let dec = Decoupler::new();
-        let report = Pblock::service(&mut rm, &dec, rx_in, tx_out).unwrap();
+        let ctl = PblockCtl::default();
+        let report = Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
         assert_eq!(report.samples, 40);
         assert_eq!(report.flits_in, 5);
         let mut n_scores = 0;
@@ -435,7 +535,8 @@ mod tests {
         let mut rm = LoadedRm::BypassNative;
         let dec = Decoupler::new();
         dec.decouple();
-        let report = Pblock::service(&mut rm, &dec, rx_in, tx_out).unwrap();
+        let ctl = PblockCtl::default();
+        let report = Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
         assert_eq!(report.flits_out, 0);
         assert!(rx_out.recv().is_err());
         assert!(report.flits_in >= 1);
@@ -453,7 +554,8 @@ mod tests {
         let mut rm = LoadedRm::BypassNative;
         let dec = Decoupler::new();
         dec.decouple();
-        let report = Pblock::service_burst(&mut rm, &dec, rx_in, tx_out).unwrap();
+        let ctl = PblockCtl::default();
+        let report = Pblock::service_burst(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
         assert_eq!(report.flits_out, 0);
         assert_eq!(report.flits_in, 2);
         assert!(rx_out.recv().is_err());
@@ -498,7 +600,8 @@ mod tests {
                 }
                 drop(tx_in);
                 let dec = Decoupler::new();
-                Pblock::service(&mut rm, &dec, rx_in, tx_out).unwrap();
+                let ctl = PblockCtl::default();
+                Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
                 per_flit.extend(rx_out.iter());
             }
             let mut burst: Vec<Flit> = Vec::new();
@@ -511,7 +614,8 @@ mod tests {
                 }
                 drop(tx_in);
                 let dec = Decoupler::new();
-                let report = Pblock::service_burst(&mut rm, &dec, rx_in, tx_out).unwrap();
+                let ctl = PblockCtl::default();
+                let report = Pblock::service_burst(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
                 assert_eq!(report.samples, 50, "{kind:?}");
                 burst.extend(rx_out.iter());
             }
@@ -523,6 +627,80 @@ mod tests {
                 assert_eq!(&a.data[..], &b.data[..], "{kind:?} seq {}", a.seq);
                 assert_eq!(&a.mask[..], &b.mask[..], "{kind:?} seq {}", a.seq);
             }
+        }
+    }
+
+    #[test]
+    fn hot_swap_splits_stream_between_rms() {
+        // 40 samples, chunk 8 → 5 flits. A swap Loda → RS-Hash scheduled at
+        // flit 2 with a 1-flit dark window must yield: flits 0-1 scored by
+        // the old RM, flit 2 bypassed with zeros, flits 3-4 scored by the
+        // fresh new RM — identically in both drain modes.
+        use crate::config::DarkPolicy;
+        use crate::fabric::reconfig::DfxManager;
+        let data = stream_data(40, 3);
+        // Expected score stream, assembled from standalone RMs.
+        let mut expect: Vec<f32> = Vec::new();
+        {
+            let mut old = detector_rm(DetectorKind::Loda, 4, 3, 1, &data[..30]);
+            for flit in ChunkStream::new(&data[..16 * 3], 3, 8) {
+                let out = old.process(&flit).unwrap().unwrap();
+                expect.extend_from_slice(&out.data[..out.n_valid]);
+            }
+        }
+        expect.extend([0f32; 8]);
+        {
+            let mut new = detector_rm(DetectorKind::RsHash, 3, 3, 5, &data[..30]);
+            for flit in ChunkStream::new(&data[24 * 3..], 3, 8) {
+                let out = new.process(&flit).unwrap().unwrap();
+                expect.extend_from_slice(&out.data[..out.n_valid]);
+            }
+        }
+        for mode in ExecMode::ALL {
+            let mut rm = detector_rm(DetectorKind::Loda, 4, 3, 1, &data[..30]);
+            let (tx_in, rx_in) = Port::link();
+            let (tx_out, rx_out) = Port::link();
+            for f in ChunkStream::new(&data, 3, 8) {
+                tx_in.send(f).unwrap();
+            }
+            drop(tx_in);
+            let dec = Decoupler::new();
+            let ctl = PblockCtl::default();
+            let swap = DfxManager::default()
+                .stage(
+                    1,
+                    RmKind::Detector(DetectorKind::RsHash),
+                    3,
+                    3,
+                    5,
+                    &hyper(),
+                    &data[..30],
+                    None,
+                    false,
+                    2,
+                    Some(1),
+                    DarkPolicy::Bypass,
+                    8,
+                    1e5,
+                )
+                .unwrap();
+            ctl.swap.schedule(swap);
+            let report = Pblock::service_mode(&mut rm, &dec, &ctl, rx_in, tx_out, mode).unwrap();
+            let outs: Vec<Flit> = rx_out.iter().collect();
+            assert_eq!(outs.len(), 5, "{mode:?}");
+            let got: Vec<f32> =
+                outs.iter().flat_map(|f| f.data[..f.n_valid].to_vec()).collect();
+            assert_eq!(got, expect, "{mode:?}");
+            // Dark flit's samples never reached an RM.
+            assert_eq!(report.samples, 32, "{mode:?}");
+            let evs = ctl.swap.take_events();
+            assert_eq!(evs.len(), 1, "{mode:?}");
+            assert_eq!(evs[0].at_flit, 2);
+            assert_eq!(evs[0].bypassed, 1);
+            assert!(evs[0].dark_complete);
+            assert!(evs[0].from.contains("loda"), "{}", evs[0].from);
+            assert!(evs[0].to.contains("rshash"), "{}", evs[0].to);
+            assert!(!dec.is_decoupled(), "{mode:?}");
         }
     }
 

@@ -9,7 +9,7 @@
 //! separately; `emulate_latency` optionally sleeps out the modelled time to
 //! reproduce end-to-end behaviour.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::time::Instant;
 
 use super::pblock::{LoadedRm, Pblock};
@@ -65,6 +65,7 @@ pub struct ReconfigReport {
 }
 
 /// The DFX controller.
+#[derive(Clone)]
 pub struct DfxManager {
     pub model: ReconfigModel,
     /// Sleep out the modelled latency (off by default: experiments report
@@ -94,6 +95,13 @@ impl DfxManager {
         fpga: Option<(&RuntimeHandle, &Registry)>,
         quantize: bool,
     ) -> Result<ReconfigReport> {
+        if !pblock.decoupler.is_enabled() {
+            bail!(
+                "pblock {}: decoupler is disabled — refusing to reconfigure a region that \
+                 cannot be isolated from its stream",
+                pblock.id
+            );
+        }
         let from = pblock.rm.describe();
         let t0 = Instant::now();
         pblock.decoupler.decouple();
@@ -167,6 +175,47 @@ mod tests {
             .unwrap();
         assert!(rep2.from.contains("loda"));
         assert_eq!(rep2.to, "bypass(native)");
+    }
+
+    #[test]
+    fn reconfigure_refuses_disabled_decoupler() {
+        // A region whose decoupler IP is absent cannot be isolated; swapping
+        // it would expose half-configured logic to live traffic.
+        let hyper = DetectorHyper { window: 8, bins: 4, w: 2, modulus: 16, k: 3 };
+        let mut pb = Pblock::new(2);
+        pb.decoupler.set_enabled(false);
+        let mgr = DfxManager::default();
+        let warmup: Vec<f32> = (0..30).map(|i| (i as f32).cos()).collect();
+        let err = mgr
+            .reconfigure(
+                &mut pb,
+                RmKind::Detector(DetectorKind::Loda),
+                2,
+                3,
+                1,
+                &hyper,
+                &warmup,
+                None,
+                false,
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("decoupler is disabled"), "{err}");
+        assert!(matches!(pb.rm, LoadedRm::Empty), "RM must be untouched after refusal");
+        // Re-enabling the decoupler unblocks the swap.
+        pb.decoupler.set_enabled(true);
+        mgr.reconfigure(
+            &mut pb,
+            RmKind::Detector(DetectorKind::Loda),
+            2,
+            3,
+            1,
+            &hyper,
+            &warmup,
+            None,
+            false,
+        )
+        .unwrap();
+        assert!(!pb.decoupler.is_decoupled());
     }
 
     #[test]

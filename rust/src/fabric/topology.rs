@@ -14,18 +14,20 @@
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::combo::{self, ComboEngine};
 use super::dma::{DmaReport, InputDma, OutputDma};
+use super::hotswap::{self, ControllerEnv, ControllerTarget, SwapEvent};
 use super::message::{Flit, Port};
 use super::pblock::{Pblock, PblockReport};
 use super::reconfig::{DfxManager, ReconfigReport};
 use super::switch::AxiSwitch;
 use crate::combine::ScoreCombiner;
-use crate::config::{ComboCfg, FseadConfig, RmKind};
+use crate::config::{ComboCfg, DarkPolicy, FseadConfig, RmKind};
 use crate::data::Dataset;
 use crate::defaults;
 use crate::detectors::DetectorKind;
@@ -49,6 +51,12 @@ pub struct RunOutput {
     pub pblock_reports: BTreeMap<usize, PblockReport>,
     /// Input DMA reports by pblock id.
     pub dma_reports: BTreeMap<usize, DmaReport>,
+    /// In-flight RM swaps executed during this pass (live DFX), in
+    /// (flit, pblock) order.
+    pub swap_events: Vec<SwapEvent>,
+    /// Swaps issued by the adaptive controller during this pass (some may
+    /// still be pending if the stream ended first).
+    pub adaptive_swaps_issued: u64,
 }
 
 /// The composable fabric.
@@ -74,6 +82,14 @@ impl Fabric {
         let pblocks: Vec<Pblock> = (1..=defaults::NUM_AD_PBLOCKS).map(Pblock::new).collect();
         let mut fabric = Fabric { cfg, streams, runtime, pblocks, dfx: DfxManager::default() };
         fabric.load_all_rms()?;
+        // Arm the scripted swap schedule (live DFX): the replacement RMs
+        // are staged now, each one fires at its flit index during `run()`.
+        let scripted = fabric.cfg.dfx.swaps.clone();
+        for s in &scripted {
+            fabric
+                .schedule_swap(s.pblock, s.at_flit, s.rm, s.r, s.dark_flits)
+                .with_context(|| format!("arming scripted swap for pblock {}", s.pblock))?;
+        }
         Ok(fabric)
     }
 
@@ -152,6 +168,69 @@ impl Fabric {
         Ok(report)
     }
 
+    /// Arm an in-flight swap for pblock `id` at pblock-input flit
+    /// `at_flit` of the next `run()` — live DFX, the fabric keeps
+    /// streaming (see `fabric::hotswap` for the quiesce protocol). The
+    /// replacement RM is staged immediately; the pblock stays on its DMA
+    /// channel. `dark_flits = None` derives the dark window from the
+    /// Table-13 model at `[fabric.dfx] samples_per_sec`. Returns the
+    /// modelled download latency (ms) and the dark-window length (flits).
+    pub fn schedule_swap(
+        &self,
+        id: usize,
+        at_flit: u64,
+        rm: RmKind,
+        r: usize,
+        dark_flits: Option<u64>,
+    ) -> Result<(f64, u64)> {
+        if !(1..=self.pblocks.len()).contains(&id) {
+            bail!("no pblock {id}");
+        }
+        let pb = &self.pblocks[id - 1];
+        if !pb.decoupler.is_enabled() {
+            bail!("pblock {id}: decoupler is disabled — cannot hot-swap without isolation");
+        }
+        if self.cfg.dfx.policy == DarkPolicy::Drop
+            && self.cfg.combos.iter().any(|c| c.inputs.contains(&id))
+        {
+            bail!(
+                "pblock {id} feeds a combo — a drop-policy dark window would desynchronise \
+                 the lock-step join; use DarkPolicy::Bypass"
+            );
+        }
+        let pcfg = self
+            .cfg
+            .pblocks
+            .iter()
+            .find(|p| p.id == id)
+            .with_context(|| format!("pblock {id} is not configured (no stream to stay on)"))?;
+        let ds = self
+            .streams
+            .get(pcfg.stream)
+            .with_context(|| format!("pblock {id}: stream {} does not exist", pcfg.stream))?;
+        let fpga = self.runtime.as_ref().map(|rt| (rt.handle(), rt.registry().clone()));
+        let seed = self.cfg.seed.wrapping_add(id as u64 * 1009);
+        let swap = self.dfx.stage(
+            id,
+            rm,
+            r,
+            ds.d,
+            seed,
+            &self.cfg.hyper,
+            ds.warmup(self.cfg.hyper.window),
+            fpga.as_ref().map(|(h, reg)| (h, reg)),
+            self.cfg.use_fpga,
+            at_flit,
+            dark_flits,
+            self.cfg.dfx.policy,
+            self.cfg.chunk,
+            self.cfg.dfx.samples_per_sec,
+        )?;
+        let info = (swap.model_ms, swap.dark_flits);
+        pb.ctl.swap.schedule(swap);
+        Ok(info)
+    }
+
     /// Update combo assignments (run-time switch re-programming).
     pub fn set_combos(&mut self, combos: Vec<ComboCfg>) -> Result<()> {
         let mut cfg = self.cfg.clone();
@@ -163,6 +242,12 @@ impl Fabric {
 
     pub fn config(&self) -> &FseadConfig {
         &self.cfg
+    }
+
+    /// Shared control surfaces of pblock `id` (1-based): decoupler, swap
+    /// mailbox, score statistics.
+    pub fn pblock(&self, id: usize) -> Option<&Pblock> {
+        self.pblocks.get(id.checked_sub(1)?)
     }
 
     pub fn runtime_stats(&self) -> Option<RuntimeStats> {
@@ -221,6 +306,12 @@ impl Fabric {
         }
         let direct = cfg.direct_outputs();
         let modeled = self.model_pass_time();
+
+        // ---- Live DFX: reset the per-run flit counters (swap schedules
+        //      are indexed by pblock-input flit).
+        for pb in &self.pblocks {
+            pb.ctl.swap.begin_run();
+        }
 
         // ---- Switch-1: slaves = pblock outputs; masters = direct-out DMAs
         //      then feeds toward Switch-2 (one per combo input).
@@ -370,6 +461,44 @@ impl Fabric {
             );
         }
 
+        // ---- Adaptive reconfiguration controller. Spawned last, after
+        //      every fallible `?` above, so an early setup error can never
+        //      leak the thread: from here the next exit point is the
+        //      stop/join right after the service scope.
+        let controller = if cfg.dfx.adaptive {
+            let mut targets = Vec::new();
+            for p in &active {
+                let Some(kind) = kind_of(p.rm) else { continue };
+                let pb = &self.pblocks[p.id - 1];
+                if !pb.decoupler.is_enabled() {
+                    continue;
+                }
+                pb.ctl.stats.arm(cfg.dfx.window, cfg.dfx.baseline);
+                let ds = &self.streams[p.stream];
+                targets.push(ControllerTarget {
+                    pblock: p.id,
+                    ctl: Arc::clone(&pb.ctl),
+                    kind,
+                    d: ds.d,
+                    warmup: ds.warmup(cfg.hyper.window).to_vec(),
+                    seed: cfg.seed.wrapping_add(p.id as u64 * 1009),
+                });
+            }
+            let env = ControllerEnv {
+                dfx: self.dfx.clone(),
+                cfg: cfg.dfx.clone(),
+                hyper: cfg.hyper,
+                chunk,
+                quantize: cfg.use_fpga,
+                fpga: self.runtime.as_ref().map(|rt| (rt.handle(), rt.registry().clone())),
+            };
+            let stop = Arc::new(AtomicBool::new(false));
+            let handle = hotswap::spawn_controller(env, targets, Arc::clone(&stop));
+            Some((stop, handle))
+        } else {
+            None
+        };
+
         // ---- Pblock service threads (scoped: they borrow the RMs).
         let t0 = Instant::now();
         let mut pblock_reports: BTreeMap<usize, PblockReport> = BTreeMap::new();
@@ -382,11 +511,12 @@ impl Fabric {
                     let Some(tx) = pblock_out_tx.remove(&pb.id) else { continue };
                     let id = pb.id;
                     let dec = Arc::clone(&pb.decoupler);
+                    let ctl = Arc::clone(&pb.ctl);
                     let rm = &mut pb.rm;
                     let mode = cfg.exec;
                     handles.push((
                         id,
-                        s.spawn(move || Pblock::service_mode(rm, &dec, rx, tx, mode)),
+                        s.spawn(move || Pblock::service_mode(rm, &dec, &ctl, rx, tx, mode)),
                     ));
                 }
                 for (id, h) in handles.drain(..) {
@@ -400,12 +530,36 @@ impl Fabric {
                 }
             });
         }
+        // Stop the controller before any early return so its thread never
+        // outlives the pass.
+        let adaptive_swaps_issued = match controller {
+            Some((stop, handle)) => {
+                stop.store(true, Ordering::SeqCst);
+                handle.join().map_err(|_| anyhow::anyhow!("dfx controller panicked"))?
+            }
+            None => 0,
+        };
         if let Some(e) = service_err {
             return Err(e);
         }
 
         // ---- Drain and collect.
-        let mut out = RunOutput { modeled_fpga_secs: modeled, ..Default::default() };
+        let mut out =
+            RunOutput { modeled_fpga_secs: modeled, adaptive_swaps_issued, ..Default::default() };
+        // Executed swaps: record the events and track the new assignments
+        // in the config, so the next run wires (and reports) what is
+        // actually loaded.
+        for pb in &self.pblocks {
+            let evs = pb.ctl.swap.take_events();
+            for ev in &evs {
+                if let Some(pcfg) = self.cfg.pblocks.iter_mut().find(|p| p.id == ev.pblock) {
+                    pcfg.rm = ev.to_kind;
+                    pcfg.r = ev.r;
+                }
+            }
+            out.swap_events.extend(evs);
+        }
+        out.swap_events.sort_by_key(|e| (e.at_flit, e.pblock));
         for t in combo_threads {
             t.join().map_err(|_| anyhow::anyhow!("combo thread panicked"))??;
         }

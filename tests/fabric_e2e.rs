@@ -279,6 +279,150 @@ fn burst_fabric_matches_per_flit_fabric_exactly() {
 }
 
 #[test]
+fn mid_run_hot_swap_isolates_to_target_pblock() {
+    // Live DFX: three Loda pblocks on one stream; pblock 1 is hot-swapped
+    // to xStream at flit 4 with a 2-flit dark window (samples 64..96 at
+    // chunk 16) while the fabric streams. Outside the dark window the
+    // swapped pblock must match its references bit-for-bit, and the other
+    // pblocks must be bit-identical to a never-swapped run everywhere — in
+    // both execution modes.
+    let ds = tiny("hotswap", 150, 3, 33);
+    let mk_cfg = |exec: ExecMode| {
+        let mut cfg = cpu_cfg();
+        cfg.exec = exec;
+        cfg.chunk = 16;
+        for id in 1..=3usize {
+            cfg.pblocks.push(PblockCfg {
+                id,
+                rm: RmKind::Detector(DetectorKind::Loda),
+                r: 2,
+                stream: 0,
+            });
+        }
+        cfg
+    };
+    for exec in ExecMode::ALL {
+        let mut reference = Fabric::new(mk_cfg(exec), vec![ds.clone()]).unwrap();
+        let ref_out = reference.run().unwrap();
+        assert!(ref_out.swap_events.is_empty());
+
+        let mut live = Fabric::new(mk_cfg(exec), vec![ds.clone()]).unwrap();
+        live.schedule_swap(1, 4, RmKind::Detector(DetectorKind::XStream), 2, Some(2)).unwrap();
+        let out = live.run().unwrap();
+
+        // Only the target pblock is touched: the others are bit-identical.
+        for id in [2usize, 3] {
+            assert_eq!(
+                out.pblock_scores[&id], ref_out.pblock_scores[&id],
+                "pblock {id} must be untouched ({exec:?})"
+            );
+        }
+        // The swapped pblock: same sample count (bypass policy keeps the
+        // framing), identical prefix, zeros inside the dark window.
+        let got = &out.pblock_scores[&1];
+        let want = &ref_out.pblock_scores[&1];
+        assert_eq!(got.len(), 150, "{exec:?}");
+        assert_eq!(&got[..64], &want[..64], "prefix must match ({exec:?})");
+        assert!(got[64..96].iter().all(|&s| s == 0.0), "dark window must be zeros ({exec:?})");
+        // After the dark window the freshly-loaded xStream RM takes over:
+        // bit-identical to a standalone xStream (fabric seed + warmup) fed
+        // the post-dark suffix.
+        let cfg2 = live.config().clone();
+        let seed = cfg2.seed.wrapping_add(1009);
+        let mut spec = DetectorSpec::new(DetectorKind::XStream, 3, 2, seed);
+        spec.window = cfg2.hyper.window;
+        spec.bins = cfg2.hyper.bins;
+        spec.w = cfg2.hyper.w;
+        spec.modulus = cfg2.hyper.modulus;
+        spec.k = cfg2.hyper.k;
+        let mut det = spec.build(ds.warmup(cfg2.hyper.window));
+        let expect_tail = det.run_stream(&ds.data[96 * 3..]);
+        assert_eq!(&got[96..], &expect_tail[..], "suffix must match fresh xStream ({exec:?})");
+
+        // Event accounting + config tracking.
+        assert_eq!(out.swap_events.len(), 1, "{exec:?}");
+        let ev = &out.swap_events[0];
+        assert_eq!(ev.pblock, 1);
+        assert_eq!(ev.at_flit, 4);
+        assert_eq!(ev.dark_flits, 2);
+        assert_eq!(ev.bypassed, 2);
+        assert_eq!(ev.dropped, 0);
+        assert!(ev.dark_complete);
+        assert!(ev.from.contains("loda"), "{}", ev.from);
+        assert!(ev.to.contains("xstream"), "{}", ev.to);
+        assert!(ev.model_ms > 570.0 && ev.model_ms < 640.0, "{}", ev.model_ms);
+        assert_eq!(cfg2.pblocks[0].rm, RmKind::Detector(DetectorKind::XStream));
+    }
+}
+
+#[test]
+fn scripted_swap_from_config_with_drop_policy() {
+    // The TOML-declared schedule ([fabric.dfx.swap.N]) arms at fabric
+    // construction; Drop policy shortens only the target pblock's stream.
+    let text = r#"
+[fabric]
+use_fpga = false
+chunk = 16
+
+[fabric.dfx]
+policy = "drop"
+
+[pblock.1]
+rm = "loda"
+r = 2
+stream = 0
+
+[pblock.2]
+rm = "loda"
+r = 2
+stream = 0
+
+[fabric.dfx.swap.1]
+pblock = 1
+at_flit = 3
+rm = "rshash"
+r = 2
+dark_flits = 2
+"#;
+    let cfg = FseadConfig::from_str(text).unwrap();
+    let ds = tiny("scripted", 120, 3, 17);
+    let mut fabric = Fabric::new(cfg, vec![ds.clone()]).unwrap();
+    let out = fabric.run().unwrap();
+    // Dark flits 3 and 4 (samples 48..80) vanish at the decoupler.
+    assert_eq!(out.pblock_scores[&1].len(), 120 - 32);
+    assert_eq!(out.pblock_scores[&2].len(), 120);
+    assert_eq!(out.swap_events.len(), 1);
+    let ev = &out.swap_events[0];
+    assert_eq!(ev.dropped, 2);
+    assert_eq!(ev.bypassed, 0);
+    assert!(ev.to.contains("rshash"), "{}", ev.to);
+    assert_eq!(fabric.config().pblocks[0].rm, RmKind::Detector(DetectorKind::RsHash));
+    // The schedule is consumed: a second pass streams clean through the
+    // new assignment.
+    let out2 = fabric.run().unwrap();
+    assert!(out2.swap_events.is_empty());
+    assert_eq!(out2.pblock_scores[&1].len(), 120);
+}
+
+#[test]
+fn hot_swap_refused_without_decoupler() {
+    let mut cfg = cpu_cfg();
+    cfg.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 2,
+        stream: 0,
+    });
+    let ds = tiny("nodec", 60, 3, 5);
+    let fabric = Fabric::new(cfg, vec![ds]).unwrap();
+    fabric.pblock(1).unwrap().decoupler.set_enabled(false);
+    let err = fabric
+        .schedule_swap(1, 2, RmKind::Detector(DetectorKind::XStream), 2, None)
+        .unwrap_err();
+    assert!(err.to_string().contains("decoupler is disabled"), "{err}");
+}
+
+#[test]
 fn empty_fabric_errors() {
     let cfg = cpu_cfg();
     let err = Fabric::new(cfg, vec![]).and_then(|mut f| f.run());
