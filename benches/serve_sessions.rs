@@ -1,0 +1,92 @@
+//! Bench: persistent session server — sessions/sec and per-chunk push→score
+//! round-trip latency under concurrent client load, in both execution
+//! modes, on a 4-partition Loda topology (≥ 4 concurrent sessions).
+//!
+//! Emits `BENCH_serve.json` with sessions/sec, samples/sec and the p50/p99
+//! per-chunk latency for the perf trajectory; CI runs a smoke pass on every
+//! PR and uploads it with the other BENCH artifacts.
+
+#[allow(dead_code)] // only `cap` is used from the shared harness here
+mod bench_util;
+use bench_util::cap;
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::ExecMode;
+use fsead::exp::serve::{synthetic_load, LoadReport};
+use fsead::fabric::server::FabricServer;
+
+const PARTITIONS: usize = 4;
+const CLIENTS: usize = 4;
+const CHUNK: usize = 64;
+
+fn topology(exec: ExecMode) -> FseadConfig {
+    let mut cfg =
+        FseadConfig { use_fpga: false, exec, chunk: CHUNK, ..FseadConfig::default() };
+    for id in 1..=PARTITIONS {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 2,
+            stream: 0,
+        });
+    }
+    cfg
+}
+
+fn main() {
+    let rounds: usize =
+        std::env::var("FSEAD_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let samples = (cap() / CLIENTS).max(CHUNK * 4);
+    let mut rows: Vec<(&str, LoadReport)> = Vec::new();
+    for mode in ExecMode::ALL {
+        let server = FabricServer::start(topology(mode)).expect("server start");
+        let report =
+            synthetic_load(&server, CLIENTS, rounds, samples).expect("synthetic load");
+        server.shutdown().expect("shutdown");
+        println!(
+            "serve_sessions/{}  {} sessions in {:.3} s — {:.2} sessions/s, {:.0} samples/s, \
+             chunk p50 {:.3} ms / p99 {:.3} ms",
+            mode.as_str(),
+            report.sessions,
+            report.wall_secs,
+            report.sessions_per_sec,
+            report.samples_per_sec,
+            report.chunk_latency_p50_ms,
+            report.chunk_latency_p99_ms
+        );
+        rows.push((mode.as_str(), report));
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"serve_sessions\",\n");
+    json.push_str(&format!(
+        "  \"partitions\": {PARTITIONS},\n  \"clients\": {CLIENTS},\n  \"rounds\": {rounds},\n  \
+         \"samples_per_session\": {samples},\n  \"chunk\": {CHUNK},\n  \"rows\": [\n"
+    ));
+    for (i, (mode, r)) in rows.iter().enumerate() {
+        // null percentiles when nothing was measured (async drain mode) —
+        // never a fabricated 0.0.
+        let (p50, p99) = if r.latency_samples > 0 {
+            (format!("{:.4}", r.chunk_latency_p50_ms), format!("{:.4}", r.chunk_latency_p99_ms))
+        } else {
+            ("null".into(), "null".into())
+        };
+        json.push_str(&format!(
+            "    {{\"mode\": \"{mode}\", \"sessions\": {}, \"wall_secs\": {:.6}, \
+             \"sessions_per_sec\": {:.3}, \"samples_per_sec\": {:.1}, \
+             \"chunk_latency_p50_ms\": {p50}, \"chunk_latency_p99_ms\": {p99}, \
+             \"latency_samples\": {}}}{}\n",
+            r.sessions,
+            r.wall_secs,
+            r.sessions_per_sec,
+            r.samples_per_sec,
+            r.latency_samples,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -1,0 +1,504 @@
+"""Generate the checked-in golden score fixtures for tests/golden_vectors.rs.
+
+Bit-level port of the rust CPU detectors (rust/src/detectors/) — same
+xoshiro256** / SplitMix64 parameter streams, same Jenkins hashing, and the
+same f32 operation order in the score path. f32 arithmetic is emulated by
+performing each elementary operation in f64 and rounding to f32
+(struct-pack), which is exact for +, -, *, / when both operands are f32
+(f64 carries more than 2x24+2 significand bits, so no double-rounding).
+log2 is evaluated in f64 and rounded; its inputs in the score path are
+small integer-valued floats, so the result matches the platform log2f to
+well under the 1e-6 fixture tolerance.
+
+Usage:  python3 python/tools/gen_golden_vectors.py [out_dir]
+
+The configuration here must mirror tests/golden_vectors.rs exactly:
+stream = 64 samples of d=3 unit gaussians from Prng(20240601), warm-up =
+first 16 samples, window=16, bins=8, w=2, modulus=32, k=4, r=4, seed=7.
+"""
+
+import math
+import os
+import struct
+import sys
+
+M64 = (1 << 64) - 1
+M32 = 0xFFFFFFFF
+
+
+def f32(x):
+    """Round a python float to the nearest IEEE binary32 value."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def log2_f32(x):
+    return f32(math.log2(x))
+
+
+# ---------------------------------------------------------------------------
+# PRNG substrate (rust/src/detectors/prng.rs)
+# ---------------------------------------------------------------------------
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.s = seed & M64
+
+    def next_u64(self):
+        self.s = (self.s + 0x9E3779B97F4A7C15) & M64
+        z = self.s
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return (z ^ (z >> 31)) & M64
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Prng:
+    def __init__(self, seed):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+        self.spare = None
+
+    def child(self, stream):
+        return Prng(self.s[0] ^ ((stream * 0xA24BAED4963EE407) & M64))
+
+    def next_u64(self):
+        s = self.s
+        result = (rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return result
+
+    def uniform(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform_in(self, lo, hi):
+        return lo + (hi - lo) * self.uniform()
+
+    def below(self, n):
+        return int(self.uniform() * n) % n
+
+    def gaussian(self):
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        while True:
+            u1 = self.uniform()
+            if u1 > 1e-300:
+                break
+        u2 = self.uniform()
+        r = math.sqrt(-2.0 * math.log(u1))
+        theta = 2.0 * math.pi * u2
+        self.spare = r * math.sin(theta)
+        return r * math.cos(theta)
+
+    def choose_k(self, n, k):
+        idx = list(range(n))
+        k = min(k, n)
+        for i in range(k):
+            j = i + self.below(n - i)
+            idx[i], idx[j] = idx[j], idx[i]
+        return idx[:k]
+
+
+# ---------------------------------------------------------------------------
+# Jenkins one-at-a-time (rust/src/detectors/jenkins.rs)
+# ---------------------------------------------------------------------------
+
+
+def jenkins_hash(key_u32, seed):
+    h = seed & M32
+    for k in key_u32:
+        h = (h + (k & M32)) & M32
+        h = (h + ((h << 10) & M32)) & M32
+        h ^= h >> 6
+    h = (h + ((h << 3) & M32)) & M32
+    h ^= h >> 11
+    h = (h + ((h << 15) & M32)) & M32
+    return h
+
+
+def jenkins_mod_i32(key_i32, seed, modulus):
+    return jenkins_hash([k & M32 for k in key_i32], seed) % modulus
+
+
+# Shared golden vectors from rust/src/detectors/jenkins.rs — the port must
+# reproduce them exactly before any fixture is written.
+JENKINS_GOLDEN = [
+    ([0], 0, 0x00000000),
+    ([1, 2, 3], 1, 0x54EE7BFA),
+    ([0xFFFFFFFF], 7, 0x6DC75B8D),
+    ([42, 0, 42, 0xDEADBEEF], 2, 0x1FF9CDF1),
+    ([5, 4, 3, 2, 1, 0], 123456, 0x1C57948C),
+]
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window count tables (rust/src/detectors/window.rs)
+# ---------------------------------------------------------------------------
+
+
+class SlidingCounts:
+    def __init__(self, rows, width, window):
+        self.rows, self.width, self.window = rows, width, window
+        self.counts = [[0] * width for _ in range(rows)]
+        self.ring = [[0] * window for _ in range(rows)]
+        self.pos = 0
+        self.n = 0
+
+    def denom(self):
+        return f32(max(min(self.n, self.window), 1))
+
+    def get(self, row, idx):
+        return self.counts[row][idx]
+
+    def insert(self, idxs):
+        evict = self.n >= self.window
+        for row, idx in enumerate(idxs):
+            if evict:
+                old = self.ring[row][self.pos]
+                self.counts[row][old] -= 1
+            self.counts[row][idx] += 1
+            self.ring[row][self.pos] = idx
+        self.pos += 1
+        if self.pos == self.window:
+            self.pos = 0
+        self.n += 1
+
+
+# ---------------------------------------------------------------------------
+# Parameter generation (rust/src/detectors/params.rs)
+# ---------------------------------------------------------------------------
+
+
+def loda_params(seed, r, d, warmup):
+    root = Prng(seed)
+    nnz = int(math.ceil(math.sqrt(d)))
+    prj = [0.0] * (r * d)
+    for ri in range(r):
+        p = root.child(ri)
+        for dim in p.choose_k(d, nnz):
+            prj[ri * d + dim] = f32(p.gaussian())
+    n = len(warmup) // d if d else 0
+    pmin = [math.inf] * r
+    pmax = [-math.inf] * r
+    for s in range(n):
+        x = warmup[s * d : (s + 1) * d]
+        for ri in range(r):
+            z = f32(0.0)
+            for di in range(d):
+                z = f32(z + f32(prj[ri * d + di] * x[di]))
+            pmin[ri] = min(pmin[ri], z)
+            pmax[ri] = max(pmax[ri], z)
+    for ri in range(r):
+        if n == 0 or pmin[ri] >= pmax[ri]:
+            norm = f32(0.0)
+            for di in range(d):
+                w = prj[ri * d + di]
+                norm = f32(norm + f32(w * w))
+            s = f32(3.0 * max(f32(math.sqrt(norm)), f32(1e-6)))
+            pmin[ri], pmax[ri] = f32(-s), s
+        else:
+            margin = f32(f32(0.1) * max(f32(pmax[ri] - pmin[ri]), f32(1e-6)))
+            pmin[ri] = f32(pmin[ri] - margin)
+            pmax[ri] = f32(pmax[ri] + margin)
+    return prj, pmin, pmax
+
+
+def dim_range(d, warmup):
+    n = len(warmup) // d if d else 0
+    dmin = [math.inf] * d
+    dmax = [-math.inf] * d
+    for s in range(n):
+        for dim in range(d):
+            v = warmup[s * d + dim]
+            dmin[dim] = min(dmin[dim], v)
+            dmax[dim] = max(dmax[dim], v)
+    for dim in range(d):
+        if n == 0 or dmin[dim] > dmax[dim]:
+            dmin[dim], dmax[dim] = 0.0, 1.0
+    return dmin, dmax
+
+
+def rshash_params(seed, r, d, window, warmup):
+    root = Prng(seed)
+    dmin, dmax = dim_range(d, warmup)
+    srt = 1.0 / math.sqrt(window)
+    flo, fhi = min(srt, 0.49), max(1.0 - srt, 0.51)
+    alpha = [0.0] * (r * d)
+    f = [0.0] * r
+    for ri in range(r):
+        p = root.child(ri)
+        fr = f32(p.uniform_in(flo, fhi))
+        f[ri] = fr
+        for dim in range(d):
+            alpha[ri * d + dim] = f32(f32(p.uniform()) * fr)
+    return dmin, dmax, alpha, f
+
+
+def xstream_params(seed, r, d, k, w, warmup):
+    root = Prng(seed)
+    scale = 1.0 / math.sqrt(k)
+    proj = [0.0] * (r * d * k)
+    shift = [0.0] * (r * w * k)
+    width = [0.0] * (r * k)
+    n = len(warmup) // d if d else 0
+    for ri in range(r):
+        p = root.child(ri)
+        for di in range(d):
+            for ki in range(k):
+                proj[(ri * d + di) * k + ki] = f32(p.gaussian() * scale)
+        for ki in range(k):
+            lo, hi = math.inf, -math.inf
+            for s in range(n):
+                x = warmup[s * d : (s + 1) * d]
+                z = f32(0.0)
+                for di in range(d):
+                    z = f32(z + f32(x[di] * proj[(ri * d + di) * k + ki]))
+                lo = min(lo, z)
+                hi = max(hi, z)
+            wdt = f32(1.0) if (n == 0 or hi <= lo) else max(f32(hi - lo), f32(1e-3))
+            width[ri * k + ki] = wdt
+            for wi in range(w):
+                shift[(ri * w + wi) * k + ki] = f32(f32(p.uniform()) * wdt)
+    return proj, shift, width
+
+
+# ---------------------------------------------------------------------------
+# Detectors — exact f32 ports of the rust `update` loops
+# ---------------------------------------------------------------------------
+
+
+class Loda:
+    def __init__(self, seed, r, d, bins, window, warmup):
+        self.r, self.d, self.bins = r, d, bins
+        self.prj, self.pmin, self.pmax = loda_params(seed, r, d, warmup)
+        self.span = [max(f32(self.pmax[ri] - self.pmin[ri]), f32(1e-12)) for ri in range(r)]
+        self.counts = SlidingCounts(r, bins, window)
+
+    def update(self, x):
+        denom = self.counts.denom()
+        dl = log2_f32(denom)
+        total = f32(0.0)
+        idxs = []
+        for ri in range(self.r):
+            z = f32(0.0)
+            for di in range(self.d):
+                z = f32(z + f32(self.prj[ri * self.d + di] * x[di]))
+            raw = f32(f32(f32(z - self.pmin[ri]) / self.span[ri]) * f32(self.bins))
+            idx = int(math.floor(raw))
+            idx = max(0, min(idx, self.bins - 1))
+            idxs.append(idx)
+            c = f32(self.counts.get(ri, idx))
+            total = f32(total + f32(dl - log2_f32(max(c, f32(1.0)))))
+        self.counts.insert(idxs)
+        return f32(total / f32(self.r))
+
+
+class RsHash:
+    def __init__(self, seed, r, d, w, modulus, window, warmup):
+        self.r, self.d, self.w, self.mod = r, d, w, modulus
+        self.dmin, self.dmax, self.alpha, self.f = rshash_params(seed, r, d, window, warmup)
+        self.span = [max(f32(self.dmax[di] - self.dmin[di]), f32(1e-12)) for di in range(d)]
+        self.counts = SlidingCounts(r * w, modulus, window)
+
+    def update(self, x):
+        denom = self.counts.denom()
+        dl = log2_f32(denom)
+        total = f32(0.0)
+        idxs = [0] * (self.r * self.w)
+        for ri in range(self.r):
+            fr = self.f[ri]
+            key = []
+            for di in range(self.d):
+                norm = f32(f32(x[di] - self.dmin[di]) / self.span[di])
+                prj = f32(f32(norm + self.alpha[ri * self.d + di]) / fr)
+                key.append(int(math.floor(prj)))
+            min_c = None
+            for row in range(self.w):
+                idx = jenkins_mod_i32(key, row + 1, self.mod)
+                idxs[ri * self.w + row] = idx
+                c = self.counts.get(ri * self.w + row, idx)
+                min_c = c if min_c is None else min(min_c, c)
+            total = f32(total + f32(dl - log2_f32(f32(1.0 + f32(min_c)))))
+        self.counts.insert(idxs)
+        return f32(total / f32(self.r))
+
+
+class XStream:
+    def __init__(self, seed, r, d, k, w, modulus, window, warmup):
+        self.r, self.d, self.k, self.w, self.mod = r, d, k, w, modulus
+        self.proj, self.shift, self.width = xstream_params(seed, r, d, k, w, warmup)
+        self.scale = [0.0] * (r * w * k)
+        for ri in range(r):
+            for row in range(w):
+                pow_ = f32(1 << (row + 1))
+                for ki in range(k):
+                    wd = max(self.width[ri * k + ki], f32(1e-12))
+                    self.scale[(ri * w + row) * k + ki] = f32(pow_ / wd)
+        self.counts = SlidingCounts(r * w, modulus, window)
+
+    def update(self, x):
+        denom = self.counts.denom()
+        dl = log2_f32(denom)
+        total = f32(0.0)
+        idxs = [0] * (self.r * self.w)
+        for ri in range(self.r):
+            z = []
+            for ki in range(self.k):
+                acc = f32(0.0)
+                for di in range(self.d):
+                    acc = f32(acc + f32(x[di] * self.proj[(ri * self.d + di) * self.k + ki]))
+                z.append(acc)
+            min_weighted = math.inf
+            for row in range(self.w):
+                pow_ = f32(1 << (row + 1))
+                base = (ri * self.w + row) * self.k
+                key = []
+                for ki in range(self.k):
+                    b = f32(f32(z[ki] - self.shift[base + ki]) * self.scale[base + ki])
+                    key.append(int(math.floor(b)))
+                idx = jenkins_mod_i32(key, row + 1, self.mod)
+                idxs[ri * self.w + row] = idx
+                c = f32(self.counts.get(ri * self.w + row, idx))
+                min_weighted = min(min_weighted, f32(c * pow_))
+            total = f32(total + f32(dl - log2_f32(f32(1.0 + min_weighted))))
+        self.counts.insert(idxs)
+        return f32(total / f32(self.r))
+
+
+# ---------------------------------------------------------------------------
+# Independent f64 cross-checks (ported from python/compile/kernels/ref.py
+# Streaming*Ref — structurally independent of the f32 ports above)
+# ---------------------------------------------------------------------------
+
+
+def loda_ref_scores(det, data, d):
+    counts = SlidingCounts(det.r, det.bins, det.counts.window)
+    out = []
+    for s in range(len(data) // d):
+        x = data[s * d : (s + 1) * d]
+        denom = max(min(counts.n, counts.window), 1)
+        acc = 0.0
+        idxs = []
+        for ri in range(det.r):
+            z = sum(det.prj[ri * d + di] * x[di] for di in range(d))
+            span = max(det.pmax[ri] - det.pmin[ri], 1e-12)
+            idx = int(math.floor((z - det.pmin[ri]) / span * det.bins))
+            idx = max(0, min(idx, det.bins - 1))
+            idxs.append(idx)
+            acc += math.log2(denom) - math.log2(max(counts.get(ri, idx), 1))
+        counts.insert(idxs)
+        out.append(acc / det.r)
+    return out
+
+
+def rshash_ref_scores(det, data, d):
+    counts = SlidingCounts(det.r * det.w, det.mod, det.counts.window)
+    out = []
+    for s in range(len(data) // d):
+        x = data[s * d : (s + 1) * d]
+        denom = max(min(counts.n, counts.window), 1)
+        acc = 0.0
+        idxs = [0] * (det.r * det.w)
+        for ri in range(det.r):
+            key = []
+            for di in range(d):
+                span = max(det.dmax[di] - det.dmin[di], 1e-12)
+                norm = (x[di] - det.dmin[di]) / span
+                key.append(int(math.floor((norm + det.alpha[ri * d + di]) / det.f[ri])))
+            cs = []
+            for row in range(det.w):
+                idx = jenkins_mod_i32(key, row + 1, det.mod)
+                idxs[ri * det.w + row] = idx
+                cs.append(counts.get(ri * det.w + row, idx))
+            acc += math.log2(denom) - math.log2(1.0 + min(cs))
+        counts.insert(idxs)
+        out.append(acc / det.r)
+    return out
+
+
+def xstream_ref_scores(det, data, d):
+    counts = SlidingCounts(det.r * det.w, det.mod, det.counts.window)
+    out = []
+    for s in range(len(data) // d):
+        x = data[s * d : (s + 1) * d]
+        denom = max(min(counts.n, counts.window), 1)
+        acc = 0.0
+        idxs = [0] * (det.r * det.w)
+        for ri in range(det.r):
+            z = [
+                sum(x[di] * det.proj[(ri * d + di) * det.k + ki] for di in range(d))
+                for ki in range(det.k)
+            ]
+            weighted = []
+            for row in range(det.w):
+                base = (ri * det.w + row) * det.k
+                key = []
+                for ki in range(det.k):
+                    scale = (2.0 ** (row + 1)) / max(det.width[ri * det.k + ki], 1e-12)
+                    key.append(int(math.floor((z[ki] - det.shift[base + ki]) * scale)))
+                idx = jenkins_mod_i32(key, row + 1, det.mod)
+                idxs[ri * det.w + row] = idx
+                weighted.append(counts.get(ri * det.w + row, idx) * (2.0 ** (row + 1)))
+            acc += math.log2(denom) - math.log2(1.0 + min(weighted))
+        counts.insert(idxs)
+        out.append(acc / det.r)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fixture generation (mirrors tests/golden_vectors.rs)
+# ---------------------------------------------------------------------------
+
+STREAM_SEED = 20240601
+N, D = 64, 3
+WARMUP_SAMPLES = 16
+WINDOW, BINS, W, MODULUS, K = 16, 8, 2, 32, 4
+R, DET_SEED = 4, 7
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "tests/fixtures"
+    for key, seed, want in JENKINS_GOLDEN:
+        got = jenkins_hash(key, seed)
+        assert got == want, f"jenkins port broken: key={key} got={got:#x} want={want:#x}"
+
+    p = Prng(STREAM_SEED)
+    data = [f32(p.gaussian()) for _ in range(N * D)]
+    warmup = data[: WARMUP_SAMPLES * D]
+
+    detectors = {
+        "loda": Loda(DET_SEED, R, D, BINS, WINDOW, warmup),
+        "rshash": RsHash(DET_SEED, R, D, W, MODULUS, WINDOW, warmup),
+        "xstream": XStream(DET_SEED, R, D, K, W, MODULUS, WINDOW, warmup),
+    }
+    refs = {"loda": loda_ref_scores, "rshash": rshash_ref_scores, "xstream": xstream_ref_scores}
+
+    os.makedirs(out_dir, exist_ok=True)
+    for name, det in detectors.items():
+        scores = [det.update(data[s * D : (s + 1) * D]) for s in range(N)]
+        assert scores[0] == 0.0, f"{name}: first sample must score 0 (denom=1, count clamp)"
+        assert all(math.isfinite(s) for s in scores), name
+        ref = refs[name](det, data, D)
+        worst = max(abs(a - b) for a, b in zip(scores, ref))
+        assert worst < 1e-4, f"{name}: f32 port drifts {worst} from the f64 reference"
+        path = os.path.join(out_dir, f"golden_{name}.txt")
+        with open(path, "w") as fh:
+            fh.write(f"# golden scores: {name} r={R} d={D} seed={DET_SEED} window={WINDOW}\n")
+            fh.write(f"# stream: {N} samples, Prng({STREAM_SEED}) unit gaussians, warmup={WARMUP_SAMPLES}\n")
+            for s in scores:
+                fh.write(f"{s:.9g}\n")
+        print(f"{name}: wrote {N} scores to {path} (max |f32-f64 ref| = {worst:.2e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -143,6 +143,25 @@ impl Default for DfxCfg {
     }
 }
 
+/// Streaming-session server configuration (`[fabric.server]`), consumed by
+/// [`crate::fabric::server::FabricServer`] and the `fsead serve` CLI.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerCfg {
+    /// Depth, in flits, of each session's bounded inbox — the backpressure
+    /// window between a client's `push` and the partition's service loop. A
+    /// full inbox blocks the producer; flits are never dropped or reordered.
+    pub inbox_flits: usize,
+    /// Maximum clients allowed to wait in the admission queue (all
+    /// partitions busy) before `open` refuses instead of queueing.
+    pub max_waiters: usize,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        ServerCfg { inbox_flits: 64, max_waiters: 64 }
+    }
+}
+
 /// Detector hyper-parameters (paper Table 4).
 #[derive(Clone, Copy, Debug)]
 pub struct DetectorHyper {
@@ -220,6 +239,8 @@ pub struct FseadConfig {
     /// Live-DFX: dark-window policy, scripted swap schedule, adaptive
     /// controller settings.
     pub dfx: DfxCfg,
+    /// Streaming-session server settings (`[fabric.server]`).
+    pub server: ServerCfg,
 }
 
 impl Default for FseadConfig {
@@ -235,6 +256,7 @@ impl Default for FseadConfig {
             pblocks: vec![],
             combos: vec![],
             dfx: DfxCfg::default(),
+            server: ServerCfg::default(),
         }
     }
 }
@@ -293,6 +315,21 @@ impl FseadConfig {
         }
         if let Some(v) = doc.get_int("dataset", "max_samples") {
             cfg.dataset.max_samples = v as usize;
+        }
+        // [fabric.server] — streaming-session server. Negative values would
+        // wrap through `as usize` into effectively-unbounded queues, so
+        // they are rejected here rather than silently accepted.
+        if let Some(v) = doc.get_int("fabric.server", "inbox_flits") {
+            if v <= 0 {
+                bail!("[fabric.server]: inbox_flits must be positive (got {v})");
+            }
+            cfg.server.inbox_flits = v as usize;
+        }
+        if let Some(v) = doc.get_int("fabric.server", "max_waiters") {
+            if v < 0 {
+                bail!("[fabric.server]: max_waiters must be >= 0 (got {v})");
+            }
+            cfg.server.max_waiters = v as usize;
         }
         // [fabric.dfx] — live reconfiguration
         if let Some(v) = doc.get_bool("fabric.dfx", "enabled") {
@@ -433,6 +470,9 @@ impl FseadConfig {
         }
         if self.dfx.samples_per_sec <= 0.0 {
             bail!("[fabric.dfx]: samples_per_sec must be > 0");
+        }
+        if self.server.inbox_flits == 0 {
+            bail!("[fabric.server]: inbox_flits must be > 0 (a zero-depth inbox deadlocks)");
         }
         // A drop-policy dark window deletes flits from one input of a
         // lock-step combo join, desynchronising the seq numbers mid-run —
@@ -820,6 +860,22 @@ r = 2
         assert_eq!(PoolEntry::parse("rshash"), Some(PoolEntry { kind: DetectorKind::RsHash, r: 0 }));
         assert_eq!(PoolEntry::parse("loda:x"), None);
         assert_eq!(PoolEntry::parse("nope"), None);
+    }
+
+    #[test]
+    fn server_section_parses_with_defaults() {
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert_eq!(cfg.server.inbox_flits, 64);
+        assert_eq!(cfg.server.max_waiters, 64);
+        let text = "[fabric.server]\ninbox_flits = 8\nmax_waiters = 2\n";
+        let cfg = FseadConfig::from_str(text).unwrap();
+        assert_eq!(cfg.server.inbox_flits, 8);
+        assert_eq!(cfg.server.max_waiters, 2);
+        // A zero-depth inbox can never admit a flit — rejected up front.
+        assert!(FseadConfig::from_str("[fabric.server]\ninbox_flits = 0\n").is_err());
+        // Negative values must not wrap into unbounded queues.
+        assert!(FseadConfig::from_str("[fabric.server]\ninbox_flits = -1\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.server]\nmax_waiters = -3\n").is_err());
     }
 
     #[test]

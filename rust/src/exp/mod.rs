@@ -12,6 +12,7 @@ pub mod fig20;
 pub mod modes;
 pub mod perf;
 pub mod report;
+pub mod serve;
 pub mod table3_4;
 pub mod table5;
 pub mod table6_7;
@@ -148,6 +149,10 @@ pub fn cli_main(args: &[String]) -> Result<i32> {
             run_config(&ctx, config)?;
             Ok(0)
         }
+        Some("serve") => {
+            serve::cli(&ctx, &positional[1..])?;
+            Ok(0)
+        }
         Some("exp") => {
             let id = positional.get(1).copied().unwrap_or("all");
             let out = run_experiment(&ctx, id)?;
@@ -172,6 +177,11 @@ fn usage() -> String {
 USAGE:
   fsead exp <id>            regenerate a paper table/figure (see below)
   fsead run <config.toml>   stream a dataset through a configured fabric
+  fsead serve [config.toml] start the persistent streaming session server
+                            and drive it with the synthetic-load driver
+                            (--clients N --rounds N --samples N), or with a
+                            stdin line protocol emitting JSONL (--stdin:
+                            open <d> [pblock] / push <v...> / close / quit)
   fsead resources [--floorplan]   print the FPGA resource model
   fsead artifacts           list AOT artifacts and their status
   fsead version
@@ -321,10 +331,11 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
     }
     if let Some(stats) = fabric.runtime_stats() {
         println!(
-            "device: {} executions, {:.1} ms on device, {} compiles",
+            "device: {} executions, {:.1} ms on device, {} compiles, {} resident instance(s)",
             stats.executions,
             stats.execute_secs * 1e3,
-            stats.compiles
+            stats.compiles,
+            stats.instances
         );
     }
     Ok(())

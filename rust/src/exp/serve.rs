@@ -1,0 +1,305 @@
+//! `fsead serve` — drive the persistent streaming session server
+//! ([`crate::fabric::server::FabricServer`]).
+//!
+//! Two drivers:
+//!
+//! - **Synthetic load** (default): N client threads open sessions over the
+//!   configured partitions, stream seeded synthetic sensor data chunk by
+//!   chunk in lock-step (push → receive scores), close, and repeat —
+//!   reporting sessions/sec, samples/sec and per-chunk round-trip latency
+//!   percentiles. [`synthetic_load`] is shared with
+//!   `benches/serve_sessions.rs`, which writes the same numbers to
+//!   `BENCH_serve.json`.
+//! - **stdin** (`--stdin`): a line protocol (`open <d> [pblock]`,
+//!   `push <v…>`, `close`, `quit`) with JSONL events on stdout — one JSON
+//!   object per score delivery / lifecycle event.
+
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+use super::ExpCtx;
+use crate::config::{FseadConfig, PblockCfg, RmKind};
+use crate::data::synth::{generate_profile, DatasetProfile};
+use crate::detectors::DetectorKind;
+use crate::fabric::server::{FabricServer, Session, SessionSpec};
+
+/// Aggregate numbers from one synthetic-load pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadReport {
+    /// Client threads driving sessions concurrently.
+    pub clients: usize,
+    pub sessions: u64,
+    pub samples: u64,
+    pub wall_secs: f64,
+    pub sessions_per_sec: f64,
+    pub samples_per_sec: f64,
+    /// Per-chunk push→score round-trip latency percentiles (ms). Only
+    /// meaningful when `latency_samples > 0` — async-drain runs (a config
+    /// whose drop-policy dark windows break 1:1 framing) measure nothing.
+    pub chunk_latency_p50_ms: f64,
+    pub chunk_latency_p99_ms: f64,
+    /// Round-trips behind the percentiles (0 = latency not measured).
+    pub latency_samples: u64,
+}
+
+fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
+    if sorted_secs.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_secs.len() - 1) as f64 * p).round() as usize;
+    sorted_secs[idx] * 1e3
+}
+
+/// Drive `clients` concurrent session loops against a running server:
+/// each client streams `rounds` sessions of `samples` synthetic samples,
+/// chunk by chunk in lock-step, and verifies it got one score back per
+/// sample. Returns the merged throughput/latency report.
+pub fn synthetic_load(
+    server: &FabricServer,
+    clients: usize,
+    rounds: usize,
+    samples: usize,
+) -> Result<LoadReport> {
+    let chunk = server.config().chunk;
+    let window = server.config().hyper.window;
+    // Lock-step (push one flit, block for its score flit) assumes 1:1
+    // input→score framing. A drop-policy dark window deletes flits, so a
+    // config that can trigger one (scripted schedule or adaptive
+    // controller) must poll asynchronously instead — blocking would wait
+    // forever on a score that was dropped.
+    let dfx = &server.config().dfx;
+    let lockstep = dfx.policy == crate::config::DarkPolicy::Bypass
+        || (!dfx.adaptive && dfx.swaps.is_empty());
+    let t0 = Instant::now();
+    let mut all_latencies: Vec<f64> = Vec::new();
+    let mut sessions = 0u64;
+    let mut total_samples = 0u64;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for client in 0..clients {
+            handles.push(scope.spawn(move || -> Result<(u64, u64, Vec<f64>)> {
+                let mut latencies = Vec::new();
+                let mut done = 0u64;
+                let mut scored = 0u64;
+                for round in 0..rounds {
+                    let profile = DatasetProfile {
+                        name: "serve",
+                        n: samples,
+                        d: 3,
+                        outliers: samples / 50,
+                        clusters: 2,
+                    };
+                    let ds = generate_profile(&profile, (client * 131 + round) as u64 + 1);
+                    let mut session = server.open(SessionSpec::for_dataset(&ds, window))?;
+                    let mut got = 0usize;
+                    for block in ds.data.chunks(chunk * ds.d) {
+                        let t = Instant::now();
+                        session.push(block)?;
+                        if lockstep && block.len() == chunk * ds.d {
+                            // One full input flit ⇒ one score flit back.
+                            let scores =
+                                session.recv_scores().context("score stream ended early")?;
+                            latencies.push(t.elapsed().as_secs_f64());
+                            got += scores.len();
+                        } else {
+                            got += session.poll_scores().len();
+                        }
+                    }
+                    let closed = session.close()?;
+                    got += closed.scores.len();
+                    // Drop-policy dark windows legitimately shorten the
+                    // score stream; otherwise every sample must score.
+                    if got != ds.n() && (lockstep || got > ds.n()) {
+                        bail!("session returned {got} scores for {} samples", ds.n());
+                    }
+                    done += 1;
+                    scored += got as u64;
+                }
+                Ok((done, scored, latencies))
+            }));
+        }
+        for h in handles {
+            let (done, scored, lat) =
+                h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+            sessions += done;
+            total_samples += scored;
+            all_latencies.extend(lat);
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    all_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(LoadReport {
+        clients,
+        sessions,
+        samples: total_samples,
+        wall_secs: wall,
+        sessions_per_sec: sessions as f64 / wall,
+        samples_per_sec: total_samples as f64 / wall,
+        chunk_latency_p50_ms: percentile_ms(&all_latencies, 0.50),
+        chunk_latency_p99_ms: percentile_ms(&all_latencies, 0.99),
+        latency_samples: all_latencies.len() as u64,
+    })
+}
+
+/// Default serving topology when no config file is given: four Loda
+/// partitions on CPU RMs (or the PJRT device when artifacts are built in
+/// the configured `--artifacts` directory).
+fn default_topology(ctx: &ExpCtx) -> FseadConfig {
+    let mut cfg = FseadConfig {
+        use_fpga: ctx.artifacts_available(),
+        chunk: 128,
+        ..FseadConfig::default()
+    };
+    for id in 1..=4usize {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 4,
+            stream: 0,
+        });
+    }
+    cfg
+}
+
+/// `fsead serve [config.toml] [--clients N] [--rounds N] [--samples N]
+/// [--stdin]`.
+pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
+    let mut config: Option<&str> = None;
+    let mut clients = 4usize;
+    let mut rounds = 2usize;
+    let mut samples = 2048usize;
+    let mut stdin_mode = false;
+    let mut i = 0;
+    while i < args.len() {
+        let next = |i: &mut usize| -> Result<&str> {
+            *i += 1;
+            args.get(*i).copied().context("missing flag value")
+        };
+        match args[i] {
+            "--clients" => clients = next(&mut i)?.parse().context("--clients")?,
+            "--rounds" => rounds = next(&mut i)?.parse().context("--rounds")?,
+            "--samples" => samples = next(&mut i)?.parse().context("--samples")?,
+            "--stdin" => stdin_mode = true,
+            other if config.is_none() && !other.starts_with('-') => config = Some(other),
+            other => bail!("serve: unexpected argument {other:?}"),
+        }
+        i += 1;
+    }
+    if clients == 0 || rounds == 0 || samples == 0 {
+        bail!("serve: --clients, --rounds and --samples must be > 0");
+    }
+    let mut cfg = match config {
+        Some(path) => FseadConfig::from_file(path)?,
+        None => default_topology(ctx),
+    };
+    if !ctx.use_fpga {
+        cfg.use_fpga = false;
+    }
+    if let Some(mode) = ctx.exec {
+        cfg.exec = mode;
+    }
+    if ctx.dfx {
+        cfg.dfx.adaptive = true;
+    }
+    cfg.artifact_dir = ctx.artifact_dir.clone();
+    let server = FabricServer::start(cfg)?;
+    println!(
+        "serving {} partition(s) (exec={}, fpga={}, inbox={} flits)",
+        server.partitions().len(),
+        server.config().exec.as_str(),
+        server.config().use_fpga,
+        server.config().server.inbox_flits
+    );
+    if stdin_mode {
+        stdin_driver(&server)?;
+    } else {
+        let report = synthetic_load(&server, clients, rounds, samples)?;
+        println!(
+            "serve: {} session(s) from {} client(s) in {:.1} ms — {:.1} sessions/s, {:.0} samples/s",
+            report.sessions,
+            report.clients,
+            report.wall_secs * 1e3,
+            report.sessions_per_sec,
+            report.samples_per_sec
+        );
+        if report.latency_samples > 0 {
+            println!(
+                "  per-chunk round-trip latency: p50 {:.3} ms, p99 {:.3} ms ({} round-trips)",
+                report.chunk_latency_p50_ms, report.chunk_latency_p99_ms, report.latency_samples
+            );
+        } else {
+            println!("  per-chunk latency not measured (async drain mode)");
+        }
+    }
+    let summary = server.shutdown()?;
+    println!("server closed after {} session(s)", summary.sessions_served);
+    Ok(())
+}
+
+fn emit_scores(session: u64, scores: &[f32]) {
+    let vals: Vec<String> = scores.iter().map(|v| format!("{v:.6}")).collect();
+    println!("{{\"event\":\"scores\",\"session\":{session},\"values\":[{}]}}", vals.join(","));
+}
+
+/// Line-protocol driver over stdin, one JSONL event per line on stdout.
+fn stdin_driver(server: &FabricServer) -> Result<()> {
+    use std::io::BufRead;
+    let stdin = std::io::stdin();
+    let mut session: Option<Session> = None;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut words = line.split_whitespace();
+        match words.next().unwrap_or_default() {
+            "open" => {
+                if session.is_some() {
+                    bail!("a session is already open — close it first");
+                }
+                let d: usize = words.next().context("usage: open <d> [pblock]")?.parse()?;
+                let pblock: Option<usize> =
+                    words.next().map(|v| v.parse()).transpose().context("bad pblock id")?;
+                let mut spec = SessionSpec::new(d, vec![]);
+                spec.pblock = pblock;
+                let s = server.open(spec)?;
+                println!(
+                    "{{\"event\":\"open\",\"session\":{},\"pblock\":{}}}",
+                    s.id(),
+                    s.pblock()
+                );
+                session = Some(s);
+            }
+            "push" => {
+                let s = session.as_mut().context("no open session")?;
+                let vals: Vec<f32> = words
+                    .map(|v| v.parse::<f32>())
+                    .collect::<std::result::Result<_, _>>()
+                    .context("push takes whitespace-separated f32 values")?;
+                s.push(&vals)?;
+                let scores = s.poll_scores();
+                if !scores.is_empty() {
+                    emit_scores(s.id(), &scores);
+                }
+            }
+            "close" => {
+                let s = session.take().context("no open session")?;
+                let id = s.id();
+                let closed = s.close()?;
+                if !closed.scores.is_empty() {
+                    emit_scores(id, &closed.scores);
+                }
+                println!(
+                    "{{\"event\":\"close\",\"session\":{id},\"samples\":{},\"flits\":{},\
+                     \"padded_tail\":{}}}",
+                    closed.samples, closed.flits, closed.padded_tail
+                );
+            }
+            "quit" => break,
+            other => bail!("unknown command {other:?} (open / push / close / quit)"),
+        }
+    }
+    Ok(())
+}

@@ -48,6 +48,14 @@ impl InputDma {
 /// Output DMA: collects score flits into a contiguous host vector.
 pub struct OutputDma;
 
+/// Unpad one flit into a host buffer: keep only the valid leading rows
+/// (`d = data.len() / mask.len()`). Shared by the output DMAs and the
+/// session server's score delivery, so both unframe identically.
+pub fn unpad_into(flit: &Flit, out: &mut Vec<f32>) {
+    let d = if flit.mask.is_empty() { 1 } else { flit.data.len() / flit.mask.len() };
+    out.extend_from_slice(&flit.data[..flit.n_valid * d]);
+}
+
 impl OutputDma {
     pub fn spawn(name: String, rx: Receiver<Flit>) -> JoinHandle<(Vec<f32>, DmaReport)> {
         std::thread::Builder::new()
@@ -59,9 +67,7 @@ impl OutputDma {
                     report.flits += 1;
                     report.bytes += (flit.data.len() * 4) as u64;
                     report.samples += flit.n_valid as u64;
-                    // Unpad: keep only valid rows (d = data.len()/mask.len()).
-                    let d = if flit.mask.is_empty() { 1 } else { flit.data.len() / flit.mask.len() };
-                    out.extend_from_slice(&flit.data[..flit.n_valid * d]);
+                    unpad_into(&flit, &mut out);
                     if flit.last {
                         break;
                     }

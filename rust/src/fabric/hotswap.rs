@@ -304,6 +304,15 @@ impl ScoreStats {
         self.enabled.load(Ordering::Relaxed)
     }
 
+    /// Stop collection and drop all accumulated state. The session server
+    /// disarms a partition's stats after each adaptive session so an idle
+    /// partition publishes nothing and burst servicing returns to the
+    /// unbounded drain for non-adaptive successors.
+    pub fn disarm(&self) {
+        self.enabled.store(false, Ordering::SeqCst);
+        *self.inner.lock().unwrap() = StatsInner::default();
+    }
+
     /// Forget the baseline and window — called when a swap lands a new
     /// detector (its score scale is unrelated to the old baseline).
     pub fn rebase(&self) {

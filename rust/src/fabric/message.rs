@@ -34,6 +34,31 @@ impl Port {
     }
 }
 
+/// Upstream end of a flit stream, as seen by a pblock service loop.
+///
+/// The fabric's one-shot data plane feeds pblocks through plain mpsc
+/// receivers; the session server feeds them through bounded session inboxes
+/// ([`crate::fabric::server::SessionInbox`]) that apply backpressure to the
+/// client and can be force-closed at shutdown. Both drain identically
+/// through this trait, so [`crate::fabric::pblock::Pblock::service_mode`]
+/// is byte-for-byte the same loop in either deployment.
+pub trait FlitSource {
+    /// Block for the next flit; `None` once the stream is closed.
+    fn recv_flit(&mut self) -> Option<Flit>;
+    /// Non-blocking probe; `None` when the inbox is empty or closed.
+    fn try_recv_flit(&mut self) -> Option<Flit>;
+}
+
+impl FlitSource for Receiver<Flit> {
+    fn recv_flit(&mut self) -> Option<Flit> {
+        self.recv().ok()
+    }
+
+    fn try_recv_flit(&mut self) -> Option<Flit> {
+        self.try_recv().ok()
+    }
+}
+
 /// Score flits have d = 1: length of data == length of mask. Accepts either
 /// freshly-computed `Vec<f32>` buffers or already-shared `Arc<[f32]>`
 /// payloads (e.g. a mask forwarded from the input flit).

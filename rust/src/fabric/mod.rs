@@ -6,6 +6,11 @@
 //! — between runs ([`reconfig`]) or in flight while the fabric is
 //! streaming ([`hotswap`]: quiesce through the decoupler, dark-window
 //! accounting, adaptive reconfiguration controller).
+//!
+//! Two deployments share this data plane: the one-shot batch pass
+//! ([`Fabric::run`]) and the persistent multi-session streaming service
+//! ([`server::FabricServer`], `fsead serve`), whose resident partition
+//! workers drain the same service loops through bounded session inboxes.
 
 pub mod combo;
 pub mod decoupler;
@@ -14,10 +19,12 @@ pub mod hotswap;
 pub mod message;
 pub mod pblock;
 pub mod reconfig;
+pub mod server;
 pub mod switch;
 pub mod topology;
 
 pub use hotswap::SwapEvent;
-pub use message::{Flit, Port};
+pub use message::{Flit, FlitSource, Port};
+pub use server::{FabricServer, Session, SessionSpec};
 pub use switch::AxiSwitch;
-pub use topology::Fabric;
+pub use topology::{pblock_seed, Fabric};

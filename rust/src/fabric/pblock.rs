@@ -27,13 +27,13 @@
 //! submitting to the device.
 
 use anyhow::{bail, Context, Result};
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::decoupler::Decoupler;
 use super::hotswap::{self, Admit, DfxGate, PblockCtl};
-use super::message::{score_chunk, Flit};
+use super::message::{score_chunk, Flit, FlitSource};
 use crate::config::{DetectorHyper, RmKind};
 use crate::detectors::{Detector, DetectorSpec};
 use crate::ensemble::ExecMode;
@@ -238,6 +238,18 @@ impl LoadedRm {
     }
 }
 
+impl Drop for LoadedRm {
+    fn drop(&mut self) {
+        // Unloading an RM frees its device-side executable instance —
+        // reconfiguration and session-server teardown would otherwise leak
+        // one instance per swap/session. Best effort: at process exit the
+        // runtime service may already be gone.
+        if let LoadedRm::DetectorFpga { handle, inst, .. } = self {
+            let _ = handle.drop_instance(*inst);
+        }
+    }
+}
+
 /// Per-run pblock statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PblockReport {
@@ -269,12 +281,14 @@ impl Pblock {
         }
     }
 
-    /// Service one stream under the selected execution mode.
-    pub fn service_mode(
+    /// Service one stream under the selected execution mode. The stream
+    /// source is anything implementing [`FlitSource`]: the fabric's mpsc
+    /// receivers or a server session's bounded inbox.
+    pub fn service_mode<S: FlitSource>(
         rm: &mut LoadedRm,
         decoupler: &Decoupler,
         ctl: &PblockCtl,
-        rx: Receiver<Flit>,
+        rx: S,
         tx: Sender<Flit>,
         mode: ExecMode,
     ) -> Result<PblockReport> {
@@ -291,16 +305,16 @@ impl Pblock {
     /// Every flit first passes the DFX gate, which executes scheduled
     /// hot-swaps between flits and classifies dark-window traffic (see
     /// `fabric::hotswap` for the quiesce protocol and accounting rules).
-    pub fn service(
+    pub fn service<S: FlitSource>(
         rm: &mut LoadedRm,
         decoupler: &Decoupler,
         ctl: &PblockCtl,
-        rx: Receiver<Flit>,
+        mut rx: S,
         tx: Sender<Flit>,
     ) -> Result<PblockReport> {
         let mut report = PblockReport::default();
         let mut gate = DfxGate::new(ctl, decoupler);
-        for flit in rx.iter() {
+        while let Some(flit) = rx.recv_flit() {
             report.flits_in += 1;
             let last = flit.last;
             match gate.admit(rm, last, true)? {
@@ -355,11 +369,11 @@ impl Pblock {
     /// dark-window flits are dropped or bypassed, and the tail is scored
     /// by the new RM — identical flit-level semantics to the per-flit
     /// path.
-    pub fn service_burst(
+    pub fn service_burst<S: FlitSource>(
         rm: &mut LoadedRm,
         decoupler: &Decoupler,
         ctl: &PblockCtl,
-        rx: Receiver<Flit>,
+        mut rx: S,
         tx: Sender<Flit>,
     ) -> Result<PblockReport> {
         // When the adaptive controller is watching this pblock (stats
@@ -376,14 +390,14 @@ impl Pblock {
         let mut outputs: Vec<Flit> = Vec::new();
         let mut seg: Vec<Flit> = Vec::new();
         loop {
-            let Ok(first) = rx.recv() else {
+            let Some(first) = rx.recv_flit() else {
                 gate.finish();
                 return Ok(report);
             };
             let mut done = first.last;
             let mut backlog = vec![first];
             while !done && backlog.len() < max_burst {
-                let Ok(f) = rx.try_recv() else { break };
+                let Some(f) = rx.try_recv_flit() else { break };
                 done = f.last;
                 backlog.push(f);
             }

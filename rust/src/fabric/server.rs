@@ -1,0 +1,1208 @@
+//! Persistent streaming session server over the fabric.
+//!
+//! [`Fabric::run`](super::Fabric::run) is a one-shot batch pass: it wires
+//! the topology, streams pre-loaded datasets through and tears everything
+//! down. This module keeps the fabric *resident*: a [`FabricServer`] starts
+//! one service worker per configured pblock partition and the workers stay
+//! alive between requests, serving an open-ended sequence of client
+//! sessions — the paper's Fig 7(a) multi-stream configuration (seven
+//! independent AD applications, one per pblock, each on its own DMA
+//! channel) turned into a long-running service.
+//!
+//! # Session lifecycle
+//!
+//! 1. **Open** — [`FabricServer::open`] admits a [`Session`] onto a free
+//!    pblock partition (a specific one via [`SessionSpec::pblock`], or any).
+//!    When every partition is busy the caller queues on the admission
+//!    condvar (bounded by `[fabric.server] max_waiters`) until a partition
+//!    frees. The partition's resident worker builds a fresh RM from the
+//!    session's dimensionality and warm-up prefix with the same
+//!    [`pblock_seed`] the one-shot fabric uses, so a session's scores are
+//!    **bit-identical** to a `Fabric::run` over the same concatenated data.
+//! 2. **Push** — [`Session::push`] appends samples; full chunks are cut
+//!    into flits exactly like the input DMA's `ChunkStream` (shared
+//!    all-ones mask, zero-padded tail) and sent through the session's
+//!    **bounded inbox**: a full inbox blocks the producer — AXI-style
+//!    backpressure — and never drops or reorders flits.
+//! 3. **Score** — the partition worker drains the inbox through the
+//!    ordinary [`Pblock::service_mode`] loop (both [`ExecMode`]s, the DFX
+//!    gate consulted per flit), so live reconfiguration — scripted
+//!    schedules via [`FabricServer::schedule_swap`] / `[fabric.dfx.swap.N]`
+//!    and the adaptive controller via `[fabric.dfx]` — keeps working
+//!    mid-session. Score flits flow back asynchronously per chunk
+//!    ([`Session::recv_scores`] / [`Session::poll_scores`]).
+//! 4. **Close** — [`Session::close`] flushes with TLAST semantics: a
+//!    partial trailing chunk is zero-padded into the final flit and
+//!    **reported** ([`SessionClose::padded_tail`], never silent), the
+//!    remaining scores are drained, and the partition returns to the free
+//!    pool for the next queued session. Dropping a session without closing
+//!    abandons it: the worker finishes, the partition frees, nothing leaks.
+//!
+//! [`FabricServer::shutdown`] force-closes the inboxes of sessions still
+//! open (their next `push` fails fast), lets every worker finish its
+//! current episode, and joins them — shutdown never deadlocks on an idle
+//! client.
+
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::decoupler::Decoupler;
+use super::dma::unpad_into;
+use super::hotswap::{self, ControllerEnv, ControllerTarget, PblockCtl, SwapEvent};
+use super::message::{Flit, FlitSource, Port};
+use super::pblock::{LoadedRm, Pblock, PblockReport};
+use super::reconfig::DfxManager;
+use super::topology::{kind_of, pblock_seed};
+use crate::config::{DetectorHyper, DfxCfg, FseadConfig, RmKind, ScriptedSwap};
+use crate::data::Dataset;
+use crate::ensemble::ExecMode;
+use crate::runtime::{Registry, Runtime, RuntimeHandle};
+
+/// Completed-session outcomes retained for clients that have not yet
+/// collected them (bounds memory under open/close churn with misbehaving
+/// clients that neither close nor drop promptly).
+const MAX_RETAINED_OUTCOMES: usize = 512;
+
+// ---------------------------------------------------------------------------
+// Bounded session inbox
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct InboxQueue {
+    buf: VecDeque<Flit>,
+    /// Producer hung up (client closed or dropped the session).
+    producer_done: bool,
+    /// Server force-closed the stream (shutdown): pending flits are
+    /// discarded and the producer's next send fails fast.
+    force_closed: bool,
+}
+
+struct InboxShared {
+    cap: usize,
+    q: Mutex<InboxQueue>,
+    /// Signalled when space frees up (consumer popped / force-close).
+    space: Condvar,
+    /// Signalled when a flit arrives or the stream ends.
+    ready: Condvar,
+}
+
+/// Error returned by [`InboxSender::send`] once the server has force-closed
+/// the session (shutdown or partition failure).
+#[derive(Debug)]
+pub struct InboxClosed;
+
+impl std::fmt::Display for InboxClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "session inbox closed by the server")
+    }
+}
+
+impl std::error::Error for InboxClosed {}
+
+/// Producer half of a session's bounded inbox. A full inbox **blocks** the
+/// sender until the partition's service loop drains a flit — backpressure,
+/// never drops, never reorders.
+pub struct InboxSender {
+    inner: Arc<InboxShared>,
+}
+
+impl InboxSender {
+    pub fn send(&self, flit: Flit) -> Result<(), InboxClosed> {
+        let mut q = self.inner.q.lock().unwrap();
+        loop {
+            if q.force_closed {
+                return Err(InboxClosed);
+            }
+            if q.buf.len() < self.inner.cap {
+                break;
+            }
+            q = self.inner.space.wait(q).unwrap();
+        }
+        q.buf.push_back(flit);
+        drop(q);
+        self.inner.ready.notify_one();
+        Ok(())
+    }
+
+    /// Flits currently queued (telemetry / tests).
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for InboxSender {
+    fn drop(&mut self) {
+        self.inner.q.lock().unwrap().producer_done = true;
+        self.inner.ready.notify_all();
+    }
+}
+
+/// Server-side control over a session inbox: force-close at shutdown.
+#[derive(Clone)]
+pub(crate) struct InboxCtl {
+    inner: Arc<InboxShared>,
+}
+
+impl InboxCtl {
+    fn force_close(&self) {
+        let mut q = self.inner.q.lock().unwrap();
+        q.force_closed = true;
+        q.buf.clear();
+        drop(q);
+        self.inner.space.notify_all();
+        self.inner.ready.notify_all();
+    }
+}
+
+/// Consumer half of a session's bounded inbox — the [`FlitSource`] a
+/// partition worker drains through [`Pblock::service_mode`].
+pub struct SessionInbox {
+    inner: Arc<InboxShared>,
+}
+
+impl SessionInbox {
+    /// Create a bounded inbox of `cap` flits.
+    pub fn bounded(cap: usize) -> (InboxSender, SessionInbox) {
+        assert!(cap > 0, "a zero-depth inbox deadlocks");
+        let inner = Arc::new(InboxShared {
+            cap,
+            q: Mutex::new(InboxQueue::default()),
+            space: Condvar::new(),
+            ready: Condvar::new(),
+        });
+        (InboxSender { inner: Arc::clone(&inner) }, SessionInbox { inner })
+    }
+
+    pub(crate) fn ctl(&self) -> InboxCtl {
+        InboxCtl { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl FlitSource for SessionInbox {
+    fn recv_flit(&mut self) -> Option<Flit> {
+        let mut q = self.inner.q.lock().unwrap();
+        loop {
+            if q.force_closed {
+                return None;
+            }
+            if let Some(f) = q.buf.pop_front() {
+                drop(q);
+                self.inner.space.notify_one();
+                return Some(f);
+            }
+            if q.producer_done {
+                return None;
+            }
+            q = self.inner.ready.wait(q).unwrap();
+        }
+    }
+
+    fn try_recv_flit(&mut self) -> Option<Flit> {
+        let mut q = self.inner.q.lock().unwrap();
+        if q.force_closed {
+            return None;
+        }
+        let f = q.buf.pop_front();
+        if f.is_some() {
+            drop(q);
+            self.inner.space.notify_one();
+        }
+        f
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission state
+// ---------------------------------------------------------------------------
+
+struct ActiveSession {
+    session: u64,
+    d: usize,
+    /// Warm-up prefix of the session's stream — kept so in-flight swaps can
+    /// be staged against the live stream's parameter ranges.
+    warmup: Arc<Vec<f32>>,
+    door: InboxCtl,
+}
+
+/// What a finished session left behind for its client.
+struct SessionOutcome {
+    report: Option<PblockReport>,
+    swap_events: Vec<SwapEvent>,
+    adaptive_swaps: u64,
+    discarded_swaps: u64,
+    error: Option<String>,
+}
+
+#[derive(Default)]
+struct AdmissionState {
+    free: BTreeSet<usize>,
+    active: BTreeMap<usize, ActiveSession>,
+    results: BTreeMap<u64, SessionOutcome>,
+    /// Sessions dropped by their client before the worker stored a result.
+    abandoned: BTreeSet<u64>,
+    waiters: usize,
+    shutting_down: bool,
+    next_session: u64,
+    served: u64,
+}
+
+struct Shared {
+    state: Mutex<AdmissionState>,
+    /// Signalled when a partition frees (or at shutdown) — admission queue.
+    freed: Condvar,
+}
+
+// ---------------------------------------------------------------------------
+// Partition workers
+// ---------------------------------------------------------------------------
+
+struct SessionWork {
+    session: u64,
+    d: usize,
+    warmup: Arc<Vec<f32>>,
+    inbox: SessionInbox,
+    scores: Sender<Flit>,
+}
+
+/// Everything a resident partition worker owns for its lifetime.
+struct WorkerEnv {
+    id: usize,
+    rm: RmKind,
+    r: usize,
+    seed: u64,
+    hyper: DetectorHyper,
+    chunk: usize,
+    exec: ExecMode,
+    quantize: bool,
+    fpga: Option<(RuntimeHandle, Registry)>,
+    dfx: DfxManager,
+    dfx_cfg: DfxCfg,
+    ctl: Arc<PblockCtl>,
+    decoupler: Arc<Decoupler>,
+    shared: Arc<Shared>,
+}
+
+fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<SessionWork>) {
+    while let Ok(work) = jobs.recv() {
+        let SessionWork { session, d, warmup, inbox, scores } = work;
+        let mut outcome = serve_episode(&env, &mut scripted, d, &warmup, inbox, scores.clone());
+        {
+            let mut st = env.shared.state.lock().unwrap();
+            // End-of-session boundary, atomic with the admission state:
+            // once `active` is gone, `schedule_swap` refuses (it re-checks
+            // under this lock), and any swap armed before that is cleared
+            // here — a replacement RM staged against this session's stream
+            // can never fire on the next one. Force-closing the inbox
+            // unblocks a producer stuck in backpressure after the service
+            // loop already ended (e.g. it failed mid-session): its next
+            // send fails fast instead of waiting on a drain that will
+            // never come.
+            if let Some(a) = st.active.remove(&env.id) {
+                a.door.force_close();
+            }
+            outcome.discarded_swaps += env.ctl.swap.clear_pending() as u64;
+            if !st.abandoned.remove(&session) {
+                st.results.insert(session, outcome);
+                while st.results.len() > MAX_RETAINED_OUTCOMES {
+                    st.results.pop_first();
+                }
+            }
+            if !st.shutting_down {
+                st.free.insert(env.id);
+            }
+            st.served += 1;
+        }
+        env.shared.freed.notify_all();
+        // Dropping the worker's score sender last closes the session's
+        // score channel — by then the outcome is already visible, so a
+        // client draining in `close()` never races the bookkeeping.
+        drop(scores);
+    }
+}
+
+/// Serve exactly one session on this partition: fresh RM (same seed/warmup
+/// recipe as the one-shot fabric), scripted swaps armed, adaptive controller
+/// watching if configured, then the ordinary pblock service loop until
+/// TLAST / hang-up / force-close.
+fn serve_episode(
+    env: &WorkerEnv,
+    scripted: &mut Vec<ScriptedSwap>,
+    d: usize,
+    warmup: &[f32],
+    inbox: SessionInbox,
+    tx: Sender<Flit>,
+) -> SessionOutcome {
+    let failed = |error: String| SessionOutcome {
+        report: None,
+        swap_events: Vec::new(),
+        adaptive_swaps: 0,
+        discarded_swaps: 0,
+        error: Some(error),
+    };
+    let fpga = env.fpga.as_ref().map(|(h, r)| (h, r));
+    let mut rm =
+        match LoadedRm::build(env.rm, env.r, d, env.seed, &env.hyper, warmup, fpga, env.quantize) {
+            Ok(rm) => rm,
+            Err(e) => return failed(format!("building RM: {e:#}")),
+        };
+    if let Err(e) = rm.reset() {
+        return failed(format!("resetting RM: {e:#}"));
+    }
+    env.ctl.swap.begin_run();
+    // Scripted schedule ([fabric.dfx.swap.N]): consumed by the partition's
+    // first session, mirroring how `Fabric::new` arms it for the first run.
+    for s in scripted.drain(..) {
+        let staged = env.dfx.stage(
+            env.id,
+            s.rm,
+            s.r,
+            d,
+            env.seed,
+            &env.hyper,
+            warmup,
+            fpga,
+            env.quantize,
+            s.at_flit,
+            s.dark_flits,
+            env.dfx_cfg.policy,
+            env.chunk,
+            env.dfx_cfg.samples_per_sec,
+        );
+        match staged {
+            Ok(swap) => env.ctl.swap.schedule(swap),
+            // Mirror `Fabric::new`, which hard-fails when a scripted swap
+            // cannot be staged: serving the session without it would
+            // silently break the advertised Fabric::run parity. The
+            // client sees the error from `close()`.
+            Err(e) => {
+                return failed(format!("arming scripted swap for pblock {}: {e:#}", env.id))
+            }
+        }
+    }
+    // Adaptive live DFX: one controller per adaptive session, watching this
+    // partition only — it shares the same drift machinery as `Fabric::run`.
+    let controller = match (env.dfx_cfg.adaptive && env.decoupler.is_enabled(), kind_of(env.rm)) {
+        (true, Some(kind)) => {
+            env.ctl.stats.arm(env.dfx_cfg.window, env.dfx_cfg.baseline);
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let cenv = ControllerEnv {
+                dfx: env.dfx.clone(),
+                cfg: env.dfx_cfg.clone(),
+                hyper: env.hyper,
+                chunk: env.chunk,
+                quantize: env.quantize,
+                fpga: env.fpga.clone(),
+            };
+            let targets = vec![ControllerTarget {
+                pblock: env.id,
+                ctl: Arc::clone(&env.ctl),
+                kind,
+                d,
+                warmup: warmup.to_vec(),
+                seed: env.seed,
+            }];
+            let handle = hotswap::spawn_controller(cenv, targets, Arc::clone(&stop));
+            Some((stop, handle))
+        }
+        _ => None,
+    };
+    let served = Pblock::service_mode(&mut rm, &env.decoupler, &env.ctl, inbox, tx, env.exec);
+    let adaptive_swaps = match controller {
+        Some((stop, handle)) => {
+            stop.store(true, std::sync::atomic::Ordering::SeqCst);
+            handle.join().unwrap_or(0)
+        }
+        None => 0,
+    };
+    if env.ctl.stats.is_armed() {
+        env.ctl.stats.disarm();
+    }
+    // Swaps still pending are cleared by the caller inside the admission
+    // lock (atomic with removing the active-session entry), so a racing
+    // `schedule_swap` can never leak a stale RM into the next session.
+    let swap_events = env.ctl.swap.take_events();
+    match served {
+        Ok(report) => SessionOutcome {
+            report: Some(report),
+            swap_events,
+            adaptive_swaps,
+            discarded_swaps: 0,
+            error: None,
+        },
+        Err(e) => SessionOutcome {
+            report: None,
+            swap_events,
+            adaptive_swaps,
+            discarded_swaps: 0,
+            error: Some(format!("{e:#}")),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+struct PartitionHandle {
+    rm: RmKind,
+    /// Job queue into the resident worker; mutexed because `std` senders
+    /// are not `Sync` and `open` is called from many client threads.
+    jobs: Mutex<Sender<SessionWork>>,
+    ctl: Arc<PblockCtl>,
+    decoupler: Arc<Decoupler>,
+}
+
+/// Summary returned by [`FabricServer::shutdown`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerReport {
+    /// Sessions fully served over the server's lifetime.
+    pub sessions_served: u64,
+}
+
+/// A persistent, multi-session streaming service over the fabric's pblock
+/// partitions. See the module docs for the session lifecycle.
+pub struct FabricServer {
+    cfg: FseadConfig,
+    runtime: Option<Mutex<Runtime>>,
+    shared: Arc<Shared>,
+    partitions: BTreeMap<usize, PartitionHandle>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// What a client wants from [`FabricServer::open`].
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    /// Stream dimensionality.
+    pub d: usize,
+    /// Row-major `[n, d]` warm-up prefix for detector parameter ranges —
+    /// pass the same prefix `Fabric::new` would see (`Dataset::warmup`) for
+    /// bit-identical scores.
+    pub warmup: Vec<f32>,
+    /// Pin the session to one partition (1-based pblock id); `None` takes
+    /// any free partition.
+    pub pblock: Option<usize>,
+}
+
+impl SessionSpec {
+    pub fn new(d: usize, warmup: Vec<f32>) -> SessionSpec {
+        SessionSpec { d, warmup, pblock: None }
+    }
+
+    /// Spec for streaming `ds` — warm-up mirrors what `Fabric::new` uses.
+    pub fn for_dataset(ds: &Dataset, window: usize) -> SessionSpec {
+        SessionSpec::new(ds.d, ds.warmup(window).to_vec())
+    }
+
+    pub fn on_pblock(mut self, id: usize) -> SessionSpec {
+        self.pblock = Some(id);
+        self
+    }
+}
+
+impl FabricServer {
+    /// Start the server: one resident service worker per configured
+    /// (non-empty) pblock. The fabric stays up until [`FabricServer::shutdown`]
+    /// or drop.
+    pub fn start(cfg: FseadConfig) -> Result<FabricServer> {
+        cfg.validate()?;
+        if !cfg.combos.is_empty() {
+            bail!(
+                "fabric::server serves the Fig 7(a) multi-stream pattern (direct pblock→host \
+                 routes); combo joins are not supported — drop the [combo.N] sections"
+            );
+        }
+        let active: Vec<_> = cfg.pblocks.iter().filter(|p| p.rm != RmKind::Empty).collect();
+        if active.is_empty() {
+            bail!("no pblocks configured — nothing to serve");
+        }
+        let runtime = if cfg.use_fpga {
+            Some(Runtime::start(&cfg.artifact_dir).context("starting PJRT runtime")?)
+        } else {
+            None
+        };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(AdmissionState {
+                free: active.iter().map(|p| p.id).collect(),
+                ..Default::default()
+            }),
+            freed: Condvar::new(),
+        });
+        let mut partitions = BTreeMap::new();
+        let mut workers = Vec::new();
+        for p in &active {
+            let ctl = Arc::new(PblockCtl::default());
+            let decoupler = Arc::new(Decoupler::new());
+            let (jobs_tx, jobs_rx) = std::sync::mpsc::channel::<SessionWork>();
+            let scripted: Vec<ScriptedSwap> =
+                cfg.dfx.swaps.iter().filter(|s| s.pblock == p.id).copied().collect();
+            let env = WorkerEnv {
+                id: p.id,
+                rm: p.rm,
+                r: p.r,
+                seed: pblock_seed(cfg.seed, p.id),
+                hyper: cfg.hyper,
+                chunk: cfg.chunk,
+                exec: cfg.exec,
+                quantize: cfg.use_fpga,
+                fpga: runtime.as_ref().map(|rt| (rt.handle(), rt.registry().clone())),
+                dfx: DfxManager::default(),
+                dfx_cfg: cfg.dfx.clone(),
+                ctl: Arc::clone(&ctl),
+                decoupler: Arc::clone(&decoupler),
+                shared: Arc::clone(&shared),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-p{}", p.id))
+                .spawn(move || worker_loop(env, scripted, jobs_rx))
+                .expect("spawn partition worker");
+            partitions.insert(
+                p.id,
+                PartitionHandle {
+                    rm: p.rm,
+                    jobs: Mutex::new(jobs_tx),
+                    ctl,
+                    decoupler: Arc::clone(&decoupler),
+                },
+            );
+            workers.push(handle);
+        }
+        Ok(FabricServer { cfg, runtime: runtime.map(Mutex::new), shared, partitions, workers })
+    }
+
+    pub fn config(&self) -> &FseadConfig {
+        &self.cfg
+    }
+
+    /// Served partition ids, in pblock order.
+    pub fn partitions(&self) -> Vec<usize> {
+        self.partitions.keys().copied().collect()
+    }
+
+    /// RM kind configured for partition `id`.
+    pub fn partition_rm(&self, id: usize) -> Option<RmKind> {
+        self.partitions.get(&id).map(|p| p.rm)
+    }
+
+    /// The partition's decoupler (isolation control, as on [`super::Fabric`]).
+    pub fn decoupler(&self, id: usize) -> Option<&Arc<Decoupler>> {
+        self.partitions.get(&id).map(|p| &p.decoupler)
+    }
+
+    /// Open a session, blocking in the admission queue while every eligible
+    /// partition is busy. Fails once `max_waiters` clients are already
+    /// queued, or at shutdown.
+    pub fn open(&self, spec: SessionSpec) -> Result<Session> {
+        Ok(self.open_inner(spec, true)?.expect("blocking open returns a session"))
+    }
+
+    /// Non-blocking open: `Ok(None)` when no eligible partition is free.
+    pub fn try_open(&self, spec: SessionSpec) -> Result<Option<Session>> {
+        self.open_inner(spec, false)
+    }
+
+    fn open_inner(&self, spec: SessionSpec, block: bool) -> Result<Option<Session>> {
+        if spec.d == 0 {
+            bail!("session dimensionality must be > 0");
+        }
+        if spec.warmup.len() % spec.d != 0 {
+            bail!(
+                "warmup length {} is not a whole number of samples (d = {})",
+                spec.warmup.len(),
+                spec.d
+            );
+        }
+        if let Some(id) = spec.pblock {
+            if !self.partitions.contains_key(&id) {
+                bail!("no served partition {id}");
+            }
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        let mut waiting = false;
+        let id = loop {
+            if st.shutting_down {
+                if waiting {
+                    st.waiters -= 1;
+                }
+                bail!("server is shutting down");
+            }
+            let pick = match spec.pblock {
+                Some(id) => st.free.contains(&id).then_some(id),
+                None => st.free.first().copied(),
+            };
+            if let Some(id) = pick {
+                if waiting {
+                    st.waiters -= 1;
+                }
+                st.free.remove(&id);
+                break id;
+            }
+            if !block {
+                return Ok(None);
+            }
+            if !waiting {
+                if st.waiters >= self.cfg.server.max_waiters {
+                    bail!(
+                        "admission queue is full ({} session(s) already waiting)",
+                        st.waiters
+                    );
+                }
+                st.waiters += 1;
+                waiting = true;
+            }
+            st = self.shared.freed.wait(st).unwrap();
+        };
+        let session = st.next_session;
+        st.next_session += 1;
+        let warmup = Arc::new(spec.warmup);
+        let (inbox_tx, inbox_rx) = SessionInbox::bounded(self.cfg.server.inbox_flits);
+        st.active.insert(
+            id,
+            ActiveSession { session, d: spec.d, warmup: Arc::clone(&warmup), door: inbox_rx.ctl() },
+        );
+        drop(st);
+        let (score_tx, score_rx) = Port::link();
+        let work =
+            SessionWork { session, d: spec.d, warmup, inbox: inbox_rx, scores: score_tx };
+        let sent = self.partitions[&id].jobs.lock().unwrap().send(work).is_ok();
+        if !sent {
+            // Worker is gone (panicked): the partition is out of service.
+            self.shared.state.lock().unwrap().active.remove(&id);
+            bail!("partition {id}: service worker has exited");
+        }
+        Ok(Some(Session {
+            id: session,
+            pblock: id,
+            d: spec.d,
+            chunk: self.cfg.chunk,
+            tx: Some(inbox_tx),
+            rx: score_rx,
+            seq: 0,
+            pushed: 0,
+            staged: Vec::new(),
+            full_mask: vec![1.0f32; self.cfg.chunk].into(),
+            shared: Arc::clone(&self.shared),
+            finished: false,
+        }))
+    }
+
+    /// Arm an in-flight RM swap on partition `id` at session-input flit
+    /// `at_flit` of its **active** session — the server-side counterpart of
+    /// [`super::Fabric::schedule_swap`], staged against the live session's
+    /// stream. Returns (modelled download ms, dark-window flits).
+    pub fn schedule_swap(
+        &self,
+        id: usize,
+        at_flit: u64,
+        rm: RmKind,
+        r: usize,
+        dark_flits: Option<u64>,
+    ) -> Result<(f64, u64)> {
+        let part = self
+            .partitions
+            .get(&id)
+            .with_context(|| format!("no served partition {id}"))?;
+        if !part.decoupler.is_enabled() {
+            bail!("pblock {id}: decoupler is disabled — cannot hot-swap without isolation");
+        }
+        let (session, d, warmup) = {
+            let st = self.shared.state.lock().unwrap();
+            let a = st.active.get(&id).with_context(|| {
+                format!("pblock {id} has no active session — swaps are staged against a live stream")
+            })?;
+            (a.session, a.d, Arc::clone(&a.warmup))
+        };
+        let fpga = self.runtime.as_ref().map(|rt| {
+            let rt = rt.lock().unwrap();
+            (rt.handle(), rt.registry().clone())
+        });
+        let swap = DfxManager::default().stage(
+            id,
+            rm,
+            r,
+            d,
+            pblock_seed(self.cfg.seed, id),
+            &self.cfg.hyper,
+            &warmup,
+            fpga.as_ref().map(|(h, reg)| (h, reg)),
+            self.cfg.use_fpga,
+            at_flit,
+            dark_flits,
+            self.cfg.dfx.policy,
+            self.cfg.chunk,
+            self.cfg.dfx.samples_per_sec,
+        )?;
+        let info = (swap.model_ms, swap.dark_flits);
+        // Arm under the admission lock: the worker clears pending swaps in
+        // the same critical section that retires the active session, so a
+        // swap staged against a session that ended (or was replaced by a
+        // newer one) is refused here instead of leaking into the wrong
+        // episode.
+        let st = self.shared.state.lock().unwrap();
+        if st.active.get(&id).map(|a| a.session) != Some(session) {
+            bail!("pblock {id}: the session ended while the swap was being staged");
+        }
+        part.ctl.swap.schedule(swap);
+        Ok(info)
+    }
+
+    /// Sessions fully served so far.
+    pub fn sessions_served(&self) -> u64 {
+        self.shared.state.lock().unwrap().served
+    }
+
+    /// Stop admitting, force-close the inboxes of sessions still open, let
+    /// every resident worker finish its current episode and join them.
+    pub fn shutdown(mut self) -> Result<ServerReport> {
+        self.shutdown_impl()
+    }
+
+    fn shutdown_impl(&mut self) -> Result<ServerReport> {
+        let doors: Vec<InboxCtl> = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutting_down = true;
+            st.active.values().map(|a| a.door.clone()).collect()
+        };
+        self.shared.freed.notify_all();
+        for door in doors {
+            door.force_close();
+        }
+        // Closing the job queues ends the resident workers after their
+        // current episode.
+        self.partitions.clear();
+        let mut panicked = 0usize;
+        for w in self.workers.drain(..) {
+            if w.join().is_err() {
+                panicked += 1;
+            }
+        }
+        if panicked > 0 {
+            bail!("{panicked} partition worker(s) panicked");
+        }
+        Ok(ServerReport { sessions_served: self.shared.state.lock().unwrap().served })
+    }
+}
+
+impl Drop for FabricServer {
+    fn drop(&mut self) {
+        let _ = self.shutdown_impl();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client session
+// ---------------------------------------------------------------------------
+
+/// Result of [`Session::close`].
+#[derive(Clone, Debug)]
+pub struct SessionClose {
+    /// Scores not yet collected via `recv_scores`/`poll_scores`, in stream
+    /// order.
+    pub scores: Vec<f32>,
+    /// Samples pushed over the session (including the padded tail's valid
+    /// rows).
+    pub samples: u64,
+    /// Flits sent, including the TLAST flit.
+    pub flits: u64,
+    /// True when `close()` cut the stream mid-chunk: the final flit carries
+    /// `tail_valid` valid rows zero-padded to the chunk size. Reported here
+    /// — padding is never silent.
+    pub padded_tail: bool,
+    pub tail_valid: usize,
+    /// The partition's service report for this session.
+    pub report: PblockReport,
+    /// In-flight RM swaps executed during the session.
+    pub swap_events: Vec<SwapEvent>,
+    /// Swaps issued by the adaptive controller during the session.
+    pub adaptive_swaps: u64,
+    /// Swaps armed but never executed — discarded at episode boundaries so
+    /// a stale replacement RM (staged for another stream) can never fire.
+    pub discarded_swaps: u64,
+}
+
+/// A client's handle on one streaming session. Push sample chunks, receive
+/// score chunks asynchronously, close to flush with TLAST semantics.
+pub struct Session {
+    id: u64,
+    pblock: usize,
+    d: usize,
+    chunk: usize,
+    tx: Option<InboxSender>,
+    rx: Receiver<Flit>,
+    seq: u64,
+    pushed: u64,
+    /// Samples staged toward the next full chunk (`< chunk × d` values).
+    staged: Vec<f32>,
+    /// All-ones mask shared by every full flit of this session (one
+    /// allocation, like `ChunkStream`).
+    full_mask: Arc<[f32]>,
+    shared: Arc<Shared>,
+    finished: bool,
+}
+
+impl Session {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The pblock partition serving this session.
+    pub fn pblock(&self) -> usize {
+        self.pblock
+    }
+
+    /// Samples pushed so far (staged samples included).
+    pub fn samples_pushed(&self) -> u64 {
+        self.pushed + (self.staged.len() / self.d) as u64
+    }
+
+    /// Push `samples` (row-major, a whole number of rows). Full chunks are
+    /// cut into flits exactly like the input DMA and sent through the
+    /// bounded inbox — this call **blocks** while the inbox is full.
+    /// Each sample is copied exactly once (into its flit buffer), so a
+    /// large push is O(n) regardless of the chunk size.
+    pub fn push(&mut self, samples: &[f32]) -> Result<()> {
+        if samples.len() % self.d != 0 {
+            bail!(
+                "push of {} values is not a whole number of samples (d = {})",
+                samples.len(),
+                self.d
+            );
+        }
+        let flit_len = self.chunk * self.d;
+        let mut rest = samples;
+        // Complete a partially staged chunk first.
+        if !self.staged.is_empty() {
+            let take = (flit_len - self.staged.len()).min(rest.len());
+            self.staged.extend_from_slice(&rest[..take]);
+            rest = &rest[take..];
+            if self.staged.len() == flit_len {
+                let full = std::mem::take(&mut self.staged);
+                self.emit_full(full)?;
+            }
+        }
+        // Cut whole flits straight from the input slice.
+        while rest.len() >= flit_len {
+            self.emit_full(rest[..flit_len].to_vec())?;
+            rest = &rest[flit_len..];
+        }
+        self.staged.extend_from_slice(rest);
+        Ok(())
+    }
+
+    fn emit_full(&mut self, data: Vec<f32>) -> Result<()> {
+        let flit = Flit {
+            seq: self.seq,
+            data: data.into(),
+            mask: self.full_mask.clone(),
+            n_valid: self.chunk,
+            last: false,
+        };
+        self.seq += 1;
+        self.pushed += self.chunk as u64;
+        self.send(flit)
+    }
+
+    fn send(&self, flit: Flit) -> Result<()> {
+        match self.tx.as_ref().expect("session already closed").send(flit) {
+            Ok(()) => Ok(()),
+            Err(InboxClosed) => {
+                bail!("session closed by the server (shutdown or partition failure)")
+            }
+        }
+    }
+
+    /// Non-blocking: drain the score flits that have already arrived,
+    /// unpadded into plain per-sample scores.
+    pub fn poll_scores(&mut self) -> Vec<f32> {
+        let mut out = Vec::new();
+        while let Ok(flit) = self.rx.try_recv() {
+            unpad_into(&flit, &mut out);
+        }
+        out
+    }
+
+    /// Block for the next score flit; `None` once the session's score
+    /// stream has ended.
+    pub fn recv_scores(&mut self) -> Option<Vec<f32>> {
+        let flit = self.rx.recv().ok()?;
+        let mut out = Vec::new();
+        unpad_into(&flit, &mut out);
+        Some(out)
+    }
+
+    /// Flush with TLAST semantics and tear the session down: a partial
+    /// trailing chunk is zero-padded into the final flit (**reported** via
+    /// [`SessionClose::padded_tail`]), remaining scores are drained, and
+    /// the partition returns to the free pool.
+    pub fn close(mut self) -> Result<SessionClose> {
+        let tail_valid = self.staged.len() / self.d;
+        let rows = self.chunk;
+        let mut data = vec![0f32; rows * self.d];
+        data[..self.staged.len()].copy_from_slice(&self.staged);
+        let mut mask = vec![0f32; rows];
+        mask[..tail_valid].fill(1.0);
+        let last = Flit {
+            seq: self.seq,
+            data: data.into(),
+            mask: mask.into(),
+            n_valid: tail_valid,
+            last: true,
+        };
+        self.seq += 1;
+        self.pushed += tail_valid as u64;
+        self.staged.clear();
+        // Best effort: at shutdown the inbox is already force-closed and
+        // the flush is lost — the drain below still terminates because the
+        // worker ends the episode either way.
+        let flushed = self.send(last).is_ok();
+        drop(self.tx.take());
+        let mut scores = Vec::new();
+        while let Ok(flit) = self.rx.recv() {
+            unpad_into(&flit, &mut scores);
+        }
+        self.finished = true;
+        let outcome = self
+            .shared
+            .state
+            .lock()
+            .unwrap()
+            .results
+            .remove(&self.id)
+            .context("session outcome missing — partition worker terminated abnormally")?;
+        if let Some(err) = outcome.error {
+            bail!("partition {} service failed: {err}", self.pblock);
+        }
+        if !flushed {
+            bail!("session was force-closed by the server before the TLAST flush");
+        }
+        Ok(SessionClose {
+            scores,
+            samples: self.pushed,
+            flits: self.seq,
+            padded_tail: tail_valid > 0,
+            tail_valid,
+            report: outcome.report.unwrap_or_default(),
+            swap_events: outcome.swap_events,
+            adaptive_swaps: outcome.adaptive_swaps,
+            discarded_swaps: outcome.discarded_swaps,
+        })
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        if self.finished {
+            return;
+        }
+        // Abandoned without close(): hang up the inbox (the worker finishes
+        // the episode and frees the partition) and disown the outcome.
+        drop(self.tx.take());
+        let mut st = self.shared.state.lock().unwrap();
+        if st.results.remove(&self.id).is_none() {
+            st.abandoned.insert(self.id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PblockCfg;
+    use crate::detectors::prng::Prng;
+    use crate::detectors::{DetectorKind, DetectorSpec};
+    use crate::fabric::message::score_chunk;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
+
+    fn flit(seq: u64) -> Flit {
+        score_chunk(seq, vec![seq as f32], vec![1.0], 1, false)
+    }
+
+    fn tiny_cfg(chunk: usize, kind: DetectorKind, r: usize) -> FseadConfig {
+        let mut cfg = FseadConfig::default();
+        cfg.use_fpga = false;
+        cfg.chunk = chunk;
+        cfg.hyper.window = 16;
+        cfg.hyper.bins = 8;
+        cfg.hyper.modulus = 32;
+        cfg.hyper.k = 4;
+        cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Detector(kind), r, stream: 0 });
+        cfg
+    }
+
+    fn gaussian_data(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..n * d).map(|_| p.gaussian() as f32).collect()
+    }
+
+    #[test]
+    fn inbox_blocks_producer_at_capacity() {
+        let (tx, mut rx) = SessionInbox::bounded(2);
+        let sent = Arc::new(AtomicUsize::new(0));
+        let sent2 = Arc::clone(&sent);
+        let producer = std::thread::spawn(move || {
+            for seq in 0..5u64 {
+                tx.send(flit(seq)).unwrap();
+                sent2.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        // The producer fills the inbox and then blocks on the third send.
+        let t0 = Instant::now();
+        while sent.load(Ordering::SeqCst) < 2 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(sent.load(Ordering::SeqCst), 2, "producer must block at capacity");
+        // Draining one flit unblocks exactly one more send.
+        assert_eq!(rx.recv_flit().unwrap().seq, 0);
+        let t0 = Instant::now();
+        while sent.load(Ordering::SeqCst) < 3 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(sent.load(Ordering::SeqCst), 3);
+        // Drain the rest: order is FIFO, nothing dropped, nothing reordered.
+        let mut seqs = vec![];
+        while let Some(f) = rx.recv_flit() {
+            seqs.push(f.seq);
+        }
+        producer.join().unwrap();
+        assert_eq!(seqs, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn inbox_force_close_unblocks_producer_and_fails_fast() {
+        let (tx, mut rx) = SessionInbox::bounded(1);
+        tx.send(flit(0)).unwrap();
+        let ctl = rx.ctl();
+        let blocked = std::thread::spawn(move || tx.send(flit(1)));
+        std::thread::sleep(Duration::from_millis(20));
+        ctl.force_close();
+        assert!(blocked.join().unwrap().is_err(), "blocked send must fail fast");
+        assert!(rx.recv_flit().is_none(), "force-close discards queued flits");
+    }
+
+    #[test]
+    fn inbox_try_recv_is_nonblocking() {
+        let (tx, mut rx) = SessionInbox::bounded(4);
+        assert!(rx.try_recv_flit().is_none());
+        tx.send(flit(7)).unwrap();
+        assert_eq!(rx.try_recv_flit().unwrap().seq, 7);
+        drop(tx);
+        assert!(rx.recv_flit().is_none(), "producer hang-up ends the stream");
+    }
+
+    #[test]
+    fn session_scores_match_standalone_detector() {
+        let cfg = tiny_cfg(8, DetectorKind::Loda, 3);
+        let data = gaussian_data(40, 3, 11);
+        let server = FabricServer::start(cfg.clone()).unwrap();
+        let mut session =
+            server.open(SessionSpec::new(3, data[..16 * 3].to_vec()).on_pblock(1)).unwrap();
+        // Irregular pushes: re-chunking must not change the arithmetic.
+        session.push(&data[..7 * 3]).unwrap();
+        session.push(&data[7 * 3..29 * 3]).unwrap();
+        session.push(&data[29 * 3..]).unwrap();
+        let closed = session.close().unwrap();
+        assert_eq!(closed.samples, 40);
+        assert_eq!(closed.scores.len(), 40);
+        let mut spec = DetectorSpec::new(DetectorKind::Loda, 3, 3, pblock_seed(cfg.seed, 1));
+        spec.window = cfg.hyper.window;
+        spec.bins = cfg.hyper.bins;
+        let mut det = spec.build(&data[..16 * 3]);
+        let expect = det.run_stream(&data);
+        assert_eq!(closed.scores, expect, "session scores must be bit-identical");
+    }
+
+    #[test]
+    fn close_mid_chunk_reports_padded_tail() {
+        let cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        let data = gaussian_data(13, 2, 3);
+        let server = FabricServer::start(cfg).unwrap();
+        let mut s = server.open(SessionSpec::new(2, data[..8 * 2].to_vec())).unwrap();
+        s.push(&data).unwrap(); // 13 samples, chunk 8 → 1 full flit + 5 staged
+        let closed = s.close().unwrap();
+        assert!(closed.padded_tail, "mid-chunk close must be reported");
+        assert_eq!(closed.tail_valid, 5);
+        assert_eq!(closed.samples, 13);
+        assert_eq!(closed.scores.len(), 13, "padding rows never score");
+        assert_eq!(closed.flits, 2);
+    }
+
+    #[test]
+    fn close_on_chunk_boundary_has_no_padding() {
+        let cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        let data = gaussian_data(16, 2, 4);
+        let server = FabricServer::start(cfg).unwrap();
+        let mut s = server.open(SessionSpec::new(2, data.clone())).unwrap();
+        s.push(&data).unwrap();
+        let closed = s.close().unwrap();
+        assert!(!closed.padded_tail);
+        assert_eq!(closed.tail_valid, 0);
+        assert_eq!(closed.scores.len(), 16);
+    }
+
+    #[test]
+    fn admission_refuses_when_queue_is_full() {
+        let mut cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        cfg.server.max_waiters = 0;
+        let data = gaussian_data(8, 2, 5);
+        let server = FabricServer::start(cfg).unwrap();
+        let _busy = server.open(SessionSpec::new(2, data.clone())).unwrap();
+        // The one partition is busy and nobody may queue.
+        let err = server.open(SessionSpec::new(2, data.clone())).unwrap_err();
+        assert!(err.to_string().contains("admission queue"), "{err}");
+        assert!(server.try_open(SessionSpec::new(2, data)).unwrap().is_none());
+    }
+
+    #[test]
+    fn shutdown_with_open_session_does_not_deadlock() {
+        let cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        let data = gaussian_data(24, 2, 6);
+        let server = FabricServer::start(cfg).unwrap();
+        let mut s = server.open(SessionSpec::new(2, data[..16].to_vec())).unwrap();
+        s.push(&data[..16 * 2]).unwrap();
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.sessions_served, 1, "forced episode still completes");
+        // The abandoned client fails fast instead of hanging: the next full
+        // chunk hits the force-closed inbox.
+        assert!(s.push(&data[..8 * 2]).is_err());
+    }
+
+    #[test]
+    fn dropped_session_frees_the_partition() {
+        let cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        let data = gaussian_data(8, 2, 7);
+        let server = FabricServer::start(cfg).unwrap();
+        {
+            let mut s = server.open(SessionSpec::new(2, data.clone())).unwrap();
+            s.push(&data).unwrap();
+            // Dropped without close(): the worker finishes and frees RP-1.
+        }
+        let mut s = server.open(SessionSpec::new(2, data.clone())).unwrap();
+        s.push(&data).unwrap();
+        let closed = s.close().unwrap();
+        assert_eq!(closed.scores.len(), 8);
+        assert_eq!(server.sessions_served(), 2);
+    }
+
+    #[test]
+    fn swap_needs_an_active_session() {
+        let cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        let server = FabricServer::start(cfg).unwrap();
+        let err = server
+            .schedule_swap(1, 2, RmKind::Detector(DetectorKind::RsHash), 2, Some(1))
+            .unwrap_err();
+        assert!(err.to_string().contains("no active session"), "{err}");
+        server.decoupler(1).unwrap().set_enabled(false);
+        let err = server
+            .schedule_swap(1, 2, RmKind::Detector(DetectorKind::RsHash), 2, Some(1))
+            .unwrap_err();
+        assert!(err.to_string().contains("decoupler is disabled"), "{err}");
+    }
+}

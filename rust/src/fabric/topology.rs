@@ -144,7 +144,7 @@ impl Fabric {
             None => bail!("pblock {id}: stream {stream} does not exist"),
         };
         let fpga = self.runtime.as_ref().map(|rt| (rt.handle(), rt.registry().clone()));
-        let seed = self.cfg.seed.wrapping_add(id as u64 * 1009);
+        let seed = pblock_seed(self.cfg.seed, id);
         let report = self.dfx.reconfigure(
             &mut self.pblocks[id - 1],
             rm,
@@ -209,7 +209,7 @@ impl Fabric {
             .get(pcfg.stream)
             .with_context(|| format!("pblock {id}: stream {} does not exist", pcfg.stream))?;
         let fpga = self.runtime.as_ref().map(|rt| (rt.handle(), rt.registry().clone()));
-        let seed = self.cfg.seed.wrapping_add(id as u64 * 1009);
+        let seed = pblock_seed(self.cfg.seed, id);
         let swap = self.dfx.stage(
             id,
             rm,
@@ -481,7 +481,7 @@ impl Fabric {
                     kind,
                     d: ds.d,
                     warmup: ds.warmup(cfg.hyper.window).to_vec(),
-                    seed: cfg.seed.wrapping_add(p.id as u64 * 1009),
+                    seed: pblock_seed(cfg.seed, p.id),
                 });
             }
             let env = ControllerEnv {
@@ -605,4 +605,12 @@ pub fn kind_of(rm: RmKind) -> Option<DetectorKind> {
         RmKind::Detector(k) => Some(k),
         _ => None,
     }
+}
+
+/// Per-pblock parameter seed. One formula shared by the one-shot fabric and
+/// the session server ([`crate::fabric::server`]), so a server session on
+/// pblock `id` builds bit-identical detector parameters to a `Fabric::run`
+/// pass — the foundation of the server-vs-fabric parity tests.
+pub fn pblock_seed(base: u64, id: usize) -> u64 {
+    base.wrapping_add(id as u64 * 1009)
 }

@@ -1,5 +1,6 @@
 //! fSEAD CLI — the leader entrypoint. Subcommands are filled in by the
-//! experiment harness (`fsead exp …`), the runner (`fsead run …`) and the
+//! experiment harness (`fsead exp …`), the one-shot runner (`fsead run …`),
+//! the persistent streaming session server (`fsead serve …`) and the
 //! resource/reconfiguration inspectors.
 
 fn main() {

@@ -36,6 +36,11 @@ pub struct RuntimeStats {
     pub executions: u64,
     pub execute_secs: f64,
     pub samples: u64,
+    /// Detector instances currently resident on the device — a gauge, not a
+    /// counter. `LoadedRm` unloads its instance on drop, so under the
+    /// session server this stays bounded by the partition count; a steadily
+    /// growing value means leaked instances.
+    pub instances: u64,
 }
 
 enum Job {
@@ -252,7 +257,9 @@ fn service_main(registry: Registry, rx: Receiver<Job>) {
         match job {
             Job::Shutdown => break,
             Job::Stats { reply } => {
-                let _ = reply.send(svc.stats.clone());
+                let mut stats = svc.stats.clone();
+                stats.instances = svc.instances.len() as u64;
+                let _ = reply.send(stats);
             }
             Job::LoadDetector { meta, params, reply } => {
                 let _ = reply.send(svc.load_detector(&meta, *params));

@@ -1,0 +1,141 @@
+//! Golden-vector regression tests: the three detectors' scores on a fixed
+//! seeded stream are pinned against checked-in fixtures, so any arithmetic
+//! drift — a reordered accumulation, a changed clamp, a hoisted expression
+//! that alters rounding — is caught at the 1e-6 level, independently of the
+//! batched-vs-sequential parity proptests (which would both drift together
+//! if the shared arithmetic changed).
+//!
+//! The fixtures live in `tests/fixtures/golden_<kind>.txt` and were
+//! produced by `python/tools/gen_golden_vectors.py`, a bit-level port of
+//! the rust detectors validated against the Jenkins golden vectors and an
+//! independent f64 reference implementation. To regenerate after an
+//! *intentional* arithmetic change:
+//!
+//! ```sh
+//! FSEAD_BLESS_GOLDEN=1 cargo test --test golden_vectors
+//! # or: python3 python/tools/gen_golden_vectors.py tests/fixtures
+//! ```
+
+use fsead::detectors::prng::Prng;
+use fsead::detectors::{DetectorKind, DetectorSpec};
+
+/// Must mirror python/tools/gen_golden_vectors.py exactly.
+const STREAM_SEED: u64 = 20240601;
+const N: usize = 64;
+const D: usize = 3;
+const WARMUP_SAMPLES: usize = 16;
+const WINDOW: usize = 16;
+const BINS: usize = 8;
+const W: usize = 2;
+const MODULUS: usize = 32;
+const K: usize = 4;
+const R: usize = 4;
+const DET_SEED: u64 = 7;
+
+fn fixture_stream() -> Vec<f32> {
+    let mut p = Prng::new(STREAM_SEED);
+    (0..N * D).map(|_| p.gaussian() as f32).collect()
+}
+
+fn spec_for(kind: DetectorKind) -> DetectorSpec {
+    let mut spec = DetectorSpec::new(kind, D, R, DET_SEED);
+    spec.window = WINDOW;
+    spec.bins = BINS;
+    spec.w = W;
+    spec.modulus = MODULUS;
+    spec.k = K;
+    spec
+}
+
+fn fixture_path(kind: DetectorKind) -> String {
+    format!("tests/fixtures/golden_{}.txt", kind.as_str())
+}
+
+fn load_fixture(kind: DetectorKind) -> Vec<f32> {
+    let path = fixture_path(kind);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {path}: {e} (run the bless command in the header)"));
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(|l| l.parse::<f32>().unwrap_or_else(|e| panic!("{path}: bad score {l:?}: {e}")))
+        .collect()
+}
+
+fn bless(kind: DetectorKind, scores: &[f32]) {
+    let path = fixture_path(kind);
+    let mut out = format!(
+        "# golden scores: {} r={R} d={D} seed={DET_SEED} window={WINDOW}\n\
+         # stream: {N} samples, Prng({STREAM_SEED}) unit gaussians, warmup={WARMUP_SAMPLES}\n",
+        kind.as_str()
+    );
+    for s in scores {
+        out.push_str(&format!("{s}\n"));
+    }
+    std::fs::write(&path, out).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+    eprintln!("blessed {path}");
+}
+
+/// |got − want| ≤ 1e-6 · max(1, |want|): catches drift at the 1e-6 level
+/// while absorbing sub-ulp libm differences across platforms.
+fn assert_close(kind: DetectorKind, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{kind:?}: fixture length");
+    let mut worst = 0f64;
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = 1e-6 * f64::from(w.abs()).max(1.0);
+        let diff = (f64::from(g) - f64::from(w)).abs();
+        worst = worst.max(diff);
+        assert!(
+            diff <= tol,
+            "{kind:?}: sample {i} drifted: got {g}, fixture {w} (|diff| = {diff:.3e})"
+        );
+    }
+    eprintln!("{kind:?}: max |score − fixture| = {worst:.3e}");
+}
+
+fn run_golden(kind: DetectorKind) {
+    let data = fixture_stream();
+    let warmup = &data[..WARMUP_SAMPLES * D];
+    let mut det = spec_for(kind).build(warmup);
+    let scores = det.run_stream(&data);
+    assert_eq!(scores.len(), N);
+    assert_eq!(scores[0], 0.0, "{kind:?}: first sample must score 0 (denom=1, count clamp)");
+    if std::env::var("FSEAD_BLESS_GOLDEN").is_ok() {
+        bless(kind, &scores);
+        return;
+    }
+    let want = load_fixture(kind);
+    assert_close(kind, &scores, &want);
+    // The batch fast path must hit the same fixtures bit-for-bit with the
+    // per-sample loop (it is asserted bit-identical to `update` in the
+    // detector unit tests; here it is pinned to the absolute values too).
+    let mut det = spec_for(kind).build(warmup);
+    let mut batched = vec![0f32; N];
+    det.update_batch(&data, &mut batched);
+    assert_eq!(scores, batched, "{kind:?}: update_batch diverged from run_stream");
+    assert_close(kind, &batched, &want);
+}
+
+#[test]
+fn golden_loda() {
+    run_golden(DetectorKind::Loda);
+}
+
+#[test]
+fn golden_rshash() {
+    run_golden(DetectorKind::RsHash);
+}
+
+#[test]
+fn golden_xstream() {
+    run_golden(DetectorKind::XStream);
+}
+
+#[test]
+fn fixtures_are_committed_for_all_kinds() {
+    for kind in DetectorKind::ALL {
+        let fix = load_fixture(kind);
+        assert_eq!(fix.len(), N, "{kind:?}: fixture must hold one score per sample");
+        assert!(fix.iter().all(|s| s.is_finite()), "{kind:?}");
+    }
+}

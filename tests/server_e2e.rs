@@ -1,0 +1,268 @@
+//! Session server end-to-end: the persistent `FabricServer` must reproduce
+//! the one-shot `Fabric::run` data plane bit-for-bit — same detector
+//! parameters (shared per-pblock seed), same chunking (DMA-identical flit
+//! cutting), same service loops — in both execution modes, with and
+//! without mid-session live DFX; and it must survive multi-client session
+//! churn without leaking scores across sessions or deadlocking at
+//! shutdown.
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::data::Dataset;
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::ensemble::ExecMode;
+use fsead::fabric::server::{FabricServer, SessionSpec};
+use fsead::fabric::{pblock_seed, Fabric};
+
+fn tiny(name: &'static str, n: usize, d: usize, seed: u64) -> Dataset {
+    let p = DatasetProfile { name, n, d, outliers: n / 20, clusters: 2 };
+    generate_profile(&p, seed)
+}
+
+fn cpu_cfg(exec: ExecMode, chunk: usize) -> FseadConfig {
+    FseadConfig { use_fpga: false, chunk, exec, ..FseadConfig::default() }
+}
+
+/// Standalone reference: the detector a fabric pblock builds (same seed,
+/// same hyper-parameters, same warm-up recipe) run over the whole stream.
+fn standalone_scores(
+    cfg: &FseadConfig,
+    kind: DetectorKind,
+    r: usize,
+    pblock: usize,
+    ds: &Dataset,
+) -> Vec<f32> {
+    let mut spec = DetectorSpec::new(kind, ds.d, r, pblock_seed(cfg.seed, pblock));
+    spec.window = cfg.hyper.window;
+    spec.bins = cfg.hyper.bins;
+    spec.w = cfg.hyper.w;
+    spec.modulus = cfg.hyper.modulus;
+    spec.k = cfg.hyper.k;
+    let mut det = spec.build(ds.warmup(cfg.hyper.window));
+    det.run_stream(&ds.data)
+}
+
+#[test]
+fn session_scores_are_bit_identical_to_fabric_run() {
+    // Three heterogeneous partitions; the same 150-sample stream pushed
+    // through server sessions in irregular client-sized chunks must score
+    // bit-identically to one Fabric::run pass — in both execution modes.
+    let kinds = [DetectorKind::Loda, DetectorKind::RsHash, DetectorKind::XStream];
+    let ds = tiny("parity", 150, 3, 41);
+    for exec in ExecMode::ALL {
+        let mut cfg = cpu_cfg(exec, 16);
+        for (i, k) in kinds.iter().enumerate() {
+            cfg.pblocks.push(PblockCfg { id: i + 1, rm: RmKind::Detector(*k), r: 2, stream: 0 });
+        }
+        let mut fabric = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap();
+        let fabric_out = fabric.run().unwrap();
+
+        let server = FabricServer::start(cfg.clone()).unwrap();
+        for id in 1..=3usize {
+            let mut session = server
+                .open(SessionSpec::for_dataset(&ds, cfg.hyper.window).on_pblock(id))
+                .unwrap();
+            // Client-sized pushes deliberately misaligned with the flit
+            // chunk: 7 samples, 40, 80, remainder.
+            let cuts = [0usize, 7, 47, 127, 150];
+            for w in cuts.windows(2) {
+                session.push(&ds.data[w[0] * ds.d..w[1] * ds.d]).unwrap();
+            }
+            let closed = session.close().unwrap();
+            // 150 = 9×16 + 6: the close cuts mid-chunk and reports it.
+            assert!(closed.padded_tail, "{exec:?}");
+            assert_eq!(closed.tail_valid, 6, "{exec:?}");
+            assert_eq!(
+                closed.scores, fabric_out.pblock_scores[&id],
+                "{exec:?}: pblock {id} session scores drifted from Fabric::run"
+            );
+            assert_eq!(closed.report.samples, 150, "{exec:?}");
+        }
+        server.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn mid_session_swap_is_bit_identical_to_fabric_swap() {
+    // Live DFX during a session: pblock 1 hot-swaps Loda → xStream at flit
+    // 4 with a 2-flit dark window while pblock 2 keeps streaming. Both the
+    // swapped partition (prefix, dark zeros, fresh-detector suffix) and the
+    // untouched one must match the equivalent Fabric::run with the same
+    // scheduled swap — bit-for-bit, in both execution modes.
+    let ds = tiny("hotswap", 150, 3, 33);
+    for exec in ExecMode::ALL {
+        let mut cfg = cpu_cfg(exec, 16);
+        for id in 1..=2usize {
+            cfg.pblocks.push(PblockCfg {
+                id,
+                rm: RmKind::Detector(DetectorKind::Loda),
+                r: 2,
+                stream: 0,
+            });
+        }
+        let mut fabric = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap();
+        fabric.schedule_swap(1, 4, RmKind::Detector(DetectorKind::XStream), 2, Some(2)).unwrap();
+        let fabric_out = fabric.run().unwrap();
+        assert_eq!(fabric_out.swap_events.len(), 1);
+
+        let server = FabricServer::start(cfg.clone()).unwrap();
+        let mut s1 =
+            server.open(SessionSpec::for_dataset(&ds, cfg.hyper.window).on_pblock(1)).unwrap();
+        let mut s2 =
+            server.open(SessionSpec::for_dataset(&ds, cfg.hyper.window).on_pblock(2)).unwrap();
+        // Arm the swap before any data flows so it fires at the same flit
+        // index as the fabric's scripted run.
+        let (model_ms, dark) = server
+            .schedule_swap(1, 4, RmKind::Detector(DetectorKind::XStream), 2, Some(2))
+            .unwrap();
+        assert_eq!(dark, 2);
+        assert!(model_ms > 570.0 && model_ms < 640.0, "{model_ms}");
+        s1.push(&ds.data).unwrap();
+        s2.push(&ds.data).unwrap();
+        let c1 = s1.close().unwrap();
+        let c2 = s2.close().unwrap();
+
+        assert_eq!(
+            c2.scores, fabric_out.pblock_scores[&2],
+            "{exec:?}: untouched partition must not see the swap"
+        );
+        assert!(c2.swap_events.is_empty(), "{exec:?}");
+        let got = &c1.scores;
+        let want = &fabric_out.pblock_scores[&1];
+        assert_eq!(got.len(), 150, "{exec:?}: bypass policy keeps the framing");
+        assert_eq!(got, want, "{exec:?}: swapped partition drifted from Fabric::run");
+        // Dark window sanity: samples 64..96 are zero-score placeholders.
+        assert!(got[64..96].iter().all(|&v| v == 0.0), "{exec:?}");
+        assert_eq!(c1.swap_events.len(), 1, "{exec:?}");
+        let ev = &c1.swap_events[0];
+        assert_eq!((ev.pblock, ev.at_flit, ev.dark_flits, ev.bypassed), (1, 4, 2, 2));
+        assert!(ev.dark_complete);
+        assert!(ev.from.contains("loda") && ev.to.contains("xstream"), "{} {}", ev.from, ev.to);
+        server.shutdown().unwrap();
+    }
+}
+
+#[test]
+fn scripted_config_swap_fires_on_first_session_only() {
+    // A [fabric.dfx.swap.N] schedule arms the partition's first session —
+    // mirroring Fabric::new arming the first run — and is consumed: the
+    // second session on the same partition rebuilds the *configured* RM and
+    // streams clean (sessions are independent episodes; swap effects never
+    // leak forward).
+    let text = r#"
+[fabric]
+use_fpga = false
+chunk = 16
+
+[pblock.1]
+rm = "loda"
+r = 2
+stream = 0
+
+[fabric.dfx.swap.1]
+pblock = 1
+at_flit = 3
+rm = "rshash"
+r = 2
+dark_flits = 1
+"#;
+    let cfg = FseadConfig::from_str(text).unwrap();
+    let ds = tiny("scripted", 120, 3, 17);
+    let fabric_out = {
+        let mut fabric = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap();
+        fabric.run().unwrap()
+    };
+    let server = FabricServer::start(cfg.clone()).unwrap();
+    // First session: the scripted swap executes mid-stream.
+    let mut s = server.open(SessionSpec::for_dataset(&ds, cfg.hyper.window)).unwrap();
+    s.push(&ds.data).unwrap();
+    let first = s.close().unwrap();
+    assert_eq!(first.swap_events.len(), 1);
+    assert!(first.swap_events[0].to.contains("rshash"));
+    assert_eq!(first.scores, fabric_out.pblock_scores[&1], "scripted swap parity");
+    // Second session: clean stream through the configured Loda RM.
+    let mut s = server.open(SessionSpec::for_dataset(&ds, cfg.hyper.window)).unwrap();
+    s.push(&ds.data).unwrap();
+    let second = s.close().unwrap();
+    assert!(second.swap_events.is_empty(), "schedule must be consumed");
+    let expect = standalone_scores(&cfg, DetectorKind::Loda, 2, 1, &ds);
+    assert_eq!(second.scores, expect, "swap effects must not leak into later sessions");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn interleaved_session_churn_has_no_leakage_and_shutdown_is_clean() {
+    // Four partitions, six client threads churning open/push/close while a
+    // long-lived session on partition 4 outlives all of them. Every session
+    // must score exactly as the standalone detector seeded for whichever
+    // partition served it — any cross-session state leak (stale window
+    // contents, another stream's scores) breaks bit-equality. Finally the
+    // server shuts down with two sessions still open, without deadlock.
+    let mut cfg = cpu_cfg(ExecMode::Batched, 16);
+    for id in 1..=4usize {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 2,
+            stream: 0,
+        });
+    }
+    let server = FabricServer::start(cfg.clone()).unwrap();
+
+    // Long-lived session pinned to partition 4, first half pushed now.
+    let long_ds = tiny("long", 128, 3, 900);
+    let mut long_session = server
+        .open(SessionSpec::for_dataset(&long_ds, cfg.hyper.window).on_pblock(4))
+        .unwrap();
+    long_session.push(&long_ds.data[..64 * 3]).unwrap();
+
+    let cfg_ref = &cfg;
+    let server_ref = &server;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for client in 0..6usize {
+            handles.push(scope.spawn(move || {
+                for round in 0..3usize {
+                    let ds = tiny("churn", 64 + 16 * round, 3, (client * 31 + round) as u64);
+                    let mut session = server_ref
+                        .open(SessionSpec::for_dataset(&ds, cfg_ref.hyper.window))
+                        .unwrap();
+                    assert_ne!(session.pblock(), 4, "partition 4 is held by the long session");
+                    let pblock = session.pblock();
+                    // Push in two uneven blocks with a poll in between.
+                    let cut = ds.n() / 3 * ds.d;
+                    session.push(&ds.data[..cut]).unwrap();
+                    let mut scores = session.poll_scores();
+                    session.push(&ds.data[cut..]).unwrap();
+                    let closed = session.close().unwrap();
+                    scores.extend(closed.scores);
+                    let expect =
+                        standalone_scores(cfg_ref, DetectorKind::Loda, 2, pblock, &ds);
+                    assert_eq!(scores, expect, "client {client} round {round} (RP-{pblock})");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // The long session survived the churn: finish and verify end to end.
+    long_session.push(&long_ds.data[64 * 3..]).unwrap();
+    let closed = long_session.close().unwrap();
+    assert_eq!(closed.samples, 128);
+    let expect = standalone_scores(&cfg, DetectorKind::Loda, 2, 4, &long_ds);
+    assert_eq!(closed.scores, expect, "long-lived session drifted");
+
+    // Shutdown with sessions still open on two partitions: no deadlock,
+    // the forced episodes complete, later pushes fail fast.
+    let open_ds = tiny("open", 64, 3, 901);
+    let mut open_a = server.open(SessionSpec::for_dataset(&open_ds, cfg.hyper.window)).unwrap();
+    let mut open_b = server.open(SessionSpec::for_dataset(&open_ds, cfg.hyper.window)).unwrap();
+    open_a.push(&open_ds.data[..32 * 3]).unwrap();
+    open_b.push(&open_ds.data[..16 * 3]).unwrap();
+    let report = server.shutdown().unwrap();
+    // 6 clients × 3 rounds + the long session + two force-closed ones.
+    assert_eq!(report.sessions_served, 21);
+    assert!(open_a.push(&open_ds.data[..16 * 3]).is_err(), "push after shutdown must fail");
+}
