@@ -36,6 +36,7 @@ fn main() {
                         rm: RmKind::Detector(kind),
                         r: kind.pblock_r(),
                         stream: 0,
+                        lanes: 0,
                     });
                 }
                 let mut fabric = Fabric::new(cfg, vec![ds.clone()]).unwrap();

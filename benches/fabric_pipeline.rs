@@ -37,6 +37,7 @@ fn topology(exec: ExecMode, combo: bool, chunk: usize) -> FseadConfig {
             rm: RmKind::Detector(DetectorKind::Loda),
             r: 2,
             stream: 0,
+            lanes: 0,
         });
     }
     if combo {

@@ -1,0 +1,122 @@
+//! Bench: multi-lane pblock throughput — samples/sec for one detector
+//! partition at lanes ∈ {1, 2, 4}, in both drain modes, for all three
+//! detectors (paper §4 / Fig 9: "multiple instances can be placed within a
+//! pblock to improve performance").
+//!
+//! The topology is a single pblock with R = 16 sub-detectors on one
+//! synthetic stream, so the measurement isolates what lanes buy: the
+//! partition's ensemble scored by 1, 2 or 4 resident lane workers instead
+//! of one service thread. On a single-core host the lane counts converge —
+//! the bench still gates parity and records the numbers.
+//!
+//! **Parity gate** (runs before any timing): for every detector × mode,
+//! `lanes > 1` scores must stay within 1e-5 of the `lanes = 1` stream —
+//! the established partition tolerance (lanes only reorder the f32
+//! ensemble-mean summation).
+//!
+//! Emits `BENCH_lanes.json` (seconds + samples/sec per detector × mode ×
+//! lane count, plus lane-4 speed-ups) for the perf trajectory; the
+//! acceptance bar on multi-core hosts is lanes=4 ≥ 2× lanes=1 samples/sec
+//! on this workload.
+
+mod bench_util;
+use bench_util::{cap, Bench};
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::ExecMode;
+use fsead::fabric::Fabric;
+
+/// Sub-detectors in the partition (divisible by every lane count).
+const R: usize = 16;
+const LANES: [usize; 3] = [1, 2, 4];
+
+fn topology(kind: DetectorKind, exec: ExecMode, lanes: usize) -> FseadConfig {
+    let mut cfg = FseadConfig::default();
+    cfg.use_fpga = false;
+    cfg.exec = exec;
+    cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Detector(kind), r: R, stream: 0, lanes });
+    cfg
+}
+
+fn main() {
+    let bench = Bench::new("lane_scaling");
+    let n = cap();
+    let p = DatasetProfile { name: "lanes", n, d: 8, outliers: n / 100, clusters: 3 };
+    let ds = generate_profile(&p, 42);
+    let n = ds.n();
+
+    let mut rows: Vec<(&str, &str, usize, f64)> = Vec::new();
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for kind in DetectorKind::ALL {
+        for mode in ExecMode::ALL {
+            let mut base_scores: Vec<f32> = Vec::new();
+            let mut secs = Vec::new();
+            for lanes in LANES {
+                let mut fabric =
+                    Fabric::new(topology(kind, mode, lanes), vec![ds.clone()]).unwrap();
+                // Parity gate before timing: lanes must not change scores
+                // beyond the 1e-5 partition tolerance.
+                let scores = fabric.run().unwrap().pblock_scores[&1].clone();
+                if lanes == 1 {
+                    base_scores = scores;
+                } else {
+                    assert_eq!(scores.len(), base_scores.len());
+                    for (i, (a, b)) in base_scores.iter().zip(&scores).enumerate() {
+                        let tol = 1e-5 * a.abs().max(b.abs()).max(1.0);
+                        assert!(
+                            (a - b).abs() <= tol,
+                            "parity gate: {}/{}/lanes{} sample {i}: {a} vs {b}",
+                            kind.as_str(),
+                            mode.as_str(),
+                            lanes
+                        );
+                    }
+                }
+                let t = bench.run(
+                    &format!("{}/{}/lanes{}", kind.as_str(), mode.as_str(), lanes),
+                    || {
+                        fabric.reset_all().unwrap();
+                        let out = fabric.run().unwrap();
+                        assert_eq!(out.pblock_scores[&1].len(), n);
+                    },
+                );
+                secs.push(t);
+                rows.push((kind.as_str(), mode.as_str(), lanes, t));
+            }
+            let sp = secs[0] / secs[LANES.len() - 1];
+            println!(
+                "  -> {}/{}: lanes=4 {:.2}x vs lanes=1 ({:.0} samples/s)",
+                kind.as_str(),
+                mode.as_str(),
+                sp,
+                n as f64 / secs[LANES.len() - 1]
+            );
+            speedups.push((format!("{}/{}", kind.as_str(), mode.as_str()), sp));
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"lane_scaling\",\n");
+    json.push_str(&format!("  \"n\": {n},\n  \"d\": {},\n  \"r\": {R},\n  \"rows\": [\n", ds.d));
+    for (i, (kind, mode, lanes, secs)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"detector\": \"{kind}\", \"mode\": \"{mode}\", \"lanes\": {lanes}, \
+             \"seconds\": {secs:.6}, \"samples_per_sec\": {:.1}}}{}\n",
+            n as f64 / secs,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n  \"lane4_speedup\": {\n");
+    for (i, (key, sp)) in speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{key}\": {sp:.3}{}\n",
+            if i + 1 < speedups.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
+    match std::fs::write("BENCH_lanes.json", &json) {
+        Ok(()) => println!("wrote BENCH_lanes.json"),
+        Err(e) => eprintln!("could not write BENCH_lanes.json: {e}"),
+    }
+}

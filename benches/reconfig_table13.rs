@@ -17,8 +17,19 @@ fn main() {
     for kind in DetectorKind::ALL {
         let mut pb = Pblock::new(1);
         b.run(&format!("swap-cpu/{}", kind.as_str()), || {
-            mgr.reconfigure(&mut pb, RmKind::Detector(kind), 8, 3, 1, &hyper, &warmup, None, false)
-                .unwrap();
+            mgr.reconfigure(
+                &mut pb,
+                RmKind::Detector(kind),
+                8,
+                3,
+                1,
+                &hyper,
+                &warmup,
+                None,
+                false,
+                1,
+            )
+            .unwrap();
         });
     }
     if std::path::Path::new("artifacts/manifest.txt").exists() {

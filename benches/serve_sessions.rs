@@ -29,6 +29,7 @@ fn topology(exec: ExecMode) -> FseadConfig {
             rm: RmKind::Detector(DetectorKind::Loda),
             r: 2,
             stream: 0,
+            lanes: 0,
         });
     }
     cfg

@@ -49,7 +49,13 @@ fn main() -> Result<()> {
     let kinds = [DetectorKind::Loda, DetectorKind::RsHash, DetectorKind::XStream];
     for id in 1..=7usize {
         let kind = kinds[(id - 1) % 3];
-        cfg.pblocks.push(PblockCfg { id, rm: RmKind::Detector(kind), r: kind.pblock_r(), stream: id - 1 });
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(kind),
+            r: kind.pblock_r(),
+            stream: id - 1,
+            lanes: 0,
+        });
     }
     // Adaptive live DFX: watch every pblock's score stream; on drift, swap
     // the drifting pblock to the next pool detector while the fabric keeps

@@ -34,6 +34,7 @@ fn main() -> Result<()> {
         rm: RmKind::Detector(DetectorKind::Loda),
         r: DetectorKind::Loda.pblock_r(), // 35 sub-detectors (paper Table 7)
         stream: 0,
+        lanes: 0,
     });
     println!("fabric: 1 pblock, loda r=35, fpga={}", cfg.use_fpga);
 

@@ -98,6 +98,7 @@ fn main() -> Result<()> {
             rm: RmKind::Detector(DetectorKind::Loda),
             r: 8,
             stream: 0,
+            lanes: 0,
         });
     }
     let live_stream = Dataset::load("cardio", 1, None).unwrap();

@@ -25,7 +25,13 @@ fn main() -> Result<()> {
     };
     let kinds = [DetectorKind::Loda, DetectorKind::RsHash, DetectorKind::XStream];
     for (i, kind) in kinds.iter().enumerate() {
-        cfg.pblocks.push(PblockCfg { id: i + 1, rm: RmKind::Detector(*kind), r: 8, stream: 0 });
+        cfg.pblocks.push(PblockCfg {
+            id: i + 1,
+            rm: RmKind::Detector(*kind),
+            r: 8,
+            stream: 0,
+            lanes: 0,
+        });
     }
     let window = cfg.hyper.window;
     let server = FabricServer::start(cfg)?;

@@ -194,6 +194,12 @@ pub struct PblockCfg {
     pub r: usize,
     /// Which input stream (DMA channel) feeds this pblock.
     pub stream: usize,
+    /// Detector instances placed in this partition (paper §4 "multiple
+    /// instances can be placed within a pblock"): the RM becomes `lanes`
+    /// sub-detector slices scored by resident lane workers. `0` inherits
+    /// the `[fabric] lanes` default; the effective count is clamped to the
+    /// RM's ensemble size. CPU-native detector RMs only.
+    pub lanes: usize,
 }
 
 /// One combo-pblock assignment.
@@ -232,6 +238,11 @@ pub struct FseadConfig {
     /// production fast path — default) or `LockStep` (paper-faithful
     /// per-flit loop). TOML: `exec = "batched" | "lockstep"` in `[fabric]`.
     pub exec: ExecMode,
+    /// Default lane count per pblock partition (intra-partition instance
+    /// parallelism). `1` = the single-lane data plane. Overridable per
+    /// pblock via `PblockCfg::lanes` / `[pblock.N] lanes`, and from the CLI
+    /// with `fsead --lanes`. TOML: `lanes = N` in `[fabric]`.
+    pub lanes: usize,
     pub hyper: DetectorHyper,
     pub dataset: DatasetCfg,
     pub pblocks: Vec<PblockCfg>,
@@ -251,6 +262,7 @@ impl Default for FseadConfig {
             artifact_dir: "artifacts".to_string(),
             use_fpga: true,
             exec: ExecMode::Batched,
+            lanes: 1,
             hyper: DetectorHyper::default(),
             dataset: DatasetCfg { name: "cardio".into(), data_dir: None, max_samples: 0 },
             pblocks: vec![],
@@ -289,6 +301,12 @@ impl FseadConfig {
         if let Some(v) = doc.get_str("fabric", "exec") {
             cfg.exec = ExecMode::parse(v)
                 .with_context(|| format!("[fabric]: unknown exec mode {v:?}"))?;
+        }
+        if let Some(v) = doc.get_int("fabric", "lanes") {
+            if v <= 0 {
+                bail!("[fabric]: lanes must be >= 1 (got {v})");
+            }
+            cfg.lanes = v as usize;
         }
         if let Some(v) = doc.get_int("detector", "window") {
             cfg.hyper.window = v as usize;
@@ -403,7 +421,12 @@ impl FseadConfig {
             };
             let r = doc.get_int(name, "r").map(|v| v as usize).unwrap_or(default_r);
             let stream = doc.get_int(name, "stream").map(|v| v as usize).unwrap_or(0);
-            cfg.pblocks.push(PblockCfg { id, rm, r, stream });
+            let lanes = match doc.get_int(name, "lanes") {
+                Some(v) if v <= 0 => bail!("[{name}]: lanes must be >= 1 (got {v})"),
+                Some(v) => v as usize,
+                None => 0, // inherit [fabric] lanes
+            };
+            cfg.pblocks.push(PblockCfg { id, rm, r, stream, lanes });
         }
         cfg.pblocks.sort_by_key(|p| p.id);
         // [combo.N] sections
@@ -468,6 +491,9 @@ impl FseadConfig {
                 bail!("combo {}: wavg needs one weight per input", c.id);
             }
         }
+        if self.lanes == 0 {
+            bail!("[fabric]: lanes must be >= 1");
+        }
         if self.dfx.samples_per_sec <= 0.0 {
             bail!("[fabric.dfx]: samples_per_sec must be > 0");
         }
@@ -517,6 +543,25 @@ impl FseadConfig {
         Ok(())
     }
 
+    /// Configured lane count for a pblock: its own `lanes` when set,
+    /// otherwise the `[fabric] lanes` default (≥ 1 either way). The
+    /// *effective* count is further clamped to the loaded RM's ensemble
+    /// size when the lane array is built.
+    pub fn lanes_for(&self, p: &PblockCfg) -> usize {
+        let lanes = if p.lanes > 0 { p.lanes } else { self.lanes };
+        lanes.max(1)
+    }
+
+    /// Apply a CLI-level lane override (`fsead --lanes`): set the
+    /// `[fabric]` default and clear per-pblock values so the flag really
+    /// applies to every partition.
+    pub fn override_lanes(&mut self, lanes: usize) {
+        self.lanes = lanes;
+        for p in &mut self.pblocks {
+            p.lanes = 0;
+        }
+    }
+
     /// Pblock ids whose outputs are routed straight to the host (not into a
     /// combo) — the switch-1 → output-DMA routes of Fig 7(a).
     pub fn direct_outputs(&self) -> Vec<usize> {
@@ -540,6 +585,7 @@ impl FseadConfig {
                 rm: RmKind::Detector(kind),
                 r: kind.pblock_r(),
                 stream: id - 1,
+                lanes: 0,
             });
         }
         cfg
@@ -554,6 +600,7 @@ impl FseadConfig {
             rm: RmKind::Detector(kind),
             r: kind.pblock_r(),
             stream,
+            lanes: 0,
         };
         cfg.pblocks = vec![
             mk(1, DetectorKind::Loda, 0),
@@ -583,6 +630,7 @@ impl FseadConfig {
                 rm: RmKind::Detector(kind),
                 r: kind.pblock_r(),
                 stream: 0,
+                lanes: 0,
             });
         }
         cfg.combos = vec![
@@ -636,6 +684,7 @@ impl FseadConfig {
                     rm: RmKind::Detector(kind),
                     r: kind.pblock_r(),
                     stream: 0,
+                    lanes: 0,
                 });
                 id += 1;
             }
@@ -860,6 +909,29 @@ r = 2
         assert_eq!(PoolEntry::parse("rshash"), Some(PoolEntry { kind: DetectorKind::RsHash, r: 0 }));
         assert_eq!(PoolEntry::parse("loda:x"), None);
         assert_eq!(PoolEntry::parse("nope"), None);
+    }
+
+    #[test]
+    fn lanes_parse_inherit_and_validate() {
+        // Default: single lane everywhere.
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert_eq!(cfg.lanes, 1);
+        assert!(cfg.pblocks.iter().all(|p| p.lanes == 0));
+        assert!(cfg.pblocks.iter().all(|p| cfg.lanes_for(p) == 1));
+        // [fabric] lanes is the default, [pblock.N] lanes overrides it.
+        let text = "[fabric]\nlanes = 4\n\n[pblock.1]\nrm = \"loda\"\n\n\
+                    [pblock.2]\nrm = \"rshash\"\nlanes = 2\n";
+        let cfg = FseadConfig::from_str(text).unwrap();
+        assert_eq!(cfg.lanes, 4);
+        assert_eq!(cfg.lanes_for(&cfg.pblocks[0]), 4);
+        assert_eq!(cfg.lanes_for(&cfg.pblocks[1]), 2);
+        // Zero / negative lane counts are rejected up front.
+        assert!(FseadConfig::from_str("[fabric]\nlanes = 0\n").is_err());
+        assert!(FseadConfig::from_str("[fabric]\nlanes = -2\n").is_err());
+        assert!(FseadConfig::from_str("[pblock.1]\nrm = \"loda\"\nlanes = 0\n").is_err());
+        let mut bad = FseadConfig::default();
+        bad.lanes = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -48,7 +48,7 @@ impl Detector for Loda {
     fn update(&mut self, x: &[f32]) -> f32 {
         debug_assert_eq!(x.len(), self.params.d);
         let (r, d) = (self.params.r, self.params.d);
-        let denom = self.counts.denom();
+        let dl = self.counts.log2_denom();
         let mut sum = 0f32;
         for ri in 0..r {
             // ③ Projection (sparse dot product)
@@ -61,8 +61,8 @@ impl Detector for Loda {
             let idx = self.bin_index(ri, z);
             self.idx_buf[ri] = idx;
             let c = self.counts.get(ri, idx) as f32;
-            // ⑥ Score
-            sum += denom.log2() - c.max(1.0).log2();
+            // ⑥ Score (log2(denom) cached by the sliding window)
+            sum += dl - c.max(1.0).log2();
         }
         // ⑤ Sliding-window update
         self.counts.insert(&self.idx_buf);
@@ -84,7 +84,7 @@ impl Detector for Loda {
         let binsf = self.bins as f32;
         let bmax = self.bins as i32 - 1;
         for (x, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
-            let dl = self.counts.denom().log2();
+            let dl = self.counts.log2_denom();
             let mut sum = 0f32;
             for ri in 0..r {
                 // ③ Projection (sparse dot product)

@@ -41,7 +41,7 @@ impl Detector for RsHash {
     fn update(&mut self, x: &[f32]) -> f32 {
         debug_assert_eq!(x.len(), self.params.d);
         let (r, d, w) = (self.params.r, self.params.d, self.w);
-        let denom = self.counts.denom();
+        let dl = self.counts.log2_denom();
         let mut sum = 0f32;
         for ri in 0..r {
             // ③ Projection: normalise + integer grid (matches the kernel's
@@ -59,8 +59,8 @@ impl Detector for RsHash {
                 self.idx_buf[ri * w + row] = idx;
                 min_c = min_c.min(self.counts.get(ri * w + row, idx));
             }
-            // ⑥ Score
-            sum += denom.log2() - (1.0 + min_c as f32).log2();
+            // ⑥ Score (log2(denom) cached by the sliding window)
+            sum += dl - (1.0 + min_c as f32).log2();
         }
         // ⑤ Sliding-window update
         self.counts.insert(&self.idx_buf);
@@ -80,7 +80,7 @@ impl Detector for RsHash {
         debug_assert_eq!(xs.len(), out.len() * d);
         let modulus = self.modulus as u32;
         for (x, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
-            let dl = self.counts.denom().log2();
+            let dl = self.counts.log2_denom();
             let mut sum = 0f32;
             for ri in 0..r {
                 // ③ Projection: normalise + integer grid

@@ -16,6 +16,12 @@ pub struct SlidingCounts {
     ring: Vec<i32>,
     pos: usize,
     n: u64,
+    /// Cached `denom().log2()`. The denominator only changes while the
+    /// window is still filling (`n ≤ window`), so the cache is refreshed in
+    /// [`SlidingCounts::advance`] during that phase and then frozen —
+    /// saving a `log2` per sample (previously per sample per sub-detector
+    /// in the detectors' score loops) for the entire steady state.
+    log2_denom: f32,
 }
 
 impl SlidingCounts {
@@ -29,6 +35,7 @@ impl SlidingCounts {
             ring: vec![0; rows * window],
             pos: 0,
             n: 0,
+            log2_denom: 0.0, // log2(denom) with n = 0 ⇒ denom = 1
         }
     }
 
@@ -57,6 +64,14 @@ impl SlidingCounts {
     #[inline]
     pub fn denom(&self) -> f32 {
         (self.n.min(self.window as u64)).max(1) as f32
+    }
+
+    /// Cached `denom().log2()` — bit-identical to recomputing it (same f32
+    /// input, same `log2` call; it is simply memoised across the steady
+    /// state where `denom` no longer changes).
+    #[inline]
+    pub fn log2_denom(&self) -> f32 {
+        self.log2_denom
     }
 
     /// Current count for (row, idx).
@@ -112,6 +127,11 @@ impl SlidingCounts {
             self.pos = 0;
         }
         self.n += 1;
+        // The denominator saturates once the window is full; refresh the
+        // cached log2 only while it can still change.
+        if self.n <= self.window as u64 {
+            self.log2_denom = self.denom().log2();
+        }
     }
 
     /// Reset to the empty state.
@@ -120,6 +140,7 @@ impl SlidingCounts {
         self.ring.fill(0);
         self.pos = 0;
         self.n = 0;
+        self.log2_denom = 0.0;
     }
 
     /// Raw count table (row-major), e.g. for exporting to the PJRT state.
@@ -218,6 +239,21 @@ mod tests {
             assert_eq!(fused.n(), plain.n());
             assert_eq!(fused.denom(), plain.denom());
         }
+    }
+
+    #[test]
+    fn cached_log2_denom_tracks_recomputation() {
+        // Bit-identical to recomputing per sample, through fill, steady
+        // state and reset.
+        let mut sc = SlidingCounts::new(1, 4, 5);
+        assert_eq!(sc.log2_denom(), sc.denom().log2());
+        for i in 0..20 {
+            sc.insert(&[(i % 4) as i32]);
+            assert_eq!(sc.log2_denom(), sc.denom().log2(), "n={}", sc.n());
+        }
+        sc.reset();
+        assert_eq!(sc.log2_denom(), 0.0);
+        assert_eq!(sc.log2_denom(), sc.denom().log2());
     }
 
     #[test]

@@ -18,11 +18,17 @@ pub struct XStream {
     /// Precomputed `[R, w, K]` bin scales (2^(row+1) / width), hoisting a
     /// division per projection dim per row out of the per-sample loop.
     scale: Vec<f32>,
+    /// `params.proj` transposed to `[R, K, d]` row-major so the projection's
+    /// inner dot product walks contiguous memory (the `[R, d, K]` original
+    /// strides by K per dimension, defeating autovectorisation). The
+    /// multiplication order over `d` is unchanged, so scores stay
+    /// bit-identical to the untransposed loop.
+    projt: Vec<f32>,
 }
 
 impl XStream {
     pub fn new(params: XStreamParams, modulus: usize, window: usize) -> Self {
-        let (r, w, k) = (params.r, params.w, params.k);
+        let (r, d, w, k) = (params.r, params.d, params.w, params.k);
         let mut scale = vec![0f32; r * w * k];
         for ri in 0..r {
             for row in 0..w {
@@ -30,6 +36,14 @@ impl XStream {
                 for ki in 0..k {
                     let width = params.width[ri * k + ki].max(1e-12);
                     scale[(ri * w + row) * k + ki] = pow / width;
+                }
+            }
+        }
+        let mut projt = vec![0f32; r * k * d];
+        for ri in 0..r {
+            for di in 0..d {
+                for ki in 0..k {
+                    projt[(ri * k + ki) * d + di] = params.proj[(ri * d + di) * k + ki];
                 }
             }
         }
@@ -42,6 +56,7 @@ impl XStream {
             z_buf: vec![0.0; k],
             key_buf: vec![0; k],
             scale,
+            projt,
         }
     }
 }
@@ -50,14 +65,16 @@ impl Detector for XStream {
     fn update(&mut self, x: &[f32]) -> f32 {
         debug_assert_eq!(x.len(), self.params.d);
         let (r, d, k, w) = (self.params.r, self.params.d, self.params.k, self.params.w);
-        let denom = self.counts.denom();
+        let dl = self.counts.log2_denom();
         let mut sum = 0f32;
         for ri in 0..r {
-            // ③ Projection [d] → [K]
+            // ③ Projection [d] → [K]: contiguous dot products through the
+            //   transposed [R, K, d] matrix (same order over d ⇒ same bits).
             for ki in 0..k {
+                let row = &self.projt[(ri * k + ki) * d..(ri * k + ki + 1) * d];
                 let mut z = 0f32;
-                for di in 0..d {
-                    z += x[di] * self.params.proj[(ri * d + di) * k + ki];
+                for (xi, wi) in x.iter().zip(row) {
+                    z += xi * wi;
                 }
                 self.z_buf[ki] = z;
             }
@@ -76,8 +93,8 @@ impl Detector for XStream {
                 let c = self.counts.get(ri * w + row, idx) as f32;
                 min_weighted = min_weighted.min(c * pow);
             }
-            // ⑥ Score
-            sum += denom.log2() - (1.0 + min_weighted).log2();
+            // ⑥ Score (log2(denom) cached by the sliding window)
+            sum += dl - (1.0 + min_weighted).log2();
         }
         // ⑤ Sliding-window update
         self.counts.insert(&self.idx_buf);
@@ -89,23 +106,26 @@ impl Detector for XStream {
         }
     }
 
-    /// Batch fast path: bit-identical to the `update` loop. log2(denom) is
-    /// computed once per sample (not R times), bin scales come from the
-    /// precomputed table (a division per dim per row in `update`), and the
-    /// per-row CMS get+insert pair is fused.
+    /// Batch fast path: bit-identical to the `update` loop. log2(denom)
+    /// comes from the sliding window's cache (recomputed only while the
+    /// window fills), bin scales come from the precomputed table (a
+    /// division per dim per row in `update`), the projection walks the
+    /// transposed `[R, K, d]` matrix contiguously, and the per-row CMS
+    /// get+insert pair is fused.
     fn update_batch(&mut self, xs: &[f32], out: &mut [f32]) {
         let (r, d, k, w) = (self.params.r, self.params.d, self.params.k, self.params.w);
         debug_assert_eq!(xs.len(), out.len() * d);
         let modulus = self.modulus as u32;
         for (x, o) in xs.chunks_exact(d).zip(out.iter_mut()) {
-            let dl = self.counts.denom().log2();
+            let dl = self.counts.log2_denom();
             let mut sum = 0f32;
             for ri in 0..r {
-                // ③ Projection [d] → [K]
+                // ③ Projection [d] → [K]: contiguous [R, K, d] rows
                 for ki in 0..k {
+                    let row = &self.projt[(ri * k + ki) * d..(ri * k + ki + 1) * d];
                     let mut z = 0f32;
-                    for di in 0..d {
-                        z += x[di] * self.params.proj[(ri * d + di) * k + ki];
+                    for (xi, wi) in x.iter().zip(row) {
+                        z += xi * wi;
                     }
                     self.z_buf[ki] = z;
                 }
@@ -205,6 +225,25 @@ mod tests {
         // Not a strict theorem under hashing, but with 64 buckets / 16 window
         // collisions are rare; the deterministic seed keeps this stable.
         assert!(max_row2 <= max_row1 + 1);
+    }
+
+    #[test]
+    fn transposed_projection_mirrors_params() {
+        // projt is a pure layout change of params.proj: [R, d, K] → [R, K, d].
+        let (det, _) = mk(3, 4, 11);
+        let p = det.params();
+        let (r, d, k) = (p.r, p.d, p.k);
+        for ri in 0..r {
+            for di in 0..d {
+                for ki in 0..k {
+                    assert_eq!(
+                        det.projt[(ri * k + ki) * d + di],
+                        p.proj[(ri * d + di) * k + ki],
+                        "ri={ri} di={di} ki={ki}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,16 +8,25 @@
 //! (each slice owns its own windows), so nothing forces per-sample
 //! synchronisation. This runner exploits that:
 //!
-//! - each worker owns its sub-detector slice **and its own partial-score
+//! - each lane owns its sub-detector slice **and its own partial-score
 //!   vector**, scoring the stream chunk-by-chunk through the detectors'
 //!   hand-optimised [`crate::detectors::Detector::update_batch`] loops;
-//! - no mutex, no barrier — workers never touch shared mutable state;
-//! - partials are merged in a single pass after the scoped join.
+//! - no mutex, no barrier — lanes never touch shared mutable state;
+//! - partials are merged in a single pass after all lanes finish.
+//!
+//! Since the multi-lane pblock work the lane machinery lives in
+//! [`super::lanes`]: this runner builds a [`super::lanes::Lane`] array and
+//! drives it through a [`super::lanes::LanePool`] of resident worker
+//! threads (replacing the per-call `std::thread::scope` spawn pattern) —
+//! the **same** pool/lane/merge code the fabric's multi-lane pblocks keep
+//! alive across bursts and server sessions. The pool input is shared as an
+//! `Arc`, costing this one-shot entry point a single O(n·d) copy of the
+//! dataset per call (amortised against O(n·d·r) scoring work).
 //!
 //! Scores are numerically equivalent to [`super::run_sequential`] within
 //! 1e-4 (the partition changes only the f32 summation order — the same
-//! tolerance `run_threaded` is held to) and the per-thread chunk loop is
-//! bit-identical to that thread's `update` loop.
+//! tolerance `run_threaded` is held to) and the per-lane chunk loop is
+//! bit-identical to that lane's `update` loop.
 //!
 //! The `chunk_size_does_not_change_scores` property below is also what the
 //! fabric's burst data plane leans on: a pblock that drains its inbox and
@@ -26,6 +35,9 @@
 //! scores to the per-flit loop, because chunk boundaries never affect
 //! `update_batch` arithmetic.
 
+use std::sync::Arc;
+
+use super::lanes::{build_lanes, merge_lanes_into, LaneInput, LanePool};
 use crate::data::Dataset;
 use crate::defaults;
 use crate::detectors::DetectorSpec;
@@ -69,44 +81,16 @@ pub fn run_batched_chunked(
         return out;
     }
 
-    // Equal partition of sub-detectors, identical to the lock-step runner.
-    let ranges = super::partition_r(spec.r, threads);
-    let r_total = spec.r as f32;
-
-    let partials: Vec<Vec<f32>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = ranges
-            .iter()
-            .map(|&(lo, hi)| {
-                let mut det = spec.build_slice(warmup, lo, hi);
-                let weight = (hi - lo) as f32 / r_total;
-                scope.spawn(move || {
-                    // Contention-free: this vector is exclusively ours until
-                    // the scoped join hands it back for the merge pass.
-                    let mut part = vec![0f32; n];
-                    let mut i = 0;
-                    while i < n {
-                        let m = chunk.min(n - i);
-                        det.update_batch(&data[i * d..(i + m) * d], &mut part[i..i + m]);
-                        i += m;
-                    }
-                    for v in &mut part {
-                        *v *= weight;
-                    }
-                    part
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-
-    // Single merge pass over all partials — the only cross-thread step.
-    let mut iter = partials.into_iter();
-    let mut out = iter.next().unwrap_or_else(|| vec![0f32; n]);
-    for part in iter {
-        for (o, p) in out.iter_mut().zip(&part) {
-            *o += p;
-        }
-    }
+    // Equal partition of sub-detectors (identical to the lock-step runner,
+    // via `partition_r` inside `build_lanes`), scored by resident lane
+    // workers and merged in one pass — the same machinery the fabric's
+    // multi-lane pblocks run, exercised here in one-shot form.
+    let mut lanes = build_lanes(spec, warmup, threads);
+    let pool = LanePool::new(lanes.len());
+    let input = LaneInput::Rows(Arc::new(data.to_vec()));
+    pool.score(&mut lanes, &input, n, chunk).expect("lane pool failed");
+    let mut out = vec![0f32; n];
+    merge_lanes_into(&lanes, &mut out);
     out
 }
 

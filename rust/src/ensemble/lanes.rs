@@ -1,0 +1,440 @@
+//! Resident lane workers: intra-partition instance parallelism.
+//!
+//! The paper's scalability claim — "multiple instances can be placed within
+//! a pblock to improve performance" (§4, Fig 9) — maps onto this module: a
+//! partition's ensemble is split into **lanes** (sub-detector slices built
+//! with [`DetectorSpec::build_slice`], the same equal partition the CPU
+//! runners use), and a [`LanePool`] of **resident worker threads** scores
+//! all lanes of a burst concurrently. Workers are spawned once per pool —
+//! once per partition in the fabric and the session server, once per call
+//! in [`crate::ensemble::run_batched`] — and stay parked on their job
+//! channels between bursts, so steady-state scoring never pays a thread
+//! spawn (the `std::thread::scope` per-call pattern this replaces).
+//!
+//! # Ownership protocol
+//!
+//! Lane detectors are owned by the caller (a [`Lane`] array inside the
+//! loaded RM), not by the worker threads: each [`LanePool::score`] call
+//! moves every lane's boxed detector and partial-score buffer into a job,
+//! the workers score and hand both back, and the pool restores them before
+//! returning. That keeps RM lifecycle operations — DFX hot-swap (replace
+//! the whole lane array between flits), reset, describe — ordinary moves on
+//! the service thread, while the scoring itself runs in parallel.
+//!
+//! # Arithmetic contract
+//!
+//! Pooled and inline ([`score_inline`]) execution run byte-for-byte the
+//! same per-lane job ([`run_lane_job`]): chunked `update_batch` over the
+//! shared input rows into a private partial vector, scaled by the lane's
+//! ensemble weight `(hi − lo) / r`. [`merge_lanes_into`] then sums the
+//! partials in lane-index order — exactly `run_batched`'s merge pass — so
+//! lane count only changes the f32 summation order (the established 1e-5
+//! partition tolerance) and a single lane is bit-identical to the
+//! unpartitioned ensemble loop.
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::detectors::{Detector, DetectorSpec};
+
+/// Lane worker threads spawned process-wide (telemetry; the residency tests
+/// assert this does not grow per burst or per server session).
+static WORKERS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Total lane worker threads ever spawned in this process.
+pub fn total_workers_spawned() -> u64 {
+    WORKERS_SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Input rows shared by every lane of one scoring call. Both variants are
+/// cheap pointer clones per lane — samples are never copied per lane.
+#[derive(Clone)]
+pub enum LaneInput {
+    /// A flit payload straight off the data plane (per-flit servicing).
+    Flit(Arc<[f32]>),
+    /// Concatenated burst rows; the burst path reclaims the allocation via
+    /// [`Arc::try_unwrap`] once all lanes have dropped their clones.
+    Rows(Arc<Vec<f32>>),
+}
+
+impl LaneInput {
+    #[inline]
+    pub fn rows(&self) -> &[f32] {
+        match self {
+            LaneInput::Flit(a) => a,
+            LaneInput::Rows(v) => v,
+        }
+    }
+}
+
+/// One lane: a sub-detector slice of the partition's ensemble plus its
+/// reusable weighted partial-score buffer.
+pub struct Lane {
+    /// `None` only while the detector is in flight inside a worker.
+    det: Option<Box<dyn Detector>>,
+    /// Ensemble merge weight: `(hi − lo) / r_total` for slice `[lo, hi)`.
+    weight: f32,
+    /// Weighted partial scores of the most recent scoring call.
+    out: Vec<f32>,
+}
+
+impl Lane {
+    pub fn new(det: Box<dyn Detector>, weight: f32) -> Lane {
+        Lane { det: Some(det), weight, out: Vec::new() }
+    }
+
+    pub fn weight(&self) -> f32 {
+        self.weight
+    }
+
+    /// The lane's detector (`None` only mid-flight inside a scoring call).
+    pub fn det_mut(&mut self) -> Option<&mut Box<dyn Detector>> {
+        self.det.as_mut()
+    }
+
+    pub fn det(&self) -> Option<&(dyn Detector)> {
+        self.det.as_deref()
+    }
+}
+
+/// Build the lane array for `spec`: an equal sub-detector partition (shared
+/// with the CPU ensemble runners via `partition_r`) with per-lane merge
+/// weights. `lanes` is clamped to `[1, spec.r]`.
+pub fn build_lanes(spec: &DetectorSpec, warmup: &[f32], lanes: usize) -> Vec<Lane> {
+    let lanes = lanes.clamp(1, spec.r);
+    let r_total = spec.r as f32;
+    crate::ensemble::partition_r(spec.r, lanes)
+        .iter()
+        .map(|&(lo, hi)| Lane::new(spec.build_slice(warmup, lo, hi), (hi - lo) as f32 / r_total))
+        .collect()
+}
+
+/// Score one lane job: chunked `update_batch` over rows `[0, n)` of `data`
+/// into `out`, then scale by the lane weight. This single function is the
+/// arithmetic shared by pooled workers and [`score_inline`], so the two
+/// execution styles are bit-identical by construction.
+fn run_lane_job(
+    det: &mut dyn Detector,
+    data: &[f32],
+    n: usize,
+    chunk: usize,
+    weight: f32,
+    out: &mut Vec<f32>,
+) {
+    let d = det.d();
+    let chunk = chunk.max(1);
+    out.clear();
+    out.resize(n, 0.0);
+    let mut i = 0;
+    while i < n {
+        let m = chunk.min(n - i);
+        det.update_batch(&data[i * d..(i + m) * d], &mut out[i..i + m]);
+        i += m;
+    }
+    if weight != 1.0 {
+        for v in out.iter_mut() {
+            *v *= weight;
+        }
+    }
+}
+
+/// Score every lane sequentially on the calling thread — the poolless
+/// fallback (tests, one-off `LoadedRm::process` calls). Same arithmetic as
+/// the pooled path.
+pub fn score_inline(
+    lanes: &mut [Lane],
+    input: &LaneInput,
+    n: usize,
+    chunk: usize,
+) -> Result<()> {
+    for (li, lane) in lanes.iter_mut().enumerate() {
+        let Some(det) = lane.det.as_mut() else {
+            return Err(lost_lane(li));
+        };
+        let mut out = std::mem::take(&mut lane.out);
+        run_lane_job(det.as_mut(), input.rows(), n, chunk, lane.weight, &mut out);
+        lane.out = out;
+    }
+    Ok(())
+}
+
+/// A lane whose detector never came back from a failed earlier burst: the
+/// RM is unusable and must be rebuilt (session episodes and hot-swaps do
+/// exactly that). Kept an `Err`, never a panic, so a wedged partition
+/// fails its stream instead of aborting the process on the next run.
+fn lost_lane(lane: usize) -> anyhow::Error {
+    anyhow!("lane {lane} lost its detector in a failed earlier burst — the RM must be rebuilt")
+}
+
+/// Merge the weighted lane partials into `out` (`out.len()` rows) in
+/// lane-index order — the same single merge pass as `run_batched`.
+pub fn merge_lanes_into(lanes: &[Lane], out: &mut [f32]) {
+    let n = out.len();
+    match lanes.split_first() {
+        None => out.fill(0.0),
+        Some((first, rest)) => {
+            out.copy_from_slice(&first.out[..n]);
+            for lane in rest {
+                for (o, p) in out.iter_mut().zip(&lane.out[..n]) {
+                    *o += p;
+                }
+            }
+        }
+    }
+}
+
+struct Job {
+    lane: usize,
+    det: Box<dyn Detector>,
+    input: LaneInput,
+    n: usize,
+    chunk: usize,
+    weight: f32,
+    out: Vec<f32>,
+    /// Per-call reply channel: results of one `score` call can never leak
+    /// into a later call (a straggler from an aborted call delivers into a
+    /// dead channel), and a worker that dies mid-job drops its sender, so
+    /// the caller sees a disconnect instead of hanging.
+    reply: Sender<JobDone>,
+}
+
+struct JobDone {
+    lane: usize,
+    det: Box<dyn Detector>,
+    out: Vec<f32>,
+}
+
+struct PoolIo {
+    jobs: Vec<Sender<Job>>,
+}
+
+/// A pool of resident lane worker threads. Spawned once (per partition, or
+/// per `run_batched` call), parked on job channels between scoring calls,
+/// joined on drop. `Sync`: the channel ends live behind one mutex, so a
+/// shared reference can score from any service thread (calls serialize —
+/// each pool has a single logical user, its partition's service loop).
+pub struct LanePool {
+    io: Mutex<PoolIo>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl LanePool {
+    /// Spawn `workers` resident lane threads.
+    pub fn new(workers: usize) -> LanePool {
+        assert!(workers > 0, "a lane pool needs at least one worker");
+        let mut jobs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (job_tx, job_rx) = channel::<Job>();
+            WORKERS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("lane-{w}"))
+                    .spawn(move || worker_loop(job_rx))
+                    .expect("spawn lane worker"),
+            );
+            jobs.push(job_tx);
+        }
+        LanePool { io: Mutex::new(PoolIo { jobs }), handles }
+    }
+
+    /// Resident worker threads in this pool.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Score rows `[0, n)` of `input` through every lane concurrently:
+    /// detectors and partial buffers round-trip through the workers
+    /// (lane `i` on worker `i % workers`, so a lane array larger than the
+    /// pool still completes). Blocks until all lanes are done; on return
+    /// every lane holds its weighted partials for [`merge_lanes_into`].
+    pub fn score(
+        &self,
+        lanes: &mut [Lane],
+        input: &LaneInput,
+        n: usize,
+        chunk: usize,
+    ) -> Result<()> {
+        let io = self.io.lock().unwrap();
+        // One private reply channel per call: a straggler from an aborted
+        // earlier call delivers into that call's dead channel instead of
+        // corrupting this lane array, and a worker that panics mid-job
+        // drops its reply sender, surfacing here as a disconnect rather
+        // than a hang. Long jobs simply take as long as they take — the
+        // same semantics as the scoped join this pool replaced.
+        let (reply_tx, reply_rx) = channel::<JobDone>();
+        for (li, lane) in lanes.iter_mut().enumerate() {
+            let Some(det) = lane.det.take() else {
+                return Err(lost_lane(li));
+            };
+            let job = Job {
+                lane: li,
+                det,
+                input: input.clone(),
+                n,
+                chunk,
+                weight: lane.weight,
+                out: std::mem::take(&mut lane.out),
+                reply: reply_tx.clone(),
+            };
+            io.jobs[li % io.jobs.len()]
+                .send(job)
+                .map_err(|_| anyhow!("lane worker exited — lane pool is dead"))?;
+        }
+        drop(reply_tx);
+        for _ in 0..lanes.len() {
+            let done = reply_rx.recv().map_err(|_| {
+                anyhow!("a lane worker died mid-burst (detector panicked?) — lane results lost")
+            })?;
+            let lane = &mut lanes[done.lane];
+            lane.det = Some(done.det);
+            lane.out = done.out;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for LanePool {
+    fn drop(&mut self) {
+        // Dropping the job senders parks every worker out of its recv loop;
+        // join so no lane thread outlives its partition.
+        self.io.get_mut().unwrap().jobs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(jobs: Receiver<Job>) {
+    while let Ok(job) = jobs.recv() {
+        let Job { lane, mut det, input, n, chunk, weight, mut out, reply } = job;
+        run_lane_job(det.as_mut(), input.rows(), n, chunk, weight, &mut out);
+        drop(input); // release the shared rows before handing back (burst
+                     // scratch reclamation relies on the refcount dropping)
+        if reply.send(JobDone { lane, det, out }).is_err() {
+            continue; // caller aborted this burst; keep serving the pool
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detectors::prng::Prng;
+    use crate::detectors::{DetectorKind, DetectorSpec};
+
+    fn stream(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..n * d).map(|_| p.gaussian() as f32).collect()
+    }
+
+    fn spec(kind: DetectorKind, r: usize) -> DetectorSpec {
+        let mut s = DetectorSpec::new(kind, 3, r, 7);
+        s.window = 16;
+        s.bins = 8;
+        s.modulus = 32;
+        s.k = 4;
+        s
+    }
+
+    #[test]
+    fn pooled_matches_inline_bit_for_bit() {
+        let data = stream(60, 3, 1);
+        let input = LaneInput::Rows(Arc::new(data.clone()));
+        for kind in DetectorKind::ALL {
+            let sp = spec(kind, 5); // 5 % 2 != 0: uneven slices
+            let warmup = &data[..16 * 3];
+            let mut pooled = build_lanes(&sp, warmup, 2);
+            let mut inline = build_lanes(&sp, warmup, 2);
+            let pool = LanePool::new(2);
+            pool.score(&mut pooled, &input, 60, usize::MAX).unwrap();
+            score_inline(&mut inline, &input, 60, usize::MAX).unwrap();
+            let mut a = vec![0f32; 60];
+            let mut b = vec![0f32; 60];
+            merge_lanes_into(&pooled, &mut a);
+            merge_lanes_into(&inline, &mut b);
+            assert_eq!(a, b, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn single_lane_is_bit_identical_to_full_ensemble() {
+        let data = stream(50, 3, 2);
+        let sp = spec(DetectorKind::Loda, 4);
+        let warmup = &data[..16 * 3];
+        let mut det = sp.build(warmup);
+        let expect = det.run_stream(&data);
+        let mut lanes = build_lanes(&sp, warmup, 1);
+        assert_eq!(lanes.len(), 1);
+        assert_eq!(lanes[0].weight(), 1.0);
+        score_inline(&mut lanes, &LaneInput::Rows(Arc::new(data.clone())), 50, usize::MAX)
+            .unwrap();
+        let mut got = vec![0f32; 50];
+        merge_lanes_into(&lanes, &mut got);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn lane_count_is_clamped_and_weights_sum_to_one() {
+        let sp = spec(DetectorKind::RsHash, 3);
+        let lanes = build_lanes(&sp, &[], 16);
+        assert_eq!(lanes.len(), 3, "lanes clamp to r");
+        let total: f32 = lanes.iter().map(|l| l.weight()).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pool_survives_more_lanes_than_workers() {
+        let data = stream(40, 3, 3);
+        let sp = spec(DetectorKind::XStream, 6);
+        let warmup = &data[..16 * 3];
+        let mut lanes = build_lanes(&sp, warmup, 3);
+        let pool = LanePool::new(2); // lane 2 shares worker 0
+        let input = LaneInput::Rows(Arc::new(data.clone()));
+        pool.score(&mut lanes, &input, 40, usize::MAX).unwrap();
+        let mut inline = build_lanes(&sp, warmup, 3);
+        score_inline(&mut inline, &input, 40, usize::MAX).unwrap();
+        let mut a = vec![0f32; 40];
+        let mut b = vec![0f32; 40];
+        merge_lanes_into(&lanes, &mut a);
+        merge_lanes_into(&inline, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn burst_rows_are_reclaimable_after_score() {
+        let data = stream(30, 3, 4);
+        let sp = spec(DetectorKind::Loda, 4);
+        let mut lanes = build_lanes(&sp, &data[..16 * 3], 2);
+        let pool = LanePool::new(2);
+        let rows = Arc::new(data.clone());
+        let input = LaneInput::Rows(Arc::clone(&rows));
+        pool.score(&mut lanes, &input, 30, usize::MAX).unwrap();
+        drop(input);
+        // All lane clones dropped once score() returned: the burst scratch
+        // allocation comes back to the caller.
+        assert!(Arc::try_unwrap(rows).is_ok(), "workers must not retain the rows");
+    }
+
+    #[test]
+    fn workers_are_spawned_once_per_pool() {
+        let before = total_workers_spawned();
+        let data = stream(20, 3, 5);
+        let sp = spec(DetectorKind::Loda, 4);
+        let mut lanes = build_lanes(&sp, &data[..16 * 3], 2);
+        let pool = LanePool::new(2);
+        // Other tests may spawn pools concurrently in this binary, so the
+        // process-wide counter is a lower bound here; the exact spawn-once
+        // accounting lives in tests/lane_parity.rs, which serializes.
+        assert!(total_workers_spawned() >= before + 2);
+        assert_eq!(pool.workers(), 2);
+        let input = LaneInput::Rows(Arc::new(data));
+        for _ in 0..8 {
+            pool.score(&mut lanes, &input, 20, usize::MAX).unwrap();
+        }
+        assert_eq!(pool.workers(), 2, "scoring must never respawn workers");
+    }
+}

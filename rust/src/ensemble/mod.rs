@@ -20,11 +20,18 @@
 //!   (property-tested); typically ≥ 3× faster than lock-step at 4 threads
 //!   and, unlike it, it keeps scaling past 4 (see
 //!   `benches/throughput_modes.rs` / `BENCH_throughput.json`).
+//!
+//! The batched runner's lane machinery (sub-detector slices + resident
+//! worker pool + weighted merge) is factored into [`lanes`] and shared with
+//! the fabric's multi-lane pblocks (`fabric::pblock`), where the same pool
+//! stays alive across bursts and server sessions.
 
 pub mod batched;
+pub mod lanes;
 pub mod threaded;
 
 pub use batched::{run_batched, run_batched_chunked, DEFAULT_CHUNK};
+pub use lanes::{Lane, LanePool};
 pub use threaded::run_threaded;
 
 use crate::data::Dataset;

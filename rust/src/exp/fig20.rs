@@ -25,7 +25,7 @@ pub fn measure_short_path(ctx: &ExpCtx, use_fpga: bool) -> Result<f64> {
     cfg.use_fpga = use_fpga;
     cfg.artifact_dir = ctx.artifact_dir.clone();
     cfg.chunk = 256;
-    cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Bypass, r: 0, stream: 0 });
+    cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Bypass, r: 0, stream: 0, lanes: 0 });
     let ds = one_chunk_dataset(cfg.chunk, 3);
     let mut fabric = Fabric::new(cfg, vec![ds])?;
     // Warm the path (thread spawn, PJRT compile), then measure.
@@ -41,7 +41,7 @@ pub fn measure_full_path(ctx: &ExpCtx, use_fpga: bool) -> Result<f64> {
     cfg.use_fpga = use_fpga;
     cfg.artifact_dir = ctx.artifact_dir.clone();
     cfg.chunk = 256;
-    cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Bypass, r: 0, stream: 0 });
+    cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Bypass, r: 0, stream: 0, lanes: 0 });
     // A 1-input averaging combo is the identity — the paper's empty-logic
     // channel through both switches and a combo slot.
     cfg.combos.push(ComboCfg { id: 1, method: "avg".into(), inputs: vec![1], weights: vec![] });

@@ -42,6 +42,10 @@ pub struct ExpCtx {
     /// Force the adaptive live-DFX controller on (`--dfx`), regardless of
     /// `[fabric.dfx] enabled` in the config.
     pub dfx: bool,
+    /// Override the per-pblock lane count (`--lanes N`): intra-partition
+    /// instance parallelism via resident lane workers. None keeps the
+    /// config file's `[fabric] lanes` / `[pblock.N] lanes` values.
+    pub lanes: Option<usize>,
 }
 
 impl Default for ExpCtx {
@@ -55,6 +59,7 @@ impl Default for ExpCtx {
             use_fpga: true,
             exec: None,
             dfx: false,
+            lanes: None,
         }
     }
 }
@@ -116,6 +121,13 @@ pub fn cli_main(args: &[String]) -> Result<i32> {
             }
             "--dfx" => {
                 ctx.dfx = true;
+            }
+            "--lanes" => {
+                let v: usize = next(args, &mut i)?.parse().context("--lanes")?;
+                if v == 0 {
+                    bail!("--lanes must be >= 1");
+                }
+                ctx.lanes = Some(v);
             }
             other => positional.push(other),
         }
@@ -208,6 +220,10 @@ FLAGS:
                     (hot-swaps drifting pblocks from the [fabric.dfx] pool
                     while the fabric streams; scripted swaps come from
                     [fabric.dfx.swap.N] sections)
+  --lanes N         place N detector instances per pblock partition
+                    (intra-partition lanes scored by resident lane worker
+                    threads; default 1, also settable via `lanes` in
+                    [fabric] or per [pblock.N]; CPU-native RMs only)
 "
     .to_string()
 }
@@ -264,6 +280,9 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
     }
     if ctx.dfx {
         cfg.dfx.adaptive = true;
+    }
+    if let Some(lanes) = ctx.lanes {
+        cfg.override_lanes(lanes);
     }
     cfg.artifact_dir = ctx.artifact_dir.clone();
     if cfg.dataset.data_dir.is_none() {

@@ -157,6 +157,7 @@ fn default_topology(ctx: &ExpCtx) -> FseadConfig {
             rm: RmKind::Detector(DetectorKind::Loda),
             r: 4,
             stream: 0,
+            lanes: 0,
         });
     }
     cfg
@@ -202,13 +203,17 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
     if ctx.dfx {
         cfg.dfx.adaptive = true;
     }
+    if let Some(lanes) = ctx.lanes {
+        cfg.override_lanes(lanes);
+    }
     cfg.artifact_dir = ctx.artifact_dir.clone();
     let server = FabricServer::start(cfg)?;
     println!(
-        "serving {} partition(s) (exec={}, fpga={}, inbox={} flits)",
+        "serving {} partition(s) (exec={}, fpga={}, lanes={}, inbox={} flits)",
         server.partitions().len(),
         server.config().exec.as_str(),
         server.config().use_fpga,
+        server.config().lanes,
         server.config().server.inbox_flits
     );
     if stdin_mode {

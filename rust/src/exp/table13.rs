@@ -67,6 +67,7 @@ pub fn run(ctx: &ExpCtx) -> Result<String> {
         &warmup,
         None,
         false,
+        1,
     )?;
     out.push_str(&format!(
         "  RP-1 empty -> loda(cpu): {:.3} ms measured (model {:.1} ms)\n",

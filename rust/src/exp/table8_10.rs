@@ -46,7 +46,13 @@ fn fpga_scores(
     cfg.use_fpga = ctx.use_fpga && ctx.artifacts_available();
     cfg.chunk = if cfg.use_fpga { 256 } else { 512 };
     for id in 1..=7usize {
-        cfg.pblocks.push(PblockCfg { id, rm: RmKind::Detector(kind), r: kind.pblock_r(), stream: 0 });
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(kind),
+            r: kind.pblock_r(),
+            stream: 0,
+            lanes: 0,
+        });
     }
     let mut fabric = Fabric::new(cfg, vec![ds.clone()])?;
     let out = fabric.run()?;

@@ -506,7 +506,9 @@ impl DfxManager {
     /// Stage a swap: build the replacement RM now (params, artifact
     /// compile/load — the "bitstream into DDR" step) and price the dark
     /// window from the Table-13 model, so executing the swap later only
-    /// costs `dark_flits` of stream time.
+    /// costs `dark_flits` of stream time. `lanes` is the target partition's
+    /// configured lane count: a multi-lane partition stages a whole
+    /// replacement lane array, swapped in atomically between two flits.
     #[allow(clippy::too_many_arguments)]
     pub fn stage(
         &self,
@@ -524,11 +526,12 @@ impl DfxManager {
         policy: DarkPolicy,
         chunk: usize,
         samples_per_sec: f64,
+        lanes: usize,
     ) -> Result<PendingSwap> {
         let to_function = to != RmKind::Empty && to != RmKind::Bypass;
         let model_ms =
             self.model.time_ms_pblock(pblock_id, to_function).unwrap_or(self.model.base_ms);
-        let rm = LoadedRm::build(to, r, d, seed, hyper, warmup, fpga, quantize)?;
+        let rm = LoadedRm::build(to, r, d, seed, hyper, warmup, fpga, quantize, lanes)?;
         // At least one dark flit: a swap is never free while streaming.
         let dark = dark_flits
             .unwrap_or_else(|| model_dark_flits(model_ms, samples_per_sec, chunk))
@@ -546,6 +549,9 @@ pub struct ControllerTarget {
     pub d: usize,
     pub warmup: Vec<f32>,
     pub seed: u64,
+    /// The partition's configured lane count — replacement RMs staged by
+    /// the controller keep the partition's lane layout.
+    pub lanes: usize,
 }
 
 /// Everything the controller thread owns.
@@ -630,6 +636,7 @@ pub fn spawn_controller(
                         env.cfg.policy,
                         env.chunk,
                         env.cfg.samples_per_sec,
+                        t.lanes,
                     );
                     match staged {
                         Ok(swap) => {
@@ -689,6 +696,7 @@ mod tests {
                 policy,
                 8,
                 100_000.0,
+                1,
             )
             .unwrap()
     }
@@ -880,6 +888,7 @@ mod tests {
             d: 2,
             warmup,
             seed: 3,
+            lanes: 1,
         }];
         let stop = Arc::new(AtomicBool::new(false));
         let handle = spawn_controller(env, targets, Arc::clone(&stop));

@@ -24,7 +24,34 @@
 //! decoupler semantics exactly; only the per-transfer overhead is
 //! amortised. Flit payloads are shared `Arc` buffers throughout, so
 //! neither mode copies sample data when forwarding, bypassing or
-//! submitting to the device.
+//! submitting to the device. Burst scoring reuses one per-partition
+//! [`BurstScratch`] (concatenated rows + merged scores) across backlog
+//! drains instead of allocating per burst.
+//!
+//! # Multi-lane partitions
+//!
+//! The paper's intra-pblock scalability axis — "multiple instances can be
+//! placed within a pblock to improve performance" (§4, Fig 9) — is the
+//! lane model: with `lanes = N` (per `[pblock.N]` in TOML, `[fabric]
+//! lanes` default, `fsead --lanes`) a CPU detector RM loads as
+//! [`LoadedRm::DetectorCpuLanes`] — `N` sub-detector slices built with the
+//! same `DetectorSpec::build_slice` partition the CPU ensemble runners
+//! use. Each burst (or flit) is scored by all lanes concurrently through
+//! the partition's resident [`LanePool`] (spawned once per partition,
+//! alive across bursts and across server sessions) into per-lane partial
+//! vectors, merged with `run_batched`'s weighted arithmetic. The thread /
+//! parity contract:
+//!
+//! - **`lanes = 1`** keeps the single-detector RM and the exact service
+//!   loops above — bit-identical to the pre-lane data plane (golden
+//!   vectors and server bit-identity suites run unchanged).
+//! - **`lanes > 1`** changes only the f32 summation order of the ensemble
+//!   mean (the established 1e-5 partition tolerance vs `lanes = 1`), and
+//!   is itself bit-identical across [`ExecMode`]s, pool sizes and pooled
+//!   vs inline execution.
+//! - DFX hot-swaps replace the **whole lane array** between two flits
+//!   (staged like any RM); [`super::hotswap::ScoreStats`] observe the
+//!   merged stream, never per-lane partials.
 
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::Sender;
@@ -36,8 +63,35 @@ use super::hotswap::{self, Admit, DfxGate, PblockCtl};
 use super::message::{score_chunk, Flit, FlitSource};
 use crate::config::{DetectorHyper, RmKind};
 use crate::detectors::{Detector, DetectorSpec};
-use crate::ensemble::ExecMode;
+use crate::ensemble::lanes::{build_lanes, merge_lanes_into, score_inline, Lane, LaneInput};
+use crate::ensemble::{ExecMode, LanePool};
 use crate::runtime::{generate_params, InstanceId, Registry, RuntimeHandle};
+
+/// Reusable burst-scoring buffers, owned by the service loop and reused
+/// across backlog drains: `rows` holds the concatenated valid samples of a
+/// burst, `scores` the merged per-sample scores. One per partition stream —
+/// burst servicing allocates nothing per drain beyond the output flits.
+#[derive(Default)]
+pub struct BurstScratch {
+    rows: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+/// Score `n` rows of `input` through a lane array: concurrently on the
+/// partition's resident [`LanePool`] when one is attached, inline on the
+/// calling thread otherwise — bit-identical either way (same per-lane job,
+/// same merge order).
+fn score_lanes(
+    pool: Option<&LanePool>,
+    lanes: &mut [Lane],
+    input: &LaneInput,
+    n: usize,
+) -> Result<()> {
+    match pool {
+        Some(pool) => pool.score(lanes, input, n, usize::MAX),
+        None => score_inline(lanes, input, n, usize::MAX),
+    }
+}
 
 /// A loaded reconfigurable module.
 pub enum LoadedRm {
@@ -49,6 +103,11 @@ pub enum LoadedRm {
     BypassFpga { handle: RuntimeHandle, d: usize },
     /// Detector ensemble on the CPU (baseline / fast tests).
     DetectorCpu { det: Box<dyn Detector> },
+    /// Detector ensemble partitioned into lane slices for intra-partition
+    /// instance parallelism (`lanes >= 2`); scored through the partition's
+    /// resident [`LanePool`] and merged with `run_batched`'s weighted
+    /// arithmetic.
+    DetectorCpuLanes { lanes: Vec<Lane>, name: &'static str, r: usize, d: usize },
     /// Detector ensemble as a compiled artifact on the PJRT device.
     DetectorFpga { handle: RuntimeHandle, inst: InstanceId, chunk: usize, d: usize },
 }
@@ -60,11 +119,19 @@ impl LoadedRm {
             LoadedRm::BypassNative => "bypass(native)".into(),
             LoadedRm::BypassFpga { d, .. } => format!("bypass(fpga,d={d})"),
             LoadedRm::DetectorCpu { det } => format!("{}(cpu,r={})", det.name(), det.r()),
+            LoadedRm::DetectorCpuLanes { lanes, name, r, .. } => {
+                format!("{name}(cpu,r={r},lanes={})", lanes.len())
+            }
             LoadedRm::DetectorFpga { d, .. } => format!("detector(fpga,d={d})"),
         }
     }
 
-    /// Build an RM from its config description.
+    /// Build an RM from its config description. `lanes` requests
+    /// intra-partition instance parallelism for CPU-native detector RMs:
+    /// the effective count is clamped to `[1, r]`, `1` keeps the
+    /// single-detector RM (bit-identical to the pre-lane data plane), and
+    /// the FPGA/bypass/empty variants ignore it (the modelled FPGA path
+    /// already executes as one artifact invocation).
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         rm: RmKind,
@@ -75,6 +142,7 @@ impl LoadedRm {
         warmup: &[f32],
         fpga: Option<(&RuntimeHandle, &Registry)>,
         quantize: bool,
+        lanes: usize,
     ) -> Result<LoadedRm> {
         match rm {
             RmKind::Empty => Ok(LoadedRm::Empty),
@@ -101,7 +169,17 @@ impl LoadedRm {
                     spec.modulus = hyper.modulus;
                     spec.k = hyper.k;
                     spec.quantize = quantize;
-                    Ok(LoadedRm::DetectorCpu { det: spec.build(warmup) })
+                    let lanes = lanes.clamp(1, r.max(1));
+                    if lanes > 1 {
+                        Ok(LoadedRm::DetectorCpuLanes {
+                            lanes: build_lanes(&spec, warmup, lanes),
+                            name: kind.as_str(),
+                            r,
+                            d,
+                        })
+                    } else {
+                        Ok(LoadedRm::DetectorCpu { det: spec.build(warmup) })
+                    }
                 }
             },
         }
@@ -109,8 +187,10 @@ impl LoadedRm {
 
     /// Process one flit; returns the output flit (None for Empty logic).
     /// Payloads are shared: bypass outputs and forwarded masks clone the
-    /// input `Arc`s instead of copying buffers.
-    pub fn process(&mut self, flit: &Flit) -> Result<Option<Flit>> {
+    /// input `Arc`s instead of copying buffers. Multi-lane RMs score the
+    /// flit through `pool` when one is attached (the partition's resident
+    /// lane workers), inline otherwise — bit-identical either way.
+    pub fn process(&mut self, flit: &Flit, pool: Option<&LanePool>) -> Result<Option<Flit>> {
         match self {
             LoadedRm::Empty => Ok(None),
             LoadedRm::BypassNative => Ok(Some(flit.clone())),
@@ -134,6 +214,15 @@ impl LoadedRm {
                 det.update_batch(&flit.data[..n * d], &mut scores[..n]);
                 Ok(Some(score_chunk(flit.seq, scores, flit.mask.clone(), flit.n_valid, flit.last)))
             }
+            LoadedRm::DetectorCpuLanes { lanes, .. } => {
+                // Zero-copy lane fan-out: every lane shares the flit payload.
+                let n = flit.n_valid;
+                let input = LaneInput::Flit(flit.data.clone());
+                score_lanes(pool, lanes, &input, n)?;
+                let mut scores = vec![0f32; flit.rows()];
+                merge_lanes_into(lanes, &mut scores[..n]);
+                Ok(Some(score_chunk(flit.seq, scores, flit.mask.clone(), flit.n_valid, flit.last)))
+            }
             LoadedRm::DetectorFpga { handle, inst, chunk, d } => {
                 if flit.data.len() != *chunk * *d {
                     bail!(
@@ -153,16 +242,27 @@ impl LoadedRm {
     /// output flits to `out`. Results are bit-identical to calling
     /// [`LoadedRm::process`] once per flit:
     ///
-    /// - CPU RMs concatenate the valid rows of the backlog and score them
-    ///   through a **single** `update_batch` call — same rows, same order,
-    ///   same arithmetic (chunk boundaries never change scores; see the
+    /// - CPU RMs concatenate the valid rows of the backlog (into the
+    ///   reusable `scratch.rows` buffer) and score them through a
+    ///   **single** `update_batch` call — same rows, same order, same
+    ///   arithmetic (chunk boundaries never change scores; see the
     ///   `chunk_size_does_not_change_scores` proptest in
     ///   `ensemble::batched`);
+    /// - multi-lane RMs score the same concatenated backlog through every
+    ///   lane concurrently on `pool` and merge the weighted partials — the
+    ///   rows allocation round-trips through an `Arc` and is reclaimed into
+    ///   the scratch afterwards;
     /// - FPGA RMs submit the whole backlog through **one**
     ///   [`RuntimeHandle::run_chunks`] round-trip, with state threading
     ///   chunk-to-chunk exactly as repeated `run_chunk` calls would;
     /// - bypass/empty logic degenerate to pointer clones / nothing.
-    pub fn process_burst(&mut self, flits: &[Flit], out: &mut Vec<Flit>) -> Result<()> {
+    pub fn process_burst(
+        &mut self,
+        flits: &[Flit],
+        out: &mut Vec<Flit>,
+        scratch: &mut BurstScratch,
+        pool: Option<&LanePool>,
+    ) -> Result<()> {
         match self {
             LoadedRm::Empty => Ok(()),
             LoadedRm::BypassNative => {
@@ -188,19 +288,36 @@ impl LoadedRm {
             LoadedRm::DetectorCpu { det } => {
                 let d = det.d();
                 let total: usize = flits.iter().map(|f| f.n_valid).sum();
-                let mut rows = Vec::with_capacity(total * d);
+                scratch.rows.clear();
+                scratch.rows.reserve(total * d);
                 for f in flits {
-                    rows.extend_from_slice(&f.data[..f.n_valid * d]);
+                    scratch.rows.extend_from_slice(&f.data[..f.n_valid * d]);
                 }
-                let mut scores = vec![0f32; total];
-                det.update_batch(&rows, &mut scores);
-                let mut off = 0;
+                scratch.scores.clear();
+                scratch.scores.resize(total, 0.0);
+                det.update_batch(&scratch.rows, &mut scratch.scores);
+                Self::emit_burst(flits, &scratch.scores, out);
+                Ok(())
+            }
+            LoadedRm::DetectorCpuLanes { lanes, d, .. } => {
+                let d = *d;
+                let total: usize = flits.iter().map(|f| f.n_valid).sum();
+                scratch.rows.clear();
+                scratch.rows.reserve(total * d);
                 for f in flits {
-                    let mut s = vec![0f32; f.rows()];
-                    s[..f.n_valid].copy_from_slice(&scores[off..off + f.n_valid]);
-                    off += f.n_valid;
-                    out.push(score_chunk(f.seq, s, f.mask.clone(), f.n_valid, f.last));
+                    scratch.rows.extend_from_slice(&f.data[..f.n_valid * d]);
                 }
+                // Share the concatenated rows with every lane worker, then
+                // reclaim the allocation into the scratch: by the time
+                // `score_lanes` returns all lane clones are dropped.
+                let rows = Arc::new(std::mem::take(&mut scratch.rows));
+                let res = score_lanes(pool, lanes, &LaneInput::Rows(Arc::clone(&rows)), total);
+                scratch.rows = Arc::try_unwrap(rows).unwrap_or_default();
+                res?;
+                scratch.scores.clear();
+                scratch.scores.resize(total, 0.0);
+                merge_lanes_into(lanes, &mut scratch.scores);
+                Self::emit_burst(flits, &scratch.scores, out);
                 Ok(())
             }
             LoadedRm::DetectorFpga { handle, inst, chunk, d } => {
@@ -225,11 +342,31 @@ impl LoadedRm {
         }
     }
 
+    /// Cut the merged burst scores back into per-flit output flits
+    /// (padding rows stay zero-scored), preserving seq/mask/TLAST framing.
+    fn emit_burst(flits: &[Flit], scores: &[f32], out: &mut Vec<Flit>) {
+        let mut off = 0;
+        for f in flits {
+            let mut s = vec![0f32; f.rows()];
+            s[..f.n_valid].copy_from_slice(&scores[off..off + f.n_valid]);
+            off += f.n_valid;
+            out.push(score_chunk(f.seq, s, f.mask.clone(), f.n_valid, f.last));
+        }
+    }
+
     /// Reset streaming state (window contents), keeping parameters.
     pub fn reset(&mut self) -> Result<()> {
         match self {
             LoadedRm::DetectorCpu { det } => {
                 det.reset();
+                Ok(())
+            }
+            LoadedRm::DetectorCpuLanes { lanes, .. } => {
+                for lane in lanes.iter_mut() {
+                    if let Some(det) = lane.det_mut() {
+                        det.reset();
+                    }
+                }
                 Ok(())
             }
             LoadedRm::DetectorFpga { handle, inst, .. } => handle.reset_state(*inst),
@@ -269,6 +406,11 @@ pub struct Pblock {
     /// with the fabric and the adaptive controller while the service
     /// thread owns the RM.
     pub ctl: Arc<PblockCtl>,
+    /// Resident lane workers for multi-lane RMs (None when the partition
+    /// runs a single lane). Spawned once when the partition is configured
+    /// with `lanes > 1` and kept alive across runs, bursts and hot-swaps —
+    /// the per-partition counterpart of the server's resident workers.
+    pub pool: Option<LanePool>,
 }
 
 impl Pblock {
@@ -278,12 +420,15 @@ impl Pblock {
             rm: LoadedRm::Empty,
             decoupler: Arc::new(Decoupler::new()),
             ctl: Arc::new(PblockCtl::default()),
+            pool: None,
         }
     }
 
     /// Service one stream under the selected execution mode. The stream
     /// source is anything implementing [`FlitSource`]: the fabric's mpsc
-    /// receivers or a server session's bounded inbox.
+    /// receivers or a server session's bounded inbox. `pool` is the
+    /// partition's resident lane workers (None for single-lane partitions;
+    /// multi-lane RMs then score inline, bit-identically).
     pub fn service_mode<S: FlitSource>(
         rm: &mut LoadedRm,
         decoupler: &Decoupler,
@@ -291,10 +436,11 @@ impl Pblock {
         rx: S,
         tx: Sender<Flit>,
         mode: ExecMode,
+        pool: Option<&LanePool>,
     ) -> Result<PblockReport> {
         match mode {
-            ExecMode::LockStep => Self::service(rm, decoupler, ctl, rx, tx),
-            ExecMode::Batched => Self::service_burst(rm, decoupler, ctl, rx, tx),
+            ExecMode::LockStep => Self::service(rm, decoupler, ctl, rx, tx, pool),
+            ExecMode::Batched => Self::service_burst(rm, decoupler, ctl, rx, tx, pool),
         }
     }
 
@@ -311,6 +457,7 @@ impl Pblock {
         ctl: &PblockCtl,
         mut rx: S,
         tx: Sender<Flit>,
+        pool: Option<&LanePool>,
     ) -> Result<PblockReport> {
         let mut report = PblockReport::default();
         let mut gate = DfxGate::new(ctl, decoupler);
@@ -339,7 +486,7 @@ impl Pblock {
                 Admit::Process => {}
             }
             let t0 = Instant::now();
-            let out = rm.process(&flit)?;
+            let out = rm.process(&flit, pool)?;
             report.busy_secs += t0.elapsed().as_secs_f64();
             report.samples += flit.n_valid as u64;
             if let Some(out) = out {
@@ -375,6 +522,7 @@ impl Pblock {
         ctl: &PblockCtl,
         mut rx: S,
         tx: Sender<Flit>,
+        pool: Option<&LanePool>,
     ) -> Result<PblockReport> {
         // When the adaptive controller is watching this pblock (stats
         // armed), bound the backlog so scores are published — and newly
@@ -389,6 +537,9 @@ impl Pblock {
         let mut gate = DfxGate::new(ctl, decoupler);
         let mut outputs: Vec<Flit> = Vec::new();
         let mut seg: Vec<Flit> = Vec::new();
+        // Per-partition burst scratch (concatenated rows + merged scores),
+        // reused across every backlog drain of this stream.
+        let mut scratch = BurstScratch::default();
         loop {
             let Some(first) = rx.recv_flit() else {
                 gate.finish();
@@ -407,7 +558,9 @@ impl Pblock {
                 if gate.swap_imminent() && !seg.is_empty() {
                     // Flush the segment owned by the outgoing RM before the
                     // gate replaces it.
-                    if !Self::flush_seg(rm, ctl, &mut seg, &mut outputs, &tx, &mut report)? {
+                    if !Self::flush_seg(
+                        rm, ctl, &mut seg, &mut outputs, &mut scratch, pool, &tx, &mut report,
+                    )? {
                         gate.finish();
                         return Ok(report);
                     }
@@ -417,7 +570,10 @@ impl Pblock {
                     Admit::Drop => {}
                     Admit::Bypass => {
                         if !seg.is_empty()
-                            && !Self::flush_seg(rm, ctl, &mut seg, &mut outputs, &tx, &mut report)?
+                            && !Self::flush_seg(
+                                rm, ctl, &mut seg, &mut outputs, &mut scratch, pool, &tx,
+                                &mut report,
+                            )?
                         {
                             gate.finish();
                             return Ok(report);
@@ -432,7 +588,9 @@ impl Pblock {
                 }
             }
             if !seg.is_empty()
-                && !Self::flush_seg(rm, ctl, &mut seg, &mut outputs, &tx, &mut report)?
+                && !Self::flush_seg(
+                    rm, ctl, &mut seg, &mut outputs, &mut scratch, pool, &tx, &mut report,
+                )?
             {
                 gate.finish();
                 return Ok(report);
@@ -446,17 +604,20 @@ impl Pblock {
 
     /// Score one backlog segment through the RM and forward the outputs.
     /// Returns `Ok(false)` when downstream is disabled (send failed).
+    #[allow(clippy::too_many_arguments)]
     fn flush_seg(
         rm: &mut LoadedRm,
         ctl: &PblockCtl,
         seg: &mut Vec<Flit>,
         outputs: &mut Vec<Flit>,
+        scratch: &mut BurstScratch,
+        pool: Option<&LanePool>,
         tx: &Sender<Flit>,
         report: &mut PblockReport,
     ) -> Result<bool> {
         let t0 = Instant::now();
         outputs.clear();
-        rm.process_burst(seg, outputs)?;
+        rm.process_burst(seg, outputs, scratch, pool)?;
         report.busy_secs += t0.elapsed().as_secs_f64();
         report.samples += seg.iter().map(|f| f.n_valid as u64).sum::<u64>();
         seg.clear();
@@ -490,7 +651,20 @@ mod tests {
     }
 
     fn detector_rm(kind: DetectorKind, r: usize, d: usize, seed: u64, warmup: &[f32]) -> LoadedRm {
-        LoadedRm::build(RmKind::Detector(kind), r, d, seed, &hyper(), warmup, None, false).unwrap()
+        LoadedRm::build(RmKind::Detector(kind), r, d, seed, &hyper(), warmup, None, false, 1)
+            .unwrap()
+    }
+
+    fn lane_rm(
+        kind: DetectorKind,
+        r: usize,
+        d: usize,
+        seed: u64,
+        warmup: &[f32],
+        lanes: usize,
+    ) -> LoadedRm {
+        LoadedRm::build(RmKind::Detector(kind), r, d, seed, &hyper(), warmup, None, false, lanes)
+            .unwrap()
     }
 
     #[test]
@@ -505,7 +679,7 @@ mod tests {
         drop(tx_in);
         let dec = Decoupler::new();
         let ctl = PblockCtl::default();
-        let report = Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
+        let report = Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out, None).unwrap();
         assert_eq!(report.samples, 40);
         assert_eq!(report.flits_in, 5);
         let mut n_scores = 0;
@@ -520,7 +694,7 @@ mod tests {
         let data = stream_data(10, 2);
         let mut rm = LoadedRm::BypassNative;
         let flit = ChunkStream::new(&data, 2, 16).next().unwrap();
-        let out = rm.process(&flit).unwrap().unwrap();
+        let out = rm.process(&flit, None).unwrap().unwrap();
         assert_eq!(out.data, flit.data);
         // Identity shares the payload allocation, it does not copy it.
         assert!(Arc::ptr_eq(&out.data, &flit.data));
@@ -531,9 +705,10 @@ mod tests {
     fn empty_rm_produces_nothing() {
         let mut rm = LoadedRm::Empty;
         let flit = ChunkStream::new(&[1.0, 2.0], 2, 4).next().unwrap();
-        assert!(rm.process(&flit).unwrap().is_none());
+        assert!(rm.process(&flit, None).unwrap().is_none());
         let mut out = Vec::new();
-        rm.process_burst(std::slice::from_ref(&flit), &mut out).unwrap();
+        let mut scratch = BurstScratch::default();
+        rm.process_burst(std::slice::from_ref(&flit), &mut out, &mut scratch, None).unwrap();
         assert!(out.is_empty());
     }
 
@@ -550,7 +725,7 @@ mod tests {
         let dec = Decoupler::new();
         dec.decouple();
         let ctl = PblockCtl::default();
-        let report = Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
+        let report = Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out, None).unwrap();
         assert_eq!(report.flits_out, 0);
         assert!(rx_out.recv().is_err());
         assert!(report.flits_in >= 1);
@@ -569,7 +744,7 @@ mod tests {
         let dec = Decoupler::new();
         dec.decouple();
         let ctl = PblockCtl::default();
-        let report = Pblock::service_burst(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
+        let report = Pblock::service_burst(&mut rm, &dec, &ctl, rx_in, tx_out, None).unwrap();
         assert_eq!(report.flits_out, 0);
         assert_eq!(report.flits_in, 2);
         assert!(rx_out.recv().is_err());
@@ -591,7 +766,7 @@ mod tests {
         let expect = det.run_stream(&data);
         let mut got = Vec::new();
         for flit in ChunkStream::new(&data, 3, 8) {
-            if let Some(out) = rm.process(&flit).unwrap() {
+            if let Some(out) = rm.process(&flit, None).unwrap() {
                 got.extend_from_slice(&out.data[..out.n_valid]);
             }
         }
@@ -615,7 +790,7 @@ mod tests {
                 drop(tx_in);
                 let dec = Decoupler::new();
                 let ctl = PblockCtl::default();
-                Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
+                Pblock::service(&mut rm, &dec, &ctl, rx_in, tx_out, None).unwrap();
                 per_flit.extend(rx_out.iter());
             }
             let mut burst: Vec<Flit> = Vec::new();
@@ -629,7 +804,8 @@ mod tests {
                 drop(tx_in);
                 let dec = Decoupler::new();
                 let ctl = PblockCtl::default();
-                let report = Pblock::service_burst(&mut rm, &dec, &ctl, rx_in, tx_out).unwrap();
+                let report =
+                    Pblock::service_burst(&mut rm, &dec, &ctl, rx_in, tx_out, None).unwrap();
                 assert_eq!(report.samples, 50, "{kind:?}");
                 burst.extend(rx_out.iter());
             }
@@ -658,7 +834,7 @@ mod tests {
         {
             let mut old = detector_rm(DetectorKind::Loda, 4, 3, 1, &data[..30]);
             for flit in ChunkStream::new(&data[..16 * 3], 3, 8) {
-                let out = old.process(&flit).unwrap().unwrap();
+                let out = old.process(&flit, None).unwrap().unwrap();
                 expect.extend_from_slice(&out.data[..out.n_valid]);
             }
         }
@@ -666,7 +842,7 @@ mod tests {
         {
             let mut new = detector_rm(DetectorKind::RsHash, 3, 3, 5, &data[..30]);
             for flit in ChunkStream::new(&data[24 * 3..], 3, 8) {
-                let out = new.process(&flit).unwrap().unwrap();
+                let out = new.process(&flit, None).unwrap().unwrap();
                 expect.extend_from_slice(&out.data[..out.n_valid]);
             }
         }
@@ -696,10 +872,12 @@ mod tests {
                     DarkPolicy::Bypass,
                     8,
                     1e5,
+                    1,
                 )
                 .unwrap();
             ctl.swap.schedule(swap);
-            let report = Pblock::service_mode(&mut rm, &dec, &ctl, rx_in, tx_out, mode).unwrap();
+            let report =
+                Pblock::service_mode(&mut rm, &dec, &ctl, rx_in, tx_out, mode, None).unwrap();
             let outs: Vec<Flit> = rx_out.iter().collect();
             assert_eq!(outs.len(), 5, "{mode:?}");
             let got: Vec<f32> =
@@ -724,10 +902,139 @@ mod tests {
         let flits: Vec<Flit> = ChunkStream::new(&data, 2, 4).collect();
         let mut rm = LoadedRm::BypassNative;
         let mut out = Vec::new();
-        rm.process_burst(&flits, &mut out).unwrap();
+        let mut scratch = BurstScratch::default();
+        rm.process_burst(&flits, &mut out, &mut scratch, None).unwrap();
         assert_eq!(out.len(), flits.len());
         for (i, o) in out.iter().enumerate() {
             assert!(Arc::ptr_eq(&o.data, &flits[i].data));
         }
+    }
+
+    #[test]
+    fn build_selects_lane_variant_and_clamps() {
+        let data = stream_data(20, 3);
+        let rm = lane_rm(DetectorKind::Loda, 4, 3, 1, &data[..30], 1);
+        assert!(matches!(rm, LoadedRm::DetectorCpu { .. }), "lanes=1 keeps the single path");
+        let rm = lane_rm(DetectorKind::Loda, 4, 3, 1, &data[..30], 2);
+        assert_eq!(rm.describe(), "loda(cpu,r=4,lanes=2)");
+        // More lanes than sub-detectors clamp to r.
+        let rm = lane_rm(DetectorKind::RsHash, 3, 3, 1, &data[..30], 16);
+        match &rm {
+            LoadedRm::DetectorCpuLanes { lanes, .. } => assert_eq!(lanes.len(), 3),
+            other => panic!("expected lane RM, got {}", other.describe()),
+        }
+    }
+
+    #[test]
+    fn lane_rm_matches_weighted_slice_reference() {
+        // A 2-lane RM must equal the manual build_slice + weighted-merge
+        // arithmetic of run_batched, bit-for-bit (uneven 5 % 2 partition).
+        let data = stream_data(40, 3);
+        let hy = hyper();
+        for kind in DetectorKind::ALL {
+            let mut spec = DetectorSpec::new(kind, 3, 5, 9);
+            spec.window = hy.window;
+            spec.bins = hy.bins;
+            spec.w = hy.w;
+            spec.modulus = hy.modulus;
+            spec.k = hy.k;
+            let mut lo = spec.build_slice(&data[..30], 0, 3);
+            let mut hi = spec.build_slice(&data[..30], 3, 5);
+            let expect: Vec<f32> = lo
+                .run_stream(&data)
+                .iter()
+                .zip(hi.run_stream(&data))
+                .map(|(a, b)| a * (3.0 / 5.0) + b * (2.0 / 5.0))
+                .collect();
+            let mut rm = lane_rm(kind, 5, 3, 9, &data[..30], 2);
+            let mut got = Vec::new();
+            for flit in ChunkStream::new(&data, 3, 8) {
+                let out = rm.process(&flit, None).unwrap().unwrap();
+                got.extend_from_slice(&out.data[..out.n_valid]);
+            }
+            assert_eq!(got, expect, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn lane_service_is_bit_identical_across_modes_and_pools() {
+        // lanes=2: per-flit vs burst, pooled vs inline — all four streams
+        // must agree bit-for-bit.
+        let data = stream_data(50, 3);
+        let pool = LanePool::new(2);
+        let mut streams: Vec<Vec<f32>> = Vec::new();
+        for mode in ExecMode::ALL {
+            for pooled in [false, true] {
+                let mut rm = lane_rm(DetectorKind::XStream, 4, 3, 7, &data[..30], 2);
+                let (tx_in, rx_in) = Port::link();
+                let (tx_out, rx_out) = Port::link();
+                for f in ChunkStream::new(&data, 3, 8) {
+                    tx_in.send(f).unwrap();
+                }
+                drop(tx_in);
+                let dec = Decoupler::new();
+                let ctl = PblockCtl::default();
+                let p = pooled.then_some(&pool);
+                let report =
+                    Pblock::service_mode(&mut rm, &dec, &ctl, rx_in, tx_out, mode, p).unwrap();
+                assert_eq!(report.samples, 50, "{mode:?} pooled={pooled}");
+                let scores: Vec<f32> =
+                    rx_out.iter().flat_map(|f| f.data[..f.n_valid].to_vec()).collect();
+                assert_eq!(scores.len(), 50);
+                streams.push(scores);
+            }
+        }
+        for s in &streams[1..] {
+            assert_eq!(s, &streams[0], "lane scoring must not depend on mode or pool");
+        }
+    }
+
+    #[test]
+    fn hot_swap_replaces_whole_lane_array() {
+        // A swap staged for a 2-lane partition lands a fresh 2-lane array
+        // between flits; the stream keeps the bypass framing through the
+        // dark window.
+        use crate::config::DarkPolicy;
+        use crate::fabric::reconfig::DfxManager;
+        let data = stream_data(32, 3);
+        let pool = LanePool::new(2);
+        let mut rm = lane_rm(DetectorKind::Loda, 4, 3, 1, &data[..30], 2);
+        let (tx_in, rx_in) = Port::link();
+        let (tx_out, rx_out) = Port::link();
+        for f in ChunkStream::new(&data, 3, 8) {
+            tx_in.send(f).unwrap();
+        }
+        drop(tx_in);
+        let dec = Decoupler::new();
+        let ctl = PblockCtl::default();
+        let swap = DfxManager::default()
+            .stage(
+                1,
+                RmKind::Detector(DetectorKind::RsHash),
+                3,
+                3,
+                5,
+                &hyper(),
+                &data[..30],
+                None,
+                false,
+                1,
+                Some(1),
+                DarkPolicy::Bypass,
+                8,
+                1e5,
+                2,
+            )
+            .unwrap();
+        assert_eq!(swap.rm.describe(), "rshash(cpu,r=3,lanes=2)");
+        ctl.swap.schedule(swap);
+        Pblock::service_burst(&mut rm, &dec, &ctl, rx_in, tx_out, Some(&pool)).unwrap();
+        let outs: Vec<Flit> = rx_out.iter().collect();
+        assert_eq!(outs.len(), 4);
+        assert_eq!(rm.describe(), "rshash(cpu,r=3,lanes=2)");
+        let evs = ctl.swap.take_events();
+        assert_eq!(evs.len(), 1);
+        assert!(evs[0].from.contains("lanes=2"), "{}", evs[0].from);
+        assert!(evs[0].to.contains("lanes=2"), "{}", evs[0].to);
     }
 }

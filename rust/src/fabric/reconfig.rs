@@ -81,7 +81,9 @@ impl Default for DfxManager {
 
 impl DfxManager {
     /// Swap the RM in `pblock`: decouple → build/load new RM → reset →
-    /// recouple. `warmup` seeds parameter ranges for detector RMs.
+    /// recouple. `warmup` seeds parameter ranges for detector RMs; `lanes`
+    /// is the partition's configured lane count (CPU detector RMs load as
+    /// a lane array when it is > 1).
     #[allow(clippy::too_many_arguments)]
     pub fn reconfigure(
         &self,
@@ -94,6 +96,7 @@ impl DfxManager {
         warmup: &[f32],
         fpga: Option<(&RuntimeHandle, &Registry)>,
         quantize: bool,
+        lanes: usize,
     ) -> Result<ReconfigReport> {
         if !pblock.decoupler.is_enabled() {
             bail!(
@@ -105,7 +108,7 @@ impl DfxManager {
         let from = pblock.rm.describe();
         let t0 = Instant::now();
         pblock.decoupler.decouple();
-        let new_rm = LoadedRm::build(rm, r, d, seed, hyper, warmup, fpga, quantize)?;
+        let new_rm = LoadedRm::build(rm, r, d, seed, hyper, warmup, fpga, quantize, lanes)?;
         let old = std::mem::replace(&mut pblock.rm, new_rm);
         drop(old);
         pblock.rm.reset()?;
@@ -163,6 +166,7 @@ mod tests {
                 &warmup,
                 None,
                 false,
+                1,
             )
             .unwrap();
         assert_eq!(rep.from, "empty");
@@ -171,7 +175,7 @@ mod tests {
         assert!(!pb.decoupler.is_decoupled());
         // Swap back to bypass.
         let rep2 = mgr
-            .reconfigure(&mut pb, RmKind::Bypass, 0, 3, 1, &hyper, &[], None, false)
+            .reconfigure(&mut pb, RmKind::Bypass, 0, 3, 1, &hyper, &[], None, false, 1)
             .unwrap();
         assert!(rep2.from.contains("loda"));
         assert_eq!(rep2.to, "bypass(native)");
@@ -197,6 +201,7 @@ mod tests {
                 &warmup,
                 None,
                 false,
+                1,
             )
             .unwrap_err();
         assert!(err.to_string().contains("decoupler is disabled"), "{err}");
@@ -213,6 +218,7 @@ mod tests {
             &warmup,
             None,
             false,
+            1,
         )
         .unwrap();
         assert!(!pb.decoupler.is_decoupled());

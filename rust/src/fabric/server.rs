@@ -58,7 +58,7 @@ use super::reconfig::DfxManager;
 use super::topology::{kind_of, pblock_seed};
 use crate::config::{DetectorHyper, DfxCfg, FseadConfig, RmKind, ScriptedSwap};
 use crate::data::Dataset;
-use crate::ensemble::ExecMode;
+use crate::ensemble::{ExecMode, LanePool};
 use crate::runtime::{Registry, Runtime, RuntimeHandle};
 
 /// Completed-session outcomes retained for clients that have not yet
@@ -281,6 +281,13 @@ struct WorkerEnv {
     chunk: usize,
     exec: ExecMode,
     quantize: bool,
+    /// Configured lane count: each session episode rebuilds the RM with
+    /// this many sub-detector lanes (clamped to the RM's ensemble size).
+    lanes: usize,
+    /// Resident lane workers, spawned once at server start and shared by
+    /// every session episode this partition serves — lane threads live as
+    /// long as the partition worker itself, never per session or burst.
+    pool: Option<LanePool>,
     fpga: Option<(RuntimeHandle, Registry)>,
     dfx: DfxManager,
     dfx_cfg: DfxCfg,
@@ -347,11 +354,20 @@ fn serve_episode(
         error: Some(error),
     };
     let fpga = env.fpga.as_ref().map(|(h, r)| (h, r));
-    let mut rm =
-        match LoadedRm::build(env.rm, env.r, d, env.seed, &env.hyper, warmup, fpga, env.quantize) {
-            Ok(rm) => rm,
-            Err(e) => return failed(format!("building RM: {e:#}")),
-        };
+    let mut rm = match LoadedRm::build(
+        env.rm,
+        env.r,
+        d,
+        env.seed,
+        &env.hyper,
+        warmup,
+        fpga,
+        env.quantize,
+        env.lanes,
+    ) {
+        Ok(rm) => rm,
+        Err(e) => return failed(format!("building RM: {e:#}")),
+    };
     if let Err(e) = rm.reset() {
         return failed(format!("resetting RM: {e:#}"));
     }
@@ -374,6 +390,7 @@ fn serve_episode(
             env.dfx_cfg.policy,
             env.chunk,
             env.dfx_cfg.samples_per_sec,
+            env.lanes,
         );
         match staged {
             Ok(swap) => env.ctl.swap.schedule(swap),
@@ -407,13 +424,22 @@ fn serve_episode(
                 d,
                 warmup: warmup.to_vec(),
                 seed: env.seed,
+                lanes: env.lanes,
             }];
             let handle = hotswap::spawn_controller(cenv, targets, Arc::clone(&stop));
             Some((stop, handle))
         }
         _ => None,
     };
-    let served = Pblock::service_mode(&mut rm, &env.decoupler, &env.ctl, inbox, tx, env.exec);
+    let served = Pblock::service_mode(
+        &mut rm,
+        &env.decoupler,
+        &env.ctl,
+        inbox,
+        tx,
+        env.exec,
+        env.pool.as_ref(),
+    );
     let adaptive_swaps = match controller {
         Some((stop, handle)) => {
             stop.store(true, std::sync::atomic::Ordering::SeqCst);
@@ -452,6 +478,9 @@ fn serve_episode(
 
 struct PartitionHandle {
     rm: RmKind,
+    /// Configured lane count (replacement RMs staged by `schedule_swap`
+    /// keep the partition's lane layout).
+    lanes: usize,
     /// Job queue into the resident worker; mutexed because `std` senders
     /// are not `Sync` and `open` is called from many client threads.
     jobs: Mutex<Sender<SessionWork>>,
@@ -542,6 +571,16 @@ impl FabricServer {
             let (jobs_tx, jobs_rx) = std::sync::mpsc::channel::<SessionWork>();
             let scripted: Vec<ScriptedSwap> =
                 cfg.dfx.swaps.iter().filter(|s| s.pblock == p.id).copied().collect();
+            // The configured lane count is staged as-is (each RM build
+            // clamps to its own ensemble size — identical to the one-shot
+            // fabric, keeping server-vs-fabric swaps bit-identical); only
+            // the pool is sized by the partition's initial r.
+            let lanes = cfg.lanes_for(p);
+            let pool_size = lanes.min(p.r.max(1));
+            // Lane workers are resident: spawned here, once per partition,
+            // before the first session, and reused by every episode.
+            let pool = (!cfg.use_fpga && pool_size > 1 && matches!(p.rm, RmKind::Detector(_)))
+                .then(|| LanePool::new(pool_size));
             let env = WorkerEnv {
                 id: p.id,
                 rm: p.rm,
@@ -551,6 +590,8 @@ impl FabricServer {
                 chunk: cfg.chunk,
                 exec: cfg.exec,
                 quantize: cfg.use_fpga,
+                lanes,
+                pool,
                 fpga: runtime.as_ref().map(|rt| (rt.handle(), rt.registry().clone())),
                 dfx: DfxManager::default(),
                 dfx_cfg: cfg.dfx.clone(),
@@ -566,6 +607,7 @@ impl FabricServer {
                 p.id,
                 PartitionHandle {
                     rm: p.rm,
+                    lanes,
                     jobs: Mutex::new(jobs_tx),
                     ctl,
                     decoupler: Arc::clone(&decoupler),
@@ -737,6 +779,7 @@ impl FabricServer {
             self.cfg.dfx.policy,
             self.cfg.chunk,
             self.cfg.dfx.samples_per_sec,
+            part.lanes,
         )?;
         let info = (swap.model_ms, swap.dark_flits);
         // Arm under the admission lock: the worker clears pending swaps in
@@ -1032,7 +1075,7 @@ mod tests {
         cfg.hyper.bins = 8;
         cfg.hyper.modulus = 32;
         cfg.hyper.k = 4;
-        cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Detector(kind), r, stream: 0 });
+        cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Detector(kind), r, stream: 0, lanes: 0 });
         cfg
     }
 

@@ -82,6 +82,7 @@ impl Fabric {
         let pblocks: Vec<Pblock> = (1..=defaults::NUM_AD_PBLOCKS).map(Pblock::new).collect();
         let mut fabric = Fabric { cfg, streams, runtime, pblocks, dfx: DfxManager::default() };
         fabric.load_all_rms()?;
+        fabric.ensure_lane_pools();
         // Arm the scripted swap schedule (live DFX): the replacement RMs
         // are staged now, each one fires at its flit index during `run()`.
         let scripted = fabric.cfg.dfx.swaps.clone();
@@ -125,6 +126,28 @@ impl Fabric {
         Ok(())
     }
 
+    /// Spawn (or retire) each partition's resident lane workers to match
+    /// its configured lane count. Pools persist across runs, bursts and
+    /// hot-swaps; only a lane-count change rebuilds one. CPU-native
+    /// detector RMs only — the modelled FPGA path executes as a single
+    /// artifact invocation.
+    fn ensure_lane_pools(&mut self) {
+        for p in &self.cfg.pblocks {
+            let want = if !self.cfg.use_fpga && matches!(p.rm, RmKind::Detector(_)) {
+                self.cfg.lanes_for(p).min(p.r.max(1))
+            } else {
+                1
+            };
+            let pb = &mut self.pblocks[p.id - 1];
+            let have = pb.pool.as_ref().map_or(1, |pool| pool.workers());
+            if want > 1 && have != want {
+                pb.pool = Some(crate::ensemble::LanePool::new(want));
+            } else if want <= 1 {
+                pb.pool = None;
+            }
+        }
+    }
+
     /// Swap the RM in pblock `id` (run-time DFX). Returns the report with
     /// modelled and measured latency.
     pub fn reconfigure(
@@ -145,6 +168,14 @@ impl Fabric {
         };
         let fpga = self.runtime.as_ref().map(|rt| (rt.handle(), rt.registry().clone()));
         let seed = pblock_seed(self.cfg.seed, id);
+        // The partition keeps its configured lane count across swaps.
+        let lanes = self
+            .cfg
+            .pblocks
+            .iter()
+            .find(|p| p.id == id)
+            .map(|p| self.cfg.lanes_for(p))
+            .unwrap_or_else(|| self.cfg.lanes.max(1));
         let report = self.dfx.reconfigure(
             &mut self.pblocks[id - 1],
             rm,
@@ -155,6 +186,7 @@ impl Fabric {
             warmup,
             fpga.as_ref().map(|(h, r)| (h, r)),
             self.cfg.use_fpga, // artifacts are the quantized builds
+            lanes,
         )?;
         // Track the new assignment in the config (so run() wires it).
         if let Some(pcfg) = self.cfg.pblocks.iter_mut().find(|p| p.id == id) {
@@ -162,9 +194,10 @@ impl Fabric {
             pcfg.r = r;
             pcfg.stream = stream;
         } else {
-            self.cfg.pblocks.push(crate::config::PblockCfg { id, rm, r, stream });
+            self.cfg.pblocks.push(crate::config::PblockCfg { id, rm, r, stream, lanes: 0 });
             self.cfg.pblocks.sort_by_key(|p| p.id);
         }
+        self.ensure_lane_pools();
         Ok(report)
     }
 
@@ -225,6 +258,7 @@ impl Fabric {
             self.cfg.dfx.policy,
             self.cfg.chunk,
             self.cfg.dfx.samples_per_sec,
+            self.cfg.lanes_for(pcfg),
         )?;
         let info = (swap.model_ms, swap.dark_flits);
         pb.ctl.swap.schedule(swap);
@@ -482,6 +516,7 @@ impl Fabric {
                     d: ds.d,
                     warmup: ds.warmup(cfg.hyper.window).to_vec(),
                     seed: pblock_seed(cfg.seed, p.id),
+                    lanes: cfg.lanes_for(p),
                 });
             }
             let env = ControllerEnv {
@@ -512,11 +547,14 @@ impl Fabric {
                     let id = pb.id;
                     let dec = Arc::clone(&pb.decoupler);
                     let ctl = Arc::clone(&pb.ctl);
+                    // Disjoint field borrows: the service thread mutates the
+                    // RM while sharing the partition's resident lane pool.
+                    let pool = pb.pool.as_ref();
                     let rm = &mut pb.rm;
                     let mode = cfg.exec;
                     handles.push((
                         id,
-                        s.spawn(move || Pblock::service_mode(rm, &dec, &ctl, rx, tx, mode)),
+                        s.spawn(move || Pblock::service_mode(rm, &dec, &ctl, rx, tx, mode, pool)),
                     ));
                 }
                 for (id, h) in handles.drain(..) {
@@ -560,6 +598,11 @@ impl Fabric {
             out.swap_events.extend(evs);
         }
         out.swap_events.sort_by_key(|e| (e.at_flit, e.pblock));
+        // A swap may have put a multi-lane detector into a partition that
+        // had no pool (or changed what the pool should serve): re-sync the
+        // resident workers so the next run scores with full lane
+        // parallelism instead of silently falling back to inline.
+        self.ensure_lane_pools();
         for t in combo_threads {
             t.join().map_err(|_| anyhow::anyhow!("combo thread panicked"))??;
         }
@@ -590,7 +633,14 @@ impl Fabric {
                 (
                     p.id,
                     match p.rm {
-                        RmKind::Detector(k) => format!("{}(r={})", k.as_str(), p.r),
+                        RmKind::Detector(k) => {
+                            let lanes = self.cfg.lanes_for(p).min(p.r.max(1));
+                            if lanes > 1 && !self.cfg.use_fpga {
+                                format!("{}(r={},lanes={lanes})", k.as_str(), p.r)
+                            } else {
+                                format!("{}(r={})", k.as_str(), p.r)
+                            }
+                        }
                         other => other.as_str().to_string(),
                     },
                 )

@@ -36,6 +36,7 @@ fn fig7a_direct_routes_cpu() {
             rm: RmKind::Detector(DetectorKind::Loda),
             r: 3,
             stream: id - 1,
+            lanes: 0,
         });
     }
     let streams: Vec<Dataset> = (0..7).map(|i| tiny("s", 150, 3, i as u64)).collect();
@@ -73,6 +74,7 @@ fn fig7c_homogeneous_combo_cpu() {
             rm: RmKind::Detector(DetectorKind::RsHash),
             r: 2,
             stream: 0,
+            lanes: 0,
         });
     }
     cfg.combos.push(ComboCfg {
@@ -115,7 +117,13 @@ fn fig7d_heterogeneous_mixture_cpu() {
         DetectorKind::XStream,
     ];
     for (i, k) in kinds.iter().enumerate() {
-        cfg.pblocks.push(PblockCfg { id: i + 1, rm: RmKind::Detector(*k), r: 2, stream: 0 });
+        cfg.pblocks.push(PblockCfg {
+            id: i + 1,
+            rm: RmKind::Detector(*k),
+            r: 2,
+            stream: 0,
+            lanes: 0,
+        });
     }
     cfg.combos.push(ComboCfg {
         id: 1,
@@ -141,6 +149,7 @@ fn runtime_reconfiguration_swaps_detectors() {
         rm: RmKind::Detector(DetectorKind::Loda),
         r: 2,
         stream: 0,
+        lanes: 0,
     });
     let ds = tiny("reconf", 100, 3, 9);
     let mut fabric = Fabric::new(cfg, vec![ds]).unwrap();
@@ -176,6 +185,7 @@ fn streaming_state_persists_across_runs() {
         rm: RmKind::Detector(DetectorKind::RsHash),
         r: 2,
         stream: 0,
+        lanes: 0,
     });
     let ds = tiny("warm", 80, 3, 11);
     let mut fabric = Fabric::new(cfg, vec![ds]).unwrap();
@@ -205,6 +215,7 @@ fn fabric_on_pjrt_matches_cpu_fabric() {
                 rm: RmKind::Detector(DetectorKind::Loda),
                 r: 4, // test artifact size
                 stream: 0,
+                lanes: 0,
             });
         }
         cfg.combos.push(ComboCfg { id: 1, method: "avg".into(), inputs: vec![1, 2], weights: vec![] });
@@ -250,7 +261,13 @@ fn burst_fabric_matches_per_flit_fabric_exactly() {
         cfg.exec = exec;
         cfg.chunk = 16;
         for (i, k) in kinds.iter().enumerate() {
-            cfg.pblocks.push(PblockCfg { id: i + 1, rm: RmKind::Detector(*k), r: 2, stream: 0 });
+            cfg.pblocks.push(PblockCfg {
+                id: i + 1,
+                rm: RmKind::Detector(*k),
+                r: 2,
+                stream: 0,
+                lanes: 0,
+            });
         }
         cfg.combos.push(ComboCfg {
             id: 1,
@@ -297,6 +314,7 @@ fn mid_run_hot_swap_isolates_to_target_pblock() {
                 rm: RmKind::Detector(DetectorKind::Loda),
                 r: 2,
                 stream: 0,
+                lanes: 0,
             });
         }
         cfg
@@ -412,6 +430,7 @@ fn hot_swap_refused_without_decoupler() {
         rm: RmKind::Detector(DetectorKind::Loda),
         r: 2,
         stream: 0,
+        lanes: 0,
     });
     let ds = tiny("nodec", 60, 3, 5);
     let fabric = Fabric::new(cfg, vec![ds]).unwrap();
@@ -432,8 +451,20 @@ fn empty_fabric_errors() {
 #[test]
 fn combo_across_streams_rejected() {
     let mut cfg = cpu_cfg();
-    cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Detector(DetectorKind::Loda), r: 2, stream: 0 });
-    cfg.pblocks.push(PblockCfg { id: 2, rm: RmKind::Detector(DetectorKind::Loda), r: 2, stream: 1 });
+    cfg.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 2,
+        stream: 0,
+        lanes: 0,
+    });
+    cfg.pblocks.push(PblockCfg {
+        id: 2,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 2,
+        stream: 1,
+        lanes: 0,
+    });
     cfg.combos.push(ComboCfg { id: 1, method: "avg".into(), inputs: vec![1, 2], weights: vec![] });
     let streams = vec![tiny("a", 50, 3, 1), tiny("b", 50, 3, 2)];
     assert!(Fabric::new(cfg, streams).is_err());

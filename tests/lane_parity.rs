@@ -1,0 +1,253 @@
+//! Multi-lane pblock parity: intra-partition instance parallelism must not
+//! change what the data plane computes.
+//!
+//! Contract under test (see `fabric::pblock` module docs):
+//!
+//! - `lanes = 1` is **bit-identical** to the pre-lane service path — the
+//!   single-detector RM and the exact service loops the golden-vector and
+//!   server bit-identity suites pin down.
+//! - `lanes > 1` changes only the f32 summation order of the ensemble mean
+//!   (the established 1e-5 partition tolerance vs `lanes = 1`), including
+//!   across mid-stream DFX swaps and server session re-opens, and covering
+//!   uneven `r % lanes != 0` partitions.
+//! - Lane workers are **resident**: spawned once per partition when the
+//!   server (or fabric) comes up, and never again — not per session, not
+//!   per burst.
+//!
+//! Tests serialize on one mutex so the process-wide lane-worker spawn
+//! counter gives deterministic deltas.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::data::Dataset;
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::ensemble::lanes::total_workers_spawned;
+use fsead::ensemble::ExecMode;
+use fsead::fabric::server::{FabricServer, SessionSpec};
+use fsead::fabric::{pblock_seed, Fabric};
+
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny(name: &'static str, n: usize, d: usize, seed: u64) -> Dataset {
+    let p = DatasetProfile { name, n, d, outliers: n / 20, clusters: 2 };
+    generate_profile(&p, seed)
+}
+
+/// Single-pblock CPU fabric with an explicit per-pblock lane count.
+fn lane_cfg(exec: ExecMode, kind: DetectorKind, r: usize, lanes: usize) -> FseadConfig {
+    let mut cfg = FseadConfig { use_fpga: false, chunk: 16, exec, ..FseadConfig::default() };
+    cfg.hyper.window = 16;
+    cfg.hyper.bins = 8;
+    cfg.hyper.modulus = 32;
+    cfg.hyper.k = 4;
+    cfg.pblocks.push(PblockCfg { id: 1, rm: RmKind::Detector(kind), r, stream: 0, lanes });
+    cfg
+}
+
+fn run_scores(cfg: &FseadConfig, ds: &Dataset) -> Vec<f32> {
+    let mut fabric = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap();
+    let out = fabric.run().unwrap();
+    out.pblock_scores[&1].clone()
+}
+
+/// The established partition tolerance: lane counts only reorder the f32
+/// ensemble-mean summation.
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = 1e-5 * x.abs().max(y.abs()).max(1.0);
+        assert!((x - y).abs() <= tol, "{what}: sample {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn single_lane_is_bit_identical_to_standalone_detector() {
+    // lanes = 1 (explicit or inherited) must be the pre-lane data plane:
+    // exact f32 equality with the standalone detector, in both exec modes.
+    let _guard = serial();
+    let ds = tiny("lane1", 150, 3, 41);
+    for exec in ExecMode::ALL {
+        let cfg = lane_cfg(exec, DetectorKind::Loda, 4, 1);
+        let got = run_scores(&cfg, &ds);
+        let mut spec = DetectorSpec::new(DetectorKind::Loda, 3, 4, pblock_seed(cfg.seed, 1));
+        spec.window = cfg.hyper.window;
+        spec.bins = cfg.hyper.bins;
+        spec.w = cfg.hyper.w;
+        spec.modulus = cfg.hyper.modulus;
+        spec.k = cfg.hyper.k;
+        let mut det = spec.build(ds.warmup(cfg.hyper.window));
+        assert_eq!(got, det.run_stream(&ds.data), "{exec:?}");
+        // Inheriting the [fabric] default is the same single-lane path.
+        let mut inherit = lane_cfg(exec, DetectorKind::Loda, 4, 0);
+        inherit.lanes = 1;
+        assert_eq!(run_scores(&inherit, &ds), got, "{exec:?} inherited");
+    }
+}
+
+#[test]
+fn multi_lane_matches_single_lane_within_partition_tolerance() {
+    // lanes ∈ {2, 4} vs lanes = 1 for every detector and both exec modes;
+    // r = 6 gives an uneven 2+2+1+1 split at 4 lanes.
+    let _guard = serial();
+    let ds = tiny("lanes24", 150, 3, 42);
+    for kind in DetectorKind::ALL {
+        for exec in ExecMode::ALL {
+            let base = run_scores(&lane_cfg(exec, kind, 6, 1), &ds);
+            assert_eq!(base.len(), 150);
+            for lanes in [2usize, 4] {
+                let got = run_scores(&lane_cfg(exec, kind, 6, lanes), &ds);
+                assert_close(&got, &base, &format!("{kind:?} {exec:?} lanes={lanes}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn uneven_lane_partition_is_covered() {
+    // r % lanes != 0 both ways: r = 5 over 2 and 3 lanes.
+    let _guard = serial();
+    let ds = tiny("uneven", 120, 3, 43);
+    for lanes in [2usize, 3] {
+        let base = run_scores(&lane_cfg(ExecMode::Batched, DetectorKind::RsHash, 5, 1), &ds);
+        let got = run_scores(&lane_cfg(ExecMode::Batched, DetectorKind::RsHash, 5, lanes), &ds);
+        assert_close(&got, &base, &format!("uneven lanes={lanes}"));
+    }
+}
+
+#[test]
+fn lane_scores_are_bit_identical_across_exec_modes() {
+    // For a fixed lane count the two drain strategies must agree exactly:
+    // chunk boundaries never change update_batch arithmetic, and the lane
+    // merge is per sample.
+    let _guard = serial();
+    let ds = tiny("lanemodes", 140, 3, 44);
+    for kind in DetectorKind::ALL {
+        let lockstep = run_scores(&lane_cfg(ExecMode::LockStep, kind, 4, 2), &ds);
+        let batched = run_scores(&lane_cfg(ExecMode::Batched, kind, 4, 2), &ds);
+        assert_eq!(lockstep, batched, "{kind:?}");
+    }
+}
+
+#[test]
+fn mid_stream_swap_keeps_lane_parity() {
+    // A live DFX swap on a 2-lane partition stages a whole 2-lane
+    // replacement array; outside-the-dark-window scores stay within the
+    // partition tolerance of the single-lane run, and the dark window is
+    // zero in both.
+    let _guard = serial();
+    let ds = tiny("laneswap", 150, 3, 45);
+    for exec in ExecMode::ALL {
+        let mut outputs = Vec::new();
+        for lanes in [1usize, 2] {
+            let cfg = lane_cfg(exec, DetectorKind::Loda, 4, lanes);
+            let mut fabric = Fabric::new(cfg, vec![ds.clone()]).unwrap();
+            fabric
+                .schedule_swap(1, 3, RmKind::Detector(DetectorKind::RsHash), 4, Some(2))
+                .unwrap();
+            let out = fabric.run().unwrap();
+            assert_eq!(out.swap_events.len(), 1, "{exec:?} lanes={lanes}");
+            let ev = &out.swap_events[0];
+            assert_eq!((ev.at_flit, ev.dark_flits, ev.bypassed), (3, 2, 2));
+            if lanes > 1 {
+                assert!(ev.from.contains("lanes=2"), "{}", ev.from);
+                assert!(ev.to.contains("lanes=2"), "swap must stage a lane array: {}", ev.to);
+            }
+            outputs.push(out.pblock_scores[&1].clone());
+        }
+        let (base, laned) = (&outputs[0], &outputs[1]);
+        // Dark window (flits 3-4 → samples 48..80) is bypassed to zeros.
+        assert!(laned[48..80].iter().all(|&v| v == 0.0), "{exec:?}");
+        assert_close(laned, base, &format!("{exec:?} swap"));
+    }
+}
+
+#[test]
+fn server_sessions_reuse_resident_lane_workers() {
+    // The multi-session stress case with lanes > 1: session scores stay
+    // bit-identical to `Fabric::run` with the same lane count across
+    // session re-opens and client churn, and the spawn counter proves the
+    // lane workers came up once per partition — at server start — and
+    // never again (not per session, not per burst).
+    let _guard = serial();
+    let ds = tiny("laneserve", 160, 3, 46);
+    let mut cfg = FseadConfig { use_fpga: false, chunk: 16, ..FseadConfig::default() };
+    cfg.hyper.window = 16;
+    cfg.hyper.bins = 8;
+    cfg.hyper.modulus = 32;
+    cfg.hyper.k = 4;
+    cfg.lanes = 2; // [fabric] default, inherited by both partitions
+    for id in 1..=2usize {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 5, // uneven 3+2 lane split
+            stream: 0,
+            lanes: 0,
+        });
+    }
+    // Reference pass (its fabric pools are torn down with the fabric).
+    let reference: Vec<Vec<f32>> = {
+        let mut fabric = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap();
+        let out = fabric.run().unwrap();
+        (1..=2).map(|id| out.pblock_scores[&id].clone()).collect()
+    };
+
+    let before = total_workers_spawned();
+    let server = FabricServer::start(cfg.clone()).unwrap();
+    let after_start = total_workers_spawned();
+    assert_eq!(after_start - before, 4, "2 partitions × 2 resident lane workers");
+
+    // Sequential re-opens on a pinned partition: every episode rebuilds
+    // the lane array, reuses the pool, and reproduces the fabric pass.
+    for round in 0..3 {
+        let mut s = server
+            .open(SessionSpec::for_dataset(&ds, cfg.hyper.window).on_pblock(1))
+            .unwrap();
+        s.push(&ds.data).unwrap();
+        let closed = s.close().unwrap();
+        assert_eq!(closed.scores, reference[0], "round {round}");
+    }
+
+    // Concurrent churn across both partitions.
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for client in 0..4usize {
+            let ds = &ds;
+            let cfg = &cfg;
+            let server = &server;
+            let reference = &reference;
+            handles.push(scope.spawn(move || {
+                for _ in 0..2 {
+                    let mut s =
+                        server.open(SessionSpec::for_dataset(ds, cfg.hyper.window)).unwrap();
+                    let pblock = s.pblock();
+                    let cut = 70 * ds.d;
+                    s.push(&ds.data[..cut]).unwrap();
+                    s.push(&ds.data[cut..]).unwrap();
+                    let closed = s.close().unwrap();
+                    assert_eq!(
+                        closed.scores,
+                        reference[pblock - 1],
+                        "client {client} on RP-{pblock}"
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    assert_eq!(
+        total_workers_spawned(),
+        after_start,
+        "sessions and bursts must never respawn lane workers"
+    );
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.sessions_served, 11);
+}

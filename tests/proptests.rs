@@ -240,6 +240,7 @@ fn fabric_conserves_samples_cpu() {
                 rm: RmKind::Detector(kind),
                 r: g.usize_in(1, 4),
                 stream: 0,
+                lanes: 0,
             });
         }
         if use_combo {

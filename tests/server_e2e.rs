@@ -52,7 +52,13 @@ fn session_scores_are_bit_identical_to_fabric_run() {
     for exec in ExecMode::ALL {
         let mut cfg = cpu_cfg(exec, 16);
         for (i, k) in kinds.iter().enumerate() {
-            cfg.pblocks.push(PblockCfg { id: i + 1, rm: RmKind::Detector(*k), r: 2, stream: 0 });
+            cfg.pblocks.push(PblockCfg {
+                id: i + 1,
+                rm: RmKind::Detector(*k),
+                r: 2,
+                stream: 0,
+                lanes: 0,
+            });
         }
         let mut fabric = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap();
         let fabric_out = fabric.run().unwrap();
@@ -98,6 +104,7 @@ fn mid_session_swap_is_bit_identical_to_fabric_swap() {
                 rm: RmKind::Detector(DetectorKind::Loda),
                 r: 2,
                 stream: 0,
+                lanes: 0,
             });
         }
         let mut fabric = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap();
@@ -205,6 +212,7 @@ fn interleaved_session_churn_has_no_leakage_and_shutdown_is_clean() {
             rm: RmKind::Detector(DetectorKind::Loda),
             r: 2,
             stream: 0,
+            lanes: 0,
         });
     }
     let server = FabricServer::start(cfg.clone()).unwrap();
