@@ -1,0 +1,174 @@
+//! Bench: fault-recovery cost — the price of the supervisor's rung-1
+//! ladder, measured on a streaming fabric (1 Loda pblock, chunk 16). Each
+//! timed faulted pass injects scripted state corruption at three points in
+//! the stream; every corruption is screened at the output, reloaded
+//! through the DFX stage path and resumed from the latest checkpoint. A
+//! clean pass of the same workload (campaign disabled) gives the baseline,
+//! so the delta prices detection + screen + reload + restore end to end.
+//!
+//! Emits `BENCH_faults.json`: per-mode wall times clean vs faulted, the
+//! reload count, how many reloads resumed from a checkpoint, the mean
+//! in-supervisor recovery latency and the samples lost to screening + dark
+//! windows (gates: every injection recovers at rung 1, every reload is a
+//! checkpoint resume, nothing quarantines, score framing is preserved).
+
+mod bench_util;
+use bench_util::{cap, Bench};
+
+use fsead::config::{DarkPolicy, FseadConfig, InjectSpec, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::ExecMode;
+use fsead::fabric::Fabric;
+
+const CHUNK: usize = 16;
+
+fn topology(exec: ExecMode, inject_at: &[u64]) -> FseadConfig {
+    let mut cfg = FseadConfig::default();
+    cfg.use_fpga = false;
+    cfg.exec = exec;
+    cfg.chunk = CHUNK;
+    cfg.hyper.window = 16;
+    cfg.hyper.bins = 8;
+    cfg.hyper.modulus = 32;
+    cfg.hyper.k = 4;
+    cfg.dfx.policy = DarkPolicy::Bypass;
+    cfg.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 4,
+        stream: 0,
+        lanes: 0,
+    });
+    if !inject_at.is_empty() {
+        cfg.faults.enabled = true;
+        cfg.faults.checkpoint_every_flits = 8;
+        cfg.faults.dark_flits = Some(1);
+        cfg.faults.max_reloads = 32;
+        cfg.faults.backoff_ms = 0;
+        // Generous margins so a loaded CI box never times the screen wait
+        // out or trips the watchdog on a slow flit.
+        cfg.faults.reload_wait_ms = 5_000;
+        cfg.faults.stall_timeout_ms = 2_000;
+        for (i, &at) in inject_at.iter().enumerate() {
+            cfg.faults.injections.push(InjectSpec {
+                id: format!("seu{i}"),
+                pblock: 1,
+                at_flit: at,
+                kind: "state_corrupt".into(),
+                lane: 0,
+                ms: 0,
+            });
+        }
+    }
+    cfg
+}
+
+struct Row {
+    mode: &'static str,
+    secs_clean: f64,
+    secs_faulted: f64,
+    reloads: usize,
+    checkpoint_restores: usize,
+    mean_recovery_us: f64,
+    samples_zeroed: u64,
+}
+
+fn main() {
+    let bench = Bench::new("fault_recovery");
+    let n = cap();
+    let p = DatasetProfile { name: "faults", n, d: 4, outliers: n / 100, clusters: 3 };
+    let ds = generate_profile(&p, 42);
+    let n = ds.n();
+    let total_flits = n.div_ceil(CHUNK) as u64;
+    // Three corruption points spread through the stream, all past the first
+    // checkpoint so every reload can resume instead of cold-starting.
+    assert!(total_flits >= 64, "FSEAD_BENCH_SAMPLES too small for the fault campaign");
+    let inject_at: Vec<u64> = [4u64, 8, 12].iter().map(|q| total_flits * q / 16).collect();
+    let n_inj = inject_at.len();
+
+    let mut rows: Vec<Row> = Vec::new();
+    for mode in ExecMode::ALL {
+        // Baseline: same workload, fault campaign disabled.
+        let mut clean = Fabric::new(topology(mode, &[]), vec![ds.clone()]).unwrap();
+        let secs_clean = bench.run(&format!("clean/{}", mode.as_str()), || {
+            clean.reset_all().unwrap();
+            let out = clean.run().unwrap();
+            assert!(out.fault_events.is_empty());
+        });
+
+        // Faulted: the scripted campaign re-arms on every pass; each
+        // corruption must end in a checkpoint-resumed rung-1 reload.
+        let mut faulty = Fabric::new(topology(mode, &inject_at), vec![ds.clone()]).unwrap();
+        let mut last = None;
+        let secs_faulted = bench.run(&format!("faulted/{}", mode.as_str()), || {
+            faulty.reset_all().unwrap();
+            let out = faulty.run().unwrap();
+            assert_eq!(out.pblock_scores[&1].len(), n, "score framing must survive faults");
+            last = Some((out.fault_events.clone(), out.swap_events.clone()));
+        });
+        let (events, swaps) = last.expect("at least one timed pass");
+
+        let count = |a: &str| events.iter().filter(|e| e.action == a).count();
+        assert_eq!(count("injected"), n_inj, "every scripted fault fires");
+        assert_eq!(count("nonfinite_detected"), n_inj, "every corruption is screened");
+        assert_eq!(count("reloaded"), n_inj, "every corruption recovers at rung 1");
+        assert_eq!(count("quarantined"), 0, "nothing escalates to rung 2");
+        let reloaded: Vec<_> = events.iter().filter(|e| e.action == "reloaded").collect();
+        let checkpoint_restores =
+            reloaded.iter().filter(|e| e.checkpoint_flit.is_some()).count();
+        assert_eq!(checkpoint_restores, n_inj, "every reload resumes from a checkpoint");
+        let mean_recovery_us = reloaded.iter().map(|e| e.latency_us as f64).sum::<f64>()
+            / reloaded.len().max(1) as f64;
+        // Lost coverage: the screened (zeroed) corrupt flits plus the dark
+        // window each reload charges, in samples.
+        let dark_lost: u64 = swaps.iter().map(|s| s.bypassed + s.dropped).sum();
+        let samples_zeroed = (n_inj as u64 + dark_lost) * CHUNK as u64;
+
+        println!(
+            "  -> {}: faulted pass {:.1} ms vs {:.1} ms clean; {} reloads ({} from \
+             checkpoint), mean recovery {:.0} µs, {} samples zeroed",
+            mode.as_str(),
+            secs_faulted * 1e3,
+            secs_clean * 1e3,
+            reloaded.len(),
+            checkpoint_restores,
+            mean_recovery_us,
+            samples_zeroed
+        );
+        rows.push(Row {
+            mode: mode.as_str(),
+            secs_clean,
+            secs_faulted,
+            reloads: reloaded.len(),
+            checkpoint_restores,
+            mean_recovery_us,
+            samples_zeroed,
+        });
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"fault_recovery\",\n");
+    json.push_str(&format!(
+        "  \"n\": {n},\n  \"chunk\": {CHUNK},\n  \"injections\": {n_inj},\n  \"rows\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"seconds_clean\": {:.6}, \"seconds_faulted\": {:.6}, \
+             \"reloads\": {}, \"checkpoint_restores\": {}, \"mean_recovery_us\": {:.1}, \
+             \"samples_zeroed\": {}}}{}\n",
+            r.mode,
+            r.secs_clean,
+            r.secs_faulted,
+            r.reloads,
+            r.checkpoint_restores,
+            r.mean_recovery_us,
+            r.samples_zeroed,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_faults.json", &json) {
+        Ok(()) => println!("wrote BENCH_faults.json"),
+        Err(e) => eprintln!("could not write BENCH_faults.json: {e}"),
+    }
+}

@@ -143,6 +143,113 @@ impl Default for DfxCfg {
     }
 }
 
+/// What the input DMA does with non-finite sample values (NaN/±Inf) at
+/// ingress (`[fabric] non_finite`). Corrupt input is the most common
+/// real-world fault; screening it at the DMA keeps garbage out of every
+/// detector window at once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NonFinite {
+    /// Refuse the stream: the run fails with a diagnostic naming the first
+    /// offending sample. Default — silent corruption is worse than a stop.
+    Error,
+    /// Sanitize in place: NaN → 0.0, ±Inf → ±f32::MAX.
+    Clamp,
+}
+
+impl NonFinite {
+    pub fn parse(s: &str) -> Option<NonFinite> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(NonFinite::Error),
+            "clamp" => Some(NonFinite::Clamp),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            NonFinite::Error => "error",
+            NonFinite::Clamp => "clamp",
+        }
+    }
+}
+
+/// Fault kinds accepted in `[fabric.faults.inject.N]` — kept as strings
+/// here (converted by `fabric::faults::InjectedFault::from_spec`) so the
+/// config layer stays free of fabric types.
+pub const FAULT_KINDS: [&str; 5] =
+    ["lane_panic", "worker_exit", "state_corrupt", "stall", "inbox_stall"];
+
+/// One scripted fault injection (`[fabric.faults.inject.N]`).
+#[derive(Clone, Debug)]
+pub struct InjectSpec {
+    /// Injection id, echoed in every event it produces (defaults to the
+    /// section suffix `N`).
+    pub id: String,
+    /// Target partition (1-based pblock id).
+    pub pblock: usize,
+    /// Partition-input flit at which the fault fires.
+    pub at_flit: u64,
+    /// One of [`FAULT_KINDS`].
+    pub kind: String,
+    /// Lane (for `lane_panic`) or worker (for `worker_exit`) index.
+    pub lane: usize,
+    /// Stall duration in milliseconds (for `stall` / `inbox_stall`).
+    pub ms: u64,
+}
+
+/// Fault-injection + recovery configuration (`[fabric.faults]`). Entirely
+/// off by default: with `enabled = false` none of the fault hooks in the
+/// data plane run and the fabric is bit-transparent to this section.
+#[derive(Clone, Debug)]
+pub struct FaultsCfg {
+    /// Master switch (also raised by `fsead --faults`).
+    pub enabled: bool,
+    /// Seed for the pseudo-random injection plan (0 = derive from the
+    /// fabric seed).
+    pub seed: u64,
+    /// Background fault rate per partition, in faults per 1000 input
+    /// flits (0 = scripted injections only).
+    pub rate_per_kflit: f64,
+    /// Checkpoint the detector state every N healthy flits (0 = never; a
+    /// rung-1 reload then cold-starts instead of resuming).
+    pub checkpoint_every_flits: u64,
+    /// Duration of randomly planned stall faults.
+    pub stall_ms: u64,
+    /// Heartbeat watchdog: a partition stuck *processing* longer than this
+    /// is flagged as stalled.
+    pub stall_timeout_ms: u64,
+    /// Rung-1 reloads per partition before rung 2 quarantines it.
+    pub max_reloads: u32,
+    /// Base backoff before a reload; doubles per successive reload.
+    pub backoff_ms: u64,
+    /// Dark-window override for supervisor reloads (None = Table-13 model,
+    /// same as a planned swap).
+    pub dark_flits: Option<u64>,
+    /// How long the service loop blocks waiting for a requested reload to
+    /// be staged before carrying on degraded.
+    pub reload_wait_ms: u64,
+    /// Scripted injections (`[fabric.faults.inject.N]`).
+    pub injections: Vec<InjectSpec>,
+}
+
+impl Default for FaultsCfg {
+    fn default() -> Self {
+        FaultsCfg {
+            enabled: false,
+            seed: 0,
+            rate_per_kflit: 0.0,
+            checkpoint_every_flits: 8,
+            stall_ms: 20,
+            stall_timeout_ms: 10,
+            max_reloads: 2,
+            backoff_ms: 1,
+            dark_flits: None,
+            reload_wait_ms: 100,
+            injections: vec![],
+        }
+    }
+}
+
 /// Streaming-session server configuration (`[fabric.server]`), consumed by
 /// [`crate::fabric::server::FabricServer`] and the `fsead serve` CLI.
 #[derive(Clone, Copy, Debug)]
@@ -252,6 +359,10 @@ pub struct FseadConfig {
     pub dfx: DfxCfg,
     /// Streaming-session server settings (`[fabric.server]`).
     pub server: ServerCfg,
+    /// Fault injection + supervised recovery (`[fabric.faults]`).
+    pub faults: FaultsCfg,
+    /// Ingress policy for non-finite sample values (`[fabric] non_finite`).
+    pub non_finite: NonFinite,
 }
 
 impl Default for FseadConfig {
@@ -269,6 +380,8 @@ impl Default for FseadConfig {
             combos: vec![],
             dfx: DfxCfg::default(),
             server: ServerCfg::default(),
+            faults: FaultsCfg::default(),
+            non_finite: NonFinite::Error,
         }
     }
 }
@@ -307,6 +420,10 @@ impl FseadConfig {
                 bail!("[fabric]: lanes must be >= 1 (got {v})");
             }
             cfg.lanes = v as usize;
+        }
+        if let Some(v) = doc.get_str("fabric", "non_finite") {
+            cfg.non_finite = NonFinite::parse(v)
+                .with_context(|| format!("[fabric]: unknown non_finite policy {v:?}"))?;
         }
         if let Some(v) = doc.get_int("detector", "window") {
             cfg.hyper.window = v as usize;
@@ -404,6 +521,74 @@ impl FseadConfig {
             cfg.dfx.swaps.push(ScriptedSwap { pblock, at_flit, rm, r, dark_flits });
         }
         cfg.dfx.swaps.sort_by_key(|s| (s.at_flit, s.pblock));
+        // [fabric.faults] — fault injection + supervised recovery
+        if let Some(v) = doc.get_bool("fabric.faults", "enabled") {
+            cfg.faults.enabled = v;
+        }
+        if let Some(v) = doc.get_int("fabric.faults", "seed") {
+            cfg.faults.seed = v as u64;
+        }
+        if let Some(v) = doc.get_float("fabric.faults", "rate_per_kflit") {
+            if v < 0.0 {
+                bail!("[fabric.faults]: rate_per_kflit must be >= 0 (got {v})");
+            }
+            cfg.faults.rate_per_kflit = v;
+        }
+        if let Some(v) = doc.get_int("fabric.faults", "checkpoint_every_flits") {
+            if v < 0 {
+                bail!("[fabric.faults]: checkpoint_every_flits must be >= 0 (got {v})");
+            }
+            cfg.faults.checkpoint_every_flits = v as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.faults", "stall_ms") {
+            cfg.faults.stall_ms = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.faults", "stall_timeout_ms") {
+            cfg.faults.stall_timeout_ms = v.max(1) as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.faults", "max_reloads") {
+            if v < 0 {
+                bail!("[fabric.faults]: max_reloads must be >= 0 (got {v})");
+            }
+            cfg.faults.max_reloads = v as u32;
+        }
+        if let Some(v) = doc.get_int("fabric.faults", "backoff_ms") {
+            cfg.faults.backoff_ms = v.max(0) as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.faults", "dark_flits") {
+            if v <= 0 {
+                bail!("[fabric.faults]: dark_flits must be >= 1 (got {v})");
+            }
+            cfg.faults.dark_flits = Some(v as u64);
+        }
+        if let Some(v) = doc.get_int("fabric.faults", "reload_wait_ms") {
+            cfg.faults.reload_wait_ms = v.max(0) as u64;
+        }
+        // [fabric.faults.inject.N] — scripted injections
+        for name in doc.sections_with_prefix("fabric.faults.inject.") {
+            let suffix = &name["fabric.faults.inject.".len()..];
+            let id = doc.get_str(name, "id").unwrap_or(suffix).to_string();
+            let pblock = doc
+                .get_int(name, "pblock")
+                .with_context(|| format!("[{name}]: missing pblock id"))?
+                as usize;
+            let at_flit =
+                doc.get_int(name, "at_flit").with_context(|| format!("[{name}]: missing at_flit"))?
+                    as u64;
+            let kind =
+                doc.get_str(name, "kind").with_context(|| format!("[{name}]: missing kind"))?;
+            let lane = doc.get_int(name, "lane").map(|v| v.max(0) as usize).unwrap_or(0);
+            let ms = doc.get_int(name, "ms").map(|v| v.max(1) as u64).unwrap_or(20);
+            cfg.faults.injections.push(InjectSpec {
+                id,
+                pblock,
+                at_flit,
+                kind: kind.to_string(),
+                lane,
+                ms,
+            });
+        }
+        cfg.faults.injections.sort_by(|a, b| (a.at_flit, a.pblock).cmp(&(b.at_flit, b.pblock)));
         // [pblock.N] sections
         for name in doc.sections_with_prefix("pblock.") {
             let id: usize = name["pblock.".len()..]
@@ -538,6 +723,22 @@ impl FseadConfig {
             }
             if matches!(s.rm, RmKind::Detector(_)) && s.r == 0 {
                 bail!("[fabric.dfx.swap]: detector swap for pblock {} has r = 0", s.pblock);
+            }
+        }
+        for inj in &self.faults.injections {
+            if !FAULT_KINDS.contains(&inj.kind.as_str()) {
+                bail!(
+                    "[fabric.faults.inject]: unknown fault kind {:?} (expected one of {})",
+                    inj.kind,
+                    FAULT_KINDS.join(" | ")
+                );
+            }
+            if !(1..=defaults::NUM_AD_PBLOCKS).contains(&inj.pblock) {
+                bail!(
+                    "[fabric.faults.inject]: pblock id must be 1..={} (got {})",
+                    defaults::NUM_AD_PBLOCKS,
+                    inj.pblock
+                );
             }
         }
         Ok(())
@@ -948,6 +1149,95 @@ r = 2
         // Negative values must not wrap into unbounded queues.
         assert!(FseadConfig::from_str("[fabric.server]\ninbox_flits = -1\n").is_err());
         assert!(FseadConfig::from_str("[fabric.server]\nmax_waiters = -3\n").is_err());
+    }
+
+    #[test]
+    fn faults_default_entirely_off() {
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert!(!cfg.faults.enabled);
+        assert_eq!(cfg.faults.rate_per_kflit, 0.0);
+        assert!(cfg.faults.injections.is_empty());
+        assert_eq!(cfg.faults.checkpoint_every_flits, 8);
+        assert_eq!(cfg.faults.max_reloads, 2);
+        assert_eq!(cfg.faults.dark_flits, None);
+        assert_eq!(cfg.non_finite, NonFinite::Error);
+    }
+
+    #[test]
+    fn faults_section_parses() {
+        let text = r#"
+[fabric]
+non_finite = "clamp"
+
+[pblock.1]
+rm = "loda"
+
+[fabric.faults]
+enabled = true
+seed = 9
+rate_per_kflit = 2.5
+checkpoint_every_flits = 4
+stall_ms = 15
+stall_timeout_ms = 5
+max_reloads = 3
+backoff_ms = 2
+dark_flits = 1
+reload_wait_ms = 50
+
+[fabric.faults.inject.1]
+pblock = 1
+at_flit = 40
+kind = "state_corrupt"
+
+[fabric.faults.inject.2]
+id = "wedge"
+pblock = 1
+at_flit = 10
+kind = "stall"
+ms = 12
+
+[fabric.faults.inject.3]
+pblock = 1
+at_flit = 20
+kind = "lane_panic"
+lane = 1
+"#;
+        let cfg = FseadConfig::from_str(text).unwrap();
+        assert_eq!(cfg.non_finite, NonFinite::Clamp);
+        assert!(cfg.faults.enabled);
+        assert_eq!(cfg.faults.seed, 9);
+        assert_eq!(cfg.faults.rate_per_kflit, 2.5);
+        assert_eq!(cfg.faults.checkpoint_every_flits, 4);
+        assert_eq!(cfg.faults.stall_ms, 15);
+        assert_eq!(cfg.faults.stall_timeout_ms, 5);
+        assert_eq!(cfg.faults.max_reloads, 3);
+        assert_eq!(cfg.faults.backoff_ms, 2);
+        assert_eq!(cfg.faults.dark_flits, Some(1));
+        assert_eq!(cfg.faults.reload_wait_ms, 50);
+        // Sorted by (at_flit, pblock); id defaults to the section suffix.
+        assert_eq!(cfg.faults.injections.len(), 3);
+        assert_eq!(cfg.faults.injections[0].id, "wedge");
+        assert_eq!(cfg.faults.injections[0].at_flit, 10);
+        assert_eq!(cfg.faults.injections[0].ms, 12);
+        assert_eq!(cfg.faults.injections[1].kind, "lane_panic");
+        assert_eq!(cfg.faults.injections[1].lane, 1);
+        assert_eq!(cfg.faults.injections[2].id, "1");
+        assert_eq!(cfg.faults.injections[2].kind, "state_corrupt");
+    }
+
+    #[test]
+    fn faults_validation_rejects_bad_sections() {
+        // Unknown fault kind.
+        let bad = "[fabric.faults.inject.1]\npblock = 1\nat_flit = 1\nkind = \"gamma_ray\"\n";
+        assert!(FseadConfig::from_str(bad).is_err());
+        // Pblock out of range.
+        let bad = "[fabric.faults.inject.1]\npblock = 9\nat_flit = 1\nkind = \"stall\"\n";
+        assert!(FseadConfig::from_str(bad).is_err());
+        // Negative rate / zero dark window.
+        assert!(FseadConfig::from_str("[fabric.faults]\nrate_per_kflit = -1.0\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.faults]\ndark_flits = 0\n").is_err());
+        // Unknown non_finite policy.
+        assert!(FseadConfig::from_str("[fabric]\nnon_finite = \"ignore\"\n").is_err());
     }
 
     #[test]

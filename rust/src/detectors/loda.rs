@@ -122,6 +122,14 @@ impl Detector for Loda {
     fn name(&self) -> &'static str {
         "loda"
     }
+
+    fn window_state(&self) -> Option<&SlidingCounts> {
+        Some(&self.counts)
+    }
+
+    fn window_state_mut(&mut self) -> Option<&mut SlidingCounts> {
+        Some(&mut self.counts)
+    }
 }
 
 impl Loda {

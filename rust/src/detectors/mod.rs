@@ -55,6 +55,30 @@ pub trait Detector: Send {
         let d = self.d();
         xs.chunks_exact(d).map(|x| self.update(x)).collect()
     }
+
+    /// The detector's mutable sliding-window state, if it has one. All the
+    /// dynamic state of the CPU cores lives in a [`window::SlidingCounts`]
+    /// (parameters and derived caches rebuild deterministically from the
+    /// seed + warm-up), so exposing it is enough for checkpoint/restore
+    /// ([`crate::fabric::snapshot`]) and fault injection.
+    fn window_state(&self) -> Option<&window::SlidingCounts> {
+        None
+    }
+
+    /// Mutable access to the sliding-window state (see
+    /// [`Detector::window_state`]).
+    fn window_state_mut(&mut self) -> Option<&mut window::SlidingCounts> {
+        None
+    }
+
+    /// Fault-injection hook: corrupt the window state so subsequent scores
+    /// go non-finite ([`window::SlidingCounts::poison`]). No-op for
+    /// detectors without window state.
+    fn poison_state(&mut self) {
+        if let Some(w) = self.window_state_mut() {
+            w.poison();
+        }
+    }
 }
 
 /// Detector algorithm selector.

@@ -121,6 +121,14 @@ impl Detector for RsHash {
     fn name(&self) -> &'static str {
         "rshash"
     }
+
+    fn window_state(&self) -> Option<&SlidingCounts> {
+        Some(&self.counts)
+    }
+
+    fn window_state_mut(&mut self) -> Option<&mut SlidingCounts> {
+        Some(&mut self.counts)
+    }
 }
 
 impl RsHash {

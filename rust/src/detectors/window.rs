@@ -148,6 +148,59 @@ impl SlidingCounts {
         &self.counts
     }
 
+    /// Raw eviction ring (row-major `rows × window`) — checkpoint surface.
+    pub fn ring(&self) -> &[i32] {
+        &self.ring
+    }
+
+    /// Current ring slot — checkpoint surface.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Fault-injection hook: corrupt the cached score denominator so every
+    /// subsequent score goes non-finite. Models an SEU-style upset of
+    /// detector state without breaking the count-table invariants — the
+    /// window keeps evicting correctly, only the scores are poisoned, which
+    /// is exactly what the supervisor's non-finite scan detects. (During the
+    /// fill phase `advance` would refresh the cache and self-heal; in the
+    /// steady state the poison persists until a reset or restore.)
+    pub fn poison(&mut self) {
+        self.log2_denom = f32::NAN;
+    }
+
+    /// Restore a previously exported state (counts + ring + cursor). The
+    /// shape must match this window's `rows × width × window` exactly —
+    /// checkpoints never cross detector geometries.
+    pub fn load(
+        &mut self,
+        counts: &[i32],
+        ring: &[i32],
+        pos: usize,
+        n: u64,
+        log2_denom: f32,
+    ) -> Result<(), String> {
+        if counts.len() != self.counts.len() || ring.len() != self.ring.len() {
+            return Err(format!(
+                "window shape mismatch: {}x{} counts / ring {} vs snapshot {} / {}",
+                self.rows,
+                self.width,
+                self.ring.len(),
+                counts.len(),
+                ring.len()
+            ));
+        }
+        if pos >= self.window {
+            return Err(format!("ring position {pos} out of range (window {})", self.window));
+        }
+        self.counts.copy_from_slice(counts);
+        self.ring.copy_from_slice(ring);
+        self.pos = pos;
+        self.n = n;
+        self.log2_denom = log2_denom;
+        Ok(())
+    }
+
     /// Total count in one row — invariant: `min(n, window)`.
     pub fn row_total(&self, row: usize) -> i64 {
         self.counts[row * self.width..(row + 1) * self.width]
@@ -254,6 +307,47 @@ mod tests {
         sc.reset();
         assert_eq!(sc.log2_denom(), 0.0);
         assert_eq!(sc.log2_denom(), sc.denom().log2());
+    }
+
+    #[test]
+    fn load_roundtrips_exported_state() {
+        let mut src = SlidingCounts::new(2, 8, 4);
+        let mut p = Prng::new(9);
+        for _ in 0..11 {
+            let idxs: Vec<i32> = (0..2).map(|_| p.below(8) as i32).collect();
+            src.insert(&idxs);
+        }
+        let mut dst = SlidingCounts::new(2, 8, 4);
+        dst.load(src.counts(), src.ring(), src.pos(), src.n(), src.log2_denom()).unwrap();
+        assert_eq!(dst.counts(), src.counts());
+        assert_eq!(dst.ring(), src.ring());
+        assert_eq!(dst.pos(), src.pos());
+        assert_eq!(dst.n(), src.n());
+        assert_eq!(dst.log2_denom(), src.log2_denom());
+        // Continued streams stay in lock-step after the transplant.
+        for _ in 0..9 {
+            let idxs: Vec<i32> = (0..2).map(|_| p.below(8) as i32).collect();
+            src.insert(&idxs);
+            dst.insert(&idxs);
+            assert_eq!(dst.counts(), src.counts());
+        }
+        // Shape mismatches are refused.
+        let mut other = SlidingCounts::new(2, 4, 4);
+        assert!(other.load(src.counts(), src.ring(), src.pos(), src.n(), 1.0).is_err());
+    }
+
+    #[test]
+    fn poison_makes_scores_non_finite_until_restored() {
+        let mut sc = SlidingCounts::new(1, 4, 3);
+        for i in 0..6 {
+            sc.insert(&[(i % 4) as i32]); // past the fill phase: cache frozen
+        }
+        sc.poison();
+        assert!(sc.log2_denom().is_nan());
+        sc.insert(&[1]); // steady state: advance must not refresh the cache
+        assert!(sc.log2_denom().is_nan());
+        sc.reset();
+        assert_eq!(sc.log2_denom(), 0.0);
     }
 
     #[test]

@@ -167,6 +167,14 @@ impl Detector for XStream {
     fn name(&self) -> &'static str {
         "xstream"
     }
+
+    fn window_state(&self) -> Option<&SlidingCounts> {
+        Some(&self.counts)
+    }
+
+    fn window_state_mut(&mut self) -> Option<&mut SlidingCounts> {
+        Some(&mut self.counts)
+    }
 }
 
 impl XStream {

@@ -32,13 +32,68 @@
 //! partition tolerance) and a single lane is bit-identical to the
 //! unpartitioned ensemble loop.
 
+//! # Fault containment
+//!
+//! Workers score inside `catch_unwind` when the pool is fault-armed
+//! ([`LanePool::arm_faults`]): a panicking detector rolls its sliding
+//! window back to the pre-job state and retries once, so a transient panic
+//! (including an injected one) recovers **bit-exactly** on the worker —
+//! rung 0 of the supervisor's escalation ladder. A second panic, or a
+//! worker that genuinely dies, still surfaces as the PR-5 clean `Err` on
+//! the caller; [`LanePool::respawn`] then restores the worker threads
+//! without touching lane state, and the caller decides whether to retry
+//! the burst or escalate to an RM reload.
+
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::detectors::{Detector, DetectorSpec};
+
+/// Sentinel for "no lane/worker selected" in the fault-injection cells.
+const NONE_SELECTED: usize = usize::MAX;
+
+/// One contained lane fault, reported by the worker that handled it.
+#[derive(Clone, Debug)]
+pub struct LaneFaultNote {
+    pub lane: usize,
+    pub worker: usize,
+    /// Taxonomy tag: `lane_panic_retried` (rolled back + rescored in
+    /// place, bit-exact) or `lane_panic_unrecovered` (retry also panicked;
+    /// the caller must reload the RM).
+    pub kind: &'static str,
+    /// Catch → successful retry (or final failure) latency.
+    pub latency_us: u64,
+    pub detail: String,
+}
+
+/// State shared between a pool handle and its workers: fault arming,
+/// one-shot injection cells and the contained-fault log.
+struct PoolShared {
+    armed: AtomicBool,
+    /// Lane index whose next job panics once (consumed by the worker).
+    panic_lane: AtomicUsize,
+    /// Worker index that exits after its next job (simulated thread death).
+    exit_worker: AtomicUsize,
+    notes: Mutex<Vec<LaneFaultNote>>,
+}
+
+impl PoolShared {
+    fn new() -> PoolShared {
+        PoolShared {
+            armed: AtomicBool::new(false),
+            panic_lane: AtomicUsize::new(NONE_SELECTED),
+            exit_worker: AtomicUsize::new(NONE_SELECTED),
+            notes: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn note(&self, n: LaneFaultNote) {
+        self.notes.lock().unwrap().push(n);
+    }
+}
 
 /// Lane worker threads spawned process-wide (telemetry; the residency tests
 /// assert this does not grow per burst or per server session).
@@ -205,6 +260,9 @@ struct JobDone {
     lane: usize,
     det: Box<dyn Detector>,
     out: Vec<f32>,
+    /// The job panicked twice (rollback retry included): the partials are
+    /// unusable and the caller must reload the RM.
+    failed: bool,
 }
 
 struct PoolIo {
@@ -218,32 +276,81 @@ struct PoolIo {
 /// each pool has a single logical user, its partition's service loop).
 pub struct LanePool {
     io: Mutex<PoolIo>,
-    handles: Vec<JoinHandle<()>>,
+    shared: Arc<PoolShared>,
+    workers: usize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn spawn_worker(w: usize, shared: Arc<PoolShared>) -> (Sender<Job>, JoinHandle<()>) {
+    let (job_tx, job_rx) = channel::<Job>();
+    WORKERS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+    let handle = std::thread::Builder::new()
+        .name(format!("lane-{w}"))
+        .spawn(move || worker_loop(w, shared, job_rx))
+        .expect("spawn lane worker");
+    (job_tx, handle)
 }
 
 impl LanePool {
     /// Spawn `workers` resident lane threads.
     pub fn new(workers: usize) -> LanePool {
         assert!(workers > 0, "a lane pool needs at least one worker");
+        let shared = Arc::new(PoolShared::new());
         let mut jobs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (job_tx, job_rx) = channel::<Job>();
-            WORKERS_SPAWNED.fetch_add(1, Ordering::SeqCst);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("lane-{w}"))
-                    .spawn(move || worker_loop(job_rx))
-                    .expect("spawn lane worker"),
-            );
+            let (job_tx, handle) = spawn_worker(w, Arc::clone(&shared));
             jobs.push(job_tx);
+            handles.push(handle);
         }
-        LanePool { io: Mutex::new(PoolIo { jobs }), handles }
+        LanePool { io: Mutex::new(PoolIo { jobs }), shared, workers, handles: Mutex::new(handles) }
     }
 
     /// Resident worker threads in this pool.
     pub fn workers(&self) -> usize {
-        self.handles.len()
+        self.workers
+    }
+
+    /// Arm fault containment: workers score inside `catch_unwind` with a
+    /// pre-job window checkpoint, so a panicking lane rolls back and
+    /// retries in place. Off by default — the unarmed hot path is exactly
+    /// the pre-fault-tolerance code.
+    pub fn arm_faults(&self) {
+        self.shared.armed.store(true, Ordering::SeqCst);
+    }
+
+    /// Inject a one-shot panic into lane `lane`'s next job (consumed by the
+    /// worker that picks it up).
+    pub fn inject_lane_panic(&self, lane: usize) {
+        self.shared.panic_lane.store(lane, Ordering::SeqCst);
+    }
+
+    /// Inject a one-shot worker death: worker `worker` finishes (and
+    /// replies to) its next job, then exits its loop — the next dispatch to
+    /// it fails like a genuine thread death, exercising the respawn path
+    /// without losing any detector.
+    pub fn inject_worker_exit(&self, worker: usize) {
+        self.shared.exit_worker.store(worker % self.workers, Ordering::SeqCst);
+    }
+
+    /// Drain the contained-fault log (panics caught and retried by the
+    /// workers since the last call).
+    pub fn take_fault_notes(&self) -> Vec<LaneFaultNote> {
+        std::mem::take(&mut *self.shared.notes.lock().unwrap())
+    }
+
+    /// Respawn every worker slot: fresh job channels and threads replace
+    /// the old ones (a live old worker parks out when its sender drops; a
+    /// dead one is simply superseded). Lane state is untouched — after a
+    /// respawn the caller retries the failed burst on the same lane array.
+    pub fn respawn(&self) {
+        let mut io = self.io.lock().unwrap();
+        let mut handles = self.handles.lock().unwrap();
+        for w in 0..self.workers {
+            let (job_tx, handle) = spawn_worker(w, Arc::clone(&self.shared));
+            io.jobs[w] = job_tx;
+            handles.push(handle);
+        }
     }
 
     /// Score rows `[0, n)` of `input` through every lane concurrently:
@@ -266,6 +373,8 @@ impl LanePool {
         // than a hang. Long jobs simply take as long as they take — the
         // same semantics as the scoped join this pool replaced.
         let (reply_tx, reply_rx) = channel::<JobDone>();
+        let mut sent = 0usize;
+        let mut dead_worker: Option<usize> = None;
         for (li, lane) in lanes.iter_mut().enumerate() {
             let Some(det) = lane.det.take() else {
                 return Err(lost_lane(li));
@@ -280,18 +389,47 @@ impl LanePool {
                 out: std::mem::take(&mut lane.out),
                 reply: reply_tx.clone(),
             };
-            io.jobs[li % io.jobs.len()]
-                .send(job)
-                .map_err(|_| anyhow!("lane worker exited — lane pool is dead"))?;
+            match io.jobs[li % io.jobs.len()].send(job) {
+                Ok(()) => sent += 1,
+                Err(std::sync::mpsc::SendError(job)) => {
+                    // The worker's receiver is gone (thread death): recover
+                    // this lane's detector and stop dispatching — lanes that
+                    // did ship still round-trip below, so the array stays
+                    // whole and a respawn + retry can recover the burst.
+                    lane.det = Some(job.det);
+                    lane.out = job.out;
+                    dead_worker = Some(li % io.jobs.len());
+                    break;
+                }
+            }
         }
         drop(reply_tx);
-        for _ in 0..lanes.len() {
-            let done = reply_rx.recv().map_err(|_| {
-                anyhow!("a lane worker died mid-burst (detector panicked?) — lane results lost")
-            })?;
+        let mut failed_lane: Option<usize> = None;
+        let mut got = 0usize;
+        while got < sent {
+            let Ok(done) = reply_rx.recv() else {
+                break; // a worker died mid-job: its lane's detector is lost
+            };
             let lane = &mut lanes[done.lane];
             lane.det = Some(done.det);
             lane.out = done.out;
+            if done.failed {
+                failed_lane = Some(done.lane);
+            }
+            got += 1;
+        }
+        if got < sent {
+            return Err(anyhow!(
+                "a lane worker died mid-burst (detector panicked?) — lane results lost"
+            ));
+        }
+        if let Some(w) = dead_worker {
+            return Err(anyhow!("lane worker {w} is dead — respawn the pool and retry the burst"));
+        }
+        if let Some(l) = failed_lane {
+            return Err(anyhow!(
+                "lane {l} panicked during scoring and its rollback retry failed — reload the RM"
+            ));
         }
         Ok(())
     }
@@ -302,20 +440,99 @@ impl Drop for LanePool {
         // Dropping the job senders parks every worker out of its recv loop;
         // join so no lane thread outlives its partition.
         self.io.get_mut().unwrap().jobs.clear();
-        for h in self.handles.drain(..) {
+        for h in self.handles.get_mut().unwrap().drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker_loop(jobs: Receiver<Job>) {
+fn worker_loop(worker: usize, shared: Arc<PoolShared>, jobs: Receiver<Job>) {
     while let Ok(job) = jobs.recv() {
         let Job { lane, mut det, input, n, chunk, weight, mut out, reply } = job;
-        run_lane_job(det.as_mut(), input.rows(), n, chunk, weight, &mut out);
+        let mut failed = false;
+        if !shared.armed.load(Ordering::Relaxed) {
+            // Unarmed hot path: exactly the pre-fault-tolerance scoring.
+            run_lane_job(det.as_mut(), input.rows(), n, chunk, weight, &mut out);
+        } else {
+            // Fault-armed: checkpoint the lane's window so a caught panic
+            // can roll back to the pre-job state and rescore bit-exactly.
+            let saved = det.window_state().cloned();
+            let inject = shared
+                .panic_lane
+                .compare_exchange(lane, NONE_SELECTED, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok();
+            let t0 = std::time::Instant::now();
+            let mut attempt = 0usize;
+            loop {
+                let first = attempt == 0;
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if inject && first {
+                        panic!("injected fault: panic in lane {lane} on worker {worker}");
+                    }
+                    run_lane_job(det.as_mut(), input.rows(), n, chunk, weight, &mut out);
+                }));
+                match res {
+                    Ok(()) => {
+                        if attempt > 0 {
+                            shared.note(LaneFaultNote {
+                                lane,
+                                worker,
+                                kind: "lane_panic_retried",
+                                latency_us: t0.elapsed().as_micros() as u64,
+                                detail: format!(
+                                    "rolled back and rescored after {attempt} panic(s)"
+                                ),
+                            });
+                        }
+                        break;
+                    }
+                    Err(_) => {
+                        if let (Some(w), Some(cur)) = (saved.as_ref(), det.window_state_mut()) {
+                            let _ = cur.load(
+                                w.counts(),
+                                w.ring(),
+                                w.pos(),
+                                w.n(),
+                                w.log2_denom(),
+                            );
+                        }
+                        attempt += 1;
+                        if attempt > 1 {
+                            failed = true;
+                            shared.note(LaneFaultNote {
+                                lane,
+                                worker,
+                                kind: "lane_panic_unrecovered",
+                                latency_us: t0.elapsed().as_micros() as u64,
+                                detail: "rollback retry panicked again — RM reload required"
+                                    .to_string(),
+                            });
+                            break;
+                        }
+                    }
+                }
+            }
+        }
         drop(input); // release the shared rows before handing back (burst
                      // scratch reclamation relies on the refcount dropping)
-        if reply.send(JobDone { lane, det, out }).is_err() {
+        if reply.send(JobDone { lane, det, out, failed }).is_err() {
             continue; // caller aborted this burst; keep serving the pool
+        }
+        // Injected thread death fires only after the reply so no detector
+        // is ever lost to it: the *next* dispatch to this worker fails.
+        if shared
+            .exit_worker
+            .compare_exchange(worker, NONE_SELECTED, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            shared.note(LaneFaultNote {
+                lane,
+                worker,
+                kind: "worker_exit",
+                latency_us: 0,
+                detail: format!("worker {worker} exited after its job (injected)"),
+            });
+            break;
         }
     }
 }
@@ -417,6 +634,65 @@ mod tests {
         // All lane clones dropped once score() returned: the burst scratch
         // allocation comes back to the caller.
         assert!(Arc::try_unwrap(rows).is_ok(), "workers must not retain the rows");
+    }
+
+    #[test]
+    fn injected_lane_panic_is_caught_rolled_back_and_retried_bit_exactly() {
+        let data = stream(48, 3, 6);
+        let sp = spec(DetectorKind::Loda, 4);
+        let warmup = &data[..16 * 3];
+        let input = LaneInput::Rows(Arc::new(data.clone()));
+
+        let mut clean = build_lanes(&sp, warmup, 2);
+        let clean_pool = LanePool::new(2);
+        clean_pool.score(&mut clean, &input, 48, usize::MAX).unwrap();
+        let mut want = vec![0f32; 48];
+        merge_lanes_into(&clean, &mut want);
+
+        let mut lanes = build_lanes(&sp, warmup, 2);
+        let pool = LanePool::new(2);
+        pool.arm_faults();
+        pool.inject_lane_panic(1);
+        pool.score(&mut lanes, &input, 48, usize::MAX).unwrap();
+        let mut got = vec![0f32; 48];
+        merge_lanes_into(&lanes, &mut got);
+        assert_eq!(got, want, "rollback + retry must be bit-exact");
+        let notes = pool.take_fault_notes();
+        assert_eq!(notes.len(), 1);
+        assert_eq!((notes[0].lane, notes[0].kind), (1, "lane_panic_retried"));
+        assert!(pool.take_fault_notes().is_empty(), "notes drain once");
+    }
+
+    #[test]
+    fn injected_worker_exit_is_recovered_by_respawn() {
+        let data = stream(32, 3, 8);
+        let sp = spec(DetectorKind::RsHash, 4);
+        let warmup = &data[..16 * 3];
+        let input = LaneInput::Rows(Arc::new(data.clone()));
+
+        let mut reference = build_lanes(&sp, warmup, 2);
+        let mut lanes = build_lanes(&sp, warmup, 2);
+        let pool = LanePool::new(2);
+        pool.arm_faults();
+        pool.inject_worker_exit(0);
+        // The worker replies before exiting, so this call still succeeds…
+        pool.score(&mut lanes, &input, 32, usize::MAX).unwrap();
+        score_inline(&mut reference, &input, 32, usize::MAX).unwrap();
+        // …and the next dispatch hits the dead worker: clean Err, no lane
+        // detector lost.
+        let err = pool.score(&mut lanes, &input, 32, usize::MAX).unwrap_err();
+        assert!(err.to_string().contains("respawn the pool"), "{err}");
+        assert!(lanes.iter().all(|l| l.det().is_some()), "no detector may be lost");
+        pool.respawn();
+        pool.score(&mut lanes, &input, 32, usize::MAX).unwrap();
+        score_inline(&mut reference, &input, 32, usize::MAX).unwrap();
+        let mut got = vec![0f32; 32];
+        let mut want = vec![0f32; 32];
+        merge_lanes_into(&lanes, &mut got);
+        merge_lanes_into(&reference, &mut want);
+        assert_eq!(got, want, "post-respawn scoring must match the inline reference");
+        let kinds: Vec<&str> = pool.take_fault_notes().iter().map(|n| n.kind).collect();
+        assert!(kinds.contains(&"worker_exit"), "{kinds:?}");
     }
 
     #[test]

@@ -46,6 +46,9 @@ pub struct ExpCtx {
     /// instance parallelism via resident lane workers. None keeps the
     /// config file's `[fabric] lanes` / `[pblock.N] lanes` values.
     pub lanes: Option<usize>,
+    /// Force the fault campaign on (`--faults`), regardless of
+    /// `[fabric.faults] enabled` in the config.
+    pub faults: bool,
 }
 
 impl Default for ExpCtx {
@@ -60,6 +63,7 @@ impl Default for ExpCtx {
             exec: None,
             dfx: false,
             lanes: None,
+            faults: false,
         }
     }
 }
@@ -121,6 +125,9 @@ pub fn cli_main(args: &[String]) -> Result<i32> {
             }
             "--dfx" => {
                 ctx.dfx = true;
+            }
+            "--faults" => {
+                ctx.faults = true;
             }
             "--lanes" => {
                 let v: usize = next(args, &mut i)?.parse().context("--lanes")?;
@@ -224,6 +231,11 @@ FLAGS:
                     (intra-partition lanes scored by resident lane worker
                     threads; default 1, also settable via `lanes` in
                     [fabric] or per [pblock.N]; CPU-native RMs only)
+  --faults          enable the fault campaign for `fsead run`: scripted
+                    ([fabric.faults.inject.N]) and seeded random faults are
+                    injected while the partition supervisor recovers through
+                    the retry/reload/quarantine ladder; every fault and
+                    recovery step is printed as a FAULT line
 "
     .to_string()
 }
@@ -281,6 +293,9 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
     if ctx.dfx {
         cfg.dfx.adaptive = true;
     }
+    if ctx.faults {
+        cfg.faults.enabled = true;
+    }
     if let Some(lanes) = ctx.lanes {
         cfg.override_lanes(lanes);
     }
@@ -331,6 +346,17 @@ fn run_config(ctx: &ExpCtx, path: &str) -> Result<()> {
     );
     for ev in &out.swap_events {
         println!("  DFX swap {ev}");
+    }
+    for ev in &out.fault_events {
+        println!("  FAULT {ev}");
+    }
+    if fabric.config().faults.enabled {
+        let clamped: u64 = out.dma_reports.values().map(|r| r.clamped).sum();
+        println!(
+            "  fault campaign: {} event(s) recorded, {} input value(s) clamped at ingress",
+            out.fault_events.len(),
+            clamped
+        );
     }
     if fabric.config().dfx.adaptive {
         println!(

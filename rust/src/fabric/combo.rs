@@ -8,6 +8,7 @@ use anyhow::{bail, Context, Result};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
+use super::decoupler::Decoupler;
 use super::message::{score_chunk, Flit};
 use crate::combine::ScoreCombiner;
 use crate::runtime::RuntimeHandle;
@@ -37,6 +38,10 @@ impl ComboEngine {
 pub struct ComboReport {
     pub flits_out: u64,
     pub samples: u64,
+    /// Inputs dropped from the join because their partition was
+    /// quarantined by the fault supervisor (the combine renormalized over
+    /// the survivors from that flit on).
+    pub quarantined_inputs: u64,
 }
 
 /// Join `inputs` (1..=4 score streams) and emit the combined stream.
@@ -45,27 +50,70 @@ pub fn service(
     inputs: Vec<Receiver<Flit>>,
     tx: Sender<Flit>,
 ) -> Result<ComboReport> {
+    let guards = vec![None; inputs.len()];
+    service_guarded(engine, inputs, guards, tx)
+}
+
+/// [`service`] with per-input quarantine guards. When input `i`'s channel
+/// closes and `guards[i]` reports a quarantined partition, the input is
+/// deactivated instead of failing the join: the remaining streams keep
+/// advancing in lock-step and the combine renormalizes over the survivors
+/// (weighted-average weights are re-filtered to the active slots; the
+/// device engine zeroes the slot's lane of the active mask, keeping slot
+/// positions stable). A closed input with no guard — or a quarantined
+/// *sole* survivor — still ends or fails the stream exactly as before, so
+/// the guarded path is bit-transparent while every input is healthy.
+pub fn service_guarded(
+    engine: &ComboEngine,
+    inputs: Vec<Receiver<Flit>>,
+    guards: Vec<Option<Arc<Decoupler>>>,
+    tx: Sender<Flit>,
+) -> Result<ComboReport> {
     if inputs.is_empty() || inputs.len() > 4 {
         bail!("combo pblocks have 1..=4 input ports (got {})", inputs.len());
     }
+    if guards.len() != inputs.len() {
+        bail!("combo guards ({}) must match inputs ({})", guards.len(), inputs.len());
+    }
+    let n_ports = inputs.len();
+    let mut active = vec![true; n_ports];
     let mut report = ComboReport::default();
-    let mut flits: Vec<Flit> = Vec::with_capacity(inputs.len());
+    // Flits tagged with their input slot, so a degraded join keeps the
+    // slot-positional semantics (wavg weights, device active mask).
+    let mut flits: Vec<(usize, Flit)> = Vec::with_capacity(n_ports);
     'stream: loop {
-        // Lock-step join: one flit from every input.
+        // Lock-step join: one flit from every still-active input.
         flits.clear();
         for (i, rx) in inputs.iter().enumerate() {
+            if !active[i] {
+                continue;
+            }
             match rx.recv() {
-                Ok(f) => flits.push(f),
+                Ok(f) => flits.push((i, f)),
                 Err(_) => {
-                    if i == 0 && flits.is_empty() {
+                    let quarantined =
+                        guards[i].as_ref().map_or(false, |g| g.is_quarantined());
+                    let survivors = active.iter().filter(|a| **a).count();
+                    if quarantined && survivors > 1 {
+                        // The partition was isolated by the fault ladder
+                        // and has drained: drop it from the join and keep
+                        // going on the survivors.
+                        active[i] = false;
+                        report.quarantined_inputs += 1;
+                        continue;
+                    }
+                    if flits.is_empty() {
                         break 'stream; // clean end of stream
                     }
                     bail!("combo input {i} closed mid-join");
                 }
             }
         }
-        let first = &flits[0];
-        for (i, f) in flits.iter().enumerate() {
+        if flits.is_empty() {
+            break; // every input quarantined-drained this round
+        }
+        let first = &flits[0].1;
+        for (i, f) in &flits {
             if f.seq != first.seq || f.n_valid != first.n_valid || f.mask.len() != first.mask.len()
             {
                 bail!(
@@ -78,30 +126,50 @@ pub fn service(
             }
         }
         let rows = first.mask.len();
+        let degraded = flits.len() < n_ports;
         let combined: Vec<f32> = match engine {
             ComboEngine::Native(c) => {
-                let views: Vec<&[f32]> = flits.iter().map(|f| &f.data[..]).collect();
-                c.combine(&views)
+                let views: Vec<&[f32]> = flits.iter().map(|(_, f)| &f.data[..]).collect();
+                if !degraded {
+                    // All inputs healthy: the original combiner, bit-identical.
+                    c.combine(&views)
+                } else {
+                    match c {
+                        // Positional wavg weights must follow the surviving
+                        // slots, then the combine renormalizes over them.
+                        ScoreCombiner::WeightedAverage(w) => {
+                            let w2: Vec<f32> = flits
+                                .iter()
+                                .map(|(i, _)| w.get(*i).copied().unwrap_or(0.0))
+                                .collect();
+                            ScoreCombiner::WeightedAverage(w2).combine(&views)
+                        }
+                        other => other.combine(&views),
+                    }
+                }
             }
             ComboEngine::Fpga { handle, method, weights, chunk } => {
                 if rows != *chunk {
                     bail!("combo artifact chunk {} != flit rows {rows}", chunk);
                 }
                 // Interleave into [C,4] with an active mask over inputs.
+                // Slot positions are stable: a quarantined input keeps its
+                // lane zeroed with active[slot] = 0, mirroring a combo
+                // pblock whose upstream port is decoupled.
                 let mut scores = vec![0f32; rows * 4];
-                let mut active = [0f32; 4];
-                for (k, f) in flits.iter().enumerate() {
-                    active[k] = 1.0;
+                let mut active_mask = [0f32; 4];
+                for (k, f) in &flits {
+                    active_mask[*k] = 1.0;
                     for (i, &v) in f.data.iter().enumerate() {
                         scores[i * 4 + k] = v;
                     }
                 }
                 handle
-                    .run_combo(method, scores, active.to_vec(), weights.clone())
+                    .run_combo(method, scores, active_mask.to_vec(), weights.clone())
                     .context("combo artifact execution")?
             }
         };
-        let last = flits.iter().any(|f| f.last);
+        let last = flits.iter().any(|(_, f)| f.last);
         report.flits_out += 1;
         report.samples += first.n_valid as u64;
         let out = score_chunk(first.seq, combined, first.mask.clone(), first.n_valid, last);
@@ -187,6 +255,57 @@ mod tests {
         service(&engine, vec![a], tx).unwrap();
         let f = rx.recv().unwrap();
         assert_eq!(&f.mask[..], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn quarantined_input_renormalizes_weighted_average() {
+        // Input 1 delivers one flit, then its partition is quarantined and
+        // the stream drains. The join must renormalize over input 0 from
+        // the next flit on, using input 0's *positional* weight.
+        let a = feed(vec![vec![1.0, 3.0], vec![5.0, 7.0], vec![9.0, 11.0]], 2);
+        let b = feed(vec![vec![3.0, 5.0]], 99);
+        let guard = Arc::new(Decoupler::new());
+        guard.quarantine();
+        let (tx, rx) = Port::link();
+        let w = vec![0.75f32, 0.25];
+        let engine = ComboEngine::Native(ScoreCombiner::WeightedAverage(w.clone()));
+        let report =
+            service_guarded(&engine, vec![a, b], vec![None, Some(guard)], tx).unwrap();
+        assert_eq!(report.flits_out, 3);
+        assert_eq!(report.quarantined_inputs, 1);
+        // Round 1: both inputs present — the plain weighted average.
+        let f0 = rx.recv().unwrap();
+        let tot = w[0] + w[1];
+        assert_eq!(&f0.data[..], &[(0.75 * 1.0 + 0.25 * 3.0) / tot, (0.75 * 3.0 + 0.25 * 5.0) / tot]);
+        // Rounds 2-3: survivor only — w = [0.75], tot = 0.75, so the
+        // renormalized combine must return input 0's scores exactly.
+        assert_eq!(&rx.recv().unwrap().data[..], &[5.0, 7.0]);
+        let f2 = rx.recv().unwrap();
+        assert_eq!(&f2.data[..], &[9.0, 11.0]);
+        assert!(f2.last);
+    }
+
+    #[test]
+    fn unguarded_mid_close_still_fails_the_join() {
+        let a = feed(vec![vec![1.0], vec![2.0]], 1);
+        let b = feed(vec![vec![3.0]], 99); // closes after one flit, no guard
+        let (tx, _rx) = Port::link();
+        let engine = ComboEngine::Native(ScoreCombiner::Averaging);
+        let err = service_guarded(&engine, vec![a, b], vec![None, None], tx).unwrap_err();
+        assert!(err.to_string().contains("closed mid-join"), "{err:#}");
+    }
+
+    #[test]
+    fn quarantined_sole_survivor_ends_stream_cleanly() {
+        let a = feed(vec![vec![1.5, 2.5]], 99);
+        let guard = Arc::new(Decoupler::new());
+        guard.quarantine();
+        let (tx, rx) = Port::link();
+        let engine = ComboEngine::Native(ScoreCombiner::Averaging);
+        let report = service_guarded(&engine, vec![a], vec![Some(guard)], tx).unwrap();
+        assert_eq!(report.flits_out, 1);
+        assert_eq!(report.quarantined_inputs, 0, "a sole survivor is never dropped");
+        assert_eq!(&rx.recv().unwrap().data[..], &[1.5, 2.5]);
     }
 
     #[test]

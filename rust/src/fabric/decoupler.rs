@@ -16,6 +16,12 @@ pub struct Decoupler {
     enabled: AtomicBool,
     /// Count of flits dropped while isolated (telemetry).
     dropped: AtomicU64,
+    /// Latched by the fault supervisor's last escalation rung: the
+    /// partition stays permanently isolated (`decoupled` held, `enabled`
+    /// cleared so nothing can swap or recouple it back in) and downstream
+    /// combines renormalize around it. Cleared only by
+    /// [`Decoupler::lift_quarantine`] (session/run boundary).
+    quarantined: AtomicBool,
 }
 
 impl Default for Decoupler {
@@ -24,6 +30,7 @@ impl Default for Decoupler {
             decoupled: AtomicBool::new(false),
             enabled: AtomicBool::new(true),
             dropped: AtomicU64::new(0),
+            quarantined: AtomicBool::new(false),
         }
     }
 }
@@ -73,6 +80,31 @@ impl Decoupler {
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
     }
+
+    /// Permanently isolate the partition (fault ladder rung 2). Order
+    /// matters: the decoupler must assert DECOUPLE *before* it is disabled
+    /// ([`Decoupler::decouple`] is a no-op once disabled), and disabling it
+    /// afterwards blocks any staged swap from re-enabling the region.
+    pub fn quarantine(&self) {
+        self.decouple();
+        self.set_enabled(false);
+        self.quarantined.store(true, Ordering::SeqCst);
+    }
+
+    /// Side-effect-free quarantine probe — unlike [`Decoupler::is_decoupled`]
+    /// this never charges the drop counter, so control-plane code (combo
+    /// degradation, the service loop's reload wait) can poll it freely.
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined.load(Ordering::SeqCst)
+    }
+
+    /// Re-admit a quarantined partition (session/run boundary: the next
+    /// episode gets a fresh RM, so the region is trustworthy again).
+    pub fn lift_quarantine(&self) {
+        self.quarantined.store(false, Ordering::SeqCst);
+        self.set_enabled(true);
+        self.recouple();
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +144,25 @@ mod tests {
         d.set_enabled(true);
         d.decouple();
         assert!(d.is_decoupled());
+    }
+
+    #[test]
+    fn quarantine_latches_and_survives_recouple_attempts() {
+        let d = Decoupler::new();
+        d.quarantine();
+        assert!(d.is_quarantined());
+        assert!(d.is_decoupled(), "quarantine must isolate");
+        assert!(!d.is_enabled(), "quarantine must block future swaps");
+        // A probe never charges the drop counter.
+        let before = d.dropped();
+        for _ in 0..10 {
+            assert!(d.is_quarantined());
+        }
+        assert_eq!(d.dropped(), before);
+        d.lift_quarantine();
+        assert!(!d.is_quarantined());
+        assert!(d.is_enabled());
+        assert!(!d.is_decoupled());
     }
 
     #[test]

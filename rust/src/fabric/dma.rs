@@ -9,14 +9,23 @@
 //! carry shared `Arc<[f32]>` payloads — the samples are copied exactly
 //! once, at chunking time.
 
+use anyhow::{bail, Result};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::message::Flit;
+use crate::config::NonFinite;
 use crate::data::stream::ChunkStream;
 
 /// Input DMA: streams `data` ([n, d] row-major) as padded chunks.
+///
+/// Ingress hygiene: every valid row is screened for non-finite values
+/// (NaN/±Inf) under the `[fabric] non_finite` policy — corrupt host input
+/// is caught at the one point all partitions share, before it can poison
+/// any detector window. `Error` (the default) fails the stream naming the
+/// first offending sample; `Clamp` sanitizes in place (NaN → 0.0,
+/// ±Inf → ±f32::MAX) and counts the repairs in [`DmaReport::clamped`].
 pub struct InputDma;
 
 impl InputDma {
@@ -25,13 +34,44 @@ impl InputDma {
         data: Arc<Vec<f32>>,
         d: usize,
         chunk: usize,
+        policy: NonFinite,
         tx: Sender<Flit>,
-    ) -> JoinHandle<DmaReport> {
+    ) -> JoinHandle<Result<DmaReport>> {
         std::thread::Builder::new()
-            .name(name)
+            .name(name.clone())
             .spawn(move || {
                 let mut report = DmaReport::default();
-                for flit in ChunkStream::new(&data, d, chunk) {
+                for mut flit in ChunkStream::new(&data, d, chunk) {
+                    let valid = flit.n_valid * d;
+                    if let Some(bad) = flit.data[..valid].iter().position(|v| !v.is_finite()) {
+                        match policy {
+                            NonFinite::Error => bail!(
+                                "{name}: non-finite input sample {} at flit seq {}, row {}, \
+                                 col {} — reject policy is `non_finite = \"error\"`; set \
+                                 `non_finite = \"clamp\"` under [fabric] to sanitize at ingress",
+                                flit.data[bad],
+                                flit.seq,
+                                bad / d,
+                                bad % d
+                            ),
+                            NonFinite::Clamp => {
+                                let mut fixed: Vec<f32> = flit.data.to_vec();
+                                for v in fixed[..valid].iter_mut() {
+                                    if !v.is_finite() {
+                                        *v = if v.is_nan() {
+                                            0.0
+                                        } else if v.is_sign_positive() {
+                                            f32::MAX
+                                        } else {
+                                            f32::MIN
+                                        };
+                                        report.clamped += 1;
+                                    }
+                                }
+                                flit.data = fixed.into();
+                            }
+                        }
+                    }
                     report.flits += 1;
                     report.bytes += (flit.data.len() * 4) as u64;
                     report.samples += flit.n_valid as u64;
@@ -39,7 +79,7 @@ impl InputDma {
                         break; // fabric tore down mid-stream
                     }
                 }
-                report
+                Ok(report)
             })
             .expect("spawn input dma")
     }
@@ -84,6 +124,8 @@ pub struct DmaReport {
     pub flits: u64,
     pub bytes: u64,
     pub samples: u64,
+    /// Non-finite input values sanitized at ingress (`non_finite = "clamp"`).
+    pub clamped: u64,
 }
 
 #[cfg(test)]
@@ -95,9 +137,9 @@ mod tests {
     fn roundtrip_through_both_dmas() {
         let data: Vec<f32> = (0..10).map(|i| i as f32).collect(); // 5 samples d=2
         let (tx, rx) = Port::link();
-        let input = InputDma::spawn("in".into(), Arc::new(data.clone()), 2, 4, tx);
+        let input = InputDma::spawn("in".into(), Arc::new(data.clone()), 2, 4, NonFinite::Error, tx);
         let output = OutputDma::spawn("out".into(), rx);
-        let in_report = input.join().unwrap();
+        let in_report = input.join().unwrap().unwrap();
         let (collected, out_report) = output.join().unwrap();
         assert_eq!(collected, data); // unpadded
         assert_eq!(in_report.samples, 5);
@@ -146,8 +188,8 @@ mod tests {
     fn input_dma_flits_share_the_full_mask() {
         let data = vec![0f32; 8 * 2]; // 8 samples, chunk 4 → 2 full chunks
         let (tx, rx) = Port::link();
-        let input = InputDma::spawn("in".into(), Arc::new(data), 2, 4, tx);
-        input.join().unwrap();
+        let input = InputDma::spawn("in".into(), Arc::new(data), 2, 4, NonFinite::Error, tx);
+        input.join().unwrap().unwrap();
         let flits: Vec<Flit> = rx.iter().collect();
         assert_eq!(flits.len(), 2);
         assert!(Arc::ptr_eq(&flits[0].mask, &flits[1].mask));
@@ -158,8 +200,54 @@ mod tests {
         let data = vec![0f32; 100 * 3];
         let (tx, rx) = Port::link();
         drop(rx);
-        let input = InputDma::spawn("in".into(), Arc::new(data), 3, 8, tx);
-        let report = input.join().unwrap(); // must not panic
+        let input = InputDma::spawn("in".into(), Arc::new(data), 3, 8, NonFinite::Error, tx);
+        let report = input.join().unwrap().unwrap(); // must not panic
         assert!(report.flits <= 1);
+    }
+
+    #[test]
+    fn error_policy_rejects_non_finite_input_naming_the_sample() {
+        // Sample 5 (row 1 of flit seq 1), col 1 is NaN.
+        let mut data = vec![0f32; 8 * 2];
+        data[5 * 2 + 1] = f32::NAN;
+        let (tx, rx) = Port::link();
+        let input = InputDma::spawn("in".into(), Arc::new(data), 2, 4, NonFinite::Error, tx);
+        let err = input.join().unwrap().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("seq 1") && msg.contains("row 1") && msg.contains("col 1"), "{msg}");
+        // The clean first flit was still delivered before the stop.
+        assert_eq!(rx.iter().count(), 1);
+    }
+
+    #[test]
+    fn clamp_policy_sanitizes_and_counts() {
+        let mut data = vec![1.0f32; 6 * 2];
+        data[2] = f32::NAN;
+        data[7] = f32::INFINITY;
+        data[9] = f32::NEG_INFINITY;
+        let (tx, rx) = Port::link();
+        let input = InputDma::spawn("in".into(), Arc::new(data), 2, 4, NonFinite::Clamp, tx);
+        let flits: Vec<Flit> = rx.iter().collect();
+        let report = input.join().unwrap().unwrap();
+        assert_eq!(report.clamped, 3);
+        assert_eq!(flits[0].data[2], 0.0);
+        assert_eq!(flits[0].data[7], f32::MAX);
+        assert_eq!(flits[1].data[1], f32::MIN);
+        // Every surviving value is finite.
+        assert!(flits.iter().all(|f| f.data.iter().all(|v| v.is_finite())));
+    }
+
+    #[test]
+    fn clamp_policy_leaves_clean_streams_untouched() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let (tx, rx) = Port::link();
+        let input = InputDma::spawn("in".into(), Arc::new(data.clone()), 2, 4, NonFinite::Clamp, tx);
+        let report = input.join().unwrap().unwrap();
+        assert_eq!(report.clamped, 0);
+        let mut collected = Vec::new();
+        for f in rx.iter() {
+            unpad_into(&f, &mut collected);
+        }
+        assert_eq!(collected, data);
     }
 }

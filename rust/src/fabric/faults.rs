@@ -1,0 +1,515 @@
+//! Seeded fault injection and the per-partition health surface.
+//!
+//! # Fault taxonomy
+//!
+//! The injector models the failures a live FPGA fabric actually sees, each
+//! with a deterministic software analogue:
+//!
+//! - **`lane_panic`** — a detector instance dies mid-burst (SEU in region
+//!   logic): the lane worker's scoring closure panics once.
+//! - **`worker_exit`** — a lane worker thread dies outright (hung kernel):
+//!   the worker exits after its next job; the following dispatch fails.
+//! - **`state_corrupt`** — detector state corruption (bit-flip in on-chip
+//!   window memory): the RM's sliding window is poisoned so subsequent
+//!   scores go non-finite — detected at the partition's output screen.
+//! - **`stall`** — the partition wedges *while processing* (deadlocked
+//!   pipeline): the service loop sleeps inside its processing section, so
+//!   the supervisor's heartbeat watchdog must fire.
+//! - **`inbox_stall`** — upstream starvation: the service loop sleeps
+//!   *outside* its processing section. The watchdog must stay silent (a
+//!   partition blocked on its inbox is healthy); the loop records the
+//!   injection itself so tests can assert on the non-event.
+//!
+//! Every injection carries an id, so tests assert on exactly which fault
+//! fired, and every detection/recovery step is recorded as a typed
+//! [`FaultEvent`] on the partition's [`FaultPort`] — surfaced through
+//! `RunOutput::fault_events` and per-session by the fabric server.
+//!
+//! Injection is **off by default** and the armed/unarmed split is strict:
+//! with `[fabric.faults] enabled = false` (or no `--faults`), none of the
+//! hooks in the service loops run — the data plane is bit-transparent to
+//! this module.
+//!
+//! The escalation ladder that consumes these signals lives in
+//! [`crate::fabric::supervisor`]; checkpoint/restore in
+//! [`crate::fabric::snapshot`].
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{FaultsCfg, InjectSpec};
+use crate::detectors::prng::Prng;
+
+/// What a scheduled fault does when it fires.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic lane `lane`'s next scoring job (multi-lane partitions).
+    LanePanic { lane: usize },
+    /// Kill lane worker `worker` after its next job.
+    WorkerExit { worker: usize },
+    /// Poison the RM's sliding-window state (scores go non-finite).
+    StateCorrupt,
+    /// Wedge the service loop mid-processing for `ms` milliseconds.
+    Stall { ms: u64 },
+    /// Starve the service loop for `ms` milliseconds *outside* processing
+    /// (blocked-on-inbox is healthy; the watchdog must not fire).
+    InboxStall { ms: u64 },
+}
+
+impl FaultKind {
+    /// Taxonomy tag (stable strings for events, logs and BENCH output).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::LanePanic { .. } => "lane_panic",
+            FaultKind::WorkerExit { .. } => "worker_exit",
+            FaultKind::StateCorrupt => "state_corrupt",
+            FaultKind::Stall { .. } => "stall",
+            FaultKind::InboxStall { .. } => "inbox_stall",
+        }
+    }
+}
+
+/// One scheduled fault: fires on partition `pblock` when its service loop
+/// reaches input flit `at_flit`.
+#[derive(Clone, Debug)]
+pub struct InjectedFault {
+    pub id: String,
+    pub pblock: usize,
+    pub at_flit: u64,
+    pub kind: FaultKind,
+}
+
+impl InjectedFault {
+    /// Convert a parsed `[fabric.faults.inject.N]` section. The kind string
+    /// is the taxonomy tag; `lane` selects the lane/worker index, `ms` the
+    /// stall duration.
+    pub fn from_spec(s: &InjectSpec) -> Result<InjectedFault> {
+        let kind = match s.kind.as_str() {
+            "lane_panic" => FaultKind::LanePanic { lane: s.lane },
+            "worker_exit" => FaultKind::WorkerExit { worker: s.lane },
+            "state_corrupt" => FaultKind::StateCorrupt,
+            "stall" => FaultKind::Stall { ms: s.ms.max(1) },
+            "inbox_stall" => FaultKind::InboxStall { ms: s.ms.max(1) },
+            other => bail!(
+                "unknown fault kind {other:?} (expected lane_panic | worker_exit | \
+                 state_corrupt | stall | inbox_stall)"
+            ),
+        };
+        Ok(InjectedFault { id: s.id.clone(), pblock: s.pblock, at_flit: s.at_flit, kind })
+    }
+}
+
+/// One recorded fault-handling step: an injection firing, a detection, or a
+/// rung of the supervisor's retry → reload → quarantine ladder.
+#[derive(Clone, Debug)]
+pub struct FaultEvent {
+    /// Id of the injected fault this traces back to (`-` when the trigger
+    /// was detected rather than matched to a scheduled injection).
+    pub id: String,
+    pub pblock: usize,
+    /// Partition input flit at which this step happened.
+    pub at_flit: u64,
+    /// Taxonomy tag of the fault ([`FaultKind::tag`]) or detection class.
+    pub fault: String,
+    /// What was done: `injected`, `skipped`, `lane_panic_retried`,
+    /// `respawn_retry`, `nonfinite_detected`, `stall_detected`,
+    /// `reloaded`, `reload_failed`, `quarantined`, …
+    pub action: String,
+    /// Escalation rung that handled it: 0 = in-place worker containment,
+    /// 1 = RM reload (+ checkpoint restore), 2 = quarantine.
+    pub rung: u8,
+    /// Detection-to-action latency where meaningful (0 otherwise).
+    pub latency_us: u64,
+    /// For `reloaded`: the checkpoint flit the replacement resumed from.
+    pub checkpoint_flit: Option<u64>,
+    pub detail: String,
+}
+
+impl std::fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "p{} flit {}: {} -> {} (rung {}, id {}",
+            self.pblock, self.at_flit, self.fault, self.action, self.rung, self.id
+        )?;
+        if self.latency_us > 0 {
+            write!(f, ", {} us", self.latency_us)?;
+        }
+        if let Some(cp) = self.checkpoint_flit {
+            write!(f, ", from checkpoint flit {cp}")?;
+        }
+        write!(f, ")")?;
+        if !self.detail.is_empty() {
+            write!(f, " — {}", self.detail)?;
+        }
+        Ok(())
+    }
+}
+
+/// Sentinel for "no pending injection" in the cheap due-probe.
+const NO_PENDING: u64 = u64::MAX;
+
+/// Per-partition fault mailbox on the control surface: scheduled injections
+/// going in (fabric construction), fault events coming out (service loop,
+/// lane pool, supervisor). The hot-path probe is one relaxed atomic load —
+/// a partition with nothing due never touches a lock per flit.
+pub struct FaultPort {
+    pending: Mutex<Vec<InjectedFault>>,
+    /// Earliest pending `at_flit` (`NO_PENDING` when the queue is empty).
+    next_at: AtomicU64,
+    events: Mutex<Vec<FaultEvent>>,
+    /// Owning partition id, bound when the fabric arms fault handling —
+    /// detection events (non-finite screen, respawn retries) are recorded
+    /// by code that only sees the control surface, not the pblock.
+    pblock: AtomicU64,
+}
+
+impl Default for FaultPort {
+    fn default() -> Self {
+        FaultPort {
+            pending: Mutex::new(Vec::new()),
+            next_at: AtomicU64::new(NO_PENDING),
+            events: Mutex::new(Vec::new()),
+            pblock: AtomicU64::new(0),
+        }
+    }
+}
+
+impl FaultPort {
+    /// Bind the owning partition id (done once, while arming).
+    pub fn bind(&self, pblock: usize) {
+        self.pblock.store(pblock as u64, Ordering::SeqCst);
+    }
+
+    /// The bound partition id (0 until [`FaultPort::bind`]).
+    pub fn pblock(&self) -> usize {
+        self.pblock.load(Ordering::Relaxed) as usize
+    }
+
+    /// Queue injections for this partition (sorted by fire flit).
+    pub fn schedule(&self, faults: Vec<InjectedFault>) {
+        let mut q = self.pending.lock().unwrap();
+        q.extend(faults);
+        q.sort_by_key(|f| f.at_flit);
+        let next = q.first().map_or(NO_PENDING, |f| f.at_flit);
+        self.next_at.store(next, Ordering::SeqCst);
+    }
+
+    /// Injections due at input flit `flit` (0-based), removed from the
+    /// queue. The common no-fault case is a single atomic load.
+    pub fn take_due(&self, flit: u64) -> Vec<InjectedFault> {
+        if self.next_at.load(Ordering::Relaxed) > flit {
+            return Vec::new();
+        }
+        let mut q = self.pending.lock().unwrap();
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < q.len() {
+            if q[i].at_flit <= flit {
+                due.push(q.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        let next = q.first().map_or(NO_PENDING, |f| f.at_flit);
+        self.next_at.store(next, Ordering::SeqCst);
+        due
+    }
+
+    /// Record one fault-handling step.
+    pub fn record(&self, ev: FaultEvent) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    /// Drain the recorded events (run teardown / session close).
+    pub fn take_events(&self) -> Vec<FaultEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    /// Injections not yet fired.
+    pub fn pending_count(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Drop pending injections (episode boundary).
+    pub fn clear_pending(&self) -> usize {
+        let mut q = self.pending.lock().unwrap();
+        let n = q.len();
+        q.clear();
+        self.next_at.store(NO_PENDING, Ordering::SeqCst);
+        n
+    }
+}
+
+/// A reload requested by the service loop after detecting non-finite
+/// scores, consumed by the fault supervisor (single-slot: one recovery in
+/// flight per partition).
+#[derive(Clone, Debug)]
+pub struct ReloadRequest {
+    /// Injected-fault id that (probably) caused this, `-` when unknown.
+    pub fault_id: String,
+    /// Input flits fully processed when the corruption was detected.
+    pub at_flit: u64,
+    pub reason: String,
+}
+
+/// Per-partition health surface: heartbeat + processing flag published by
+/// the service loop, watched by the supervisor's stall watchdog, plus the
+/// reload-request slot and the checkpoint cadence.
+///
+/// Heartbeat semantics: `beat` ticks once per input flit and `processing`
+/// is true strictly while the RM is scoring. The watchdog flags a stall
+/// only when `processing` is set **and** the beat has not moved past the
+/// timeout — a partition blocked on an empty inbox is healthy, however
+/// long it waits.
+#[derive(Default)]
+pub struct Health {
+    armed: AtomicBool,
+    beat: AtomicU64,
+    processing: AtomicBool,
+    /// Store a checkpoint every N healthy flits (0 = never).
+    checkpoint_every: AtomicU64,
+    /// How long the service loop waits for the supervisor's staged reload
+    /// after requesting one, before carrying on degraded.
+    reload_wait_ms: AtomicU64,
+    reload: Mutex<Option<ReloadRequest>>,
+}
+
+impl Health {
+    /// Arm the fault machinery for this partition. Unarmed (the default),
+    /// every hook in the service loops is skipped — bit-transparent.
+    pub fn arm(&self, checkpoint_every: u64, reload_wait_ms: u64) {
+        self.checkpoint_every.store(checkpoint_every, Ordering::SeqCst);
+        self.reload_wait_ms.store(reload_wait_ms, Ordering::SeqCst);
+        self.armed.store(true, Ordering::SeqCst);
+    }
+
+    /// Disarm (episode boundary) and drop any un-consumed reload request.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::SeqCst);
+        *self.reload.lock().unwrap() = None;
+    }
+
+    #[inline]
+    pub fn is_armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// One heartbeat per input flit.
+    #[inline]
+    pub fn tick(&self) {
+        self.beat.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn beat(&self) -> u64 {
+        self.beat.load(Ordering::SeqCst)
+    }
+
+    #[inline]
+    pub fn set_processing(&self, on: bool) {
+        self.processing.store(on, Ordering::SeqCst);
+    }
+
+    pub fn is_processing(&self) -> bool {
+        self.processing.load(Ordering::SeqCst)
+    }
+
+    pub fn checkpoint_every(&self) -> u64 {
+        self.checkpoint_every.load(Ordering::Relaxed)
+    }
+
+    pub fn reload_wait_ms(&self) -> u64 {
+        self.reload_wait_ms.load(Ordering::Relaxed)
+    }
+
+    /// File a reload request; refused (false) while one is already pending
+    /// — repeated non-finite flits during one recovery collapse into it.
+    pub fn request_reload(&self, req: ReloadRequest) -> bool {
+        let mut slot = self.reload.lock().unwrap();
+        if slot.is_some() {
+            return false;
+        }
+        *slot = Some(req);
+        true
+    }
+
+    /// Consume the pending reload request (supervisor side).
+    pub fn take_reload(&self) -> Option<ReloadRequest> {
+        self.reload.lock().unwrap().take()
+    }
+
+    pub fn has_reload_request(&self) -> bool {
+        self.reload.lock().unwrap().is_some()
+    }
+}
+
+/// Deterministic fault planner: scripted injections verbatim plus an
+/// optional seeded pseudo-random background rate.
+pub struct FaultInjector;
+
+impl FaultInjector {
+    /// Build the injection plan for one run. `pblocks` are the configured
+    /// partition ids, `horizon_flits` bounds the random placement window
+    /// (per-pblock input flits). Same config + seed + pblocks + horizon →
+    /// same plan, always.
+    pub fn plan(
+        cfg: &FaultsCfg,
+        fabric_seed: u64,
+        pblocks: &[usize],
+        horizon_flits: u64,
+    ) -> Result<Vec<InjectedFault>> {
+        let mut out = Vec::new();
+        for spec in &cfg.injections {
+            out.push(InjectedFault::from_spec(spec)?);
+        }
+        if cfg.rate_per_kflit > 0.0 && horizon_flits > 0 {
+            let seed = if cfg.seed != 0 { cfg.seed } else { fabric_seed };
+            for &p in pblocks {
+                let mut rng = Prng::new(seed ^ (p as u64).wrapping_mul(0x9E3779B97F4A7C15));
+                let expected = cfg.rate_per_kflit * horizon_flits as f64 / 1000.0;
+                let mut count = expected.floor() as u64;
+                if rng.uniform() < expected.fract() {
+                    count += 1;
+                }
+                for i in 0..count {
+                    let at_flit = (rng.uniform() * horizon_flits as f64) as u64;
+                    let kind = match i % 3 {
+                        0 => FaultKind::StateCorrupt,
+                        1 => FaultKind::LanePanic { lane: 0 },
+                        _ => FaultKind::Stall { ms: cfg.stall_ms.max(1) },
+                    };
+                    out.push(InjectedFault { id: format!("r{p}-{i}"), pblock: p, at_flit, kind });
+                }
+            }
+        }
+        out.sort_by(|a, b| (a.at_flit, a.pblock).cmp(&(b.at_flit, b.pblock)));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(id: &str, kind: &str, at_flit: u64) -> InjectSpec {
+        InjectSpec {
+            id: id.to_string(),
+            pblock: 1,
+            at_flit,
+            kind: kind.to_string(),
+            lane: 2,
+            ms: 15,
+        }
+    }
+
+    #[test]
+    fn spec_kinds_parse_and_reject() {
+        let f = InjectedFault::from_spec(&spec("a", "lane_panic", 3)).unwrap();
+        assert_eq!(f.kind, FaultKind::LanePanic { lane: 2 });
+        assert_eq!((f.id.as_str(), f.pblock, f.at_flit), ("a", 1, 3));
+        let f = InjectedFault::from_spec(&spec("b", "worker_exit", 0)).unwrap();
+        assert_eq!(f.kind, FaultKind::WorkerExit { worker: 2 });
+        let f = InjectedFault::from_spec(&spec("c", "state_corrupt", 0)).unwrap();
+        assert_eq!(f.kind, FaultKind::StateCorrupt);
+        let f = InjectedFault::from_spec(&spec("d", "stall", 0)).unwrap();
+        assert_eq!(f.kind, FaultKind::Stall { ms: 15 });
+        let f = InjectedFault::from_spec(&spec("e", "inbox_stall", 0)).unwrap();
+        assert_eq!(f.kind, FaultKind::InboxStall { ms: 15 });
+        assert!(InjectedFault::from_spec(&spec("f", "gamma_ray", 0)).is_err());
+    }
+
+    #[test]
+    fn port_fires_in_flit_order_with_cheap_probe() {
+        let port = FaultPort::default();
+        assert!(port.take_due(1_000_000).is_empty(), "empty port never fires");
+        port.schedule(vec![
+            InjectedFault { id: "late".into(), pblock: 1, at_flit: 9, kind: FaultKind::StateCorrupt },
+            InjectedFault { id: "early".into(), pblock: 1, at_flit: 2, kind: FaultKind::StateCorrupt },
+        ]);
+        assert_eq!(port.pending_count(), 2);
+        assert!(port.take_due(1).is_empty());
+        let due = port.take_due(2);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].id, "early");
+        // Overdue injections all fire at once.
+        let due = port.take_due(50);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].id, "late");
+        assert_eq!(port.pending_count(), 0);
+        assert!(port.take_due(u64::MAX - 1).is_empty());
+    }
+
+    #[test]
+    fn port_clear_drops_pending_and_events_drain_once() {
+        let port = FaultPort::default();
+        port.schedule(vec![InjectedFault {
+            id: "x".into(),
+            pblock: 2,
+            at_flit: 4,
+            kind: FaultKind::Stall { ms: 1 },
+        }]);
+        assert_eq!(port.clear_pending(), 1);
+        assert!(port.take_due(100).is_empty());
+        port.record(FaultEvent {
+            id: "x".into(),
+            pblock: 2,
+            at_flit: 4,
+            fault: "stall".into(),
+            action: "injected".into(),
+            rung: 0,
+            latency_us: 0,
+            checkpoint_flit: None,
+            detail: String::new(),
+        });
+        assert_eq!(port.take_events().len(), 1);
+        assert!(port.take_events().is_empty());
+    }
+
+    #[test]
+    fn health_reload_slot_is_single_occupancy() {
+        let h = Health::default();
+        assert!(!h.is_armed());
+        h.arm(8, 100);
+        assert!(h.is_armed());
+        assert_eq!((h.checkpoint_every(), h.reload_wait_ms()), (8, 100));
+        let req = ReloadRequest { fault_id: "a".into(), at_flit: 5, reason: "nan".into() };
+        assert!(h.request_reload(req.clone()));
+        assert!(!h.request_reload(req), "second request collapses into the first");
+        assert!(h.has_reload_request());
+        assert_eq!(h.take_reload().unwrap().fault_id, "a");
+        assert!(h.take_reload().is_none());
+        h.tick();
+        h.tick();
+        assert_eq!(h.beat(), 2);
+        h.set_processing(true);
+        assert!(h.is_processing());
+        h.disarm();
+        assert!(!h.is_armed());
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_keeps_scripted_faults() {
+        let mut cfg = FaultsCfg::default();
+        cfg.injections.push(spec("s1", "state_corrupt", 7));
+        cfg.rate_per_kflit = 40.0;
+        cfg.stall_ms = 5;
+        let a = FaultInjector::plan(&cfg, 42, &[1, 2], 100).unwrap();
+        let b = FaultInjector::plan(&cfg, 42, &[1, 2], 100).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.at_flit, x.pblock, &x.id, &x.kind), (y.at_flit, y.pblock, &y.id, &y.kind));
+        }
+        assert!(a.iter().any(|f| f.id == "s1"), "scripted injection survives planning");
+        assert!(a.len() > 1, "rate 40/kflit over 100 flits × 2 pblocks plans random faults");
+        assert!(a.windows(2).all(|w| w[0].at_flit <= w[1].at_flit), "sorted by fire flit");
+        // Different seed → different placement.
+        let c = FaultInjector::plan(&cfg, 43, &[1, 2], 100).unwrap();
+        let same = a.iter().zip(&c).filter(|(x, y)| x.at_flit == y.at_flit).count();
+        assert!(same < a.len(), "plans must depend on the seed");
+        // Disabled rate plans only scripted faults.
+        cfg.rate_per_kflit = 0.0;
+        let d = FaultInjector::plan(&cfg, 42, &[1, 2], 100).unwrap();
+        assert_eq!(d.len(), 1);
+    }
+}

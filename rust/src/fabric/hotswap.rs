@@ -49,9 +49,11 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::decoupler::Decoupler;
+use super::faults::{FaultPort, Health};
 use super::message::{score_chunk, Flit};
 use super::pblock::LoadedRm;
 use super::reconfig::DfxManager;
+use super::snapshot::CheckpointSlot;
 use crate::config::{DarkPolicy, DetectorHyper, DfxCfg, RmKind};
 use crate::detectors::DetectorKind;
 use crate::runtime::{Registry, RuntimeHandle};
@@ -78,6 +80,10 @@ pub struct PendingSwap {
     pub dark_flits: u64,
     pub model_ms: f64,
     pub policy: DarkPolicy,
+    /// Skip the post-swap `rm.reset()`: the staged RM carries restored
+    /// checkpoint state (fault supervisor's rung-1 reload) that a reset
+    /// would wipe. Plain swaps always reset.
+    pub preserve_state: bool,
 }
 
 /// Record of one executed in-flight swap.
@@ -350,11 +356,16 @@ impl ScoreStats {
     }
 }
 
-/// Shared control surface of one pblock: swap mailbox + score statistics.
+/// Shared control surface of one pblock: swap mailbox, score statistics,
+/// and (armed only under `[fabric.faults]`) the fault-injection port,
+/// health/heartbeat surface and checkpoint slot.
 #[derive(Default)]
 pub struct PblockCtl {
     pub swap: SwapPort,
     pub stats: ScoreStats,
+    pub health: Health,
+    pub faults: FaultPort,
+    pub checkpoint: CheckpointSlot,
 }
 
 /// Per-flit verdict of the DFX gate.
@@ -426,9 +437,12 @@ impl<'a> DfxGate<'a> {
             self.decoupler.decouple();
             let from = rm.describe();
             let t0 = Instant::now();
+            let preserve = swap.preserve_state;
             let old = std::mem::replace(rm, swap.rm);
             drop(old);
-            rm.reset()?;
+            if !preserve {
+                rm.reset()?;
+            }
             let actual_ms = t0.elapsed().as_secs_f64() * 1e3;
             self.ctl.stats.rebase();
             let event = SwapEvent {
@@ -536,7 +550,17 @@ impl DfxManager {
         let dark = dark_flits
             .unwrap_or_else(|| model_dark_flits(model_ms, samples_per_sec, chunk))
             .max(1);
-        Ok(PendingSwap { pblock: pblock_id, at_flit, rm, to, r, dark_flits: dark, model_ms, policy })
+        Ok(PendingSwap {
+            pblock: pblock_id,
+            at_flit,
+            rm,
+            to,
+            r,
+            dark_flits: dark,
+            model_ms,
+            policy,
+            preserve_state: false,
+        })
     }
 }
 

@@ -15,14 +15,18 @@
 pub mod combo;
 pub mod decoupler;
 pub mod dma;
+pub mod faults;
 pub mod hotswap;
 pub mod message;
 pub mod pblock;
 pub mod reconfig;
 pub mod server;
+pub mod snapshot;
+pub mod supervisor;
 pub mod switch;
 pub mod topology;
 
+pub use faults::FaultEvent;
 pub use hotswap::SwapEvent;
 pub use message::{Flit, FlitSource, Port};
 pub use server::{FabricServer, Session, SessionSpec};

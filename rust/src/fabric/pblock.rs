@@ -56,11 +56,13 @@
 use anyhow::{bail, Context, Result};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::decoupler::Decoupler;
+use super::faults::{FaultEvent, FaultKind, ReloadRequest};
 use super::hotswap::{self, Admit, DfxGate, PblockCtl};
 use super::message::{score_chunk, Flit, FlitSource};
+use super::snapshot::{snapshot_rm, Checkpoint};
 use crate::config::{DetectorHyper, RmKind};
 use crate::detectors::{Detector, DetectorSpec};
 use crate::ensemble::lanes::{build_lanes, merge_lanes_into, score_inline, Lane, LaneInput};
@@ -373,6 +375,31 @@ impl LoadedRm {
             _ => Ok(()),
         }
     }
+
+    /// Fault injection: corrupt the RM's detector window state so
+    /// subsequent scores go non-finite (a bit-flip in on-chip window
+    /// memory). Returns false for RMs with no poisonable state (bypass,
+    /// empty, modelled-FPGA — device state is out of reach).
+    pub fn poison(&mut self) -> bool {
+        match self {
+            LoadedRm::DetectorCpu { det } => {
+                let has_state = det.window_state().is_some();
+                det.poison_state();
+                has_state
+            }
+            LoadedRm::DetectorCpuLanes { lanes, .. } => {
+                let mut any = false;
+                for lane in lanes.iter_mut() {
+                    if let Some(det) = lane.det_mut() {
+                        any |= det.window_state().is_some();
+                        det.poison_state();
+                    }
+                }
+                any
+            }
+            _ => false,
+        }
+    }
 }
 
 impl Drop for LoadedRm {
@@ -461,9 +488,17 @@ impl Pblock {
     ) -> Result<PblockReport> {
         let mut report = PblockReport::default();
         let mut gate = DfxGate::new(ctl, decoupler);
+        // Fault machinery is strictly armed-gated: unarmed (the default),
+        // every hook below is skipped and the loop is the pre-fault data
+        // plane, byte for byte.
+        let armed = ctl.health.is_armed();
         while let Some(flit) = rx.recv_flit() {
             report.flits_in += 1;
             let last = flit.last;
+            if armed {
+                Self::apply_due_faults(rm, ctl, pool);
+                ctl.health.tick();
+            }
             match gate.admit(rm, last, true)? {
                 Admit::Drop => {
                     // Isolated (reconfiguration dark window, or externally
@@ -486,11 +521,66 @@ impl Pblock {
                 Admit::Process => {}
             }
             let t0 = Instant::now();
-            let out = rm.process(&flit, pool)?;
+            if armed {
+                ctl.health.set_processing(true);
+            }
+            let mut res = rm.process(&flit, pool);
+            if armed {
+                ctl.health.set_processing(false);
+                if res.is_err() {
+                    if let Some(p) = pool {
+                        // Rung 0, worker containment: a dead lane worker
+                        // loses one burst's lane results; respawn the pool
+                        // and retry the flit (lane state rolls back on
+                        // every panic, so a retry is state-valid).
+                        let err = res.unwrap_err();
+                        ctl.faults.record(FaultEvent {
+                            id: "-".into(),
+                            pblock: ctl.faults.pblock(),
+                            at_flit: ctl.swap.flits_seen(),
+                            fault: "worker_exit".into(),
+                            action: "respawn_retry".into(),
+                            rung: 0,
+                            latency_us: t0.elapsed().as_micros() as u64,
+                            checkpoint_flit: None,
+                            detail: format!("{err:#}"),
+                        });
+                        p.respawn();
+                        ctl.health.set_processing(true);
+                        res = rm.process(&flit, pool);
+                        ctl.health.set_processing(false);
+                    }
+                }
+                if let Some(p) = pool {
+                    for note in p.take_fault_notes() {
+                        let fault =
+                            if note.kind == "worker_exit" { "worker_exit" } else { "lane_panic" };
+                        ctl.faults.record(FaultEvent {
+                            id: "-".into(),
+                            pblock: ctl.faults.pblock(),
+                            at_flit: ctl.swap.flits_seen(),
+                            fault: fault.into(),
+                            action: note.kind.into(),
+                            rung: 0,
+                            latency_us: note.latency_us,
+                            checkpoint_flit: None,
+                            detail: note.detail,
+                        });
+                    }
+                }
+            }
+            let out = res?;
             report.busy_secs += t0.elapsed().as_secs_f64();
             report.samples += flit.n_valid as u64;
-            if let Some(out) = out {
-                ctl.stats.push(&out.data, out.n_valid);
+            if let Some(mut out) = out {
+                let healthy =
+                    if armed { Self::screen_output(ctl, decoupler, &mut out) } else { true };
+                if healthy {
+                    ctl.stats.push(&out.data, out.n_valid);
+                    if armed {
+                        Self::maybe_checkpoint(rm, ctl, report.samples);
+                    }
+                }
                 report.flits_out += 1;
                 if tx.send(out).is_err() {
                     break; // downstream disabled
@@ -502,6 +592,128 @@ impl Pblock {
         }
         gate.finish();
         Ok(report)
+    }
+
+    /// Fire the injections scheduled for the current input flit (armed
+    /// runs only). Every injection is recorded as a [`FaultEvent`] —
+    /// `injected` when it took effect, `skipped` when the partition has no
+    /// matching surface (e.g. a lane fault on a single-lane RM).
+    fn apply_due_faults(rm: &mut LoadedRm, ctl: &PblockCtl, pool: Option<&LanePool>) {
+        let idx = ctl.swap.flits_seen();
+        for fault in ctl.faults.take_due(idx) {
+            let tag = fault.kind.tag();
+            let (action, detail) = match fault.kind {
+                FaultKind::LanePanic { lane } => match pool {
+                    Some(p) => {
+                        p.inject_lane_panic(lane);
+                        ("injected", format!("lane {lane} panics on its next scoring job"))
+                    }
+                    None => ("skipped", "partition has no lane pool".to_string()),
+                },
+                FaultKind::WorkerExit { worker } => match pool {
+                    Some(p) => {
+                        p.inject_worker_exit(worker);
+                        ("injected", format!("worker {worker} exits after its next job"))
+                    }
+                    None => ("skipped", "partition has no lane pool".to_string()),
+                },
+                FaultKind::StateCorrupt => {
+                    if rm.poison() {
+                        ("injected", "sliding-window denom poisoned (NaN)".to_string())
+                    } else {
+                        ("skipped", format!("{} holds no poisonable state", rm.describe()))
+                    }
+                }
+                FaultKind::Stall { ms } => {
+                    // Wedge *inside* the processing section: the
+                    // supervisor's watchdog must flag this.
+                    ctl.health.set_processing(true);
+                    std::thread::sleep(Duration::from_millis(ms));
+                    ctl.health.set_processing(false);
+                    ("injected", format!("service loop wedged {ms} ms mid-processing"))
+                }
+                FaultKind::InboxStall { ms } => {
+                    // Starve *outside* processing: indistinguishable from a
+                    // slow producer, so the watchdog must stay silent — the
+                    // loop records the injection itself.
+                    std::thread::sleep(Duration::from_millis(ms));
+                    ("injected", format!("starved {ms} ms outside processing (benign)"))
+                }
+            };
+            ctl.faults.record(FaultEvent {
+                id: fault.id,
+                pblock: fault.pblock,
+                at_flit: idx,
+                fault: tag.into(),
+                action: action.into(),
+                rung: 0,
+                latency_us: 0,
+                checkpoint_flit: None,
+                detail,
+            });
+        }
+    }
+
+    /// Screen one output flit for corruption (armed runs only). Non-finite
+    /// scores are replaced with a zero-score placeholder (downstream
+    /// framing stays aligned, score ordering is preserved), a rung-1
+    /// reload is requested, and the loop blocks — bounded by
+    /// `reload_wait_ms` — until the supervisor stages the replacement (or
+    /// quarantines the partition), so the swap lands deterministically at
+    /// the very next flit. Returns false when the flit was screened: the
+    /// caller must not feed it to the score stats or checkpoint on it.
+    fn screen_output(ctl: &PblockCtl, decoupler: &Decoupler, out: &mut Flit) -> bool {
+        let n = out.n_valid;
+        if out.data[..n].iter().all(|v| v.is_finite()) {
+            return true;
+        }
+        let at = ctl.swap.flits_seen();
+        let bad = out.data[..n].iter().filter(|v| !v.is_finite()).count();
+        ctl.faults.record(FaultEvent {
+            id: "-".into(),
+            pblock: ctl.faults.pblock(),
+            at_flit: at,
+            fault: "state_corrupt".into(),
+            action: "nonfinite_detected".into(),
+            rung: 1,
+            latency_us: 0,
+            checkpoint_flit: None,
+            detail: format!("{bad}/{n} scores non-finite; flit zeroed, reload requested"),
+        });
+        *out = hotswap::dark_flit(out);
+        ctl.health.request_reload(ReloadRequest {
+            fault_id: "-".into(),
+            at_flit: at,
+            reason: format!("{bad}/{n} non-finite scores"),
+        });
+        let wait = Duration::from_millis(ctl.health.reload_wait_ms());
+        let t0 = Instant::now();
+        while t0.elapsed() < wait {
+            if ctl.swap.pending_count() > 0 || decoupler.is_quarantined() {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        false
+    }
+
+    /// Store a checkpoint of the RM's detector state every
+    /// `checkpoint_every` healthy flits (armed runs only; never called on
+    /// a screened flit, so a stored checkpoint is always finite state).
+    fn maybe_checkpoint(rm: &LoadedRm, ctl: &PblockCtl, samples: u64) {
+        let every = ctl.health.checkpoint_every();
+        if every == 0 {
+            return;
+        }
+        // flits_seen was advanced by admit(): it equals the number of
+        // flits fully processed once this flit's scores are out.
+        let done = ctl.swap.flits_seen();
+        if done == 0 || done % every != 0 {
+            return;
+        }
+        if let Some(bytes) = snapshot_rm(rm) {
+            ctl.checkpoint.store(Checkpoint { flit: done, samples, bytes });
+        }
     }
 
     /// Service one stream in bursts: block for the head flit, drain the
@@ -524,6 +736,14 @@ impl Pblock {
         tx: Sender<Flit>,
         pool: Option<&LanePool>,
     ) -> Result<PblockReport> {
+        // A fault campaign needs the per-flit hooks (heartbeat, injection
+        // points, output screen, checkpoints); armed partitions fall back
+        // to the lock-step loop. Chunk boundaries never change CPU RM
+        // arithmetic, so scores are unchanged — only the per-transfer
+        // amortisation is given up, and only while faults are armed.
+        if ctl.health.is_armed() {
+            return Self::service(rm, decoupler, ctl, rx, tx, pool);
+        }
         // When the adaptive controller is watching this pblock (stats
         // armed), bound the backlog so scores are published — and newly
         // scheduled swaps consulted — at flit-bounded intervals mid-stream.

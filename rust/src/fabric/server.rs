@@ -51,12 +51,14 @@ use std::thread::JoinHandle;
 
 use super::decoupler::Decoupler;
 use super::dma::unpad_into;
+use super::faults::{FaultEvent, FaultInjector};
 use super::hotswap::{self, ControllerEnv, ControllerTarget, PblockCtl, SwapEvent};
 use super::message::{Flit, FlitSource, Port};
 use super::pblock::{LoadedRm, Pblock, PblockReport};
 use super::reconfig::DfxManager;
+use super::supervisor::{self, SupervisorEnv, SupervisorTarget};
 use super::topology::{kind_of, pblock_seed};
-use crate::config::{DetectorHyper, DfxCfg, FseadConfig, RmKind, ScriptedSwap};
+use crate::config::{DetectorHyper, DfxCfg, FaultsCfg, FseadConfig, RmKind, ScriptedSwap};
 use crate::data::Dataset;
 use crate::ensemble::{ExecMode, LanePool};
 use crate::runtime::{Registry, Runtime, RuntimeHandle};
@@ -237,6 +239,7 @@ struct SessionOutcome {
     swap_events: Vec<SwapEvent>,
     adaptive_swaps: u64,
     discarded_swaps: u64,
+    fault_events: Vec<FaultEvent>,
     error: Option<String>,
 }
 
@@ -294,6 +297,9 @@ struct WorkerEnv {
     ctl: Arc<PblockCtl>,
     decoupler: Arc<Decoupler>,
     shared: Arc<Shared>,
+    /// Fault-injection + recovery config; `enabled = false` keeps every
+    /// fault hook out of the episode's service loop.
+    faults: FaultsCfg,
 }
 
 fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<SessionWork>) {
@@ -351,6 +357,7 @@ fn serve_episode(
         swap_events: Vec::new(),
         adaptive_swaps: 0,
         discarded_swaps: 0,
+        fault_events: Vec::new(),
         error: Some(error),
     };
     let fpga = env.fpga.as_ref().map(|(h, r)| (h, r));
@@ -431,6 +438,64 @@ fn serve_episode(
         }
         _ => None,
     };
+    // Fault campaign, per session: arm the per-flit hooks, schedule this
+    // partition's scripted injections (an open-ended session has no flit
+    // horizon, so rate-based injections only apply to `Fabric::run`), and
+    // watch the episode with a single-target supervisor running the same
+    // retry → reload → quarantine ladder as the one-shot fabric. Spawned
+    // after every early return above so the thread can never leak.
+    let fault_supervisor = if env.faults.enabled {
+        env.ctl.health.arm(env.faults.checkpoint_every_flits, env.faults.reload_wait_ms);
+        env.ctl.faults.bind(env.id);
+        env.ctl.faults.clear_pending();
+        env.ctl.checkpoint.clear();
+        match FaultInjector::plan(&env.faults, env.seed, &[env.id], 0) {
+            Ok(plan) => env
+                .ctl
+                .faults
+                .schedule(plan.into_iter().filter(|f| f.pblock == env.id).collect()),
+            Err(e) => {
+                env.ctl.health.disarm();
+                // Stop the adaptive controller before bailing so the
+                // thread never outlives its episode.
+                if let Some((stop, handle)) = controller {
+                    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+                    let _ = handle.join();
+                }
+                return failed(format!("planning fault injections: {e:#}"));
+            }
+        }
+        if let Some(pool) = env.pool.as_ref() {
+            pool.arm_faults();
+        }
+        kind_of(env.rm).map(|kind| {
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let senv = SupervisorEnv {
+                dfx: env.dfx.clone(),
+                faults: env.faults.clone(),
+                hyper: env.hyper,
+                chunk: env.chunk,
+                samples_per_sec: env.dfx_cfg.samples_per_sec,
+                policy: env.dfx_cfg.policy,
+            };
+            let targets = vec![SupervisorTarget {
+                pblock: env.id,
+                ctl: Arc::clone(&env.ctl),
+                decoupler: Arc::clone(&env.decoupler),
+                kind,
+                r: env.r,
+                d,
+                seed: env.seed,
+                warmup: warmup.to_vec(),
+                lanes: env.lanes,
+                quantize: env.quantize,
+            }];
+            let handle = supervisor::spawn_supervisor(senv, targets, Arc::clone(&stop));
+            (stop, handle)
+        })
+    } else {
+        None
+    };
     let served = Pblock::service_mode(
         &mut rm,
         &env.decoupler,
@@ -447,6 +512,24 @@ fn serve_episode(
         }
         None => 0,
     };
+    if let Some((stop, handle)) = fault_supervisor {
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        let _ = handle.join();
+    }
+    let mut fault_events = Vec::new();
+    if env.faults.enabled {
+        // Session boundary: collect the fault log, disarm the hooks and
+        // drop the episode's checkpoints. A quarantine is lifted here —
+        // the next session builds a fresh RM, so the region is trusted
+        // again (mirroring a full reconfiguration of the partition).
+        fault_events = env.ctl.faults.take_events();
+        fault_events.sort_by_key(|e| e.at_flit);
+        env.ctl.health.disarm();
+        env.ctl.checkpoint.clear();
+        if env.decoupler.is_quarantined() {
+            env.decoupler.lift_quarantine();
+        }
+    }
     if env.ctl.stats.is_armed() {
         env.ctl.stats.disarm();
     }
@@ -460,6 +543,7 @@ fn serve_episode(
             swap_events,
             adaptive_swaps,
             discarded_swaps: 0,
+            fault_events,
             error: None,
         },
         Err(e) => SessionOutcome {
@@ -467,6 +551,7 @@ fn serve_episode(
             swap_events,
             adaptive_swaps,
             discarded_swaps: 0,
+            fault_events,
             error: Some(format!("{e:#}")),
         },
     }
@@ -598,6 +683,7 @@ impl FabricServer {
                 ctl: Arc::clone(&ctl),
                 decoupler: Arc::clone(&decoupler),
                 shared: Arc::clone(&shared),
+                faults: cfg.faults.clone(),
             };
             let handle = std::thread::Builder::new()
                 .name(format!("serve-p{}", p.id))
@@ -867,6 +953,10 @@ pub struct SessionClose {
     /// Swaps armed but never executed — discarded at episode boundaries so
     /// a stale replacement RM (staged for another stream) can never fire.
     pub discarded_swaps: u64,
+    /// Fault injections, detections and recovery-ladder transitions
+    /// recorded during the session (empty unless `[fabric.faults]`
+    /// `enabled = true`), in flit order.
+    pub fault_events: Vec<FaultEvent>,
 }
 
 /// A client's handle on one streaming session. Push sample chunks, receive
@@ -1034,6 +1124,7 @@ impl Session {
             swap_events: outcome.swap_events,
             adaptive_swaps: outcome.adaptive_swaps,
             discarded_swaps: outcome.discarded_swaps,
+            fault_events: outcome.fault_events,
         })
     }
 }

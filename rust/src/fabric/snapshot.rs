@@ -1,0 +1,400 @@
+//! Checkpoint codec for detector window state.
+//!
+//! Everything dynamic in a CPU detector RM lives in its
+//! [`SlidingCounts`] window (parameters and derived caches rebuild
+//! deterministically from the seed + warm-up prefix), so a checkpoint is
+//! just that window serialized — for a multi-lane RM, one window per lane.
+//! The codec is hand-rolled (no serde in this tree): a fixed little-endian
+//! layout behind a magic/version header, bounds-checked on the way back in
+//! and shape-checked against the live RM before a single value is written,
+//! so a truncated or mismatched snapshot can never half-restore a window.
+//!
+//! The fault supervisor uses this for rung 1 of its escalation ladder: the
+//! service loop stores a [`Checkpoint`] into the partition's
+//! [`CheckpointSlot`] every `checkpoint_every_flits` healthy flits, and a
+//! corruption-triggered RM reload restores the latest checkpoint into the
+//! staged replacement so the partition resumes **bit-identically** from the
+//! checkpointed flit instead of cold-starting an empty window.
+
+use anyhow::{bail, Context, Result};
+use std::sync::Mutex;
+
+use super::pblock::LoadedRm;
+use crate::detectors::window::SlidingCounts;
+
+/// Snapshot header magic ("fSEAD SNaPshot").
+const MAGIC: [u8; 4] = *b"FSNP";
+/// Layout version; bump on any wire-format change.
+const VERSION: u8 = 1;
+
+/// Variant tags following the header.
+const TAG_SINGLE: u8 = 1;
+const TAG_LANES: u8 = 2;
+
+// ---------------------------------------------------------------------------
+// Little-endian wire helpers
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_i32_slice(&mut self, vs: &[i32]) {
+        self.buf.reserve(vs.len() * 4);
+        for v in vs {
+            self.buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).context("snapshot length overflow")?;
+        if end > self.buf.len() {
+            bail!("snapshot truncated: wanted {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn get_i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        let raw = self.take(n.checked_mul(4).context("snapshot length overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Window <-> wire
+// ---------------------------------------------------------------------------
+
+fn write_window(w: &mut Writer, sc: &SlidingCounts) {
+    w.put_u32(sc.rows() as u32);
+    w.put_u32(sc.width() as u32);
+    w.put_u32(sc.window() as u32);
+    w.put_u32(sc.pos() as u32);
+    w.put_u64(sc.n());
+    w.put_f32(sc.log2_denom());
+    w.put_i32_slice(sc.counts());
+    w.put_i32_slice(sc.ring());
+}
+
+fn read_window_into(r: &mut Reader<'_>, sc: &mut SlidingCounts) -> Result<()> {
+    let rows = r.get_u32()? as usize;
+    let width = r.get_u32()? as usize;
+    let window = r.get_u32()? as usize;
+    if (rows, width, window) != (sc.rows(), sc.width(), sc.window()) {
+        bail!(
+            "snapshot shape [{rows}×{width}, window {window}] does not match the live window \
+             [{}×{}, window {}] — the RM it was taken from had a different configuration",
+            sc.rows(),
+            sc.width(),
+            sc.window()
+        );
+    }
+    let pos = r.get_u32()? as usize;
+    let n = r.get_u64()?;
+    let log2_denom = r.get_f32()?;
+    let counts = r.get_i32_vec(rows * width)?;
+    let ring = r.get_i32_vec(rows * window)?;
+    sc.load(&counts, &ring, pos, n, log2_denom).map_err(|e| anyhow::anyhow!(e))
+}
+
+// ---------------------------------------------------------------------------
+// RM <-> wire
+// ---------------------------------------------------------------------------
+
+/// Serialize the dynamic state of a CPU detector RM. `None` for RM variants
+/// with no host-visible window state (empty, bypass, FPGA artifacts — the
+/// device owns their state).
+pub fn snapshot_rm(rm: &LoadedRm) -> Option<Vec<u8>> {
+    let mut w = Writer::new();
+    w.buf.extend_from_slice(&MAGIC);
+    w.put_u8(VERSION);
+    match rm {
+        LoadedRm::DetectorCpu { det } => {
+            let sc = det.window_state()?;
+            w.put_u8(TAG_SINGLE);
+            write_window(&mut w, sc);
+        }
+        LoadedRm::DetectorCpuLanes { lanes, .. } => {
+            w.put_u8(TAG_LANES);
+            w.put_u32(lanes.len() as u32);
+            for lane in lanes {
+                let sc = lane.det()?.window_state()?;
+                write_window(&mut w, sc);
+            }
+        }
+        _ => return None,
+    }
+    Some(w.buf)
+}
+
+/// Restore a snapshot into `rm`. The target must have the same variant and
+/// window shape the snapshot was taken from (same detector kind / r /
+/// hyper-parameters / lane layout); anything else is refused before any
+/// state is modified — validation happens window-by-window through
+/// [`SlidingCounts::load`], which rejects rather than partially applies.
+pub fn restore_rm(rm: &mut LoadedRm, bytes: &[u8]) -> Result<()> {
+    let mut r = Reader::new(bytes);
+    if r.take(4)? != MAGIC {
+        bail!("not a window snapshot (bad magic)");
+    }
+    let version = r.get_u8()?;
+    if version != VERSION {
+        bail!("unsupported snapshot version {version} (this build writes {VERSION})");
+    }
+    let tag = r.get_u8()?;
+    match (tag, rm) {
+        (TAG_SINGLE, LoadedRm::DetectorCpu { det }) => {
+            let sc = det
+                .window_state_mut()
+                .context("detector exposes no window state to restore into")?;
+            read_window_into(&mut r, sc)?;
+        }
+        (TAG_LANES, LoadedRm::DetectorCpuLanes { lanes, .. }) => {
+            let n = r.get_u32()? as usize;
+            if n != lanes.len() {
+                bail!(
+                    "snapshot has {n} lane window(s), the live RM has {} — lane layouts differ",
+                    lanes.len()
+                );
+            }
+            for (li, lane) in lanes.iter_mut().enumerate() {
+                let sc = lane
+                    .det_mut()
+                    .and_then(|d| d.window_state_mut())
+                    .with_context(|| format!("lane {li} exposes no window state"))?;
+                read_window_into(&mut r, sc)
+                    .with_context(|| format!("restoring lane {li}"))?;
+            }
+        }
+        (TAG_SINGLE | TAG_LANES, rm) => bail!(
+            "snapshot variant does not match the live RM ({}) — it was taken from a \
+             different RM layout",
+            rm.describe()
+        ),
+        (other, _) => bail!("unknown snapshot variant tag {other}"),
+    }
+    if !r.done() {
+        bail!("snapshot has trailing bytes — corrupt or from a different layout");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Per-partition checkpoint slot
+// ---------------------------------------------------------------------------
+
+/// One stored checkpoint: the RM's window state after `flit` input flits of
+/// the current stream were fully processed.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Input flits fully processed when the snapshot was taken.
+    pub flit: u64,
+    /// Valid samples scored when the snapshot was taken.
+    pub samples: u64,
+    /// Serialized window state ([`snapshot_rm`]).
+    pub bytes: Vec<u8>,
+}
+
+/// Latest-checkpoint mailbox on a partition's control surface: the service
+/// loop stores, the fault supervisor reads when staging a recovery reload.
+/// Single-slot by design — recovery always wants the most recent healthy
+/// state, and a bounded slot can never grow with stream length.
+#[derive(Default)]
+pub struct CheckpointSlot {
+    latest: Mutex<Option<Checkpoint>>,
+}
+
+impl CheckpointSlot {
+    /// Replace the stored checkpoint.
+    pub fn store(&self, cp: Checkpoint) {
+        *self.latest.lock().unwrap() = Some(cp);
+    }
+
+    /// The most recent checkpoint, if any.
+    pub fn latest(&self) -> Option<Checkpoint> {
+        self.latest.lock().unwrap().clone()
+    }
+
+    /// Drop the stored checkpoint (stream/episode boundary: a checkpoint
+    /// from one stream must never restore into another).
+    pub fn clear(&self) {
+        *self.latest.lock().unwrap() = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DetectorHyper, RmKind};
+    use crate::detectors::prng::Prng;
+    use crate::detectors::{Detector, DetectorKind};
+    use crate::ensemble::lanes::LaneInput;
+
+    fn hyper() -> DetectorHyper {
+        DetectorHyper { window: 16, bins: 8, w: 2, modulus: 32, k: 4 }
+    }
+
+    fn stream(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut p = Prng::new(seed);
+        (0..n * d).map(|_| p.gaussian() as f32).collect()
+    }
+
+    fn rm(kind: DetectorKind, r: usize, seed: u64, warmup: &[f32], lanes: usize) -> LoadedRm {
+        LoadedRm::build(RmKind::Detector(kind), r, 3, seed, &hyper(), warmup, None, false, lanes)
+            .unwrap()
+    }
+
+    fn feed(rm: &mut LoadedRm, data: &[f32]) -> Vec<f32> {
+        match rm {
+            LoadedRm::DetectorCpu { det } => {
+                let n = data.len() / det.d();
+                let mut out = vec![0f32; n];
+                det.update_batch(data, &mut out);
+                out
+            }
+            LoadedRm::DetectorCpuLanes { lanes, d, .. } => {
+                let n = data.len() / *d;
+                let input = LaneInput::Rows(std::sync::Arc::new(data.to_vec()));
+                crate::ensemble::lanes::score_inline(lanes, &input, n, usize::MAX).unwrap();
+                let mut out = vec![0f32; n];
+                crate::ensemble::lanes::merge_lanes_into(lanes, &mut out);
+                out
+            }
+            _ => panic!("not a CPU detector RM"),
+        }
+    }
+
+    #[test]
+    fn roundtrip_resumes_bit_identically() {
+        let data = stream(64, 3, 1);
+        for kind in DetectorKind::ALL {
+            // Reference: one uninterrupted stream.
+            let mut a = rm(kind, 4, 7, &data[..30], 1);
+            let want = feed(&mut a, &data);
+            // Snapshot mid-stream, restore into a fresh RM, resume.
+            let mut b = rm(kind, 4, 7, &data[..30], 1);
+            feed(&mut b, &data[..32 * 3]);
+            let snap = snapshot_rm(&b).expect("CPU detector RMs snapshot");
+            let mut c = rm(kind, 4, 7, &data[..30], 1);
+            restore_rm(&mut c, &snap).unwrap();
+            let tail = feed(&mut c, &data[32 * 3..]);
+            assert_eq!(&tail[..], &want[32..], "{kind:?} restored RM must resume bit-identically");
+        }
+    }
+
+    #[test]
+    fn roundtrip_covers_lane_arrays() {
+        let data = stream(48, 3, 2);
+        let mut a = rm(DetectorKind::Loda, 5, 9, &data[..30], 2);
+        let want = feed(&mut a, &data);
+        let mut b = rm(DetectorKind::Loda, 5, 9, &data[..30], 2);
+        feed(&mut b, &data[..24 * 3]);
+        let snap = snapshot_rm(&b).unwrap();
+        let mut c = rm(DetectorKind::Loda, 5, 9, &data[..30], 2);
+        restore_rm(&mut c, &snap).unwrap();
+        let tail = feed(&mut c, &data[24 * 3..]);
+        assert_eq!(&tail[..], &want[24..], "per-lane windows must restore independently");
+    }
+
+    #[test]
+    fn shape_mismatch_is_refused() {
+        let data = stream(32, 3, 3);
+        let src = rm(DetectorKind::Loda, 4, 7, &data[..30], 1);
+        let snap = snapshot_rm(&src).unwrap();
+        // Different r → different window rows.
+        let mut wrong_r = rm(DetectorKind::Loda, 3, 7, &data[..30], 1);
+        assert!(restore_rm(&mut wrong_r, &snap).is_err());
+        // Different lane layout.
+        let mut wrong_lanes = rm(DetectorKind::Loda, 4, 7, &data[..30], 2);
+        assert!(restore_rm(&mut wrong_lanes, &snap).is_err());
+        // Non-detector RM.
+        let mut bypass = LoadedRm::BypassNative;
+        assert!(restore_rm(&mut bypass, &snap).is_err());
+        assert!(snapshot_rm(&bypass).is_none());
+    }
+
+    #[test]
+    fn truncated_or_corrupt_bytes_are_refused() {
+        let data = stream(32, 3, 4);
+        let src = rm(DetectorKind::RsHash, 3, 5, &data[..30], 1);
+        let snap = snapshot_rm(&src).unwrap();
+        let mut dst = rm(DetectorKind::RsHash, 3, 5, &data[..30], 1);
+        for cut in [0, 3, 5, 6, snap.len() / 2, snap.len() - 1] {
+            assert!(restore_rm(&mut dst, &snap[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        let mut bad_magic = snap.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(restore_rm(&mut dst, &bad_magic).is_err());
+        let mut bad_version = snap.clone();
+        bad_version[4] = 99;
+        assert!(restore_rm(&mut dst, &bad_version).is_err());
+        let mut trailing = snap.clone();
+        trailing.push(0);
+        assert!(restore_rm(&mut dst, &trailing).is_err());
+    }
+
+    #[test]
+    fn checkpoint_slot_keeps_latest_and_clears() {
+        let slot = CheckpointSlot::default();
+        assert!(slot.latest().is_none());
+        slot.store(Checkpoint { flit: 4, samples: 64, bytes: vec![1] });
+        slot.store(Checkpoint { flit: 8, samples: 128, bytes: vec![2] });
+        let cp = slot.latest().unwrap();
+        assert_eq!((cp.flit, cp.samples, cp.bytes), (8, 128, vec![2]));
+        slot.clear();
+        assert!(slot.latest().is_none());
+    }
+}

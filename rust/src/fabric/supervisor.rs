@@ -1,0 +1,468 @@
+//! Partition supervisor: the fault-recovery control plane.
+//!
+//! # Fault model
+//!
+//! The fabric assumes **fail-corrupt, fail-stop partitions on a reliable
+//! shell**: a reconfigurable partition can corrupt its detector state
+//! (SEU in region memory → non-finite scores), lose a lane worker
+//! (panicked or exited thread, the software analogue of hung region
+//! logic), or wedge mid-flit — but the static shell (DMA framing, control
+//! surfaces, decouplers, this supervisor) stays correct. Faults are
+//! detected at three surfaces:
+//!
+//! - **Output screen** (in the service loop): every score flit of an
+//!   armed partition is checked for non-finite values before it reaches
+//!   downstream consumers or the score stats.
+//! - **Worker containment** (in the lane pool): a panicking detector job
+//!   is caught, its lane state rolled back, and the job retried once; a
+//!   dead worker surfaces as a clean `Err` from scoring.
+//! - **Heartbeat watchdog** (this thread): each service loop ticks a
+//!   per-partition beat and raises a `processing` flag strictly while the
+//!   RM is scoring. A partition whose beat is frozen *while processing*
+//!   past `stall_timeout_ms` is flagged; a partition blocked on an empty
+//!   inbox is healthy no matter how long it waits — upstream starvation
+//!   is not a partition fault.
+//!
+//! # Escalation ladder
+//!
+//! Recovery escalates through three rungs, each strictly more expensive
+//! and more disruptive than the last:
+//!
+//! 1. **Rung 0 — in-place containment** (no dark window): lane-panic
+//!    rollback + retry inside the worker, dead-worker respawn + flit
+//!    retry in the service loop. Bit-exact when the retry succeeds.
+//! 2. **Rung 1 — RM reload**: the service loop files a [`ReloadRequest`]
+//!    (and blocks, bounded, so the swap lands at the very next flit); the
+//!    supervisor waits out an exponential backoff, stages a fresh RM
+//!    through the existing DFX stage/quiesce/replace path — charging the
+//!    Table-13 dark window exactly like a planned swap — and, when a
+//!    checkpoint exists, restores the last snapshot into the staged RM
+//!    (`preserve_state` skips the post-swap reset) so the partition
+//!    *resumes* instead of cold-starting.
+//! 3. **Rung 2 — quarantine**: after `max_reloads` rung-1 attempts the
+//!    partition is permanently isolated — the decoupler latches
+//!    ([`Decoupler::quarantine`]): DECOUPLE asserted, then disabled so no
+//!    staged swap can re-enable the region. Downstream combos detect the
+//!    closed input, consult the quarantine flag and renormalize over the
+//!    surviving partitions.
+//!
+//! Every detection and every rung transition is recorded as a typed
+//! [`FaultEvent`] on the partition's fault port, drained into
+//! `RunOutput::fault_events` (and surfaced per-session by the fabric
+//! server), so a fault campaign is fully auditable after the run.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::decoupler::Decoupler;
+use super::faults::{FaultEvent, ReloadRequest};
+use super::hotswap::PblockCtl;
+use super::reconfig::DfxManager;
+use super::snapshot::restore_rm;
+use crate::config::{DarkPolicy, DetectorHyper, FaultsCfg, RmKind};
+use crate::detectors::DetectorKind;
+
+/// One partition watched by the supervisor — everything needed to stage a
+/// replacement RM identical (modulo restored state) to the configured one.
+pub struct SupervisorTarget {
+    pub pblock: usize,
+    pub ctl: Arc<PblockCtl>,
+    pub decoupler: Arc<Decoupler>,
+    pub kind: DetectorKind,
+    pub r: usize,
+    pub d: usize,
+    pub seed: u64,
+    pub warmup: Vec<f32>,
+    pub lanes: usize,
+    pub quantize: bool,
+}
+
+/// Everything the supervisor thread owns.
+pub struct SupervisorEnv {
+    pub dfx: DfxManager,
+    pub faults: FaultsCfg,
+    pub hyper: DetectorHyper,
+    pub chunk: usize,
+    pub samples_per_sec: f64,
+    pub policy: DarkPolicy,
+}
+
+/// Per-target watchdog + ladder state.
+struct TargetState {
+    reloads: u32,
+    last_beat: u64,
+    last_change: Instant,
+    stall_latched: bool,
+    quarantined: bool,
+}
+
+/// Spawn the partition supervisor. It polls each target's health surface
+/// (~200 µs period), runs the stall watchdog, and consumes reload
+/// requests through the retry → reload → quarantine ladder. Returns the
+/// number of rung-1 reloads + rung-2 quarantines it performed when `stop`
+/// is raised.
+///
+/// Supervisor reloads stage CPU-native RMs (fault campaigns run on the
+/// CPU data plane; a poisoned modelled-FPGA RM is out of reach anyway —
+/// `LoadedRm::poison` skips it).
+pub fn spawn_supervisor(
+    env: SupervisorEnv,
+    targets: Vec<SupervisorTarget>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<u64> {
+    std::thread::Builder::new()
+        .name("fault-supervisor".into())
+        .spawn(move || {
+            let mut actions = 0u64;
+            let mut states: Vec<TargetState> = targets
+                .iter()
+                .map(|t| TargetState {
+                    reloads: 0,
+                    last_beat: t.ctl.health.beat(),
+                    last_change: Instant::now(),
+                    stall_latched: false,
+                    quarantined: false,
+                })
+                .collect();
+            let stall_timeout = Duration::from_millis(env.faults.stall_timeout_ms.max(1));
+            while !stop.load(Ordering::SeqCst) {
+                for (t, st) in targets.iter().zip(states.iter_mut()) {
+                    if st.quarantined {
+                        continue;
+                    }
+                    // -- stall watchdog -----------------------------------
+                    let beat = t.ctl.health.beat();
+                    if beat != st.last_beat {
+                        st.last_beat = beat;
+                        st.last_change = Instant::now();
+                        st.stall_latched = false;
+                    } else if t.ctl.health.is_processing()
+                        && st.last_change.elapsed() > stall_timeout
+                        && !st.stall_latched
+                    {
+                        // Frozen beat while scoring: the partition is
+                        // wedged. Latch so one stall records one event.
+                        st.stall_latched = true;
+                        t.ctl.faults.record(FaultEvent {
+                            id: "-".into(),
+                            pblock: t.pblock,
+                            at_flit: t.ctl.swap.flits_seen(),
+                            fault: "stall".into(),
+                            action: "stall_detected".into(),
+                            rung: 0,
+                            latency_us: st.last_change.elapsed().as_micros() as u64,
+                            checkpoint_flit: None,
+                            detail: format!(
+                                "no heartbeat for {} ms while processing",
+                                st.last_change.elapsed().as_millis()
+                            ),
+                        });
+                    }
+                    // -- reload ladder ------------------------------------
+                    let Some(req) = t.ctl.health.take_reload() else { continue };
+                    let t0 = Instant::now();
+                    st.reloads += 1;
+                    if st.reloads > env.faults.max_reloads {
+                        // Rung 2: the partition keeps corrupting itself
+                        // through fresh RMs — stop trusting the region.
+                        t.decoupler.quarantine();
+                        st.quarantined = true;
+                        actions += 1;
+                        t.ctl.faults.record(FaultEvent {
+                            id: req.fault_id,
+                            pblock: t.pblock,
+                            at_flit: t.ctl.swap.flits_seen(),
+                            fault: "state_corrupt".into(),
+                            action: "quarantined".into(),
+                            rung: 2,
+                            latency_us: t0.elapsed().as_micros() as u64,
+                            checkpoint_flit: None,
+                            detail: format!(
+                                "{} reloads exhausted ({}); partition isolated for the \
+                                 rest of the run",
+                                env.faults.max_reloads, req.reason
+                            ),
+                        });
+                        continue;
+                    }
+                    // Rung 1: bounded exponential backoff, then reload
+                    // through the DFX path like a planned swap.
+                    let backoff = env.faults.backoff_ms << (st.reloads - 1).min(16);
+                    if backoff > 0 {
+                        std::thread::sleep(Duration::from_millis(backoff));
+                    }
+                    stage_reload(&env, t, &req, st, t0, &mut actions);
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            actions
+        })
+        .expect("spawn fault supervisor")
+}
+
+/// Stage one rung-1 reload for `t`: fresh RM, checkpoint restored into it
+/// when one exists, scheduled at the partition's current flit (the service
+/// loop is blocking on `pending_count`, so it lands at the next flit).
+fn stage_reload(
+    env: &SupervisorEnv,
+    t: &SupervisorTarget,
+    req: &ReloadRequest,
+    st: &mut TargetState,
+    t0: Instant,
+    actions: &mut u64,
+) {
+    let at_flit = t.ctl.swap.flits_seen();
+    let staged = env.dfx.stage(
+        t.pblock,
+        RmKind::Detector(t.kind),
+        t.r,
+        t.d,
+        t.seed,
+        &env.hyper,
+        &t.warmup,
+        None,
+        t.quantize,
+        at_flit,
+        env.faults.dark_flits,
+        env.policy,
+        env.chunk,
+        env.samples_per_sec,
+        t.lanes,
+    );
+    match staged {
+        Ok(mut swap) => {
+            let mut checkpoint_flit = None;
+            let mut detail = format!("fresh {} staged (attempt {})", swap.rm.describe(), st.reloads);
+            if let Some(cp) = t.ctl.checkpoint.latest() {
+                match restore_rm(&mut swap.rm, &cp.bytes) {
+                    Ok(()) => {
+                        swap.preserve_state = true;
+                        checkpoint_flit = Some(cp.flit);
+                        detail = format!(
+                            "reloaded from checkpoint flit {} (attempt {})",
+                            cp.flit, st.reloads
+                        );
+                    }
+                    Err(e) => {
+                        detail = format!(
+                            "checkpoint restore failed ({e:#}); cold reload (attempt {})",
+                            st.reloads
+                        );
+                    }
+                }
+            }
+            t.ctl.swap.schedule(swap);
+            *actions += 1;
+            t.ctl.faults.record(FaultEvent {
+                id: req.fault_id.clone(),
+                pblock: t.pblock,
+                at_flit,
+                fault: "state_corrupt".into(),
+                action: "reloaded".into(),
+                rung: 1,
+                latency_us: t0.elapsed().as_micros() as u64,
+                checkpoint_flit,
+                detail,
+            });
+        }
+        Err(e) => {
+            // A failed staging attempt still consumed a rung-1 strike:
+            // repeated failures escalate to quarantine instead of looping.
+            t.ctl.faults.record(FaultEvent {
+                id: req.fault_id.clone(),
+                pblock: t.pblock,
+                at_flit,
+                fault: "state_corrupt".into(),
+                action: "reload_failed".into(),
+                rung: 1,
+                latency_us: t0.elapsed().as_micros() as u64,
+                checkpoint_flit: None,
+                detail: format!("staging failed: {e:#}"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::detectors::prng::Prng;
+    use crate::fabric::pblock::LoadedRm;
+
+    fn hyper() -> DetectorHyper {
+        DetectorHyper { window: 16, bins: 8, w: 2, modulus: 32, k: 4 }
+    }
+
+    fn warmup(d: usize) -> Vec<f32> {
+        let mut p = Prng::new(5);
+        (0..32 * d).map(|_| p.gaussian() as f32).collect()
+    }
+
+    fn target(ctl: Arc<PblockCtl>, dec: Arc<Decoupler>) -> SupervisorTarget {
+        SupervisorTarget {
+            pblock: 1,
+            ctl,
+            decoupler: dec,
+            kind: DetectorKind::Loda,
+            r: 4,
+            d: 3,
+            seed: 7,
+            warmup: warmup(3),
+            lanes: 1,
+            quantize: false,
+        }
+    }
+
+    fn env(max_reloads: u32) -> SupervisorEnv {
+        SupervisorEnv {
+            dfx: DfxManager::default(),
+            faults: FaultsCfg {
+                max_reloads,
+                backoff_ms: 0,
+                stall_timeout_ms: 5,
+                dark_flits: Some(1),
+                ..Default::default()
+            },
+            hyper: hyper(),
+            chunk: 16,
+            samples_per_sec: 1e5,
+            policy: DarkPolicy::Bypass,
+        }
+    }
+
+    fn wait_for<F: Fn() -> bool>(cond: F) {
+        let t0 = Instant::now();
+        while !cond() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(cond(), "condition not reached within 5 s");
+    }
+
+    #[test]
+    fn reload_request_stages_swap_with_checkpoint_restore() {
+        let ctl = Arc::new(PblockCtl::default());
+        let dec = Arc::new(Decoupler::new());
+        ctl.health.arm(4, 100);
+        // Fabricate a checkpoint: a detector RM fed 32 samples.
+        let mut rm = LoadedRm::build(
+            RmKind::Detector(DetectorKind::Loda),
+            4,
+            3,
+            7,
+            &hyper(),
+            &warmup(3),
+            None,
+            false,
+            1,
+        )
+        .unwrap();
+        if let LoadedRm::DetectorCpu { det } = &mut rm {
+            let data = warmup(3);
+            let mut out = vec![0f32; 32];
+            det.update_batch(&data[..96], &mut out);
+        }
+        let bytes = crate::fabric::snapshot::snapshot_rm(&rm).unwrap();
+        ctl.checkpoint
+            .store(crate::fabric::snapshot::Checkpoint { flit: 2, samples: 32, bytes });
+        for _ in 0..6 {
+            ctl.swap.advance();
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle =
+            spawn_supervisor(env(2), vec![target(Arc::clone(&ctl), Arc::clone(&dec))], Arc::clone(&stop));
+        assert!(ctl.health.request_reload(ReloadRequest {
+            fault_id: "t1".into(),
+            at_flit: 6,
+            reason: "test".into(),
+        }));
+        wait_for(|| ctl.swap.pending_count() > 0);
+        stop.store(true, Ordering::SeqCst);
+        assert_eq!(handle.join().unwrap(), 1);
+        let swap = ctl.swap.try_take_due().expect("reload staged at current flit");
+        assert_eq!(swap.at_flit, 6);
+        assert!(swap.preserve_state, "checkpoint restore must skip the post-swap reset");
+        assert_eq!(swap.dark_flits, 1);
+        let evs = ctl.faults.take_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].action, "reloaded");
+        assert_eq!(evs[0].rung, 1);
+        assert_eq!(evs[0].id, "t1");
+        assert_eq!(evs[0].checkpoint_flit, Some(2));
+        assert!(!dec.is_quarantined());
+    }
+
+    #[test]
+    fn exhausted_reloads_escalate_to_quarantine() {
+        let ctl = Arc::new(PblockCtl::default());
+        let dec = Arc::new(Decoupler::new());
+        ctl.health.arm(0, 100);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle =
+            spawn_supervisor(env(1), vec![target(Arc::clone(&ctl), Arc::clone(&dec))], Arc::clone(&stop));
+        // First request: rung 1 (cold reload, no checkpoint stored).
+        ctl.health.request_reload(ReloadRequest {
+            fault_id: "a".into(),
+            at_flit: 0,
+            reason: "nan".into(),
+        });
+        wait_for(|| ctl.swap.pending_count() > 0);
+        // Second request exceeds max_reloads = 1: rung 2.
+        ctl.health.request_reload(ReloadRequest {
+            fault_id: "b".into(),
+            at_flit: 1,
+            reason: "nan again".into(),
+        });
+        wait_for(|| dec.is_quarantined());
+        stop.store(true, Ordering::SeqCst);
+        assert_eq!(handle.join().unwrap(), 2);
+        assert!(!dec.is_enabled(), "quarantine must block future swaps");
+        let evs = ctl.faults.take_events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].action, "reloaded");
+        assert_eq!(evs[0].checkpoint_flit, None, "no checkpoint -> cold reload");
+        assert_eq!(evs[1].action, "quarantined");
+        assert_eq!(evs[1].rung, 2);
+        assert_eq!(evs[1].id, "b");
+        // Quarantined targets are left alone afterwards.
+        ctl.health.request_reload(ReloadRequest {
+            fault_id: "c".into(),
+            at_flit: 2,
+            reason: "ignored".into(),
+        });
+        assert!(ctl.health.has_reload_request(), "supervisor no longer consumes requests");
+    }
+
+    #[test]
+    fn watchdog_flags_processing_stall_but_not_inbox_wait() {
+        let ctl = Arc::new(PblockCtl::default());
+        let dec = Arc::new(Decoupler::new());
+        ctl.health.arm(0, 100);
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle =
+            spawn_supervisor(env(2), vec![target(Arc::clone(&ctl), Arc::clone(&dec))], Arc::clone(&stop));
+        // Idle (processing = false): however long the beat is frozen, the
+        // watchdog must stay silent — blocked-on-inbox is healthy.
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(ctl.faults.take_events().is_empty(), "inbox wait must not be flagged");
+        // Wedge mid-processing: beat frozen with the flag raised.
+        ctl.health.tick();
+        ctl.health.set_processing(true);
+        wait_for(|| {
+            let evs = ctl.faults.take_events();
+            if evs.is_empty() {
+                return false;
+            }
+            assert_eq!(evs[0].action, "stall_detected");
+            assert_eq!(evs[0].fault, "stall");
+            true
+        });
+        // The beat moving again unlatches without further events.
+        ctl.health.set_processing(false);
+        ctl.health.tick();
+        std::thread::sleep(Duration::from_millis(10));
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+    }
+}

@@ -20,8 +20,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::combo::{self, ComboEngine};
+use super::decoupler::Decoupler;
 use super::dma::{DmaReport, InputDma, OutputDma};
+use super::faults::{FaultEvent, FaultInjector};
 use super::hotswap::{self, ControllerEnv, ControllerTarget, SwapEvent};
+use super::supervisor::{self, SupervisorEnv, SupervisorTarget};
 use super::message::{Flit, Port};
 use super::pblock::{Pblock, PblockReport};
 use super::reconfig::{DfxManager, ReconfigReport};
@@ -57,6 +60,10 @@ pub struct RunOutput {
     /// Swaps issued by the adaptive controller during this pass (some may
     /// still be pending if the stream ended first).
     pub adaptive_swaps_issued: u64,
+    /// Fault injections, detections and recovery-ladder transitions
+    /// recorded during this pass, in (flit, pblock) order. Empty unless
+    /// `[fabric.faults] enabled = true`.
+    pub fault_events: Vec<FaultEvent>,
 }
 
 /// The composable fabric.
@@ -347,6 +354,38 @@ impl Fabric {
             pb.ctl.swap.begin_run();
         }
 
+        // ---- Fault campaign: plan this pass's injections (scripted +
+        //      seeded random) and arm the per-partition fault hooks. With
+        //      faults disabled none of this runs and the data plane stays
+        //      bit-transparent to the fault machinery.
+        let faults_on = cfg.faults.enabled;
+        if faults_on {
+            let horizon = active
+                .iter()
+                .map(|p| {
+                    let n = self.streams[p.stream].n();
+                    ((n + chunk - 1) / chunk) as u64
+                })
+                .max()
+                .unwrap_or(0);
+            let ids: Vec<usize> = active.iter().map(|p| p.id).collect();
+            let plan = FaultInjector::plan(&cfg.faults, cfg.seed, &ids, horizon)?;
+            for pb in &self.pblocks {
+                if !ids.contains(&pb.id) {
+                    continue;
+                }
+                pb.ctl.health.arm(cfg.faults.checkpoint_every_flits, cfg.faults.reload_wait_ms);
+                pb.ctl.faults.bind(pb.id);
+                pb.ctl.faults.clear_pending();
+                pb.ctl
+                    .faults
+                    .schedule(plan.iter().filter(|f| f.pblock == pb.id).cloned().collect());
+                if let Some(pool) = &pb.pool {
+                    pool.arm_faults();
+                }
+            }
+        }
+
         // ---- Switch-1: slaves = pblock outputs; masters = direct-out DMAs
         //      then feeds toward Switch-2 (one per combo input).
         let mut sw1 = AxiSwitch::new("switch1", defaults::NUM_AD_PBLOCKS, 16)?;
@@ -418,6 +457,7 @@ impl Fabric {
                     Arc::clone(&stream_bufs[&p.stream]),
                     ds.d,
                     chunk,
+                    cfg.non_finite,
                     tx,
                 ),
             ));
@@ -486,11 +526,19 @@ impl Fabric {
             let engine = self.combo_engine(c)?;
             let inputs = combo_input_rx.remove(&c.id).unwrap();
             let tx = combo_out_tx.remove(&c.id).unwrap();
+            // Quarantine guards: when the fault ladder isolates an input
+            // partition, the combo drops it from the lock-step join and
+            // renormalizes instead of failing on the closed channel.
+            let guards: Vec<Option<Arc<Decoupler>>> = c
+                .inputs
+                .iter()
+                .map(|&id| Some(Arc::clone(&self.pblocks[id - 1].decoupler)))
+                .collect();
             let cid = c.id;
             combo_threads.push(
                 std::thread::Builder::new()
                     .name(format!("combo-{cid}"))
-                    .spawn(move || combo::service(&engine, inputs, tx))
+                    .spawn(move || combo::service_guarded(&engine, inputs, guards, tx))
                     .expect("spawn combo"),
             );
         }
@@ -529,6 +577,43 @@ impl Fabric {
             };
             let stop = Arc::new(AtomicBool::new(false));
             let handle = hotswap::spawn_controller(env, targets, Arc::clone(&stop));
+            Some((stop, handle))
+        } else {
+            None
+        };
+
+        // ---- Fault supervisor: watchdog + retry→reload→quarantine ladder.
+        //      Same spawn discipline as the controller — after every
+        //      fallible `?`, stopped and joined before any early return.
+        let fault_supervisor = if faults_on {
+            let mut targets = Vec::new();
+            for p in &active {
+                let Some(kind) = kind_of(p.rm) else { continue };
+                let pb = &self.pblocks[p.id - 1];
+                let ds = &self.streams[p.stream];
+                targets.push(SupervisorTarget {
+                    pblock: p.id,
+                    ctl: Arc::clone(&pb.ctl),
+                    decoupler: Arc::clone(&pb.decoupler),
+                    kind,
+                    r: p.r,
+                    d: ds.d,
+                    seed: pblock_seed(cfg.seed, p.id),
+                    warmup: ds.warmup(cfg.hyper.window).to_vec(),
+                    lanes: cfg.lanes_for(p),
+                    quantize: cfg.use_fpga,
+                });
+            }
+            let env = SupervisorEnv {
+                dfx: self.dfx.clone(),
+                faults: cfg.faults.clone(),
+                hyper: cfg.hyper,
+                chunk,
+                samples_per_sec: cfg.dfx.samples_per_sec,
+                policy: cfg.dfx.policy,
+            };
+            let stop = Arc::new(AtomicBool::new(false));
+            let handle = supervisor::spawn_supervisor(env, targets, Arc::clone(&stop));
             Some((stop, handle))
         } else {
             None
@@ -577,6 +662,10 @@ impl Fabric {
             }
             None => 0,
         };
+        if let Some((stop, handle)) = fault_supervisor {
+            stop.store(true, Ordering::SeqCst);
+            handle.join().map_err(|_| anyhow::anyhow!("fault supervisor panicked"))?;
+        }
         if let Some(e) = service_err {
             return Err(e);
         }
@@ -598,11 +687,33 @@ impl Fabric {
             out.swap_events.extend(evs);
         }
         out.swap_events.sort_by_key(|e| (e.at_flit, e.pblock));
+        // Fault campaign epilogue: collect the event log and disarm the
+        // per-flit hooks so a later pass without faults runs the plain
+        // (bit-transparent) service loop. A rung-2 quarantine stays latched
+        // across passes — the region is untrusted until reconfigured.
+        if faults_on {
+            for pb in &self.pblocks {
+                out.fault_events.extend(pb.ctl.faults.take_events());
+                pb.ctl.health.disarm();
+                pb.ctl.faults.clear_pending();
+            }
+            out.fault_events.sort_by_key(|e| (e.at_flit, e.pblock));
+        }
         // A swap may have put a multi-lane detector into a partition that
         // had no pool (or changed what the pool should serve): re-sync the
         // resident workers so the next run scores with full lane
         // parallelism instead of silently falling back to inline.
         self.ensure_lane_pools();
+        // Input DMAs first: an ingress rejection (`non_finite = "error"`)
+        // also collapses the downstream joins, and its diagnostic — naming
+        // the offending sample — must win over the secondary failures.
+        for (id, h) in input_dmas {
+            let rep = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("input dma panicked"))?
+                .with_context(|| format!("input dma for pblock {id}"))?;
+            out.dma_reports.insert(id, rep);
+        }
         for t in combo_threads {
             t.join().map_err(|_| anyhow::anyhow!("combo thread panicked"))??;
         }
@@ -614,10 +725,6 @@ impl Fabric {
             } else {
                 out.pblock_scores.insert(id, scores);
             }
-        }
-        for (id, h) in input_dmas {
-            let rep = h.join().map_err(|_| anyhow::anyhow!("input dma panicked"))?;
-            out.dma_reports.insert(id, rep);
         }
         out.pblock_reports = pblock_reports;
         out.wall_secs = t0.elapsed().as_secs_f64();

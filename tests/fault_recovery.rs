@@ -1,0 +1,288 @@
+//! Fault-tolerance end-to-end: seeded fault injection through the fabric's
+//! supervisor ladder. Every scheduled fault must end in a recorded recovery
+//! (rung 0 worker containment, rung 1 checkpoint-restored RM reload) or
+//! quarantine (rung 2, with combo renormalization), the surviving data
+//! plane must stay bit-identical to its fault-free references, and the
+//! session server must reproduce the same recoveries per episode.
+
+use fsead::combine::ScoreCombiner;
+use fsead::config::{ComboCfg, FseadConfig, InjectSpec, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::data::Dataset;
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::ensemble::ExecMode;
+use fsead::fabric::server::{FabricServer, SessionSpec};
+use fsead::fabric::{pblock_seed, Fabric};
+
+const CHUNK: usize = 16;
+const D: usize = 3;
+
+fn tiny(name: &'static str, n: usize, seed: u64) -> Dataset {
+    let p = DatasetProfile { name, n, d: D, outliers: n / 20, clusters: 2 };
+    generate_profile(&p, seed)
+}
+
+/// Small-hyper CPU fabric with the fault campaign armed: checkpoints every
+/// 4 flits, a 1-flit reload dark window, and a generous staging wait so
+/// recovery lands deterministically at the next flit even on slow CI.
+fn faulty_cfg() -> FseadConfig {
+    let mut cfg = FseadConfig::default();
+    cfg.use_fpga = false;
+    cfg.chunk = CHUNK;
+    cfg.hyper.window = 16;
+    cfg.hyper.bins = 8;
+    cfg.hyper.modulus = 32;
+    cfg.hyper.k = 4;
+    cfg.faults.enabled = true;
+    cfg.faults.checkpoint_every_flits = 4;
+    cfg.faults.dark_flits = Some(1);
+    cfg.faults.reload_wait_ms = 2_000;
+    cfg
+}
+
+fn pblock(id: usize, kind: DetectorKind, r: usize, lanes: usize) -> PblockCfg {
+    PblockCfg { id, rm: RmKind::Detector(kind), r, stream: 0, lanes }
+}
+
+fn inject(id: &str, pb: usize, at_flit: u64, kind: &str) -> InjectSpec {
+    InjectSpec { id: id.into(), pblock: pb, at_flit, kind: kind.into(), lane: 0, ms: 0 }
+}
+
+/// Fault-free reference: the detector a fabric pblock builds (same seed,
+/// hyper-parameters and warm-up) streamed standalone — the server parity
+/// suite holds the fabric bit-identical to this.
+fn standalone(cfg: &FseadConfig, kind: DetectorKind, r: usize, pb: usize, ds: &Dataset) -> Vec<f32> {
+    let mut spec = DetectorSpec::new(kind, D, r, pblock_seed(cfg.seed, pb));
+    spec.window = cfg.hyper.window;
+    spec.bins = cfg.hyper.bins;
+    spec.w = cfg.hyper.w;
+    spec.modulus = cfg.hyper.modulus;
+    spec.k = cfg.hyper.k;
+    let mut det = spec.build(ds.warmup(cfg.hyper.window));
+    det.run_stream(&ds.data)
+}
+
+#[test]
+fn state_corruption_reloads_from_checkpoint_bit_identically() {
+    // One Loda partition, 240 samples = 15 flits. Checkpoints land after
+    // flits 4 and 8; a state_corrupt injection poisons the window at input
+    // flit 9, so flit 9's scores go non-finite and are zeroed, the
+    // supervisor stages a reload at flit 10 (1 dark flit, bypass policy),
+    // and flits 11.. are scored by the replacement restored from the flit-8
+    // checkpoint — bit-identical to a fresh detector fed samples [0, 128)
+    // and then the post-dark suffix.
+    let ds = tiny("reload", 240, 41);
+    let mut cfg = faulty_cfg();
+    cfg.pblocks.push(pblock(1, DetectorKind::Loda, 2, 0));
+    cfg.faults.injections.push(inject("corrupt", 1, 9, "state_corrupt"));
+
+    // Faults disabled: the campaign config must be bit-transparent.
+    let mut clean_cfg = cfg.clone();
+    clean_cfg.faults.enabled = false;
+    let baseline = standalone(&cfg, DetectorKind::Loda, 2, 1, &ds);
+    let clean = Fabric::new(clean_cfg, vec![ds.clone()]).unwrap().run().unwrap();
+    assert_eq!(clean.pblock_scores[&1], baseline, "disabled campaign must be transparent");
+    assert!(clean.fault_events.is_empty());
+
+    let mut fabric = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap();
+    let out = fabric.run().unwrap();
+    let got = &out.pblock_scores[&1];
+    assert_eq!(got.len(), 240, "bypass policy keeps the framing");
+
+    // Healthy prefix (flits 0..9) is untouched by the armed hooks.
+    assert_eq!(&got[..144], &baseline[..144], "prefix must match the fault-free detector");
+    // Flit 9 (screened corruption) and flit 10 (reload dark window) zeroed.
+    assert!(got[144..176].iter().all(|&v| v == 0.0), "screened + dark flits must be zeros");
+    // Suffix: the restored RM resumes from the flit-8 checkpoint (128
+    // samples) — bit-identical to a fresh detector warmed the same way.
+    let mut spec = DetectorSpec::new(DetectorKind::Loda, D, 2, pblock_seed(cfg.seed, 1));
+    spec.window = cfg.hyper.window;
+    spec.bins = cfg.hyper.bins;
+    spec.w = cfg.hyper.w;
+    spec.modulus = cfg.hyper.modulus;
+    spec.k = cfg.hyper.k;
+    let mut det = spec.build(ds.warmup(cfg.hyper.window));
+    det.run_stream(&ds.data[..128 * D]);
+    let tail = det.run_stream(&ds.data[176 * D..]);
+    assert_eq!(&got[176..], &tail[..], "restored RM must resume bit-identically");
+
+    // Event trail: injection -> detection -> rung-1 reload, in flit order.
+    let actions: Vec<&str> = out.fault_events.iter().map(|e| e.action.as_str()).collect();
+    assert_eq!(actions, ["injected", "nonfinite_detected", "reloaded"], "{:?}", out.fault_events);
+    assert_eq!(out.fault_events[0].id, "corrupt");
+    assert_eq!(out.fault_events[0].at_flit, 9);
+    assert_eq!(out.fault_events[1].fault, "state_corrupt");
+    assert_eq!(out.fault_events[2].rung, 1);
+    assert_eq!(out.fault_events[2].checkpoint_flit, Some(8), "{}", out.fault_events[2]);
+    // The reload rides the DFX stage path and is accounted like any swap.
+    assert_eq!(out.swap_events.len(), 1);
+    assert_eq!((out.swap_events[0].at_flit, out.swap_events[0].dark_flits), (10, 1));
+}
+
+#[test]
+fn exhausted_reloads_quarantine_and_the_combo_renormalizes() {
+    // Two Loda partitions averaged through a combo; max_reloads = 0 sends
+    // partition 1 straight to rung-2 quarantine when its window is
+    // poisoned at flit 5. The combo must average both inputs up to the
+    // screened flit, then renormalize over the survivor — bit-identical to
+    // the combiner applied by hand to the standalone references.
+    let ds = tiny("quarantine", 160, 17);
+    let mut cfg = faulty_cfg();
+    cfg.faults.max_reloads = 0;
+    cfg.pblocks.push(pblock(1, DetectorKind::Loda, 2, 0));
+    cfg.pblocks.push(pblock(2, DetectorKind::Loda, 2, 0));
+    cfg.combos.push(ComboCfg { id: 1, method: "avg".into(), inputs: vec![1, 2], weights: vec![] });
+    cfg.faults.injections.push(inject("q", 1, 5, "state_corrupt"));
+
+    let s1 = standalone(&cfg, DetectorKind::Loda, 2, 1, &ds);
+    let s2 = standalone(&cfg, DetectorKind::Loda, 2, 2, &ds);
+    let mut fabric = Fabric::new(cfg, vec![ds]).unwrap();
+    let out = fabric.run().unwrap();
+    let got = &out.combo_scores[&1];
+    assert_eq!(got.len(), 160);
+
+    let avg = ScoreCombiner::Averaging;
+    // Flits 0..5: both partitions healthy.
+    assert_eq!(&got[..80], &avg.combine(&[&s1[..80], &s2[..80]])[..]);
+    // Flit 5: partition 1's screened flit contributes zeros.
+    let zeros = [0f32; 16];
+    assert_eq!(&got[80..96], &avg.combine(&[&zeros[..], &s2[80..96]])[..]);
+    // Flits 6..: partition 1 is quarantined (stream dropped at its
+    // decoupler); the combo renormalizes over the survivor.
+    assert_eq!(&got[96..], &avg.combine(&[&s2[96..160]])[..], "survivor must be untouched");
+
+    let p1: Vec<&str> = out
+        .fault_events
+        .iter()
+        .filter(|e| e.pblock == 1)
+        .map(|e| e.action.as_str())
+        .collect();
+    assert_eq!(p1, ["injected", "nonfinite_detected", "quarantined"], "{:?}", out.fault_events);
+    let q = out.fault_events.iter().find(|e| e.action == "quarantined").unwrap();
+    assert_eq!((q.rung, q.id.as_str()), (2, "-"), "{q}");
+    assert!(
+        out.fault_events.iter().all(|e| e.pblock == 1),
+        "the healthy partition must record nothing: {:?}",
+        out.fault_events
+    );
+}
+
+#[test]
+fn lane_panic_is_contained_on_the_worker_bit_exactly() {
+    // A two-lane partition takes an injected lane panic at flit 3: the
+    // armed worker rolls the lane's window back to its pre-job state and
+    // rescores in place (rung 0) — the whole run stays bit-identical to
+    // the same multi-lane fabric with the campaign disabled.
+    let ds = tiny("lanes", 160, 23);
+    let mk = |enabled: bool| {
+        let mut cfg = faulty_cfg();
+        cfg.exec = ExecMode::LockStep;
+        cfg.faults.enabled = enabled;
+        cfg.pblocks.push(pblock(1, DetectorKind::Loda, 4, 2));
+        let mut spec = inject("lp", 1, 3, "lane_panic");
+        spec.lane = 1;
+        cfg.faults.injections.push(spec);
+        cfg
+    };
+    let clean = Fabric::new(mk(false), vec![ds.clone()]).unwrap().run().unwrap();
+    let out = Fabric::new(mk(true), vec![ds]).unwrap().run().unwrap();
+    assert_eq!(
+        out.pblock_scores[&1], clean.pblock_scores[&1],
+        "rollback + rescore must be bit-exact"
+    );
+    let fired = out
+        .fault_events
+        .iter()
+        .find(|e| e.action == "injected")
+        .unwrap_or_else(|| panic!("{:?}", out.fault_events));
+    assert_eq!((fired.id.as_str(), fired.fault.as_str(), fired.at_flit), ("lp", "lane_panic", 3));
+    let retried = out
+        .fault_events
+        .iter()
+        .find(|e| e.action == "lane_panic_retried")
+        .unwrap_or_else(|| panic!("{:?}", out.fault_events));
+    assert_eq!((retried.rung, retried.fault.as_str()), (0, "lane_panic"), "{retried}");
+}
+
+#[test]
+fn watchdog_flags_processing_stalls_but_not_inbox_starvation() {
+    // A mid-processing wedge at flit 3 must trip the heartbeat watchdog; an
+    // equally long starvation *outside* processing at flit 6 must not — a
+    // partition blocked on its inbox is healthy. Neither perturbs a single
+    // score.
+    let ds = tiny("stall", 160, 29);
+    let mk = |enabled: bool| {
+        let mut cfg = faulty_cfg();
+        cfg.exec = ExecMode::LockStep;
+        cfg.faults.enabled = enabled;
+        cfg.faults.stall_timeout_ms = 8;
+        cfg.pblocks.push(pblock(1, DetectorKind::Loda, 2, 0));
+        let mut wedge = inject("wedge", 1, 3, "stall");
+        wedge.ms = 60;
+        let mut starve = inject("starve", 1, 6, "inbox_stall");
+        starve.ms = 40;
+        cfg.faults.injections.extend([wedge, starve]);
+        cfg
+    };
+    let clean = Fabric::new(mk(false), vec![ds.clone()]).unwrap().run().unwrap();
+    let out = Fabric::new(mk(true), vec![ds]).unwrap().run().unwrap();
+    assert_eq!(out.pblock_scores[&1], clean.pblock_scores[&1], "stalls must not change scores");
+
+    let stalls: Vec<u64> = out
+        .fault_events
+        .iter()
+        .filter(|e| e.action == "stall_detected")
+        .map(|e| e.at_flit)
+        .collect();
+    assert!(stalls.contains(&3), "the processing wedge must be flagged: {:?}", out.fault_events);
+    assert!(!stalls.contains(&6), "inbox starvation is healthy: {:?}", out.fault_events);
+    let injected: Vec<&str> = out
+        .fault_events
+        .iter()
+        .filter(|e| e.action == "injected")
+        .map(|e| e.id.as_str())
+        .collect();
+    assert_eq!(injected, ["wedge", "starve"]);
+}
+
+#[test]
+fn server_sessions_recover_and_repeat_deterministically() {
+    // The same corruption → checkpoint-reload scenario through the session
+    // server: session scores must match the one-shot Fabric::run campaign
+    // bit-for-bit, the recovery trail must surface on SessionClose, and a
+    // second session on the freshly rebuilt partition must reproduce the
+    // identical recovery (episodes re-arm the same deterministic plan).
+    let ds = tiny("serve", 240, 41);
+    let mut cfg = faulty_cfg();
+    cfg.pblocks.push(pblock(1, DetectorKind::Loda, 2, 0));
+    cfg.faults.injections.push(inject("corrupt", 1, 9, "state_corrupt"));
+
+    let fabric_out = Fabric::new(cfg.clone(), vec![ds.clone()]).unwrap().run().unwrap();
+    let server = FabricServer::start(cfg.clone()).unwrap();
+
+    let mut first_scores = Vec::new();
+    for round in 0..2 {
+        let mut s = server.open(SessionSpec::for_dataset(&ds, cfg.hyper.window)).unwrap();
+        s.push(&ds.data).unwrap();
+        let closed = s.close().unwrap();
+        assert_eq!(
+            closed.scores, fabric_out.pblock_scores[&1],
+            "round {round}: session recovery drifted from Fabric::run"
+        );
+        let actions: Vec<&str> = closed.fault_events.iter().map(|e| e.action.as_str()).collect();
+        assert_eq!(
+            actions,
+            ["injected", "nonfinite_detected", "reloaded"],
+            "round {round}: {:?}",
+            closed.fault_events
+        );
+        let reloaded = closed.fault_events.last().unwrap();
+        assert_eq!(reloaded.checkpoint_flit, Some(8), "round {round}: {reloaded}");
+        if round == 0 {
+            first_scores = closed.scores;
+        } else {
+            assert_eq!(closed.scores, first_scores, "episodes must recover identically");
+        }
+    }
+    server.shutdown().unwrap();
+}
