@@ -1,0 +1,170 @@
+//! Bench: session lifecycle machinery — many-open/few-hot multiplexing
+//! throughput (256 admitted sessions over 8 partitions), the
+//! suspend→resume checkpoint round-trip rate, and the push→score latency
+//! penalty of resuming an idle-evicted session versus a hot one.
+//!
+//! Emits `BENCH_sessions.json` for the perf trajectory; CI runs a smoke
+//! pass on every PR and uploads it with the other BENCH artifacts.
+
+#[allow(dead_code)] // only `cap` is used from the shared harness here
+mod bench_util;
+use bench_util::cap;
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::data::Dataset;
+use fsead::detectors::DetectorKind;
+use fsead::fabric::server::{FabricServer, SessionSpec};
+use std::time::{Duration, Instant};
+
+const CHUNK: usize = 64;
+const D: usize = 3;
+const PARTITIONS: usize = 8;
+const SESSIONS: usize = 256;
+const CYCLES: usize = 32;
+const LATENCY_PUSHES: usize = 24;
+
+fn topology(partitions: usize) -> FseadConfig {
+    let mut cfg = FseadConfig { use_fpga: false, chunk: CHUNK, ..FseadConfig::default() };
+    // Small hyper-parameters: the bench times the lifecycle machinery
+    // (admission, snapshot switching, parking), not the detectors.
+    cfg.hyper.window = 16;
+    cfg.hyper.bins = 8;
+    cfg.hyper.modulus = 32;
+    cfg.hyper.k = 4;
+    for id in 1..=partitions {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 2,
+            stream: 0,
+            lanes: 0,
+        });
+    }
+    cfg
+}
+
+fn dataset() -> Dataset {
+    let p = DatasetProfile { name: "lifecycle", n: CHUNK * 8, d: D, outliers: 24, clusters: 2 };
+    generate_profile(&p, 11)
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// 256 sessions admitted onto 8 partitions (32 per slot): every partition
+/// round-robins its tenants, swapping RM state per switch. Reports
+/// sessions/sec and samples/sec across open → interleaved pushes → close.
+fn bench_mux_fanout(rounds: usize, ds: &Dataset) -> (f64, f64, f64, usize) {
+    let mut cfg = topology(PARTITIONS);
+    cfg.server.sessions_per_partition = SESSIONS / PARTITIONS;
+    let server = FabricServer::start(cfg.clone()).expect("server start");
+    let chunk = &ds.data[..CHUNK * D];
+    let t0 = Instant::now();
+    let mut sessions: Vec<_> = (0..SESSIONS)
+        .map(|_| server.open(SessionSpec::for_dataset(ds, cfg.hyper.window)).expect("open"))
+        .collect();
+    for _ in 0..rounds {
+        for s in sessions.iter_mut() {
+            s.push(chunk).expect("push");
+        }
+    }
+    let mut samples = 0u64;
+    for s in sessions.drain(..) {
+        samples += s.close().expect("close").samples;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown().expect("shutdown");
+    (wall, SESSIONS as f64 / wall, samples as f64 / wall, rounds)
+}
+
+/// Suspend→resume cycle rate on a dedicated partition: each cycle encodes
+/// a snapshot into a ticket, releases the slot, re-admits and restores.
+fn bench_suspend_resume(ds: &Dataset) -> (f64, f64) {
+    let cfg = topology(1);
+    let server = FabricServer::start(cfg.clone()).expect("server start");
+    let chunk = &ds.data[..CHUNK * D];
+    let mut session =
+        server.open(SessionSpec::for_dataset(ds, cfg.hyper.window)).expect("open");
+    let t0 = Instant::now();
+    for _ in 0..CYCLES {
+        session.push(chunk).expect("push");
+        let (ticket, _scores) = session.suspend().expect("suspend");
+        session = server.resume(ticket).expect("resume");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    session.close().expect("close");
+    server.shutdown().expect("shutdown");
+    (wall, CYCLES as f64 / wall)
+}
+
+/// Push→score round-trip latency: hot (resident RM) versus after an idle
+/// sweep parked the session (claim + snapshot restore on the next push).
+fn bench_evict_resume(ds: &Dataset) -> (f64, f64) {
+    let mut cfg = topology(1);
+    cfg.server.idle_evict_flits = 2;
+    let server = FabricServer::start(cfg.clone()).expect("server start");
+    let chunk = &ds.data[..CHUNK * D];
+    let mut session =
+        server.open(SessionSpec::for_dataset(ds, cfg.hyper.window)).expect("open");
+    let mut probe = |s: &mut fsead::fabric::Session| {
+        let t0 = Instant::now();
+        s.push(chunk).expect("push");
+        s.recv_scores().expect("scores");
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+    let mut hot = Vec::with_capacity(LATENCY_PUSHES);
+    for _ in 0..LATENCY_PUSHES {
+        hot.push(probe(&mut session));
+    }
+    let mut evicted = Vec::with_capacity(LATENCY_PUSHES);
+    for _ in 0..LATENCY_PUSHES {
+        // Long enough for the idle sweep (sub-millisecond ticks) to park
+        // the session, so the next push pays claim + restore.
+        std::thread::sleep(Duration::from_millis(25));
+        evicted.push(probe(&mut session));
+    }
+    session.close().expect("close");
+    server.shutdown().expect("shutdown");
+    (median(&mut hot), median(&mut evicted))
+}
+
+fn main() {
+    let rounds: usize = (cap() / (SESSIONS * CHUNK)).clamp(2, 16);
+    let ds = dataset();
+
+    let (mux_wall, sessions_per_sec, samples_per_sec, rounds) = bench_mux_fanout(rounds, &ds);
+    println!(
+        "session_lifecycle/mux_fanout  {SESSIONS} sessions on {PARTITIONS} partitions, \
+         {rounds} rounds in {mux_wall:.3} s — {sessions_per_sec:.1} sessions/s, \
+         {samples_per_sec:.0} samples/s"
+    );
+    let (sr_wall, cycles_per_sec) = bench_suspend_resume(&ds);
+    println!(
+        "session_lifecycle/suspend_resume  {CYCLES} checkpoint round-trips in {sr_wall:.3} s \
+         — {cycles_per_sec:.1} cycles/s"
+    );
+    let (hot_p50_ms, evicted_p50_ms) = bench_evict_resume(&ds);
+    println!(
+        "session_lifecycle/evict_resume  push→score p50: hot {hot_p50_ms:.3} ms, \
+         after idle eviction {evicted_p50_ms:.3} ms"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"session_lifecycle\",\n  \"partitions\": {PARTITIONS},\n  \
+         \"chunk\": {CHUNK},\n  \"rows\": [\n    \
+         {{\"case\": \"mux_fanout\", \"sessions\": {SESSIONS}, \"rounds\": {rounds}, \
+         \"wall_secs\": {mux_wall:.6}, \"sessions_per_sec\": {sessions_per_sec:.3}, \
+         \"samples_per_sec\": {samples_per_sec:.1}}},\n    \
+         {{\"case\": \"suspend_resume\", \"cycles\": {CYCLES}, \"wall_secs\": {sr_wall:.6}, \
+         \"cycles_per_sec\": {cycles_per_sec:.3}}},\n    \
+         {{\"case\": \"evict_resume\", \"pushes\": {LATENCY_PUSHES}, \
+         \"hot_p50_ms\": {hot_p50_ms:.4}, \"evicted_p50_ms\": {evicted_p50_ms:.4}}}\n  ]\n}}\n"
+    );
+    match std::fs::write("BENCH_sessions.json", &json) {
+        Ok(()) => println!("wrote BENCH_sessions.json"),
+        Err(e) => eprintln!("could not write BENCH_sessions.json: {e}"),
+    }
+}

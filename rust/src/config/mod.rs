@@ -250,9 +250,37 @@ impl Default for FaultsCfg {
     }
 }
 
+/// What `open()` does when every compatible partition slot is taken.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Queue on the admission condvar (bounded by `max_waiters`).
+    Block,
+    /// Refuse immediately with a typed `AdmitError::Saturated` — a
+    /// saturated server degrades by shedding load, never by parking
+    /// clients on the condvar.
+    Shed,
+}
+
+impl OverloadPolicy {
+    pub fn parse(s: &str) -> Option<OverloadPolicy> {
+        match s {
+            "block" => Some(OverloadPolicy::Block),
+            "shed" => Some(OverloadPolicy::Shed),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OverloadPolicy::Block => "block",
+            OverloadPolicy::Shed => "shed",
+        }
+    }
+}
+
 /// Streaming-session server configuration (`[fabric.server]`), consumed by
 /// [`crate::fabric::server::FabricServer`] and the `fsead serve` CLI.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerCfg {
     /// Depth, in flits, of each session's bounded inbox — the backpressure
     /// window between a client's `push` and the partition's service loop. A
@@ -261,11 +289,51 @@ pub struct ServerCfg {
     /// Maximum clients allowed to wait in the admission queue (all
     /// partitions busy) before `open` refuses instead of queueing.
     pub max_waiters: usize,
+    /// Sessions one partition may interleave (K). 1 = the dedicated
+    /// one-session-per-partition plane; K > 1 selects the multiplexing
+    /// service loop (round-robin over per-session inboxes, per-session RM
+    /// state swapped through the snapshot codec).
+    pub sessions_per_partition: usize,
+    /// Idle-eviction threshold, in partition service ticks: a session
+    /// whose inbox stays empty this long is checkpointed into the session
+    /// store (LRU first) and its slot freed. 0 disables eviction.
+    pub idle_evict_flits: u64,
+    /// Admission deadline for `open()`/`resume()` in milliseconds; a
+    /// client still queued when it expires gets a typed timeout error
+    /// instead of blocking forever. 0 = wait indefinitely.
+    pub open_timeout_ms: u64,
+    /// Overload behaviour when all slots are busy: queue or shed.
+    pub overload: OverloadPolicy,
+    /// Durable score sink: append every output flit's scores to this file
+    /// as length-prefixed, CRC-framed records. `None` disables the sink.
+    pub sink_path: Option<String>,
+    /// fsync the score sink every N records (1 = after every record).
+    pub sink_fsync_records: usize,
+    /// Directory suspended-session tickets are spilled to (and resumable
+    /// from, including by a fresh process). `None` keeps tickets in memory
+    /// with the caller only.
+    pub spill_dir: Option<String>,
+    /// When fault injection quarantines a dedicated partition, checkpoint
+    /// its session into the session store (for `resume` elsewhere) instead
+    /// of failing it in place. Off by default — quarantine behaviour is
+    /// then identical to earlier releases.
+    pub evict_quarantined: bool,
 }
 
 impl Default for ServerCfg {
     fn default() -> Self {
-        ServerCfg { inbox_flits: 64, max_waiters: 64 }
+        ServerCfg {
+            inbox_flits: 64,
+            max_waiters: 64,
+            sessions_per_partition: 1,
+            idle_evict_flits: 0,
+            open_timeout_ms: 0,
+            overload: OverloadPolicy::Block,
+            sink_path: None,
+            sink_fsync_records: 32,
+            spill_dir: None,
+            evict_quarantined: false,
+        }
     }
 }
 
@@ -465,6 +533,48 @@ impl FseadConfig {
                 bail!("[fabric.server]: max_waiters must be >= 0 (got {v})");
             }
             cfg.server.max_waiters = v as usize;
+        }
+        if let Some(v) = doc.get_int("fabric.server", "sessions_per_partition") {
+            if v <= 0 {
+                bail!("[fabric.server]: sessions_per_partition must be >= 1 (got {v})");
+            }
+            cfg.server.sessions_per_partition = v as usize;
+        }
+        if let Some(v) = doc.get_int("fabric.server", "idle_evict_flits") {
+            if v < 0 {
+                bail!("[fabric.server]: idle_evict_flits must be >= 0 (got {v})");
+            }
+            cfg.server.idle_evict_flits = v as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.server", "open_timeout_ms") {
+            if v < 0 {
+                bail!("[fabric.server]: open_timeout_ms must be >= 0 (got {v})");
+            }
+            cfg.server.open_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_str("fabric.server", "overload") {
+            cfg.server.overload = OverloadPolicy::parse(v).with_context(|| {
+                format!("[fabric.server]: unknown overload policy {v:?} (block | shed)")
+            })?;
+        }
+        if let Some(v) = doc.get_str("fabric.server", "sink_path") {
+            if !v.is_empty() {
+                cfg.server.sink_path = Some(v.to_string());
+            }
+        }
+        if let Some(v) = doc.get_int("fabric.server", "sink_fsync_records") {
+            if v <= 0 {
+                bail!("[fabric.server]: sink_fsync_records must be >= 1 (got {v})");
+            }
+            cfg.server.sink_fsync_records = v as usize;
+        }
+        if let Some(v) = doc.get_str("fabric.server", "spill_dir") {
+            if !v.is_empty() {
+                cfg.server.spill_dir = Some(v.to_string());
+            }
+        }
+        if let Some(v) = doc.get_bool("fabric.server", "evict_quarantined") {
+            cfg.server.evict_quarantined = v;
         }
         // [fabric.dfx] — live reconfiguration
         if let Some(v) = doc.get_bool("fabric.dfx", "enabled") {
@@ -684,6 +794,52 @@ impl FseadConfig {
         }
         if self.server.inbox_flits == 0 {
             bail!("[fabric.server]: inbox_flits must be > 0 (a zero-depth inbox deadlocks)");
+        }
+        if self.server.sessions_per_partition == 0 {
+            bail!(
+                "[fabric.server]: sessions_per_partition must be >= 1 (a zero-slot \
+                 partition can never admit a session)"
+            );
+        }
+        if self.server.sink_fsync_records == 0 {
+            bail!("[fabric.server]: sink_fsync_records must be >= 1");
+        }
+        let lifecycle = self.server.sessions_per_partition > 1 || self.server.idle_evict_flits > 0;
+        if lifecycle {
+            // The multiplexing service loop swaps per-session RM state
+            // through the snapshot codec, which only exists for CPU
+            // detector RMs, and it does not run the DFX gate or the fault
+            // hooks — refuse the combinations here with named errors
+            // instead of panicking deep inside `FabricServer::start`.
+            if self.use_fpga {
+                bail!(
+                    "[fabric.server]: sessions_per_partition > 1 / idle_evict_flits require \
+                     CPU detector RMs (their state snapshots; FPGA RM state lives on the device)"
+                );
+            }
+            if self.dfx.adaptive || !self.dfx.swaps.is_empty() {
+                bail!(
+                    "[fabric.server]: partition multiplexing/eviction cannot run together \
+                     with live DFX swaps — disable [fabric.dfx] or set \
+                     sessions_per_partition = 1 and idle_evict_flits = 0"
+                );
+            }
+            if self.faults.enabled {
+                bail!(
+                    "[fabric.server]: partition multiplexing/eviction cannot run together \
+                     with fault injection — the supervisor ladder owns the dedicated plane"
+                );
+            }
+            for p in &self.pblocks {
+                if !matches!(p.rm, RmKind::Detector(_)) {
+                    bail!(
+                        "[fabric.server]: pblock {} has RM {:?} — multiplexed/evictable \
+                         partitions need detector RMs (their window state snapshots)",
+                        p.id,
+                        p.rm.as_str()
+                    );
+                }
+            }
         }
         // A drop-policy dark window deletes flits from one input of a
         // lock-step combo join, desynchronising the seq numbers mid-run —
@@ -1149,6 +1305,67 @@ r = 2
         // Negative values must not wrap into unbounded queues.
         assert!(FseadConfig::from_str("[fabric.server]\ninbox_flits = -1\n").is_err());
         assert!(FseadConfig::from_str("[fabric.server]\nmax_waiters = -3\n").is_err());
+    }
+
+    #[test]
+    fn server_lifecycle_knobs_parse_and_validate() {
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert_eq!(cfg.server.sessions_per_partition, 1);
+        assert_eq!(cfg.server.idle_evict_flits, 0);
+        assert_eq!(cfg.server.open_timeout_ms, 0);
+        assert_eq!(cfg.server.overload, OverloadPolicy::Block);
+        assert_eq!(cfg.server.sink_path, None);
+        assert_eq!(cfg.server.sink_fsync_records, 32);
+        assert_eq!(cfg.server.spill_dir, None);
+        assert!(!cfg.server.evict_quarantined);
+        let text = "[fabric.server]\nsessions_per_partition = 4\nidle_evict_flits = 32\n\
+                    open_timeout_ms = 250\noverload = \"shed\"\n\
+                    sink_path = \"scores.fsk\"\nsink_fsync_records = 8\n\
+                    spill_dir = \"spill\"\nevict_quarantined = true\n";
+        let cfg = FseadConfig::from_str(text).unwrap();
+        assert_eq!(cfg.server.sessions_per_partition, 4);
+        assert_eq!(cfg.server.idle_evict_flits, 32);
+        assert_eq!(cfg.server.open_timeout_ms, 250);
+        assert_eq!(cfg.server.overload, OverloadPolicy::Shed);
+        assert_eq!(cfg.server.sink_path.as_deref(), Some("scores.fsk"));
+        assert_eq!(cfg.server.sink_fsync_records, 8);
+        assert_eq!(cfg.server.spill_dir.as_deref(), Some("spill"));
+        assert!(cfg.server.evict_quarantined);
+        // Named refusals at load time, not panics deep in start().
+        assert!(FseadConfig::from_str("[fabric.server]\nsessions_per_partition = 0\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.server]\nsessions_per_partition = -2\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.server]\nidle_evict_flits = -1\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.server]\nopen_timeout_ms = -1\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.server]\noverload = \"panic\"\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.server]\nsink_fsync_records = 0\n").is_err());
+        // Structural refusals: multiplexing needs CPU detector RMs and no
+        // DFX/fault machinery on the same partitions.
+        let mut cfg = FseadConfig {
+            use_fpga: false,
+            pblocks: vec![PblockCfg {
+                id: 1,
+                rm: RmKind::Detector(DetectorKind::Loda),
+                r: 2,
+                stream: 0,
+                lanes: 0,
+            }],
+            ..FseadConfig::default()
+        };
+        cfg.server.sessions_per_partition = 2;
+        cfg.validate().unwrap();
+        let mut fpga = cfg.clone();
+        fpga.use_fpga = true;
+        assert!(fpga.validate().is_err(), "FPGA RMs cannot multiplex");
+        let mut faulty = cfg.clone();
+        faulty.faults.enabled = true;
+        assert!(faulty.validate().is_err(), "faults + multiplexing must be refused");
+        let mut adaptive = cfg.clone();
+        adaptive.dfx.adaptive = true;
+        adaptive.dfx.pool.push(PoolEntry { kind: DetectorKind::Loda, r: 2 });
+        assert!(adaptive.validate().is_err(), "adaptive DFX + multiplexing must be refused");
+        let mut bypass = cfg.clone();
+        bypass.pblocks[0].rm = RmKind::Bypass;
+        assert!(bypass.validate().is_err(), "bypass RMs have no state to multiplex");
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //!   `benches/serve_sessions.rs`, which writes the same numbers to
 //!   `BENCH_serve.json`.
 //! - **stdin** (`--stdin`): a line protocol (`open <d> [pblock]`,
-//!   `push <v…>`, `close`, `quit`) with JSONL events on stdout — one JSON
-//!   object per score delivery / lifecycle event.
+//!   `push <v…>`, `suspend`, `resume <id>`, `close`, `quit`) with JSONL
+//!   events on stdout — one JSON object per score delivery / lifecycle
+//!   event.
 
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
@@ -164,13 +165,20 @@ fn default_topology(ctx: &ExpCtx) -> FseadConfig {
 }
 
 /// `fsead serve [config.toml] [--clients N] [--rounds N] [--samples N]
-/// [--stdin]`.
+/// [--mux K] [--idle-evict N] [--open-timeout MS] [--shed] [--sink PATH]
+/// [--spill-dir DIR] [--stdin]`.
 pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
     let mut config: Option<&str> = None;
     let mut clients = 4usize;
     let mut rounds = 2usize;
     let mut samples = 2048usize;
     let mut stdin_mode = false;
+    let mut mux: Option<usize> = None;
+    let mut idle_evict: Option<u64> = None;
+    let mut open_timeout: Option<u64> = None;
+    let mut shed = false;
+    let mut sink: Option<String> = None;
+    let mut spill_dir: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         let next = |i: &mut usize| -> Result<&str> {
@@ -181,6 +189,14 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
             "--clients" => clients = next(&mut i)?.parse().context("--clients")?,
             "--rounds" => rounds = next(&mut i)?.parse().context("--rounds")?,
             "--samples" => samples = next(&mut i)?.parse().context("--samples")?,
+            "--mux" => mux = Some(next(&mut i)?.parse().context("--mux")?),
+            "--idle-evict" => idle_evict = Some(next(&mut i)?.parse().context("--idle-evict")?),
+            "--open-timeout" => {
+                open_timeout = Some(next(&mut i)?.parse().context("--open-timeout")?)
+            }
+            "--shed" => shed = true,
+            "--sink" => sink = Some(next(&mut i)?.to_string()),
+            "--spill-dir" => spill_dir = Some(next(&mut i)?.to_string()),
             "--stdin" => stdin_mode = true,
             other if config.is_none() && !other.starts_with('-') => config = Some(other),
             other => bail!("serve: unexpected argument {other:?}"),
@@ -206,7 +222,28 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
     if let Some(lanes) = ctx.lanes {
         cfg.override_lanes(lanes);
     }
+    if let Some(k) = mux {
+        cfg.server.sessions_per_partition = k;
+    }
+    if let Some(n) = idle_evict {
+        cfg.server.idle_evict_flits = n;
+    }
+    if let Some(ms) = open_timeout {
+        cfg.server.open_timeout_ms = ms;
+    }
+    if shed {
+        cfg.server.overload = crate::config::OverloadPolicy::Shed;
+    }
+    if let Some(path) = sink {
+        cfg.server.sink_path = Some(path);
+    }
+    if let Some(dir) = spill_dir {
+        cfg.server.spill_dir = Some(dir);
+    }
     cfg.artifact_dir = ctx.artifact_dir.clone();
+    // Lifecycle overrides go through the same named refusals as a config
+    // file (multiplexing needs CPU detector RMs, and so on).
+    cfg.validate()?;
     let server = FabricServer::start(cfg)?;
     println!(
         "serving {} partition(s) (exec={}, fpga={}, lanes={}, inbox={} flits)",
@@ -248,10 +285,14 @@ fn emit_scores(session: u64, scores: &[f32]) {
 }
 
 /// Line-protocol driver over stdin, one JSONL event per line on stdout.
+/// `suspend` checkpoints the open session into a ticket held in memory
+/// (and in `spill_dir` when configured); `resume <id>` continues it.
 fn stdin_driver(server: &FabricServer) -> Result<()> {
     use std::io::BufRead;
     let stdin = std::io::stdin();
     let mut session: Option<Session> = None;
+    let mut tickets: std::collections::BTreeMap<u64, crate::fabric::SessionTicket> =
+        Default::default();
     for line in stdin.lock().lines() {
         let line = line?;
         let line = line.trim();
@@ -272,6 +313,35 @@ fn stdin_driver(server: &FabricServer) -> Result<()> {
                 let s = server.open(spec)?;
                 println!(
                     "{{\"event\":\"open\",\"session\":{},\"pblock\":{}}}",
+                    s.id(),
+                    s.pblock()
+                );
+                session = Some(s);
+            }
+            "suspend" => {
+                let s = session.take().context("no open session")?;
+                let id = s.id();
+                let (ticket, scores) = s.suspend()?;
+                if !scores.is_empty() {
+                    emit_scores(id, &scores);
+                }
+                println!(
+                    "{{\"event\":\"suspend\",\"session\":{id},\"flits\":{},\"samples\":{}}}",
+                    ticket.flits, ticket.samples
+                );
+                tickets.insert(id, ticket);
+            }
+            "resume" => {
+                if session.is_some() {
+                    bail!("a session is already open — close it first");
+                }
+                let id: u64 = words.next().context("usage: resume <session-id>")?.parse()?;
+                let ticket = tickets.remove(&id).with_context(|| {
+                    format!("no suspended ticket for session {id} in this process")
+                })?;
+                let s = server.resume(ticket)?;
+                println!(
+                    "{{\"event\":\"resume\",\"session\":{},\"pblock\":{}}}",
                     s.id(),
                     s.pblock()
                 );
@@ -303,7 +373,9 @@ fn stdin_driver(server: &FabricServer) -> Result<()> {
                 );
             }
             "quit" => break,
-            other => bail!("unknown command {other:?} (open / push / close / quit)"),
+            other => {
+                bail!("unknown command {other:?} (open / push / suspend / resume / close / quit)")
+            }
         }
     }
     Ok(())

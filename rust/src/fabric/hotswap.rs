@@ -366,6 +366,13 @@ pub struct PblockCtl {
     pub health: Health,
     pub faults: FaultPort,
     pub checkpoint: CheckpointSlot,
+    /// Raised by the session server around fault-supervised episodes: when
+    /// the supervisor quarantines the region (rung 2), the service loop
+    /// *returns* instead of draining-and-dropping the rest of the stream,
+    /// so the worker can evict the session to the store for resume on
+    /// another partition. `Fabric::run` never raises it — batch-run
+    /// quarantine semantics are unchanged.
+    pub evict_on_quarantine: AtomicBool,
 }
 
 /// Per-flit verdict of the DFX gate.

@@ -20,7 +20,9 @@ pub mod hotswap;
 pub mod message;
 pub mod pblock;
 pub mod reconfig;
+pub mod score_sink;
 pub mod server;
+pub mod session_store;
 pub mod snapshot;
 pub mod supervisor;
 pub mod switch;
@@ -29,6 +31,8 @@ pub mod topology;
 pub use faults::FaultEvent;
 pub use hotswap::SwapEvent;
 pub use message::{Flit, FlitSource, Port};
-pub use server::{FabricServer, Session, SessionSpec};
+pub use score_sink::ScoreSink;
+pub use server::{AdmitError, FabricServer, Session, SessionSpec};
+pub use session_store::{SessionStore, SessionTicket};
 pub use switch::AxiSwitch;
 pub use topology::{pblock_seed, Fabric};

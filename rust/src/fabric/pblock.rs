@@ -503,7 +503,16 @@ impl Pblock {
                 Admit::Drop => {
                     // Isolated (reconfiguration dark window, or externally
                     // decoupled): traffic is dropped, never handed to
-                    // half-configured logic.
+                    // half-configured logic. A quarantined region normally
+                    // drains-and-drops to stream end; the session server
+                    // raises `evict_on_quarantine` so the loop returns
+                    // instead and the session can be parked for resume on
+                    // another partition.
+                    if decoupler.is_quarantined()
+                        && ctl.evict_on_quarantine.load(std::sync::atomic::Ordering::SeqCst)
+                    {
+                        break;
+                    }
                     if last {
                         break;
                     }

@@ -1,0 +1,308 @@
+//! Durable score sink: a crash-safe, append-only recorder for session
+//! score streams.
+//!
+//! Long-running serving scenarios need an audit trail that survives a
+//! process crash. The sink appends one frame per output flit:
+//!
+//! ```text
+//! [u32 len LE] [payload: u64 session | u64 seq | u32 n | f32×n scores] [u32 crc LE]
+//! ```
+//!
+//! `len` is the payload byte length and `crc` is the IEEE CRC-32 of the
+//! payload, so every frame is independently verifiable. Appends are
+//! `fsync`ed every `fsync_every` records (a durability/throughput knob) —
+//! a crash can therefore leave at most a *tail* of unsynced frames, the
+//! last of which may be torn. [`recover`] replays the file from the start,
+//! keeps every frame whose length and CRC check out, and truncates the
+//! file at the first torn or corrupt frame so the sink can be re-opened
+//! for appending with a clean tail. Frames are never rewritten in place:
+//! the valid prefix of the file is immutable history.
+
+use anyhow::{bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Payload bytes before the score array: session id + seq + score count.
+const PAYLOAD_HEADER: usize = 8 + 8 + 4;
+/// Refuse absurd frame lengths when scanning (a torn length word would
+/// otherwise make recovery try to allocate gigabytes).
+const MAX_FRAME_PAYLOAD: usize = 16 << 20;
+
+/// IEEE CRC-32 lookup table (polynomial 0xEDB88320), built at compile time.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 over `bytes` (the variant used by zip/png).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Append-only recorder for score flits. One sink is shared by all
+/// partitions of a [`super::server::FabricServer`]; callers serialize
+/// through a mutex so frames from concurrent sessions interleave whole,
+/// never torn (within one process — torn tails only come from crashes).
+pub struct ScoreSink {
+    file: File,
+    path: PathBuf,
+    fsync_every: usize,
+    since_sync: usize,
+    records: u64,
+}
+
+impl ScoreSink {
+    /// Open `path` for appending (created if missing). `fsync_every`
+    /// bounds the number of records that can be lost to a crash; 1 syncs
+    /// after every record.
+    pub fn open(path: &Path, fsync_every: usize) -> Result<ScoreSink> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening score sink {}", path.display()))?;
+        Ok(ScoreSink {
+            file,
+            path: path.to_path_buf(),
+            fsync_every: fsync_every.max(1),
+            since_sync: 0,
+            records: 0,
+        })
+    }
+
+    /// Append one frame; syncs to disk on the configured cadence.
+    pub fn append(&mut self, session: u64, seq: u64, scores: &[f32]) -> Result<()> {
+        let mut payload = Vec::with_capacity(PAYLOAD_HEADER + scores.len() * 4);
+        payload.extend_from_slice(&session.to_le_bytes());
+        payload.extend_from_slice(&seq.to_le_bytes());
+        payload.extend_from_slice(&(scores.len() as u32).to_le_bytes());
+        for &s in scores {
+            payload.extend_from_slice(&s.to_le_bytes());
+        }
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to score sink {}", self.path.display()))?;
+        self.records += 1;
+        self.since_sync += 1;
+        if self.since_sync >= self.fsync_every {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Force an fsync now (also called on the cadence and on drop).
+    pub fn sync(&mut self) -> Result<()> {
+        if self.since_sync > 0 {
+            self.file
+                .sync_data()
+                .with_context(|| format!("fsync score sink {}", self.path.display()))?;
+            self.since_sync = 0;
+        }
+        Ok(())
+    }
+
+    /// Records appended through this handle.
+    pub fn records_written(&self) -> u64 {
+        self.records
+    }
+}
+
+impl Drop for ScoreSink {
+    fn drop(&mut self) {
+        let _ = self.sync();
+    }
+}
+
+/// One recovered frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SinkRecord {
+    pub session: u64,
+    pub seq: u64,
+    pub scores: Vec<f32>,
+}
+
+/// Scan a sink file: returns every frame that parses and CRC-checks, plus
+/// the byte offset at which scanning stopped (== file length for a clean
+/// file; the start of the first torn/corrupt frame otherwise). Never
+/// panics on arbitrary bytes.
+pub fn scan(path: &Path) -> Result<(Vec<SinkRecord>, u64)> {
+    let mut bytes = Vec::new();
+    File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .with_context(|| format!("reading score sink {}", path.display()))?;
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    while bytes.len() - pos >= 4 {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        if len < PAYLOAD_HEADER || len > MAX_FRAME_PAYLOAD {
+            break; // torn or garbage length word
+        }
+        let Some(frame_end) = pos.checked_add(4 + len + 4) else { break };
+        if frame_end > bytes.len() {
+            break; // torn tail: frame runs past EOF
+        }
+        let payload = &bytes[pos + 4..pos + 4 + len];
+        let stored = u32::from_le_bytes(bytes[pos + 4 + len..frame_end].try_into().unwrap());
+        if crc32(payload) != stored {
+            break; // corrupt frame
+        }
+        let session = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+        let seq = u64::from_le_bytes(payload[8..16].try_into().unwrap());
+        let n = u32::from_le_bytes(payload[16..20].try_into().unwrap()) as usize;
+        if len != PAYLOAD_HEADER + n * 4 {
+            break; // declared score count disagrees with frame length
+        }
+        let scores = payload[20..]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        records.push(SinkRecord { session, seq, scores });
+        pos = frame_end;
+    }
+    Ok((records, pos as u64))
+}
+
+/// Crash recovery: scan the file and truncate it at the end of its last
+/// valid frame, discarding any torn/corrupt tail, so the sink can be
+/// re-opened for appending. Returns the surviving records.
+pub fn recover(path: &Path) -> Result<Vec<SinkRecord>> {
+    let (records, valid) = scan(path)?;
+    let file = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening score sink {} for recovery", path.display()))?;
+    let len = file.metadata()?.len();
+    if valid > len {
+        bail!("scan offset {valid} beyond file length {len} — concurrent writer?");
+    }
+    if valid < len {
+        file.set_len(valid)
+            .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        file.sync_data()?;
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fsead-sink-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard IEEE CRC-32 check values.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn appended_frames_scan_back_verbatim() {
+        let path = tmp("roundtrip.fsk");
+        let _ = fs::remove_file(&path);
+        let mut sink = ScoreSink::open(&path, 2).unwrap();
+        sink.append(7, 0, &[1.0, -2.5, 3.25]).unwrap();
+        sink.append(7, 1, &[0.0; 4]).unwrap();
+        sink.append(9, 0, &[]).unwrap();
+        drop(sink);
+        let (records, _) = scan(&path).unwrap();
+        assert_eq!(
+            records,
+            vec![
+                SinkRecord { session: 7, seq: 0, scores: vec![1.0, -2.5, 3.25] },
+                SinkRecord { session: 7, seq: 1, scores: vec![0.0; 4] },
+                SinkRecord { session: 9, seq: 0, scores: vec![] },
+            ]
+        );
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_appending_resumes() {
+        let path = tmp("torn.fsk");
+        let _ = fs::remove_file(&path);
+        let mut sink = ScoreSink::open(&path, 1).unwrap();
+        sink.append(1, 0, &[4.0, 5.0]).unwrap();
+        sink.append(1, 1, &[6.0]).unwrap();
+        drop(sink);
+        let clean_len = fs::metadata(&path).unwrap().len();
+        // Simulated crash mid-append: a frame header plus half a payload.
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&[28, 0, 0, 0, 0xAB, 0xCD]).unwrap();
+        drop(f);
+        let records = recover(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(fs::metadata(&path).unwrap().len(), clean_len, "torn tail must be cut");
+        // The recovered file accepts appends again.
+        let mut sink = ScoreSink::open(&path, 1).unwrap();
+        sink.append(1, 2, &[7.0]).unwrap();
+        drop(sink);
+        let (records, end) = scan(&path).unwrap();
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[2], SinkRecord { session: 1, seq: 2, scores: vec![7.0] });
+        assert_eq!(end, fs::metadata(&path).unwrap().len());
+    }
+
+    #[test]
+    fn corrupt_crc_stops_the_scan_at_the_bad_frame() {
+        let path = tmp("crc.fsk");
+        let _ = fs::remove_file(&path);
+        let mut sink = ScoreSink::open(&path, 1).unwrap();
+        sink.append(2, 0, &[1.0]).unwrap();
+        let first_len = fs::metadata(&path).unwrap().len();
+        sink.append(2, 1, &[2.0]).unwrap();
+        drop(sink);
+        // Flip one payload byte of the second frame.
+        let mut bytes = fs::read(&path).unwrap();
+        let idx = first_len as usize + 6;
+        bytes[idx] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        let records = recover(&path).unwrap();
+        assert_eq!(records, vec![SinkRecord { session: 2, seq: 0, scores: vec![1.0] }]);
+        assert_eq!(fs::metadata(&path).unwrap().len(), first_len);
+    }
+
+    #[test]
+    fn every_truncation_point_recovers_a_frame_prefix() {
+        let path = tmp("sweep.fsk");
+        let _ = fs::remove_file(&path);
+        let mut sink = ScoreSink::open(&path, 8).unwrap();
+        for i in 0..4u64 {
+            sink.append(3, i, &[i as f32, -(i as f32)]).unwrap();
+        }
+        drop(sink);
+        let full = fs::read(&path).unwrap();
+        let frame = full.len() / 4;
+        for cut in 0..full.len() {
+            fs::write(&path, &full[..cut]).unwrap();
+            let (records, end) = scan(&path).unwrap();
+            assert_eq!(records.len(), cut / frame, "cut at {cut}");
+            assert_eq!(end as usize, (cut / frame) * frame, "cut at {cut}");
+        }
+    }
+}

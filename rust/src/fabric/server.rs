@@ -42,12 +42,57 @@
 //! open (their next `push` fails fast), lets every worker finish its
 //! current episode, and joins them — shutdown never deadlocks on an idle
 //! client.
+//!
+//! # Lifecycle resilience
+//!
+//! On top of the base lifecycle, sessions survive events that used to end
+//! them:
+//!
+//! - **Suspend / resume** — [`Session::suspend`] checkpoints the session
+//!   (RM window snapshot + worker cursor + the client-side pending tail)
+//!   into a serializable [`SessionTicket`]; [`FabricServer::resume`]
+//!   continues it on any partition with the same layout — on this server
+//!   or, via `SessionTicket::to_bytes`/`from_bytes` (or a `spill_dir`
+//!   file), on a **fresh process** over the same config. Resumed scores
+//!   are bit-identical to an uninterrupted session because the resume
+//!   rebuilds the RM with the *origin* partition's seed and restores the
+//!   exact window state.
+//! - **Idle eviction & multiplexing** — with `[fabric.server]`
+//!   `sessions_per_partition = K` (and/or `idle_evict_flits = N`) a
+//!   partition worker runs a round-robin multiplexer instead of the
+//!   one-session episode loop: up to `K` sessions share the partition,
+//!   their window state swapped through the snapshot codec as the
+//!   multiplexer switches between inboxes. Sessions idle for `N`
+//!   multiplexer ticks (processed flits or idle sweeps) are parked into
+//!   the session store — transparently: the client's `push` simply
+//!   re-attaches the session when its inbox stirs. With both knobs at
+//!   their defaults the server is bit-transparent to the dedicated
+//!   episode path.
+//! - **Admission deadlines & shedding** — `open_timeout_ms` bounds how
+//!   long `open`/`resume` may wait for a slot, and `overload = "shed"`
+//!   fails immediately instead of queueing. Both return the typed
+//!   [`AdmitError`] (downcastable from the `anyhow` error), so callers
+//!   can tell overload from shutdown.
+//! - **Quarantine eviction** — with `evict_quarantined = true` and faults
+//!   armed, a partition quarantined by the recovery ladder (rung 2) does
+//!   not drag its session down: the service loop stops, the session is
+//!   parked from its last healthy checkpoint and resumes on a compatible
+//!   partition (PR-6 reload semantics: state rolls back to the
+//!   checkpoint; scores already emitted are not recalled).
+//! - **Durable score sink** — `sink_path` appends every score chunk as a
+//!   length-prefixed, CRC-framed record
+//!   (`[u32 len][u64 session | u64 seq | u32 n | f32×n][u32 crc]`,
+//!   fsync'd every `sink_fsync_records` records). After a crash,
+//!   [`super::score_sink::recover`] truncates the torn tail and replays
+//!   every intact record.
 
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::decoupler::Decoupler;
 use super::dma::unpad_into;
@@ -56,9 +101,14 @@ use super::hotswap::{self, ControllerEnv, ControllerTarget, PblockCtl, SwapEvent
 use super::message::{Flit, FlitSource, Port};
 use super::pblock::{LoadedRm, Pblock, PblockReport};
 use super::reconfig::DfxManager;
+use super::score_sink::ScoreSink;
+use super::session_store::{ParkReason, ParkedSession, SessionStore, SessionTicket};
+use super::snapshot::{restore_rm, snapshot_rm};
 use super::supervisor::{self, SupervisorEnv, SupervisorTarget};
 use super::topology::{kind_of, pblock_seed};
-use crate::config::{DetectorHyper, DfxCfg, FaultsCfg, FseadConfig, RmKind, ScriptedSwap};
+use crate::config::{
+    DetectorHyper, DfxCfg, FaultsCfg, FseadConfig, OverloadPolicy, RmKind, ScriptedSwap,
+};
 use crate::data::Dataset;
 use crate::ensemble::{ExecMode, LanePool};
 use crate::runtime::{Registry, Runtime, RuntimeHandle};
@@ -80,6 +130,10 @@ struct InboxQueue {
     /// Server force-closed the stream (shutdown): pending flits are
     /// discarded and the producer's next send fails fast.
     force_closed: bool,
+    /// Client asked to suspend: remaining queued flits are still
+    /// delivered, then `recv_flit` reports end-of-stream so the worker
+    /// can checkpoint the session instead of tearing it down.
+    suspended: bool,
 }
 
 struct InboxShared {
@@ -137,6 +191,17 @@ impl InboxSender {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Ask the service loop to stop at the current drain point: queued
+    /// flits are still delivered, then the stream reports its end without
+    /// the producer hanging up — the suspend half of
+    /// [`Session::suspend`].
+    pub fn request_suspend(&self) {
+        let mut q = self.inner.q.lock().unwrap();
+        q.suspended = true;
+        drop(q);
+        self.inner.ready.notify_all();
+    }
 }
 
 impl Drop for InboxSender {
@@ -160,6 +225,18 @@ impl InboxCtl {
         drop(q);
         self.inner.space.notify_all();
         self.inner.ready.notify_all();
+    }
+
+    /// True once the client requested a suspend on this inbox.
+    fn suspend_requested(&self) -> bool {
+        self.inner.q.lock().unwrap().suspended
+    }
+
+    /// Mint a fresh consumer half over the same shared queue — used when
+    /// a quarantine eviction parks a live session whose [`SessionInbox`]
+    /// was consumed by the service loop that just ended.
+    fn reopen(&self) -> SessionInbox {
+        SessionInbox { inner: Arc::clone(&self.inner) }
     }
 }
 
@@ -185,6 +262,34 @@ impl SessionInbox {
     pub(crate) fn ctl(&self) -> InboxCtl {
         InboxCtl { inner: Arc::clone(&self.inner) }
     }
+
+    /// One consistent view of the inbox's flags — what the multiplexer
+    /// uses to decide between draining, parking and finishing a slot.
+    pub(crate) fn probe(&self) -> InboxProbe {
+        let q = self.inner.q.lock().unwrap();
+        InboxProbe {
+            queued: q.buf.len(),
+            producer_done: q.producer_done,
+            force_closed: q.force_closed,
+            suspended: q.suspended,
+        }
+    }
+}
+
+/// Snapshot of a [`SessionInbox`]'s state flags.
+#[derive(Clone, Copy)]
+pub(crate) struct InboxProbe {
+    pub queued: usize,
+    pub producer_done: bool,
+    pub force_closed: bool,
+    pub suspended: bool,
+}
+
+impl InboxProbe {
+    /// Anything a parked session's partition should react to?
+    fn stirring(&self) -> bool {
+        self.queued > 0 || self.producer_done || self.force_closed || self.suspended
+    }
 }
 
 impl FlitSource for SessionInbox {
@@ -199,7 +304,7 @@ impl FlitSource for SessionInbox {
                 self.inner.space.notify_one();
                 return Some(f);
             }
-            if q.producer_done {
+            if q.producer_done || q.suspended {
                 return None;
             }
             q = self.inner.ready.wait(q).unwrap();
@@ -219,6 +324,49 @@ impl FlitSource for SessionInbox {
         f
     }
 }
+
+// ---------------------------------------------------------------------------
+// Admission errors
+// ---------------------------------------------------------------------------
+
+/// Typed admission failures from [`FabricServer::open`] /
+/// [`FabricServer::resume`]. Downcast the `anyhow` error to tell overload
+/// shedding apart from a timeout, a full queue or shutdown:
+/// `err.downcast_ref::<AdmitError>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// `overload = "shed"`: every eligible partition slot was busy and
+    /// the server sheds instead of queueing the caller.
+    Saturated,
+    /// `open_timeout_ms` elapsed while waiting for a slot.
+    Timeout {
+        waited_ms: u64,
+    },
+    /// `max_waiters` clients were already queued.
+    QueueFull {
+        waiters: usize,
+    },
+    ShuttingDown,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::Saturated => {
+                write!(f, "admission shed: every eligible partition slot is busy (overload = \"shed\")")
+            }
+            AdmitError::Timeout { waited_ms } => {
+                write!(f, "admission timed out after {waited_ms} ms waiting for a partition slot")
+            }
+            AdmitError::QueueFull { waiters } => {
+                write!(f, "admission queue is full ({waiters} session(s) already waiting)")
+            }
+            AdmitError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 // ---------------------------------------------------------------------------
 // Admission state
@@ -245,8 +393,17 @@ struct SessionOutcome {
 
 #[derive(Default)]
 struct AdmissionState {
+    /// Partitions with at least one free session slot.
     free: BTreeSet<usize>,
+    /// Sessions currently charged against each partition's capacity
+    /// (`sessions_per_partition`); a parked session gives its slot back.
+    admitted: BTreeMap<usize, usize>,
+    /// Dedicated mode only: the one live session per partition, kept for
+    /// `schedule_swap` and the end-of-episode force-close.
     active: BTreeMap<usize, ActiveSession>,
+    /// Inbox doors of every live or transparently-parked session, keyed
+    /// by session id — shutdown force-closes them all.
+    doors: BTreeMap<u64, InboxCtl>,
     results: BTreeMap<u64, SessionOutcome>,
     /// Sessions dropped by their client before the worker stored a result.
     abandoned: BTreeSet<u64>,
@@ -256,15 +413,47 @@ struct AdmissionState {
     served: u64,
 }
 
+/// A partition's job queue plus the layout resumes must match.
+struct PartitionSender {
+    rm: RmKind,
+    r: usize,
+    lanes: usize,
+    jobs: Sender<SessionWork>,
+}
+
 struct Shared {
     state: Mutex<AdmissionState>,
     /// Signalled when a partition frees (or at shutdown) — admission queue.
     freed: Condvar,
+    /// Checkpointed sessions between partitions (idle-evicted, suspended,
+    /// quarantine-evicted).
+    store: SessionStore,
+    /// Durable score sink (`[fabric.server] sink_path`), shared by every
+    /// partition worker.
+    sink: Option<Mutex<ScoreSink>>,
+    /// Where suspend tickets spill (`[fabric.server] spill_dir`).
+    spill_dir: Option<PathBuf>,
+    /// Job senders by partition — lets a worker redispatch an evicted
+    /// session to a free sibling. Cleared at shutdown so workers see
+    /// their queues disconnect.
+    senders: Mutex<BTreeMap<usize, PartitionSender>>,
 }
 
 // ---------------------------------------------------------------------------
 // Partition workers
 // ---------------------------------------------------------------------------
+
+/// Continuation state for a resumed session: the worker rebuilds the RM
+/// with the *origin* partition's seed and restores the checkpointed
+/// window, so scores continue bit-identically.
+struct ResumeState {
+    seed: u64,
+    snapshot: Option<Vec<u8>>,
+    /// Input flits already processed before the resume.
+    base_flits: u64,
+    /// Valid samples already scored before the resume.
+    base_samples: u64,
+}
 
 struct SessionWork {
     session: u64,
@@ -272,6 +461,47 @@ struct SessionWork {
     warmup: Arc<Vec<f32>>,
     inbox: SessionInbox,
     scores: Sender<Flit>,
+    resume: Option<ResumeState>,
+}
+
+/// Rebuild a worker job from a parked live session (quarantine eviction /
+/// idle-evict re-attach on the dedicated path).
+fn work_from_parked(p: ParkedSession) -> SessionWork {
+    SessionWork {
+        session: p.id,
+        d: p.d,
+        warmup: p.warmup,
+        inbox: p.inbox.expect("live parked session keeps its inbox"),
+        scores: p.scores.expect("live parked session keeps its score channel"),
+        resume: Some(ResumeState {
+            seed: p.seed,
+            snapshot: p.snapshot,
+            base_flits: p.flits,
+            base_samples: p.samples,
+        }),
+    }
+}
+
+/// Inverse of [`work_from_parked`] — re-park a job whose target worker
+/// turned out to be gone.
+fn park_from_work(w: SessionWork, kind: RmKind, r: usize, lanes: usize) -> ParkedSession {
+    let SessionWork { session, d, warmup, inbox, scores, resume } = w;
+    let resume = resume.expect("re-parked work carries resume state");
+    ParkedSession {
+        id: session,
+        kind,
+        r,
+        lanes,
+        d,
+        seed: resume.seed,
+        warmup,
+        snapshot: resume.snapshot,
+        flits: resume.base_flits,
+        samples: resume.base_samples,
+        inbox: Some(inbox),
+        scores: Some(scores),
+        reason: ParkReason::Quarantine,
+    }
 }
 
 /// Everything a resident partition worker owns for its lifetime.
@@ -300,12 +530,29 @@ struct WorkerEnv {
     /// Fault-injection + recovery config; `enabled = false` keeps every
     /// fault hook out of the episode's service loop.
     faults: FaultsCfg,
+    /// `sessions_per_partition` — slots this partition offers.
+    capacity: usize,
+    /// `idle_evict_flits` — 0 disables idle eviction.
+    idle_evict: u64,
+    /// `evict_quarantined` — park the session from its last checkpoint
+    /// when the fault ladder quarantines this partition.
+    evict_quarantined: bool,
 }
 
 fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<SessionWork>) {
-    while let Ok(work) = jobs.recv() {
-        let SessionWork { session, d, warmup, inbox, scores } = work;
-        let mut outcome = serve_episode(&env, &mut scripted, d, &warmup, inbox, scores.clone());
+    let mut next: Option<SessionWork> = None;
+    loop {
+        let work = match next.take() {
+            Some(w) => w,
+            None => match jobs.recv() {
+                Ok(w) => w,
+                Err(_) => break,
+            },
+        };
+        let SessionWork { session, d, warmup, inbox, scores, resume } = work;
+        let (mut outcome, parked) =
+            serve_episode(&env, &mut scripted, session, d, &warmup, inbox, scores.clone(), resume);
+        let live_park = parked.as_ref().map_or(false, |p| p.inbox.is_some());
         {
             let mut st = env.shared.state.lock().unwrap();
             // End-of-session boundary, atomic with the admission state:
@@ -316,21 +563,108 @@ fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<S
             // unblocks a producer stuck in backpressure after the service
             // loop already ended (e.g. it failed mid-session): its next
             // send fails fast instead of waiting on a drain that will
-            // never come.
+            // never come. A live park (quarantine eviction) keeps the
+            // door open — the stream continues elsewhere.
             if let Some(a) = st.active.remove(&env.id) {
-                a.door.force_close();
-            }
-            outcome.discarded_swaps += env.ctl.swap.clear_pending() as u64;
-            if !st.abandoned.remove(&session) {
-                st.results.insert(session, outcome);
-                while st.results.len() > MAX_RETAINED_OUTCOMES {
-                    st.results.pop_first();
+                if !live_park {
+                    a.door.force_close();
                 }
             }
-            if !st.shutting_down {
-                st.free.insert(env.id);
+            outcome.discarded_swaps += env.ctl.swap.clear_pending() as u64;
+            match parked {
+                Some(p) => {
+                    // Not finished: no result, not counted as served.
+                    if p.reason == ParkReason::Suspend {
+                        st.doors.remove(&session);
+                    }
+                    env.shared.store.park(p);
+                }
+                None => {
+                    st.doors.remove(&session);
+                    if !st.abandoned.remove(&session) {
+                        st.results.insert(session, outcome);
+                        while st.results.len() > MAX_RETAINED_OUTCOMES {
+                            st.results.pop_first();
+                        }
+                    }
+                    st.served += 1;
+                }
             }
-            st.served += 1;
+            // Prefer handing a just-evicted live session to a free sibling
+            // partition — "resume elsewhere".
+            if live_park && !st.shutting_down {
+                let target = {
+                    let senders = env.shared.senders.lock().unwrap();
+                    st.free
+                        .iter()
+                        .copied()
+                        .filter(|tid| *tid != env.id)
+                        .find_map(|tid| {
+                            senders
+                                .get(&tid)
+                                .filter(|s| {
+                                    s.rm == env.rm && s.r == env.r && s.lanes == env.lanes
+                                })
+                                .map(|s| (tid, s.jobs.clone()))
+                        })
+                };
+                if let Some((tid, jobs_tx)) = target {
+                    if let Some(p) = env.shared.store.take(session) {
+                        let door = p.inbox.as_ref().expect("live park").ctl();
+                        *st.admitted.entry(tid).or_insert(0) += 1;
+                        st.free.remove(&tid);
+                        st.active.insert(
+                            tid,
+                            ActiveSession {
+                                session,
+                                d: p.d,
+                                warmup: Arc::clone(&p.warmup),
+                                door,
+                            },
+                        );
+                        if let Err(std::sync::mpsc::SendError(w)) = jobs_tx.send(work_from_parked(p))
+                        {
+                            // The sibling's worker died since it freed:
+                            // undo the charge and leave the session parked
+                            // for the next episode boundary to claim.
+                            st.active.remove(&tid);
+                            let n = st.admitted.entry(tid).or_insert(1);
+                            *n = n.saturating_sub(1);
+                            env.shared.store.park(park_from_work(w, env.rm, env.r, env.lanes));
+                        }
+                    }
+                }
+            }
+            // Free this partition's slot — or claim a parked live session
+            // that fits it and serve that next, skipping admission.
+            let claimed = if st.shutting_down {
+                None
+            } else {
+                env.shared
+                    .store
+                    .claim_where(|p| p.inbox.is_some() && p.fits(env.rm, env.r, env.lanes))
+            };
+            match claimed {
+                Some(p) => {
+                    st.active.insert(
+                        env.id,
+                        ActiveSession {
+                            session: p.id,
+                            d: p.d,
+                            warmup: Arc::clone(&p.warmup),
+                            door: p.inbox.as_ref().expect("live park").ctl(),
+                        },
+                    );
+                    next = Some(work_from_parked(p));
+                }
+                None => {
+                    let n = st.admitted.entry(env.id).or_insert(1);
+                    *n = n.saturating_sub(1);
+                    if !st.shutting_down && *n < env.capacity {
+                        st.free.insert(env.id);
+                    }
+                }
+            }
         }
         env.shared.freed.notify_all();
         // Dropping the worker's score sender last closes the session's
@@ -340,34 +674,54 @@ fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<S
     }
 }
 
-/// Serve exactly one session on this partition: fresh RM (same seed/warmup
-/// recipe as the one-shot fabric), scripted swaps armed, adaptive controller
-/// watching if configured, then the ordinary pblock service loop until
-/// TLAST / hang-up / force-close.
+/// Serve one session episode on this partition: fresh RM (same seed/warmup
+/// recipe as the one-shot fabric) or a checkpoint restore for a resumed
+/// session, scripted swaps armed, adaptive controller watching if
+/// configured, then the ordinary pblock service loop until TLAST /
+/// hang-up / force-close / suspend. Returns the outcome plus the parked
+/// continuation when the session did not finish (suspend or quarantine
+/// eviction) — the caller stores that instead of the outcome.
+#[allow(clippy::too_many_arguments)]
 fn serve_episode(
     env: &WorkerEnv,
     scripted: &mut Vec<ScriptedSwap>,
+    session: u64,
     d: usize,
-    warmup: &[f32],
+    warmup: &Arc<Vec<f32>>,
     inbox: SessionInbox,
     tx: Sender<Flit>,
-) -> SessionOutcome {
-    let failed = |error: String| SessionOutcome {
-        report: None,
-        swap_events: Vec::new(),
-        adaptive_swaps: 0,
-        discarded_swaps: 0,
-        fault_events: Vec::new(),
-        error: Some(error),
+    resume: Option<ResumeState>,
+) -> (SessionOutcome, Option<ParkedSession>) {
+    let failed = |error: String| {
+        (
+            SessionOutcome {
+                report: None,
+                swap_events: Vec::new(),
+                adaptive_swaps: 0,
+                discarded_swaps: 0,
+                fault_events: Vec::new(),
+                error: Some(error),
+            },
+            None,
+        )
+    };
+    let door = inbox.ctl();
+    let w: &[f32] = warmup.as_slice();
+    // A resumed session keeps the RM seed of the partition it started on
+    // and restores its checkpointed window — that is what makes the
+    // continuation bit-identical wherever it lands.
+    let (seed, base_flits, base_samples, resumed_snapshot, resumed) = match resume {
+        Some(r) => (r.seed, r.base_flits, r.base_samples, r.snapshot, true),
+        None => (env.seed, 0, 0, None, false),
     };
     let fpga = env.fpga.as_ref().map(|(h, r)| (h, r));
     let mut rm = match LoadedRm::build(
         env.rm,
         env.r,
         d,
-        env.seed,
+        seed,
         &env.hyper,
-        warmup,
+        w,
         fpga,
         env.quantize,
         env.lanes,
@@ -378,35 +732,43 @@ fn serve_episode(
     if let Err(e) = rm.reset() {
         return failed(format!("resetting RM: {e:#}"));
     }
+    if let Some(bytes) = &resumed_snapshot {
+        if let Err(e) = restore_rm(&mut rm, bytes) {
+            return failed(format!("restoring the session checkpoint: {e:#}"));
+        }
+    }
     env.ctl.swap.begin_run();
     // Scripted schedule ([fabric.dfx.swap.N]): consumed by the partition's
-    // first session, mirroring how `Fabric::new` arms it for the first run.
-    for s in scripted.drain(..) {
-        let staged = env.dfx.stage(
-            env.id,
-            s.rm,
-            s.r,
-            d,
-            env.seed,
-            &env.hyper,
-            warmup,
-            fpga,
-            env.quantize,
-            s.at_flit,
-            s.dark_flits,
-            env.dfx_cfg.policy,
-            env.chunk,
-            env.dfx_cfg.samples_per_sec,
-            env.lanes,
-        );
-        match staged {
-            Ok(swap) => env.ctl.swap.schedule(swap),
-            // Mirror `Fabric::new`, which hard-fails when a scripted swap
-            // cannot be staged: serving the session without it would
-            // silently break the advertised Fabric::run parity. The
-            // client sees the error from `close()`.
-            Err(e) => {
-                return failed(format!("arming scripted swap for pblock {}: {e:#}", env.id))
+    // first *fresh* session, mirroring how `Fabric::new` arms it for the
+    // first run — never re-armed against a resumed stream.
+    if !resumed {
+        for s in scripted.drain(..) {
+            let staged = env.dfx.stage(
+                env.id,
+                s.rm,
+                s.r,
+                d,
+                seed,
+                &env.hyper,
+                w,
+                fpga,
+                env.quantize,
+                s.at_flit,
+                s.dark_flits,
+                env.dfx_cfg.policy,
+                env.chunk,
+                env.dfx_cfg.samples_per_sec,
+                env.lanes,
+            );
+            match staged {
+                Ok(swap) => env.ctl.swap.schedule(swap),
+                // Mirror `Fabric::new`, which hard-fails when a scripted swap
+                // cannot be staged: serving the session without it would
+                // silently break the advertised Fabric::run parity. The
+                // client sees the error from `close()`.
+                Err(e) => {
+                    return failed(format!("arming scripted swap for pblock {}: {e:#}", env.id))
+                }
             }
         }
     }
@@ -429,8 +791,8 @@ fn serve_episode(
                 ctl: Arc::clone(&env.ctl),
                 kind,
                 d,
-                warmup: warmup.to_vec(),
-                seed: env.seed,
+                warmup: w.to_vec(),
+                seed,
                 lanes: env.lanes,
             }];
             let handle = hotswap::spawn_controller(cenv, targets, Arc::clone(&stop));
@@ -485,8 +847,8 @@ fn serve_episode(
                 kind,
                 r: env.r,
                 d,
-                seed: env.seed,
-                warmup: warmup.to_vec(),
+                seed,
+                warmup: w.to_vec(),
                 lanes: env.lanes,
                 quantize: env.quantize,
             }];
@@ -496,15 +858,63 @@ fn serve_episode(
     } else {
         None
     };
+    // Quarantine eviction: let the service loop *return* on rung 2
+    // instead of draining the rest of the stream, so this episode can
+    // park the session from its last healthy checkpoint.
+    let evictable = env.evict_quarantined
+        && env.faults.enabled
+        && env.fpga.is_none()
+        && matches!(env.rm, RmKind::Detector(_));
+    if evictable {
+        env.ctl.evict_on_quarantine.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    // Durable score sink: a relay thread appends each score chunk before
+    // forwarding it to the client, so a record is on its way to disk no
+    // later than the client can observe the score. Zero cost when no sink
+    // is configured — the service loop keeps the direct sender.
+    let (service_tx, relay) = if env.shared.sink.is_some() {
+        let (mid_tx, mid_rx) = Port::link();
+        let shared = Arc::clone(&env.shared);
+        let client = tx.clone();
+        let relay = std::thread::spawn(move || {
+            let mut vals = Vec::new();
+            for flit in mid_rx {
+                vals.clear();
+                unpad_into(&flit, &mut vals);
+                if let Some(sink) = shared.sink.as_ref() {
+                    // A sink write failure must not kill the stream; the
+                    // recovery scan simply ends at the last good frame.
+                    let _ = sink.lock().unwrap().append(session, flit.seq, &vals);
+                }
+                let _ = client.send(flit);
+            }
+        });
+        (mid_tx, Some(relay))
+    } else {
+        (tx.clone(), None)
+    };
     let served = Pblock::service_mode(
         &mut rm,
         &env.decoupler,
         &env.ctl,
         inbox,
-        tx,
+        service_tx,
         env.exec,
         env.pool.as_ref(),
     );
+    if let Some(h) = relay {
+        // The service loop dropped its sender; join so every score of this
+        // episode is appended before the outcome becomes visible.
+        let _ = h.join();
+    }
+    if evictable {
+        env.ctl.evict_on_quarantine.store(false, std::sync::atomic::Ordering::SeqCst);
+    }
+    // Captured before the fault teardown below lifts the quarantine and
+    // clears the checkpoint slot.
+    let was_quarantined = env.decoupler.is_quarantined();
+    let last_checkpoint =
+        if evictable && was_quarantined { env.ctl.checkpoint.latest() } else { None };
     let adaptive_swaps = match controller {
         Some((stop, handle)) => {
             stop.store(true, std::sync::atomic::Ordering::SeqCst);
@@ -537,15 +947,67 @@ fn serve_episode(
     // lock (atomic with removing the active-session entry), so a racing
     // `schedule_swap` can never leak a stale RM into the next session.
     let swap_events = env.ctl.swap.take_events();
-    match served {
-        Ok(report) => SessionOutcome {
-            report: Some(report),
-            swap_events,
-            adaptive_swaps,
-            discarded_swaps: 0,
-            fault_events,
-            error: None,
-        },
+    // Park the continuation when the session did not finish here.
+    let mut parked: Option<ParkedSession> = None;
+    if let Ok(report) = served.as_ref() {
+        if let Some(cp) = last_checkpoint {
+            // Quarantine eviction: resume elsewhere from the last healthy
+            // checkpoint (PR-6 reload semantics — state rolls back to the
+            // checkpoint; scores already emitted are not recalled). The
+            // inbox stays live, so the client's push never notices.
+            parked = Some(ParkedSession {
+                id: session,
+                kind: env.rm,
+                r: env.r,
+                lanes: env.lanes,
+                d,
+                seed,
+                warmup: Arc::clone(warmup),
+                snapshot: Some(cp.bytes),
+                flits: base_flits + cp.flit,
+                samples: base_samples + cp.samples,
+                inbox: Some(door.reopen()),
+                scores: Some(tx.clone()),
+                reason: ParkReason::Quarantine,
+            });
+        } else if door.suspend_requested() {
+            let snapshot = snapshot_rm(&rm);
+            if snapshot.is_none() && matches!(env.rm, RmKind::Detector(_)) {
+                return failed(
+                    "suspending: detector exposes no window snapshot to checkpoint".into(),
+                );
+            }
+            parked = Some(ParkedSession {
+                id: session,
+                kind: env.rm,
+                r: env.r,
+                lanes: env.lanes,
+                d,
+                seed,
+                warmup: Arc::clone(warmup),
+                snapshot,
+                flits: base_flits + report.flits_in,
+                samples: base_samples + report.samples,
+                inbox: None,
+                scores: None,
+                reason: ParkReason::Suspend,
+            });
+        }
+    }
+    let outcome = match served {
+        Ok(mut report) => {
+            // Whole-session cursor for resumed streams.
+            report.flits_in += base_flits;
+            report.samples += base_samples;
+            SessionOutcome {
+                report: Some(report),
+                swap_events,
+                adaptive_swaps,
+                discarded_swaps: 0,
+                fault_events,
+                error: None,
+            }
+        }
         Err(e) => SessionOutcome {
             report: None,
             swap_events,
@@ -554,6 +1016,389 @@ fn serve_episode(
             fault_events,
             error: Some(format!("{e:#}")),
         },
+    };
+    (outcome, parked)
+}
+
+// ---------------------------------------------------------------------------
+// Partition multiplexer
+// ---------------------------------------------------------------------------
+
+/// One tenant of a multiplexed partition.
+struct MuxSlot {
+    session: u64,
+    d: usize,
+    warmup: Arc<Vec<f32>>,
+    inbox: SessionInbox,
+    scores: Sender<Flit>,
+    /// RM seed the session started under (its origin partition).
+    seed: u64,
+    /// Window snapshot while this slot's state is swapped out of the
+    /// resident RM.
+    state: Option<Vec<u8>>,
+    flits: u64,
+    samples: u64,
+    flits_out: u64,
+    busy_secs: f64,
+    /// Multiplexer tick of the slot's last processed flit (LRU key).
+    last_active: u64,
+}
+
+fn slot_from_work(w: SessionWork, env_seed: u64, tick: u64) -> MuxSlot {
+    let SessionWork { session, d, warmup, inbox, scores, resume } = w;
+    let (seed, state, flits, samples) = match resume {
+        Some(r) => (r.seed, r.snapshot, r.base_flits, r.base_samples),
+        None => (env_seed, None, 0, 0),
+    };
+    MuxSlot {
+        session,
+        d,
+        warmup,
+        inbox,
+        scores,
+        seed,
+        state,
+        flits,
+        samples,
+        flits_out: 0,
+        busy_secs: 0.0,
+        last_active: tick,
+    }
+}
+
+fn slot_from_parked(p: ParkedSession, tick: u64) -> MuxSlot {
+    MuxSlot {
+        session: p.id,
+        d: p.d,
+        warmup: p.warmup,
+        inbox: p.inbox.expect("re-attached session keeps its inbox"),
+        scores: p.scores.expect("re-attached session keeps its score channel"),
+        seed: p.seed,
+        state: p.snapshot,
+        flits: p.flits,
+        samples: p.samples,
+        flits_out: 0,
+        busy_secs: 0.0,
+        last_active: tick,
+    }
+}
+
+/// Swap the resident RM over to `slots[idx]`'s session: snapshot the
+/// currently loaded session's window state into its slot, rebuild the RM
+/// with the target session's (d, seed, warmup) and restore its state.
+fn mux_switch(
+    env: &WorkerEnv,
+    rm: &mut Option<LoadedRm>,
+    loaded: &mut Option<u64>,
+    slots: &mut [MuxSlot],
+    idx: usize,
+) -> Result<(), String> {
+    if let (Some(pid), Some(prm)) = (loaded.as_ref(), rm.as_ref()) {
+        if let Some(prev) = slots.iter_mut().find(|s| s.session == *pid) {
+            match snapshot_rm(prm) {
+                Some(bytes) => prev.state = Some(bytes),
+                None => {
+                    return Err(
+                        "multiplexing: detector exposes no window snapshot — cannot swap \
+                         session state"
+                            .into(),
+                    )
+                }
+            }
+        }
+    }
+    *rm = None;
+    *loaded = None;
+    let (d, seed, warmup) = {
+        let s = &slots[idx];
+        (s.d, s.seed, Arc::clone(&s.warmup))
+    };
+    let mut built = match LoadedRm::build(
+        env.rm,
+        env.r,
+        d,
+        seed,
+        &env.hyper,
+        warmup.as_slice(),
+        None,
+        env.quantize,
+        env.lanes,
+    ) {
+        Ok(b) => b,
+        Err(e) => return Err(format!("building RM: {e:#}")),
+    };
+    if let Err(e) = built.reset() {
+        return Err(format!("resetting RM: {e:#}"));
+    }
+    if let Some(bytes) = slots[idx].state.take() {
+        if let Err(e) = restore_rm(&mut built, &bytes) {
+            return Err(format!("restoring session state: {e:#}"));
+        }
+    }
+    *rm = Some(built);
+    *loaded = Some(slots[idx].session);
+    Ok(())
+}
+
+/// Retire a multiplexed session: store its outcome, give the slot back.
+fn mux_finish(env: &WorkerEnv, slot: MuxSlot, error: Option<String>) {
+    let MuxSlot { session, flits, samples, flits_out, busy_secs, scores, inbox, .. } = slot;
+    drop(inbox);
+    let outcome = SessionOutcome {
+        report: if error.is_none() {
+            Some(PblockReport { flits_in: flits, flits_out, samples, busy_secs })
+        } else {
+            None
+        },
+        swap_events: Vec::new(),
+        adaptive_swaps: 0,
+        discarded_swaps: 0,
+        fault_events: Vec::new(),
+        error,
+    };
+    {
+        let mut st = env.shared.state.lock().unwrap();
+        st.doors.remove(&session);
+        if !st.abandoned.remove(&session) {
+            st.results.insert(session, outcome);
+            while st.results.len() > MAX_RETAINED_OUTCOMES {
+                st.results.pop_first();
+            }
+        }
+        let n = st.admitted.entry(env.id).or_insert(1);
+        *n = n.saturating_sub(1);
+        if !st.shutting_down && *n < env.capacity {
+            st.free.insert(env.id);
+        }
+        st.served += 1;
+    }
+    env.shared.freed.notify_all();
+    // Senders drop after the outcome is visible — a client draining in
+    // `close()` never races the bookkeeping.
+    drop(scores);
+}
+
+/// Park a multiplexed session into the store. Idle parks are transparent
+/// (the live channels ride along); a suspend park leaves only the
+/// checkpoint for the client's ticket.
+fn mux_park(env: &WorkerEnv, slot: MuxSlot, state: Option<Vec<u8>>, reason: ParkReason) {
+    let MuxSlot { session, d, warmup, inbox, scores, seed, flits, samples, .. } = slot;
+    let transparent = reason == ParkReason::Idle;
+    let (park_inbox, park_scores, held) = if transparent {
+        (Some(inbox), Some(scores), None)
+    } else {
+        (None, None, Some((inbox, scores)))
+    };
+    let parked = ParkedSession {
+        id: session,
+        kind: env.rm,
+        r: env.r,
+        lanes: env.lanes,
+        d,
+        seed,
+        warmup,
+        snapshot: state,
+        flits,
+        samples,
+        inbox: park_inbox,
+        scores: park_scores,
+        reason,
+    };
+    {
+        let mut st = env.shared.state.lock().unwrap();
+        env.shared.store.park(parked);
+        if !transparent {
+            st.doors.remove(&session);
+        }
+        let n = st.admitted.entry(env.id).or_insert(1);
+        *n = n.saturating_sub(1);
+        if !st.shutting_down && *n < env.capacity {
+            st.free.insert(env.id);
+        }
+    }
+    env.shared.freed.notify_all();
+    // For a suspend park the dead channels drop only now, after the store
+    // entry is visible — `Session::suspend` keys off one or the other.
+    drop(held);
+}
+
+/// Resident worker for a multiplexed partition: up to `capacity` sessions
+/// share the one RM, their window state swapped through the snapshot
+/// codec between inbox drains. Idle sessions are parked into the session
+/// store after `idle_evict` ticks and re-attached when their inbox stirs.
+fn mux_loop(env: WorkerEnv, jobs: Receiver<SessionWork>) {
+    use std::sync::mpsc::{RecvTimeoutError, TryRecvError};
+    let cap = env.capacity.max(1);
+    let mut slots: Vec<MuxSlot> = Vec::new();
+    let mut rm: Option<LoadedRm> = None;
+    let mut loaded: Option<u64> = None;
+    let mut tick: u64 = 0;
+    let mut disconnected = false;
+    loop {
+        // Fresh admissions (already charged against this partition's
+        // capacity by the admission path).
+        while slots.len() < cap && !disconnected {
+            match jobs.try_recv() {
+                Ok(w) => slots.push(slot_from_work(w, env.seed, tick)),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => disconnected = true,
+            }
+        }
+        // Re-attach parked sessions whose inbox has stirred and that fit
+        // this partition's layout.
+        while slots.len() < cap {
+            let claimed = {
+                let mut st = env.shared.state.lock().unwrap();
+                if st.shutting_down
+                    || st.admitted.get(&env.id).copied().unwrap_or(0) >= cap
+                {
+                    None
+                } else {
+                    let p = env.shared.store.claim_where(|p| {
+                        p.inbox.is_some()
+                            && p.fits(env.rm, env.r, env.lanes)
+                            && p.inbox.as_ref().unwrap().probe().stirring()
+                    });
+                    if p.is_some() {
+                        let n = st.admitted.entry(env.id).or_insert(0);
+                        *n += 1;
+                        if *n >= cap {
+                            st.free.remove(&env.id);
+                        }
+                    }
+                    p
+                }
+            };
+            match claimed {
+                Some(p) => slots.push(slot_from_parked(p, tick)),
+                None => break,
+            }
+        }
+        if slots.is_empty() {
+            if disconnected {
+                break;
+            }
+            match jobs.recv_timeout(Duration::from_millis(2)) {
+                Ok(w) => slots.push(slot_from_work(w, env.seed, tick)),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+            continue;
+        }
+        // One sweep: drain each slot's queued flits through the resident
+        // RM; then decide whether the slot finishes, parks or stays.
+        enum End {
+            Finish(Option<String>),
+            Park(ParkReason),
+        }
+        let mut progress = false;
+        let mut idx = 0;
+        while idx < slots.len() {
+            let mut end: Option<End> = None;
+            while let Some(f) = slots[idx].inbox.try_recv_flit() {
+                progress = true;
+                tick += 1;
+                slots[idx].last_active = tick;
+                slots[idx].flits += 1;
+                if loaded != Some(slots[idx].session) {
+                    if let Err(e) = mux_switch(&env, &mut rm, &mut loaded, &mut slots, idx) {
+                        end = Some(End::Finish(Some(e)));
+                        break;
+                    }
+                }
+                let last = f.last;
+                let n_valid = f.n_valid as u64;
+                let t0 = Instant::now();
+                let out = rm.as_mut().expect("state just switched in").process(&f, env.pool.as_ref());
+                slots[idx].busy_secs += t0.elapsed().as_secs_f64();
+                match out {
+                    Ok(Some(out)) => {
+                        slots[idx].samples += n_valid;
+                        if let Some(sink) = env.shared.sink.as_ref() {
+                            let mut vals = Vec::new();
+                            unpad_into(&out, &mut vals);
+                            let _ =
+                                sink.lock().unwrap().append(slots[idx].session, out.seq, &vals);
+                        }
+                        slots[idx].flits_out += 1;
+                        let _ = slots[idx].scores.send(out);
+                    }
+                    Ok(None) => {
+                        slots[idx].samples += n_valid;
+                    }
+                    Err(e) => {
+                        end = Some(End::Finish(Some(format!("{e:#}"))));
+                        break;
+                    }
+                }
+                if last {
+                    end = Some(End::Finish(None));
+                    break;
+                }
+            }
+            if end.is_none() {
+                let pr = slots[idx].inbox.probe();
+                if pr.force_closed {
+                    end = Some(End::Finish(None));
+                } else if pr.queued == 0 && pr.suspended {
+                    end = Some(End::Park(ParkReason::Suspend));
+                } else if pr.queued == 0 && pr.producer_done {
+                    end = Some(End::Finish(None));
+                } else if env.idle_evict > 0
+                    && pr.queued == 0
+                    && tick.saturating_sub(slots[idx].last_active) >= env.idle_evict
+                {
+                    end = Some(End::Park(ParkReason::Idle));
+                }
+            }
+            match end {
+                Some(End::Finish(error)) => {
+                    let slot = slots.remove(idx);
+                    if loaded == Some(slot.session) {
+                        loaded = None;
+                        rm = None;
+                    }
+                    mux_finish(&env, slot, error);
+                }
+                Some(End::Park(reason)) => {
+                    let mut slot = slots.remove(idx);
+                    let state = if loaded == Some(slot.session) {
+                        let bytes = rm.as_ref().and_then(snapshot_rm);
+                        loaded = None;
+                        rm = None;
+                        bytes
+                    } else {
+                        slot.state.take()
+                    };
+                    if state.is_none() && slot.flits > 0 && matches!(env.rm, RmKind::Detector(_))
+                    {
+                        // A detector that has scored flits but exposes no
+                        // window snapshot cannot be parked losslessly.
+                        mux_finish(
+                            &env,
+                            slot,
+                            Some(
+                                "parking: detector exposes no window snapshot to checkpoint"
+                                    .into(),
+                            ),
+                        );
+                    } else {
+                        mux_park(&env, slot, state, reason);
+                    }
+                }
+                None => idx += 1,
+            }
+        }
+        // The tick also advances on idle sweeps, so idle eviction fires
+        // for a silent fleet too (time-like, not only traffic-like).
+        if !progress {
+            tick += 1;
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    // Shutdown teardown: remaining slots were force-closed.
+    for slot in slots.drain(..) {
+        mux_finish(&env, slot, None);
     }
 }
 
@@ -563,6 +1408,9 @@ fn serve_episode(
 
 struct PartitionHandle {
     rm: RmKind,
+    /// Ensemble size the partition was configured with (resume eligibility
+    /// is keyed on the full (rm, r, lanes) layout).
+    r: usize,
     /// Configured lane count (replacement RMs staged by `schedule_swap`
     /// keep the partition's lane layout).
     lanes: usize,
@@ -641,13 +1489,28 @@ impl FabricServer {
         } else {
             None
         };
+        let sink = match cfg.server.sink_path.as_deref() {
+            Some(path) => Some(Mutex::new(
+                ScoreSink::open(std::path::Path::new(path), cfg.server.sink_fsync_records)
+                    .context("opening the score sink")?,
+            )),
+            None => None,
+        };
         let shared = Arc::new(Shared {
             state: Mutex::new(AdmissionState {
                 free: active.iter().map(|p| p.id).collect(),
                 ..Default::default()
             }),
             freed: Condvar::new(),
+            store: SessionStore::default(),
+            sink,
+            spill_dir: cfg.server.spill_dir.clone().map(PathBuf::from),
+            senders: Mutex::new(BTreeMap::new()),
         });
+        // Lifecycle mode (multiplexing and/or idle eviction) swaps in the
+        // snapshot-switching worker; otherwise partitions run the dedicated
+        // per-session episode loop, bit-transparent to earlier releases.
+        let mux = cfg.server.sessions_per_partition > 1 || cfg.server.idle_evict_flits > 0;
         let mut partitions = BTreeMap::new();
         let mut workers = Vec::new();
         for p in &active {
@@ -684,15 +1547,29 @@ impl FabricServer {
                 decoupler: Arc::clone(&decoupler),
                 shared: Arc::clone(&shared),
                 faults: cfg.faults.clone(),
+                capacity: cfg.server.sessions_per_partition.max(1),
+                idle_evict: cfg.server.idle_evict_flits,
+                evict_quarantined: cfg.server.evict_quarantined,
             };
+            shared.senders.lock().unwrap().insert(
+                p.id,
+                PartitionSender { rm: p.rm, r: p.r, lanes, jobs: jobs_tx.clone() },
+            );
             let handle = std::thread::Builder::new()
                 .name(format!("serve-p{}", p.id))
-                .spawn(move || worker_loop(env, scripted, jobs_rx))
+                .spawn(move || {
+                    if mux {
+                        mux_loop(env, jobs_rx)
+                    } else {
+                        worker_loop(env, scripted, jobs_rx)
+                    }
+                })
                 .expect("spawn partition worker");
             partitions.insert(
                 p.id,
                 PartitionHandle {
                     rm: p.rm,
+                    r: p.r,
                     lanes,
                     jobs: Mutex::new(jobs_tx),
                     ctl,
@@ -723,14 +1600,21 @@ impl FabricServer {
         self.partitions.get(&id).map(|p| &p.decoupler)
     }
 
+    /// True when partitions run the multiplexing worker (multiple sessions
+    /// per partition and/or idle eviction configured).
+    fn mux(&self) -> bool {
+        self.cfg.server.sessions_per_partition > 1 || self.cfg.server.idle_evict_flits > 0
+    }
+
     /// Open a session, blocking in the admission queue while every eligible
-    /// partition is busy. Fails once `max_waiters` clients are already
-    /// queued, or at shutdown.
+    /// partition slot is busy. Fails once `max_waiters` clients are already
+    /// queued, after `open_timeout_ms` (when set), immediately under
+    /// `overload = "shed"`, or at shutdown — all as a typed [`AdmitError`].
     pub fn open(&self, spec: SessionSpec) -> Result<Session> {
         Ok(self.open_inner(spec, true)?.expect("blocking open returns a session"))
     }
 
-    /// Non-blocking open: `Ok(None)` when no eligible partition is free.
+    /// Non-blocking open: `Ok(None)` when no eligible partition slot is free.
     pub fn try_open(&self, spec: SessionSpec) -> Result<Option<Session>> {
         self.open_inner(spec, false)
     }
@@ -751,6 +1635,27 @@ impl FabricServer {
                 bail!("no served partition {id}");
             }
         }
+        let (st, id) = match self.admit(spec.pblock, block)? {
+            Some(granted) => granted,
+            None => return Ok(None),
+        };
+        Ok(Some(self.install(st, id, spec.d, Arc::new(spec.warmup), None)?))
+    }
+
+    /// Claim a slot on an eligible partition: the admission wait loop with
+    /// queue bound, deadline and overload shedding. On success the slot is
+    /// already charged against the partition's capacity; the state guard is
+    /// returned so the caller installs the session in the same critical
+    /// section.
+    fn admit(
+        &self,
+        pblock: Option<usize>,
+        block: bool,
+    ) -> Result<Option<(std::sync::MutexGuard<'_, AdmissionState>, usize)>> {
+        let capacity = self.cfg.server.sessions_per_partition.max(1);
+        let deadline = (self.cfg.server.open_timeout_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(self.cfg.server.open_timeout_ms));
+        let t0 = Instant::now();
         let mut st = self.shared.state.lock().unwrap();
         let mut waiting = false;
         let id = loop {
@@ -758,9 +1663,9 @@ impl FabricServer {
                 if waiting {
                     st.waiters -= 1;
                 }
-                bail!("server is shutting down");
+                return Err(AdmitError::ShuttingDown.into());
             }
-            let pick = match spec.pblock {
+            let pick = match pblock {
                 Some(id) => st.free.contains(&id).then_some(id),
                 None => st.free.first().copied(),
             };
@@ -768,56 +1673,209 @@ impl FabricServer {
                 if waiting {
                     st.waiters -= 1;
                 }
-                st.free.remove(&id);
+                let n = st.admitted.entry(id).or_insert(0);
+                *n += 1;
+                if *n >= capacity {
+                    st.free.remove(&id);
+                }
                 break id;
             }
             if !block {
                 return Ok(None);
             }
+            if self.cfg.server.overload == OverloadPolicy::Shed {
+                if waiting {
+                    st.waiters -= 1;
+                }
+                return Err(AdmitError::Saturated.into());
+            }
             if !waiting {
                 if st.waiters >= self.cfg.server.max_waiters {
-                    bail!(
-                        "admission queue is full ({} session(s) already waiting)",
-                        st.waiters
-                    );
+                    return Err(AdmitError::QueueFull { waiters: st.waiters }.into());
                 }
                 st.waiters += 1;
                 waiting = true;
             }
-            st = self.shared.freed.wait(st).unwrap();
+            st = match deadline {
+                None => self.shared.freed.wait(st).unwrap(),
+                Some(deadline) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        st.waiters -= 1;
+                        return Err(AdmitError::Timeout {
+                            waited_ms: t0.elapsed().as_millis() as u64,
+                        }
+                        .into());
+                    }
+                    self.shared.freed.wait_timeout(st, deadline - now).unwrap().0
+                }
+            };
         };
-        let session = st.next_session;
-        st.next_session += 1;
-        let warmup = Arc::new(spec.warmup);
+        Ok(Some((st, id)))
+    }
+
+    /// Wire a session onto an already-charged partition slot: inbox, score
+    /// channel and worker job, with rollback when the worker is gone.
+    fn install(
+        &self,
+        mut st: std::sync::MutexGuard<'_, AdmissionState>,
+        id: usize,
+        d: usize,
+        warmup: Arc<Vec<f32>>,
+        resume: Option<(u64, ResumeState)>,
+    ) -> Result<Session> {
+        let session = match resume.as_ref() {
+            Some((sid, _)) => {
+                st.next_session = st.next_session.max(sid + 1);
+                *sid
+            }
+            None => {
+                let s = st.next_session;
+                st.next_session += 1;
+                s
+            }
+        };
         let (inbox_tx, inbox_rx) = SessionInbox::bounded(self.cfg.server.inbox_flits);
-        st.active.insert(
-            id,
-            ActiveSession { session, d: spec.d, warmup: Arc::clone(&warmup), door: inbox_rx.ctl() },
-        );
+        let door = inbox_rx.ctl();
+        // The dedicated worker serves one session per partition and keys
+        // `schedule_swap` off `active`; multiplexed partitions track their
+        // tenants through `doors` + per-partition admitted counts instead.
+        if !self.mux() {
+            st.active.insert(
+                id,
+                ActiveSession { session, d, warmup: Arc::clone(&warmup), door: door.clone() },
+            );
+        }
+        st.doors.insert(session, door.clone());
         drop(st);
         let (score_tx, score_rx) = Port::link();
-        let work =
-            SessionWork { session, d: spec.d, warmup, inbox: inbox_rx, scores: score_tx };
+        let work = SessionWork {
+            session,
+            d,
+            warmup,
+            inbox: inbox_rx,
+            scores: score_tx,
+            resume: resume.map(|(_, r)| r),
+        };
         let sent = self.partitions[&id].jobs.lock().unwrap().send(work).is_ok();
         if !sent {
             // Worker is gone (panicked): the partition is out of service.
-            self.shared.state.lock().unwrap().active.remove(&id);
+            let mut st = self.shared.state.lock().unwrap();
+            st.active.remove(&id);
+            st.doors.remove(&session);
+            let n = st.admitted.entry(id).or_insert(1);
+            *n = n.saturating_sub(1);
             bail!("partition {id}: service worker has exited");
         }
-        Ok(Some(Session {
+        Ok(Session {
             id: session,
             pblock: id,
-            d: spec.d,
+            d,
             chunk: self.cfg.chunk,
             tx: Some(inbox_tx),
             rx: score_rx,
+            door,
             seq: 0,
             pushed: 0,
             staged: Vec::new(),
             full_mask: vec![1.0f32; self.cfg.chunk].into(),
             shared: Arc::clone(&self.shared),
             finished: false,
-        }))
+        })
+    }
+
+    /// Resume a suspended session from its [`SessionTicket`] — on this
+    /// server or a fresh one built from the same config. The session keeps
+    /// its id, stream cursor (flit/sample counts, staged tail) and detector
+    /// window state; subsequent scores are bit-identical to a session that
+    /// was never suspended.
+    pub fn resume(&self, ticket: SessionTicket) -> Result<Session> {
+        if ticket.d == 0 {
+            bail!("resume: ticket dimensionality must be > 0");
+        }
+        if ticket.staged.len() % ticket.d != 0 {
+            bail!(
+                "resume: staged tail of {} values is not a whole number of samples (d = {})",
+                ticket.staged.len(),
+                ticket.d
+            );
+        }
+        // The ticket must land on a partition with the exact layout it was
+        // checkpointed under — the snapshot codec restores state, not shape.
+        let eligible: BTreeSet<usize> = self
+            .partitions
+            .iter()
+            .filter(|(_, p)| p.rm == ticket.kind && p.r == ticket.r && p.lanes == ticket.lanes)
+            .map(|(id, _)| *id)
+            .collect();
+        if eligible.is_empty() {
+            bail!(
+                "resume: no served partition matches the ticket's layout \
+                 (rm {:?}, r {}, lanes {})",
+                ticket.kind,
+                ticket.r,
+                ticket.lanes
+            );
+        }
+        let pick = {
+            let st = self.shared.state.lock().unwrap();
+            st.free.iter().find(|id| eligible.contains(*id)).copied()
+        };
+        if pick.is_none() {
+            bail!("resume: every eligible partition slot is busy — retry once one frees");
+        }
+        // Re-admit through the normal path pinned to the picked partition so
+        // capacity charging stays in one place.
+        let (st, id) = match self.admit(pick, false)? {
+            Some(granted) => granted,
+            None => bail!("resume: every eligible partition slot is busy — retry once one frees"),
+        };
+        if st.doors.contains_key(&ticket.id) || self.shared.store.contains(ticket.id) {
+            // Roll the slot charge back before refusing the duplicate.
+            let mut st = st;
+            let capacity = self.cfg.server.sessions_per_partition.max(1);
+            let n = st.admitted.entry(id).or_insert(1);
+            *n = n.saturating_sub(1);
+            if !st.shutting_down && *n < capacity {
+                st.free.insert(id);
+            }
+            drop(st);
+            self.shared.freed.notify_all();
+            bail!("resume: session {} is already live on this server", ticket.id);
+        }
+        let resume = ResumeState {
+            seed: ticket.seed,
+            snapshot: ticket.snapshot.clone(),
+            base_flits: ticket.flits,
+            base_samples: ticket.samples,
+        };
+        let mut session = self.install(
+            st,
+            id,
+            ticket.d,
+            Arc::new(ticket.warmup.clone()),
+            Some((ticket.id, resume)),
+        )?;
+        session.seq = ticket.seq;
+        session.pushed = ticket.pushed;
+        session.staged = ticket.staged;
+        Ok(session)
+    }
+
+    /// Resume a session whose ticket was spilled to `[fabric.server]`
+    /// `spill_dir` (by `Session::suspend`). The spill file is removed once
+    /// the session is live again.
+    pub fn resume_spilled(&self, session: u64) -> Result<Session> {
+        let dir = self
+            .shared
+            .spill_dir
+            .as_deref()
+            .context("resume_spilled: no [fabric.server] spill_dir configured")?;
+        let ticket = SessionTicket::load(dir, session)?;
+        let path = SessionTicket::spill_path(dir, session);
+        let live = self.resume(ticket)?;
+        let _ = std::fs::remove_file(path);
+        Ok(live)
     }
 
     /// Arm an in-flight RM swap on partition `id` at session-input flit
@@ -836,6 +1894,12 @@ impl FabricServer {
             .partitions
             .get(&id)
             .with_context(|| format!("no served partition {id}"))?;
+        if self.mux() {
+            bail!(
+                "pblock {id}: in-flight swaps need a dedicated partition — disable \
+                 [fabric.server] sessions_per_partition / idle_evict_flits"
+            );
+        }
         if !part.decoupler.is_enabled() {
             bail!("pblock {id}: decoupler is disabled — cannot hot-swap without isolation");
         }
@@ -896,20 +1960,32 @@ impl FabricServer {
         let doors: Vec<InboxCtl> = {
             let mut st = self.shared.state.lock().unwrap();
             st.shutting_down = true;
-            st.active.values().map(|a| a.door.clone()).collect()
+            st.active
+                .values()
+                .map(|a| a.door.clone())
+                .chain(st.doors.values().cloned())
+                .collect()
         };
         self.shared.freed.notify_all();
         for door in doors {
             door.force_close();
         }
         // Closing the job queues ends the resident workers after their
-        // current episode.
+        // current episode: both the handles here and the sibling-dispatch
+        // clones in `Shared.senders` must drop.
+        self.shared.senders.lock().unwrap().clear();
         self.partitions.clear();
         let mut panicked = 0usize;
         for w in self.workers.drain(..) {
             if w.join().is_err() {
                 panicked += 1;
             }
+        }
+        // Parked sessions hold score senders; dropping them ends the score
+        // streams of clients still draining `close()` on another thread.
+        self.shared.store.clear();
+        if let Some(sink) = self.shared.sink.as_ref() {
+            let _ = sink.lock().unwrap().sync();
         }
         if panicked > 0 {
             bail!("{panicked} partition worker(s) panicked");
@@ -968,6 +2044,8 @@ pub struct Session {
     chunk: usize,
     tx: Option<InboxSender>,
     rx: Receiver<Flit>,
+    /// Server-side control of this session's inbox (suspend / force-close).
+    door: InboxCtl,
     seq: u64,
     pushed: u64,
     /// Samples staged toward the next full chunk (`< chunk × d` values).
@@ -1127,6 +2205,88 @@ impl Session {
             fault_events: outcome.fault_events,
         })
     }
+
+    /// Checkpoint the session and release its partition slot, returning a
+    /// [`SessionTicket`] that [`FabricServer::resume`] — on this server or a
+    /// fresh one built from the same config — turns back into a live
+    /// session with bit-identical scores, plus any scores that were still
+    /// in flight. Works in both service modes (dedicated and multiplexed
+    /// partitions). When `[fabric.server] spill_dir` is set the ticket is
+    /// also spilled to disk for [`FabricServer::resume_spilled`].
+    pub fn suspend(mut self) -> Result<(SessionTicket, Vec<f32>)> {
+        self.door.request_suspend();
+        drop(self.tx.take());
+        let mut scores = Vec::new();
+        let mut hung_up = false;
+        let parked = loop {
+            // Drain scores opportunistically so the worker never stalls on
+            // a full score channel while finishing the park.
+            while let Ok(flit) = self.rx.try_recv() {
+                unpad_into(&flit, &mut scores);
+            }
+            // Workers park (or publish an outcome) under the state lock and
+            // drop their channels only afterwards, so "neither in the store
+            // nor in results" while the channel lives means "still parking".
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                if let Some(p) = self.shared.store.take(self.id) {
+                    break p;
+                }
+                if let Some(outcome) = st.results.remove(&self.id) {
+                    drop(st);
+                    self.finished = true;
+                    match outcome.error {
+                        Some(err) => {
+                            bail!("partition {} service failed: {err}", self.pblock)
+                        }
+                        None => bail!("session ended before it could be suspended"),
+                    }
+                }
+            }
+            match self.rx.try_recv() {
+                Ok(flit) => unpad_into(&flit, &mut scores),
+                Err(std::sync::mpsc::TryRecvError::Empty) => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    // The hang-up happens-after the park/publish, so one
+                    // more sweep over store + results settles it; a second
+                    // disconnected pass means the worker really died in
+                    // between.
+                    if hung_up {
+                        self.finished = true;
+                        bail!("partition worker terminated abnormally during suspend");
+                    }
+                    hung_up = true;
+                }
+            }
+        };
+        // The worker dropped its score sender after parking — drain the tail.
+        while let Ok(flit) = self.rx.recv() {
+            unpad_into(&flit, &mut scores);
+        }
+        self.finished = true;
+        let ticket = SessionTicket {
+            id: parked.id,
+            kind: parked.kind,
+            r: parked.r,
+            lanes: parked.lanes,
+            d: parked.d,
+            seed: parked.seed,
+            flits: parked.flits,
+            samples: parked.samples,
+            seq: self.seq,
+            pushed: self.pushed,
+            staged: std::mem::take(&mut self.staged),
+            warmup: parked.warmup.as_ref().clone(),
+            snapshot: parked.snapshot,
+        };
+        self.shared.state.lock().unwrap().doors.remove(&self.id);
+        if let Some(dir) = self.shared.spill_dir.as_deref() {
+            ticket.spill(dir).context("spilling the suspend ticket")?;
+        }
+        Ok((ticket, scores))
+    }
 }
 
 impl Drop for Session {
@@ -1134,13 +2294,18 @@ impl Drop for Session {
         if self.finished {
             return;
         }
-        // Abandoned without close(): hang up the inbox (the worker finishes
-        // the episode and frees the partition) and disown the outcome.
+        // Abandoned without close(): hang up the inbox, force-close it so a
+        // multiplexed worker retires the session promptly (queued flits of
+        // an abandoned session are discarded, like any force-close), evict
+        // any parked copy from the store and disown the outcome.
         drop(self.tx.take());
+        self.door.force_close();
         let mut st = self.shared.state.lock().unwrap();
-        if st.results.remove(&self.id).is_none() {
+        let discarded = self.shared.store.discard(self.id);
+        if st.results.remove(&self.id).is_none() && !discarded {
             st.abandoned.insert(self.id);
         }
+        st.doors.remove(&self.id);
     }
 }
 
@@ -1338,5 +2503,141 @@ mod tests {
             .schedule_swap(1, 2, RmKind::Detector(DetectorKind::RsHash), 2, Some(1))
             .unwrap_err();
         assert!(err.to_string().contains("decoupler is disabled"), "{err}");
+    }
+
+    #[test]
+    fn overload_shed_returns_typed_error() {
+        let mut cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        cfg.server.overload = OverloadPolicy::Shed;
+        let data = gaussian_data(8, 2, 9);
+        let server = FabricServer::start(cfg).unwrap();
+        let _busy = server.open(SessionSpec::new(2, data.clone())).unwrap();
+        // Shedding: a blocking open fails immediately instead of queueing.
+        let t0 = Instant::now();
+        let err = server.open(SessionSpec::new(2, data)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert_eq!(err.downcast_ref::<AdmitError>(), Some(&AdmitError::Saturated), "{err}");
+    }
+
+    #[test]
+    fn open_timeout_returns_typed_error() {
+        let mut cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        cfg.server.open_timeout_ms = 50;
+        let data = gaussian_data(8, 2, 10);
+        let server = FabricServer::start(cfg).unwrap();
+        let _busy = server.open(SessionSpec::new(2, data.clone())).unwrap();
+        let err = server.open(SessionSpec::new(2, data)).unwrap_err();
+        match err.downcast_ref::<AdmitError>() {
+            Some(AdmitError::Timeout { waited_ms }) => assert!(*waited_ms >= 50, "{waited_ms}"),
+            other => panic!("expected a typed timeout, got {other:?} ({err})"),
+        }
+    }
+
+    /// Two sessions multiplexed through one partition score bit-identically
+    /// to each stream served alone on a dedicated partition — the snapshot
+    /// swap between tenants is lossless.
+    #[test]
+    fn multiplexed_sessions_score_bit_identical_to_dedicated() {
+        let d = 2;
+        let data_a = gaussian_data(32, d, 11);
+        let data_b = gaussian_data(32, d, 12);
+        let dedicated = |data: &[f32]| -> Vec<f32> {
+            let server = FabricServer::start(tiny_cfg(8, DetectorKind::Loda, 2)).unwrap();
+            let mut s = server.open(SessionSpec::new(d, data[..16 * d].to_vec())).unwrap();
+            s.push(data).unwrap();
+            s.close().unwrap().scores
+        };
+        let (want_a, want_b) = (dedicated(&data_a), dedicated(&data_b));
+        let mut cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        cfg.server.sessions_per_partition = 2;
+        let server = FabricServer::start(cfg).unwrap();
+        let mut a = server.open(SessionSpec::new(d, data_a[..16 * d].to_vec())).unwrap();
+        let mut b = server.open(SessionSpec::new(d, data_b[..16 * d].to_vec())).unwrap();
+        assert_eq!(a.pblock(), b.pblock(), "both tenants share the one partition");
+        // Interleave pushes chunk by chunk to force state swaps.
+        for i in 0..4 {
+            a.push(&data_a[i * 8 * d..(i + 1) * 8 * d]).unwrap();
+            b.push(&data_b[i * 8 * d..(i + 1) * 8 * d]).unwrap();
+        }
+        let got_a = a.close().unwrap().scores;
+        let got_b = b.close().unwrap().scores;
+        assert_eq!(got_a, want_a, "session A diverged under multiplexing");
+        assert_eq!(got_b, want_b, "session B diverged under multiplexing");
+    }
+
+    /// Suspend → resume on the same server continues the score stream
+    /// bit-identically to an uninterrupted session.
+    #[test]
+    fn suspend_resume_is_bit_identical() {
+        let d = 2;
+        let data = gaussian_data(48, d, 13);
+        let want = {
+            let server = FabricServer::start(tiny_cfg(8, DetectorKind::Loda, 2)).unwrap();
+            let mut s = server.open(SessionSpec::new(d, data[..16 * d].to_vec())).unwrap();
+            s.push(&data).unwrap();
+            s.close().unwrap().scores
+        };
+        let server = FabricServer::start(tiny_cfg(8, DetectorKind::Loda, 2)).unwrap();
+        let mut s = server.open(SessionSpec::new(d, data[..16 * d].to_vec())).unwrap();
+        // An uneven split: the pending tail (4 samples short of a chunk)
+        // rides the ticket, not the wire.
+        s.push(&data[..20 * d]).unwrap();
+        let (ticket, mut scores) = s.suspend().unwrap();
+        assert_eq!(ticket.pushed, 16, "two full chunks crossed the wire");
+        assert_eq!(ticket.staged.len(), 4 * d, "tail staged client-side");
+        let roundtripped = SessionTicket::from_bytes(&ticket.to_bytes()).unwrap();
+        assert_eq!(roundtripped, ticket, "ticket survives serialization");
+        let mut s = server.resume(roundtripped).unwrap();
+        s.push(&data[20 * d..]).unwrap();
+        let tail = s.close().unwrap();
+        scores.extend_from_slice(&tail.scores);
+        assert_eq!(scores, want, "resumed stream diverged");
+        // 6 full chunks + the TLAST flit, split 2 / 5 across the episodes.
+        assert_eq!(tail.report.flits_in, 7, "cursor spans both episodes");
+        assert_eq!(tail.report.samples, 48);
+    }
+
+    /// A resume may not collide with the same session still live.
+    #[test]
+    fn resume_refuses_duplicate_session() {
+        let d = 2;
+        let data = gaussian_data(16, d, 14);
+        let server = FabricServer::start(tiny_cfg(8, DetectorKind::Loda, 2)).unwrap();
+        let mut s = server.open(SessionSpec::new(d, data.clone())).unwrap();
+        s.push(&data).unwrap();
+        let (ticket, _) = s.suspend().unwrap();
+        let live = server.resume(ticket.clone()).unwrap();
+        let err = server.resume(ticket).unwrap_err();
+        assert!(err.to_string().contains("already live"), "{err}");
+        drop(live);
+    }
+
+    /// Idle-evicted sessions re-attach transparently on the next push and
+    /// the stream stays bit-identical.
+    #[test]
+    fn idle_eviction_is_transparent_to_the_client() {
+        let d = 2;
+        let data = gaussian_data(48, d, 15);
+        let want = {
+            let server = FabricServer::start(tiny_cfg(8, DetectorKind::Loda, 2)).unwrap();
+            let mut s = server.open(SessionSpec::new(d, data[..16 * d].to_vec())).unwrap();
+            s.push(&data).unwrap();
+            s.close().unwrap().scores
+        };
+        let mut cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        cfg.server.idle_evict_flits = 3;
+        let server = FabricServer::start(cfg).unwrap();
+        let mut s = server.open(SessionSpec::new(d, data[..16 * d].to_vec())).unwrap();
+        s.push(&data[..24 * d]).unwrap();
+        // Wait until the worker parks the idle session into the store.
+        let t0 = Instant::now();
+        while server.shared.store.is_empty() && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!server.shared.store.is_empty(), "session was never idle-evicted");
+        // The next push stirs the inbox and the session re-attaches.
+        s.push(&data[24 * d..]).unwrap();
+        let closed = s.close().unwrap();
+        assert_eq!(closed.scores, want, "evict → resume diverged");
     }
 }

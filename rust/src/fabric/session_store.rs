@@ -1,0 +1,453 @@
+//! Parked-session store: checkpointed sessions between partitions.
+//!
+//! A parked session is everything needed to continue a streaming session
+//! on *any* compatible partition, bit-identically: the RM snapshot bytes
+//! ([`super::snapshot::snapshot_rm`]), the stream cursor (flits/samples
+//! already processed), the **origin partition's RM seed** (a session
+//! resumed on a different partition must keep the parameters it started
+//! with), and — while the parking is transparent to the client — the live
+//! inbox and score channel, so eviction and re-attach never disturb the
+//! producer's `push`/`poll_scores` view.
+//!
+//! Three things park a session (see [`ParkReason`]): the idle-eviction
+//! policy (`[fabric.server] idle_evict_flits`), an explicit
+//! [`super::server::Session::suspend`], and a quarantined partition
+//! evicting its tenant for resume elsewhere. Suspended sessions leave the
+//! store as a serializable [`SessionTicket`] ("FSTK" magic, versioned,
+//! CRC-framed) that survives a process boundary: `[fabric.server]
+//! spill_dir` names a directory tickets can be spilled to and re-loaded
+//! from by a fresh server.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+use super::message::Flit;
+use super::score_sink::crc32;
+use super::server::SessionInbox;
+use super::snapshot::{Reader, Writer};
+use crate::config::RmKind;
+use crate::detectors::DetectorKind;
+
+/// Ticket header magic ("fSEAD Session TicKet").
+const TICKET_MAGIC: [u8; 4] = *b"FSTK";
+/// Ticket layout version; bump on any wire-format change.
+const TICKET_VERSION: u8 = 1;
+
+/// Why a session was parked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParkReason {
+    /// Idle-eviction: the partition reclaimed the slot; the parking is
+    /// transparent and the session re-attaches when its inbox stirs.
+    Idle,
+    /// Explicit [`super::server::Session::suspend`] — the client is
+    /// waiting to collect a [`SessionTicket`].
+    Suspend,
+    /// The partition was quarantined (fault supervisor rung 2); the
+    /// session resumes on another partition from its last checkpoint.
+    Quarantine,
+}
+
+/// A checkpointed session at rest: RM snapshot + stream cursor + the live
+/// client channels (present while the parking is transparent; absent once
+/// the state has crossed a process boundary as a ticket).
+pub struct ParkedSession {
+    pub id: u64,
+    pub kind: RmKind,
+    pub r: usize,
+    pub lanes: usize,
+    pub d: usize,
+    /// RM seed of the partition the session *started* on — resuming with
+    /// this seed is what makes continuation bit-identical anywhere.
+    pub seed: u64,
+    pub warmup: Arc<Vec<f32>>,
+    /// Serialized window state; `None` for RMs with no host-visible state
+    /// (a fresh resume builds and resets instead).
+    pub snapshot: Option<Vec<u8>>,
+    /// Input flits fully processed before parking.
+    pub flits: u64,
+    /// Valid samples scored before parking.
+    pub samples: u64,
+    /// Live inbox, still held by the client's `Session` — present for
+    /// transparent parking, absent for ticket-resumed state.
+    pub inbox: Option<SessionInbox>,
+    /// Live score channel into the client's receiver.
+    pub scores: Option<Sender<Flit>>,
+    pub reason: ParkReason,
+}
+
+impl ParkedSession {
+    /// Can this parked session run on a partition with the given layout?
+    pub fn fits(&self, kind: RmKind, r: usize, lanes: usize) -> bool {
+        self.kind == kind && self.r == r && self.lanes == lanes
+    }
+}
+
+/// In-memory store of parked sessions, keyed by session id. Shared between
+/// the admission path (which dispatches resumes), the partition workers
+/// (which park and re-attach), and clients (suspend/ticket collection).
+#[derive(Default)]
+pub struct SessionStore {
+    inner: Mutex<BTreeMap<u64, ParkedSession>>,
+}
+
+impl SessionStore {
+    pub fn park(&self, p: ParkedSession) {
+        self.inner.lock().unwrap().insert(p.id, p);
+    }
+
+    pub fn take(&self, id: u64) -> Option<ParkedSession> {
+        self.inner.lock().unwrap().remove(&id)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.inner.lock().unwrap().contains_key(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop a parked session (its client went away); true if one existed.
+    pub fn discard(&self, id: u64) -> bool {
+        self.inner.lock().unwrap().remove(&id).is_some()
+    }
+
+    /// Remove and return the first parked session `pred` accepts (by
+    /// ascending session id — oldest ids first).
+    pub fn claim_where(&self, pred: impl Fn(&ParkedSession) -> bool) -> Option<ParkedSession> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.iter().find(|(_, p)| pred(p)).map(|(id, _)| *id)?;
+        inner.remove(&id)
+    }
+
+    /// Drop every parked session — server shutdown. Releasing the parked
+    /// score senders here ends the score streams of clients still draining,
+    /// so their `close()`/`suspend()` calls terminate.
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
+    }
+}
+
+/// A suspended session serialized for transport: everything a fresh
+/// `FabricServer` (same config) needs to resume the stream bit-identically,
+/// including the client-side cursor (`seq`/`pushed`) and the pending tail
+/// of samples that had not yet filled a chunk.
+///
+/// Wire format: `"FSTK" | u8 version | u32 payload_len | payload | u32 crc`
+/// with the CRC-32 (IEEE) taken over the payload — a truncated or corrupted
+/// ticket is refused with a named error before any field is trusted.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionTicket {
+    pub id: u64,
+    pub kind: RmKind,
+    pub r: usize,
+    pub lanes: usize,
+    pub d: usize,
+    pub seed: u64,
+    /// Worker cursor: input flits fully processed.
+    pub flits: u64,
+    /// Worker cursor: valid samples scored.
+    pub samples: u64,
+    /// Client cursor: next flit sequence number.
+    pub seq: u64,
+    /// Client cursor: samples pushed so far.
+    pub pushed: u64,
+    /// Pending tail: samples staged client-side, short of a full chunk.
+    pub staged: Vec<f32>,
+    pub warmup: Vec<f32>,
+    pub snapshot: Option<Vec<u8>>,
+}
+
+fn put_kind(w: &mut Writer, kind: RmKind) {
+    match kind {
+        RmKind::Empty => w.put_u8(0),
+        RmKind::Bypass => w.put_u8(1),
+        RmKind::Detector(k) => {
+            w.put_u8(2);
+            let idx = DetectorKind::ALL.iter().position(|&a| a == k).unwrap_or(0);
+            w.put_u8(idx as u8);
+        }
+    }
+}
+
+fn get_kind(r: &mut Reader<'_>) -> Result<RmKind> {
+    Ok(match r.get_u8()? {
+        0 => RmKind::Empty,
+        1 => RmKind::Bypass,
+        2 => {
+            let idx = r.get_u8()? as usize;
+            let Some(&k) = DetectorKind::ALL.get(idx) else {
+                bail!("ticket names unknown detector index {idx}");
+            };
+            RmKind::Detector(k)
+        }
+        other => bail!("ticket has unknown RM kind tag {other}"),
+    })
+}
+
+fn put_f32_vec(w: &mut Writer, vs: &[f32]) {
+    w.put_u32(vs.len() as u32);
+    for &v in vs {
+        w.put_f32(v);
+    }
+}
+
+fn get_f32_vec(r: &mut Reader<'_>) -> Result<Vec<f32>> {
+    let n = r.get_u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        out.push(r.get_f32()?);
+    }
+    Ok(out)
+}
+
+impl SessionTicket {
+    /// Serialize to the CRC-framed wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut p = Writer::new();
+        p.put_u64(self.id);
+        put_kind(&mut p, self.kind);
+        p.put_u32(self.r as u32);
+        p.put_u32(self.lanes as u32);
+        p.put_u32(self.d as u32);
+        p.put_u64(self.seed);
+        p.put_u64(self.flits);
+        p.put_u64(self.samples);
+        p.put_u64(self.seq);
+        p.put_u64(self.pushed);
+        put_f32_vec(&mut p, &self.staged);
+        put_f32_vec(&mut p, &self.warmup);
+        match &self.snapshot {
+            Some(bytes) => {
+                p.put_u8(1);
+                p.put_u32(bytes.len() as u32);
+                p.buf.extend_from_slice(bytes);
+            }
+            None => p.put_u8(0),
+        }
+        let mut w = Writer::new();
+        w.buf.extend_from_slice(&TICKET_MAGIC);
+        w.put_u8(TICKET_VERSION);
+        w.put_u32(p.buf.len() as u32);
+        let crc = crc32(&p.buf);
+        w.buf.extend_from_slice(&p.buf);
+        w.put_u32(crc);
+        w.buf
+    }
+
+    /// Parse and validate a ticket; refuses truncation, trailing bytes and
+    /// CRC mismatches with named errors, never panics.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionTicket> {
+        let mut r = Reader::new(bytes);
+        if r.take(4)? != TICKET_MAGIC {
+            bail!("not a session ticket (bad magic)");
+        }
+        let version = r.get_u8()?;
+        if version != TICKET_VERSION {
+            bail!("unsupported ticket version {version} (this build writes {TICKET_VERSION})");
+        }
+        let len = r.get_u32()? as usize;
+        let payload = r.take(len)?;
+        let stored = r.get_u32()?;
+        if !r.done() {
+            bail!("ticket has trailing bytes — corrupt or from a different layout");
+        }
+        if crc32(payload) != stored {
+            bail!("ticket payload fails its CRC — corrupt");
+        }
+        let mut p = Reader::new(payload);
+        let id = p.get_u64()?;
+        let kind = get_kind(&mut p)?;
+        let r_ = p.get_u32()? as usize;
+        let lanes = p.get_u32()? as usize;
+        let d = p.get_u32()? as usize;
+        let seed = p.get_u64()?;
+        let flits = p.get_u64()?;
+        let samples = p.get_u64()?;
+        let seq = p.get_u64()?;
+        let pushed = p.get_u64()?;
+        let staged = get_f32_vec(&mut p)?;
+        let warmup = get_f32_vec(&mut p)?;
+        let snapshot = match p.get_u8()? {
+            0 => None,
+            1 => {
+                let n = p.get_u32()? as usize;
+                Some(p.take(n)?.to_vec())
+            }
+            other => bail!("ticket has unknown snapshot presence tag {other}"),
+        };
+        if !p.done() {
+            bail!("ticket payload has trailing bytes — length header disagrees");
+        }
+        Ok(SessionTicket {
+            id,
+            kind,
+            r: r_,
+            lanes,
+            d,
+            seed,
+            flits,
+            samples,
+            seq,
+            pushed,
+            staged,
+            warmup,
+            snapshot,
+        })
+    }
+
+    /// Build the worker half of a resume job from this ticket (no live
+    /// channels — the resume path creates fresh ones).
+    pub fn to_parked(&self) -> ParkedSession {
+        ParkedSession {
+            id: self.id,
+            kind: self.kind,
+            r: self.r,
+            lanes: self.lanes,
+            d: self.d,
+            seed: self.seed,
+            warmup: Arc::new(self.warmup.clone()),
+            snapshot: self.snapshot.clone(),
+            flits: self.flits,
+            samples: self.samples,
+            inbox: None,
+            scores: None,
+            reason: ParkReason::Suspend,
+        }
+    }
+
+    /// Path a spilled ticket lives at inside `dir`.
+    pub fn spill_path(dir: &Path, id: u64) -> PathBuf {
+        dir.join(format!("session-{id}.fstk"))
+    }
+
+    /// Spill the ticket to `dir` (created if missing); returns the path.
+    pub fn spill(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating spill dir {}", dir.display()))?;
+        let path = Self::spill_path(dir, self.id);
+        std::fs::write(&path, self.to_bytes())
+            .with_context(|| format!("spilling ticket to {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load a spilled ticket back from `dir`.
+    pub fn load(dir: &Path, id: u64) -> Result<SessionTicket> {
+        let path = Self::spill_path(dir, id);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading spilled ticket {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ticket() -> SessionTicket {
+        SessionTicket {
+            id: 42,
+            kind: RmKind::Detector(DetectorKind::RsHash),
+            r: 4,
+            lanes: 2,
+            d: 3,
+            seed: 0xDEAD_BEEF,
+            flits: 17,
+            samples: 1088,
+            seq: 17,
+            pushed: 1091,
+            staged: vec![0.5, -1.5, 2.25],
+            warmup: (0..30).map(|i| i as f32 * 0.1).collect(),
+            snapshot: Some(vec![1, 2, 3, 4, 5]),
+        }
+    }
+
+    #[test]
+    fn ticket_roundtrips_through_bytes() {
+        let t = ticket();
+        let bytes = t.to_bytes();
+        assert_eq!(SessionTicket::from_bytes(&bytes).unwrap(), t);
+        // No-snapshot and non-detector variants too.
+        let mut t2 = ticket();
+        t2.snapshot = None;
+        t2.kind = RmKind::Bypass;
+        t2.staged.clear();
+        assert_eq!(SessionTicket::from_bytes(&t2.to_bytes()).unwrap(), t2);
+    }
+
+    #[test]
+    fn corrupt_or_truncated_tickets_are_refused() {
+        let bytes = ticket().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                SessionTicket::from_bytes(&bytes[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(SessionTicket::from_bytes(&bad_magic).is_err());
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 99;
+        assert!(SessionTicket::from_bytes(&bad_version).is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(SessionTicket::from_bytes(&trailing).is_err());
+        // Any single payload byte flip must trip the CRC.
+        for idx in [9, 17, 20, bytes.len() - 5] {
+            let mut flipped = bytes.clone();
+            flipped[idx] ^= 0x55;
+            assert!(SessionTicket::from_bytes(&flipped).is_err(), "flip at {idx} must fail");
+        }
+    }
+
+    #[test]
+    fn store_parks_takes_and_claims_by_layout() {
+        let store = SessionStore::default();
+        let park = |id: u64, r: usize| ParkedSession {
+            id,
+            kind: RmKind::Detector(DetectorKind::Loda),
+            r,
+            lanes: 1,
+            d: 2,
+            seed: 1,
+            warmup: Arc::new(vec![]),
+            snapshot: None,
+            flits: 0,
+            samples: 0,
+            inbox: None,
+            scores: None,
+            reason: ParkReason::Idle,
+        };
+        store.park(park(5, 2));
+        store.park(park(3, 4));
+        assert_eq!(store.len(), 2);
+        assert!(store.contains(5));
+        let claimed = store
+            .claim_where(|p| p.fits(RmKind::Detector(DetectorKind::Loda), 4, 1))
+            .expect("r=4 entry must match");
+        assert_eq!(claimed.id, 3);
+        assert!(store.claim_where(|p| p.r == 4).is_none());
+        assert!(store.discard(5));
+        assert!(!store.discard(5));
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn tickets_spill_to_disk_and_load_back() {
+        let dir = std::env::temp_dir().join(format!("fsead-spill-{}", std::process::id()));
+        let t = ticket();
+        let path = t.spill(&dir).unwrap();
+        assert!(path.exists());
+        assert_eq!(SessionTicket::load(&dir, t.id).unwrap(), t);
+        assert!(SessionTicket::load(&dir, 999).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -24,8 +24,10 @@ use crate::detectors::window::SlidingCounts;
 
 /// Snapshot header magic ("fSEAD SNaPshot").
 const MAGIC: [u8; 4] = *b"FSNP";
-/// Layout version; bump on any wire-format change.
-const VERSION: u8 = 1;
+/// Layout version; bump on any wire-format change. Version 2 prefixes every
+/// window section with its byte length, so a corrupted stream is refused at
+/// the section boundary instead of being misread as window data.
+const VERSION: u8 = 2;
 
 /// Variant tags following the header.
 const TAG_SINGLE: u8 = 1;
@@ -35,32 +37,32 @@ const TAG_LANES: u8 = 2;
 // Little-endian wire helpers
 // ---------------------------------------------------------------------------
 
-struct Writer {
-    buf: Vec<u8>,
+pub(crate) struct Writer {
+    pub(crate) buf: Vec<u8>,
 }
 
 impl Writer {
-    fn new() -> Writer {
+    pub(crate) fn new() -> Writer {
         Writer { buf: Vec::new() }
     }
 
-    fn put_u8(&mut self, v: u8) {
+    pub(crate) fn put_u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
-    fn put_u32(&mut self, v: u32) {
+    pub(crate) fn put_u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn put_u64(&mut self, v: u64) {
+    pub(crate) fn put_u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn put_f32(&mut self, v: f32) {
+    pub(crate) fn put_f32(&mut self, v: f32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn put_i32_slice(&mut self, vs: &[i32]) {
+    pub(crate) fn put_i32_slice(&mut self, vs: &[i32]) {
         self.buf.reserve(vs.len() * 4);
         for v in vs {
             self.buf.extend_from_slice(&v.to_le_bytes());
@@ -68,17 +70,17 @@ impl Writer {
     }
 }
 
-struct Reader<'a> {
+pub(crate) struct Reader<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(buf: &'a [u8]) -> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Reader<'a> {
         Reader { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         let end = self.pos.checked_add(n).context("snapshot length overflow")?;
         if end > self.buf.len() {
             bail!("snapshot truncated: wanted {n} bytes at offset {}", self.pos);
@@ -88,29 +90,35 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn get_u8(&mut self) -> Result<u8> {
+    pub(crate) fn get_u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn get_u32(&mut self) -> Result<u32> {
+    pub(crate) fn get_u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn get_u64(&mut self) -> Result<u64> {
+    pub(crate) fn get_u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn get_f32(&mut self) -> Result<f32> {
+    pub(crate) fn get_f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn get_i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+    pub(crate) fn get_i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
         let raw = self.take(n.checked_mul(4).context("snapshot length overflow")?)?;
         Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn done(&self) -> bool {
+    pub(crate) fn done(&self) -> bool {
         self.pos == self.buf.len()
+    }
+
+    /// Split off a sub-reader over exactly the next `n` bytes (a
+    /// length-checked section).
+    pub(crate) fn section(&mut self, n: usize) -> Result<Reader<'a>> {
+        Ok(Reader::new(self.take(n)?))
     }
 }
 
@@ -127,6 +135,28 @@ fn write_window(w: &mut Writer, sc: &SlidingCounts) {
     w.put_f32(sc.log2_denom());
     w.put_i32_slice(sc.counts());
     w.put_i32_slice(sc.ring());
+}
+
+/// Write one window as a length-prefixed section: `[u32 len][payload]`.
+fn write_window_section(w: &mut Writer, sc: &SlidingCounts) {
+    let mut body = Writer::new();
+    write_window(&mut body, sc);
+    w.put_u32(body.buf.len() as u32);
+    w.buf.extend_from_slice(&body.buf);
+}
+
+/// Read one length-prefixed window section. The declared length must cover
+/// exactly one window payload — too short and the payload read fails inside
+/// the section, too long and the leftover is refused here — so a corrupted
+/// length can never make the parser misread a neighbouring section.
+fn read_window_section(r: &mut Reader<'_>, sc: &mut SlidingCounts) -> Result<()> {
+    let len = r.get_u32()? as usize;
+    let mut sec = r.section(len)?;
+    read_window_into(&mut sec, sc)?;
+    if !sec.done() {
+        bail!("window section length disagrees with its payload — snapshot is corrupt");
+    }
+    Ok(())
 }
 
 fn read_window_into(r: &mut Reader<'_>, sc: &mut SlidingCounts) -> Result<()> {
@@ -165,14 +195,14 @@ pub fn snapshot_rm(rm: &LoadedRm) -> Option<Vec<u8>> {
         LoadedRm::DetectorCpu { det } => {
             let sc = det.window_state()?;
             w.put_u8(TAG_SINGLE);
-            write_window(&mut w, sc);
+            write_window_section(&mut w, sc);
         }
         LoadedRm::DetectorCpuLanes { lanes, .. } => {
             w.put_u8(TAG_LANES);
             w.put_u32(lanes.len() as u32);
             for lane in lanes {
                 let sc = lane.det()?.window_state()?;
-                write_window(&mut w, sc);
+                write_window_section(&mut w, sc);
             }
         }
         _ => return None,
@@ -200,7 +230,7 @@ pub fn restore_rm(rm: &mut LoadedRm, bytes: &[u8]) -> Result<()> {
             let sc = det
                 .window_state_mut()
                 .context("detector exposes no window state to restore into")?;
-            read_window_into(&mut r, sc)?;
+            read_window_section(&mut r, sc)?;
         }
         (TAG_LANES, LoadedRm::DetectorCpuLanes { lanes, .. }) => {
             let n = r.get_u32()? as usize;
@@ -215,7 +245,7 @@ pub fn restore_rm(rm: &mut LoadedRm, bytes: &[u8]) -> Result<()> {
                     .det_mut()
                     .and_then(|d| d.window_state_mut())
                     .with_context(|| format!("lane {li} exposes no window state"))?;
-                read_window_into(&mut r, sc)
+                read_window_section(&mut r, sc)
                     .with_context(|| format!("restoring lane {li}"))?;
             }
         }
@@ -372,7 +402,9 @@ mod tests {
         let src = rm(DetectorKind::RsHash, 3, 5, &data[..30], 1);
         let snap = snapshot_rm(&src).unwrap();
         let mut dst = rm(DetectorKind::RsHash, 3, 5, &data[..30], 1);
-        for cut in [0, 3, 5, 6, snap.len() / 2, snap.len() - 1] {
+        // Every strict prefix must be refused with a named error, never a
+        // panic — the codec is length-checked end to end.
+        for cut in 0..snap.len() {
             assert!(restore_rm(&mut dst, &snap[..cut]).is_err(), "cut at {cut} must fail");
         }
         let mut bad_magic = snap.clone();
@@ -384,6 +416,30 @@ mod tests {
         let mut trailing = snap.clone();
         trailing.push(0);
         assert!(restore_rm(&mut dst, &trailing).is_err());
+        // Section length header lies (bytes 6..10 on a single-window
+        // snapshot): too long reads past the end, too short leaves a
+        // truncated payload plus trailing bytes. Both must be refused.
+        let mut too_long = snap.clone();
+        too_long[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(restore_rm(&mut dst, &too_long).is_err());
+        let declared = u32::from_le_bytes(snap[6..10].try_into().unwrap());
+        let mut too_short = snap.clone();
+        too_short[6..10].copy_from_slice(&(declared - 1).to_le_bytes());
+        assert!(restore_rm(&mut dst, &too_short).is_err());
+        // Sanity: the untouched snapshot still restores after all refusals.
+        restore_rm(&mut dst, &snap).unwrap();
+    }
+
+    #[test]
+    fn lane_snapshot_cut_sweep_is_refused() {
+        let data = stream(32, 3, 6);
+        let src = rm(DetectorKind::Loda, 4, 5, &data[..30], 2);
+        let snap = snapshot_rm(&src).unwrap();
+        let mut dst = rm(DetectorKind::Loda, 4, 5, &data[..30], 2);
+        for cut in 0..snap.len() {
+            assert!(restore_rm(&mut dst, &snap[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        restore_rm(&mut dst, &snap).unwrap();
     }
 
     #[test]

@@ -274,3 +274,38 @@ fn interleaved_session_churn_has_no_leakage_and_shutdown_is_clean() {
     assert_eq!(report.sessions_served, 21);
     assert!(open_a.push(&open_ds.data[..16 * 3]).is_err(), "push after shutdown must fail");
 }
+
+#[test]
+fn dropped_session_closes_its_inbox_and_releases_the_partition() {
+    // Dropping a session without close() must (a) force-close its inbox so
+    // the worker retires the episode without draining the backlog, and
+    // (b) free the partition for the next client with zero state leakage.
+    // A small inbox plus a large undelivered backlog makes (a) observable:
+    // if the Drop impl merely hung up, the worker would still score the
+    // queue before freeing — here the immediate re-open succeeds quickly
+    // and its scores match the standalone detector bit-for-bit.
+    let mut cfg = cpu_cfg(ExecMode::Batched, 16);
+    cfg.server.inbox_flits = 2;
+    cfg.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 2,
+        stream: 0,
+        lanes: 0,
+    });
+    let server = FabricServer::start(cfg.clone()).unwrap();
+    let junk = tiny("junk", 64, 3, 77);
+    {
+        let mut s = server.open(SessionSpec::for_dataset(&junk, cfg.hyper.window)).unwrap();
+        s.push(&junk.data).unwrap();
+        // Never closed, never drained — dropped with scores in flight.
+    }
+    let ds = tiny("fresh", 96, 3, 78);
+    let mut s = server.open(SessionSpec::for_dataset(&ds, cfg.hyper.window)).unwrap();
+    s.push(&ds.data).unwrap();
+    let closed = s.close().unwrap();
+    let expect = standalone_scores(&cfg, DetectorKind::Loda, 2, 1, &ds);
+    assert_eq!(closed.scores, expect, "state leaked across the abandoned session");
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.sessions_served, 2, "abandoned episode still retires");
+}

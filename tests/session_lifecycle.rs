@@ -1,0 +1,231 @@
+//! Session lifecycle resilience end-to-end: a suspended session's ticket
+//! must survive a server teardown and resume bit-identically on a fresh
+//! server built from the same config; the durable score sink must replay
+//! its intact prefix after arbitrary tail corruption; and a quarantined
+//! partition must hand its session over to a healthy sibling from the
+//! last checkpoint instead of dropping the rest of the stream.
+
+use fsead::config::{FseadConfig, InjectSpec, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::data::Dataset;
+use fsead::detectors::{DetectorKind, DetectorSpec};
+use fsead::fabric::server::{FabricServer, SessionSpec};
+use fsead::fabric::{pblock_seed, score_sink, SessionTicket};
+use std::fs;
+use std::path::PathBuf;
+
+const CHUNK: usize = 16;
+const D: usize = 3;
+
+fn tiny(name: &'static str, n: usize, seed: u64) -> Dataset {
+    let p = DatasetProfile { name, n, d: D, outliers: n / 20, clusters: 2 };
+    generate_profile(&p, seed)
+}
+
+/// Small-hyper CPU config shared by the lifecycle suite.
+fn lifecycle_cfg() -> FseadConfig {
+    let mut cfg = FseadConfig::default();
+    cfg.use_fpga = false;
+    cfg.chunk = CHUNK;
+    cfg.hyper.window = 16;
+    cfg.hyper.bins = 8;
+    cfg.hyper.modulus = 32;
+    cfg.hyper.k = 4;
+    cfg
+}
+
+fn pblock(id: usize, kind: DetectorKind, r: usize) -> PblockCfg {
+    PblockCfg { id, rm: RmKind::Detector(kind), r, stream: 0, lanes: 0 }
+}
+
+/// Uninterrupted reference: the detector a fabric pblock builds (same
+/// seed, hyper-parameters and warm-up) streamed standalone.
+fn standalone(cfg: &FseadConfig, kind: DetectorKind, r: usize, pb: usize, ds: &Dataset) -> Vec<f32> {
+    let mut det = reference_det(cfg, kind, r, pb, ds);
+    det.run_stream(&ds.data)
+}
+
+fn reference_det(
+    cfg: &FseadConfig,
+    kind: DetectorKind,
+    r: usize,
+    pb: usize,
+    ds: &Dataset,
+) -> Box<dyn fsead::detectors::Detector> {
+    let mut spec = DetectorSpec::new(kind, D, r, pblock_seed(cfg.seed, pb));
+    spec.window = cfg.hyper.window;
+    spec.bins = cfg.hyper.bins;
+    spec.w = cfg.hyper.w;
+    spec.modulus = cfg.hyper.modulus;
+    spec.k = cfg.hyper.k;
+    spec.build(ds.warmup(cfg.hyper.window))
+}
+
+/// Fresh scratch directory under the system temp dir, unique per test so
+/// the suite can run in parallel.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fsead-lifecycle-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn suspended_ticket_resumes_on_a_fresh_server_bit_identically() {
+    // The "process boundary" round trip: server A suspends mid-stream and
+    // spills the ticket to disk, is torn down entirely, and a fresh server
+    // B built from the same config resumes from the spill file. The two
+    // half-streams stitched together must be bit-identical to one
+    // uninterrupted session — including a suspend point deliberately
+    // misaligned with the flit chunk so the staged tail rides the ticket.
+    let dir = scratch("resume");
+    let ds = tiny("resume", 160, 29);
+    let mut cfg = lifecycle_cfg();
+    cfg.pblocks.push(pblock(1, DetectorKind::Loda, 2));
+    cfg.server.spill_dir = Some(dir.to_string_lossy().into_owned());
+    let reference = standalone(&cfg, DetectorKind::Loda, 2, 1, &ds);
+
+    let server_a = FabricServer::start(cfg.clone()).unwrap();
+    let mut session =
+        server_a.open(SessionSpec::for_dataset(&ds, cfg.hyper.window).on_pblock(1)).unwrap();
+    // 84 samples = 5 full flits + a 4-sample staged tail.
+    session.push(&ds.data[..84 * D]).unwrap();
+    let (ticket, scores_a) = session.suspend().unwrap();
+    assert_eq!(ticket.seq, 5, "five whole flits were cut before the suspend");
+    assert_eq!(ticket.pushed, 84);
+    assert_eq!(ticket.staged.len(), 4 * D, "the sub-flit tail must ride the ticket");
+    assert_eq!(scores_a.len(), 80, "every queued flit is scored before the park");
+    assert_eq!(&scores_a[..], &reference[..80], "pre-suspend scores must match the reference");
+    let spill = SessionTicket::spill_path(&dir, ticket.id);
+    assert!(spill.exists(), "suspend must spill the ticket when spill_dir is set");
+    server_a.shutdown().unwrap();
+
+    // Fresh server, same config: resume from disk alone (the in-memory
+    // ticket is deliberately ignored), finish the stream.
+    let server_b = FabricServer::start(cfg.clone()).unwrap();
+    let mut resumed = server_b.resume_spilled(ticket.id).unwrap();
+    assert!(!spill.exists(), "the spill file is consumed by a successful resume");
+    resumed.push(&ds.data[84 * D..]).unwrap();
+    let closed = resumed.close().unwrap();
+    assert!(!closed.padded_tail, "160 samples = 10 whole flits");
+    assert_eq!(closed.samples, 160, "the resumed cursor keeps counting from the ticket");
+    assert_eq!(closed.report.samples, 160);
+
+    let mut stitched = scores_a;
+    stitched.extend_from_slice(&closed.scores);
+    assert_eq!(stitched, reference, "suspend/teardown/resume must be bit-transparent");
+    server_b.shutdown().unwrap();
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn score_sink_replays_after_garbage_and_torn_tail() {
+    // A sink-backed session's scores must be recoverable from the file
+    // alone: a clean scan replays them bit-identically, appended garbage is
+    // ignored and truncated away by recovery, and tearing the last frame
+    // (a mid-write crash) costs exactly that frame — never the prefix.
+    let dir = scratch("sink");
+    let sink = dir.join("scores.fsnk");
+    let ds = tiny("sink", 96, 59);
+    let mut cfg = lifecycle_cfg();
+    cfg.pblocks.push(pblock(1, DetectorKind::Loda, 2));
+    cfg.server.sink_path = Some(sink.to_string_lossy().into_owned());
+    cfg.server.sink_fsync_records = 2;
+
+    let server = FabricServer::start(cfg.clone()).unwrap();
+    let mut session =
+        server.open(SessionSpec::for_dataset(&ds, cfg.hyper.window).on_pblock(1)).unwrap();
+    session.push(&ds.data).unwrap();
+    let closed = session.close().unwrap();
+    assert_eq!(closed.scores.len(), 96);
+    server.shutdown().unwrap();
+
+    // Clean file: every frame parses, the scan consumes the whole file and
+    // the replayed stream is bit-identical to what the client saw.
+    let (records, clean_len) = score_sink::scan(&sink).unwrap();
+    assert_eq!(clean_len, fs::metadata(&sink).unwrap().len());
+    assert!(records.len() >= 6, "at least one frame per data flit");
+    assert!(records.windows(2).all(|w| w[0].seq < w[1].seq), "frames land in flit order");
+    let session_id = records[0].session;
+    assert!(records.iter().all(|r| r.session == session_id));
+    let replay: Vec<f32> = records.iter().flat_map(|r| r.scores.iter().copied()).collect();
+    assert_eq!(replay, closed.scores, "sink replay must be bit-identical to the live stream");
+
+    // Garbage appended after the last frame (a crashed writer's junk): the
+    // scan stops at the torn length word, recovery truncates it away.
+    let mut bytes = fs::read(&sink).unwrap();
+    bytes.extend_from_slice(&[0xEE; 11]);
+    fs::write(&sink, &bytes).unwrap();
+    let recovered = score_sink::recover(&sink).unwrap();
+    assert_eq!(recovered, records, "garbage tail must not cost any intact frame");
+    assert_eq!(fs::metadata(&sink).unwrap().len(), clean_len, "recovery truncates the junk");
+
+    // Torn final frame (crash mid-write): recovery drops exactly that
+    // frame and the surviving prefix still replays bit-identically.
+    let file = fs::OpenOptions::new().write(true).open(&sink).unwrap();
+    file.set_len(clean_len - 5).unwrap();
+    drop(file);
+    let recovered = score_sink::recover(&sink).unwrap();
+    assert_eq!(recovered, records[..records.len() - 1], "only the torn frame is lost");
+    let (rescan, len) = score_sink::scan(&sink).unwrap();
+    assert_eq!(rescan, recovered, "the recovered file scans clean");
+    assert_eq!(len, fs::metadata(&sink).unwrap().len());
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn quarantined_session_migrates_to_a_sibling_from_its_checkpoint() {
+    // Two Loda partitions; max_reloads = 0 sends partition 1 straight to
+    // rung-2 quarantine when its window is poisoned at flit 5. With
+    // `evict_quarantined` on, the session is parked from the last periodic
+    // checkpoint (after flit 4: 64 samples) and re-dispatched to the
+    // healthy sibling instead of losing the rest of the stream:
+    //   flits 0..=4  scored live on partition 1 (healthy prefix),
+    //   flit 5       screened to zeros (the poisoned window),
+    //   flit 6       lost — it is the admission probe that trips the
+    //                eviction, and a quarantined decoupler drops what it
+    //                has already dequeued (the pre-eviction fabric dropped
+    //                this flit *and everything after it*),
+    //   flits 7..    scored on partition 2 by the checkpoint-restored RM.
+    let ds = tiny("evict", 160, 17);
+    let mut cfg = lifecycle_cfg();
+    cfg.pblocks.push(pblock(1, DetectorKind::Loda, 2));
+    cfg.pblocks.push(pblock(2, DetectorKind::Loda, 2));
+    cfg.faults.enabled = true;
+    cfg.faults.checkpoint_every_flits = 4;
+    cfg.faults.dark_flits = Some(1);
+    cfg.faults.reload_wait_ms = 2_000;
+    cfg.faults.max_reloads = 0;
+    cfg.faults.injections.push(InjectSpec {
+        id: "q".into(),
+        pblock: 1,
+        at_flit: 5,
+        kind: "state_corrupt".into(),
+        lane: 0,
+        ms: 0,
+    });
+    cfg.server.evict_quarantined = true;
+
+    let server = FabricServer::start(cfg.clone()).unwrap();
+    let mut session =
+        server.open(SessionSpec::for_dataset(&ds, cfg.hyper.window).on_pblock(1)).unwrap();
+    session.push(&ds.data).unwrap();
+    let closed = session.close().unwrap();
+    server.shutdown().unwrap();
+
+    // 160 samples minus the screened-then-lost quarantine window: flit 5
+    // scores as zeros, flit 6 emits nothing.
+    assert_eq!(closed.scores.len(), 144, "exactly one flit is lost to the eviction");
+    let full = standalone(&cfg, DetectorKind::Loda, 2, 1, &ds);
+    assert_eq!(&closed.scores[..80], &full[..80], "healthy prefix must match the reference");
+    assert!(closed.scores[80..96].iter().all(|&v| v == 0.0), "the poisoned flit is screened");
+    // The sibling resumes from the flit-4 checkpoint (64 samples): its
+    // suffix must be bit-identical to a fresh detector fed samples [0, 64)
+    // and then the post-quarantine stream — partition 1's own seed rides
+    // the parked session, so the sibling's layout is all that matters.
+    let mut det = reference_det(&cfg, DetectorKind::Loda, 2, 1, &ds);
+    det.run_stream(&ds.data[..64 * D]);
+    let tail = det.run_stream(&ds.data[112 * D..]);
+    assert_eq!(tail.len(), 48);
+    assert_eq!(&closed.scores[96..], &tail[..], "sibling must resume from the checkpoint");
+}
