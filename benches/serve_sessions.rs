@@ -2,23 +2,35 @@
 //! round-trip latency under concurrent client load, in both execution
 //! modes, on a 4-partition Loda topology (≥ 4 concurrent sessions).
 //!
-//! Emits `BENCH_serve.json` with sessions/sec, samples/sec and the p50/p99
-//! per-chunk latency for the perf trajectory; CI runs a smoke pass on every
-//! PR and uploads it with the other BENCH artifacts.
+//! The operator plane runs alongside each pass with a 10 Hz `/metrics`
+//! scraper, so the bench also measures scrape latency (and exercises the
+//! "a live scrape never perturbs the data plane" claim under load).
+//!
+//! Emits `BENCH_serve.json` with sessions/sec, samples/sec, the p50/p99
+//! per-chunk latency and the p50/p99 scrape latency for the perf
+//! trajectory; CI runs a smoke pass on every PR and uploads it with the
+//! other BENCH artifacts.
 
 #[allow(dead_code)] // only `cap` is used from the shared harness here
 mod bench_util;
 use bench_util::cap;
 
+use std::io::{Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
 use fsead::config::{FseadConfig, PblockCfg, RmKind};
 use fsead::detectors::DetectorKind;
 use fsead::ensemble::ExecMode;
 use fsead::exp::serve::{synthetic_load, LoadReport};
+use fsead::fabric::operator::OperatorServer;
 use fsead::fabric::server::FabricServer;
 
 const PARTITIONS: usize = 4;
 const CLIENTS: usize = 4;
 const CHUNK: usize = 64;
+const SCRAPE_PERIOD: Duration = Duration::from_millis(100);
 
 fn topology(exec: ExecMode) -> FseadConfig {
     let mut cfg =
@@ -35,53 +47,110 @@ fn topology(exec: ExecMode) -> FseadConfig {
     cfg
 }
 
+/// One GET /metrics round-trip; returns its wall-clock latency.
+fn scrape(addr: std::net::SocketAddr) -> Duration {
+    let t = Instant::now();
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect operator");
+    stream
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: bench\r\nContent-Length: 0\r\n\r\n")
+        .expect("write scrape");
+    let mut body = String::new();
+    stream.read_to_string(&mut body).expect("read scrape");
+    assert!(body.contains("fsead_server_sessions_served_total"), "malformed scrape");
+    t.elapsed()
+}
+
+fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
+    if sorted_secs.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_secs.len() - 1) as f64 * p).round() as usize;
+    sorted_secs[idx] * 1e3
+}
+
 fn main() {
     let rounds: usize =
         std::env::var("FSEAD_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(3);
     let samples = (cap() / CLIENTS).max(CHUNK * 4);
-    let mut rows: Vec<(&str, LoadReport)> = Vec::new();
+    let mut rows: Vec<(&str, LoadReport, Vec<f64>)> = Vec::new();
     for mode in ExecMode::ALL {
-        let server = FabricServer::start(topology(mode)).expect("server start");
+        let server = Arc::new(FabricServer::start(topology(mode)).expect("server start"));
+        let operator = OperatorServer::start("127.0.0.1:0", None, Arc::clone(&server))
+            .expect("operator start");
+        let addr = operator.addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let scraper = std::thread::spawn(move || {
+            let mut latencies: Vec<f64> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                latencies.push(scrape(addr).as_secs_f64());
+                std::thread::sleep(SCRAPE_PERIOD);
+            }
+            latencies
+        });
         let report =
             synthetic_load(&server, CLIENTS, rounds, samples).expect("synthetic load");
-        server.shutdown().expect("shutdown");
+        stop.store(true, Ordering::Relaxed);
+        let mut scrape_secs = scraper.join().expect("scraper thread");
+        scrape_secs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        operator.stop();
+        Arc::try_unwrap(server)
+            .ok()
+            .expect("operator stopped, server sole-owned")
+            .shutdown()
+            .expect("shutdown");
         println!(
             "serve_sessions/{}  {} sessions in {:.3} s — {:.2} sessions/s, {:.0} samples/s, \
-             chunk p50 {:.3} ms / p99 {:.3} ms",
+             chunk p50 {:.3} ms / p99 {:.3} ms, scrape p50 {:.3} ms / p99 {:.3} ms ({} scrapes)",
             mode.as_str(),
             report.sessions,
             report.wall_secs,
             report.sessions_per_sec,
             report.samples_per_sec,
             report.chunk_latency_p50_ms,
-            report.chunk_latency_p99_ms
+            report.chunk_latency_p99_ms,
+            percentile_ms(&scrape_secs, 0.50),
+            percentile_ms(&scrape_secs, 0.99),
+            scrape_secs.len()
         );
-        rows.push((mode.as_str(), report));
+        rows.push((mode.as_str(), report, scrape_secs));
     }
 
     let mut json = String::from("{\n  \"bench\": \"serve_sessions\",\n");
     json.push_str(&format!(
         "  \"partitions\": {PARTITIONS},\n  \"clients\": {CLIENTS},\n  \"rounds\": {rounds},\n  \
-         \"samples_per_session\": {samples},\n  \"chunk\": {CHUNK},\n  \"rows\": [\n"
+         \"samples_per_session\": {samples},\n  \"chunk\": {CHUNK},\n  \
+         \"scrape_hz\": {:.0},\n  \"rows\": [\n",
+        1.0 / SCRAPE_PERIOD.as_secs_f64()
     ));
-    for (i, (mode, r)) in rows.iter().enumerate() {
-        // null percentiles when nothing was measured (async drain mode) —
-        // never a fabricated 0.0.
+    for (i, (mode, r, scrape_secs)) in rows.iter().enumerate() {
+        // null percentiles when nothing was measured (async drain mode, or
+        // a pass too short for a single scrape) — never a fabricated 0.0.
         let (p50, p99) = if r.latency_samples > 0 {
             (format!("{:.4}", r.chunk_latency_p50_ms), format!("{:.4}", r.chunk_latency_p99_ms))
         } else {
             ("null".into(), "null".into())
         };
+        let (s50, s99) = if scrape_secs.is_empty() {
+            ("null".into(), "null".into())
+        } else {
+            (
+                format!("{:.4}", percentile_ms(scrape_secs, 0.50)),
+                format!("{:.4}", percentile_ms(scrape_secs, 0.99)),
+            )
+        };
         json.push_str(&format!(
             "    {{\"mode\": \"{mode}\", \"sessions\": {}, \"wall_secs\": {:.6}, \
              \"sessions_per_sec\": {:.3}, \"samples_per_sec\": {:.1}, \
              \"chunk_latency_p50_ms\": {p50}, \"chunk_latency_p99_ms\": {p99}, \
-             \"latency_samples\": {}}}{}\n",
+             \"latency_samples\": {}, \"scrape_latency_p50_ms\": {s50}, \
+             \"scrape_latency_p99_ms\": {s99}, \"scrape_samples\": {}}}{}\n",
             r.sessions,
             r.wall_secs,
             r.sessions_per_sec,
             r.samples_per_sec,
             r.latency_samples,
+            scrape_secs.len(),
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }

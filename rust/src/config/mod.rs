@@ -2,6 +2,16 @@
 //! (which RM occupies each pblock, which stream feeds it, how combos
 //! aggregate), detector hyper-parameters and the dataset. Presets reproduce
 //! the paper's Figure 7 composition examples.
+//!
+//! # Knob-naming convention
+//!
+//! Quantities carry their unit as a suffix so a config file reads without
+//! the reference open: durations are `*_ms` (`open_timeout_ms`,
+//! `stall_timeout_ms`), flit-cadenced counters are `*_flits`
+//! (`idle_evict_flits`, `cooldown_flits`, `checkpoint_every_flits`),
+//! per-volume rates name the volume (`rate_per_kflit`), and record counts
+//! are `*_records`. Unsuffixed numbers are unitless (slots, sizes, ids).
+//! New sections — `[fabric.operator]` included — follow the same rule.
 
 pub mod toml;
 
@@ -337,6 +347,27 @@ impl Default for ServerCfg {
     }
 }
 
+/// Operator-plane configuration (`[fabric.operator]`): the live
+/// `/metrics` + run-control HTTP listener served next to `fsead serve`
+/// (see [`crate::fabric::operator`]). Disabled by default — with the plane
+/// off the server is bit-transparent.
+#[derive(Clone, Debug)]
+pub struct OperatorCfg {
+    /// Start the operator listener alongside the fabric server.
+    pub enabled: bool,
+    /// Listen address, e.g. `127.0.0.1:9091` (port 0 picks a free port).
+    pub addr: String,
+    /// Optional bearer token; when set, every request must carry
+    /// `Authorization: Bearer <token>`.
+    pub auth_token: Option<String>,
+}
+
+impl Default for OperatorCfg {
+    fn default() -> Self {
+        OperatorCfg { enabled: false, addr: "127.0.0.1:9091".into(), auth_token: None }
+    }
+}
+
 /// Detector hyper-parameters (paper Table 4).
 #[derive(Clone, Copy, Debug)]
 pub struct DetectorHyper {
@@ -427,6 +458,8 @@ pub struct FseadConfig {
     pub dfx: DfxCfg,
     /// Streaming-session server settings (`[fabric.server]`).
     pub server: ServerCfg,
+    /// Operator plane: `/metrics` + run-control API (`[fabric.operator]`).
+    pub operator: OperatorCfg,
     /// Fault injection + supervised recovery (`[fabric.faults]`).
     pub faults: FaultsCfg,
     /// Ingress policy for non-finite sample values (`[fabric] non_finite`).
@@ -448,6 +481,7 @@ impl Default for FseadConfig {
             combos: vec![],
             dfx: DfxCfg::default(),
             server: ServerCfg::default(),
+            operator: OperatorCfg::default(),
             faults: FaultsCfg::default(),
             non_finite: NonFinite::Error,
         }
@@ -575,6 +609,28 @@ impl FseadConfig {
         }
         if let Some(v) = doc.get_bool("fabric.server", "evict_quarantined") {
             cfg.server.evict_quarantined = v;
+        }
+        // [fabric.operator] — the /metrics + run-control listener
+        if let Some(v) = doc.get_bool("fabric.operator", "enabled") {
+            cfg.operator.enabled = v;
+        }
+        if let Some(v) = doc.get_str("fabric.operator", "addr") {
+            if v.is_empty() {
+                bail!("[fabric.operator]: addr must not be empty (host:port, e.g. 127.0.0.1:9091)");
+            }
+            if !v.contains(':') {
+                bail!("[fabric.operator]: addr needs a port (host:port, got {v:?})");
+            }
+            cfg.operator.addr = v.to_string();
+        }
+        if let Some(v) = doc.get_str("fabric.operator", "auth_token") {
+            if v.is_empty() {
+                bail!(
+                    "[fabric.operator]: auth_token must not be empty — omit the key \
+                     to serve without auth"
+                );
+            }
+            cfg.operator.auth_token = Some(v.to_string());
         }
         // [fabric.dfx] — live reconfiguration
         if let Some(v) = doc.get_bool("fabric.dfx", "enabled") {
@@ -803,6 +859,12 @@ impl FseadConfig {
         }
         if self.server.sink_fsync_records == 0 {
             bail!("[fabric.server]: sink_fsync_records must be >= 1");
+        }
+        if self.operator.enabled && self.operator.addr.is_empty() {
+            bail!("[fabric.operator]: enabled without a listen addr (host:port)");
+        }
+        if self.operator.auth_token.as_deref() == Some("") {
+            bail!("[fabric.operator]: auth_token must not be empty — use None to serve without auth");
         }
         let lifecycle = self.server.sessions_per_partition > 1 || self.server.idle_evict_flits > 0;
         if lifecycle {
@@ -1366,6 +1428,29 @@ r = 2
         let mut bypass = cfg.clone();
         bypass.pblocks[0].rm = RmKind::Bypass;
         assert!(bypass.validate().is_err(), "bypass RMs have no state to multiplex");
+    }
+
+    #[test]
+    fn operator_section_parses_with_defaults() {
+        // Off by default — the plane must be bit-transparent when absent.
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert!(!cfg.operator.enabled);
+        assert_eq!(cfg.operator.addr, "127.0.0.1:9091");
+        assert_eq!(cfg.operator.auth_token, None);
+        let text = "[fabric.operator]\nenabled = true\naddr = \"0.0.0.0:9900\"\n\
+                    auth_token = \"s3cret\"\n";
+        let cfg = FseadConfig::from_str(text).unwrap();
+        assert!(cfg.operator.enabled);
+        assert_eq!(cfg.operator.addr, "0.0.0.0:9900");
+        assert_eq!(cfg.operator.auth_token.as_deref(), Some("s3cret"));
+        // Named refusals at load time.
+        assert!(FseadConfig::from_str("[fabric.operator]\naddr = \"\"\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.operator]\naddr = \"localhost\"\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.operator]\nauth_token = \"\"\n").is_err());
+        let mut bad = FseadConfig::default();
+        bad.operator.enabled = true;
+        bad.operator.addr.clear();
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -6,6 +6,48 @@
 //! each of the last `W` samples touched per row, so the oldest sample can be
 //! evicted exactly — identical semantics to the JAX model's scan state.
 
+/// Why [`SlidingCounts::load`] refused a snapshot. Typed so callers
+/// (checkpoint restore, ticket resume, the operator plane's protocol
+/// front ends) can map the refusal onto a status code instead of matching
+/// on a formatted string.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WindowLoadError {
+    /// The snapshot's counts/ring lengths do not match this window's
+    /// `rows × width × window` geometry.
+    ShapeMismatch {
+        rows: usize,
+        width: usize,
+        ring_len: usize,
+        snapshot_counts: usize,
+        snapshot_ring: usize,
+    },
+    /// The snapshot's ring cursor does not fit this window.
+    PosOutOfRange { pos: usize, window: usize },
+}
+
+impl std::fmt::Display for WindowLoadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WindowLoadError::ShapeMismatch {
+                rows,
+                width,
+                ring_len,
+                snapshot_counts,
+                snapshot_ring,
+            } => write!(
+                f,
+                "window shape mismatch: {rows}x{width} counts / ring {ring_len} vs snapshot \
+                 {snapshot_counts} / {snapshot_ring}"
+            ),
+            WindowLoadError::PosOutOfRange { pos, window } => {
+                write!(f, "ring position {pos} out of range (window {window})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WindowLoadError {}
+
 /// Windowed count tables: `rows × width` counts + `rows × window` ring.
 #[derive(Clone, Debug)]
 pub struct SlidingCounts {
@@ -179,19 +221,18 @@ impl SlidingCounts {
         pos: usize,
         n: u64,
         log2_denom: f32,
-    ) -> Result<(), String> {
+    ) -> Result<(), WindowLoadError> {
         if counts.len() != self.counts.len() || ring.len() != self.ring.len() {
-            return Err(format!(
-                "window shape mismatch: {}x{} counts / ring {} vs snapshot {} / {}",
-                self.rows,
-                self.width,
-                self.ring.len(),
-                counts.len(),
-                ring.len()
-            ));
+            return Err(WindowLoadError::ShapeMismatch {
+                rows: self.rows,
+                width: self.width,
+                ring_len: self.ring.len(),
+                snapshot_counts: counts.len(),
+                snapshot_ring: ring.len(),
+            });
         }
         if pos >= self.window {
-            return Err(format!("ring position {pos} out of range (window {})", self.window));
+            return Err(WindowLoadError::PosOutOfRange { pos, window: self.window });
         }
         self.counts.copy_from_slice(counts);
         self.ring.copy_from_slice(ring);

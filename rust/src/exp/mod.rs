@@ -200,7 +200,10 @@ USAGE:
                             and drive it with the synthetic-load driver
                             (--clients N --rounds N --samples N), or with a
                             stdin line protocol emitting JSONL (--stdin:
-                            open <d> [pblock] / push <v...> / close / quit)
+                            open <d> [pblock] / push <v...> / close / quit);
+                            --operator ADDR serves live telemetry + run
+                            control over HTTP (GET /metrics /state, POST
+                            /swap /drain /controller)
   fsead resources [--floorplan]   print the FPGA resource model
   fsead artifacts           list AOT artifacts and their status
   fsead version

@@ -22,7 +22,9 @@ use super::ExpCtx;
 use crate::config::{FseadConfig, PblockCfg, RmKind};
 use crate::data::synth::{generate_profile, DatasetProfile};
 use crate::detectors::DetectorKind;
-use crate::fabric::server::{FabricServer, Session, SessionSpec};
+use crate::fabric::operator::OperatorServer;
+use crate::fabric::server::{AdmitError, FabricServer, Session, SessionSpec};
+use std::sync::Arc;
 
 /// Aggregate numbers from one synthetic-load pass.
 #[derive(Clone, Copy, Debug, Default)]
@@ -166,7 +168,7 @@ fn default_topology(ctx: &ExpCtx) -> FseadConfig {
 
 /// `fsead serve [config.toml] [--clients N] [--rounds N] [--samples N]
 /// [--mux K] [--idle-evict N] [--open-timeout MS] [--shed] [--sink PATH]
-/// [--spill-dir DIR] [--stdin]`.
+/// [--spill-dir DIR] [--operator ADDR] [--stdin]`.
 pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
     let mut config: Option<&str> = None;
     let mut clients = 4usize;
@@ -179,6 +181,7 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
     let mut shed = false;
     let mut sink: Option<String> = None;
     let mut spill_dir: Option<String> = None;
+    let mut operator: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         let next = |i: &mut usize| -> Result<&str> {
@@ -197,6 +200,7 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
             "--shed" => shed = true,
             "--sink" => sink = Some(next(&mut i)?.to_string()),
             "--spill-dir" => spill_dir = Some(next(&mut i)?.to_string()),
+            "--operator" => operator = Some(next(&mut i)?.to_string()),
             "--stdin" => stdin_mode = true,
             other if config.is_none() && !other.starts_with('-') => config = Some(other),
             other => bail!("serve: unexpected argument {other:?}"),
@@ -240,11 +244,29 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
     if let Some(dir) = spill_dir {
         cfg.server.spill_dir = Some(dir);
     }
+    if let Some(addr) = operator {
+        cfg.operator.enabled = true;
+        cfg.operator.addr = addr;
+    }
     cfg.artifact_dir = ctx.artifact_dir.clone();
     // Lifecycle overrides go through the same named refusals as a config
     // file (multiplexing needs CPU detector RMs, and so on).
     cfg.validate()?;
-    let server = FabricServer::start(cfg)?;
+    // The operator plane shares the server through an Arc; with the plane
+    // disabled the Arc is sole-owned and the path below is unchanged.
+    let server = Arc::new(FabricServer::start(cfg)?);
+    let op_cfg = server.config().operator.clone();
+    let operator = if op_cfg.enabled {
+        let op =
+            OperatorServer::start(&op_cfg.addr, op_cfg.auth_token.clone(), Arc::clone(&server))?;
+        println!(
+            "operator plane on http://{} (GET /metrics /state, POST /swap /drain /controller)",
+            op.addr()
+        );
+        Some(op)
+    } else {
+        None
+    };
     println!(
         "serving {} partition(s) (exec={}, fpga={}, lanes={}, inbox={} flits)",
         server.partitions().len(),
@@ -274,8 +296,43 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
             println!("  per-chunk latency not measured (async drain mode)");
         }
     }
-    let summary = server.shutdown()?;
-    println!("server closed after {} session(s)", summary.sessions_served);
+    // Stop the operator first: joining its accept thread drops that Arc
+    // clone, so the unwrap below normally succeeds and shuts the fabric
+    // down with a collected summary. A straggling scrape connection can
+    // still hold a clone for a moment — then the last drop runs the same
+    // shutdown, we just report the served count from the live counter.
+    drop(operator);
+    let served = server.sessions_served();
+    match Arc::try_unwrap(server) {
+        Ok(server) => {
+            let summary = server.shutdown()?;
+            println!("server closed after {} session(s)", summary.sessions_served);
+        }
+        Err(server) => {
+            drop(server);
+            println!("server closed after {served} session(s)");
+        }
+    }
+    Ok(())
+}
+
+/// Surface an admission refusal as a distinct JSONL status line so a
+/// `--stdin` operator can react (retry, back off, resume elsewhere)
+/// instead of losing the whole driver. Non-admission errors still abort.
+fn admit_status(op: &str, err: anyhow::Error) -> Result<()> {
+    let Some(e) = err.downcast_ref::<AdmitError>() else {
+        return Err(err);
+    };
+    let code = match e {
+        AdmitError::Saturated => "saturated",
+        AdmitError::Timeout { .. } => "timeout",
+        AdmitError::QueueFull { .. } => "queue_full",
+        AdmitError::ShuttingDown => "shutting_down",
+    };
+    println!(
+        "{{\"event\":\"admit_error\",\"op\":\"{op}\",\"code\":\"{code}\",\"detail\":{}}}",
+        crate::fabric::operator::json_string(&e.to_string())
+    );
     Ok(())
 }
 
@@ -310,7 +367,13 @@ fn stdin_driver(server: &FabricServer) -> Result<()> {
                     words.next().map(|v| v.parse()).transpose().context("bad pblock id")?;
                 let mut spec = SessionSpec::new(d, vec![]);
                 spec.pblock = pblock;
-                let s = server.open(spec)?;
+                let s = match server.open(spec) {
+                    Ok(s) => s,
+                    Err(err) => {
+                        admit_status("open", err)?;
+                        continue;
+                    }
+                };
                 println!(
                     "{{\"event\":\"open\",\"session\":{},\"pblock\":{}}}",
                     s.id(),
@@ -339,7 +402,16 @@ fn stdin_driver(server: &FabricServer) -> Result<()> {
                 let ticket = tickets.remove(&id).with_context(|| {
                     format!("no suspended ticket for session {id} in this process")
                 })?;
-                let s = server.resume(ticket)?;
+                let s = match server.resume(ticket.clone()) {
+                    Ok(s) => s,
+                    Err(err) => {
+                        // Keep the ticket so the operator can retry once
+                        // the admission pressure clears.
+                        tickets.insert(id, ticket);
+                        admit_status("resume", err)?;
+                        continue;
+                    }
+                };
                 println!(
                     "{{\"event\":\"resume\",\"session\":{},\"pblock\":{}}}",
                     s.id(),

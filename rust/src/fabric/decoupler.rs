@@ -70,6 +70,13 @@ impl Decoupler {
         d
     }
 
+    /// Side-effect-free isolation probe — unlike [`Decoupler::is_decoupled`]
+    /// this never charges the drop counter, so telemetry (the operator
+    /// plane's snapshot) can poll it without perturbing drop accounting.
+    pub fn is_isolated(&self) -> bool {
+        self.decoupled.load(Ordering::SeqCst)
+    }
+
     /// Explicitly charge one dropped flit to the telemetry counter (used by
     /// the DFX gate's dark window, where the drop decision is made without
     /// probing `is_decoupled`).

@@ -163,6 +163,14 @@ pub struct FaultPort {
     /// detection events (non-finite screen, respawn retries) are recorded
     /// by code that only sees the control surface, not the pblock.
     pblock: AtomicU64,
+    /// Cumulative event count, never reset — [`FaultPort::take_events`]
+    /// drains the event list into run/session results, so the operator
+    /// plane reads these counters instead.
+    recorded: AtomicU64,
+    /// Cumulative rung-1 reloads ([`FaultEvent::action`] == `reloaded`).
+    reloads: AtomicU64,
+    /// Cumulative rung-2 quarantines (`action` == `quarantined`).
+    quarantines: AtomicU64,
 }
 
 impl Default for FaultPort {
@@ -172,6 +180,9 @@ impl Default for FaultPort {
             next_at: AtomicU64::new(NO_PENDING),
             events: Mutex::new(Vec::new()),
             pblock: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            reloads: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
         }
     }
 }
@@ -219,12 +230,38 @@ impl FaultPort {
 
     /// Record one fault-handling step.
     pub fn record(&self, ev: FaultEvent) {
+        self.recorded.fetch_add(1, Ordering::SeqCst);
+        match ev.action.as_str() {
+            "reloaded" => {
+                self.reloads.fetch_add(1, Ordering::SeqCst);
+            }
+            "quarantined" => {
+                self.quarantines.fetch_add(1, Ordering::SeqCst);
+            }
+            _ => {}
+        }
         self.events.lock().unwrap().push(ev);
     }
 
     /// Drain the recorded events (run teardown / session close).
     pub fn take_events(&self) -> Vec<FaultEvent> {
         std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    /// Fault-handling steps recorded since construction (cumulative,
+    /// survives [`FaultPort::take_events`] drains).
+    pub fn events_recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative rung-1 RM reloads performed on this partition.
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative rung-2 quarantines latched on this partition.
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines.load(Ordering::Relaxed)
     }
 
     /// Injections not yet fired.

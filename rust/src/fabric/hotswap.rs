@@ -141,7 +141,16 @@ pub struct SwapPort {
     /// Pblock-input flits seen this run (reset by `begin_run`).
     flits_seen: AtomicU64,
     events: Mutex<Vec<SwapEvent>>,
+    /// Cumulative copy of the most recent executed swaps, never drained —
+    /// [`SwapPort::take_events`] consumes `events` into run/session results,
+    /// so the operator plane reads this bounded ring instead.
+    history: Mutex<VecDeque<SwapEvent>>,
+    /// Swaps executed since construction (monotone across runs/episodes).
+    executed: AtomicU64,
 }
+
+/// Executed swaps retained for the operator plane's swap history.
+const SWAP_HISTORY_CAP: usize = 64;
 
 impl Default for SwapPort {
     fn default() -> Self {
@@ -150,6 +159,8 @@ impl Default for SwapPort {
             next_at: AtomicU64::new(u64::MAX),
             flits_seen: AtomicU64::new(0),
             events: Mutex::new(Vec::new()),
+            history: Mutex::new(VecDeque::new()),
+            executed: AtomicU64::new(0),
         }
     }
 }
@@ -198,12 +209,32 @@ impl SwapPort {
     }
 
     pub(crate) fn push_event(&self, ev: SwapEvent) {
+        let mut h = self.history.lock().unwrap();
+        if h.len() == SWAP_HISTORY_CAP {
+            h.pop_front();
+        }
+        h.push_back(ev.clone());
+        drop(h);
+        self.executed.fetch_add(1, Ordering::SeqCst);
         self.events.lock().unwrap().push(ev);
     }
 
     /// Drain the events recorded since the last call.
     pub fn take_events(&self) -> Vec<SwapEvent> {
         std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    /// Non-draining copy of the most recent executed swaps (newest last,
+    /// bounded) — the operator plane's swap history. Unlike
+    /// [`SwapPort::take_events`] this never steals events from the episode
+    /// bookkeeping that feeds `RunOutput`/`SessionClose`.
+    pub fn history(&self) -> Vec<SwapEvent> {
+        self.history.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Swaps executed on this partition since construction.
+    pub fn executed_count(&self) -> u64 {
+        self.executed.load(Ordering::Relaxed)
     }
 
     pub fn pending_count(&self) -> usize {
@@ -356,13 +387,74 @@ impl ScoreStats {
     }
 }
 
+/// Live-tunable adaptive-controller knobs for one partition. Seeded from
+/// `[fabric.dfx]` when the fabric or server is built, re-read by
+/// [`spawn_controller`] on every poll tick — so the operator plane's
+/// `POST /controller` can retune a running stream without restarting the
+/// controller thread. Adjustments persist across episode boundaries: the
+/// per-episode controller respawn only seeds knobs that were never set.
+pub struct DfxTuning {
+    /// Drift z-score that triggers a swap (f64 bits).
+    threshold: AtomicU64,
+    /// Minimum flits between swaps on one partition.
+    cooldown_flits: AtomicU64,
+    seeded: AtomicBool,
+}
+
+impl Default for DfxTuning {
+    fn default() -> Self {
+        let d = DfxCfg::default();
+        DfxTuning {
+            threshold: AtomicU64::new(d.threshold.to_bits()),
+            cooldown_flits: AtomicU64::new(d.cooldown_flits),
+            seeded: AtomicBool::new(false),
+        }
+    }
+}
+
+impl DfxTuning {
+    /// Seed both knobs from the configured `[fabric.dfx]` values.
+    pub fn seed(&self, cfg: &DfxCfg) {
+        self.set_threshold(cfg.threshold);
+        self.set_cooldown_flits(cfg.cooldown_flits);
+    }
+
+    /// Seed only if no one (construction site or operator) has set the
+    /// knobs yet — keeps direct [`spawn_controller`] users working while
+    /// never clobbering a live operator adjustment on episode respawn.
+    pub fn seed_if_unset(&self, cfg: &DfxCfg) {
+        if !self.seeded.load(Ordering::SeqCst) {
+            self.seed(cfg);
+        }
+    }
+
+    pub fn threshold(&self) -> f64 {
+        f64::from_bits(self.threshold.load(Ordering::Relaxed))
+    }
+
+    pub fn set_threshold(&self, z: f64) {
+        self.threshold.store(z.to_bits(), Ordering::SeqCst);
+        self.seeded.store(true, Ordering::SeqCst);
+    }
+
+    pub fn cooldown_flits(&self) -> u64 {
+        self.cooldown_flits.load(Ordering::Relaxed)
+    }
+
+    pub fn set_cooldown_flits(&self, flits: u64) {
+        self.cooldown_flits.store(flits, Ordering::SeqCst);
+        self.seeded.store(true, Ordering::SeqCst);
+    }
+}
+
 /// Shared control surface of one pblock: swap mailbox, score statistics,
-/// and (armed only under `[fabric.faults]`) the fault-injection port,
-/// health/heartbeat surface and checkpoint slot.
+/// live controller tuning, and (armed only under `[fabric.faults]`) the
+/// fault-injection port, health/heartbeat surface and checkpoint slot.
 #[derive(Default)]
 pub struct PblockCtl {
     pub swap: SwapPort,
     pub stats: ScoreStats,
+    pub tuning: DfxTuning,
     pub health: Health,
     pub faults: FaultPort,
     pub checkpoint: CheckpointSlot,
@@ -596,8 +688,9 @@ pub struct ControllerEnv {
 }
 
 /// Spawn the adaptive reconfiguration controller. It polls each target's
-/// [`ScoreStats`] and, when the drift z-score crosses `cfg.threshold`
-/// (baseline established, window full, cooldown elapsed), stages a swap to
+/// [`ScoreStats`] and, when the drift z-score crosses the partition's live
+/// [`DfxTuning::threshold`] (seeded from `cfg.threshold`; baseline
+/// established, window full, cooldown elapsed), stages a swap to
 /// the next pool detector with a different algorithm and arms it at the
 /// pblock's current flit. Returns the number of swaps issued when `stop`
 /// is raised.
@@ -620,6 +713,13 @@ pub fn spawn_controller(
             if env.cfg.pool.is_empty() {
                 return issued;
             }
+            // Thresholds live on the shared tuning surface so the operator
+            // plane can retune them mid-stream; targets whose knobs were
+            // never seeded (direct callers, unit tests) get the configured
+            // values here.
+            for t in &targets {
+                t.ctl.tuning.seed_if_unset(&env.cfg);
+            }
             while !stop.load(Ordering::SeqCst) {
                 for (ti, t) in targets.iter_mut().enumerate() {
                     if stage_failures[ti] >= MAX_STAGE_FAILURES {
@@ -629,12 +729,12 @@ pub fn spawn_controller(
                         continue;
                     }
                     let snap = t.ctl.stats.snapshot();
-                    if !snap.ready() || snap.drift_z() < env.cfg.threshold {
+                    if !snap.ready() || snap.drift_z() < t.ctl.tuning.threshold() {
                         continue;
                     }
                     let seen = t.ctl.swap.flits_seen();
                     if let Some(at) = last_swap[ti] {
-                        if seen.saturating_sub(at) < env.cfg.cooldown_flits {
+                        if seen.saturating_sub(at) < t.ctl.tuning.cooldown_flits() {
                             continue;
                         }
                     }

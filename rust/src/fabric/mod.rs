@@ -18,6 +18,7 @@ pub mod dma;
 pub mod faults;
 pub mod hotswap;
 pub mod message;
+pub mod operator;
 pub mod pblock;
 pub mod reconfig;
 pub mod score_sink;
@@ -31,8 +32,12 @@ pub mod topology;
 pub use faults::FaultEvent;
 pub use hotswap::SwapEvent;
 pub use message::{Flit, FlitSource, Port};
+pub use operator::{
+    FabricSnapshot, OperatorError, OperatorServer, PartitionTelemetry, ServerTelemetry,
+    SessionTelemetry,
+};
 pub use score_sink::ScoreSink;
-pub use server::{AdmitError, FabricServer, Session, SessionSpec};
+pub use server::{AdmitError, FabricServer, ServeError, Session, SessionSpec};
 pub use session_store::{SessionStore, SessionTicket};
 pub use switch::AxiSwitch;
 pub use topology::{pblock_seed, Fabric};

@@ -1,0 +1,1171 @@
+//! Operator plane: live `/metrics` + run-control API over a running
+//! [`FabricServer`].
+//!
+//! `fsead serve --operator <addr>` (or `[fabric.operator]` in the config)
+//! starts a small HTTP/1.1 listener — hand-rolled over `std::net`, like
+//! every other dependency-free subsystem in this crate — that exposes the
+//! server's unified telemetry surface and the run-control verbs:
+//!
+//! | Endpoint           | Method | Body (JSON)                                        | Returns |
+//! |--------------------|--------|----------------------------------------------------|---------|
+//! | `/metrics`         | GET    | —                                                  | Prometheus text exposition of the [`FabricSnapshot`] |
+//! | `/state`           | GET    | —                                                  | The full [`FabricSnapshot`] as JSON |
+//! | `/swap`            | POST   | `{pblock, at_flit, rm, r, dark_flits?}`            | `{model_ms, dark_flits}` — stages an in-flight RM swap through [`FabricServer::schedule_swap`] |
+//! | `/drain`           | POST   | `{pblock}`                                         | `{draining: [ids]}` — suspends every session on the partition via [`FabricServer::drain`] |
+//! | `/controller`      | POST   | `{pblock?, threshold?, cooldown_flits?}`           | `{ok: true}` — adjusts the adaptive controller live via [`FabricServer::tune_controller`] |
+//!
+//! # Telemetry surface
+//!
+//! Everything both exporters serialize comes from one typed view,
+//! [`FabricSnapshot`], assembled by [`FabricServer::snapshot`]: a
+//! server-wide section ([`ServerTelemetry`]), one row per partition
+//! ([`PartitionTelemetry`]) and one row per live or parked session
+//! ([`SessionTelemetry`]). [`super::topology::RunOutput::snapshot`] bridges
+//! the one-shot batch pass onto the same view, so a `Fabric::run` result
+//! renders with the identical exporters.
+//!
+//! Snapshot assembly never blocks a partition's service loop: admission
+//! state is read under one brief lock that workers only take at episode
+//! boundaries, and every per-partition counter is a lock-free atomic or a
+//! short mutex (swap history). With the plane disabled the server is
+//! bit-transparent; with it enabled, scores are unchanged — the plane only
+//! ever *reads* the data path, and the control verbs go through the same
+//! public [`FabricServer`] methods a host program would call.
+//!
+//! # Metric naming
+//!
+//! Metrics follow `fsead_<subsystem>_<name>{partition="<id>"}`:
+//! subsystem `server` for server-wide gauges/counters (no labels), and
+//! `partition`, `swap`, `controller`, `drift`, `decoupler`, `faults`,
+//! `health` for per-partition families labelled with the pblock id.
+//! Counters end in `_total`; durations are `_ms`; flit cadences are
+//! `_flits` — the same unit-suffix convention as the config surface.
+//!
+//! # Security
+//!
+//! The listener binds a plain socket (no TLS) and is meant for loopback /
+//! trusted-network scrapes. An optional bearer token (`[fabric.operator]
+//! auth_token`) gates every endpoint; with it set, requests must carry
+//! `Authorization: Bearer <token>`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::hotswap::SwapEvent;
+use super::server::FabricServer;
+use crate::config::RmKind;
+
+// ---------------------------------------------------------------------------
+// The unified telemetry view
+// ---------------------------------------------------------------------------
+
+/// One consistent view of a running fabric — the single source both the
+/// Prometheus text exporter and the JSON API serialize from. Built by
+/// [`FabricServer::snapshot`] (live server) or
+/// [`super::topology::RunOutput::snapshot`] (one-shot batch pass).
+#[derive(Clone, Debug, Default)]
+pub struct FabricSnapshot {
+    pub server: ServerTelemetry,
+    /// Per-partition rows, in pblock-id order.
+    pub partitions: Vec<PartitionTelemetry>,
+    /// Per-session rows (live and parked), in session-id order.
+    pub sessions: Vec<SessionTelemetry>,
+}
+
+/// Server-wide telemetry section.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerTelemetry {
+    /// Sessions fully served over the server's lifetime (counter).
+    pub sessions_served: u64,
+    /// Live sessions (doored, not parked).
+    pub sessions_active: usize,
+    /// Sessions parked in the session store.
+    pub sessions_parked: usize,
+    /// Clients queued in the admission wait loop.
+    pub admission_waiters: usize,
+    /// Finished-session outcomes not yet collected by their client.
+    pub retained_results: usize,
+    pub shutting_down: bool,
+    /// True when partitions run the multiplexing worker.
+    pub mux: bool,
+}
+
+/// One partition's telemetry row.
+#[derive(Clone, Debug)]
+pub struct PartitionTelemetry {
+    pub id: usize,
+    /// RM kind name (`loda`, `rshash`, `xstream`, `bypass`, `empty`).
+    pub rm: &'static str,
+    pub r: usize,
+    pub lanes: usize,
+    /// Session slots this partition offers (`sessions_per_partition`).
+    pub capacity: usize,
+    /// Sessions currently charged against those slots.
+    pub admitted: usize,
+    /// Pblock-input flits seen this episode (resets per episode, like the
+    /// swap gate's flit cursor it mirrors).
+    pub flits_seen: u64,
+    /// Swaps staged but not yet executed.
+    pub swaps_pending: usize,
+    /// Swaps executed over the partition's lifetime (counter).
+    pub swaps_executed: u64,
+    /// Most recent executed swaps (bounded ring, newest last).
+    pub swap_history: Vec<SwapEvent>,
+    /// Live adaptive-controller drift threshold (z-score).
+    pub controller_threshold: f64,
+    /// Live adaptive-controller cooldown, in flits.
+    pub controller_cooldown_flits: u64,
+    /// Drift statistics armed (an adaptive episode is running).
+    pub drift_armed: bool,
+    /// Baseline established and the recent window full.
+    pub drift_ready: bool,
+    /// |recent mean − baseline mean| in baseline standard deviations
+    /// (0 until `drift_ready`).
+    pub drift_z: f64,
+    pub decoupler_enabled: bool,
+    /// DECOUPLE currently asserted (dark window in progress).
+    pub isolated: bool,
+    /// Latched by the fault ladder's last rung.
+    pub quarantined: bool,
+    /// Flits dropped at the decoupler while isolated (counter).
+    pub dropped_flits: u64,
+    /// Fault events recorded over the partition's lifetime (counter).
+    pub fault_events: u64,
+    /// Rung-1 RM reloads (counter).
+    pub fault_reloads: u64,
+    /// Rung-2 quarantines (counter).
+    pub fault_quarantines: u64,
+    /// Service-loop heartbeat (stall detection cursor).
+    pub health_beat: u64,
+}
+
+/// One session's telemetry row.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionTelemetry {
+    pub id: u64,
+    /// `active`, `parked-idle`, `parked-suspend` or `parked-quarantine`.
+    pub state: &'static str,
+    /// Partition the session is placed on (`None` while parked).
+    pub partition: Option<usize>,
+    /// Flits queued behind the session's inbox.
+    pub queued_flits: usize,
+    /// Input flits processed before a park (0 for live sessions — their
+    /// cursor lives in the partition row).
+    pub flits: u64,
+    /// Valid samples scored before a park.
+    pub samples: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+/// Append one metric family: `# HELP` / `# TYPE` then each sample line.
+fn family(out: &mut String, name: &str, help: &str, typ: &str, samples: &[(String, String)]) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(typ);
+    out.push('\n');
+    for (labels, value) in samples {
+        out.push_str(name);
+        out.push_str(labels);
+        out.push(' ');
+        out.push_str(value);
+        out.push('\n');
+    }
+}
+
+fn num_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".into()
+    }
+}
+
+fn flag(v: bool) -> String {
+    if v { "1".into() } else { "0".into() }
+}
+
+impl FabricSnapshot {
+    /// Render the snapshot in the Prometheus text exposition format
+    /// (`text/plain; version=0.0.4`). Metric names follow
+    /// `fsead_<subsystem>_<name>{partition="<id>"}` — see the module docs.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let s = &self.server;
+        let one = |v: String| vec![(String::new(), v)];
+        family(
+            &mut out,
+            "fsead_server_sessions_served_total",
+            "Sessions fully served over the server's lifetime.",
+            "counter",
+            &one(s.sessions_served.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_server_sessions_active",
+            "Live sessions (admitted, not parked).",
+            "gauge",
+            &one(s.sessions_active.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_server_sessions_parked",
+            "Sessions parked in the session store.",
+            "gauge",
+            &one(s.sessions_parked.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_server_admission_waiters",
+            "Clients queued in the admission wait loop.",
+            "gauge",
+            &one(s.admission_waiters.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_server_retained_results",
+            "Finished-session outcomes not yet collected by their client.",
+            "gauge",
+            &one(s.retained_results.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_server_shutting_down",
+            "1 while the server is shutting down.",
+            "gauge",
+            &one(flag(s.shutting_down)),
+        );
+        family(
+            &mut out,
+            "fsead_server_multiplexing",
+            "1 when partitions run the multiplexing worker.",
+            "gauge",
+            &one(flag(s.mux)),
+        );
+        // Per-partition families, labelled with the pblock id.
+        let rows = |f: &dyn Fn(&PartitionTelemetry) -> String| -> Vec<(String, String)> {
+            self.partitions
+                .iter()
+                .map(|p| (format!("{{partition=\"{}\"}}", p.id), f(p)))
+                .collect()
+        };
+        family(
+            &mut out,
+            "fsead_partition_sessions_admitted",
+            "Sessions charged against the partition's slots.",
+            "gauge",
+            &rows(&|p| p.admitted.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_partition_session_capacity",
+            "Session slots the partition offers.",
+            "gauge",
+            &rows(&|p| p.capacity.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_partition_flits_seen",
+            "Pblock-input flits seen this episode.",
+            "gauge",
+            &rows(&|p| p.flits_seen.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_swap_pending",
+            "RM swaps staged but not yet executed.",
+            "gauge",
+            &rows(&|p| p.swaps_pending.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_swap_executed_total",
+            "RM swaps executed over the partition's lifetime.",
+            "counter",
+            &rows(&|p| p.swaps_executed.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_controller_threshold",
+            "Live adaptive-controller drift threshold (z-score).",
+            "gauge",
+            &rows(&|p| num_f(p.controller_threshold)),
+        );
+        family(
+            &mut out,
+            "fsead_controller_cooldown_flits",
+            "Live adaptive-controller cooldown between swaps, in flits.",
+            "gauge",
+            &rows(&|p| p.controller_cooldown_flits.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_drift_armed",
+            "1 while drift statistics are armed (adaptive episode running).",
+            "gauge",
+            &rows(&|p| flag(p.drift_armed)),
+        );
+        family(
+            &mut out,
+            "fsead_drift_ready",
+            "1 once the drift baseline is established and the window full.",
+            "gauge",
+            &rows(&|p| flag(p.drift_ready)),
+        );
+        family(
+            &mut out,
+            "fsead_drift_z",
+            "Score drift in baseline standard deviations.",
+            "gauge",
+            &rows(&|p| num_f(p.drift_z)),
+        );
+        family(
+            &mut out,
+            "fsead_decoupler_enabled",
+            "1 when the partition's shell has decoupling IP enabled.",
+            "gauge",
+            &rows(&|p| flag(p.decoupler_enabled)),
+        );
+        family(
+            &mut out,
+            "fsead_decoupler_isolated",
+            "1 while DECOUPLE is asserted (dark window in progress).",
+            "gauge",
+            &rows(&|p| flag(p.isolated)),
+        );
+        family(
+            &mut out,
+            "fsead_decoupler_quarantined",
+            "1 while the fault ladder holds the partition quarantined.",
+            "gauge",
+            &rows(&|p| flag(p.quarantined)),
+        );
+        family(
+            &mut out,
+            "fsead_decoupler_dropped_flits_total",
+            "Flits dropped at the decoupler while isolated.",
+            "counter",
+            &rows(&|p| p.dropped_flits.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_faults_events_total",
+            "Fault events recorded over the partition's lifetime.",
+            "counter",
+            &rows(&|p| p.fault_events.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_faults_reloads_total",
+            "Rung-1 RM reloads performed by the fault supervisor.",
+            "counter",
+            &rows(&|p| p.fault_reloads.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_faults_quarantines_total",
+            "Rung-2 quarantines latched by the fault supervisor.",
+            "counter",
+            &rows(&|p| p.fault_quarantines.to_string()),
+        );
+        family(
+            &mut out,
+            "fsead_health_beat",
+            "Service-loop heartbeat (stall-detection cursor).",
+            "gauge",
+            &rows(&|p| p.health_beat.to_string()),
+        );
+        out
+    }
+
+    /// Render the snapshot as JSON (the `/state` body).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"server\":");
+        let s = &self.server;
+        out.push_str(&format!(
+            "{{\"sessions_served\":{},\"sessions_active\":{},\"sessions_parked\":{},\
+             \"admission_waiters\":{},\"retained_results\":{},\"shutting_down\":{},\
+             \"mux\":{}}}",
+            s.sessions_served,
+            s.sessions_active,
+            s.sessions_parked,
+            s.admission_waiters,
+            s.retained_results,
+            s.shutting_down,
+            s.mux
+        ));
+        out.push_str(",\"partitions\":[");
+        for (i, p) in self.partitions.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"id\":{},\"rm\":\"{}\",\"r\":{},\"lanes\":{},\"capacity\":{},\
+                 \"admitted\":{},\"flits_seen\":{},\"swaps_pending\":{},\
+                 \"swaps_executed\":{},\"controller_threshold\":{},\
+                 \"controller_cooldown_flits\":{},\"drift_armed\":{},\"drift_ready\":{},\
+                 \"drift_z\":{},\"decoupler_enabled\":{},\"isolated\":{},\
+                 \"quarantined\":{},\"dropped_flits\":{},\"fault_events\":{},\
+                 \"fault_reloads\":{},\"fault_quarantines\":{},\"health_beat\":{},\
+                 \"swap_history\":[",
+                p.id,
+                p.rm,
+                p.r,
+                p.lanes,
+                p.capacity,
+                p.admitted,
+                p.flits_seen,
+                p.swaps_pending,
+                p.swaps_executed,
+                num_f(p.controller_threshold),
+                p.controller_cooldown_flits,
+                p.drift_armed,
+                p.drift_ready,
+                num_f(p.drift_z),
+                p.decoupler_enabled,
+                p.isolated,
+                p.quarantined,
+                p.dropped_flits,
+                p.fault_events,
+                p.fault_reloads,
+                p.fault_quarantines,
+                p.health_beat,
+            ));
+            for (j, ev) in p.swap_history.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "{{\"pblock\":{},\"from\":{},\"to\":{},\"at_flit\":{},\
+                     \"dark_flits\":{},\"dropped\":{},\"bypassed\":{},\"model_ms\":{},\
+                     \"actual_ms\":{},\"dark_complete\":{}}}",
+                    ev.pblock,
+                    json_string(&ev.from),
+                    json_string(&ev.to),
+                    ev.at_flit,
+                    ev.dark_flits,
+                    ev.dropped,
+                    ev.bypassed,
+                    num_f(ev.model_ms),
+                    num_f(ev.actual_ms),
+                    ev.dark_complete,
+                ));
+            }
+            out.push_str("]}");
+        }
+        out.push_str("],\"sessions\":[");
+        for (i, s) in self.sessions.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let partition = match s.partition {
+                Some(p) => p.to_string(),
+                None => "null".into(),
+            };
+            out.push_str(&format!(
+                "{{\"id\":{},\"state\":\"{}\",\"partition\":{},\"queued_flits\":{},\
+                 \"flits\":{},\"samples\":{}}}",
+                s.id, s.state, partition, s.queued_flits, s.flits, s.samples
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// JSON-escape and quote a string.
+pub(crate) fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Operator errors
+// ---------------------------------------------------------------------------
+
+/// Typed operator-plane failures, each with an HTTP status mapping —
+/// the [`super::server::AdmitError`] pattern applied to the control plane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OperatorError {
+    /// Malformed request (bad JSON, missing field, bad value).
+    BadRequest(String),
+    /// Bearer-token auth configured and the request failed it.
+    Unauthorized,
+    /// Unknown path or partition.
+    NotFound(String),
+    /// Known path, wrong method.
+    MethodNotAllowed,
+    /// The fabric declined the action (e.g. swap on a mux partition).
+    Refused(String),
+    /// Request body over the size cap.
+    PayloadTooLarge,
+}
+
+impl OperatorError {
+    pub fn status(&self) -> (u16, &'static str) {
+        match self {
+            OperatorError::BadRequest(_) => (400, "Bad Request"),
+            OperatorError::Unauthorized => (401, "Unauthorized"),
+            OperatorError::NotFound(_) => (404, "Not Found"),
+            OperatorError::MethodNotAllowed => (405, "Method Not Allowed"),
+            OperatorError::Refused(_) => (409, "Conflict"),
+            OperatorError::PayloadTooLarge => (413, "Payload Too Large"),
+        }
+    }
+}
+
+impl std::fmt::Display for OperatorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OperatorError::BadRequest(m) => write!(f, "bad request: {m}"),
+            OperatorError::Unauthorized => write!(f, "unauthorized"),
+            OperatorError::NotFound(m) => write!(f, "not found: {m}"),
+            OperatorError::MethodNotAllowed => write!(f, "method not allowed"),
+            OperatorError::Refused(m) => write!(f, "refused: {m}"),
+            OperatorError::PayloadTooLarge => write!(f, "payload too large"),
+        }
+    }
+}
+
+impl std::error::Error for OperatorError {}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON body parser
+// ---------------------------------------------------------------------------
+
+/// A flat JSON value — all the operator verbs take flat objects.
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Null,
+}
+
+impl Json {
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self.b.get(self.i).ok_or("unterminated string")?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or("truncated \\u escape")?;
+                            self.i += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                                16,
+                            )
+                            .map_err(|_| "bad \\u escape")?;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(format!("bad escape '\\{}'", e as char)),
+                    }
+                }
+                c => {
+                    // Re-assemble UTF-8 sequences byte-for-byte.
+                    let start = self.i - 1;
+                    let len = match c {
+                        0x00..=0x7f => 1,
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    self.i = start + len;
+                    let chunk = self.b.get(start..start + len).ok_or("truncated UTF-8")?;
+                    out.push_str(std::str::from_utf8(chunk).map_err(|_| "bad UTF-8")?);
+                }
+            }
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or("unexpected end of body")? {
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            b'{' | b'[' => Err("nested objects/arrays are not accepted here".into()),
+            _ => {
+                let start = self.i;
+                while self.i < self.b.len()
+                    && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    self.i += 1;
+                }
+                std::str::from_utf8(&self.b[start..self.i])
+                    .ok()
+                    .and_then(|s| s.parse::<f64>().ok())
+                    .map(Json::Num)
+                    .ok_or_else(|| format!("bad number at byte {start}"))
+            }
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        self.ws();
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+}
+
+/// Parse a flat JSON object (`{"key": scalar, ...}`). An empty body parses
+/// as an empty object so optional-field verbs accept `curl -X POST` as-is.
+fn parse_body(body: &str) -> Result<BTreeMap<String, Json>, OperatorError> {
+    let mut map = BTreeMap::new();
+    if body.trim().is_empty() {
+        return Ok(map);
+    }
+    let mut p = JsonParser { b: body.as_bytes(), i: 0 };
+    p.eat(b'{').map_err(OperatorError::BadRequest)?;
+    if p.peek() == Some(b'}') {
+        p.i += 1;
+        return Ok(map);
+    }
+    loop {
+        let key = p.string().map_err(OperatorError::BadRequest)?;
+        p.eat(b':').map_err(OperatorError::BadRequest)?;
+        let val = p.value().map_err(OperatorError::BadRequest)?;
+        map.insert(key, val);
+        match p.peek() {
+            Some(b',') => {
+                p.i += 1;
+            }
+            Some(b'}') => {
+                p.i += 1;
+                return Ok(map);
+            }
+            _ => {
+                return Err(OperatorError::BadRequest(format!(
+                    "expected ',' or '}}' at byte {}",
+                    p.i
+                )))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP listener
+// ---------------------------------------------------------------------------
+
+/// Request/header size cap (8 KiB) — the operator verbs are tiny.
+const MAX_HEAD: usize = 8 * 1024;
+/// Body size cap (64 KiB).
+const MAX_BODY: usize = 64 * 1024;
+
+/// The operator plane's HTTP listener. One accept thread; each connection
+/// is served on its own short-lived thread (scrapes and control verbs are
+/// rare and tiny — simplicity over throughput, matching the crate's
+/// hand-rolled, dependency-free style).
+pub struct OperatorServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl OperatorServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9091`; port 0 picks a free port) and
+    /// start serving the operator endpoints over `fabric`.
+    pub fn start(
+        addr: &str,
+        auth_token: Option<String>,
+        fabric: Arc<FabricServer>,
+    ) -> Result<OperatorServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding the operator listener on {addr}"))?;
+        let local = listener.local_addr().context("resolving the operator listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("operator".into())
+            .spawn(move || loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stop2.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let fabric = Arc::clone(&fabric);
+                        let token = auth_token.clone();
+                        let _ = std::thread::Builder::new().name("operator-conn".into()).spawn(
+                            move || {
+                                let _ = serve_connection(stream, &fabric, token.as_deref());
+                            },
+                        );
+                    }
+                    Err(_) => {
+                        if stop2.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn operator accept thread");
+        Ok(OperatorServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. In-flight connection
+    /// threads finish their one response on their own.
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for OperatorServer {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+/// One parsed HTTP/1.1 request.
+struct Request {
+    method: String,
+    path: String,
+    /// Header names lowercased, values trimmed.
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+/// Read one HTTP/1.1 request head + body off `stream`.
+fn read_request(stream: &mut TcpStream) -> Result<Request, OperatorError> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return Err(OperatorError::PayloadTooLarge);
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| OperatorError::BadRequest(format!("reading request: {e}")))?;
+        if n == 0 {
+            return Err(OperatorError::BadRequest("connection closed mid-request".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let k = k.trim().to_ascii_lowercase();
+            let v = v.trim().to_string();
+            if k == "content-length" {
+                content_length = v
+                    .parse()
+                    .map_err(|_| OperatorError::BadRequest("bad Content-Length".into()))?;
+            }
+            headers.push((k, v));
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(OperatorError::PayloadTooLarge);
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| OperatorError::BadRequest(format!("reading body: {e}")))?;
+        if n == 0 {
+            return Err(OperatorError::BadRequest("connection closed mid-body".into()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body = String::from_utf8_lossy(&body).into_owned();
+    Ok(Request { method, path, headers, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+) {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    fabric: &FabricServer,
+    token: Option<&str>,
+) -> std::io::Result<()> {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(e) => {
+            let (status, reason) = e.status();
+            write_response(&mut stream, status, reason, "application/json", &error_json(&e));
+            return Ok(());
+        }
+    };
+    if let Some(expect) = token {
+        let expect = format!("Bearer {expect}");
+        let authed = req
+            .headers
+            .iter()
+            .any(|(k, v)| k == "authorization" && v == &expect);
+        if !authed {
+            let e = OperatorError::Unauthorized;
+            let (status, reason) = e.status();
+            let head = format!(
+                "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+                 WWW-Authenticate: Bearer\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+                error_json(&e).len()
+            );
+            let _ = stream.write_all(head.as_bytes());
+            let _ = stream.write_all(error_json(&e).as_bytes());
+            return Ok(());
+        }
+    }
+    match route(&req.method, &req.path, &req.body, fabric) {
+        Ok((content_type, body)) => write_response(&mut stream, 200, "OK", content_type, &body),
+        Err(e) => {
+            let (status, reason) = e.status();
+            write_response(&mut stream, status, reason, "application/json", &error_json(&e));
+        }
+    }
+    Ok(())
+}
+
+fn error_json(e: &OperatorError) -> String {
+    let (status, _) = e.status();
+    format!("{{\"error\":{},\"status\":{}}}", json_string(&e.to_string()), status)
+}
+
+/// Dispatch one request to the fabric. Returns `(content-type, body)`.
+fn route(
+    method: &str,
+    path: &str,
+    body: &str,
+    fabric: &FabricServer,
+) -> Result<(&'static str, String), OperatorError> {
+    let path = path.split('?').next().unwrap_or(path);
+    match (method, path) {
+        ("GET", "/metrics") => {
+            Ok(("text/plain; version=0.0.4", fabric.snapshot().to_prometheus()))
+        }
+        ("GET", "/state") => Ok(("application/json", fabric.snapshot().to_json())),
+        ("POST", "/swap") => {
+            let req = parse_body(body)?;
+            let pblock = field_usize(&req, "pblock")?;
+            let at_flit = field_u64(&req, "at_flit")?;
+            let rm = req
+                .get("rm")
+                .and_then(Json::as_str)
+                .ok_or_else(|| OperatorError::BadRequest("missing string field \"rm\"".into()))?;
+            let rm = RmKind::parse(rm)
+                .ok_or_else(|| OperatorError::BadRequest(format!("unknown RM kind \"{rm}\"")))?;
+            let r = field_usize(&req, "r")?;
+            let dark_flits = match req.get("dark_flits") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_u64().ok_or_else(|| {
+                    OperatorError::BadRequest("\"dark_flits\" must be a non-negative integer".into())
+                })?),
+            };
+            let (model_ms, dark) = fabric
+                .schedule_swap(pblock, at_flit, rm, r, dark_flits)
+                .map_err(refusal)?;
+            Ok((
+                "application/json",
+                format!("{{\"model_ms\":{},\"dark_flits\":{}}}", num_f(model_ms), dark),
+            ))
+        }
+        ("POST", "/drain") => {
+            let req = parse_body(body)?;
+            let pblock = field_usize(&req, "pblock")?;
+            let draining = fabric.drain(pblock).map_err(refusal)?;
+            let ids: Vec<String> = draining.iter().map(|id| id.to_string()).collect();
+            Ok(("application/json", format!("{{\"draining\":[{}]}}", ids.join(","))))
+        }
+        ("POST", "/controller") => {
+            let req = parse_body(body)?;
+            let pblock = match req.get("pblock") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_usize().ok_or_else(|| {
+                    OperatorError::BadRequest("\"pblock\" must be a non-negative integer".into())
+                })?),
+            };
+            let threshold = match req.get("threshold") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().ok_or_else(|| {
+                    OperatorError::BadRequest("\"threshold\" must be a number".into())
+                })?),
+            };
+            let cooldown = match req.get("cooldown_flits") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_u64().ok_or_else(|| {
+                    OperatorError::BadRequest(
+                        "\"cooldown_flits\" must be a non-negative integer".into(),
+                    )
+                })?),
+            };
+            fabric.tune_controller(pblock, threshold, cooldown).map_err(refusal)?;
+            Ok(("application/json", "{\"ok\":true}".into()))
+        }
+        ("GET", "/swap") | ("GET", "/drain") | ("GET", "/controller")
+        | ("POST", "/metrics") | ("POST", "/state") => Err(OperatorError::MethodNotAllowed),
+        _ => Err(OperatorError::NotFound(format!("{method} {path}"))),
+    }
+}
+
+fn field_usize(req: &BTreeMap<String, Json>, key: &str) -> Result<usize, OperatorError> {
+    req.get(key).and_then(Json::as_usize).ok_or_else(|| {
+        OperatorError::BadRequest(format!("missing non-negative integer field \"{key}\""))
+    })
+}
+
+fn field_u64(req: &BTreeMap<String, Json>, key: &str) -> Result<u64, OperatorError> {
+    req.get(key).and_then(Json::as_u64).ok_or_else(|| {
+        OperatorError::BadRequest(format!("missing non-negative integer field \"{key}\""))
+    })
+}
+
+/// Map a fabric refusal onto an HTTP status: unknown partitions are 404,
+/// everything else the fabric declines is 409.
+fn refusal(e: anyhow::Error) -> OperatorError {
+    let msg = format!("{e:#}");
+    if msg.contains("no served partition") {
+        OperatorError::NotFound(msg)
+    } else {
+        OperatorError::Refused(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_body_flat_object() {
+        let m = parse_body(r#"{"pblock": 2, "rm": "loda", "r": 4, "flag": true, "x": null}"#)
+            .unwrap();
+        assert_eq!(m.get("pblock").unwrap().as_usize(), Some(2));
+        assert_eq!(m.get("rm").unwrap().as_str(), Some("loda"));
+        assert_eq!(m.get("r").unwrap().as_u64(), Some(4));
+        assert_eq!(m.get("flag"), Some(&Json::Bool(true)));
+        assert_eq!(m.get("x"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parse_body_empty_and_errors() {
+        assert!(parse_body("").unwrap().is_empty());
+        assert!(parse_body("  {} ").unwrap().is_empty());
+        assert!(parse_body("[1]").is_err());
+        assert!(parse_body(r#"{"a": {"nested": 1}}"#).is_err());
+        assert!(parse_body(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn parse_body_string_escapes() {
+        let m = parse_body(r#"{"s": "a\"b\\c\ndA"}"#).unwrap();
+        assert_eq!(m.get("s").unwrap().as_str(), Some("a\"b\\c\ndA"));
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        assert_eq!(json_string("a\"b\\c\n"), r#""a\"b\\c\n""#);
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let snap = FabricSnapshot {
+            server: ServerTelemetry { sessions_served: 3, ..Default::default() },
+            partitions: vec![PartitionTelemetry {
+                id: 1,
+                rm: "loda",
+                r: 4,
+                lanes: 1,
+                capacity: 1,
+                admitted: 0,
+                flits_seen: 10,
+                swaps_pending: 0,
+                swaps_executed: 2,
+                swap_history: Vec::new(),
+                controller_threshold: 4.0,
+                controller_cooldown_flits: 256,
+                drift_armed: false,
+                drift_ready: false,
+                drift_z: 0.0,
+                decoupler_enabled: true,
+                isolated: false,
+                quarantined: false,
+                dropped_flits: 0,
+                fault_events: 0,
+                fault_reloads: 0,
+                fault_quarantines: 0,
+                health_beat: 0,
+            }],
+            sessions: Vec::new(),
+        };
+        let text = snap.to_prometheus();
+        assert!(text.contains("# TYPE fsead_server_sessions_served_total counter"));
+        assert!(text.contains("fsead_server_sessions_served_total 3"));
+        assert!(text.contains("fsead_swap_executed_total{partition=\"1\"} 2"));
+        assert!(text.contains("fsead_controller_threshold{partition=\"1\"} 4"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').expect("name value");
+            assert!(name.starts_with("fsead_"), "bad metric name: {name}");
+            assert!(value.parse::<f64>().is_ok(), "bad value: {value}");
+        }
+    }
+
+    #[test]
+    fn state_json_shape() {
+        let snap = FabricSnapshot::default();
+        let json = snap.to_json();
+        assert!(json.starts_with("{\"server\":"));
+        assert!(json.contains("\"partitions\":[]"));
+        assert!(json.contains("\"sessions\":[]"));
+        // Round-trip sanity through the module's own parser idiom: the
+        // server section is a flat object.
+        let inner = json
+            .strip_prefix("{\"server\":")
+            .and_then(|s| s.split_once('}'))
+            .map(|(head, _)| format!("{head}}}"))
+            .unwrap();
+        let m = parse_body(&inner).unwrap();
+        assert_eq!(m.get("sessions_served").unwrap().as_u64(), Some(0));
+    }
+}

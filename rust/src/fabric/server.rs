@@ -99,6 +99,7 @@ use super::dma::unpad_into;
 use super::faults::{FaultEvent, FaultInjector};
 use super::hotswap::{self, ControllerEnv, ControllerTarget, PblockCtl, SwapEvent};
 use super::message::{Flit, FlitSource, Port};
+use super::operator::{FabricSnapshot, PartitionTelemetry, ServerTelemetry, SessionTelemetry};
 use super::pblock::{LoadedRm, Pblock, PblockReport};
 use super::reconfig::DfxManager;
 use super::score_sink::ScoreSink;
@@ -230,6 +231,22 @@ impl InboxCtl {
     /// True once the client requested a suspend on this inbox.
     fn suspend_requested(&self) -> bool {
         self.inner.q.lock().unwrap().suspended
+    }
+
+    /// Server-side suspend request — the operator plane's drain path.
+    /// Identical semantics to [`InboxSender::request_suspend`]: queued
+    /// flits are still delivered, then the stream ends so the worker
+    /// parks the session instead of tearing it down.
+    pub(crate) fn request_suspend(&self) {
+        let mut q = self.inner.q.lock().unwrap();
+        q.suspended = true;
+        drop(q);
+        self.inner.ready.notify_all();
+    }
+
+    /// Flits currently queued behind this door (telemetry).
+    pub(crate) fn queued(&self) -> usize {
+        self.inner.q.lock().unwrap().buf.len()
     }
 
     /// Mint a fresh consumer half over the same shared queue — used when
@@ -369,6 +386,102 @@ impl std::fmt::Display for AdmitError {
 impl std::error::Error for AdmitError {}
 
 // ---------------------------------------------------------------------------
+// Service errors
+// ---------------------------------------------------------------------------
+
+/// Which lifecycle operation needed a window snapshot the detector does not
+/// expose (see [`ServeError::NoSnapshot`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapshotOp {
+    /// [`Session::suspend`] — checkpoint for a ticket.
+    Suspend,
+    /// Multiplexer park (idle eviction / suspend on a shared partition).
+    Park,
+    /// Multiplexer switching the resident RM between tenants.
+    Switch,
+}
+
+/// Typed session-service failures, the episode-side counterpart of
+/// [`AdmitError`]: everything a partition worker can report through
+/// [`Session::close`] / [`Session::suspend`] instead of a bare string.
+/// Downcast the `anyhow` error (`err.downcast_ref::<ServeError>()`) or match
+/// [`ServeError::code`] to map failures onto protocol status codes — the
+/// operator plane and the `serve --stdin` JSONL driver both do.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Building the session's fresh RM failed.
+    BuildRm { detail: String },
+    /// Resetting the freshly built RM failed.
+    ResetRm { detail: String },
+    /// Restoring a resumed session's checkpoint failed.
+    RestoreCheckpoint { detail: String },
+    /// Restoring a multiplexed tenant's swapped-out window state failed.
+    RestoreState { detail: String },
+    /// A scripted `[fabric.dfx.swap.N]` entry could not be staged.
+    ArmScriptedSwap { pblock: usize, detail: String },
+    /// `[fabric.faults]` injection planning failed.
+    PlanFaults { detail: String },
+    /// The detector exposes no window snapshot, so the session state
+    /// cannot be checkpointed / swapped for `op`.
+    NoSnapshot { op: SnapshotOp },
+    /// The service loop itself failed mid-stream.
+    Service { detail: String },
+}
+
+impl ServeError {
+    /// Stable machine-readable code (JSONL `code` field, HTTP mapping).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::BuildRm { .. } => "build_rm",
+            ServeError::ResetRm { .. } => "reset_rm",
+            ServeError::RestoreCheckpoint { .. } => "restore_checkpoint",
+            ServeError::RestoreState { .. } => "restore_state",
+            ServeError::ArmScriptedSwap { .. } => "arm_scripted_swap",
+            ServeError::PlanFaults { .. } => "plan_faults",
+            ServeError::NoSnapshot { .. } => "no_snapshot",
+            ServeError::Service { .. } => "service",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::BuildRm { detail } => write!(f, "building RM: {detail}"),
+            ServeError::ResetRm { detail } => write!(f, "resetting RM: {detail}"),
+            ServeError::RestoreCheckpoint { detail } => {
+                write!(f, "restoring the session checkpoint: {detail}")
+            }
+            ServeError::RestoreState { detail } => {
+                write!(f, "restoring session state: {detail}")
+            }
+            ServeError::ArmScriptedSwap { pblock, detail } => {
+                write!(f, "arming scripted swap for pblock {pblock}: {detail}")
+            }
+            ServeError::PlanFaults { detail } => {
+                write!(f, "planning fault injections: {detail}")
+            }
+            ServeError::NoSnapshot { op: SnapshotOp::Suspend } => {
+                write!(f, "suspending: detector exposes no window snapshot to checkpoint")
+            }
+            ServeError::NoSnapshot { op: SnapshotOp::Park } => {
+                write!(f, "parking: detector exposes no window snapshot to checkpoint")
+            }
+            ServeError::NoSnapshot { op: SnapshotOp::Switch } => {
+                write!(
+                    f,
+                    "multiplexing: detector exposes no window snapshot — cannot swap \
+                     session state"
+                )
+            }
+            ServeError::Service { detail } => write!(f, "{detail}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+// ---------------------------------------------------------------------------
 // Admission state
 // ---------------------------------------------------------------------------
 
@@ -388,7 +501,7 @@ struct SessionOutcome {
     adaptive_swaps: u64,
     discarded_swaps: u64,
     fault_events: Vec<FaultEvent>,
-    error: Option<String>,
+    error: Option<ServeError>,
 }
 
 #[derive(Default)]
@@ -404,6 +517,12 @@ struct AdmissionState {
     /// Inbox doors of every live or transparently-parked session, keyed
     /// by session id — shutdown force-closes them all.
     doors: BTreeMap<u64, InboxCtl>,
+    /// Partition each doored session was last dispatched to — the
+    /// operator plane's session→partition view and the target set for
+    /// [`FabricServer::drain`]. A session sitting in the store keeps its
+    /// last placement until a partition claims it again, so readers
+    /// cross-check [`SessionStore::contains`] before trusting an entry.
+    placed: BTreeMap<u64, usize>,
     results: BTreeMap<u64, SessionOutcome>,
     /// Sessions dropped by their client before the worker stored a result.
     abandoned: BTreeSet<u64>,
@@ -576,11 +695,13 @@ fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<S
                     // Not finished: no result, not counted as served.
                     if p.reason == ParkReason::Suspend {
                         st.doors.remove(&session);
+                        st.placed.remove(&session);
                     }
                     env.shared.store.park(p);
                 }
                 None => {
                     st.doors.remove(&session);
+                    st.placed.remove(&session);
                     if !st.abandoned.remove(&session) {
                         st.results.insert(session, outcome);
                         while st.results.len() > MAX_RETAINED_OUTCOMES {
@@ -613,6 +734,7 @@ fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<S
                         let door = p.inbox.as_ref().expect("live park").ctl();
                         *st.admitted.entry(tid).or_insert(0) += 1;
                         st.free.remove(&tid);
+                        st.placed.insert(session, tid);
                         st.active.insert(
                             tid,
                             ActiveSession {
@@ -646,6 +768,7 @@ fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<S
             };
             match claimed {
                 Some(p) => {
+                    st.placed.insert(p.id, env.id);
                     st.active.insert(
                         env.id,
                         ActiveSession {
@@ -692,7 +815,7 @@ fn serve_episode(
     tx: Sender<Flit>,
     resume: Option<ResumeState>,
 ) -> (SessionOutcome, Option<ParkedSession>) {
-    let failed = |error: String| {
+    let failed = |error: ServeError| {
         (
             SessionOutcome {
                 report: None,
@@ -727,14 +850,14 @@ fn serve_episode(
         env.lanes,
     ) {
         Ok(rm) => rm,
-        Err(e) => return failed(format!("building RM: {e:#}")),
+        Err(e) => return failed(ServeError::BuildRm { detail: format!("{e:#}") }),
     };
     if let Err(e) = rm.reset() {
-        return failed(format!("resetting RM: {e:#}"));
+        return failed(ServeError::ResetRm { detail: format!("{e:#}") });
     }
     if let Some(bytes) = &resumed_snapshot {
         if let Err(e) = restore_rm(&mut rm, bytes) {
-            return failed(format!("restoring the session checkpoint: {e:#}"));
+            return failed(ServeError::RestoreCheckpoint { detail: format!("{e:#}") });
         }
     }
     env.ctl.swap.begin_run();
@@ -767,7 +890,10 @@ fn serve_episode(
                 // silently break the advertised Fabric::run parity. The
                 // client sees the error from `close()`.
                 Err(e) => {
-                    return failed(format!("arming scripted swap for pblock {}: {e:#}", env.id))
+                    return failed(ServeError::ArmScriptedSwap {
+                        pblock: env.id,
+                        detail: format!("{e:#}"),
+                    })
                 }
             }
         }
@@ -824,7 +950,7 @@ fn serve_episode(
                     stop.store(true, std::sync::atomic::Ordering::SeqCst);
                     let _ = handle.join();
                 }
-                return failed(format!("planning fault injections: {e:#}"));
+                return failed(ServeError::PlanFaults { detail: format!("{e:#}") });
             }
         }
         if let Some(pool) = env.pool.as_ref() {
@@ -973,9 +1099,7 @@ fn serve_episode(
         } else if door.suspend_requested() {
             let snapshot = snapshot_rm(&rm);
             if snapshot.is_none() && matches!(env.rm, RmKind::Detector(_)) {
-                return failed(
-                    "suspending: detector exposes no window snapshot to checkpoint".into(),
-                );
+                return failed(ServeError::NoSnapshot { op: SnapshotOp::Suspend });
             }
             parked = Some(ParkedSession {
                 id: session,
@@ -1014,7 +1138,7 @@ fn serve_episode(
             adaptive_swaps,
             discarded_swaps: 0,
             fault_events,
-            error: Some(format!("{e:#}")),
+            error: Some(ServeError::Service { detail: format!("{e:#}") }),
         },
     };
     (outcome, parked)
@@ -1092,18 +1216,12 @@ fn mux_switch(
     loaded: &mut Option<u64>,
     slots: &mut [MuxSlot],
     idx: usize,
-) -> Result<(), String> {
+) -> Result<(), ServeError> {
     if let (Some(pid), Some(prm)) = (loaded.as_ref(), rm.as_ref()) {
         if let Some(prev) = slots.iter_mut().find(|s| s.session == *pid) {
             match snapshot_rm(prm) {
                 Some(bytes) => prev.state = Some(bytes),
-                None => {
-                    return Err(
-                        "multiplexing: detector exposes no window snapshot — cannot swap \
-                         session state"
-                            .into(),
-                    )
-                }
+                None => return Err(ServeError::NoSnapshot { op: SnapshotOp::Switch }),
             }
         }
     }
@@ -1125,14 +1243,14 @@ fn mux_switch(
         env.lanes,
     ) {
         Ok(b) => b,
-        Err(e) => return Err(format!("building RM: {e:#}")),
+        Err(e) => return Err(ServeError::BuildRm { detail: format!("{e:#}") }),
     };
     if let Err(e) = built.reset() {
-        return Err(format!("resetting RM: {e:#}"));
+        return Err(ServeError::ResetRm { detail: format!("{e:#}") });
     }
     if let Some(bytes) = slots[idx].state.take() {
         if let Err(e) = restore_rm(&mut built, &bytes) {
-            return Err(format!("restoring session state: {e:#}"));
+            return Err(ServeError::RestoreState { detail: format!("{e:#}") });
         }
     }
     *rm = Some(built);
@@ -1141,7 +1259,7 @@ fn mux_switch(
 }
 
 /// Retire a multiplexed session: store its outcome, give the slot back.
-fn mux_finish(env: &WorkerEnv, slot: MuxSlot, error: Option<String>) {
+fn mux_finish(env: &WorkerEnv, slot: MuxSlot, error: Option<ServeError>) {
     let MuxSlot { session, flits, samples, flits_out, busy_secs, scores, inbox, .. } = slot;
     drop(inbox);
     let outcome = SessionOutcome {
@@ -1159,6 +1277,7 @@ fn mux_finish(env: &WorkerEnv, slot: MuxSlot, error: Option<String>) {
     {
         let mut st = env.shared.state.lock().unwrap();
         st.doors.remove(&session);
+        st.placed.remove(&session);
         if !st.abandoned.remove(&session) {
             st.results.insert(session, outcome);
             while st.results.len() > MAX_RETAINED_OUTCOMES {
@@ -1209,6 +1328,7 @@ fn mux_park(env: &WorkerEnv, slot: MuxSlot, state: Option<Vec<u8>>, reason: Park
         env.shared.store.park(parked);
         if !transparent {
             st.doors.remove(&session);
+            st.placed.remove(&session);
         }
         let n = st.admitted.entry(env.id).or_insert(1);
         *n = n.saturating_sub(1);
@@ -1259,12 +1379,13 @@ fn mux_loop(env: WorkerEnv, jobs: Receiver<SessionWork>) {
                             && p.fits(env.rm, env.r, env.lanes)
                             && p.inbox.as_ref().unwrap().probe().stirring()
                     });
-                    if p.is_some() {
+                    if let Some(p) = p.as_ref() {
                         let n = st.admitted.entry(env.id).or_insert(0);
                         *n += 1;
                         if *n >= cap {
                             st.free.remove(&env.id);
                         }
+                        st.placed.insert(p.id, env.id);
                     }
                     p
                 }
@@ -1288,7 +1409,7 @@ fn mux_loop(env: WorkerEnv, jobs: Receiver<SessionWork>) {
         // One sweep: drain each slot's queued flits through the resident
         // RM; then decide whether the slot finishes, parks or stays.
         enum End {
-            Finish(Option<String>),
+            Finish(Option<ServeError>),
             Park(ParkReason),
         }
         let mut progress = false;
@@ -1327,7 +1448,9 @@ fn mux_loop(env: WorkerEnv, jobs: Receiver<SessionWork>) {
                         slots[idx].samples += n_valid;
                     }
                     Err(e) => {
-                        end = Some(End::Finish(Some(format!("{e:#}"))));
+                        end = Some(End::Finish(Some(ServeError::Service {
+                            detail: format!("{e:#}"),
+                        })));
                         break;
                     }
                 }
@@ -1377,10 +1500,7 @@ fn mux_loop(env: WorkerEnv, jobs: Receiver<SessionWork>) {
                         mux_finish(
                             &env,
                             slot,
-                            Some(
-                                "parking: detector exposes no window snapshot to checkpoint"
-                                    .into(),
-                            ),
+                            Some(ServeError::NoSnapshot { op: SnapshotOp::Park }),
                         );
                     } else {
                         mux_park(&env, slot, state, reason);
@@ -1515,6 +1635,9 @@ impl FabricServer {
         let mut workers = Vec::new();
         for p in &active {
             let ctl = Arc::new(PblockCtl::default());
+            // Seed the live-tuning cell from the config so the operator
+            // plane reads (and adjusts) the real thresholds from the start.
+            ctl.tuning.seed(&cfg.dfx);
             let decoupler = Arc::new(Decoupler::new());
             let (jobs_tx, jobs_rx) = std::sync::mpsc::channel::<SessionWork>();
             let scripted: Vec<ScriptedSwap> =
@@ -1747,6 +1870,7 @@ impl FabricServer {
             );
         }
         st.doors.insert(session, door.clone());
+        st.placed.insert(session, id);
         drop(st);
         let (score_tx, score_rx) = Port::link();
         let work = SessionWork {
@@ -1763,6 +1887,7 @@ impl FabricServer {
             let mut st = self.shared.state.lock().unwrap();
             st.active.remove(&id);
             st.doors.remove(&session);
+            st.placed.remove(&session);
             let n = st.admitted.entry(id).or_insert(1);
             *n = n.saturating_sub(1);
             bail!("partition {id}: service worker has exited");
@@ -1948,6 +2073,158 @@ impl FabricServer {
     /// Sessions fully served so far.
     pub fn sessions_served(&self) -> u64 {
         self.shared.state.lock().unwrap().served
+    }
+
+    /// One consistent, non-blocking telemetry view of the whole server —
+    /// the unified surface the operator plane's `/metrics` and `/state`
+    /// endpoints serialize from. Admission state is read under one brief
+    /// lock (the lock workers only take at episode boundaries, never
+    /// per flit); per-partition counters are lock-free atomics or short
+    /// mutexes — snapshotting never stalls a partition's service loop.
+    pub fn snapshot(&self) -> FabricSnapshot {
+        let capacity = self.cfg.server.sessions_per_partition.max(1);
+        let parked = self.shared.store.summaries();
+        let (server, admitted, mut sessions) = {
+            let st = self.shared.state.lock().unwrap();
+            let parked_ids: BTreeSet<u64> = parked.iter().map(|p| p.id).collect();
+            // Transparently parked sessions keep their door; they are
+            // reported from the store below, not double-counted here.
+            let sessions: Vec<SessionTelemetry> = st
+                .doors
+                .iter()
+                .filter(|(sid, _)| !parked_ids.contains(sid))
+                .map(|(&sid, door)| SessionTelemetry {
+                    id: sid,
+                    state: "active",
+                    partition: st.placed.get(&sid).copied(),
+                    queued_flits: door.queued(),
+                    flits: 0,
+                    samples: 0,
+                })
+                .collect();
+            let server = ServerTelemetry {
+                sessions_served: st.served,
+                sessions_active: sessions.len(),
+                sessions_parked: parked.len(),
+                admission_waiters: st.waiters,
+                retained_results: st.results.len(),
+                shutting_down: st.shutting_down,
+                mux: self.mux(),
+            };
+            (server, st.admitted.clone(), sessions)
+        };
+        for p in &parked {
+            sessions.push(SessionTelemetry {
+                id: p.id,
+                state: match p.reason {
+                    ParkReason::Idle => "parked-idle",
+                    ParkReason::Suspend => "parked-suspend",
+                    ParkReason::Quarantine => "parked-quarantine",
+                },
+                partition: None,
+                queued_flits: p.queued_flits,
+                flits: p.flits,
+                samples: p.samples,
+            });
+        }
+        sessions.sort_by_key(|s| s.id);
+        let partitions = self
+            .partitions
+            .iter()
+            .map(|(&id, p)| {
+                let drift = p.ctl.stats.snapshot();
+                let ready = drift.ready();
+                PartitionTelemetry {
+                    id,
+                    rm: p.rm.as_str(),
+                    r: p.r,
+                    lanes: p.lanes,
+                    capacity,
+                    admitted: admitted.get(&id).copied().unwrap_or(0),
+                    flits_seen: p.ctl.swap.flits_seen(),
+                    swaps_pending: p.ctl.swap.pending_count(),
+                    swaps_executed: p.ctl.swap.executed_count(),
+                    swap_history: p.ctl.swap.history(),
+                    controller_threshold: p.ctl.tuning.threshold(),
+                    controller_cooldown_flits: p.ctl.tuning.cooldown_flits(),
+                    drift_armed: p.ctl.stats.is_armed(),
+                    drift_ready: ready,
+                    drift_z: if ready { drift.drift_z() } else { 0.0 },
+                    decoupler_enabled: p.decoupler.is_enabled(),
+                    isolated: p.decoupler.is_isolated(),
+                    quarantined: p.decoupler.is_quarantined(),
+                    dropped_flits: p.decoupler.dropped(),
+                    fault_events: p.ctl.faults.events_recorded(),
+                    fault_reloads: p.ctl.faults.reloads(),
+                    fault_quarantines: p.ctl.faults.quarantines(),
+                    health_beat: p.ctl.health.beat(),
+                }
+            })
+            .collect();
+        FabricSnapshot { server, partitions, sessions }
+    }
+
+    /// Operator-plane drain: ask every live session placed on partition
+    /// `id` to suspend at its current drain point (the same machinery as
+    /// [`Session::suspend`], initiated server-side). Each session's
+    /// checkpoint parks into the session store; the client's handle
+    /// observes the drain on its next `push` (fails fast) and collects
+    /// the [`SessionTicket`] via [`Session::suspend`], which finds the
+    /// parked checkpoint. Returns the ids of the sessions asked to
+    /// suspend — empty when the partition was idle.
+    pub fn drain(&self, id: usize) -> Result<Vec<u64>> {
+        if !self.partitions.contains_key(&id) {
+            bail!("no served partition {id}");
+        }
+        let doors: Vec<(u64, InboxCtl)> = {
+            let st = self.shared.state.lock().unwrap();
+            st.placed
+                .iter()
+                .filter(|(sid, pid)| **pid == id && !self.shared.store.contains(**sid))
+                .filter_map(|(sid, _)| st.doors.get(sid).map(|d| (*sid, d.clone())))
+                .collect()
+        };
+        for (_, door) in &doors {
+            door.request_suspend();
+        }
+        Ok(doors.into_iter().map(|(sid, _)| sid).collect())
+    }
+
+    /// Adjust the adaptive controller's live thresholds — `POST
+    /// /controller` on the operator plane. `pblock = None` applies to
+    /// every partition. The controller reads the tuning cell on its next
+    /// poll tick; the values persist across session episodes (they are
+    /// partition state, not episode state).
+    pub fn tune_controller(
+        &self,
+        pblock: Option<usize>,
+        threshold: Option<f64>,
+        cooldown_flits: Option<u64>,
+    ) -> Result<()> {
+        if threshold.is_none() && cooldown_flits.is_none() {
+            bail!("controller tuning: nothing to set (give threshold and/or cooldown_flits)");
+        }
+        if let Some(t) = threshold {
+            if !t.is_finite() || t <= 0.0 {
+                bail!("controller tuning: threshold must be finite and > 0 (got {t})");
+            }
+        }
+        if let Some(id) = pblock {
+            if !self.partitions.contains_key(&id) {
+                bail!("no served partition {id}");
+            }
+        }
+        for (id, p) in &self.partitions {
+            if pblock.map_or(true, |t| t == *id) {
+                if let Some(t) = threshold {
+                    p.ctl.tuning.set_threshold(t);
+                }
+                if let Some(c) = cooldown_flits {
+                    p.ctl.tuning.set_cooldown_flits(c);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Stop admitting, force-close the inboxes of sessions still open, let
@@ -2187,7 +2464,9 @@ impl Session {
             .remove(&self.id)
             .context("session outcome missing — partition worker terminated abnormally")?;
         if let Some(err) = outcome.error {
-            bail!("partition {} service failed: {err}", self.pblock);
+            // Typed: `e.downcast_ref::<ServeError>()` recovers the variant.
+            return Err(anyhow::Error::new(err)
+                .context(format!("partition {} service failed", self.pblock)));
         }
         if !flushed {
             bail!("session was force-closed by the server before the TLAST flush");
@@ -2237,7 +2516,10 @@ impl Session {
                     self.finished = true;
                     match outcome.error {
                         Some(err) => {
-                            bail!("partition {} service failed: {err}", self.pblock)
+                            return Err(anyhow::Error::new(err).context(format!(
+                                "partition {} service failed",
+                                self.pblock
+                            )))
                         }
                         None => bail!("session ended before it could be suspended"),
                     }
@@ -2281,7 +2563,11 @@ impl Session {
             warmup: parked.warmup.as_ref().clone(),
             snapshot: parked.snapshot,
         };
-        self.shared.state.lock().unwrap().doors.remove(&self.id);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.doors.remove(&self.id);
+            st.placed.remove(&self.id);
+        }
         if let Some(dir) = self.shared.spill_dir.as_deref() {
             ticket.spill(dir).context("spilling the suspend ticket")?;
         }
@@ -2306,6 +2592,7 @@ impl Drop for Session {
             st.abandoned.insert(self.id);
         }
         st.doors.remove(&self.id);
+        st.placed.remove(&self.id);
     }
 }
 

@@ -133,6 +133,40 @@ impl SessionStore {
     pub fn clear(&self) {
         self.inner.lock().unwrap().clear();
     }
+
+    /// Telemetry view of every parked session, in session-id order — the
+    /// operator plane's `/state` reads this; nothing is claimed or mutated.
+    pub fn summaries(&self) -> Vec<ParkedSummary> {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .map(|p| ParkedSummary {
+                id: p.id,
+                reason: p.reason,
+                flits: p.flits,
+                samples: p.samples,
+                live: p.inbox.is_some(),
+                queued_flits: p.inbox.as_ref().map_or(0, |i| i.probe().queued),
+            })
+            .collect()
+    }
+}
+
+/// One parked session's telemetry row (see [`SessionStore::summaries`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ParkedSummary {
+    pub id: u64,
+    pub reason: ParkReason,
+    /// Input flits processed before the park.
+    pub flits: u64,
+    /// Valid samples scored before the park.
+    pub samples: u64,
+    /// True for a transparent park (live inbox retained — the session
+    /// re-attaches when its inbox stirs).
+    pub live: bool,
+    /// Flits queued behind a live parked session's inbox.
+    pub queued_flits: usize,
 }
 
 /// A suspended session serialized for transport: everything a fresh

@@ -177,7 +177,7 @@ fn read_window_into(r: &mut Reader<'_>, sc: &mut SlidingCounts) -> Result<()> {
     let log2_denom = r.get_f32()?;
     let counts = r.get_i32_vec(rows * width)?;
     let ring = r.get_i32_vec(rows * window)?;
-    sc.load(&counts, &ring, pos, n, log2_denom).map_err(|e| anyhow::anyhow!(e))
+    sc.load(&counts, &ring, pos, n, log2_denom).map_err(anyhow::Error::new)
 }
 
 // ---------------------------------------------------------------------------

@@ -49,7 +49,11 @@
 //! Every detection and every rung transition is recorded as a typed
 //! [`FaultEvent`] on the partition's fault port, drained into
 //! `RunOutput::fault_events` (and surfaced per-session by the fabric
-//! server), so a fault campaign is fully auditable after the run.
+//! server), so a fault campaign is fully auditable after the run. The
+//! port also keeps cumulative, non-draining counters (events recorded,
+//! rung-1 reloads, rung-2 quarantines) that the operator plane's
+//! [`crate::fabric::operator::FabricSnapshot`] reads live — session
+//! bookkeeping and the `/metrics` scrape never race over the same list.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

@@ -24,6 +24,7 @@ use super::decoupler::Decoupler;
 use super::dma::{DmaReport, InputDma, OutputDma};
 use super::faults::{FaultEvent, FaultInjector};
 use super::hotswap::{self, ControllerEnv, ControllerTarget, SwapEvent};
+use super::operator::{FabricSnapshot, PartitionTelemetry, ServerTelemetry};
 use super::supervisor::{self, SupervisorEnv, SupervisorTarget};
 use super::message::{Flit, Port};
 use super::pblock::{Pblock, PblockReport};
@@ -64,6 +65,67 @@ pub struct RunOutput {
     /// recorded during this pass, in (flit, pblock) order. Empty unless
     /// `[fabric.faults] enabled = true`.
     pub fault_events: Vec<FaultEvent>,
+}
+
+impl RunOutput {
+    /// Bridge the one-shot batch pass onto the operator plane's unified
+    /// telemetry view, so `Fabric::run` results render through the same
+    /// Prometheus / JSON exporters as a live `fsead serve`
+    /// ([`FabricSnapshot::to_prometheus`], [`FabricSnapshot::to_json`]).
+    ///
+    /// `cfg` supplies the static placement (RM kind, R, lanes) the pass
+    /// itself does not carry. Live-only readings — controller tuning,
+    /// drift statistics, decoupler state — report the configured or
+    /// resting values: the pass is over, nothing is isolated or pending.
+    pub fn snapshot(&self, cfg: &FseadConfig) -> FabricSnapshot {
+        let partitions = cfg
+            .pblocks
+            .iter()
+            .map(|p| {
+                let report = self.pblock_reports.get(&p.id).copied().unwrap_or_default();
+                let history: Vec<SwapEvent> =
+                    self.swap_events.iter().filter(|e| e.pblock == p.id).cloned().collect();
+                let faults = |action: &str| -> u64 {
+                    self.fault_events
+                        .iter()
+                        .filter(|e| e.pblock == p.id && e.action.as_str() == action)
+                        .count() as u64
+                };
+                let fault_events =
+                    self.fault_events.iter().filter(|e| e.pblock == p.id).count() as u64;
+                PartitionTelemetry {
+                    id: p.id,
+                    rm: p.rm.as_str(),
+                    r: p.r,
+                    lanes: cfg.lanes_for(p),
+                    capacity: 1,
+                    admitted: 0,
+                    flits_seen: report.flits_in,
+                    swaps_pending: 0,
+                    swaps_executed: history.len() as u64,
+                    dropped_flits: history.iter().map(|e| e.dropped).sum(),
+                    swap_history: history,
+                    controller_threshold: cfg.dfx.threshold,
+                    controller_cooldown_flits: cfg.dfx.cooldown_flits,
+                    drift_armed: false,
+                    drift_ready: false,
+                    drift_z: 0.0,
+                    decoupler_enabled: true,
+                    isolated: false,
+                    quarantined: false,
+                    fault_events,
+                    fault_reloads: faults("reloaded"),
+                    fault_quarantines: faults("quarantined"),
+                    health_beat: report.flits_in,
+                }
+            })
+            .collect();
+        FabricSnapshot {
+            server: ServerTelemetry::default(),
+            partitions,
+            sessions: Vec::new(),
+        }
+    }
 }
 
 /// The composable fabric.

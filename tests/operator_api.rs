@@ -1,0 +1,334 @@
+//! Operator plane end-to-end: the HTTP surface must report exactly what
+//! the typed [`FabricSnapshot`] holds, the control verbs must be
+//! bit-identical to calling the underlying [`FabricServer`] methods
+//! directly, and the plane — disabled or scraping at 10 Hz — must never
+//! change a session's scores.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::data::Dataset;
+use fsead::detectors::DetectorKind;
+use fsead::fabric::operator::OperatorServer;
+use fsead::fabric::server::{FabricServer, SessionSpec};
+
+fn tiny(name: &'static str, n: usize, d: usize, seed: u64) -> Dataset {
+    let p = DatasetProfile { name, n, d, outliers: n / 20, clusters: 2 };
+    generate_profile(&p, seed)
+}
+
+fn cpu_cfg(chunk: usize, kinds: &[DetectorKind]) -> FseadConfig {
+    let mut cfg = FseadConfig { use_fpga: false, chunk, ..FseadConfig::default() };
+    for (i, k) in kinds.iter().enumerate() {
+        cfg.pblocks.push(PblockCfg {
+            id: i + 1,
+            rm: RmKind::Detector(*k),
+            r: 2,
+            stream: 0,
+            lanes: 0,
+        });
+    }
+    cfg
+}
+
+/// Minimal HTTP/1.1 client: one request, one response, connection closed.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str, token: Option<&str>) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect operator");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let auth = match token {
+        Some(t) => format!("Authorization: Bearer {t}\r\n"),
+        None => String::new(),
+    };
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: operator\r\n{auth}Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).expect("read response");
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// Pull one sample's value out of a Prometheus text exposition.
+fn metric(text: &str, key: &str) -> f64 {
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        if let Some((name, value)) = line.rsplit_once(' ') {
+            if name == key {
+                return value.parse().unwrap_or_else(|_| panic!("bad value in {line:?}"));
+            }
+        }
+    }
+    panic!("metric {key:?} not found");
+}
+
+fn serve_dataset(server: &FabricServer, ds: &Dataset, pblock: usize, window: usize) -> Vec<f32> {
+    let mut session =
+        server.open(SessionSpec::for_dataset(ds, window).on_pblock(pblock)).unwrap();
+    session.push(&ds.data).unwrap();
+    session.close().unwrap().scores
+}
+
+#[test]
+fn metrics_equal_snapshot_and_state_serves_json() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda, DetectorKind::RsHash]);
+    let window = cfg.hyper.window;
+    let server = Arc::new(FabricServer::start(cfg).unwrap());
+    let op = OperatorServer::start("127.0.0.1:0", None, Arc::clone(&server)).unwrap();
+    let ds = tiny("operator", 120, 3, 7);
+    serve_dataset(&server, &ds, 1, window);
+    serve_dataset(&server, &ds, 2, window);
+
+    // The scrape must render exactly the values the typed snapshot holds
+    // (the fabric is idle, so back-to-back reads see the same counters).
+    let snap = server.snapshot();
+    let (status, text) = http(op.addr(), "GET", "/metrics", "", None);
+    assert_eq!(status, 200, "{text}");
+    assert_eq!(
+        metric(&text, "fsead_server_sessions_served_total"),
+        snap.server.sessions_served as f64
+    );
+    assert_eq!(metric(&text, "fsead_server_sessions_active"), 0.0);
+    assert_eq!(metric(&text, "fsead_server_sessions_parked"), 0.0);
+    for p in &snap.partitions {
+        let key = |name: &str| format!("{name}{{partition=\"{}\"}}", p.id);
+        assert_eq!(metric(&text, &key("fsead_partition_flits_seen")), p.flits_seen as f64);
+        assert_eq!(metric(&text, &key("fsead_swap_executed_total")), p.swaps_executed as f64);
+        assert_eq!(metric(&text, &key("fsead_partition_session_capacity")), p.capacity as f64);
+        assert_eq!(metric(&text, &key("fsead_faults_events_total")), p.fault_events as f64);
+        assert_eq!(
+            metric(&text, &key("fsead_controller_threshold")),
+            p.controller_threshold
+        );
+    }
+    // Prometheus text discipline: every non-comment line is `name value`
+    // with a parseable float, every family has HELP + TYPE.
+    for line in text.lines() {
+        if line.starts_with('#') {
+            assert!(
+                line.starts_with("# HELP fsead_") || line.starts_with("# TYPE fsead_"),
+                "stray comment: {line:?}"
+            );
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').expect("name value");
+        assert!(name.starts_with("fsead_"), "{line:?}");
+        assert!(value.parse::<f64>().is_ok(), "{line:?}");
+    }
+
+    // /state mirrors the same snapshot as JSON.
+    let (status, json) = http(op.addr(), "GET", "/state", "", None);
+    assert_eq!(status, 200);
+    assert!(json.contains(&format!("\"sessions_served\":{}", snap.server.sessions_served)));
+    assert!(json.contains("\"partitions\":[{\"id\":1,\"rm\":\"loda\""));
+    assert!(json.contains("\"id\":2,\"rm\":\"rshash\""));
+
+    op.stop();
+    Arc::try_unwrap(server).ok().expect("sole owner").shutdown().unwrap();
+}
+
+#[test]
+fn post_swap_is_bit_identical_to_schedule_swap() {
+    // Server A stages a mid-stream swap through the public method, server
+    // B through POST /swap with the same parameters: both sessions must
+    // score bit-identically, and the POST must report the same dark-window
+    // model numbers the method returned.
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let window = cfg.hyper.window;
+    let ds = tiny("swap", 150, 3, 11);
+
+    let a = FabricServer::start(cfg.clone()).unwrap();
+    let (model_ms, dark_flits) =
+        a.schedule_swap(1, 4, RmKind::Detector(DetectorKind::RsHash), 2, None).unwrap();
+    let scores_a = serve_dataset(&a, &ds, 1, window);
+    a.shutdown().unwrap();
+
+    let b = Arc::new(FabricServer::start(cfg).unwrap());
+    let op = OperatorServer::start("127.0.0.1:0", None, Arc::clone(&b)).unwrap();
+    let (status, body) = http(
+        op.addr(),
+        "POST",
+        "/swap",
+        r#"{"pblock": 1, "at_flit": 4, "rm": "rshash", "r": 2}"#,
+        None,
+    );
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body, format!("{{\"model_ms\":{model_ms},\"dark_flits\":{dark_flits}}}"));
+    let scores_b = serve_dataset(&b, &ds, 1, window);
+    assert_eq!(scores_a, scores_b, "POST /swap diverged from schedule_swap");
+
+    // The executed swap shows up on the scrape.
+    let (_, text) = http(op.addr(), "GET", "/metrics", "", None);
+    assert_eq!(metric(&text, "fsead_swap_executed_total{partition=\"1\"}"), 1.0);
+
+    op.stop();
+    Arc::try_unwrap(b).ok().expect("sole owner").shutdown().unwrap();
+}
+
+#[test]
+fn drain_parks_sessions_and_resume_round_trips() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let window = cfg.hyper.window;
+    let ds = tiny("drain", 120, 3, 23);
+
+    // Uninterrupted reference.
+    let reference = {
+        let server = FabricServer::start(cfg.clone()).unwrap();
+        let scores = serve_dataset(&server, &ds, 1, window);
+        server.shutdown().unwrap();
+        scores
+    };
+
+    let server = Arc::new(FabricServer::start(cfg).unwrap());
+    let op = OperatorServer::start("127.0.0.1:0", None, Arc::clone(&server)).unwrap();
+    let mut session =
+        server.open(SessionSpec::for_dataset(&ds, window).on_pblock(1)).unwrap();
+    let id = session.id();
+    let cut = 64 * ds.d;
+    session.push(&ds.data[..cut]).unwrap();
+
+    let (status, body) = http(op.addr(), "POST", "/drain", "{\"pblock\": 1}", None);
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body, format!("{{\"draining\":[{id}]}}"));
+
+    // The drained session parks; the client collects the ticket and
+    // resumes — the stream must pick up exactly where it left off.
+    let (ticket, mut scores) = session.suspend().unwrap();
+    assert_eq!(ticket.id, id);
+    let mut resumed = server.resume(ticket).unwrap();
+    resumed.push(&ds.data[cut..]).unwrap();
+    scores.extend(resumed.close().unwrap().scores);
+    assert_eq!(scores, reference, "drain + resume changed the scores");
+
+    // Draining an unknown partition is a 404, not a refusal.
+    let (status, _) = http(op.addr(), "POST", "/drain", "{\"pblock\": 9}", None);
+    assert_eq!(status, 404);
+
+    op.stop();
+    Arc::try_unwrap(server).ok().expect("sole owner").shutdown().unwrap();
+}
+
+#[test]
+fn scraping_at_10hz_leaves_scores_bit_identical() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let window = cfg.hyper.window;
+    let ds = tiny("scrape", 200, 3, 31);
+
+    // Plane disabled: the baseline.
+    let baseline = {
+        let server = FabricServer::start(cfg.clone()).unwrap();
+        let scores = serve_dataset(&server, &ds, 1, window);
+        server.shutdown().unwrap();
+        scores
+    };
+
+    // Plane enabled with a concurrent scraper hammering /metrics and
+    // /state while the session streams.
+    let server = Arc::new(FabricServer::start(cfg).unwrap());
+    let op = OperatorServer::start("127.0.0.1:0", None, Arc::clone(&server)).unwrap();
+    let addr = op.addr();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let scraper = std::thread::spawn(move || {
+        let mut scrapes = 0u64;
+        while !stop2.load(std::sync::atomic::Ordering::Relaxed) {
+            let (status, _) = http(addr, "GET", "/metrics", "", None);
+            assert_eq!(status, 200);
+            let (status, _) = http(addr, "GET", "/state", "", None);
+            assert_eq!(status, 200);
+            scrapes += 1;
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        scrapes
+    });
+    let scores = serve_dataset(&server, &ds, 1, window);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let scrapes = scraper.join().unwrap();
+    assert!(scrapes > 0, "scraper never ran");
+    assert_eq!(scores, baseline, "a live scrape changed session scores");
+
+    op.stop();
+    Arc::try_unwrap(server).ok().expect("sole owner").shutdown().unwrap();
+}
+
+#[test]
+fn auth_and_error_mapping() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let server = Arc::new(FabricServer::start(cfg).unwrap());
+    let op =
+        OperatorServer::start("127.0.0.1:0", Some("s3cret".into()), Arc::clone(&server)).unwrap();
+
+    // Bearer auth gates every endpoint.
+    let (status, _) = http(op.addr(), "GET", "/metrics", "", None);
+    assert_eq!(status, 401);
+    let (status, _) = http(op.addr(), "GET", "/metrics", "", Some("wrong"));
+    assert_eq!(status, 401);
+    let (status, _) = http(op.addr(), "GET", "/metrics", "", Some("s3cret"));
+    assert_eq!(status, 200);
+
+    let t = Some("s3cret");
+    // Unknown path → 404; known path, wrong method → 405.
+    let (status, _) = http(op.addr(), "GET", "/nope", "", t);
+    assert_eq!(status, 404);
+    let (status, _) = http(op.addr(), "POST", "/metrics", "", t);
+    assert_eq!(status, 405);
+    let (status, _) = http(op.addr(), "GET", "/swap", "", t);
+    assert_eq!(status, 405);
+    // Malformed / incomplete bodies → 400 with a named error.
+    let (status, body) = http(op.addr(), "POST", "/swap", "{\"pblock\": 1}", t);
+    assert_eq!(status, 400);
+    assert!(body.contains("at_flit"), "{body}");
+    let (status, _) = http(op.addr(), "POST", "/swap", "not json", t);
+    assert_eq!(status, 400);
+    let (status, body) = http(
+        op.addr(),
+        "POST",
+        "/swap",
+        r#"{"pblock": 1, "at_flit": 0, "rm": "warp", "r": 2}"#,
+        t,
+    );
+    assert_eq!(status, 400);
+    assert!(body.contains("warp"), "{body}");
+    // Unknown partition → 404.
+    let (status, _) = http(
+        op.addr(),
+        "POST",
+        "/swap",
+        r#"{"pblock": 6, "at_flit": 0, "rm": "loda", "r": 2}"#,
+        t,
+    );
+    assert_eq!(status, 404);
+    // Controller tuning: nothing to set → 409; bad threshold → 409;
+    // a live adjustment → 200 and visible on the next scrape.
+    let (status, _) = http(op.addr(), "POST", "/controller", "{\"pblock\": 1}", t);
+    assert_eq!(status, 409);
+    let (status, _) =
+        http(op.addr(), "POST", "/controller", "{\"threshold\": -1}", t);
+    assert_eq!(status, 409);
+    let (status, body) = http(
+        op.addr(),
+        "POST",
+        "/controller",
+        r#"{"pblock": 1, "threshold": 2.5, "cooldown_flits": 64}"#,
+        t,
+    );
+    assert_eq!(status, 200, "{body}");
+    let (_, text) = http(op.addr(), "GET", "/metrics", "", t);
+    assert_eq!(metric(&text, "fsead_controller_threshold{partition=\"1\"}"), 2.5);
+    assert_eq!(metric(&text, "fsead_controller_cooldown_flits{partition=\"1\"}"), 64.0);
+
+    op.stop();
+    Arc::try_unwrap(server).ok().expect("sole owner").shutdown().unwrap();
+}
