@@ -1,0 +1,203 @@
+//! Bench: the network serving plane — sessions/sec and per-push
+//! push→score round-trip latency with 64 concurrent loopback clients
+//! speaking the `fsead net` frame protocol, in both execution modes, on a
+//! 4-partition Loda topology multiplexed 16 sessions deep.
+//!
+//! Every client is a real [`NetClient`] over TCP: each push pays the frame
+//! codec, the socket hop and the lock-step score wait, so the numbers are
+//! the wire protocol's overhead on top of the in-process figures from
+//! `benches/serve_sessions.rs`.
+//!
+//! Emits `BENCH_net.json`; CI runs a smoke pass on every PR, validates the
+//! JSON and uploads it with the other BENCH artifacts.
+
+#[allow(dead_code)] // only `cap` is used from the shared harness here
+mod bench_util;
+use bench_util::cap;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::ExecMode;
+use fsead::fabric::net::NetServer;
+use fsead::fabric::net_client::NetClient;
+use fsead::fabric::server::FabricServer;
+
+const PARTITIONS: usize = 4;
+const CLIENTS: usize = 64;
+const CHUNK: usize = 64;
+/// Sessions multiplexed per partition — 4 × 16 slots admit all 64 clients.
+const MUX: usize = 16;
+
+fn topology(exec: ExecMode) -> FseadConfig {
+    let mut cfg = FseadConfig { use_fpga: false, exec, chunk: CHUNK, ..FseadConfig::default() };
+    cfg.server.sessions_per_partition = MUX;
+    for id in 1..=PARTITIONS {
+        cfg.pblocks.push(PblockCfg {
+            id,
+            rm: RmKind::Detector(DetectorKind::Loda),
+            r: 2,
+            stream: 0,
+            lanes: 0,
+        });
+    }
+    cfg
+}
+
+fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
+    if sorted_secs.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_secs.len() - 1) as f64 * p).round() as usize;
+    sorted_secs[idx] * 1e3
+}
+
+struct Row {
+    mode: &'static str,
+    sessions: u64,
+    samples: u64,
+    wall_secs: f64,
+    latencies: Vec<f64>,
+}
+
+fn main() {
+    let rounds: usize =
+        std::env::var("FSEAD_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    let samples = (cap() / CLIENTS).max(CHUNK * 2);
+    let mut rows: Vec<Row> = Vec::new();
+    for mode in ExecMode::ALL {
+        let cfg = topology(mode);
+        let window = cfg.hyper.window;
+        let server = Arc::new(FabricServer::start(cfg).expect("server start"));
+        // Head-room over the client count: the cap is a flood valve here,
+        // not the thing under test.
+        let net = NetServer::start_with_limit("127.0.0.1:0", Arc::clone(&server), CLIENTS + 8)
+            .expect("net start");
+        let addr = net.addr().to_string();
+        let t0 = Instant::now();
+        let mut all_latencies: Vec<f64> = Vec::new();
+        let mut sessions = 0u64;
+        let mut total_samples = 0u64;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for client in 0..CLIENTS {
+                let addr = &addr;
+                handles.push(scope.spawn(move || -> (u64, u64, Vec<f64>) {
+                    let mut latencies = Vec::new();
+                    let mut done = 0u64;
+                    let mut scored = 0u64;
+                    for round in 0..rounds {
+                        let profile = DatasetProfile {
+                            name: "net",
+                            n: samples,
+                            d: 3,
+                            outliers: samples / 50,
+                            clusters: 2,
+                        };
+                        let ds = generate_profile(&profile, (client * 131 + round) as u64 + 1);
+                        let mut c = NetClient::connect(addr).expect("connect");
+                        c.open(ds.d, None, ds.warmup(window)).expect("open");
+                        let mut got = 0usize;
+                        for block in ds.data.chunks(CHUNK * ds.d) {
+                            let t = Instant::now();
+                            let scores = c.push(block).expect("push");
+                            if block.len() == CHUNK * ds.d {
+                                // Full flit ⇒ the reply carried its score
+                                // flit — a complete wire round-trip.
+                                latencies.push(t.elapsed().as_secs_f64());
+                            }
+                            got += scores.len();
+                        }
+                        let closed = c.close().expect("close");
+                        got += closed.scores.len();
+                        assert_eq!(got, ds.n(), "every sample must score");
+                        done += 1;
+                        scored += got as u64;
+                    }
+                    (done, scored, latencies)
+                }));
+            }
+            for h in handles {
+                let (done, scored, lat) = h.join().expect("client thread");
+                sessions += done;
+                total_samples += scored;
+                all_latencies.extend(lat);
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        all_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        net.stop();
+        let mut server = server;
+        loop {
+            match Arc::try_unwrap(server) {
+                Ok(s) => {
+                    s.shutdown().expect("shutdown");
+                    break;
+                }
+                Err(s) => {
+                    server = s;
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }
+        }
+        println!(
+            "net_sessions/{}  {} sessions from {} clients in {:.3} s — {:.2} sessions/s, \
+             {:.0} samples/s, push p50 {:.3} ms / p99 {:.3} ms ({} round-trips)",
+            mode.as_str(),
+            sessions,
+            CLIENTS,
+            wall,
+            sessions as f64 / wall,
+            total_samples as f64 / wall,
+            percentile_ms(&all_latencies, 0.50),
+            percentile_ms(&all_latencies, 0.99),
+            all_latencies.len()
+        );
+        rows.push(Row {
+            mode: mode.as_str(),
+            sessions,
+            samples: total_samples,
+            wall_secs: wall,
+            latencies: all_latencies,
+        });
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"net_sessions\",\n");
+    json.push_str(&format!(
+        "  \"partitions\": {PARTITIONS},\n  \"clients\": {CLIENTS},\n  \"mux\": {MUX},\n  \
+         \"rounds\": {rounds},\n  \"samples_per_session\": {samples},\n  \"chunk\": {CHUNK},\n  \
+         \"rows\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        // null percentiles when nothing was measured — never a fabricated 0.0.
+        let (p50, p99) = if r.latencies.is_empty() {
+            ("null".into(), "null".into())
+        } else {
+            (
+                format!("{:.4}", percentile_ms(&r.latencies, 0.50)),
+                format!("{:.4}", percentile_ms(&r.latencies, 0.99)),
+            )
+        };
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"sessions\": {}, \"wall_secs\": {:.6}, \
+             \"sessions_per_sec\": {:.3}, \"samples_per_sec\": {:.1}, \
+             \"push_latency_p50_ms\": {p50}, \"push_latency_p99_ms\": {p99}, \
+             \"latency_samples\": {}}}{}\n",
+            r.mode,
+            r.sessions,
+            r.wall_secs,
+            r.sessions as f64 / r.wall_secs,
+            r.samples as f64 / r.wall_secs,
+            r.latencies.len(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_net.json", &json) {
+        Ok(()) => println!("wrote BENCH_net.json"),
+        Err(e) => eprintln!("could not write BENCH_net.json: {e}"),
+    }
+}

@@ -368,6 +368,26 @@ impl Default for OperatorCfg {
     }
 }
 
+/// Network serving plane configuration (`[fabric.net]`): the `fsead net`
+/// TCP listener speaking the length-prefixed session frame protocol
+/// (see [`crate::fabric::net`]). Disabled by default.
+#[derive(Clone, Debug)]
+pub struct NetCfg {
+    /// Start the network listener alongside the fabric server.
+    pub enabled: bool,
+    /// Listen address, e.g. `127.0.0.1:9191` (port 0 picks a free port).
+    pub addr: String,
+    /// Concurrent-connection cap; connections past it are refused with a
+    /// `server_busy` status frame instead of spawning a handler.
+    pub max_connections: usize,
+}
+
+impl Default for NetCfg {
+    fn default() -> Self {
+        NetCfg { enabled: false, addr: "127.0.0.1:9191".into(), max_connections: 256 }
+    }
+}
+
 /// Detector hyper-parameters (paper Table 4).
 #[derive(Clone, Copy, Debug)]
 pub struct DetectorHyper {
@@ -460,6 +480,8 @@ pub struct FseadConfig {
     pub server: ServerCfg,
     /// Operator plane: `/metrics` + run-control API (`[fabric.operator]`).
     pub operator: OperatorCfg,
+    /// Network serving plane: the `fsead net` frame protocol (`[fabric.net]`).
+    pub net: NetCfg,
     /// Fault injection + supervised recovery (`[fabric.faults]`).
     pub faults: FaultsCfg,
     /// Ingress policy for non-finite sample values (`[fabric] non_finite`).
@@ -482,6 +504,7 @@ impl Default for FseadConfig {
             dfx: DfxCfg::default(),
             server: ServerCfg::default(),
             operator: OperatorCfg::default(),
+            net: NetCfg::default(),
             faults: FaultsCfg::default(),
             non_finite: NonFinite::Error,
         }
@@ -631,6 +654,25 @@ impl FseadConfig {
                 );
             }
             cfg.operator.auth_token = Some(v.to_string());
+        }
+        // [fabric.net] — the session frame-protocol listener
+        if let Some(v) = doc.get_bool("fabric.net", "enabled") {
+            cfg.net.enabled = v;
+        }
+        if let Some(v) = doc.get_str("fabric.net", "addr") {
+            if v.is_empty() {
+                bail!("[fabric.net]: addr must not be empty (host:port, e.g. 127.0.0.1:9191)");
+            }
+            if !v.contains(':') {
+                bail!("[fabric.net]: addr needs a port (host:port, got {v:?})");
+            }
+            cfg.net.addr = v.to_string();
+        }
+        if let Some(v) = doc.get_int("fabric.net", "max_connections") {
+            if v <= 0 {
+                bail!("[fabric.net]: max_connections must be >= 1 (got {v})");
+            }
+            cfg.net.max_connections = v as usize;
         }
         // [fabric.dfx] — live reconfiguration
         if let Some(v) = doc.get_bool("fabric.dfx", "enabled") {
@@ -865,6 +907,12 @@ impl FseadConfig {
         }
         if self.operator.auth_token.as_deref() == Some("") {
             bail!("[fabric.operator]: auth_token must not be empty — use None to serve without auth");
+        }
+        if self.net.enabled && self.net.addr.is_empty() {
+            bail!("[fabric.net]: enabled without a listen addr (host:port)");
+        }
+        if self.net.max_connections == 0 {
+            bail!("[fabric.net]: max_connections must be >= 1");
         }
         let lifecycle = self.server.sessions_per_partition > 1 || self.server.idle_evict_flits > 0;
         if lifecycle {
@@ -1450,6 +1498,29 @@ r = 2
         let mut bad = FseadConfig::default();
         bad.operator.enabled = true;
         bad.operator.addr.clear();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn net_section_parses_with_defaults() {
+        // Off by default — sessions stay in-process unless asked for.
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert!(!cfg.net.enabled);
+        assert_eq!(cfg.net.addr, "127.0.0.1:9191");
+        assert_eq!(cfg.net.max_connections, 256);
+        let text = "[fabric.net]\nenabled = true\naddr = \"0.0.0.0:9900\"\n\
+                    max_connections = 8\n";
+        let cfg = FseadConfig::from_str(text).unwrap();
+        assert!(cfg.net.enabled);
+        assert_eq!(cfg.net.addr, "0.0.0.0:9900");
+        assert_eq!(cfg.net.max_connections, 8);
+        // Named refusals at load time.
+        assert!(FseadConfig::from_str("[fabric.net]\naddr = \"\"\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.net]\naddr = \"localhost\"\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.net]\nmax_connections = 0\n").is_err());
+        let mut bad = FseadConfig::default();
+        bad.net.enabled = true;
+        bad.net.addr.clear();
         assert!(bad.validate().is_err());
     }
 

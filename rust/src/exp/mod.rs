@@ -172,6 +172,10 @@ pub fn cli_main(args: &[String]) -> Result<i32> {
             serve::cli(&ctx, &positional[1..])?;
             Ok(0)
         }
+        Some("net") => {
+            serve::net_cli(&ctx, &positional[1..])?;
+            Ok(0)
+        }
         Some("exp") => {
             let id = positional.get(1).copied().unwrap_or("all");
             let out = run_experiment(&ctx, id)?;
@@ -204,6 +208,14 @@ USAGE:
                             --operator ADDR serves live telemetry + run
                             control over HTTP (GET /metrics /state, POST
                             /swap /drain /controller)
+  fsead net ADDR [config.toml]    start the streaming session server behind
+                            the length-prefixed binary frame protocol on
+                            ADDR (Open / Push / Scores / Close / Suspend /
+                            Resume — see README \"Network plane\"); tickets
+                            from Suspend resume on any server built from the
+                            same config; --max-conns N caps concurrent
+                            connections, --for-secs N runs for a fixed time
+                            (default: until stdin EOF or a `quit` line)
   fsead resources [--floorplan]   print the FPGA resource model
   fsead artifacts           list AOT artifacts and their status
   fsead version

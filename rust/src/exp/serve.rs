@@ -22,6 +22,7 @@ use super::ExpCtx;
 use crate::config::{FseadConfig, PblockCfg, RmKind};
 use crate::data::synth::{generate_profile, DatasetProfile};
 use crate::detectors::DetectorKind;
+use crate::fabric::net::NetServer;
 use crate::fabric::operator::OperatorServer;
 use crate::fabric::server::{AdmitError, FabricServer, Session, SessionSpec};
 use std::sync::Arc;
@@ -311,6 +312,147 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
         Err(server) => {
             drop(server);
             println!("server closed after {served} session(s)");
+        }
+    }
+    Ok(())
+}
+
+/// `fsead net ADDR [config.toml] [--mux K] [--idle-evict N]
+/// [--open-timeout MS] [--shed] [--sink PATH] [--spill-dir DIR]
+/// [--operator ADDR] [--max-conns N] [--for-secs N]`.
+///
+/// Starts the fabric server and the frame-protocol listener
+/// ([`NetServer`], see `rust/src/fabric/net.rs` for the wire format) on
+/// `ADDR`. Runs until `--for-secs` elapses, or — without it — until stdin
+/// reaches EOF or a `quit` line arrives (so a driving process can hold
+/// the server up exactly as long as it needs).
+pub fn net_cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
+    let mut addr: Option<&str> = None;
+    let mut config: Option<&str> = None;
+    let mut mux: Option<usize> = None;
+    let mut idle_evict: Option<u64> = None;
+    let mut open_timeout: Option<u64> = None;
+    let mut shed = false;
+    let mut sink: Option<String> = None;
+    let mut spill_dir: Option<String> = None;
+    let mut operator: Option<String> = None;
+    let mut max_conns: Option<usize> = None;
+    let mut for_secs: Option<u64> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let next = |i: &mut usize| -> Result<&str> {
+            *i += 1;
+            args.get(*i).copied().context("missing flag value")
+        };
+        match args[i] {
+            "--mux" => mux = Some(next(&mut i)?.parse().context("--mux")?),
+            "--idle-evict" => idle_evict = Some(next(&mut i)?.parse().context("--idle-evict")?),
+            "--open-timeout" => {
+                open_timeout = Some(next(&mut i)?.parse().context("--open-timeout")?)
+            }
+            "--shed" => shed = true,
+            "--sink" => sink = Some(next(&mut i)?.to_string()),
+            "--spill-dir" => spill_dir = Some(next(&mut i)?.to_string()),
+            "--operator" => operator = Some(next(&mut i)?.to_string()),
+            "--max-conns" => max_conns = Some(next(&mut i)?.parse().context("--max-conns")?),
+            "--for-secs" => for_secs = Some(next(&mut i)?.parse().context("--for-secs")?),
+            other if addr.is_none() && !other.starts_with('-') => addr = Some(other),
+            other if config.is_none() && !other.starts_with('-') => config = Some(other),
+            other => bail!("net: unexpected argument {other:?}"),
+        }
+        i += 1;
+    }
+    let addr = addr.context("usage: fsead net ADDR [config.toml] (e.g. 127.0.0.1:9191)")?;
+    let mut cfg = match config {
+        Some(path) => FseadConfig::from_file(path)?,
+        None => default_topology(ctx),
+    };
+    if !ctx.use_fpga {
+        cfg.use_fpga = false;
+    }
+    if let Some(mode) = ctx.exec {
+        cfg.exec = mode;
+    }
+    if ctx.dfx {
+        cfg.dfx.adaptive = true;
+    }
+    if let Some(lanes) = ctx.lanes {
+        cfg.override_lanes(lanes);
+    }
+    if let Some(k) = mux {
+        cfg.server.sessions_per_partition = k;
+    }
+    if let Some(n) = idle_evict {
+        cfg.server.idle_evict_flits = n;
+    }
+    if let Some(ms) = open_timeout {
+        cfg.server.open_timeout_ms = ms;
+    }
+    if shed {
+        cfg.server.overload = crate::config::OverloadPolicy::Shed;
+    }
+    if let Some(path) = sink {
+        cfg.server.sink_path = Some(path);
+    }
+    if let Some(dir) = spill_dir {
+        cfg.server.spill_dir = Some(dir);
+    }
+    if let Some(op) = operator {
+        cfg.operator.enabled = true;
+        cfg.operator.addr = op;
+    }
+    cfg.net.enabled = true;
+    cfg.net.addr = addr.to_string();
+    if let Some(n) = max_conns {
+        cfg.net.max_connections = n;
+    }
+    cfg.artifact_dir = ctx.artifact_dir.clone();
+    cfg.validate()?;
+    let server = Arc::new(FabricServer::start(cfg)?);
+    let op_cfg = server.config().operator.clone();
+    let op = if op_cfg.enabled {
+        let op =
+            OperatorServer::start(&op_cfg.addr, op_cfg.auth_token.clone(), Arc::clone(&server))?;
+        println!("operator plane on http://{}", op.addr());
+        Some(op)
+    } else {
+        None
+    };
+    let net = NetServer::start(&server.config().net.addr.clone(), Arc::clone(&server))?;
+    println!(
+        "net plane on {} ({} partition(s), exec={}, fpga={}, inbox={} flits, max {} conns)",
+        net.addr(),
+        server.partitions().len(),
+        server.config().exec.as_str(),
+        server.config().use_fpga,
+        server.config().server.inbox_flits,
+        server.config().net.max_connections
+    );
+    match for_secs {
+        Some(secs) => std::thread::sleep(std::time::Duration::from_secs(secs)),
+        None => {
+            use std::io::BufRead;
+            let stdin = std::io::stdin();
+            for line in stdin.lock().lines() {
+                if line?.trim() == "quit" {
+                    break;
+                }
+            }
+        }
+    }
+    net.stop();
+    drop(op);
+    let served = server.sessions_served();
+    match Arc::try_unwrap(server) {
+        Ok(server) => {
+            let summary = server.shutdown()?;
+            println!("net server closed after {} session(s)", summary.sessions_served);
+        }
+        Err(server) => {
+            // A connection handler still holds a clone (client attached at
+            // shutdown); the last drop runs the same teardown.
+            drop(server);
+            println!("net server closed after {served} session(s)");
         }
     }
     Ok(())

@@ -59,6 +59,29 @@ impl FlitSource for Receiver<Flit> {
     }
 }
 
+/// Decode little-endian f32 wire bytes into `out` — the network front
+/// end's half of the zero-copy contract. `bytes` must be a whole number
+/// of 4-byte values. Each value is written exactly once, directly into
+/// the destination buffer (a flit allocation or a staged tail), so a
+/// `Push` frame's sample block crosses the socket boundary with the same
+/// single copy the input DMA pays when it cuts a stream into chunks.
+pub fn decode_f32_le(bytes: &[u8], out: &mut Vec<f32>) {
+    debug_assert_eq!(bytes.len() % 4, 0, "callers validate framing before decoding");
+    out.reserve(bytes.len() / 4);
+    for b in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+    }
+}
+
+/// Encode f32 values as little-endian wire bytes — the inverse of
+/// [`decode_f32_le`], used for `Push` bodies and `Scores` frames.
+pub fn encode_f32_le(values: &[f32], out: &mut Vec<u8>) {
+    out.reserve(values.len() * 4);
+    for &v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
 /// Score flits have d = 1: length of data == length of mask. Accepts either
 /// freshly-computed `Vec<f32>` buffers or already-shared `Arc<[f32]>`
 /// payloads (e.g. a mask forwarded from the input flit).

@@ -10,7 +10,9 @@
 //! Two deployments share this data plane: the one-shot batch pass
 //! ([`Fabric::run`]) and the persistent multi-session streaming service
 //! ([`server::FabricServer`], `fsead serve`), whose resident partition
-//! workers drain the same service loops through bounded session inboxes.
+//! workers drain the same service loops through bounded session inboxes —
+//! in-process through [`server::Session`], or across the wire through the
+//! [`net`] frame protocol (`fsead net`).
 
 pub mod combo;
 pub mod decoupler;
@@ -18,6 +20,8 @@ pub mod dma;
 pub mod faults;
 pub mod hotswap;
 pub mod message;
+pub mod net;
+pub mod net_client;
 pub mod operator;
 pub mod pblock;
 pub mod reconfig;
@@ -32,6 +36,8 @@ pub mod topology;
 pub use faults::FaultEvent;
 pub use hotswap::SwapEvent;
 pub use message::{Flit, FlitSource, Port};
+pub use net::{NetError, NetServer};
+pub use net_client::{NetClient, NetClose, NetStatus};
 pub use operator::{
     FabricSnapshot, OperatorError, OperatorServer, PartitionTelemetry, ServerTelemetry,
     SessionTelemetry,

@@ -1,0 +1,739 @@
+//! Network serving plane: the `fsead net` wire protocol over a running
+//! [`FabricServer`].
+//!
+//! The paper's AXI switch composes detector pblocks into ensembles on one
+//! device; this module composes them across the wire. A [`NetServer`] is a
+//! TCP listener speaking a length-prefixed binary frame protocol mapped
+//! 1:1 onto the session API ([`FabricServer::open`] /
+//! [`super::server::Session::push`] / `close` / `suspend` /
+//! [`FabricServer::resume`]), hand-rolled over `std::net` threads like the
+//! operator plane — no async runtime, no serde.
+//!
+//! # Frame layout
+//!
+//! Every frame, both directions, is
+//!
+//! ```text
+//! [u8 tag] [u32 len LE] [payload: len bytes]
+//! ```
+//!
+//! with `len` capped at [`MAX_FRAME_PAYLOAD`]. Client frames:
+//!
+//! | tag                  | payload                                                      |
+//! |----------------------|--------------------------------------------------------------|
+//! | [`TAG_OPEN`] 0x01    | `u32 d \| u32 pblock (0 = any) \| u32 warmup_len \| f32×warmup_len LE` |
+//! | [`TAG_PUSH`] 0x02    | `u64 session \| f32×n LE` — the sample block **verbatim**    |
+//! | [`TAG_CLOSE`] 0x03   | `u64 session`                                                |
+//! | [`TAG_SUSPEND`] 0x04 | `u64 session`                                                |
+//! | [`TAG_RESUME`] 0x05  | [`super::session_store::SessionTicket`] bytes verbatim       |
+//!
+//! Server frames:
+//!
+//! | tag                    | payload                                                       |
+//! |------------------------|---------------------------------------------------------------|
+//! | [`TAG_OPENED`] 0x81    | `u64 session \| u32 pblock`                                   |
+//! | [`TAG_SCORES`] 0x82    | `u64 session \| f32×n LE`                                     |
+//! | [`TAG_CLOSED`] 0x83    | `u64 session \| u64 samples \| u64 flits \| u8 padded_tail \| u32 tail_valid` |
+//! | [`TAG_SUSPENDED`] 0x84 | `u64 session \| ticket bytes`                                 |
+//! | [`TAG_RESUMED`] 0x85   | `u64 session \| u32 pblock`                                   |
+//! | [`TAG_STATUS`] 0x8F    | `u16 code \| u32 msg_len \| msg (UTF-8)`                      |
+//!
+//! # Determinism
+//!
+//! Every client frame gets a deterministic reply, so the connection needs
+//! no second thread and no reply reordering: `Open` → `Opened`, `Push` →
+//! exactly one `Scores`, `Close` → `Scores` then `Closed`, `Suspend` →
+//! `Scores` then `Suspended`, `Resume` → `Resumed`; any failure → one
+//! `Status`. In lock-step mode (no drop-policy dark windows — the same
+//! predicate the synthetic-load driver uses) the `Scores` reply to a
+//! `Push` blocks for every score flit the pushed samples are owed; with
+//! swaps or the adaptive controller armed it carries whatever has arrived
+//! (possibly nothing), since a drop-policy dark window may legitimately
+//! delete flits.
+//!
+//! # Zero-copy and backpressure
+//!
+//! A `Push` body is the f32 block verbatim: the samples are decoded from
+//! the socket buffer straight into their flit allocations by
+//! [`super::server::Session::push_bytes`] — the same single copy the
+//! input DMA pays. The bounded `SessionInbox` maps onto the connection's
+//! socket reads: a full inbox blocks `push_bytes`, which stalls this
+//! handler, which stops reading this socket, which fills this client's
+//! TCP window — a slow client throttles only itself, never a partition.
+//!
+//! # Ticket portability
+//!
+//! `Suspend` returns the session's ticket bytes over the wire; `Resume`
+//! accepts them on any server built from the same config — including a
+//! different process on a different machine. Admission refusals
+//! ([`AdmitError`]) map onto status codes 1–4 so remote clients can back
+//! off and retry exactly like in-process ones.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::message::encode_f32_le;
+use super::server::{AdmitError, FabricServer, ServeError, Session, SessionSpec};
+use super::session_store::SessionTicket;
+use crate::config::DarkPolicy;
+
+// ---------------------------------------------------------------------------
+// Wire constants
+// ---------------------------------------------------------------------------
+
+/// Frame payload cap (16 MiB) — same bound as the score sink's frames; a
+/// torn or hostile length word never makes the server allocate gigabytes.
+pub const MAX_FRAME_PAYLOAD: usize = 16 << 20;
+
+/// Client → server: open a session (`u32 d | u32 pblock | u32 warmup_len |
+/// f32×warmup_len`); `pblock` 0 lets admission pick any fitting partition.
+pub const TAG_OPEN: u8 = 0x01;
+/// Client → server: stream samples (`u64 session | f32×n LE`).
+pub const TAG_PUSH: u8 = 0x02;
+/// Client → server: TLAST flush + teardown (`u64 session`).
+pub const TAG_CLOSE: u8 = 0x03;
+/// Client → server: checkpoint into a portable ticket (`u64 session`).
+pub const TAG_SUSPEND: u8 = 0x04;
+/// Client → server: resume from ticket bytes (the payload *is* the ticket).
+pub const TAG_RESUME: u8 = 0x05;
+
+/// Server → client: session opened (`u64 session | u32 pblock`).
+pub const TAG_OPENED: u8 = 0x81;
+/// Server → client: scores (`u64 session | f32×n LE`).
+pub const TAG_SCORES: u8 = 0x82;
+/// Server → client: session closed
+/// (`u64 session | u64 samples | u64 flits | u8 padded_tail | u32 tail_valid`).
+pub const TAG_CLOSED: u8 = 0x83;
+/// Server → client: session suspended (`u64 session | ticket bytes`).
+pub const TAG_SUSPENDED: u8 = 0x84;
+/// Server → client: session resumed (`u64 session | u32 pblock`).
+pub const TAG_RESUMED: u8 = 0x85;
+/// Server → client: typed failure (`u16 code | u32 msg_len | msg`).
+pub const TAG_STATUS: u8 = 0x8F;
+
+/// [`AdmitError::Saturated`] — overload shedding; back off and retry.
+pub const STATUS_SATURATED: u16 = 1;
+/// [`AdmitError::Timeout`] — `open_timeout_ms` elapsed waiting for a slot.
+pub const STATUS_TIMEOUT: u16 = 2;
+/// [`AdmitError::QueueFull`] — `max_waiters` clients already queued.
+pub const STATUS_QUEUE_FULL: u16 = 3;
+/// [`AdmitError::ShuttingDown`] — the server is going away.
+pub const STATUS_SHUTTING_DOWN: u16 = 4;
+/// Malformed frame: truncated payload, short header, mid-frame disconnect.
+pub const STATUS_BAD_FRAME: u16 = 10;
+/// Declared frame length over [`MAX_FRAME_PAYLOAD`].
+pub const STATUS_FRAME_TOO_LARGE: u16 = 11;
+/// Unknown frame tag.
+pub const STATUS_UNKNOWN_TAG: u16 = 12;
+/// No session is open on this connection (or the id does not match it).
+pub const STATUS_NO_SESSION: u16 = 13;
+/// A session is already open on this connection.
+pub const STATUS_SESSION_OPEN: u16 = 14;
+/// The `Resume` payload does not parse as a session ticket.
+pub const STATUS_BAD_TICKET: u16 = 15;
+/// The server refused the resume (layout mismatch, duplicate, busy).
+pub const STATUS_RESUME_REFUSED: u16 = 16;
+/// Concurrent-connection cap reached; shed before a handler was spawned.
+pub const STATUS_SERVER_BUSY: u16 = 17;
+/// The session's service failed ([`ServeError`] — the detail names the code).
+pub const STATUS_SERVE_FAILED: u16 = 18;
+/// The server refused the open for non-admission reasons (d = 0, warmup
+/// not a whole number of rows, unknown pblock).
+pub const STATUS_OPEN_REFUSED: u16 = 19;
+
+// ---------------------------------------------------------------------------
+// Typed protocol errors
+// ---------------------------------------------------------------------------
+
+/// Everything the protocol layer can refuse, each with a stable status
+/// code — [`AdmitError`] and [`ServeError`] lifted onto the wire plus the
+/// framing failures only a network front end can have.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NetError {
+    /// Truncated/garbled frame or a disconnect inside one.
+    BadFrame(String),
+    FrameTooLarge { len: usize },
+    UnknownTag(u8),
+    NoSession,
+    SessionOpen,
+    BadTicket(String),
+    ResumeRefused(String),
+    ServerBusy,
+    /// Session service failed; `code` is [`ServeError::code`].
+    ServeFailed { code: String, detail: String },
+    OpenRefused(String),
+    Admit(AdmitError),
+}
+
+impl NetError {
+    /// The wire status code for this error.
+    pub fn code(&self) -> u16 {
+        match self {
+            NetError::Admit(AdmitError::Saturated) => STATUS_SATURATED,
+            NetError::Admit(AdmitError::Timeout { .. }) => STATUS_TIMEOUT,
+            NetError::Admit(AdmitError::QueueFull { .. }) => STATUS_QUEUE_FULL,
+            NetError::Admit(AdmitError::ShuttingDown) => STATUS_SHUTTING_DOWN,
+            NetError::BadFrame(_) => STATUS_BAD_FRAME,
+            NetError::FrameTooLarge { .. } => STATUS_FRAME_TOO_LARGE,
+            NetError::UnknownTag(_) => STATUS_UNKNOWN_TAG,
+            NetError::NoSession => STATUS_NO_SESSION,
+            NetError::SessionOpen => STATUS_SESSION_OPEN,
+            NetError::BadTicket(_) => STATUS_BAD_TICKET,
+            NetError::ResumeRefused(_) => STATUS_RESUME_REFUSED,
+            NetError::ServerBusy => STATUS_SERVER_BUSY,
+            NetError::ServeFailed { .. } => STATUS_SERVE_FAILED,
+            NetError::OpenRefused(_) => STATUS_OPEN_REFUSED,
+        }
+    }
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::BadFrame(m) => write!(f, "bad frame: {m}"),
+            NetError::FrameTooLarge { len } => {
+                write!(f, "declared frame length {len} exceeds the {MAX_FRAME_PAYLOAD} cap")
+            }
+            NetError::UnknownTag(t) => write!(f, "unknown frame tag 0x{t:02x}"),
+            NetError::NoSession => write!(f, "no session open on this connection"),
+            NetError::SessionOpen => {
+                write!(f, "a session is already open on this connection — close it first")
+            }
+            NetError::BadTicket(m) => write!(f, "bad ticket: {m}"),
+            NetError::ResumeRefused(m) => write!(f, "resume refused: {m}"),
+            NetError::ServerBusy => {
+                write!(f, "too many concurrent connections — retry")
+            }
+            NetError::ServeFailed { code, detail } => write!(f, "serve failed ({code}): {detail}"),
+            NetError::OpenRefused(m) => write!(f, "open refused: {m}"),
+            NetError::Admit(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+// ---------------------------------------------------------------------------
+// Frame codec (shared with the blocking client)
+// ---------------------------------------------------------------------------
+
+/// Read exactly `buf.len()` bytes; `Ok(false)` when EOF arrives first.
+fn fill(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..])?;
+        if n == 0 {
+            return Ok(false);
+        }
+        got += n;
+    }
+    Ok(true)
+}
+
+/// Read one frame. `Ok(None)` is a clean hang-up at a frame boundary;
+/// a disconnect *inside* a frame or an over-cap length is a typed error.
+pub fn read_frame(r: &mut impl Read) -> std::result::Result<Option<(u8, Vec<u8>)>, NetError> {
+    let mut tag = [0u8; 1];
+    match fill(r, &mut tag) {
+        Ok(true) => {}
+        Ok(false) => return Ok(None),
+        Err(e) => return Err(NetError::BadFrame(format!("reading frame tag: {e}"))),
+    }
+    let mut len = [0u8; 4];
+    match fill(r, &mut len) {
+        Ok(true) => {}
+        Ok(false) => return Err(NetError::BadFrame("disconnect inside a frame header".into())),
+        Err(e) => return Err(NetError::BadFrame(format!("reading frame length: {e}"))),
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(NetError::FrameTooLarge { len });
+    }
+    let mut payload = vec![0u8; len];
+    match fill(r, &mut payload) {
+        Ok(true) => Ok(Some((tag[0], payload))),
+        Ok(false) => Err(NetError::BadFrame("disconnect inside a frame body".into())),
+        Err(e) => Err(NetError::BadFrame(format!("reading frame body: {e}"))),
+    }
+}
+
+/// Write one frame and flush it.
+pub fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME_PAYLOAD);
+    w.write_all(&[tag])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Encode a [`NetError`] as a `Status` payload.
+pub fn encode_status(e: &NetError) -> Vec<u8> {
+    let msg = e.to_string();
+    let mut out = Vec::with_capacity(6 + msg.len());
+    out.extend_from_slice(&e.code().to_le_bytes());
+    out.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// Decode a `Status` payload into `(code, message)`.
+pub fn decode_status(payload: &[u8]) -> std::result::Result<(u16, String), NetError> {
+    let mut b = payload;
+    let code = u16::from_le_bytes(take(&mut b, 2, "status code")?.try_into().unwrap());
+    let len = u32::from_le_bytes(take(&mut b, 4, "status length")?.try_into().unwrap()) as usize;
+    let msg = take(&mut b, len, "status message")?;
+    Ok((code, String::from_utf8_lossy(msg).into_owned()))
+}
+
+fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> std::result::Result<&'a [u8], NetError> {
+    if b.len() < n {
+        return Err(NetError::BadFrame(format!("truncated {what}")));
+    }
+    let (head, rest) = b.split_at(n);
+    *b = rest;
+    Ok(head)
+}
+
+fn take_u32(b: &mut &[u8], what: &str) -> std::result::Result<u32, NetError> {
+    Ok(u32::from_le_bytes(take(b, 4, what)?.try_into().unwrap()))
+}
+
+fn take_u64(b: &mut &[u8], what: &str) -> std::result::Result<u64, NetError> {
+    Ok(u64::from_le_bytes(take(b, 8, what)?.try_into().unwrap()))
+}
+
+// ---------------------------------------------------------------------------
+// Listener
+// ---------------------------------------------------------------------------
+
+/// Decrements the live-connection gauge when a handler ends, by any path.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The network plane's TCP listener: one accept thread, one handler
+/// thread per connection (a connection is one session's full lifetime, so
+/// unlike the operator plane these threads are long-lived), the
+/// concurrent count capped by `[fabric.net] max_connections` — over the
+/// cap a connection is shed with a `server_busy` status frame before any
+/// handler is spawned.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (port 0 picks a free port) and serve the frame
+    /// protocol over `fabric`, capped at the configured
+    /// `[fabric.net] max_connections`.
+    pub fn start(addr: &str, fabric: Arc<FabricServer>) -> Result<NetServer> {
+        let limit = fabric.config().net.max_connections;
+        Self::start_with_limit(addr, fabric, limit)
+    }
+
+    /// [`NetServer::start`] with an explicit connection cap.
+    pub fn start_with_limit(
+        addr: &str,
+        fabric: Arc<FabricServer>,
+        max_connections: usize,
+    ) -> Result<NetServer> {
+        let limit = max_connections.max(1);
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding the net listener on {addr}"))?;
+        let local = listener.local_addr().context("resolving the net listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let live = Arc::new(AtomicUsize::new(0));
+        let accept = std::thread::Builder::new()
+            .name("net".into())
+            .spawn(move || loop {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        if stop2.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if live.load(Ordering::SeqCst) >= limit {
+                            let _ = write_frame(
+                                &mut stream,
+                                TAG_STATUS,
+                                &encode_status(&NetError::ServerBusy),
+                            );
+                            continue;
+                        }
+                        live.fetch_add(1, Ordering::SeqCst);
+                        let guard = ConnGuard(Arc::clone(&live));
+                        let fabric = Arc::clone(&fabric);
+                        // If the spawn itself fails, the closure (and the
+                        // guard in it) is dropped, keeping the gauge honest.
+                        let _ = std::thread::Builder::new().name("net-conn".into()).spawn(
+                            move || {
+                                let _guard = guard;
+                                let _ = serve_connection(stream, &fabric);
+                            },
+                        );
+                    }
+                    Err(_) => {
+                        if stop2.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn net accept thread");
+        Ok(NetServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept thread. Live connections keep
+    /// their sessions; they end when their client hangs up or the fabric
+    /// shuts down underneath them.
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection handler
+// ---------------------------------------------------------------------------
+
+/// One connection's session state: at most one live session plus the
+/// score-delivery cursor (flits whose scores have been sent back).
+struct ConnState {
+    session: Option<Session>,
+    delivered: u64,
+}
+
+fn serve_connection(stream: TcpStream, fabric: &Arc<FabricServer>) -> std::io::Result<()> {
+    // Lock-step (block for each pushed flit's score flit) assumes 1:1
+    // input→score framing — the same predicate as the synthetic-load
+    // driver: a config whose drop-policy dark windows can delete flits
+    // must poll instead of blocking on a score that was dropped.
+    let dfx = &fabric.config().dfx;
+    let lockstep =
+        dfx.policy == DarkPolicy::Bypass || (!dfx.adaptive && dfx.swaps.is_empty());
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut conn = ConnState { session: None, delivered: 0 };
+    loop {
+        let (tag, payload) = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            // Clean hang-up: the session (if any) is dropped below, which
+            // force-closes its inbox — an abandoned remote client can
+            // never wedge a partition.
+            Ok(None) => break,
+            Err(e) => {
+                // Typed refusal, then drop the connection: after a torn
+                // or oversized frame the byte stream is out of sync.
+                let _ = write_frame(&mut writer, TAG_STATUS, &encode_status(&e));
+                break;
+            }
+        };
+        let outcome = match tag {
+            TAG_OPEN => handle_open(&mut conn, fabric, &payload),
+            TAG_PUSH => handle_push(&mut conn, lockstep, &mut writer, &payload),
+            TAG_CLOSE => handle_close(&mut conn, &mut writer, &payload),
+            TAG_SUSPEND => handle_suspend(&mut conn, &mut writer, &payload),
+            TAG_RESUME => handle_resume(&mut conn, fabric, &payload),
+            other => Err(NetError::UnknownTag(other)),
+        };
+        match outcome {
+            Ok(()) => {}
+            Err(e) => {
+                let fatal = matches!(
+                    e,
+                    NetError::BadFrame(_) | NetError::FrameTooLarge { .. } | NetError::UnknownTag(_)
+                );
+                if write_frame(&mut writer, TAG_STATUS, &encode_status(&e)).is_err() || fatal {
+                    break;
+                }
+            }
+        }
+    }
+    // Dropping a live session abandons it server-side (inbox force-closed,
+    // partition freed) — the teardown path for disconnects mid-session.
+    drop(conn.session.take());
+    Ok(())
+}
+
+/// Map a session-API failure onto a wire status: typed admission errors
+/// keep their dedicated codes, typed serve errors carry their code string,
+/// anything else is a refusal with the error chain as detail.
+fn api_error(err: anyhow::Error, refused: fn(String) -> NetError) -> NetError {
+    if let Some(e) = err.downcast_ref::<AdmitError>() {
+        return NetError::Admit(e.clone());
+    }
+    if let Some(e) = err.downcast_ref::<ServeError>() {
+        return NetError::ServeFailed { code: e.code().to_string(), detail: format!("{err:#}") };
+    }
+    refused(format!("{err:#}"))
+}
+
+fn handle_open(
+    conn: &mut ConnState,
+    fabric: &Arc<FabricServer>,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    let mut b = payload;
+    let d = take_u32(&mut b, "open d")? as usize;
+    let pblock = take_u32(&mut b, "open pblock")? as usize;
+    let warmup_len = take_u32(&mut b, "open warmup length")? as usize;
+    let warmup_bytes = take(&mut b, warmup_len.saturating_mul(4), "open warmup samples")?;
+    if !b.is_empty() {
+        return Err(NetError::BadFrame(format!("{} trailing bytes after open", b.len())));
+    }
+    if conn.session.is_some() {
+        return Err(NetError::SessionOpen);
+    }
+    let mut warmup = Vec::new();
+    super::message::decode_f32_le(warmup_bytes, &mut warmup);
+    let mut spec = SessionSpec::new(d, warmup);
+    if pblock != 0 {
+        spec.pblock = Some(pblock);
+    }
+    let session = fabric.open(spec).map_err(|e| api_error(e, NetError::OpenRefused))?;
+    conn.delivered = session.flits_sent();
+    conn.session = Some(session);
+    Ok(())
+}
+
+fn handle_resume(
+    conn: &mut ConnState,
+    fabric: &Arc<FabricServer>,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    if conn.session.is_some() {
+        return Err(NetError::SessionOpen);
+    }
+    let ticket =
+        SessionTicket::from_bytes(payload).map_err(|e| NetError::BadTicket(format!("{e:#}")))?;
+    let session = fabric.resume(ticket).map_err(|e| api_error(e, NetError::ResumeRefused))?;
+    // The score cursor continues from the ticket's flit sequence — scores
+    // for earlier flits were already delivered by the suspending server.
+    conn.delivered = session.flits_sent();
+    conn.session = Some(session);
+    Ok(())
+}
+
+/// The live session on this connection, checked against the frame's id.
+fn session_for(conn: &mut ConnState, id: u64) -> std::result::Result<&mut Session, NetError> {
+    match conn.session {
+        Some(ref mut s) if s.id() == id => Ok(s),
+        _ => Err(NetError::NoSession),
+    }
+}
+
+fn handle_push(
+    conn: &mut ConnState,
+    lockstep: bool,
+    writer: &mut impl Write,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    let mut b = payload;
+    let id = take_u64(&mut b, "push session id")?;
+    let delivered = conn.delivered;
+    let sent = {
+        let session = session_for(conn, id)?;
+        let row = 4 * session.dim();
+        if row == 0 || b.len() % row != 0 {
+            return Err(NetError::BadFrame(format!(
+                "push body of {} bytes is not a whole number of {}-byte rows",
+                b.len(),
+                row
+            )));
+        }
+        session.push_bytes(b).map_err(|err| {
+            // The body was row-aligned, so a push failure means the
+            // session died server-side (shutdown / partition failure).
+            // Keep the dead session so `Close` can fetch its typed
+            // outcome; surface the failure now as a status.
+            api_error(err, |detail| NetError::ServeFailed { code: "service".into(), detail })
+        })?;
+        session.flits_sent()
+    };
+    let scores = {
+        let session = session_for(conn, id)?;
+        if lockstep {
+            let owed = sent.saturating_sub(delivered);
+            let mut out = Vec::new();
+            for _ in 0..owed {
+                match session.recv_scores() {
+                    Some(v) => out.extend(v),
+                    // Stream ended early: the session is dying (force-close
+                    // or shutdown). Deliver what arrived; the client's
+                    // `Close` surfaces the typed outcome error.
+                    None => break,
+                }
+            }
+            out
+        } else {
+            session.poll_scores()
+        }
+    };
+    conn.delivered = sent;
+    write_scores(writer, id, &scores)
+}
+
+fn handle_close(
+    conn: &mut ConnState,
+    writer: &mut impl Write,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    let mut b = payload;
+    let id = take_u64(&mut b, "close session id")?;
+    if !b.is_empty() {
+        return Err(NetError::BadFrame(format!("{} trailing bytes after close", b.len())));
+    }
+    session_for(conn, id)?;
+    let session = conn.session.take().expect("checked above");
+    conn.delivered = 0;
+    let closed = session
+        .close()
+        .map_err(|e| api_error(e, |detail| NetError::ServeFailed { code: "service".into(), detail }))?;
+    write_scores(writer, id, &closed.scores)?;
+    let mut out = Vec::with_capacity(8 + 8 + 8 + 1 + 4);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&closed.samples.to_le_bytes());
+    out.extend_from_slice(&closed.flits.to_le_bytes());
+    out.push(closed.padded_tail as u8);
+    out.extend_from_slice(&(closed.tail_valid as u32).to_le_bytes());
+    write_frame(writer, TAG_CLOSED, &out)
+        .map_err(|e| NetError::BadFrame(format!("writing closed frame: {e}")))
+}
+
+fn handle_suspend(
+    conn: &mut ConnState,
+    writer: &mut impl Write,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    let mut b = payload;
+    let id = take_u64(&mut b, "suspend session id")?;
+    if !b.is_empty() {
+        return Err(NetError::BadFrame(format!("{} trailing bytes after suspend", b.len())));
+    }
+    session_for(conn, id)?;
+    let session = conn.session.take().expect("checked above");
+    conn.delivered = 0;
+    let (ticket, scores) = session
+        .suspend()
+        .map_err(|e| api_error(e, |detail| NetError::ServeFailed { code: "service".into(), detail }))?;
+    write_scores(writer, id, &scores)?;
+    let ticket_bytes = ticket.to_bytes();
+    let mut out = Vec::with_capacity(8 + ticket_bytes.len());
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&ticket_bytes);
+    write_frame(writer, TAG_SUSPENDED, &out)
+        .map_err(|e| NetError::BadFrame(format!("writing suspended frame: {e}")))
+}
+
+fn write_scores(
+    writer: &mut impl Write,
+    id: u64,
+    scores: &[f32],
+) -> std::result::Result<(), NetError> {
+    let mut out = Vec::with_capacity(8 + scores.len() * 4);
+    out.extend_from_slice(&id.to_le_bytes());
+    encode_f32_le(scores, &mut out);
+    write_frame(writer, TAG_SCORES, &out)
+        .map_err(|e| NetError::BadFrame(format!("writing scores frame: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_codec_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_PUSH, b"hello").unwrap();
+        write_frame(&mut buf, TAG_CLOSE, b"").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), Some((TAG_PUSH, b"hello".to_vec())));
+        assert_eq!(read_frame(&mut r).unwrap(), Some((TAG_CLOSE, Vec::new())));
+        assert_eq!(read_frame(&mut r).unwrap(), None, "clean EOF at a frame boundary");
+    }
+
+    #[test]
+    fn torn_frames_yield_typed_errors_at_every_cut() {
+        let mut whole = Vec::new();
+        write_frame(&mut whole, TAG_OPEN, &[1, 2, 3, 4, 5, 6, 7]).unwrap();
+        // Cutting anywhere inside the frame (after the tag byte) must be a
+        // BadFrame, never a panic; cutting at 0 is a clean EOF.
+        for cut in 1..whole.len() {
+            let mut r = Cursor::new(whole[..cut].to_vec());
+            match read_frame(&mut r) {
+                Err(NetError::BadFrame(_)) => {}
+                other => panic!("cut at {cut}: expected BadFrame, got {other:?}"),
+            }
+        }
+        let mut r = Cursor::new(Vec::<u8>::new());
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_declared_length_is_refused_without_allocating() {
+        let mut buf = vec![TAG_PUSH];
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut r = Cursor::new(buf);
+        match read_frame(&mut r) {
+            Err(NetError::FrameTooLarge { len }) => assert_eq!(len, u32::MAX as usize),
+            other => panic!("expected FrameTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn status_payload_roundtrips() {
+        for e in [
+            NetError::Admit(AdmitError::Saturated),
+            NetError::Admit(AdmitError::Timeout { waited_ms: 250 }),
+            NetError::UnknownTag(0x7F),
+            NetError::ServeFailed { code: "poisoned".into(), detail: "boom".into() },
+        ] {
+            let payload = encode_status(&e);
+            let (code, msg) = decode_status(&payload).unwrap();
+            assert_eq!(code, e.code());
+            assert_eq!(msg, e.to_string());
+        }
+    }
+
+    #[test]
+    fn status_codes_are_stable() {
+        assert_eq!(NetError::Admit(AdmitError::Saturated).code(), 1);
+        assert_eq!(NetError::Admit(AdmitError::ShuttingDown).code(), 4);
+        assert_eq!(NetError::BadFrame(String::new()).code(), 10);
+        assert_eq!(NetError::ServerBusy.code(), 17);
+        assert_eq!(NetError::OpenRefused(String::new()).code(), 19);
+    }
+}

@@ -1,0 +1,214 @@
+//! Blocking client for the `fsead net` frame protocol — the wire-side
+//! twin of [`super::server::Session`], used by the integration tests and
+//! `benches/net_sessions.rs`.
+//!
+//! One [`NetClient`] is one TCP connection is (at most) one live session;
+//! every call writes one frame and blocks for its deterministic reply
+//! (see [`super::net`] for the protocol). Server refusals arrive as
+//! `Status` frames and surface as [`NetStatus`] errors — downcast with
+//! `err.downcast_ref::<NetStatus>()` to read the wire code, e.g. to tell
+//! an admission `saturated` (retry later) from a `bad_frame`.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use super::message::{decode_f32_le, encode_f32_le};
+use super::net::{
+    decode_status, read_frame, write_frame, NetError, TAG_CLOSE, TAG_CLOSED, TAG_OPEN, TAG_OPENED,
+    TAG_PUSH, TAG_RESUME, TAG_RESUMED, TAG_SCORES, TAG_SUSPEND, TAG_SUSPENDED,
+};
+
+/// A typed `Status` reply from the server. The `code` values are the
+/// `STATUS_*` constants in [`super::net`] — admission refusals are 1–4.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetStatus {
+    pub code: u16,
+    pub message: String,
+}
+
+impl std::fmt::Display for NetStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "server status {}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for NetStatus {}
+
+/// What `Close` returns: the drained tail scores plus the same accounting
+/// as an in-process [`super::server::SessionClose`].
+#[derive(Clone, Debug)]
+pub struct NetClose {
+    pub scores: Vec<f32>,
+    pub samples: u64,
+    pub flits: u64,
+    pub padded_tail: bool,
+    pub tail_valid: usize,
+}
+
+/// Blocking connection to a [`super::net::NetServer`].
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    session: Option<u64>,
+}
+
+impl NetClient {
+    /// Connect to `addr` (e.g. `127.0.0.1:9191`).
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to fsead net server at {addr}"))?;
+        let reader = BufReader::new(stream.try_clone().context("cloning the net socket")?);
+        Ok(NetClient { reader, writer: stream, session: None })
+    }
+
+    /// The live session id, once `open` or `resume` succeeded.
+    pub fn session(&self) -> Option<u64> {
+        self.session
+    }
+
+    /// Read one reply frame; a `Status` frame becomes a typed error.
+    fn reply(&mut self, expect: u8, what: &str) -> Result<Vec<u8>> {
+        let (tag, payload) = match read_frame(&mut self.reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => bail!("server hung up waiting for {what}"),
+            Err(e) => return Err(anyhow::Error::new(e).context(format!("reading {what}"))),
+        };
+        if tag == super::net::TAG_STATUS {
+            let (code, message) = decode_status(&payload)
+                .map_err(|e| anyhow::Error::new(e).context("malformed status frame"))?;
+            return Err(anyhow::Error::new(NetStatus { code, message })
+                .context(format!("server refused {what}")));
+        }
+        if tag != expect {
+            bail!("expected frame 0x{expect:02x} for {what}, got 0x{tag:02x}");
+        }
+        Ok(payload)
+    }
+
+    fn send(&mut self, tag: u8, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.writer, tag, payload).context("writing frame")
+    }
+
+    /// Open a session: dimensionality `d`, optional pinned pblock, warm-up
+    /// prefix (a whole number of rows). Returns the session id.
+    pub fn open(&mut self, d: usize, pblock: Option<usize>, warmup: &[f32]) -> Result<u64> {
+        if self.session.is_some() {
+            bail!("a session is already open on this client");
+        }
+        let mut payload = Vec::with_capacity(12 + warmup.len() * 4);
+        payload.extend_from_slice(&(d as u32).to_le_bytes());
+        payload.extend_from_slice(&(pblock.unwrap_or(0) as u32).to_le_bytes());
+        payload.extend_from_slice(&(warmup.len() as u32).to_le_bytes());
+        encode_f32_le(warmup, &mut payload);
+        self.send(TAG_OPEN, &payload)?;
+        let reply = self.reply(TAG_OPENED, "open")?;
+        let (id, _pblock) = parse_id_u32(&reply, "opened")?;
+        self.session = Some(id);
+        Ok(id)
+    }
+
+    /// Resume a session from ticket bytes (as returned by [`NetClient::suspend`]
+    /// — possibly by a different client against a different server process).
+    /// Returns the session id.
+    pub fn resume(&mut self, ticket: &[u8]) -> Result<u64> {
+        if self.session.is_some() {
+            bail!("a session is already open on this client");
+        }
+        self.send(TAG_RESUME, ticket)?;
+        let reply = self.reply(TAG_RESUMED, "resume")?;
+        let (id, _pblock) = parse_id_u32(&reply, "resumed")?;
+        self.session = Some(id);
+        Ok(id)
+    }
+
+    /// Push a block of samples (row-major, a whole number of rows) and
+    /// block for its `Scores` reply — every score the block is owed in
+    /// lock-step mode, whatever had arrived otherwise.
+    pub fn push(&mut self, samples: &[f32]) -> Result<Vec<f32>> {
+        let id = self.session.context("no session open on this client")?;
+        let mut payload = Vec::with_capacity(8 + samples.len() * 4);
+        payload.extend_from_slice(&id.to_le_bytes());
+        encode_f32_le(samples, &mut payload);
+        self.send(TAG_PUSH, &payload)?;
+        let reply = self.reply(TAG_SCORES, "push")?;
+        parse_scores(&reply, id)
+    }
+
+    /// Close the session: TLAST flush, tail scores, accounting.
+    pub fn close(&mut self) -> Result<NetClose> {
+        let id = self.session.take().context("no session open on this client")?;
+        self.send(TAG_CLOSE, &id.to_le_bytes())?;
+        let scores = parse_scores(&self.reply(TAG_SCORES, "close")?, id)?;
+        let reply = self.reply(TAG_CLOSED, "close")?;
+        let mut b = reply.as_slice();
+        let rid = take_u64(&mut b, "closed session id")?;
+        if rid != id {
+            bail!("closed frame names session {rid}, expected {id}");
+        }
+        let samples = take_u64(&mut b, "closed samples")?;
+        let flits = take_u64(&mut b, "closed flits")?;
+        let padded_tail = take_u8(&mut b, "closed padded_tail")? != 0;
+        let tail_valid = take_u32(&mut b, "closed tail_valid")? as usize;
+        Ok(NetClose { scores, samples, flits, padded_tail, tail_valid })
+    }
+
+    /// Suspend the session into a portable ticket. Returns the raw ticket
+    /// bytes (feed them to [`NetClient::resume`] on any server built from
+    /// the same config) plus any scores that were still in flight.
+    pub fn suspend(&mut self) -> Result<(Vec<u8>, Vec<f32>)> {
+        let id = self.session.take().context("no session open on this client")?;
+        self.send(TAG_SUSPEND, &id.to_le_bytes())?;
+        let scores = parse_scores(&self.reply(TAG_SCORES, "suspend")?, id)?;
+        let reply = self.reply(TAG_SUSPENDED, "suspend")?;
+        let mut b = reply.as_slice();
+        let rid = take_u64(&mut b, "suspended session id")?;
+        if rid != id {
+            bail!("suspended frame names session {rid}, expected {id}");
+        }
+        Ok((b.to_vec(), scores))
+    }
+}
+
+fn parse_id_u32(payload: &[u8], what: &str) -> Result<(u64, u32)> {
+    let mut b = payload;
+    let id = take_u64(&mut b, what)?;
+    let v = take_u32(&mut b, what)?;
+    Ok((id, v))
+}
+
+fn parse_scores(payload: &[u8], id: u64) -> Result<Vec<f32>> {
+    let mut b = payload;
+    let rid = take_u64(&mut b, "scores session id")?;
+    if rid != id {
+        bail!("scores frame names session {rid}, expected {id}");
+    }
+    if b.len() % 4 != 0 {
+        bail!("scores body of {} bytes is not a whole number of f32 values", b.len());
+    }
+    let mut scores = Vec::new();
+    decode_f32_le(b, &mut scores);
+    Ok(scores)
+}
+
+fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> Result<&'a [u8]> {
+    if b.len() < n {
+        bail!("truncated {what}");
+    }
+    let (head, rest) = b.split_at(n);
+    *b = rest;
+    Ok(head)
+}
+
+fn take_u8(b: &mut &[u8], what: &str) -> Result<u8> {
+    Ok(take(b, 1, what)?[0])
+}
+
+fn take_u32(b: &mut &[u8], what: &str) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(b, 4, what)?.try_into().unwrap()))
+}
+
+fn take_u64(b: &mut &[u8], what: &str) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(b, 8, what)?.try_into().unwrap()))
+}

@@ -51,7 +51,7 @@
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -527,6 +527,9 @@ pub enum OperatorError {
     Refused(String),
     /// Request body over the size cap.
     PayloadTooLarge,
+    /// Concurrent-connection cap reached; the request was shed before a
+    /// handler thread was spawned.
+    Overloaded,
 }
 
 impl OperatorError {
@@ -538,6 +541,7 @@ impl OperatorError {
             OperatorError::MethodNotAllowed => (405, "Method Not Allowed"),
             OperatorError::Refused(_) => (409, "Conflict"),
             OperatorError::PayloadTooLarge => (413, "Payload Too Large"),
+            OperatorError::Overloaded => (503, "Service Unavailable"),
         }
     }
 }
@@ -551,6 +555,9 @@ impl std::fmt::Display for OperatorError {
             OperatorError::MethodNotAllowed => write!(f, "method not allowed"),
             OperatorError::Refused(m) => write!(f, "refused: {m}"),
             OperatorError::PayloadTooLarge => write!(f, "payload too large"),
+            OperatorError::Overloaded => {
+                write!(f, "too many concurrent operator connections — retry")
+            }
         }
     }
 }
@@ -757,11 +764,26 @@ fn parse_body(body: &str) -> Result<BTreeMap<String, Json>, OperatorError> {
 const MAX_HEAD: usize = 8 * 1024;
 /// Body size cap (64 KiB).
 const MAX_BODY: usize = 64 * 1024;
+/// Concurrent-connection cap. Connections past the cap are shed on the
+/// accept thread with a `503` instead of spawning a handler — a flood
+/// can no longer exhaust threads or memory.
+const MAX_CONNECTIONS: usize = 64;
+
+/// Decrements the live-connection gauge when a handler thread ends, by
+/// any path (response written, I/O error, panic unwind).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
 
 /// The operator plane's HTTP listener. One accept thread; each connection
 /// is served on its own short-lived thread (scrapes and control verbs are
 /// rare and tiny — simplicity over throughput, matching the crate's
-/// hand-rolled, dependency-free style).
+/// hand-rolled, dependency-free style), with the concurrent-thread count
+/// bounded by [`MAX_CONNECTIONS`].
 pub struct OperatorServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -776,23 +798,57 @@ impl OperatorServer {
         auth_token: Option<String>,
         fabric: Arc<FabricServer>,
     ) -> Result<OperatorServer> {
+        Self::start_with_limit(addr, auth_token, fabric, MAX_CONNECTIONS)
+    }
+
+    /// [`OperatorServer::start`] with an explicit concurrent-connection
+    /// cap — the flood regression test runs with a tiny one.
+    pub fn start_with_limit(
+        addr: &str,
+        auth_token: Option<String>,
+        fabric: Arc<FabricServer>,
+        max_connections: usize,
+    ) -> Result<OperatorServer> {
+        let limit = max_connections.max(1);
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding the operator listener on {addr}"))?;
         let local = listener.local_addr().context("resolving the operator listener address")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let live = Arc::new(AtomicUsize::new(0));
         let accept = std::thread::Builder::new()
             .name("operator".into())
             .spawn(move || loop {
                 match listener.accept() {
-                    Ok((stream, _)) => {
+                    Ok((mut stream, _)) => {
                         if stop2.load(Ordering::SeqCst) {
                             break;
                         }
+                        if live.load(Ordering::SeqCst) >= limit {
+                            // Shed on the accept thread: one short write,
+                            // no handler spawned, the listener stays
+                            // responsive for the connections under the cap.
+                            let e = OperatorError::Overloaded;
+                            let (status, reason) = e.status();
+                            write_response(
+                                &mut stream,
+                                status,
+                                reason,
+                                "application/json",
+                                &error_json(&e),
+                            );
+                            continue;
+                        }
+                        live.fetch_add(1, Ordering::SeqCst);
+                        let guard = ConnGuard(Arc::clone(&live));
                         let fabric = Arc::clone(&fabric);
                         let token = auth_token.clone();
+                        // If the spawn itself fails, the closure (and the
+                        // guard in it) is dropped, keeping the gauge honest
+                        // under thread exhaustion.
                         let _ = std::thread::Builder::new().name("operator-conn".into()).spawn(
                             move || {
+                                let _guard = guard;
                                 let _ = serve_connection(stream, &fabric, token.as_deref());
                             },
                         );

@@ -141,28 +141,58 @@ pub struct SinkRecord {
     pub scores: Vec<f32>,
 }
 
+/// Read exactly `buf.len()` bytes from `r`. `Ok(true)` when the buffer was
+/// filled; `Ok(false)` when EOF arrived first — at a frame boundary that is
+/// a clean end, mid-frame it is a torn tail, and the caller treats both as
+/// "stop scanning here". I/O errors propagate.
+fn fill(r: &mut impl Read, buf: &mut [u8]) -> std::io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..])?;
+        if n == 0 {
+            return Ok(false);
+        }
+        got += n;
+    }
+    Ok(true)
+}
+
 /// Scan a sink file: returns every frame that parses and CRC-checks, plus
 /// the byte offset at which scanning stopped (== file length for a clean
 /// file; the start of the first torn/corrupt frame otherwise). Never
 /// panics on arbitrary bytes.
+///
+/// The scan streams: frames are read one at a time through a fixed-size
+/// buffered reader into a reusable frame buffer bounded by
+/// [`MAX_FRAME_PAYLOAD`], so recovering a multi-gigabyte sink holds one
+/// frame in memory at a time instead of slurping the whole file.
 pub fn scan(path: &Path) -> Result<(Vec<SinkRecord>, u64)> {
-    let mut bytes = Vec::new();
-    File::open(path)
-        .and_then(|mut f| f.read_to_end(&mut bytes))
-        .with_context(|| format!("reading score sink {}", path.display()))?;
+    let file =
+        File::open(path).with_context(|| format!("reading score sink {}", path.display()))?;
+    let mut reader = std::io::BufReader::with_capacity(64 << 10, file);
     let mut records = Vec::new();
-    let mut pos = 0usize;
-    while bytes.len() - pos >= 4 {
-        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+    let mut pos = 0u64;
+    let mut frame = Vec::new(); // payload + trailing CRC, reused across frames
+    loop {
+        let mut len_word = [0u8; 4];
+        let filled = fill(&mut reader, &mut len_word)
+            .with_context(|| format!("reading score sink {}", path.display()))?;
+        if !filled {
+            break; // clean EOF at a frame boundary, or a torn length word
+        }
+        let len = u32::from_le_bytes(len_word) as usize;
         if len < PAYLOAD_HEADER || len > MAX_FRAME_PAYLOAD {
             break; // torn or garbage length word
         }
-        let Some(frame_end) = pos.checked_add(4 + len + 4) else { break };
-        if frame_end > bytes.len() {
+        frame.clear();
+        frame.resize(len + 4, 0);
+        let filled = fill(&mut reader, &mut frame)
+            .with_context(|| format!("reading score sink {}", path.display()))?;
+        if !filled {
             break; // torn tail: frame runs past EOF
         }
-        let payload = &bytes[pos + 4..pos + 4 + len];
-        let stored = u32::from_le_bytes(bytes[pos + 4 + len..frame_end].try_into().unwrap());
+        let payload = &frame[..len];
+        let stored = u32::from_le_bytes(frame[len..].try_into().unwrap());
         if crc32(payload) != stored {
             break; // corrupt frame
         }
@@ -177,9 +207,9 @@ pub fn scan(path: &Path) -> Result<(Vec<SinkRecord>, u64)> {
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
         records.push(SinkRecord { session, seq, scores });
-        pos = frame_end;
+        pos += (4 + len + 4) as u64;
     }
-    Ok((records, pos as u64))
+    Ok((records, pos))
 }
 
 /// Crash recovery: scan the file and truncate it at the end of its last

@@ -89,8 +89,9 @@
 use anyhow::{bail, Context, Result};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -98,7 +99,7 @@ use super::decoupler::Decoupler;
 use super::dma::unpad_into;
 use super::faults::{FaultEvent, FaultInjector};
 use super::hotswap::{self, ControllerEnv, ControllerTarget, PblockCtl, SwapEvent};
-use super::message::{Flit, FlitSource, Port};
+use super::message::{decode_f32_le, Flit, FlitSource, Port};
 use super::operator::{FabricSnapshot, PartitionTelemetry, ServerTelemetry, SessionTelemetry};
 use super::pblock::{LoadedRm, Pblock, PblockReport};
 use super::reconfig::DfxManager;
@@ -144,6 +145,46 @@ struct InboxShared {
     space: Condvar,
     /// Signalled when a flit arrives or the stream ends.
     ready: Condvar,
+    /// Latched once any lock acquisition observed a poisoned mutex — a
+    /// thread panicked inside an inbox critical section. The queue is
+    /// force-closed at recovery, so the failure stays confined to this
+    /// one session: its producer errors fast, its service loop sees
+    /// end-of-stream, and the partition worker survives to serve the
+    /// next session. The episode boundary reads this flag to report a
+    /// typed [`ServeError::Poisoned`] instead of cascading the panic.
+    poisoned: AtomicBool,
+}
+
+impl InboxShared {
+    /// Recover a poisoned guard: latch the flag and force-close the
+    /// queue so every other party backs out instead of re-panicking.
+    fn recover<'a>(
+        &self,
+        p: std::sync::PoisonError<MutexGuard<'a, InboxQueue>>,
+    ) -> MutexGuard<'a, InboxQueue> {
+        self.poisoned.store(true, Ordering::SeqCst);
+        let mut q = p.into_inner();
+        q.force_closed = true;
+        q.buf.clear();
+        self.space.notify_all();
+        self.ready.notify_all();
+        q
+    }
+
+    /// Lock the queue, surviving poison (see [`InboxShared::recover`]).
+    fn lock_q(&self) -> MutexGuard<'_, InboxQueue> {
+        self.q.lock().unwrap_or_else(|p| self.recover(p))
+    }
+
+    /// Wait on `space`, surviving poison.
+    fn wait_space<'a>(&self, q: MutexGuard<'a, InboxQueue>) -> MutexGuard<'a, InboxQueue> {
+        self.space.wait(q).unwrap_or_else(|p| self.recover(p))
+    }
+
+    /// Wait on `ready`, surviving poison.
+    fn wait_ready<'a>(&self, q: MutexGuard<'a, InboxQueue>) -> MutexGuard<'a, InboxQueue> {
+        self.ready.wait(q).unwrap_or_else(|p| self.recover(p))
+    }
 }
 
 /// Error returned by [`InboxSender::send`] once the server has force-closed
@@ -168,7 +209,7 @@ pub struct InboxSender {
 
 impl InboxSender {
     pub fn send(&self, flit: Flit) -> Result<(), InboxClosed> {
-        let mut q = self.inner.q.lock().unwrap();
+        let mut q = self.inner.lock_q();
         loop {
             if q.force_closed {
                 return Err(InboxClosed);
@@ -176,7 +217,7 @@ impl InboxSender {
             if q.buf.len() < self.inner.cap {
                 break;
             }
-            q = self.inner.space.wait(q).unwrap();
+            q = self.inner.wait_space(q);
         }
         q.buf.push_back(flit);
         drop(q);
@@ -186,7 +227,7 @@ impl InboxSender {
 
     /// Flits currently queued (telemetry / tests).
     pub fn len(&self) -> usize {
-        self.inner.q.lock().unwrap().buf.len()
+        self.inner.lock_q().buf.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -198,7 +239,7 @@ impl InboxSender {
     /// the producer hanging up — the suspend half of
     /// [`Session::suspend`].
     pub fn request_suspend(&self) {
-        let mut q = self.inner.q.lock().unwrap();
+        let mut q = self.inner.lock_q();
         q.suspended = true;
         drop(q);
         self.inner.ready.notify_all();
@@ -207,7 +248,7 @@ impl InboxSender {
 
 impl Drop for InboxSender {
     fn drop(&mut self) {
-        self.inner.q.lock().unwrap().producer_done = true;
+        self.inner.lock_q().producer_done = true;
         self.inner.ready.notify_all();
     }
 }
@@ -220,7 +261,7 @@ pub(crate) struct InboxCtl {
 
 impl InboxCtl {
     fn force_close(&self) {
-        let mut q = self.inner.q.lock().unwrap();
+        let mut q = self.inner.lock_q();
         q.force_closed = true;
         q.buf.clear();
         drop(q);
@@ -228,9 +269,16 @@ impl InboxCtl {
         self.inner.ready.notify_all();
     }
 
+    /// True once any thread panicked inside this inbox's critical
+    /// section — the episode boundary maps this to
+    /// [`ServeError::Poisoned`].
+    pub(crate) fn poisoned(&self) -> bool {
+        self.inner.poisoned.load(Ordering::SeqCst)
+    }
+
     /// True once the client requested a suspend on this inbox.
     fn suspend_requested(&self) -> bool {
-        self.inner.q.lock().unwrap().suspended
+        self.inner.lock_q().suspended
     }
 
     /// Server-side suspend request — the operator plane's drain path.
@@ -238,7 +286,7 @@ impl InboxCtl {
     /// flits are still delivered, then the stream ends so the worker
     /// parks the session instead of tearing it down.
     pub(crate) fn request_suspend(&self) {
-        let mut q = self.inner.q.lock().unwrap();
+        let mut q = self.inner.lock_q();
         q.suspended = true;
         drop(q);
         self.inner.ready.notify_all();
@@ -246,7 +294,7 @@ impl InboxCtl {
 
     /// Flits currently queued behind this door (telemetry).
     pub(crate) fn queued(&self) -> usize {
-        self.inner.q.lock().unwrap().buf.len()
+        self.inner.lock_q().buf.len()
     }
 
     /// Mint a fresh consumer half over the same shared queue — used when
@@ -272,6 +320,7 @@ impl SessionInbox {
             q: Mutex::new(InboxQueue::default()),
             space: Condvar::new(),
             ready: Condvar::new(),
+            poisoned: AtomicBool::new(false),
         });
         (InboxSender { inner: Arc::clone(&inner) }, SessionInbox { inner })
     }
@@ -280,10 +329,15 @@ impl SessionInbox {
         InboxCtl { inner: Arc::clone(&self.inner) }
     }
 
+    /// True once any thread panicked inside this inbox's critical section.
+    pub(crate) fn poisoned(&self) -> bool {
+        self.inner.poisoned.load(Ordering::SeqCst)
+    }
+
     /// One consistent view of the inbox's flags — what the multiplexer
     /// uses to decide between draining, parking and finishing a slot.
     pub(crate) fn probe(&self) -> InboxProbe {
-        let q = self.inner.q.lock().unwrap();
+        let q = self.inner.lock_q();
         InboxProbe {
             queued: q.buf.len(),
             producer_done: q.producer_done,
@@ -311,7 +365,7 @@ impl InboxProbe {
 
 impl FlitSource for SessionInbox {
     fn recv_flit(&mut self) -> Option<Flit> {
-        let mut q = self.inner.q.lock().unwrap();
+        let mut q = self.inner.lock_q();
         loop {
             if q.force_closed {
                 return None;
@@ -324,12 +378,12 @@ impl FlitSource for SessionInbox {
             if q.producer_done || q.suspended {
                 return None;
             }
-            q = self.inner.ready.wait(q).unwrap();
+            q = self.inner.wait_ready(q);
         }
     }
 
     fn try_recv_flit(&mut self) -> Option<Flit> {
-        let mut q = self.inner.q.lock().unwrap();
+        let mut q = self.inner.lock_q();
         if q.force_closed {
             return None;
         }
@@ -424,6 +478,11 @@ pub enum ServeError {
     /// The detector exposes no window snapshot, so the session state
     /// cannot be checkpointed / swapped for `op`.
     NoSnapshot { op: SnapshotOp },
+    /// A thread panicked inside the session's inbox critical section,
+    /// poisoning its lock. The inbox was force-closed at recovery, so
+    /// the damage is confined: this session dies with this error while
+    /// the partition worker survives to serve the next one.
+    Poisoned,
     /// The service loop itself failed mid-stream.
     Service { detail: String },
 }
@@ -439,6 +498,7 @@ impl ServeError {
             ServeError::ArmScriptedSwap { .. } => "arm_scripted_swap",
             ServeError::PlanFaults { .. } => "plan_faults",
             ServeError::NoSnapshot { .. } => "no_snapshot",
+            ServeError::Poisoned => "poisoned",
             ServeError::Service { .. } => "service",
         }
     }
@@ -472,6 +532,13 @@ impl std::fmt::Display for ServeError {
                     f,
                     "multiplexing: detector exposes no window snapshot — cannot swap \
                      session state"
+                )
+            }
+            ServeError::Poisoned => {
+                write!(
+                    f,
+                    "a client thread panicked inside the session inbox — the session \
+                     was terminated; the partition survives"
                 )
             }
             ServeError::Service { detail } => write!(f, "{detail}"),
@@ -685,6 +752,14 @@ fn worker_loop(env: WorkerEnv, mut scripted: Vec<ScriptedSwap>, jobs: Receiver<S
             // never come. A live park (quarantine eviction) keeps the
             // door open — the stream continues elsewhere.
             if let Some(a) = st.active.remove(&env.id) {
+                // A panic inside the inbox critical section poisoned its
+                // lock; the recovery path force-closed the queue, so the
+                // episode above ended with a truncated stream. Surface
+                // that as a typed error on this session's outcome — the
+                // partition itself carries on.
+                if a.door.poisoned() && outcome.error.is_none() {
+                    outcome.error = Some(ServeError::Poisoned);
+                }
                 if !live_park {
                     a.door.force_close();
                 }
@@ -1261,6 +1336,13 @@ fn mux_switch(
 /// Retire a multiplexed session: store its outcome, give the slot back.
 fn mux_finish(env: &WorkerEnv, slot: MuxSlot, error: Option<ServeError>) {
     let MuxSlot { session, flits, samples, flits_out, busy_secs, scores, inbox, .. } = slot;
+    // Same poison boundary as the dedicated path in `worker_loop`: a
+    // panic inside this tenant's inbox becomes a typed error on this
+    // session only; the multiplexer keeps serving its other tenants.
+    let error = match error {
+        None if inbox.poisoned() => Some(ServeError::Poisoned),
+        e => e,
+    };
     drop(inbox);
     let outcome = SessionOutcome {
         report: if error.is_none() {
@@ -2349,6 +2431,12 @@ impl Session {
         self.pushed + (self.staged.len() / self.d) as u64
     }
 
+    /// The session's sample dimensionality — the network front end
+    /// validates a `Push` body is a whole number of rows before decoding.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
     /// Push `samples` (row-major, a whole number of rows). Full chunks are
     /// cut into flits exactly like the input DMA and sent through the
     /// bounded inbox — this call **blocks** while the inbox is full.
@@ -2381,6 +2469,55 @@ impl Session {
         }
         self.staged.extend_from_slice(rest);
         Ok(())
+    }
+
+    /// Push a raw little-endian f32 wire body — the network front end's
+    /// half of the zero-copy contract. Each value is decoded from the
+    /// socket buffer directly into its flit allocation (or the staged
+    /// tail), so a `Push` frame pays the same single copy as
+    /// [`Session::push`] pays from a caller's slice; there is no
+    /// intermediate `Vec<f32>`. The byte length must be a whole number
+    /// of rows (`4 * d` bytes per sample); semantics are otherwise
+    /// identical to [`Session::push`], including inbox backpressure.
+    pub fn push_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        let row = 4 * self.d;
+        if bytes.len() % row != 0 {
+            bail!(
+                "push of {} bytes is not a whole number of samples (d = {}, 4 bytes per value)",
+                bytes.len(),
+                self.d
+            );
+        }
+        let flit_len = self.chunk * self.d;
+        let mut rest = bytes;
+        // Complete a partially staged chunk first.
+        if !self.staged.is_empty() {
+            let take = ((flit_len - self.staged.len()) * 4).min(rest.len());
+            decode_f32_le(&rest[..take], &mut self.staged);
+            rest = &rest[take..];
+            if self.staged.len() == flit_len {
+                let full = std::mem::take(&mut self.staged);
+                self.emit_full(full)?;
+            }
+        }
+        // Cut whole flits straight from the wire bytes.
+        while rest.len() >= flit_len * 4 {
+            let mut data = Vec::with_capacity(flit_len);
+            decode_f32_le(&rest[..flit_len * 4], &mut data);
+            self.emit_full(data)?;
+            rest = &rest[flit_len * 4..];
+        }
+        decode_f32_le(rest, &mut self.staged);
+        Ok(())
+    }
+
+    /// Flits emitted into the inbox so far (the staged partial chunk is
+    /// not counted). Cumulative across suspend/resume — a resumed
+    /// session continues from its ticket's sequence number — which is
+    /// what lets the network front end pair every `Push` with exactly
+    /// the score flits it is owed.
+    pub fn flits_sent(&self) -> u64 {
+        self.seq
     }
 
     fn emit_full(&mut self, data: Vec<f32>) -> Result<()> {
@@ -2681,6 +2818,72 @@ mod tests {
         assert_eq!(rx.try_recv_flit().unwrap().seq, 7);
         drop(tx);
         assert!(rx.recv_flit().is_none(), "producer hang-up ends the stream");
+    }
+
+    /// Panic inside `shared`'s inbox critical section from a throwaway
+    /// thread, poisoning the queue mutex the way a dying producer would.
+    fn poison_inbox(shared: &Arc<InboxShared>) {
+        let inner = Arc::clone(shared);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+            let _q = inner.q.lock().unwrap();
+            panic!("injected: thread dies while holding the inbox lock");
+        }));
+    }
+
+    #[test]
+    fn poisoned_inbox_degrades_to_typed_closure_not_cascading_panics() {
+        let (tx, mut rx) = SessionInbox::bounded(4);
+        tx.send(flit(0)).unwrap();
+        poison_inbox(&tx.inner);
+        // Neither side panics: the consumer sees a clean end-of-stream
+        // (recovery force-closed the queue), the producer fails fast,
+        // and both observe the latched poison flag.
+        assert!(rx.recv_flit().is_none(), "poison recovery must end the stream, not panic");
+        assert!(tx.send(flit(1)).is_err(), "sends after poisoning must fail fast");
+        assert!(rx.poisoned());
+        assert!(rx.ctl().poisoned());
+    }
+
+    #[test]
+    fn poisoned_session_dies_typed_and_partition_survives() {
+        let cfg = tiny_cfg(8, DetectorKind::Loda, 2);
+        let data = gaussian_data(16, 2, 9);
+        let server = FabricServer::start(cfg).unwrap();
+        let session = server.open(SessionSpec::new(2, data.clone())).unwrap();
+        poison_inbox(&session.tx.as_ref().unwrap().inner);
+        let err = session.close().expect_err("a poisoned session must die");
+        assert_eq!(
+            err.downcast_ref::<ServeError>(),
+            Some(&ServeError::Poisoned),
+            "the closure must carry the typed poison error: {err:#}"
+        );
+        // The partition survives the poisoned tenant: a fresh session on
+        // the same (sole) pblock still serves end to end.
+        let mut s = server.open(SessionSpec::new(2, data.clone())).unwrap();
+        s.push(&data).unwrap();
+        let closed = s.close().unwrap();
+        assert_eq!(closed.scores.len(), 16);
+    }
+
+    #[test]
+    fn push_bytes_matches_push_bit_for_bit() {
+        let cfg = tiny_cfg(8, DetectorKind::Loda, 3);
+        let data = gaussian_data(40, 3, 11);
+        let server = FabricServer::start(cfg).unwrap();
+        let warmup = data[..16 * 3].to_vec();
+        let mut by_slice = server.open(SessionSpec::new(3, warmup.clone()).on_pblock(1)).unwrap();
+        by_slice.push(&data[..7 * 3]).unwrap();
+        by_slice.push(&data[7 * 3..]).unwrap();
+        let expect = by_slice.close().unwrap().scores;
+        // Same stream as raw little-endian wire bytes, same odd split.
+        let mut wire = Vec::new();
+        crate::fabric::message::encode_f32_le(&data, &mut wire);
+        let mut by_bytes = server.open(SessionSpec::new(3, warmup).on_pblock(1)).unwrap();
+        by_bytes.push_bytes(&wire[..7 * 3 * 4]).unwrap();
+        by_bytes.push_bytes(&wire[7 * 3 * 4..]).unwrap();
+        assert_eq!(by_bytes.flits_sent(), 5, "40 samples / chunk 8 = 5 whole flits");
+        let closed = by_bytes.close().unwrap();
+        assert_eq!(closed.scores, expect, "wire-byte pushes must be bit-identical");
     }
 
     #[test]

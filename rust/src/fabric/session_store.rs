@@ -31,10 +31,14 @@ use super::snapshot::{Reader, Writer};
 use crate::config::RmKind;
 use crate::detectors::DetectorKind;
 
-/// Ticket header magic ("fSEAD Session TicKet").
-const TICKET_MAGIC: [u8; 4] = *b"FSTK";
-/// Ticket layout version; bump on any wire-format change.
-const TICKET_VERSION: u8 = 1;
+/// Ticket header magic ("fSEAD Session TicKet"). Public because tickets
+/// now travel over the wire — the network plane's `Suspended` frame
+/// carries these bytes verbatim, and clients can sanity-check them.
+pub const TICKET_MAGIC: [u8; 4] = *b"FSTK";
+/// Ticket layout version; bump on any wire-format change. Public for the
+/// same reason: a `Resume` frame's ticket must match the version of the
+/// server it lands on, which need not be the process that minted it.
+pub const TICKET_VERSION: u8 = 1;
 
 /// Why a session was parked.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

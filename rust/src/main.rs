@@ -1,6 +1,7 @@
 //! fSEAD CLI — the leader entrypoint. Subcommands are filled in by the
 //! experiment harness (`fsead exp …`), the one-shot runner (`fsead run …`),
-//! the persistent streaming session server (`fsead serve …`) and the
+//! the persistent streaming session server (`fsead serve …`), its
+//! network-facing frame protocol (`fsead net …`) and the
 //! resource/reconfiguration inspectors.
 
 fn main() {

@@ -264,6 +264,59 @@ fn scraping_at_10hz_leaves_scores_bit_identical() {
 }
 
 #[test]
+fn connection_flood_sheds_with_503_and_recovers() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let server = Arc::new(FabricServer::start(cfg).unwrap());
+    let op =
+        OperatorServer::start_with_limit("127.0.0.1:0", None, Arc::clone(&server), 2).unwrap();
+
+    // Two connections camp on both handler slots by sending an incomplete
+    // request head and holding the socket open — each parks its handler
+    // thread in the (timed) read loop.
+    let hold = |addr: SocketAddr| -> TcpStream {
+        let mut s = TcpStream::connect(addr).expect("connect holder");
+        s.write_all(b"GET /metrics HTTP/1.1\r\n").unwrap();
+        s
+    };
+    let h1 = hold(op.addr());
+    let h2 = hold(op.addr());
+
+    // Everything past the cap is shed on the accept thread with a named
+    // 503 — no handler thread is spawned for it, and the listener keeps
+    // answering instead of silently queueing work. (The holders were
+    // accepted first, so the gauge is at the cap by the time these probes
+    // reach the accept loop.)
+    for _ in 0..4 {
+        let (status, body) = http(op.addr(), "GET", "/metrics", "", None);
+        assert_eq!(status, 503, "{body}");
+        assert!(body.contains("too many concurrent operator connections"), "{body}");
+    }
+
+    // Releasing the campers frees their slots; the server serves normally
+    // again (poll briefly — the handlers notice the hang-up on their own
+    // schedule).
+    drop(h1);
+    drop(h2);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, text) = http(op.addr(), "GET", "/metrics", "", None);
+        if status == 200 {
+            assert!(text.contains("fsead_server_sessions_served_total"), "{text}");
+            break;
+        }
+        assert_eq!(status, 503, "unexpected status during recovery");
+        assert!(
+            std::time::Instant::now() < deadline,
+            "server never recovered after the flood"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    op.stop();
+    Arc::try_unwrap(server).ok().expect("sole owner").shutdown().unwrap();
+}
+
+#[test]
 fn auth_and_error_mapping() {
     let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
     let server = Arc::new(FabricServer::start(cfg).unwrap());
