@@ -1,0 +1,371 @@
+//! Bench: the fault-tolerant session router — 64 concurrent loopback
+//! clients through 1 router onto 4 `fsead net` workers, in both execution
+//! modes, with one worker killed mid-run. Reports sessions/sec, push
+//! round-trip p50/p99, the p99 client-visible pause of a re-shard (the
+//! push whose reply carried a `rerouted` notice), and the fleet recovery
+//! time from kill to the first successful re-admission on a survivor.
+//!
+//! The killed worker sits behind an in-process TCP proxy; severing the
+//! proxy is, from the router's side, `kill -9` of the worker — every live
+//! byte is gone and new connects are refused — while the bench keeps a
+//! clean handle for teardown.
+//!
+//! Emits `BENCH_router.json`; CI runs a smoke pass on every PR, validates
+//! the JSON and uploads it with the other BENCH artifacts.
+
+#[allow(dead_code)] // only `cap` is used from the shared harness here
+mod bench_util;
+use bench_util::cap;
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind, RouterCfg};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::ExecMode;
+use fsead::fabric::net::{NetServer, STATUS_REROUTED};
+use fsead::fabric::net_client::NetClient;
+use fsead::fabric::router::Router;
+use fsead::fabric::server::FabricServer;
+
+const WORKERS: usize = 4;
+const CLIENTS: usize = 64;
+const CHUNK: usize = 64;
+const CHECKPOINT_PUSHES: u64 = 4;
+
+fn worker_cfg(exec: ExecMode, base: u64) -> FseadConfig {
+    let mut cfg = FseadConfig { use_fpga: false, exec, chunk: CHUNK, ..FseadConfig::default() };
+    // Survivors absorb the dead worker's whole shard — admission head-room
+    // for every session landing on one worker must exist.
+    cfg.server.sessions_per_partition = CLIENTS + 8;
+    cfg.server.session_id_base = base;
+    cfg.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 2,
+        stream: 0,
+        lanes: 0,
+    });
+    cfg
+}
+
+fn percentile_ms(sorted_secs: &[f64], p: f64) -> f64 {
+    if sorted_secs.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_secs.len() - 1) as f64 * p).round() as usize;
+    sorted_secs[idx] * 1e3
+}
+
+/// Killable TCP pass-through (see `tests/router_resilience.rs`).
+struct Proxy {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Proxy {
+    fn start(upstream: String) -> Proxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("proxy bind");
+        let addr = listener.local_addr().expect("proxy addr").to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop2 = Arc::clone(&stop);
+        let conns2 = Arc::clone(&conns);
+        let accept = std::thread::spawn(move || {
+            for inbound in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(down) = inbound else { continue };
+                let Ok(up) = TcpStream::connect(&upstream) else { continue };
+                let down2 = down.try_clone().expect("clone");
+                let up2 = up.try_clone().expect("clone");
+                {
+                    let mut held = conns2.lock().unwrap();
+                    held.push(down.try_clone().expect("clone"));
+                    held.push(up.try_clone().expect("clone"));
+                }
+                std::thread::spawn(move || pump(down, up2));
+                std::thread::spawn(move || pump(up, down2));
+            }
+        });
+        Proxy { addr, stop, conns, accept: Mutex::new(Some(accept)) }
+    }
+
+    fn kill(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(&self.addr);
+        for s in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Proxy {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn pump(mut from: TcpStream, mut to: TcpStream) {
+    let mut buf = [0u8; 4096];
+    loop {
+        match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = to.shutdown(Shutdown::Both);
+}
+
+struct Row {
+    mode: &'static str,
+    sessions: u64,
+    samples: u64,
+    wall_secs: f64,
+    latencies: Vec<f64>,
+    reshard_pauses: Vec<f64>,
+    recovery_secs: Option<f64>,
+    rerouted: u64,
+    lost: u64,
+}
+
+fn main() {
+    let rounds: usize =
+        std::env::var("FSEAD_BENCH_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(1);
+    let samples = (cap() / CLIENTS).max(CHUNK * 6);
+    let pushes_per_session = samples.div_ceil(CHUNK);
+    let total_pushes = (CLIENTS * rounds * pushes_per_session) as u64;
+    let mut rows: Vec<Row> = Vec::new();
+    for mode in ExecMode::ALL {
+        let mut workers = Vec::new();
+        for i in 0..WORKERS {
+            let cfg = worker_cfg(mode, ((i + 1) as u64) << 32);
+            let server = Arc::new(FabricServer::start(cfg).expect("worker start"));
+            let net = NetServer::start_with_limit("127.0.0.1:0", Arc::clone(&server), CLIENTS + 8)
+                .expect("net start");
+            workers.push((server, net));
+        }
+        // Worker 0 is the one that dies: the router only ever sees its
+        // proxied address.
+        let proxy = Proxy::start(workers[0].1.addr().to_string());
+        let mut addrs = vec![proxy.addr.clone()];
+        addrs.extend(workers.iter().skip(1).map(|(_, net)| net.addr().to_string()));
+        let router = Router::start(&RouterCfg {
+            enabled: true,
+            addr: "127.0.0.1:0".into(),
+            workers: addrs,
+            max_connections: CLIENTS + 8,
+            heartbeat_ms: 50,
+            max_failures: 2,
+            checkpoint_pushes: CHECKPOINT_PUSHES,
+            connect_timeout_ms: 1_000,
+            io_timeout_ms: 0,
+            retry_deadline_ms: 10_000,
+            backoff_base_ms: 5,
+            ..RouterCfg::default()
+        })
+        .expect("router start");
+        let addr = router.addr().to_string();
+        let window = worker_cfg(mode, 0).hyper.window;
+
+        let pushed = AtomicU64::new(0);
+        let t0 = Instant::now();
+        let mut all_latencies: Vec<f64> = Vec::new();
+        let mut all_pauses: Vec<f64> = Vec::new();
+        let mut sessions = 0u64;
+        let mut total_samples = 0u64;
+        let mut recovery_secs: Option<f64> = None;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for client in 0..CLIENTS {
+                let addr = &addr;
+                let pushed = &pushed;
+                handles.push(scope.spawn(move || -> (u64, u64, Vec<f64>, Vec<f64>) {
+                    let mut latencies = Vec::new();
+                    let mut pauses = Vec::new();
+                    let mut done = 0u64;
+                    let mut scored = 0u64;
+                    for round in 0..rounds {
+                        let profile = DatasetProfile {
+                            name: "router",
+                            n: samples,
+                            d: 3,
+                            outliers: samples / 50,
+                            clusters: 2,
+                        };
+                        let ds = generate_profile(&profile, (client * 131 + round) as u64 + 1);
+                        let mut c = NetClient::connect(addr).expect("connect");
+                        c.open(ds.d, Some(1), ds.warmup(window)).expect("open");
+                        let mut got = 0usize;
+                        for block in ds.data.chunks(CHUNK * ds.d) {
+                            let t = Instant::now();
+                            let scores = c.push(block).expect("push");
+                            let dt = t.elapsed().as_secs_f64();
+                            pushed.fetch_add(1, Ordering::SeqCst);
+                            let rerouted = c
+                                .take_notices()
+                                .iter()
+                                .any(|n| n.code == STATUS_REROUTED);
+                            if rerouted {
+                                // The stall a client actually feels when its
+                                // session re-shards mid-push.
+                                pauses.push(dt);
+                            } else if block.len() == CHUNK * ds.d {
+                                latencies.push(dt);
+                            }
+                            got += scores.len();
+                        }
+                        let closed = c.close().expect("close");
+                        c.take_notices();
+                        got += closed.scores.len();
+                        assert_eq!(got, ds.n(), "every sample must score");
+                        done += 1;
+                        scored += got as u64;
+                    }
+                    (done, scored, latencies, pauses)
+                }));
+            }
+            // Killer: wait for a third of the total pushes, sever the
+            // proxy, then time the router's first successful re-admission.
+            let router = &router;
+            let proxy = &proxy;
+            let pushed = &pushed;
+            let killer = scope.spawn(move || -> Option<f64> {
+                while pushed.load(Ordering::SeqCst) < total_pushes / 3 {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                let t_kill = Instant::now();
+                proxy.kill();
+                let deadline = t_kill + std::time::Duration::from_secs(30);
+                while Instant::now() < deadline {
+                    if router.stats().rerouted >= 1 {
+                        return Some(t_kill.elapsed().as_secs_f64());
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                None
+            });
+            for h in handles {
+                let (done, scored, lat, pauses) = h.join().expect("client thread");
+                sessions += done;
+                total_samples += scored;
+                all_latencies.extend(lat);
+                all_pauses.extend(pauses);
+            }
+            recovery_secs = killer.join().expect("killer thread");
+        });
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        all_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        all_pauses.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = router.stats();
+        assert_eq!(stats.lost, 0, "the kill must re-shard sessions, not lose them");
+        router.stop();
+        drop(proxy);
+        for (server, net) in workers {
+            net.stop();
+            let mut server = server;
+            loop {
+                match Arc::try_unwrap(server) {
+                    Ok(s) => {
+                        s.shutdown().expect("shutdown");
+                        break;
+                    }
+                    Err(s) => {
+                        server = s;
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                }
+            }
+        }
+        println!(
+            "router_sessions/{}  {} sessions from {} clients over {} workers in {:.3} s — \
+             {:.2} sessions/s, push p50 {:.3} ms / p99 {:.3} ms, reshard pause p99 {:.3} ms \
+             ({} reshards), recovery {} ms, {} rerouted / {} lost",
+            mode.as_str(),
+            sessions,
+            CLIENTS,
+            WORKERS,
+            wall,
+            sessions as f64 / wall,
+            percentile_ms(&all_latencies, 0.50),
+            percentile_ms(&all_latencies, 0.99),
+            percentile_ms(&all_pauses, 0.99),
+            all_pauses.len(),
+            recovery_secs.map_or("n/a".into(), |s| format!("{:.1}", s * 1e3)),
+            stats.rerouted,
+            stats.lost
+        );
+        rows.push(Row {
+            mode: mode.as_str(),
+            sessions,
+            samples: total_samples,
+            wall_secs: wall,
+            latencies: all_latencies,
+            reshard_pauses: all_pauses,
+            recovery_secs,
+            rerouted: stats.rerouted,
+            lost: stats.lost,
+        });
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"router_sessions\",\n");
+    json.push_str(&format!(
+        "  \"workers\": {WORKERS},\n  \"clients\": {CLIENTS},\n  \"chunk\": {CHUNK},\n  \
+         \"checkpoint_pushes\": {CHECKPOINT_PUSHES},\n  \"rounds\": {rounds},\n  \
+         \"samples_per_session\": {samples},\n  \"rows\": [\n"
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        // null when nothing was measured — never a fabricated 0.0.
+        let (p50, p99) = if r.latencies.is_empty() {
+            ("null".into(), "null".into())
+        } else {
+            (
+                format!("{:.4}", percentile_ms(&r.latencies, 0.50)),
+                format!("{:.4}", percentile_ms(&r.latencies, 0.99)),
+            )
+        };
+        let pause_p99 = if r.reshard_pauses.is_empty() {
+            "null".into()
+        } else {
+            format!("{:.4}", percentile_ms(&r.reshard_pauses, 0.99))
+        };
+        let recovery = r.recovery_secs.map_or("null".into(), |s| format!("{:.4}", s * 1e3));
+        json.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"sessions\": {}, \"wall_secs\": {:.6}, \
+             \"sessions_per_sec\": {:.3}, \"samples_per_sec\": {:.1}, \
+             \"push_latency_p50_ms\": {p50}, \"push_latency_p99_ms\": {p99}, \
+             \"reshard_pause_p99_ms\": {pause_p99}, \"recovery_ms\": {recovery}, \
+             \"rerouted\": {}, \"lost\": {}, \"latency_samples\": {}, \
+             \"reshard_samples\": {}}}{}\n",
+            r.mode,
+            r.sessions,
+            r.wall_secs,
+            r.sessions as f64 / r.wall_secs,
+            r.samples as f64 / r.wall_secs,
+            r.rerouted,
+            r.lost,
+            r.latencies.len(),
+            r.reshard_pauses.len(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_router.json", &json) {
+        Ok(()) => println!("wrote BENCH_router.json"),
+        Err(e) => eprintln!("could not write BENCH_router.json: {e}"),
+    }
+}

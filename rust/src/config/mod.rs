@@ -328,6 +328,12 @@ pub struct ServerCfg {
     /// of failing it in place. Off by default — quarantine behaviour is
     /// then identical to earlier releases.
     pub evict_quarantined: bool,
+    /// First session id this server assigns (`fsead net --session-base`).
+    /// A router fronting N workers gives each a distinct base (e.g.
+    /// `i << 32`) so session ids — the consistent-hashing key and the
+    /// resume duplicate-detection key — never collide across processes.
+    /// 0 (the default) is bit-transparent to earlier releases.
+    pub session_id_base: u64,
 }
 
 impl Default for ServerCfg {
@@ -343,6 +349,7 @@ impl Default for ServerCfg {
             sink_fsync_records: 32,
             spill_dir: None,
             evict_quarantined: false,
+            session_id_base: 0,
         }
     }
 }
@@ -385,6 +392,68 @@ pub struct NetCfg {
 impl Default for NetCfg {
     fn default() -> Self {
         NetCfg { enabled: false, addr: "127.0.0.1:9191".into(), max_connections: 256 }
+    }
+}
+
+/// Session-router configuration (`[fabric.router]`): the `fsead route`
+/// process that shards sessions across N downstream `fsead net` workers by
+/// consistent hashing on session id and keeps streams alive through worker
+/// join/leave/death (see [`crate::fabric::router`]). Disabled by default —
+/// with the router off, clients speak to a worker directly and nothing in
+/// the wire protocol changes.
+#[derive(Clone, Debug)]
+pub struct RouterCfg {
+    /// Run the router (only meaningful to `fsead route` / config-driven
+    /// deployments; the fabric server itself never starts one).
+    pub enabled: bool,
+    /// Router listen address, e.g. `127.0.0.1:9290` (port 0 picks a port).
+    pub addr: String,
+    /// Downstream `fsead net` worker addresses (`workers = ["host:port", …]`).
+    pub workers: Vec<String>,
+    /// Concurrent client-connection cap, as `[fabric.net] max_connections`.
+    pub max_connections: usize,
+    /// Health-probe cadence in milliseconds (0 disables the prober; worker
+    /// death is then only detected on forward errors).
+    pub heartbeat_ms: u64,
+    /// Consecutive probe/forward failures before a worker is ejected from
+    /// the ring.
+    pub max_failures: u32,
+    /// Pushes between router-held ticket checkpoints — the replay window
+    /// that bounds both recovery cost and worst-case loss.
+    pub checkpoint_pushes: u64,
+    /// Soft cap, in bytes, on the per-session replay buffer; crossing it
+    /// forces an early checkpoint (and, if checkpointing keeps failing,
+    /// bounded loss reported as `resume_gap`).
+    pub replay_cap_bytes: usize,
+    /// Worker TCP connect timeout in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Worker socket read/write timeout in milliseconds (0 = none). A
+    /// wedged worker trips this and is treated as failed.
+    pub io_timeout_ms: u64,
+    /// Total retry budget (connect + resume + replay) per recovery, in
+    /// milliseconds, before the router moves to the next candidate worker.
+    pub retry_deadline_ms: u64,
+    /// First back-off delay between retries, in milliseconds (doubles up
+    /// to the deadline).
+    pub backoff_base_ms: u64,
+}
+
+impl Default for RouterCfg {
+    fn default() -> Self {
+        RouterCfg {
+            enabled: false,
+            addr: "127.0.0.1:9290".into(),
+            workers: Vec::new(),
+            max_connections: 256,
+            heartbeat_ms: 250,
+            max_failures: 3,
+            checkpoint_pushes: 8,
+            replay_cap_bytes: 4 << 20,
+            connect_timeout_ms: 1_000,
+            io_timeout_ms: 5_000,
+            retry_deadline_ms: 3_000,
+            backoff_base_ms: 10,
+        }
     }
 }
 
@@ -482,6 +551,8 @@ pub struct FseadConfig {
     pub operator: OperatorCfg,
     /// Network serving plane: the `fsead net` frame protocol (`[fabric.net]`).
     pub net: NetCfg,
+    /// Session router: `fsead route` sharding over workers (`[fabric.router]`).
+    pub router: RouterCfg,
     /// Fault injection + supervised recovery (`[fabric.faults]`).
     pub faults: FaultsCfg,
     /// Ingress policy for non-finite sample values (`[fabric] non_finite`).
@@ -505,6 +576,7 @@ impl Default for FseadConfig {
             server: ServerCfg::default(),
             operator: OperatorCfg::default(),
             net: NetCfg::default(),
+            router: RouterCfg::default(),
             faults: FaultsCfg::default(),
             non_finite: NonFinite::Error,
         }
@@ -633,6 +705,12 @@ impl FseadConfig {
         if let Some(v) = doc.get_bool("fabric.server", "evict_quarantined") {
             cfg.server.evict_quarantined = v;
         }
+        if let Some(v) = doc.get_int("fabric.server", "session_id_base") {
+            if v < 0 {
+                bail!("[fabric.server]: session_id_base must be >= 0 (got {v})");
+            }
+            cfg.server.session_id_base = v as u64;
+        }
         // [fabric.operator] — the /metrics + run-control listener
         if let Some(v) = doc.get_bool("fabric.operator", "enabled") {
             cfg.operator.enabled = v;
@@ -673,6 +751,84 @@ impl FseadConfig {
                 bail!("[fabric.net]: max_connections must be >= 1 (got {v})");
             }
             cfg.net.max_connections = v as usize;
+        }
+        // [fabric.router] — session sharding over worker processes
+        if let Some(v) = doc.get_bool("fabric.router", "enabled") {
+            cfg.router.enabled = v;
+        }
+        if let Some(v) = doc.get_str("fabric.router", "addr") {
+            if v.is_empty() {
+                bail!("[fabric.router]: addr must not be empty (host:port, e.g. 127.0.0.1:9290)");
+            }
+            if !v.contains(':') {
+                bail!("[fabric.router]: addr needs a port (host:port, got {v:?})");
+            }
+            cfg.router.addr = v.to_string();
+        }
+        if let Some(arr) = doc.get("fabric.router", "workers").and_then(|v| v.as_array()) {
+            for v in arr {
+                let s = v
+                    .as_str()
+                    .context("[fabric.router]: workers entries are \"host:port\" strings")?;
+                if !s.contains(':') {
+                    bail!("[fabric.router]: worker address needs a port (host:port, got {s:?})");
+                }
+                cfg.router.workers.push(s.to_string());
+            }
+        }
+        if let Some(v) = doc.get_int("fabric.router", "max_connections") {
+            if v <= 0 {
+                bail!("[fabric.router]: max_connections must be >= 1 (got {v})");
+            }
+            cfg.router.max_connections = v as usize;
+        }
+        if let Some(v) = doc.get_int("fabric.router", "heartbeat_ms") {
+            if v < 0 {
+                bail!("[fabric.router]: heartbeat_ms must be >= 0 (got {v})");
+            }
+            cfg.router.heartbeat_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.router", "max_failures") {
+            if v <= 0 {
+                bail!("[fabric.router]: max_failures must be >= 1 (got {v})");
+            }
+            cfg.router.max_failures = v as u32;
+        }
+        if let Some(v) = doc.get_int("fabric.router", "checkpoint_pushes") {
+            if v <= 0 {
+                bail!("[fabric.router]: checkpoint_pushes must be >= 1 (got {v})");
+            }
+            cfg.router.checkpoint_pushes = v as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.router", "replay_cap_bytes") {
+            if v <= 0 {
+                bail!("[fabric.router]: replay_cap_bytes must be >= 1 (got {v})");
+            }
+            cfg.router.replay_cap_bytes = v as usize;
+        }
+        if let Some(v) = doc.get_int("fabric.router", "connect_timeout_ms") {
+            if v <= 0 {
+                bail!("[fabric.router]: connect_timeout_ms must be >= 1 (got {v})");
+            }
+            cfg.router.connect_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.router", "io_timeout_ms") {
+            if v < 0 {
+                bail!("[fabric.router]: io_timeout_ms must be >= 0 (got {v})");
+            }
+            cfg.router.io_timeout_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.router", "retry_deadline_ms") {
+            if v <= 0 {
+                bail!("[fabric.router]: retry_deadline_ms must be >= 1 (got {v})");
+            }
+            cfg.router.retry_deadline_ms = v as u64;
+        }
+        if let Some(v) = doc.get_int("fabric.router", "backoff_base_ms") {
+            if v <= 0 {
+                bail!("[fabric.router]: backoff_base_ms must be >= 1 (got {v})");
+            }
+            cfg.router.backoff_base_ms = v as u64;
         }
         // [fabric.dfx] — live reconfiguration
         if let Some(v) = doc.get_bool("fabric.dfx", "enabled") {
@@ -913,6 +1069,24 @@ impl FseadConfig {
         }
         if self.net.max_connections == 0 {
             bail!("[fabric.net]: max_connections must be >= 1");
+        }
+        if self.router.enabled {
+            if self.router.addr.is_empty() {
+                bail!("[fabric.router]: enabled without a listen addr (host:port)");
+            }
+            if self.router.workers.is_empty() {
+                bail!("[fabric.router]: enabled without any workers — list the downstream \
+                       fsead net addresses in `workers`");
+            }
+        }
+        if self.router.max_connections == 0 {
+            bail!("[fabric.router]: max_connections must be >= 1");
+        }
+        if self.router.max_failures == 0 {
+            bail!("[fabric.router]: max_failures must be >= 1");
+        }
+        if self.router.checkpoint_pushes == 0 {
+            bail!("[fabric.router]: checkpoint_pushes must be >= 1");
         }
         let lifecycle = self.server.sessions_per_partition > 1 || self.server.idle_evict_flits > 0;
         if lifecycle {
@@ -1522,6 +1696,53 @@ r = 2
         bad.net.enabled = true;
         bad.net.addr.clear();
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn router_section_parses_with_defaults() {
+        // Off by default — a single worker without a router in front is
+        // bit-transparent to a direct `fsead net` connection.
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert!(!cfg.router.enabled);
+        assert_eq!(cfg.router.addr, "127.0.0.1:9290");
+        assert!(cfg.router.workers.is_empty());
+        assert_eq!(cfg.router.heartbeat_ms, 250);
+        assert_eq!(cfg.router.max_failures, 3);
+        assert_eq!(cfg.router.checkpoint_pushes, 8);
+        let text = "[fabric.router]\nenabled = true\naddr = \"0.0.0.0:9290\"\n\
+                    workers = [\"127.0.0.1:9191\", \"127.0.0.1:9192\"]\n\
+                    heartbeat_ms = 100\nmax_failures = 2\ncheckpoint_pushes = 4\n\
+                    io_timeout_ms = 2000\nretry_deadline_ms = 1500\nbackoff_base_ms = 5\n";
+        let cfg = FseadConfig::from_str(text).unwrap();
+        assert!(cfg.router.enabled);
+        assert_eq!(cfg.router.addr, "0.0.0.0:9290");
+        assert_eq!(cfg.router.workers, vec!["127.0.0.1:9191", "127.0.0.1:9192"]);
+        assert_eq!(cfg.router.heartbeat_ms, 100);
+        assert_eq!(cfg.router.max_failures, 2);
+        assert_eq!(cfg.router.checkpoint_pushes, 4);
+        assert_eq!(cfg.router.io_timeout_ms, 2000);
+        assert_eq!(cfg.router.retry_deadline_ms, 1500);
+        assert_eq!(cfg.router.backoff_base_ms, 5);
+        // Named refusals at load time.
+        assert!(FseadConfig::from_str("[fabric.router]\naddr = \"\"\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.router]\naddr = \"localhost\"\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.router]\nworkers = [\"nope\"]\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.router]\nmax_failures = 0\n").is_err());
+        assert!(FseadConfig::from_str("[fabric.router]\ncheckpoint_pushes = 0\n").is_err());
+        // Enabled without workers is a deployment error, caught at validate.
+        let mut bad = FseadConfig::default();
+        bad.router.enabled = true;
+        assert!(bad.validate().is_err(), "router with an empty worker list");
+    }
+
+    #[test]
+    fn session_id_base_parses_and_defaults_to_zero() {
+        let cfg = FseadConfig::from_str(SAMPLE).unwrap();
+        assert_eq!(cfg.server.session_id_base, 0);
+        let cfg =
+            FseadConfig::from_str("[fabric.server]\nsession_id_base = 4294967296\n").unwrap();
+        assert_eq!(cfg.server.session_id_base, 1u64 << 32);
+        assert!(FseadConfig::from_str("[fabric.server]\nsession_id_base = -1\n").is_err());
     }
 
     #[test]

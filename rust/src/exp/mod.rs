@@ -176,6 +176,10 @@ pub fn cli_main(args: &[String]) -> Result<i32> {
             serve::net_cli(&ctx, &positional[1..])?;
             Ok(0)
         }
+        Some("route") => {
+            serve::route_cli(&ctx, &positional[1..])?;
+            Ok(0)
+        }
         Some("exp") => {
             let id = positional.get(1).copied().unwrap_or("all");
             let out = run_experiment(&ctx, id)?;
@@ -216,6 +220,13 @@ USAGE:
                             same config; --max-conns N caps concurrent
                             connections, --for-secs N runs for a fixed time
                             (default: until stdin EOF or a `quit` line)
+  fsead route ADDR --workers a:p,b:p,…   start the fault-tolerant session
+                            router: clients speak the fsead net protocol to
+                            ADDR while sessions shard across the workers by
+                            consistent hashing, checkpoint into router-held
+                            tickets, and re-home transparently on worker
+                            death (rerouted/worker_lost/resume_gap statuses);
+                            give each worker a distinct --session-base
   fsead resources [--floorplan]   print the FPGA resource model
   fsead artifacts           list AOT artifacts and their status
   fsead version

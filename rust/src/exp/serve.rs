@@ -319,7 +319,7 @@ pub fn cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
 
 /// `fsead net ADDR [config.toml] [--mux K] [--idle-evict N]
 /// [--open-timeout MS] [--shed] [--sink PATH] [--spill-dir DIR]
-/// [--operator ADDR] [--max-conns N] [--for-secs N]`.
+/// [--operator ADDR] [--max-conns N] [--session-base N] [--for-secs N]`.
 ///
 /// Starts the fabric server and the frame-protocol listener
 /// ([`NetServer`], see `rust/src/fabric/net.rs` for the wire format) on
@@ -337,6 +337,7 @@ pub fn net_cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
     let mut spill_dir: Option<String> = None;
     let mut operator: Option<String> = None;
     let mut max_conns: Option<usize> = None;
+    let mut session_base: Option<u64> = None;
     let mut for_secs: Option<u64> = None;
     let mut i = 0;
     while i < args.len() {
@@ -355,6 +356,9 @@ pub fn net_cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
             "--spill-dir" => spill_dir = Some(next(&mut i)?.to_string()),
             "--operator" => operator = Some(next(&mut i)?.to_string()),
             "--max-conns" => max_conns = Some(next(&mut i)?.parse().context("--max-conns")?),
+            "--session-base" => {
+                session_base = Some(next(&mut i)?.parse().context("--session-base")?)
+            }
             "--for-secs" => for_secs = Some(next(&mut i)?.parse().context("--for-secs")?),
             other if addr.is_none() && !other.starts_with('-') => addr = Some(other),
             other if config.is_none() && !other.starts_with('-') => config = Some(other),
@@ -406,6 +410,11 @@ pub fn net_cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
     if let Some(n) = max_conns {
         cfg.net.max_connections = n;
     }
+    if let Some(base) = session_base {
+        // Routed fleets give each worker a distinct base (e.g. i << 32) so
+        // session ids never collide when tickets move between workers.
+        cfg.server.session_id_base = base;
+    }
     cfg.artifact_dir = ctx.artifact_dir.clone();
     cfg.validate()?;
     let server = Arc::new(FabricServer::start(cfg)?);
@@ -455,6 +464,120 @@ pub fn net_cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
             println!("net server closed after {served} session(s)");
         }
     }
+    Ok(())
+}
+
+/// `fsead route ADDR [config.toml] [--workers a:p,b:p,…] [--heartbeat-ms N]
+/// [--max-failures N] [--checkpoint-pushes N] [--max-conns N]
+/// [--for-secs N]`.
+///
+/// Starts the fault-tolerant session router
+/// ([`crate::fabric::router::Router`]): clients speak the ordinary
+/// `fsead net` frame protocol to `ADDR`, and their sessions are sharded
+/// across the named workers by consistent hashing, checkpointed into
+/// router-held tickets, and re-homed transparently when a worker dies or
+/// drains. Workers come from `--workers` (comma-separated or repeated) or
+/// `[fabric.router] workers` in the config. Runs until `--for-secs`
+/// elapses, or — without it — until stdin reaches EOF or a `quit` line
+/// arrives.
+pub fn route_cli(ctx: &ExpCtx, args: &[&str]) -> Result<()> {
+    let mut addr: Option<&str> = None;
+    let mut config: Option<&str> = None;
+    let mut workers: Vec<String> = Vec::new();
+    let mut heartbeat_ms: Option<u64> = None;
+    let mut max_failures: Option<u32> = None;
+    let mut checkpoint_pushes: Option<u64> = None;
+    let mut max_conns: Option<usize> = None;
+    let mut for_secs: Option<u64> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let next = |i: &mut usize| -> Result<&str> {
+            *i += 1;
+            args.get(*i).copied().context("missing flag value")
+        };
+        match args[i] {
+            "--workers" => {
+                for w in next(&mut i)?.split(',') {
+                    let w = w.trim();
+                    if !w.is_empty() {
+                        workers.push(w.to_string());
+                    }
+                }
+            }
+            "--heartbeat-ms" => {
+                heartbeat_ms = Some(next(&mut i)?.parse().context("--heartbeat-ms")?)
+            }
+            "--max-failures" => {
+                max_failures = Some(next(&mut i)?.parse().context("--max-failures")?)
+            }
+            "--checkpoint-pushes" => {
+                checkpoint_pushes = Some(next(&mut i)?.parse().context("--checkpoint-pushes")?)
+            }
+            "--max-conns" => max_conns = Some(next(&mut i)?.parse().context("--max-conns")?),
+            "--for-secs" => for_secs = Some(next(&mut i)?.parse().context("--for-secs")?),
+            other if addr.is_none() && !other.starts_with('-') => addr = Some(other),
+            other if config.is_none() && !other.starts_with('-') => config = Some(other),
+            other => bail!("route: unexpected argument {other:?}"),
+        }
+        i += 1;
+    }
+    let addr =
+        addr.context("usage: fsead route ADDR --workers host:port,… (e.g. 127.0.0.1:9290)")?;
+    let mut cfg = match config {
+        Some(path) => FseadConfig::from_file(path)?,
+        None => {
+            let _ = ctx; // the router never builds a fabric of its own
+            FseadConfig::default()
+        }
+    };
+    cfg.router.enabled = true;
+    cfg.router.addr = addr.to_string();
+    if !workers.is_empty() {
+        cfg.router.workers = workers;
+    }
+    if let Some(ms) = heartbeat_ms {
+        cfg.router.heartbeat_ms = ms;
+    }
+    if let Some(n) = max_failures {
+        cfg.router.max_failures = n;
+    }
+    if let Some(n) = checkpoint_pushes {
+        cfg.router.checkpoint_pushes = n;
+    }
+    if let Some(n) = max_conns {
+        cfg.router.max_connections = n;
+    }
+    if cfg.router.workers.is_empty() {
+        bail!("route: no workers — pass --workers or set [fabric.router] workers");
+    }
+    let router = crate::fabric::router::Router::start(&cfg.router)?;
+    println!(
+        "router plane on {} ({} worker(s), heartbeat {} ms, eject after {} failure(s), \
+         checkpoint every {} push(es))",
+        router.addr(),
+        cfg.router.workers.len(),
+        cfg.router.heartbeat_ms,
+        cfg.router.max_failures,
+        cfg.router.checkpoint_pushes
+    );
+    match for_secs {
+        Some(secs) => std::thread::sleep(std::time::Duration::from_secs(secs)),
+        None => {
+            use std::io::BufRead;
+            let stdin = std::io::stdin();
+            for line in stdin.lock().lines() {
+                if line?.trim() == "quit" {
+                    break;
+                }
+            }
+        }
+    }
+    let stats = router.stats();
+    router.stop();
+    println!(
+        "router closed: {} opened, {} rerouted, {} lost, {} checkpoint(s), {} ejection(s)",
+        stats.opened, stats.rerouted, stats.lost, stats.checkpoints, stats.ejections
+    );
     Ok(())
 }
 

@@ -12,7 +12,8 @@
 //! ([`server::FabricServer`], `fsead serve`), whose resident partition
 //! workers drain the same service loops through bounded session inboxes —
 //! in-process through [`server::Session`], or across the wire through the
-//! [`net`] frame protocol (`fsead net`).
+//! [`net`] frame protocol (`fsead net`) — optionally sharded across worker
+//! processes by the fault-tolerant session [`router`] (`fsead route`).
 
 pub mod combo;
 pub mod decoupler;
@@ -25,6 +26,7 @@ pub mod net_client;
 pub mod operator;
 pub mod pblock;
 pub mod reconfig;
+pub mod router;
 pub mod score_sink;
 pub mod server;
 pub mod session_store;
@@ -32,6 +34,7 @@ pub mod snapshot;
 pub mod supervisor;
 pub mod switch;
 pub mod topology;
+pub mod worker_pool;
 
 pub use faults::FaultEvent;
 pub use hotswap::SwapEvent;
@@ -42,8 +45,10 @@ pub use operator::{
     FabricSnapshot, OperatorError, OperatorServer, PartitionTelemetry, ServerTelemetry,
     SessionTelemetry,
 };
+pub use router::{Router, RouterSnapshot, RouterStats};
 pub use score_sink::ScoreSink;
 pub use server::{AdmitError, FabricServer, ServeError, Session, SessionSpec};
 pub use session_store::{SessionStore, SessionTicket};
+pub use worker_pool::{WorkerHealth, WorkerInfo, WorkerPool};
 pub use switch::AxiSwitch;
 pub use topology::{pblock_seed, Fabric};

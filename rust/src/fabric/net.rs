@@ -101,6 +101,9 @@ pub const TAG_CLOSE: u8 = 0x03;
 pub const TAG_SUSPEND: u8 = 0x04;
 /// Client → server: resume from ticket bytes (the payload *is* the ticket).
 pub const TAG_RESUME: u8 = 0x05;
+/// Client → server: liveness probe (empty payload, no session needed) —
+/// answered with one [`TAG_PONG`]. The router's health loop uses this.
+pub const TAG_PING: u8 = 0x06;
 
 /// Server → client: session opened (`u64 session | u32 pblock`).
 pub const TAG_OPENED: u8 = 0x81;
@@ -113,7 +116,14 @@ pub const TAG_CLOSED: u8 = 0x83;
 pub const TAG_SUSPENDED: u8 = 0x84;
 /// Server → client: session resumed (`u64 session | u32 pblock`).
 pub const TAG_RESUMED: u8 = 0x85;
+/// Server → client: liveness reply to [`TAG_PING`] (empty payload).
+pub const TAG_PONG: u8 = 0x86;
 /// Server → client: typed failure (`u16 code | u32 msg_len | msg`).
+///
+/// Codes in [`STATUS_NOTICE_MIN`]`..=`[`STATUS_NOTICE_MAX`] are
+/// *informational*: the router emits them **before** the real reply frame
+/// (e.g. `rerouted` ahead of the `Scores` a recovered push is owed) and a
+/// conforming client records them and keeps reading.
 pub const TAG_STATUS: u8 = 0x8F;
 
 /// [`AdmitError::Saturated`] — overload shedding; back off and retry.
@@ -145,6 +155,35 @@ pub const STATUS_SERVE_FAILED: u16 = 18;
 /// The server refused the open for non-admission reasons (d = 0, warmup
 /// not a whole number of rows, unknown pblock).
 pub const STATUS_OPEN_REFUSED: u16 = 19;
+/// Router notice: the session was moved to another worker (drain,
+/// re-shard or crash recovery). Informational — the real reply follows.
+pub const STATUS_REROUTED: u16 = 20;
+/// Router: the session's worker died and no healthy worker could absorb
+/// it — the session is gone. Terminal for the session, not the connection.
+pub const STATUS_WORKER_LOST: u16 = 21;
+/// Router notice: the session was recovered from its last checkpoint but
+/// some post-checkpoint samples could not be replayed — the message names
+/// the bounded loss. Informational — the real reply follows.
+pub const STATUS_RESUME_GAP: u16 = 22;
+/// The `Resume` ticket parses but was written by an incompatible ticket
+/// layout version ([`super::session_store::TICKET_VERSION`]).
+pub const STATUS_TICKET_VERSION: u16 = 23;
+/// The `Resume` ticket is valid but no served partition matches its
+/// layout (RM kind / r / lanes) — the worker is mis-provisioned for it.
+pub const STATUS_CONFIG_MISMATCH: u16 = 24;
+
+/// Lowest informational (notice) status code — see [`TAG_STATUS`].
+pub const STATUS_NOTICE_MIN: u16 = 20;
+/// Highest informational (notice) status code. `worker_lost` (21) is
+/// deliberately *outside* the notice range: it terminates the session and
+/// arrives instead of a reply, not ahead of one.
+pub const STATUS_NOTICE_MAX: u16 = 29;
+
+/// Is `code` an informational router notice (precedes the real reply)
+/// rather than a refusal that replaces it?
+pub fn is_notice(code: u16) -> bool {
+    (STATUS_NOTICE_MIN..=STATUS_NOTICE_MAX).contains(&code) && code != STATUS_WORKER_LOST
+}
 
 // ---------------------------------------------------------------------------
 // Typed protocol errors
@@ -168,6 +207,16 @@ pub enum NetError {
     ServeFailed { code: String, detail: String },
     OpenRefused(String),
     Admit(AdmitError),
+    /// Router notice: the session now lives on another worker.
+    Rerouted(String),
+    /// Router: the session could not be re-homed — no healthy worker.
+    WorkerLost(String),
+    /// Router notice: recovered from checkpoint with bounded sample loss.
+    ResumeGap(String),
+    /// The resume ticket's layout version does not match this build.
+    TicketVersion { got: u8, want: u8 },
+    /// The resume ticket fits no served partition layout.
+    ConfigMismatch(String),
 }
 
 impl NetError {
@@ -188,6 +237,11 @@ impl NetError {
             NetError::ServerBusy => STATUS_SERVER_BUSY,
             NetError::ServeFailed { .. } => STATUS_SERVE_FAILED,
             NetError::OpenRefused(_) => STATUS_OPEN_REFUSED,
+            NetError::Rerouted(_) => STATUS_REROUTED,
+            NetError::WorkerLost(_) => STATUS_WORKER_LOST,
+            NetError::ResumeGap(_) => STATUS_RESUME_GAP,
+            NetError::TicketVersion { .. } => STATUS_TICKET_VERSION,
+            NetError::ConfigMismatch(_) => STATUS_CONFIG_MISMATCH,
         }
     }
 }
@@ -212,6 +266,13 @@ impl std::fmt::Display for NetError {
             NetError::ServeFailed { code, detail } => write!(f, "serve failed ({code}): {detail}"),
             NetError::OpenRefused(m) => write!(f, "open refused: {m}"),
             NetError::Admit(e) => write!(f, "{e}"),
+            NetError::Rerouted(m) => write!(f, "rerouted: {m}"),
+            NetError::WorkerLost(m) => write!(f, "worker lost: {m}"),
+            NetError::ResumeGap(m) => write!(f, "resume gap: {m}"),
+            NetError::TicketVersion { got, want } => {
+                write!(f, "ticket version {got} is not this build's version {want}")
+            }
+            NetError::ConfigMismatch(m) => write!(f, "config mismatch: {m}"),
         }
     }
 }
@@ -311,6 +372,33 @@ fn take_u64(b: &mut &[u8], what: &str) -> std::result::Result<u64, NetError> {
 // Listener
 // ---------------------------------------------------------------------------
 
+/// How long an accept loop should sleep before retrying after `e`.
+///
+/// `accept()` errors are never fatal to a listener — a transient refusal
+/// must not kill the thread that every future client depends on — but
+/// they differ in how hot it is safe to spin: an aborted handshake or an
+/// interrupted syscall can be retried immediately, while fd exhaustion
+/// (`EMFILE`/`ENFILE`, raw 24/23 on Linux) needs real back-off so the
+/// handlers holding those fds get a chance to finish and release them.
+/// Shared by the net, operator and router accept loops.
+pub fn accept_retry_delay(e: &std::io::Error) -> std::time::Duration {
+    use std::io::ErrorKind;
+    use std::time::Duration;
+    match e.kind() {
+        // A client gave up between SYN and accept, or a signal landed:
+        // nothing is wrong with the listener, retry at once.
+        ErrorKind::ConnectionAborted | ErrorKind::ConnectionReset | ErrorKind::Interrupted => {
+            Duration::from_millis(0)
+        }
+        _ => match e.raw_os_error() {
+            // EMFILE (24) / ENFILE (23) / ENOMEM (12): resource pressure —
+            // back off long enough for in-flight connections to retire.
+            Some(12) | Some(23) | Some(24) => Duration::from_millis(100),
+            _ => Duration::from_millis(10),
+        },
+    }
+}
+
 /// Decrements the live-connection gauge when a handler ends, by any path.
 struct ConnGuard(Arc<AtomicUsize>);
 
@@ -382,10 +470,13 @@ impl NetServer {
                             },
                         );
                     }
-                    Err(_) => {
+                    Err(e) => {
                         if stop2.load(Ordering::SeqCst) {
                             break;
                         }
+                        // Transient accept failures (fd exhaustion, aborted
+                        // handshakes, EINTR) must not kill the listener.
+                        std::thread::sleep(accept_retry_delay(&e));
                     }
                 }
             })
@@ -461,11 +552,14 @@ fn serve_connection(stream: TcpStream, fabric: &Arc<FabricServer>) -> std::io::R
             }
         };
         let outcome = match tag {
-            TAG_OPEN => handle_open(&mut conn, fabric, &payload),
+            TAG_OPEN => handle_open(&mut conn, fabric, &mut writer, &payload),
             TAG_PUSH => handle_push(&mut conn, lockstep, &mut writer, &payload),
             TAG_CLOSE => handle_close(&mut conn, &mut writer, &payload),
             TAG_SUSPEND => handle_suspend(&mut conn, &mut writer, &payload),
-            TAG_RESUME => handle_resume(&mut conn, fabric, &payload),
+            TAG_RESUME => handle_resume(&mut conn, fabric, &mut writer, &payload),
+            // Sessionless liveness probe: one empty Pong, nothing touched.
+            TAG_PING => write_frame(&mut writer, TAG_PONG, &[])
+                .map_err(|e| NetError::BadFrame(format!("writing pong frame: {e}"))),
             other => Err(NetError::UnknownTag(other)),
         };
         match outcome {
@@ -500,9 +594,25 @@ fn api_error(err: anyhow::Error, refused: fn(String) -> NetError) -> NetError {
     refused(format!("{err:#}"))
 }
 
+/// Write the `u64 session | u32 pblock` acknowledgement (`Opened` /
+/// `Resumed`) for a session that just went live on this connection.
+fn write_session_ack(
+    writer: &mut impl Write,
+    tag: u8,
+    id: u64,
+    pblock: usize,
+) -> std::result::Result<(), NetError> {
+    let mut out = Vec::with_capacity(12);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(pblock as u32).to_le_bytes());
+    write_frame(writer, tag, &out)
+        .map_err(|e| NetError::BadFrame(format!("writing session ack frame: {e}")))
+}
+
 fn handle_open(
     conn: &mut ConnState,
     fabric: &Arc<FabricServer>,
+    writer: &mut impl Write,
     payload: &[u8],
 ) -> std::result::Result<(), NetError> {
     let mut b = payload;
@@ -524,26 +634,43 @@ fn handle_open(
     }
     let session = fabric.open(spec).map_err(|e| api_error(e, NetError::OpenRefused))?;
     conn.delivered = session.flits_sent();
+    let (id, pblock) = (session.id(), session.pblock());
     conn.session = Some(session);
-    Ok(())
+    write_session_ack(writer, TAG_OPENED, id, pblock)
 }
 
 fn handle_resume(
     conn: &mut ConnState,
     fabric: &Arc<FabricServer>,
+    writer: &mut impl Write,
     payload: &[u8],
 ) -> std::result::Result<(), NetError> {
     if conn.session.is_some() {
         return Err(NetError::SessionOpen);
     }
-    let ticket =
-        SessionTicket::from_bytes(payload).map_err(|e| NetError::BadTicket(format!("{e:#}")))?;
-    let session = fabric.resume(ticket).map_err(|e| api_error(e, NetError::ResumeRefused))?;
+    let ticket = SessionTicket::from_bytes(payload).map_err(|e| {
+        // A well-formed ticket from an incompatible layout version fails
+        // loud with its own code — a router landing on a mis-versioned
+        // worker must be able to tell that from wire garbage.
+        match e.downcast_ref::<super::session_store::TicketError>() {
+            Some(&super::session_store::TicketError::Version { got, want }) => {
+                NetError::TicketVersion { got, want }
+            }
+            _ => NetError::BadTicket(format!("{e:#}")),
+        }
+    })?;
+    let session = fabric.resume(ticket).map_err(|e| {
+        if let Some(m) = e.downcast_ref::<super::server::ConfigMismatch>() {
+            return NetError::ConfigMismatch(m.to_string());
+        }
+        api_error(e, NetError::ResumeRefused)
+    })?;
     // The score cursor continues from the ticket's flit sequence — scores
     // for earlier flits were already delivered by the suspending server.
     conn.delivered = session.flits_sent();
+    let (id, pblock) = (session.id(), session.pblock());
     conn.session = Some(session);
-    Ok(())
+    write_session_ack(writer, TAG_RESUMED, id, pblock)
 }
 
 /// The live session on this connection, checked against the frame's id.
@@ -735,5 +862,44 @@ mod tests {
         assert_eq!(NetError::BadFrame(String::new()).code(), 10);
         assert_eq!(NetError::ServerBusy.code(), 17);
         assert_eq!(NetError::OpenRefused(String::new()).code(), 19);
+        assert_eq!(NetError::Rerouted(String::new()).code(), 20);
+        assert_eq!(NetError::WorkerLost(String::new()).code(), 21);
+        assert_eq!(NetError::ResumeGap(String::new()).code(), 22);
+        assert_eq!(NetError::TicketVersion { got: 9, want: 1 }.code(), 23);
+        assert_eq!(NetError::ConfigMismatch(String::new()).code(), 24);
+    }
+
+    #[test]
+    fn notice_range_excludes_terminal_worker_lost() {
+        assert!(is_notice(STATUS_REROUTED));
+        assert!(is_notice(STATUS_RESUME_GAP));
+        assert!(!is_notice(STATUS_WORKER_LOST), "worker_lost replaces the reply");
+        assert!(!is_notice(STATUS_SERVE_FAILED));
+        assert!(!is_notice(STATUS_TICKET_VERSION));
+        assert!(!is_notice(STATUS_CONFIG_MISMATCH));
+    }
+
+    #[test]
+    fn accept_errors_classify_into_retry_delays() {
+        use std::io::{Error, ErrorKind};
+        use std::time::Duration;
+        // Aborted handshakes and EINTR: safe to retry immediately.
+        for kind in [ErrorKind::ConnectionAborted, ErrorKind::Interrupted] {
+            assert_eq!(accept_retry_delay(&Error::from(kind)), Duration::from_millis(0));
+        }
+        // fd exhaustion (EMFILE/ENFILE) and ENOMEM: long back-off so the
+        // handlers holding the fds can retire and release them.
+        for raw in [23, 24, 12] {
+            assert_eq!(
+                accept_retry_delay(&Error::from_raw_os_error(raw)),
+                Duration::from_millis(100),
+                "raw os error {raw}"
+            );
+        }
+        // Anything else: a short, conservative pause.
+        assert_eq!(
+            accept_retry_delay(&Error::new(ErrorKind::Other, "?")),
+            Duration::from_millis(10)
+        );
     }
 }

@@ -10,14 +10,16 @@
 //! an admission `saturated` (retry later) from a `bad_frame`.
 
 use std::io::BufReader;
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::message::{decode_f32_le, encode_f32_le};
 use super::net::{
-    decode_status, read_frame, write_frame, NetError, TAG_CLOSE, TAG_CLOSED, TAG_OPEN, TAG_OPENED,
-    TAG_PUSH, TAG_RESUME, TAG_RESUMED, TAG_SCORES, TAG_SUSPEND, TAG_SUSPENDED,
+    decode_status, is_notice, read_frame, write_frame, NetError, TAG_CLOSE, TAG_CLOSED, TAG_OPEN,
+    TAG_OPENED, TAG_PING, TAG_PONG, TAG_PUSH, TAG_RESUME, TAG_RESUMED, TAG_SCORES, TAG_SUSPEND,
+    TAG_SUSPENDED,
 };
 
 /// A typed `Status` reply from the server. The `code` values are the
@@ -47,11 +49,19 @@ pub struct NetClose {
     pub tail_valid: usize,
 }
 
-/// Blocking connection to a [`super::net::NetServer`].
+/// Blocking connection to a [`super::net::NetServer`] (or the session
+/// router, which speaks the same protocol).
 pub struct NetClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     session: Option<u64>,
+    /// The pblock named by the last `Opened`/`Resumed` ack — the router
+    /// forwards it to its own client verbatim.
+    pblock: u32,
+    /// Informational router notices (`rerouted` / `resume_gap` status
+    /// frames) that preceded replies — collect with
+    /// [`NetClient::take_notices`].
+    notices: Vec<NetStatus>,
 }
 
 impl NetClient {
@@ -59,8 +69,101 @@ impl NetClient {
     pub fn connect(addr: &str) -> Result<NetClient> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to fsead net server at {addr}"))?;
+        Self::from_stream(stream)
+    }
+
+    /// [`NetClient::connect`] with a bound on the connect itself — a
+    /// black-holed address fails in `timeout` instead of the OS default
+    /// (minutes). Resolves `addr` and tries each candidate address once.
+    pub fn connect_timeout(addr: &str, timeout: Duration) -> Result<NetClient> {
+        let addrs: Vec<_> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving fsead net server address {addr}"))?
+            .collect();
+        let mut last: Option<std::io::Error> = None;
+        for sa in &addrs {
+            match TcpStream::connect_timeout(sa, timeout) {
+                Ok(stream) => return Self::from_stream(stream),
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => {
+                Err(e).with_context(|| format!("connecting to fsead net server at {addr}"))
+            }
+            None => bail!("fsead net server address {addr} resolved to nothing"),
+        }
+    }
+
+    /// Reconnect with exponential back-off until `deadline` elapses: the
+    /// delay starts at `base` and doubles per attempt. Returns the first
+    /// successful connection, or the last error once the budget is spent.
+    /// Used by the router to ride out worker restarts; callers re-`resume`
+    /// their session ticket on the fresh connection themselves.
+    pub fn reconnect_with_backoff(
+        addr: &str,
+        io_timeout: Option<Duration>,
+        base: Duration,
+        deadline: Duration,
+    ) -> Result<NetClient> {
+        let t0 = Instant::now();
+        let mut delay = base.max(Duration::from_millis(1));
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            let left = deadline.saturating_sub(t0.elapsed());
+            // Never pass a zero connect timeout (it means "no limit").
+            let connect_budget = left.max(Duration::from_millis(1));
+            match Self::connect_timeout(addr, connect_budget) {
+                Ok(mut c) => {
+                    c.set_io_timeout(io_timeout)?;
+                    return Ok(c);
+                }
+                Err(e) => {
+                    if t0.elapsed() + delay >= deadline {
+                        return Err(e.context(format!(
+                            "reconnecting to {addr}: gave up after {attempts} attempt(s) \
+                             in {:?}",
+                            t0.elapsed()
+                        )));
+                    }
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_secs(1));
+                }
+            }
+        }
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<NetClient> {
         let reader = BufReader::new(stream.try_clone().context("cloning the net socket")?);
-        Ok(NetClient { reader, writer: stream, session: None })
+        Ok(NetClient { reader, writer: stream, session: None, pblock: 0, notices: Vec::new() })
+    }
+
+    /// Bound every socket read and write: a wedged server surfaces as a
+    /// timeout error on the pending call instead of hanging this client
+    /// forever. `None` removes the bound.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        let stream = self.reader.get_ref();
+        stream.set_read_timeout(timeout).context("setting the read timeout")?;
+        stream.set_write_timeout(timeout).context("setting the write timeout")?;
+        self.writer.set_read_timeout(timeout).context("setting the read timeout")?;
+        self.writer.set_write_timeout(timeout).context("setting the write timeout")?;
+        Ok(())
+    }
+
+    /// Liveness probe: one `Ping` frame, block for the `Pong`. Needs no
+    /// session — the router's health loop is built on this.
+    pub fn ping(&mut self) -> Result<()> {
+        self.send(TAG_PING, &[])?;
+        self.reply(TAG_PONG, "ping")?;
+        Ok(())
+    }
+
+    /// Drain the informational router notices (`rerouted` / `resume_gap`)
+    /// observed since the last call. Empty when talking to a worker
+    /// directly — only the router emits notices.
+    pub fn take_notices(&mut self) -> Vec<NetStatus> {
+        std::mem::take(&mut self.notices)
     }
 
     /// The live session id, once `open` or `resume` succeeded.
@@ -68,23 +171,37 @@ impl NetClient {
         self.session
     }
 
-    /// Read one reply frame; a `Status` frame becomes a typed error.
+    /// The pblock from the last `Opened`/`Resumed` ack (0 before either).
+    pub fn pblock(&self) -> u32 {
+        self.pblock
+    }
+
+    /// Read one reply frame; a `Status` frame becomes a typed error —
+    /// except informational router notices (`rerouted` / `resume_gap`),
+    /// which are recorded into [`NetClient::take_notices`] and skipped:
+    /// the real reply follows them on the wire.
     fn reply(&mut self, expect: u8, what: &str) -> Result<Vec<u8>> {
-        let (tag, payload) = match read_frame(&mut self.reader) {
-            Ok(Some(f)) => f,
-            Ok(None) => bail!("server hung up waiting for {what}"),
-            Err(e) => return Err(anyhow::Error::new(e).context(format!("reading {what}"))),
-        };
-        if tag == super::net::TAG_STATUS {
-            let (code, message) = decode_status(&payload)
-                .map_err(|e| anyhow::Error::new(e).context("malformed status frame"))?;
-            return Err(anyhow::Error::new(NetStatus { code, message })
-                .context(format!("server refused {what}")));
+        loop {
+            let (tag, payload) = match read_frame(&mut self.reader) {
+                Ok(Some(f)) => f,
+                Ok(None) => bail!("server hung up waiting for {what}"),
+                Err(e) => return Err(anyhow::Error::new(e).context(format!("reading {what}"))),
+            };
+            if tag == super::net::TAG_STATUS {
+                let (code, message) = decode_status(&payload)
+                    .map_err(|e| anyhow::Error::new(e).context("malformed status frame"))?;
+                if is_notice(code) {
+                    self.notices.push(NetStatus { code, message });
+                    continue;
+                }
+                return Err(anyhow::Error::new(NetStatus { code, message })
+                    .context(format!("server refused {what}")));
+            }
+            if tag != expect {
+                bail!("expected frame 0x{expect:02x} for {what}, got 0x{tag:02x}");
+            }
+            return Ok(payload);
         }
-        if tag != expect {
-            bail!("expected frame 0x{expect:02x} for {what}, got 0x{tag:02x}");
-        }
-        Ok(payload)
     }
 
     fn send(&mut self, tag: u8, payload: &[u8]) -> Result<()> {
@@ -104,8 +221,9 @@ impl NetClient {
         encode_f32_le(warmup, &mut payload);
         self.send(TAG_OPEN, &payload)?;
         let reply = self.reply(TAG_OPENED, "open")?;
-        let (id, _pblock) = parse_id_u32(&reply, "opened")?;
+        let (id, pblock) = parse_id_u32(&reply, "opened")?;
         self.session = Some(id);
+        self.pblock = pblock;
         Ok(id)
     }
 
@@ -118,8 +236,9 @@ impl NetClient {
         }
         self.send(TAG_RESUME, ticket)?;
         let reply = self.reply(TAG_RESUMED, "resume")?;
-        let (id, _pblock) = parse_id_u32(&reply, "resumed")?;
+        let (id, pblock) = parse_id_u32(&reply, "resumed")?;
         self.session = Some(id);
+        self.pblock = pblock;
         Ok(id)
     }
 

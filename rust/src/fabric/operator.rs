@@ -853,10 +853,13 @@ impl OperatorServer {
                             },
                         );
                     }
-                    Err(_) => {
+                    Err(e) => {
                         if stop2.load(Ordering::SeqCst) {
                             break;
                         }
+                        // Transient accept failures (fd exhaustion, aborted
+                        // handshakes, EINTR) must not kill the listener.
+                        std::thread::sleep(super::net::accept_retry_delay(&e));
                     }
                 }
             })

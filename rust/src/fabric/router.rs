@@ -1,0 +1,1167 @@
+//! Fault-tolerant session router: `fsead route` / `[fabric.router]`.
+//!
+//! A [`Router`] is a TCP front end speaking the exact [`super::net`] frame
+//! protocol to clients while fanning their sessions out across N
+//! downstream `fsead net` worker processes. Placement is consistent
+//! hashing on the session id over a [`WorkerPool`] ring, so any router
+//! restart (or a second router over the same fleet) computes the same
+//! owners.
+//!
+//! # Robustness model
+//!
+//! The unit of recovery is the **router-held ticket**: every session is
+//! checkpointed (worker-side `Suspend` → ticket → `Resume`, on the same
+//! upstream connection) every `checkpoint_pushes` pushes, and the raw
+//! samples pushed since the last checkpoint are kept in a bounded replay
+//! buffer. When a worker dies mid-stream — connection error, wedged-socket
+//! timeout, or the health prober ejecting it — the session's handler
+//! resumes the ticket on the next ring candidate, replays the buffered
+//! samples in one push, discards the score prefix the client already has,
+//! and completes the original request. The client sees a `rerouted`
+//! notice (status 20) ahead of the reply it was owed; in lock-step
+//! configurations the delivered score suffix is bit-identical to an
+//! uninterrupted run, because detector state is carried by the ticket and
+//! the replayed samples re-derive exactly the missing scores.
+//!
+//! Bounded loss is possible only when a single push block exceeds
+//! `replay_cap_bytes` (it cannot be buffered) *and* its worker dies before
+//! the immediate post-push checkpoint; the gap is then reported honestly
+//! as a `resume_gap` notice (status 22) naming the lost rows. A session
+//! that no routable worker will absorb within `retry_deadline_ms` is
+//! terminated with `worker_lost` (status 21) — terminal for the session,
+//! not the connection.
+//!
+//! Membership changes (worker join via [`Router::add_worker`], graceful
+//! leave via [`Router::drain_worker`], prober ejection/revival) bump the
+//! pool epoch; each connection handler re-checks its session's ring owner
+//! before the next forward and migrates lazily with the same
+//! suspend-carry-resume hop, so a join re-shards exactly the hash ranges
+//! the ring moves and a drain empties a worker without dropping a sample.
+//!
+//! With one healthy worker and no faults, none of this machinery fires:
+//! the router is bit-transparent to a direct `fsead net` connection
+//! (modulo the ids the worker assigns).
+//!
+//! Workers in one fleet should be provisioned with distinct
+//! `[fabric.server] session_id_base` values (`fsead net --session-base`)
+//! so ids never collide when tickets move between them.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::message::{decode_f32_le, encode_f32_le};
+use super::net::{
+    accept_retry_delay, encode_status, read_frame, write_frame, NetError, TAG_CLOSE, TAG_CLOSED,
+    TAG_OPEN, TAG_OPENED, TAG_PING, TAG_PONG, TAG_PUSH, TAG_RESUME, TAG_RESUMED, TAG_SCORES,
+    TAG_STATUS, TAG_SUSPEND, TAG_SUSPENDED,
+};
+use super::net_client::{NetClient, NetStatus};
+use super::session_store::{SessionTicket, TicketError};
+use super::worker_pool::{splitmix64, WorkerPool};
+use crate::config::RouterCfg;
+
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
+/// Router-wide counters, updated by connection handlers and the prober.
+#[derive(Default)]
+pub struct RouterStats {
+    /// Sessions opened through the router (also seeds placement spread).
+    pub opened: AtomicU64,
+    /// Successful re-homes: crash recoveries plus drain/join migrations.
+    pub rerouted: AtomicU64,
+    /// Sessions terminated with `worker_lost`.
+    pub lost: AtomicU64,
+    /// Ticket checkpoints taken.
+    pub checkpoints: AtomicU64,
+    /// Sample values re-pushed during recoveries.
+    pub replayed_values: AtomicU64,
+    /// Sample rows reported lost via `resume_gap`.
+    pub gap_samples: AtomicU64,
+    /// Opens shed because no worker would take them.
+    pub sheds: AtomicU64,
+    /// Health probes that got their pong.
+    pub pings_ok: AtomicU64,
+    /// Health probes that failed.
+    pub pings_failed: AtomicU64,
+    /// Workers ejected from the ring by consecutive failures.
+    pub ejections: AtomicU64,
+}
+
+/// A plain-value copy of [`RouterStats`] for tests and benches.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RouterSnapshot {
+    pub opened: u64,
+    pub rerouted: u64,
+    pub lost: u64,
+    pub checkpoints: u64,
+    pub replayed_values: u64,
+    pub gap_samples: u64,
+    pub sheds: u64,
+    pub pings_ok: u64,
+    pub pings_failed: u64,
+    pub ejections: u64,
+}
+
+impl RouterStats {
+    pub fn snapshot(&self) -> RouterSnapshot {
+        RouterSnapshot {
+            opened: self.opened.load(Ordering::SeqCst),
+            rerouted: self.rerouted.load(Ordering::SeqCst),
+            lost: self.lost.load(Ordering::SeqCst),
+            checkpoints: self.checkpoints.load(Ordering::SeqCst),
+            replayed_values: self.replayed_values.load(Ordering::SeqCst),
+            gap_samples: self.gap_samples.load(Ordering::SeqCst),
+            sheds: self.sheds.load(Ordering::SeqCst),
+            pings_ok: self.pings_ok.load(Ordering::SeqCst),
+            pings_failed: self.pings_failed.load(Ordering::SeqCst),
+            ejections: self.ejections.load(Ordering::SeqCst),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared context
+// ---------------------------------------------------------------------------
+
+struct Ctx {
+    pool: Arc<WorkerPool>,
+    stats: Arc<RouterStats>,
+    cfg: RouterCfg,
+}
+
+fn connect_worker(ctx: &Ctx, addr: &str) -> Result<NetClient> {
+    let connect = Duration::from_millis(ctx.cfg.connect_timeout_ms.max(1));
+    let mut up = NetClient::connect_timeout(addr, connect)?;
+    let io = match ctx.cfg.io_timeout_ms {
+        0 => None,
+        ms => Some(Duration::from_millis(ms)),
+    };
+    up.set_io_timeout(io)?;
+    Ok(up)
+}
+
+/// How a forwarded call failed: a typed refusal from a live worker (pass
+/// it through verbatim) vs. a transport failure (the worker is gone —
+/// recover).
+enum Fail {
+    Refused(u16, String),
+    Transport(String),
+}
+
+fn classify(e: anyhow::Error) -> Fail {
+    match e.downcast_ref::<NetStatus>() {
+        Some(s) => Fail::Refused(s.code, s.message.clone()),
+        None => Fail::Transport(format!("{e:#}")),
+    }
+}
+
+/// Why a session could not continue: a typed status to forward, or a
+/// terminal `worker_lost`.
+enum SessionFail {
+    Status(u16, String),
+    Lost(String),
+}
+
+// ---------------------------------------------------------------------------
+// Wire helpers (client side of the router)
+// ---------------------------------------------------------------------------
+
+fn wr(e: std::io::Error) -> NetError {
+    NetError::BadFrame(format!("writing reply frame: {e}"))
+}
+
+/// A `Status` payload with an explicit code/message — used to forward a
+/// worker's refusal to the client byte-compatibly.
+fn raw_status(code: u16, message: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(6 + message.len());
+    out.extend_from_slice(&code.to_le_bytes());
+    out.extend_from_slice(&(message.len() as u32).to_le_bytes());
+    out.extend_from_slice(message.as_bytes());
+    out
+}
+
+fn write_status(writer: &mut impl Write, e: &NetError) -> std::result::Result<(), NetError> {
+    write_frame(writer, TAG_STATUS, &encode_status(e)).map_err(wr)
+}
+
+fn write_session_ack(
+    writer: &mut impl Write,
+    tag: u8,
+    id: u64,
+    pblock: u32,
+) -> std::result::Result<(), NetError> {
+    let mut out = Vec::with_capacity(12);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&pblock.to_le_bytes());
+    write_frame(writer, tag, &out).map_err(wr)
+}
+
+fn write_scores(
+    writer: &mut impl Write,
+    id: u64,
+    scores: &[f32],
+) -> std::result::Result<(), NetError> {
+    let mut out = Vec::with_capacity(8 + scores.len() * 4);
+    out.extend_from_slice(&id.to_le_bytes());
+    encode_f32_le(scores, &mut out);
+    write_frame(writer, TAG_SCORES, &out).map_err(wr)
+}
+
+/// Write the terminal status for `fail` and end the session (the caller
+/// has already dropped its `Routed`).
+fn fail_reply(
+    writer: &mut impl Write,
+    ctx: &Ctx,
+    fail: SessionFail,
+) -> std::result::Result<(), NetError> {
+    match fail {
+        SessionFail::Status(code, msg) => {
+            write_frame(writer, TAG_STATUS, &raw_status(code, &msg)).map_err(wr)
+        }
+        SessionFail::Lost(msg) => {
+            ctx.stats.lost.fetch_add(1, Ordering::SeqCst);
+            write_status(writer, &NetError::WorkerLost(msg))
+        }
+    }
+}
+
+fn take<'a>(b: &mut &'a [u8], n: usize, what: &str) -> std::result::Result<&'a [u8], NetError> {
+    if b.len() < n {
+        return Err(NetError::BadFrame(format!("truncated {what}")));
+    }
+    let (head, rest) = b.split_at(n);
+    *b = rest;
+    Ok(head)
+}
+
+fn take_u32(b: &mut &[u8], what: &str) -> std::result::Result<u32, NetError> {
+    Ok(u32::from_le_bytes(take(b, 4, what)?.try_into().unwrap()))
+}
+
+fn take_u64(b: &mut &[u8], what: &str) -> std::result::Result<u64, NetError> {
+    Ok(u64::from_le_bytes(take(b, 8, what)?.try_into().unwrap()))
+}
+
+// ---------------------------------------------------------------------------
+// Routed session
+// ---------------------------------------------------------------------------
+
+/// One client session as the router tracks it: the live upstream
+/// connection, the last checkpoint ticket, and the replay window that
+/// makes the ticket recoverable without loss.
+struct Routed {
+    /// Live worker connection; `Some` from first placement onwards.
+    up: Option<NetClient>,
+    /// Pool slot of the worker currently serving the session.
+    worker: usize,
+    id: u64,
+    /// Sample dimensionality (row width), for replay-gap accounting and
+    /// push alignment checks.
+    d: usize,
+    pblock: u32,
+    /// Last checkpoint ticket — the recovery anchor.
+    ticket: Vec<u8>,
+    /// Samples pushed since the last checkpoint, concatenated.
+    replay: Vec<f32>,
+    pushes_since_ckpt: u64,
+    /// Score *values obtained from workers* since the last checkpoint —
+    /// delivered or pending. Counted at obtain time so a second recovery
+    /// before delivery never re-pends duplicates.
+    scores_since_ckpt: u64,
+    /// Values of the one in-flight push too large for the replay buffer
+    /// (0 when none) — lost, and reported, if its worker dies now.
+    unreplayable: usize,
+    /// Rows confirmed lost, to be reported in the next `resume_gap`.
+    gap_samples: u64,
+    /// Scores obtained but not yet delivered to the client (checkpoint
+    /// drains, recovery replays); prepended to the next scores reply.
+    pending: Vec<f32>,
+    /// Pool epoch at the last owner check.
+    epoch: u64,
+}
+
+impl Routed {
+    fn key(&self) -> u64 {
+        splitmix64(self.id)
+    }
+
+    fn live(&mut self) -> &mut NetClient {
+        self.up.as_mut().expect("routed session has a live upstream")
+    }
+
+    /// Connect + resume the held ticket on the best ring candidate,
+    /// replaying the buffered post-checkpoint samples. Returns the fresh
+    /// score suffix (the already-delivered prefix is discarded).
+    fn place(&mut self, ctx: &Ctx) -> std::result::Result<Vec<f32>, SessionFail> {
+        let t0 = Instant::now();
+        let deadline = Duration::from_millis(ctx.cfg.retry_deadline_ms.max(1));
+        let mut delay = Duration::from_millis(ctx.cfg.backoff_base_ms.max(1));
+        let mut last_refusal: Option<(u16, String)> = None;
+        loop {
+            let mut transport_failures = false;
+            for slot in ctx.pool.candidates(self.key()) {
+                let addr = ctx.pool.addr_of(slot);
+                match self.try_place_on(ctx, slot, &addr) {
+                    Ok(fresh) => {
+                        ctx.pool.record_success(slot);
+                        return Ok(fresh);
+                    }
+                    // Alive but unwilling (ticket version, config
+                    // mismatch, duplicate): not a health event, and the
+                    // same ticket cannot succeed there on retry.
+                    Err(Fail::Refused(code, msg)) => last_refusal = Some((code, msg)),
+                    Err(Fail::Transport(_)) => {
+                        transport_failures = true;
+                        if ctx.pool.record_failure(slot) {
+                            ctx.stats.ejections.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                }
+            }
+            if !transport_failures {
+                // Every routable worker refused outright (or none exist):
+                // waiting cannot help.
+                return Err(match last_refusal {
+                    Some((code, msg)) => SessionFail::Status(code, msg),
+                    None => SessionFail::Lost(format!(
+                        "no routable worker to re-home session {}",
+                        self.id
+                    )),
+                });
+            }
+            if t0.elapsed() + delay >= deadline {
+                return Err(SessionFail::Lost(format!(
+                    "session {}: no worker recovered it within {:?}",
+                    self.id,
+                    t0.elapsed()
+                )));
+            }
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(Duration::from_secs(1));
+        }
+    }
+
+    fn try_place_on(
+        &mut self,
+        ctx: &Ctx,
+        slot: usize,
+        addr: &str,
+    ) -> std::result::Result<Vec<f32>, Fail> {
+        let mut up = connect_worker(ctx, addr).map_err(|e| Fail::Transport(format!("{e:#}")))?;
+        up.resume(&self.ticket).map_err(classify)?;
+        let mut got = Vec::new();
+        if !self.replay.is_empty() {
+            got = up.push(&self.replay).map_err(classify)?;
+            ctx.stats.replayed_values.fetch_add(self.replay.len() as u64, Ordering::SeqCst);
+        }
+        let discard = (self.scores_since_ckpt as usize).min(got.len());
+        let fresh = got.split_off(discard);
+        // Obtained-since-checkpoint high-water mark: a later recovery of
+        // the same window discards everything delivered by this one too.
+        self.scores_since_ckpt = self.scores_since_ckpt.max((discard + fresh.len()) as u64);
+        self.pblock = up.pblock();
+        self.worker = slot;
+        self.epoch = ctx.pool.epoch();
+        self.up = Some(up);
+        Ok(fresh)
+    }
+
+    /// Checkpoint in place: suspend on the live connection, keep the
+    /// ticket, resume on the same worker. On error the held state is
+    /// always consistent for recovery — the ticket/replay pair is updated
+    /// *between* the suspend and resume legs.
+    fn checkpoint(&mut self, ctx: &Ctx) -> Result<()> {
+        let (ticket, scores) = self.live().suspend()?;
+        self.pending.extend(scores);
+        self.ticket = ticket;
+        self.replay.clear();
+        self.pushes_since_ckpt = 0;
+        self.scores_since_ckpt = 0;
+        self.unreplayable = 0;
+        // Borrow the field directly so the ticket (a sibling field) can be
+        // passed while the upstream is borrowed.
+        let up = self.up.as_mut().expect("routed session has a live upstream");
+        up.resume(&self.ticket)?;
+        self.pblock = up.pblock();
+        ctx.stats.checkpoints.fetch_add(1, Ordering::SeqCst);
+        Ok(())
+    }
+
+    /// The upstream failed (`detail`): account any un-replayable gap,
+    /// re-home via the ring, and return the notices the client is owed.
+    /// Recovered scores land in `pending`.
+    fn recover(
+        &mut self,
+        ctx: &Ctx,
+        detail: &str,
+    ) -> std::result::Result<Vec<NetError>, SessionFail> {
+        if ctx.pool.record_failure(self.worker) {
+            ctx.stats.ejections.fetch_add(1, Ordering::SeqCst);
+        }
+        let from = ctx.pool.addr_of(self.worker);
+        if self.unreplayable > 0 {
+            self.gap_samples += (self.unreplayable / self.d.max(1)) as u64;
+            self.unreplayable = 0;
+        }
+        let fresh = self.place(ctx)?;
+        self.pending.extend(fresh);
+        ctx.stats.rerouted.fetch_add(1, Ordering::SeqCst);
+        let mut notices = vec![NetError::Rerouted(format!(
+            "session {} re-homed from {} to {}: {detail}",
+            self.id,
+            from,
+            ctx.pool.addr_of(self.worker)
+        ))];
+        if self.gap_samples > 0 {
+            ctx.stats.gap_samples.fetch_add(self.gap_samples, Ordering::SeqCst);
+            notices.push(NetError::ResumeGap(format!(
+                "session {}: {} sample row(s) since the last checkpoint could not be replayed",
+                self.id, self.gap_samples
+            )));
+            self.gap_samples = 0;
+        }
+        Ok(notices)
+    }
+
+    /// Re-check ring ownership after an epoch change; migrate with a
+    /// suspend-carry-resume hop when the session no longer lives on its
+    /// owner (worker join re-shard, drain, ejection).
+    fn maybe_migrate(&mut self, ctx: &Ctx) -> std::result::Result<Vec<NetError>, SessionFail> {
+        let epoch = ctx.pool.epoch();
+        if epoch == self.epoch {
+            return Ok(Vec::new());
+        }
+        self.epoch = epoch;
+        if ctx.pool.owner(self.key()) == Some(self.worker) && ctx.pool.is_routable(self.worker) {
+            return Ok(Vec::new());
+        }
+        let from = ctx.pool.addr_of(self.worker);
+        match self.live().suspend() {
+            Ok((ticket, scores)) => {
+                // Graceful drain: the fresh ticket carries everything, so
+                // the replay window resets and the hop is loss-free.
+                self.pending.extend(scores);
+                self.ticket = ticket;
+                self.replay.clear();
+                self.pushes_since_ckpt = 0;
+                self.scores_since_ckpt = 0;
+                self.unreplayable = 0;
+                let fresh = self.place(ctx)?;
+                self.pending.extend(fresh);
+                ctx.stats.rerouted.fetch_add(1, Ordering::SeqCst);
+                Ok(vec![NetError::Rerouted(format!(
+                    "session {} drained from {} to {}",
+                    self.id,
+                    from,
+                    ctx.pool.addr_of(self.worker)
+                ))])
+            }
+            Err(e) => {
+                // The old worker is gone — crash recovery from the held
+                // checkpoint instead of a clean hand-over.
+                let detail = match classify(e) {
+                    Fail::Refused(_, m) | Fail::Transport(m) => m,
+                };
+                self.recover(ctx, &detail)
+            }
+        }
+    }
+
+    /// The placement hop right after `Open`: establish the first ticket
+    /// and land the session on its ring owner — the same code path as
+    /// every later checkpoint, so placement is exercised constantly.
+    fn initial_home(&mut self, ctx: &Ctx) -> std::result::Result<(), SessionFail> {
+        match self.live().suspend() {
+            Ok((ticket, scores)) => {
+                self.pending.extend(scores);
+                self.ticket = ticket;
+            }
+            Err(e) => {
+                return Err(match classify(e) {
+                    Fail::Refused(code, msg) => SessionFail::Status(code, msg),
+                    Fail::Transport(detail) => {
+                        // No ticket exists yet — nothing to recover from.
+                        if ctx.pool.record_failure(self.worker) {
+                            ctx.stats.ejections.fetch_add(1, Ordering::SeqCst);
+                        }
+                        SessionFail::Lost(format!(
+                            "session {}: worker died before the first checkpoint: {detail}",
+                            self.id
+                        ))
+                    }
+                });
+            }
+        }
+        if ctx.pool.owner(self.key()) == Some(self.worker) {
+            // Already home: resume in place on the same connection (field
+            // borrow, so the ticket can be passed alongside).
+            let up = self.up.as_mut().expect("routed session has a live upstream");
+            if up.resume(&self.ticket).is_ok() {
+                self.pblock = up.pblock();
+                self.epoch = ctx.pool.epoch();
+                return Ok(());
+            }
+            if ctx.pool.record_failure(self.worker) {
+                ctx.stats.ejections.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        self.place(ctx)?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handler
+// ---------------------------------------------------------------------------
+
+struct RouteState {
+    routed: Option<Routed>,
+}
+
+/// Keep the pool's per-worker session gauges in sync with where this
+/// connection's session actually lives, whatever path moved it.
+fn sync_gauge(ctx: &Ctx, gauged: &mut Option<usize>, routed: &Option<Routed>) {
+    let now = routed.as_ref().map(|r| r.worker);
+    if *gauged != now {
+        if let Some(w) = *gauged {
+            ctx.pool.session_delta(w, -1);
+        }
+        if let Some(w) = now {
+            ctx.pool.session_delta(w, 1);
+        }
+        *gauged = now;
+    }
+}
+
+fn route_connection(stream: TcpStream, ctx: &Ctx) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut st = RouteState { routed: None };
+    let mut gauged: Option<usize> = None;
+    loop {
+        let (tag, payload) = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => break,
+            Err(e) => {
+                let _ = write_frame(&mut writer, TAG_STATUS, &encode_status(&e));
+                break;
+            }
+        };
+        let outcome = match tag {
+            TAG_OPEN => handle_open(&mut st, ctx, &mut writer, &payload),
+            TAG_PUSH => handle_push(&mut st, ctx, &mut writer, &payload),
+            TAG_CLOSE => handle_close(&mut st, ctx, &mut writer, &payload),
+            TAG_SUSPEND => handle_suspend(&mut st, ctx, &mut writer, &payload),
+            TAG_RESUME => handle_resume(&mut st, ctx, &mut writer, &payload),
+            TAG_PING => write_frame(&mut writer, TAG_PONG, &[]).map_err(wr),
+            other => Err(NetError::UnknownTag(other)),
+        };
+        sync_gauge(ctx, &mut gauged, &st.routed);
+        match outcome {
+            Ok(()) => {}
+            Err(e) => {
+                let fatal = matches!(
+                    e,
+                    NetError::BadFrame(_) | NetError::FrameTooLarge { .. } | NetError::UnknownTag(_)
+                );
+                if write_frame(&mut writer, TAG_STATUS, &encode_status(&e)).is_err() || fatal {
+                    break;
+                }
+            }
+        }
+    }
+    // Disconnect: dropping the upstream NetClient closes its TCP stream,
+    // and the worker's handler abandons the session — same semantics as a
+    // direct client hang-up.
+    st.routed = None;
+    sync_gauge(ctx, &mut gauged, &st.routed);
+    Ok(())
+}
+
+fn handle_open(
+    st: &mut RouteState,
+    ctx: &Ctx,
+    writer: &mut impl Write,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    if st.routed.is_some() {
+        return Err(NetError::SessionOpen);
+    }
+    let mut b = payload;
+    let d = take_u32(&mut b, "open d")? as usize;
+    let pblock = take_u32(&mut b, "open pblock")? as usize;
+    let warmup_len = take_u32(&mut b, "open warmup length")? as usize;
+    let warmup_bytes = take(&mut b, warmup_len.saturating_mul(4), "open warmup samples")?;
+    if !b.is_empty() {
+        return Err(NetError::BadFrame(format!("{} trailing bytes after open", b.len())));
+    }
+    let mut warmup = Vec::new();
+    decode_f32_le(warmup_bytes, &mut warmup);
+
+    // Provisional placement on any healthy worker, spread by the open
+    // sequence; the initial checkpoint below re-homes onto the ring
+    // owner of the id the worker hands out.
+    let seq = ctx.stats.opened.fetch_add(1, Ordering::SeqCst);
+    let mut placed: Option<(NetClient, usize)> = None;
+    let mut last_refusal: Option<(u16, String)> = None;
+    for slot in ctx.pool.candidates(splitmix64(seq ^ 0xA5A5_5A5A_0F0F_F0F0)) {
+        let addr = ctx.pool.addr_of(slot);
+        let mut up = match connect_worker(ctx, &addr) {
+            Ok(u) => u,
+            Err(_) => {
+                if ctx.pool.record_failure(slot) {
+                    ctx.stats.ejections.fetch_add(1, Ordering::SeqCst);
+                }
+                continue;
+            }
+        };
+        match up.open(d, if pblock == 0 { None } else { Some(pblock) }, &warmup) {
+            Ok(_) => {
+                ctx.pool.record_success(slot);
+                placed = Some((up, slot));
+                break;
+            }
+            Err(e) => match classify(e) {
+                // Saturated/refusing but alive — try the next worker.
+                Fail::Refused(code, msg) => last_refusal = Some((code, msg)),
+                Fail::Transport(_) => {
+                    if ctx.pool.record_failure(slot) {
+                        ctx.stats.ejections.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            },
+        }
+    }
+    let (up, slot) = match placed {
+        Some(p) => p,
+        None => {
+            ctx.stats.sheds.fetch_add(1, Ordering::SeqCst);
+            return match last_refusal {
+                Some((code, msg)) => {
+                    write_frame(writer, TAG_STATUS, &raw_status(code, &msg)).map_err(wr)
+                }
+                None => fail_reply(
+                    writer,
+                    ctx,
+                    SessionFail::Lost("no healthy worker to place the session on".into()),
+                ),
+            };
+        }
+    };
+    let id = up.session().expect("open succeeded");
+    let pblock = up.pblock();
+    let mut routed = Routed {
+        up: Some(up),
+        worker: slot,
+        id,
+        d,
+        pblock,
+        ticket: Vec::new(),
+        replay: Vec::new(),
+        pushes_since_ckpt: 0,
+        scores_since_ckpt: 0,
+        unreplayable: 0,
+        gap_samples: 0,
+        pending: Vec::new(),
+        epoch: ctx.pool.epoch(),
+    };
+    if let Err(fail) = routed.initial_home(ctx) {
+        return fail_reply(writer, ctx, fail);
+    }
+    write_session_ack(writer, TAG_OPENED, routed.id, routed.pblock)?;
+    st.routed = Some(routed);
+    Ok(())
+}
+
+fn handle_resume(
+    st: &mut RouteState,
+    ctx: &Ctx,
+    writer: &mut impl Write,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    if st.routed.is_some() {
+        return Err(NetError::SessionOpen);
+    }
+    // Parse router-side first: garbage and version skew are refused here
+    // with their typed codes without bothering any worker.
+    let ticket = SessionTicket::from_bytes(payload).map_err(|e| {
+        match e.downcast_ref::<TicketError>() {
+            Some(&TicketError::Version { got, want }) => NetError::TicketVersion { got, want },
+            _ => NetError::BadTicket(format!("{e:#}")),
+        }
+    })?;
+    let mut routed = Routed {
+        up: None,
+        worker: 0,
+        id: ticket.id,
+        d: ticket.d,
+        pblock: 0,
+        ticket: payload.to_vec(),
+        replay: Vec::new(),
+        pushes_since_ckpt: 0,
+        scores_since_ckpt: 0,
+        unreplayable: 0,
+        gap_samples: 0,
+        pending: Vec::new(),
+        epoch: 0,
+    };
+    if let Err(fail) = routed.place(ctx) {
+        return fail_reply(writer, ctx, fail);
+    }
+    write_session_ack(writer, TAG_RESUMED, routed.id, routed.pblock)?;
+    st.routed = Some(routed);
+    Ok(())
+}
+
+/// Take the routed session out of `st` if `id` names it — callers put it
+/// back on the paths where it survives.
+fn claim(st: &mut RouteState, id: u64) -> std::result::Result<Routed, NetError> {
+    if st.routed.as_ref().map(|r| r.id == id) != Some(true) {
+        return Err(NetError::NoSession);
+    }
+    Ok(st.routed.take().expect("checked above"))
+}
+
+fn handle_push(
+    st: &mut RouteState,
+    ctx: &Ctx,
+    writer: &mut impl Write,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    let mut b = payload;
+    let id = take_u64(&mut b, "push session id")?;
+    let mut routed = claim(st, id)?;
+    let row = 4 * routed.d;
+    if row == 0 || b.len() % row != 0 {
+        st.routed = Some(routed);
+        return Err(NetError::BadFrame(format!(
+            "push body of {} bytes is not a whole number of {}-byte rows",
+            b.len(),
+            row
+        )));
+    }
+    let mut block = Vec::new();
+    decode_f32_le(b, &mut block);
+
+    let mut notices = match routed.maybe_migrate(ctx) {
+        Ok(n) => n,
+        Err(fail) => return fail_reply(writer, ctx, fail),
+    };
+
+    // Replay-window upkeep: flush by checkpointing rather than silently
+    // overflowing; a block too large to ever buffer is marked so a crash
+    // during it is reported as a gap instead of hidden.
+    let cap = ctx.cfg.replay_cap_bytes.max(1);
+    if !routed.replay.is_empty() && 4 * (routed.replay.len() + block.len()) > cap {
+        if routed.checkpoint(ctx).is_err() {
+            match routed.recover(ctx, "worker failed during a replay-window checkpoint") {
+                Ok(n) => notices.extend(n),
+                Err(fail) => return fail_reply(writer, ctx, fail),
+            }
+        }
+    }
+    if 4 * (routed.replay.len() + block.len()) <= cap {
+        routed.replay.extend_from_slice(&block);
+    } else {
+        routed.unreplayable = block.len();
+    }
+
+    let scores = match routed.live().push(&block) {
+        Ok(s) => {
+            routed.scores_since_ckpt += s.len() as u64;
+            s
+        }
+        Err(e) => match classify(e) {
+            Fail::Refused(code, msg) => {
+                // The worker is alive and refused — pass it through and
+                // keep the session for a typed `Close`.
+                for n in &notices {
+                    write_status(writer, n)?;
+                }
+                st.routed = Some(routed);
+                return write_frame(writer, TAG_STATUS, &raw_status(code, &msg)).map_err(wr);
+            }
+            Fail::Transport(detail) => match routed.recover(ctx, &detail) {
+                // Recovery replayed the window; the fresh scores (this
+                // push's included) are in `pending`.
+                Ok(n) => {
+                    notices.extend(n);
+                    Vec::new()
+                }
+                Err(fail) => return fail_reply(writer, ctx, fail),
+            },
+        },
+    };
+    routed.pushes_since_ckpt += 1;
+
+    for n in &notices {
+        write_status(writer, n)?;
+    }
+    let mut out = std::mem::take(&mut routed.pending);
+    out.extend(scores);
+    write_scores(writer, id, &out)?;
+
+    // Checkpoint cadence — and *immediately* after an un-buffered push,
+    // so the ticket never trails a sample the replay window is missing.
+    if routed.unreplayable > 0 || routed.pushes_since_ckpt >= ctx.cfg.checkpoint_pushes.max(1) {
+        if routed.checkpoint(ctx).is_err() {
+            match routed.recover(ctx, "worker failed during a checkpoint") {
+                Ok(n) => {
+                    // The reply is already out; these notices precede the
+                    // next one on the wire, which is where the client's
+                    // reader collects them.
+                    for notice in &n {
+                        write_status(writer, notice)?;
+                    }
+                }
+                Err(fail) => return fail_reply(writer, ctx, fail),
+            }
+        }
+    }
+    st.routed = Some(routed);
+    Ok(())
+}
+
+fn handle_close(
+    st: &mut RouteState,
+    ctx: &Ctx,
+    writer: &mut impl Write,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    let mut b = payload;
+    let id = take_u64(&mut b, "close session id")?;
+    if !b.is_empty() {
+        return Err(NetError::BadFrame(format!("{} trailing bytes after close", b.len())));
+    }
+    let mut routed = claim(st, id)?;
+    let mut notices = match routed.maybe_migrate(ctx) {
+        Ok(n) => n,
+        Err(fail) => return fail_reply(writer, ctx, fail),
+    };
+    let mut attempts = 0u32;
+    let closed = loop {
+        match routed.live().close() {
+            Ok(c) => break c,
+            Err(e) => match classify(e) {
+                Fail::Refused(code, msg) => {
+                    for n in &notices {
+                        write_status(writer, n)?;
+                    }
+                    return write_frame(writer, TAG_STATUS, &raw_status(code, &msg)).map_err(wr);
+                }
+                Fail::Transport(detail) => {
+                    attempts += 1;
+                    if attempts > 2 {
+                        return fail_reply(
+                            writer,
+                            ctx,
+                            SessionFail::Lost(format!("session {id}: close failed: {detail}")),
+                        );
+                    }
+                    match routed.recover(ctx, &detail) {
+                        Ok(n) => notices.extend(n),
+                        Err(fail) => return fail_reply(writer, ctx, fail),
+                    }
+                }
+            },
+        }
+    };
+    for n in &notices {
+        write_status(writer, n)?;
+    }
+    let mut out = std::mem::take(&mut routed.pending);
+    out.extend_from_slice(&closed.scores);
+    write_scores(writer, id, &out)?;
+    let mut body = Vec::with_capacity(8 + 8 + 8 + 1 + 4);
+    body.extend_from_slice(&id.to_le_bytes());
+    body.extend_from_slice(&closed.samples.to_le_bytes());
+    body.extend_from_slice(&closed.flits.to_le_bytes());
+    body.push(closed.padded_tail as u8);
+    body.extend_from_slice(&(closed.tail_valid as u32).to_le_bytes());
+    write_frame(writer, TAG_CLOSED, &body).map_err(wr)
+}
+
+fn handle_suspend(
+    st: &mut RouteState,
+    ctx: &Ctx,
+    writer: &mut impl Write,
+    payload: &[u8],
+) -> std::result::Result<(), NetError> {
+    let mut b = payload;
+    let id = take_u64(&mut b, "suspend session id")?;
+    if !b.is_empty() {
+        return Err(NetError::BadFrame(format!("{} trailing bytes after suspend", b.len())));
+    }
+    let mut routed = claim(st, id)?;
+    let mut notices = match routed.maybe_migrate(ctx) {
+        Ok(n) => n,
+        Err(fail) => return fail_reply(writer, ctx, fail),
+    };
+    let mut attempts = 0u32;
+    let (ticket, scores) = loop {
+        match routed.live().suspend() {
+            Ok(ts) => break ts,
+            Err(e) => match classify(e) {
+                Fail::Refused(code, msg) => {
+                    for n in &notices {
+                        write_status(writer, n)?;
+                    }
+                    return write_frame(writer, TAG_STATUS, &raw_status(code, &msg)).map_err(wr);
+                }
+                Fail::Transport(detail) => {
+                    attempts += 1;
+                    if attempts > 2 {
+                        return fail_reply(
+                            writer,
+                            ctx,
+                            SessionFail::Lost(format!("session {id}: suspend failed: {detail}")),
+                        );
+                    }
+                    match routed.recover(ctx, &detail) {
+                        Ok(n) => notices.extend(n),
+                        Err(fail) => return fail_reply(writer, ctx, fail),
+                    }
+                }
+            },
+        }
+    };
+    for n in &notices {
+        write_status(writer, n)?;
+    }
+    let mut out = std::mem::take(&mut routed.pending);
+    out.extend_from_slice(&scores);
+    write_scores(writer, id, &out)?;
+    let mut body = Vec::with_capacity(8 + ticket.len());
+    body.extend_from_slice(&id.to_le_bytes());
+    body.extend_from_slice(&ticket);
+    write_frame(writer, TAG_SUSPENDED, &body).map_err(wr)
+}
+
+// ---------------------------------------------------------------------------
+// Health prober
+// ---------------------------------------------------------------------------
+
+fn probe_loop(ctx: &Ctx, stop: &AtomicBool) {
+    let period = Duration::from_millis(ctx.cfg.heartbeat_ms.max(1));
+    while !stop.load(Ordering::SeqCst) {
+        // Probe every slot, Down ones included — a successful ping is how
+        // a restarted worker rejoins the ring.
+        for (i, info) in ctx.pool.infos().iter().enumerate() {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let ok = connect_worker(ctx, &info.addr).and_then(|mut up| up.ping()).is_ok();
+            if ok {
+                ctx.stats.pings_ok.fetch_add(1, Ordering::SeqCst);
+                ctx.pool.record_success(i);
+            } else {
+                ctx.stats.pings_failed.fetch_add(1, Ordering::SeqCst);
+                if ctx.pool.record_failure(i) {
+                    ctx.stats.ejections.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+        std::thread::sleep(period);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router
+// ---------------------------------------------------------------------------
+
+/// Decrements the live-connection gauge when a handler ends, by any path.
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The session router process: accept loop, per-connection handler
+/// threads, health prober. See the module docs for the recovery model.
+pub struct Router {
+    addr: SocketAddr,
+    ctx: Arc<Ctx>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    prober: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind `cfg.addr` (port 0 picks a free port) and start routing to
+    /// `cfg.workers`.
+    pub fn start(cfg: &RouterCfg) -> Result<Router> {
+        anyhow::ensure!(
+            !cfg.workers.is_empty(),
+            "[fabric.router] workers must name at least one fsead net address"
+        );
+        let pool = Arc::new(WorkerPool::new(cfg.max_failures));
+        for w in &cfg.workers {
+            pool.add(w);
+        }
+        let stats = Arc::new(RouterStats::default());
+        let ctx = Arc::new(Ctx { pool, stats, cfg: cfg.clone() });
+        let listener = TcpListener::bind(cfg.addr.as_str())
+            .with_context(|| format!("binding the router listener on {}", cfg.addr))?;
+        let local = listener.local_addr().context("resolving the router listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let limit = cfg.max_connections.max(1);
+        let live = Arc::new(AtomicUsize::new(0));
+        let ctx2 = Arc::clone(&ctx);
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("router".into())
+            .spawn(move || loop {
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        if stop2.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        if live.load(Ordering::SeqCst) >= limit {
+                            let _ = write_frame(
+                                &mut stream,
+                                TAG_STATUS,
+                                &encode_status(&NetError::ServerBusy),
+                            );
+                            continue;
+                        }
+                        live.fetch_add(1, Ordering::SeqCst);
+                        let guard = ConnGuard(Arc::clone(&live));
+                        let ctx = Arc::clone(&ctx2);
+                        let _ = std::thread::Builder::new().name("route-conn".into()).spawn(
+                            move || {
+                                let _guard = guard;
+                                let _ = route_connection(stream, &ctx);
+                            },
+                        );
+                    }
+                    Err(e) => {
+                        if stop2.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        std::thread::sleep(accept_retry_delay(&e));
+                    }
+                }
+            })
+            .expect("spawn router accept thread");
+        let prober = if cfg.heartbeat_ms > 0 {
+            let ctx3 = Arc::clone(&ctx);
+            let stop3 = Arc::clone(&stop);
+            Some(
+                std::thread::Builder::new()
+                    .name("router-probe".into())
+                    .spawn(move || probe_loop(&ctx3, &stop3))
+                    .expect("spawn router probe thread"),
+            )
+        } else {
+            None
+        };
+        Ok(Router { addr: local, ctx, stop, accept: Some(accept), prober })
+    }
+
+    /// The bound client-facing address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The worker membership — tests drive joins/drains through this too.
+    pub fn pool(&self) -> Arc<WorkerPool> {
+        Arc::clone(&self.ctx.pool)
+    }
+
+    /// Join a worker (or revive a drained/ejected one): its hash ranges
+    /// re-shard onto it as live sessions hit their next forward.
+    pub fn add_worker(&self, addr: &str) {
+        self.ctx.pool.add(addr);
+    }
+
+    /// Gracefully drain a worker: no new placements, and every session it
+    /// holds migrates away (suspend → carry ticket → resume) at its next
+    /// frame. Returns false for an unknown address.
+    pub fn drain_worker(&self, addr: &str) -> bool {
+        self.ctx.pool.drain(addr)
+    }
+
+    pub fn stats(&self) -> RouterSnapshot {
+        self.ctx.stats.snapshot()
+    }
+
+    /// Stop accepting and join the router threads. Live connections keep
+    /// their sessions until their clients hang up.
+    pub fn stop(mut self) {
+        self.stop_impl();
+    }
+
+    fn stop_impl(&mut self) {
+        if self.accept.is_none() && self.prober.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.prober.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::net::decode_status;
+
+    #[test]
+    fn raw_status_matches_the_wire_codec() {
+        let payload = raw_status(21, "worker lost: boom");
+        let (code, msg) = decode_status(&payload).unwrap();
+        assert_eq!(code, 21);
+        assert_eq!(msg, "worker lost: boom");
+        // Byte-compatible with what encode_status produces for the same
+        // code/message — forwarding a worker refusal is transparent.
+        let owned = encode_status(&NetError::WorkerLost("boom".into()));
+        let (c2, m2) = decode_status(&owned).unwrap();
+        assert_eq!(raw_status(c2, &m2), owned);
+    }
+
+    #[test]
+    fn classify_separates_refusals_from_transport_failures() {
+        let refused = anyhow::Error::new(NetStatus { code: 16, message: "busy".into() });
+        match classify(refused) {
+            Fail::Refused(code, msg) => {
+                assert_eq!(code, 16);
+                assert_eq!(msg, "busy");
+            }
+            Fail::Transport(_) => panic!("a NetStatus must classify as a refusal"),
+        }
+        let io = anyhow::Error::new(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "gone"));
+        assert!(matches!(classify(io), Fail::Transport(_)));
+    }
+
+    #[test]
+    fn stats_snapshot_starts_zeroed() {
+        assert_eq!(RouterStats::default().snapshot(), RouterSnapshot::default());
+    }
+
+    #[test]
+    fn router_refuses_an_empty_worker_list() {
+        let cfg = RouterCfg { addr: "127.0.0.1:0".into(), ..Default::default() };
+        assert!(Router::start(&cfg).is_err());
+    }
+}

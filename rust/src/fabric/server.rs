@@ -548,6 +548,23 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// [`FabricServer::resume`] refused a ticket because no served partition
+/// matches its layout (RM kind / ensemble size / lanes) — the server is
+/// mis-provisioned for the session, which is a deployment fault, not a
+/// corrupt ticket. Typed so the network plane can surface it as its own
+/// `config_mismatch` status code; downcast with
+/// `err.downcast_ref::<ConfigMismatch>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ConfigMismatch(pub String);
+
+impl std::fmt::Display for ConfigMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigMismatch {}
+
 // ---------------------------------------------------------------------------
 // Admission state
 // ---------------------------------------------------------------------------
@@ -1701,6 +1718,10 @@ impl FabricServer {
         let shared = Arc::new(Shared {
             state: Mutex::new(AdmissionState {
                 free: active.iter().map(|p| p.id).collect(),
+                // Distinct bases keep session ids globally unique across a
+                // router's worker fleet, so consistent hashing and resume
+                // duplicate detection never collide between processes.
+                next_session: cfg.server.session_id_base,
                 ..Default::default()
             }),
             freed: Condvar::new(),
@@ -2016,13 +2037,12 @@ impl FabricServer {
             .map(|(id, _)| *id)
             .collect();
         if eligible.is_empty() {
-            bail!(
+            return Err(ConfigMismatch(format!(
                 "resume: no served partition matches the ticket's layout \
                  (rm {:?}, r {}, lanes {})",
-                ticket.kind,
-                ticket.r,
-                ticket.lanes
-            );
+                ticket.kind, ticket.r, ticket.lanes
+            ))
+            .into());
         }
         let pick = {
             let st = self.shared.state.lock().unwrap();

@@ -40,6 +40,33 @@ pub const TICKET_MAGIC: [u8; 4] = *b"FSTK";
 /// server it lands on, which need not be the process that minted it.
 pub const TICKET_VERSION: u8 = 1;
 
+/// Typed ticket-parse failures that callers need to tell apart — the
+/// network plane maps [`TicketError::Version`] onto its own wire status
+/// (`ticket_version`, distinct from plain `bad_ticket`) so a router
+/// resuming onto a worker from a different build fails loud instead of
+/// looking like wire garbage. Recover the variant from an
+/// `anyhow::Error` with `err.downcast_ref::<TicketError>()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TicketError {
+    /// The bytes do not start with the `FSTK` magic.
+    NotATicket,
+    /// Well-formed header, but written by an incompatible layout version.
+    Version { got: u8, want: u8 },
+}
+
+impl std::fmt::Display for TicketError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TicketError::NotATicket => write!(f, "not a session ticket (bad magic)"),
+            TicketError::Version { got, want } => {
+                write!(f, "unsupported ticket version {got} (this build writes {want})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TicketError {}
+
 /// Why a session was parked.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ParkReason {
@@ -285,11 +312,11 @@ impl SessionTicket {
     pub fn from_bytes(bytes: &[u8]) -> Result<SessionTicket> {
         let mut r = Reader::new(bytes);
         if r.take(4)? != TICKET_MAGIC {
-            bail!("not a session ticket (bad magic)");
+            return Err(TicketError::NotATicket.into());
         }
         let version = r.get_u8()?;
         if version != TICKET_VERSION {
-            bail!("unsupported ticket version {version} (this build writes {TICKET_VERSION})");
+            return Err(TicketError::Version { got: version, want: TICKET_VERSION }.into());
         }
         let len = r.get_u32()? as usize;
         let payload = r.take(len)?;
@@ -444,6 +471,24 @@ mod tests {
             flipped[idx] ^= 0x55;
             assert!(SessionTicket::from_bytes(&flipped).is_err(), "flip at {idx} must fail");
         }
+    }
+
+    #[test]
+    fn magic_and_version_failures_are_typed() {
+        let bytes = ticket().to_bytes();
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] ^= 0xFF;
+        let err = SessionTicket::from_bytes(&bad_magic).unwrap_err();
+        assert_eq!(err.downcast_ref::<TicketError>(), Some(&TicketError::NotATicket));
+        // The version byte sits outside the CRC frame, so a mismatched
+        // version from a future build is caught as *version*, not garbage.
+        let mut bad_version = bytes.clone();
+        bad_version[4] = 99;
+        let err = SessionTicket::from_bytes(&bad_version).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<TicketError>(),
+            Some(&TicketError::Version { got: 99, want: TICKET_VERSION })
+        );
     }
 
     #[test]

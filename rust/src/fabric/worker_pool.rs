@@ -1,0 +1,385 @@
+//! Worker membership for the session router: health tracking and a
+//! consistent-hash ring over the downstream `fsead net` processes.
+//!
+//! The ring is the classic virtual-node construction: every *routable*
+//! worker (not ejected, not draining) contributes [`VNODES`] points on a
+//! `u64` circle, hashed from its address alone, and a session id's owner
+//! is the first point clockwise from the id's hash. Because the points
+//! depend only on the worker addresses, ownership is deterministic across
+//! router restarts, and a membership change moves only the hash ranges
+//! adjacent to the joining/leaving worker's points — the property the
+//! drain/re-shard tests pin down.
+//!
+//! Health is consecutive-failure counting: probe or forward failures move
+//! a worker `Healthy → Suspect(n) → Down` (ejected from the ring at
+//! `max_failures`); any success snaps it back to `Healthy`, which lets a
+//! restarted worker rejoin automatically once the prober reaches it.
+//! Every membership or ring-visibility change bumps an epoch counter;
+//! router connection handlers re-check their session's owner when the
+//! epoch moves and migrate lazily.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Virtual nodes per worker — enough to keep ranges balanced for the
+/// small fleets a router fronts (N ≤ a few dozen).
+pub const VNODES: usize = 32;
+
+/// splitmix64 — the ring's mixing function. Dependency-free, stable, and
+/// good enough avalanche for placement (this is load balancing, not
+/// cryptography).
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// FNV-1a over a byte string — seeds the per-worker ring points.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// One worker's health as the router sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerHealth {
+    Healthy,
+    /// `n` consecutive failures — still routable until ejection.
+    Suspect(u32),
+    /// Ejected from the ring; revived by the next successful probe.
+    Down,
+}
+
+/// A snapshot row for stats/tests: one worker's address, health and
+/// session gauge.
+#[derive(Clone, Debug)]
+pub struct WorkerInfo {
+    pub addr: String,
+    pub health: WorkerHealth,
+    pub draining: bool,
+    pub sessions: u64,
+}
+
+struct Slot {
+    addr: String,
+    health: WorkerHealth,
+    draining: bool,
+    sessions: u64,
+}
+
+impl Slot {
+    fn routable(&self) -> bool {
+        self.health != WorkerHealth::Down && !self.draining
+    }
+}
+
+/// Membership + health + ring for a router's worker fleet. All methods
+/// take `&self`; the pool is shared across connection handlers and the
+/// health prober as an `Arc`.
+pub struct WorkerPool {
+    slots: Mutex<Vec<Slot>>,
+    /// Cached ring, rebuilt when `epoch` moves: sorted `(point, slot)`.
+    ring: Mutex<(u64, Vec<(u64, usize)>)>,
+    /// Bumped on every membership / ring-visibility change.
+    epoch: AtomicU64,
+    max_failures: u32,
+}
+
+impl WorkerPool {
+    pub fn new(max_failures: u32) -> WorkerPool {
+        WorkerPool {
+            slots: Mutex::new(Vec::new()),
+            // Epoch starts at 1 so a cached `0` is always stale.
+            ring: Mutex::new((0, Vec::new())),
+            epoch: AtomicU64::new(1),
+            max_failures: max_failures.max(1),
+        }
+    }
+
+    /// Add a worker (or revive/undrain one previously added with the same
+    /// address). Returns its slot index, stable for the pool's lifetime.
+    pub fn add(&self, addr: &str) -> usize {
+        let mut slots = self.slots.lock().unwrap();
+        let idx = match slots.iter().position(|s| s.addr == addr) {
+            Some(i) => {
+                slots[i].health = WorkerHealth::Healthy;
+                slots[i].draining = false;
+                i
+            }
+            None => {
+                slots.push(Slot {
+                    addr: addr.to_string(),
+                    health: WorkerHealth::Healthy,
+                    draining: false,
+                    sessions: 0,
+                });
+                slots.len() - 1
+            }
+        };
+        drop(slots);
+        self.bump();
+        idx
+    }
+
+    /// Graceful leave: stop placing sessions on `addr`; handlers migrate
+    /// its sessions away at their next frame. Returns false for an
+    /// unknown address.
+    pub fn drain(&self, addr: &str) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(i) = slots.iter().position(|s| s.addr == addr) else {
+            return false;
+        };
+        slots[i].draining = true;
+        drop(slots);
+        self.bump();
+        true
+    }
+
+    /// A probe/forward against `idx` succeeded: snap back to `Healthy`
+    /// (reviving an ejected worker — e.g. one restarted after a crash).
+    pub fn record_success(&self, idx: usize) {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(s) = slots.get_mut(idx) else { return };
+        let was = s.health;
+        s.health = WorkerHealth::Healthy;
+        let visibility_changed = was == WorkerHealth::Down;
+        drop(slots);
+        if visibility_changed {
+            self.bump();
+        }
+    }
+
+    /// A probe/forward against `idx` failed. Returns true when this
+    /// failure crossed `max_failures` and ejected the worker.
+    pub fn record_failure(&self, idx: usize) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(s) = slots.get_mut(idx) else { return false };
+        let n = match s.health {
+            WorkerHealth::Healthy => 1,
+            WorkerHealth::Suspect(n) => n + 1,
+            WorkerHealth::Down => return false,
+        };
+        let ejected = n >= self.max_failures;
+        s.health = if ejected { WorkerHealth::Down } else { WorkerHealth::Suspect(n) };
+        drop(slots);
+        if ejected {
+            self.bump();
+        }
+        ejected
+    }
+
+    /// Immediate ejection (e.g. a connection died mid-frame — no point
+    /// counting to `max_failures` against a peer that is gone).
+    pub fn eject(&self, idx: usize) {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(s) = slots.get_mut(idx) else { return };
+        if s.health == WorkerHealth::Down {
+            return;
+        }
+        s.health = WorkerHealth::Down;
+        drop(slots);
+        self.bump();
+    }
+
+    /// The current membership epoch; handlers cache it and re-check their
+    /// session's owner when it moves.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    fn bump(&self) {
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// The ring owner for `key` (hash a session id first — see
+    /// [`splitmix64`]), or `None` when no worker is routable.
+    pub fn owner(&self, key: u64) -> Option<usize> {
+        self.candidates(key).first().copied()
+    }
+
+    /// Every routable worker in ring order starting at `key`'s successor,
+    /// deduplicated — the fail-over preference list: try `[0]`, then `[1]`…
+    pub fn candidates(&self, key: u64) -> Vec<usize> {
+        let slots = self.slots.lock().unwrap();
+        let epoch = self.epoch();
+        let mut ring = self.ring.lock().unwrap();
+        if ring.0 != epoch {
+            let mut points: Vec<(u64, usize)> = Vec::new();
+            for (i, s) in slots.iter().enumerate() {
+                if !s.routable() {
+                    continue;
+                }
+                let base = fnv1a(s.addr.as_bytes());
+                for v in 0..VNODES {
+                    points.push((splitmix64(base ^ (v as u64).wrapping_mul(0x9E37)), i));
+                }
+            }
+            points.sort_unstable();
+            *ring = (epoch, points);
+        }
+        let points = &ring.1;
+        if points.is_empty() {
+            return Vec::new();
+        }
+        let start = points.partition_point(|&(p, _)| p <= key);
+        let mut seen = Vec::new();
+        for off in 0..points.len() {
+            let (_, slot) = points[(start + off) % points.len()];
+            if !seen.contains(&slot) {
+                seen.push(slot);
+            }
+        }
+        seen
+    }
+
+    /// The address of slot `idx` (panics on a bad index — indices come
+    /// from this pool and are never removed).
+    pub fn addr_of(&self, idx: usize) -> String {
+        self.slots.lock().unwrap()[idx].addr.clone()
+    }
+
+    /// Is `idx` currently in the ring (healthy-or-suspect, not draining)?
+    pub fn is_routable(&self, idx: usize) -> bool {
+        self.slots.lock().unwrap().get(idx).map(|s| s.routable()).unwrap_or(false)
+    }
+
+    /// Routable worker count — 0 means new sessions must be shed.
+    pub fn routable_count(&self) -> usize {
+        self.slots.lock().unwrap().iter().filter(|s| s.routable()).count()
+    }
+
+    /// Adjust the live-session gauge for `idx` by `delta`.
+    pub fn session_delta(&self, idx: usize, delta: i64) {
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(s) = slots.get_mut(idx) {
+            s.sessions = s.sessions.saturating_add_signed(delta);
+        }
+    }
+
+    /// Snapshot every worker for stats/tests.
+    pub fn infos(&self) -> Vec<WorkerInfo> {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| WorkerInfo {
+                addr: s.addr.clone(),
+                health: s.health,
+                draining: s.draining,
+                sessions: s.sessions,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(addrs: &[&str]) -> WorkerPool {
+        let p = WorkerPool::new(3);
+        for a in addrs {
+            p.add(a);
+        }
+        p
+    }
+
+    #[test]
+    fn ownership_is_deterministic_and_add_order_independent() {
+        let a = pool(&["h1:1", "h2:2", "h3:3"]);
+        let b = pool(&["h3:3", "h1:1", "h2:2"]);
+        for key in 0..512u64 {
+            let k = splitmix64(key);
+            let oa = a.addr_of(a.owner(k).unwrap());
+            let ob = b.addr_of(b.owner(k).unwrap());
+            assert_eq!(oa, ob, "key {key}: ring must not depend on add order");
+        }
+    }
+
+    #[test]
+    fn join_moves_only_the_new_workers_range() {
+        let p = pool(&["h1:1", "h2:2"]);
+        let keys: Vec<u64> = (0..2048u64).map(splitmix64).collect();
+        let before: Vec<String> =
+            keys.iter().map(|&k| p.addr_of(p.owner(k).unwrap())).collect();
+        p.add("h3:3");
+        let mut moved = 0usize;
+        for (i, &k) in keys.iter().enumerate() {
+            let now = p.addr_of(p.owner(k).unwrap());
+            if now != before[i] {
+                // The consistent-hash contract: a key only ever moves TO
+                // the joining worker, never between the incumbents.
+                assert_eq!(now, "h3:3", "key {i} moved between incumbents");
+                moved += 1;
+            }
+        }
+        // ~1/3 of the space should move; allow a generous band.
+        assert!(
+            moved > keys.len() / 8 && moved < keys.len() * 3 / 4,
+            "implausible moved fraction: {moved}/{}",
+            keys.len()
+        );
+    }
+
+    #[test]
+    fn consecutive_failures_eject_and_success_revives() {
+        let p = pool(&["h1:1", "h2:2"]);
+        let e0 = p.epoch();
+        assert!(!p.record_failure(0));
+        assert!(!p.record_failure(0));
+        assert_eq!(p.infos()[0].health, WorkerHealth::Suspect(2));
+        assert!(p.is_routable(0), "suspect workers stay in the ring");
+        assert!(p.record_failure(0), "third failure ejects at max_failures = 3");
+        assert_eq!(p.infos()[0].health, WorkerHealth::Down);
+        assert!(!p.is_routable(0));
+        assert!(p.epoch() > e0, "ejection must bump the epoch");
+        // Every candidate list now avoids the ejected worker.
+        for key in 0..64u64 {
+            assert!(!p.candidates(splitmix64(key)).contains(&0));
+        }
+        let e1 = p.epoch();
+        p.record_success(0);
+        assert_eq!(p.infos()[0].health, WorkerHealth::Healthy);
+        assert!(p.epoch() > e1, "revival must bump the epoch");
+        assert!(p.is_routable(0));
+    }
+
+    #[test]
+    fn drain_removes_from_ring_but_keeps_the_slot() {
+        let p = pool(&["h1:1", "h2:2"]);
+        assert!(p.drain("h1:1"));
+        assert!(!p.drain("nope:0"));
+        assert!(!p.is_routable(0));
+        assert_eq!(p.routable_count(), 1);
+        for key in 0..64u64 {
+            assert_eq!(p.owner(splitmix64(key)), Some(1));
+        }
+        // Re-adding the same address undrains it.
+        assert_eq!(p.add("h1:1"), 0);
+        assert!(p.is_routable(0));
+    }
+
+    #[test]
+    fn no_routable_workers_means_no_owner() {
+        let p = pool(&["h1:1"]);
+        p.eject(0);
+        assert_eq!(p.owner(42), None);
+        assert!(p.candidates(42).is_empty());
+        assert_eq!(p.routable_count(), 0);
+    }
+
+    #[test]
+    fn session_gauge_tracks_deltas() {
+        let p = pool(&["h1:1"]);
+        p.session_delta(0, 2);
+        p.session_delta(0, -1);
+        assert_eq!(p.infos()[0].sessions, 1);
+        p.session_delta(0, -5);
+        assert_eq!(p.infos()[0].sessions, 0, "gauge saturates at zero");
+    }
+}

@@ -15,9 +15,9 @@ use fsead::data::Dataset;
 use fsead::detectors::DetectorKind;
 use fsead::fabric::net::{
     read_frame, write_frame, NetServer, TAG_CLOSE, TAG_OPEN, TAG_OPENED, TAG_PUSH,
-    TAG_RESUME, TAG_STATUS, STATUS_BAD_FRAME, STATUS_BAD_TICKET, STATUS_FRAME_TOO_LARGE,
-    STATUS_NO_SESSION, STATUS_SATURATED, STATUS_SERVER_BUSY, STATUS_SESSION_OPEN,
-    STATUS_UNKNOWN_TAG,
+    TAG_RESUME, TAG_STATUS, STATUS_BAD_FRAME, STATUS_BAD_TICKET, STATUS_CONFIG_MISMATCH,
+    STATUS_FRAME_TOO_LARGE, STATUS_NO_SESSION, STATUS_SATURATED, STATUS_SERVER_BUSY,
+    STATUS_SESSION_OPEN, STATUS_TICKET_VERSION, STATUS_UNKNOWN_TAG,
 };
 use fsead::fabric::net_client::{NetClient, NetStatus};
 use fsead::fabric::server::{FabricServer, SessionSpec};
@@ -293,6 +293,184 @@ fn admission_refusals_arrive_as_typed_status_codes() {
         }
     }
     second.close().unwrap();
+
+    stop_net(net, server);
+}
+
+#[test]
+fn ping_answers_with_pong_before_during_and_after_a_session() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let (server, net) = start_net(cfg);
+    let addr = net.addr().to_string();
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.ping().unwrap();
+    client.open(3, None, &[]).unwrap();
+    client.ping().unwrap();
+    client.close().unwrap();
+    client.ping().unwrap();
+
+    stop_net(net, server);
+}
+
+#[test]
+fn io_timeout_turns_a_wedged_server_into_an_error_not_a_hang() {
+    // A listener that never accepts: the TCP handshake completes out of the
+    // kernel backlog, the Open frame lands in the socket buffer, and no
+    // reply ever comes. Without a timeout the client would block forever.
+    let wedged = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = wedged.local_addr().unwrap().to_string();
+
+    let t0 = std::time::Instant::now();
+    let mut client = NetClient::connect_timeout(&addr, Duration::from_secs(2)).unwrap();
+    client.set_io_timeout(Some(Duration::from_millis(200))).unwrap();
+    let err = client.open(3, None, &[]).unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "the wedged open must fail by timeout, not hang: {err:#}"
+    );
+    drop(wedged);
+}
+
+#[test]
+fn reconnect_with_backoff_gives_up_at_the_deadline_and_succeeds_when_alive() {
+    // A freshly freed port: connects are refused immediately, so the
+    // back-off loop itself is what spends the deadline.
+    let dead = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let t0 = std::time::Instant::now();
+    let err = NetClient::reconnect_with_backoff(
+        &dead,
+        None,
+        Duration::from_millis(10),
+        Duration::from_millis(300),
+    )
+    .unwrap_err();
+    let spent = t0.elapsed();
+    assert!(
+        spent < Duration::from_secs(5),
+        "gave up too slowly ({spent:?}): {err:#}"
+    );
+
+    // Against a live server the same call connects and serves.
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let (server, net) = start_net(cfg);
+    let mut client = NetClient::reconnect_with_backoff(
+        &net.addr().to_string(),
+        Some(Duration::from_secs(10)),
+        Duration::from_millis(10),
+        Duration::from_secs(5),
+    )
+    .unwrap();
+    client.ping().unwrap();
+    stop_net(net, server);
+}
+
+#[test]
+fn ticket_version_skew_is_refused_with_its_own_wire_code() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let window = cfg.hyper.window;
+    let ds = tiny("skew", 160, 3, 53);
+    let (server, net) = start_net(cfg);
+    let addr = net.addr().to_string();
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.open(ds.d, Some(1), ds.warmup(window)).unwrap();
+    client.push(&ds.data[..32 * ds.d]).unwrap();
+    let (mut ticket, _) = client.suspend().unwrap();
+
+    // The version byte sits at offset 4, outside the CRC frame — exactly
+    // what a ticket written by a different build would present.
+    ticket[4] = 99;
+    let mut resumer = NetClient::connect(&addr).unwrap();
+    let err = resumer.resume(&ticket).unwrap_err();
+    assert_eq!(status_code(&err), STATUS_TICKET_VERSION, "{err:#}");
+
+    // Total garbage stays bad_ticket — the codes are distinct.
+    let mut garbler = NetClient::connect(&addr).unwrap();
+    let err = garbler.resume(b"not a ticket at all").unwrap_err();
+    assert_eq!(status_code(&err), STATUS_BAD_TICKET, "{err:#}");
+
+    stop_net(net, server);
+}
+
+#[test]
+fn resume_on_a_mis_provisioned_server_is_refused_as_config_mismatch() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let window = cfg.hyper.window;
+    let ds = tiny("mismatch", 160, 3, 59);
+    let (server_a, net_a) = start_net(cfg.clone());
+    let mut client = NetClient::connect(&net_a.addr().to_string()).unwrap();
+    client.open(ds.d, Some(1), ds.warmup(window)).unwrap();
+    client.push(&ds.data[..32 * ds.d]).unwrap();
+    let (ticket, _) = client.suspend().unwrap();
+    drop(client);
+    stop_net(net_a, server_a);
+
+    // Server B serves r = 4 partitions: the r = 2 ticket fits no layout
+    // there, and that mis-provisioning must be distinct from bad_ticket.
+    let mut cfg_b = FseadConfig { use_fpga: false, chunk: 16, ..FseadConfig::default() };
+    cfg_b.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 4,
+        stream: 0,
+        lanes: 0,
+    });
+    let (server_b, net_b) = start_net(cfg_b);
+    let mut resumer = NetClient::connect(&net_b.addr().to_string()).unwrap();
+    let err = resumer.resume(&ticket).unwrap_err();
+    assert_eq!(status_code(&err), STATUS_CONFIG_MISMATCH, "{err:#}");
+    stop_net(net_b, server_b);
+}
+
+#[test]
+fn accept_loop_survives_a_connect_and_drop_burst() {
+    let cfg = cpu_cfg(16, &[DetectorKind::Loda]);
+    let window = cfg.hyper.window;
+    let (server, net) = start_net(cfg.clone());
+    let addr = net.addr().to_string();
+
+    // A burst of connections torn down at every stage — immediately, after
+    // a half-written frame, after a whole frame — is the userspace shape
+    // of the aborted-handshake / fd-churn storms the accept loop's retry
+    // classifier exists for. None of it may kill the listener.
+    for i in 0..60 {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        match i % 3 {
+            0 => {}
+            1 => {
+                let _ = stream.write_all(&[TAG_PUSH]);
+            }
+            _ => {
+                let mut open = Vec::new();
+                open.extend_from_slice(&3u32.to_le_bytes());
+                open.extend_from_slice(&0u32.to_le_bytes());
+                open.extend_from_slice(&0u32.to_le_bytes());
+                let _ = write_frame(&mut stream, TAG_OPEN, &open);
+            }
+        }
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+
+    // The listener still serves a full bit-identical round trip.
+    let ds = tiny("burst", 120, 3, 61);
+    let reference = reference_scores(&cfg, &ds, 1);
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut client = loop {
+        // Burst leftovers may briefly hold connection slots; retry.
+        let mut c = NetClient::connect(&addr).unwrap();
+        if c.open(ds.d, Some(1), ds.warmup(window)).is_ok() {
+            break c;
+        }
+        assert!(std::time::Instant::now() < deadline, "listener never recovered");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let mut scores = client.push(&ds.data).unwrap();
+    scores.extend(client.close().unwrap().scores);
+    assert_eq!(scores, reference, "the burst degraded the server");
 
     stop_net(net, server);
 }

@@ -1,0 +1,571 @@
+//! Router resilience end-to-end: sessions sharded across worker processes
+//! must score bit-identically to a direct, uninterrupted `fsead net`
+//! session — through router-driven checkpoints, graceful drain + re-shard
+//! onto a joining worker, and abrupt worker death mid-stream (survivors
+//! absorb the orphans from the router-held ticket). Loss is only ever the
+//! typed, bounded kind; silent divergence is the one unforgivable failure.
+
+use std::io::{BufRead, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use fsead::config::{FseadConfig, PblockCfg, RmKind, RouterCfg};
+use fsead::data::synth::{generate_profile, DatasetProfile};
+use fsead::data::Dataset;
+use fsead::detectors::DetectorKind;
+use fsead::ensemble::ExecMode;
+use fsead::fabric::net::{NetServer, STATUS_REROUTED};
+use fsead::fabric::net_client::NetClient;
+use fsead::fabric::router::Router;
+use fsead::fabric::server::{FabricServer, SessionSpec};
+use fsead::fabric::worker_pool::splitmix64;
+
+fn tiny(name: &'static str, n: usize, d: usize, seed: u64) -> Dataset {
+    let p = DatasetProfile { name, n, d, outliers: n / 20, clusters: 2 };
+    generate_profile(&p, seed)
+}
+
+fn cpu_cfg(exec: ExecMode) -> FseadConfig {
+    let mut cfg = FseadConfig { use_fpga: false, chunk: 16, ..FseadConfig::default() };
+    cfg.exec = exec;
+    // Plenty of session slots: re-shards concentrate every session on the
+    // survivors, and admission must never become the thing under test.
+    cfg.server.sessions_per_partition = 64;
+    cfg.pblocks.push(PblockCfg {
+        id: 1,
+        rm: RmKind::Detector(DetectorKind::Loda),
+        r: 2,
+        stream: 0,
+        lanes: 0,
+    });
+    cfg
+}
+
+/// An in-process worker: the same fabric + net listener `fsead net` runs,
+/// with a distinct session-id base so ids stay unique across the fleet.
+fn start_worker(exec: ExecMode, base: u64) -> (Arc<FabricServer>, NetServer) {
+    let mut cfg = cpu_cfg(exec);
+    cfg.server.session_id_base = base;
+    let server = Arc::new(FabricServer::start(cfg).unwrap());
+    let net = NetServer::start("127.0.0.1:0", Arc::clone(&server)).unwrap();
+    (server, net)
+}
+
+/// Stop the listener, wait for connection handlers to drop their server
+/// clones, then shut the fabric down. Handlers release once the router's
+/// upstream connections die, so the router must be stopped first.
+fn stop_worker(net: NetServer, server: Arc<FabricServer>) {
+    net.stop();
+    let mut server = server;
+    for _ in 0..2000 {
+        match Arc::try_unwrap(server) {
+            Ok(s) => {
+                s.shutdown().unwrap();
+                return;
+            }
+            Err(s) => {
+                server = s;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    panic!("a worker connection handler never released the fabric");
+}
+
+/// In-process reference: the session API end to end, one pblock, never
+/// interrupted. The parity bar every routed stream is held to.
+fn reference_scores(exec: ExecMode, ds: &Dataset) -> Vec<f32> {
+    let cfg = cpu_cfg(exec);
+    let window = cfg.hyper.window;
+    let server = FabricServer::start(cfg).unwrap();
+    let mut session = server.open(SessionSpec::for_dataset(ds, window).on_pblock(1)).unwrap();
+    session.push(&ds.data).unwrap();
+    let scores = session.close().unwrap().scores;
+    server.shutdown().unwrap();
+    scores
+}
+
+/// Router tuned for tests: fast heartbeat, two strikes, checkpoints every
+/// few pushes so the replay window is actually exercised.
+fn test_router(workers: Vec<String>) -> Router {
+    let cfg = RouterCfg {
+        enabled: true,
+        addr: "127.0.0.1:0".into(),
+        workers,
+        heartbeat_ms: 50,
+        max_failures: 2,
+        checkpoint_pushes: 4,
+        connect_timeout_ms: 500,
+        io_timeout_ms: 0,
+        retry_deadline_ms: 5_000,
+        backoff_base_ms: 5,
+        ..RouterCfg::default()
+    };
+    Router::start(&cfg).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// A killable TCP proxy: the router dials the proxy, the proxy pipes bytes
+// to the real worker. `kill()` severs every live connection and refuses
+// new ones — from the router's side, indistinguishable from `kill -9` of
+// the worker process, while the test keeps a clean handle on the fabric.
+// ---------------------------------------------------------------------------
+
+struct Proxy {
+    addr: String,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Proxy {
+    fn start(upstream: String) -> Proxy {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop2 = Arc::clone(&stop);
+        let conns2 = Arc::clone(&conns);
+        let accept = std::thread::spawn(move || {
+            for inbound in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(down) = inbound else { continue };
+                let Ok(up) = TcpStream::connect(&upstream) else { continue };
+                let down2 = down.try_clone().unwrap();
+                let up2 = up.try_clone().unwrap();
+                {
+                    let mut held = conns2.lock().unwrap();
+                    held.push(down.try_clone().unwrap());
+                    held.push(up.try_clone().unwrap());
+                }
+                std::thread::spawn(move || pump(down, up2));
+                std::thread::spawn(move || pump(up, down2));
+            }
+        });
+        Proxy { addr, stop, conns, accept: Some(accept) }
+    }
+
+    fn kill(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept; the loop sees the flag and drops the
+        // listener, so later connects are refused outright.
+        let _ = TcpStream::connect(&self.addr);
+        for s in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Proxy {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+fn pump(mut from: TcpStream, mut to: TcpStream) {
+    let mut buf = [0u8; 4096];
+    loop {
+        match from.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                if to.write_all(&buf[..n]).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = to.shutdown(Shutdown::Both);
+}
+
+/// Which worker address the ring assigns this session to right now.
+fn owner_addr(router: &Router, id: u64) -> String {
+    let pool = router.pool();
+    let idx = pool.owner(splitmix64(id)).expect("at least one routable worker");
+    pool.addr_of(idx)
+}
+
+// ---------------------------------------------------------------------------
+// Transparency: with one worker and nothing failing, the router must be
+// invisible — bit-identical scores, no notices — in both exec modes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn single_worker_router_is_bit_transparent_in_both_exec_modes() {
+    for exec in ExecMode::ALL {
+        let ds = tiny("transparent", 400, 3, 71);
+        let reference = reference_scores(exec, &ds);
+        let window = cpu_cfg(exec).hyper.window;
+
+        let (server, net) = start_worker(exec, 1 << 32);
+        let router = test_router(vec![net.addr().to_string()]);
+
+        let mut client = NetClient::connect(&router.addr().to_string()).unwrap();
+        client.open(ds.d, Some(1), ds.warmup(window)).unwrap();
+        // 7-row blocks: neither flit-aligned nor checkpoint-aligned, so
+        // router checkpoints land on staged partial flits.
+        let mut scores = Vec::new();
+        for block in ds.data.chunks(7 * ds.d) {
+            scores.extend(client.push(block).unwrap());
+        }
+        let closed = client.close().unwrap();
+        scores.extend(closed.scores);
+        assert_eq!(closed.samples, ds.n() as u64, "{exec:?}");
+        assert_eq!(
+            scores, reference,
+            "{exec:?}: routed scores diverged from a direct session"
+        );
+        assert!(
+            client.take_notices().is_empty(),
+            "{exec:?}: a healthy single-worker route must emit no notices"
+        );
+        assert_eq!(router.stats().lost, 0, "{exec:?}");
+
+        drop(client);
+        router.stop();
+        stop_worker(net, server);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Suspend → ticket over the wire → resume, with the router in the middle
+// on both legs. The ticket a routed client holds is portable.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn suspend_and_resume_through_the_router_round_trips_bit_identically() {
+    let exec = ExecMode::Batched;
+    let ds = tiny("ticket-hop", 400, 3, 73);
+    let reference = reference_scores(exec, &ds);
+    let window = cpu_cfg(exec).hyper.window;
+
+    let (server_a, net_a) = start_worker(exec, 1 << 32);
+    let (server_b, net_b) = start_worker(exec, 2 << 32);
+    let router = test_router(vec![net_a.addr().to_string(), net_b.addr().to_string()]);
+    let addr = router.addr().to_string();
+
+    let cut = 150 * ds.d;
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.open(ds.d, Some(1), ds.warmup(window)).unwrap();
+    let mut scores = Vec::new();
+    for block in ds.data[..cut].chunks(11 * ds.d) {
+        scores.extend(client.push(block).unwrap());
+    }
+    let (ticket, flushed) = client.suspend().unwrap();
+    scores.extend(flushed);
+    drop(client);
+
+    let mut resumed = NetClient::connect(&addr).unwrap();
+    resumed.resume(&ticket).unwrap();
+    for block in ds.data[cut..].chunks(11 * ds.d) {
+        scores.extend(resumed.push(block).unwrap());
+    }
+    let closed = resumed.close().unwrap();
+    scores.extend(closed.scores);
+    assert_eq!(scores, reference, "suspend/resume through the router diverged");
+    assert_eq!(router.stats().lost, 0);
+
+    drop(resumed);
+    router.stop();
+    stop_worker(net_a, server_a);
+    stop_worker(net_b, server_b);
+}
+
+// ---------------------------------------------------------------------------
+// Crash recovery: kill a worker mid-stream under multi-session load. The
+// survivors must absorb its sessions from the router-held tickets, the
+// score stream must stay bit-identical, and affected clients must see the
+// `rerouted` notice — never a hang, never silent loss.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn killing_a_worker_mid_stream_reshards_onto_survivors_bit_identically() {
+    for exec in ExecMode::ALL {
+        let window = cpu_cfg(exec).hyper.window;
+        let (server_a, net_a) = start_worker(exec, 1 << 32);
+        let (server_b, net_b) = start_worker(exec, 2 << 32);
+        let mut proxy = Proxy::start(net_a.addr().to_string());
+        let proxied = proxy.addr.clone();
+        let router = test_router(vec![proxied.clone(), net_b.addr().to_string()]);
+        let addr = router.addr().to_string();
+
+        // Open sessions until both workers own at least one — ownership is
+        // a deterministic function of the ring, so peek instead of hoping.
+        let mut sessions = Vec::new();
+        let mut on_proxy = 0usize;
+        let mut on_direct = 0usize;
+        for i in 0..24 {
+            let ds = tiny("kill", 320, 3, 100 + i as u64);
+            let mut client = NetClient::connect(&addr).unwrap();
+            let id = client.open(ds.d, Some(1), ds.warmup(window)).unwrap();
+            if owner_addr(&router, id) == proxied {
+                on_proxy += 1;
+            } else {
+                on_direct += 1;
+            }
+            sessions.push((client, ds, Vec::<f32>::new()));
+            if sessions.len() >= 6 && on_proxy >= 1 && on_direct >= 1 {
+                break;
+            }
+        }
+        assert!(
+            on_proxy >= 1 && on_direct >= 1,
+            "24 sessions never covered both workers — the ring is broken"
+        );
+
+        // First half streams with everything healthy (and checkpoints
+        // firing every 4 pushes).
+        let cut = 160 * 3;
+        for (client, ds, scores) in &mut sessions {
+            for block in ds.data[..cut].chunks(25 * ds.d) {
+                scores.extend(client.push(block).unwrap());
+            }
+        }
+
+        // kill -9, as seen from the router: every byte in flight is gone,
+        // new connects are refused.
+        proxy.kill();
+
+        // Second half: sessions that lived on the dead worker re-shard
+        // onto the survivor from their last router-held checkpoint.
+        for (client, ds, scores) in &mut sessions {
+            for block in ds.data[cut..].chunks(25 * ds.d) {
+                scores.extend(client.push(block).unwrap());
+            }
+            let closed = client.close().unwrap();
+            scores.extend(closed.scores);
+        }
+
+        let mut rerouted_clients = 0usize;
+        for (client, ds, scores) in &mut sessions {
+            let reference = reference_scores(exec, ds);
+            assert_eq!(
+                scores, &reference,
+                "{exec:?}: a re-sharded session diverged from its uninterrupted twin"
+            );
+            let notices = client.take_notices();
+            if notices.iter().any(|n| n.code == STATUS_REROUTED) {
+                rerouted_clients += 1;
+            }
+        }
+        assert!(
+            rerouted_clients >= on_proxy.min(1),
+            "{exec:?}: no client saw the rerouted notice"
+        );
+
+        let stats = router.stats();
+        assert!(stats.rerouted >= 1, "{exec:?}: {stats:?}");
+        assert_eq!(stats.lost, 0, "{exec:?}: sessions were lost, not re-sharded");
+        assert_eq!(stats.gap_samples, 0, "{exec:?}: replay should cover every sample");
+
+        // The heartbeat prober must also notice the corpse and eject it
+        // within a few probe periods.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while router.stats().ejections == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(router.stats().ejections >= 1, "{exec:?}: the dead worker was never ejected");
+
+        drop(sessions);
+        router.stop();
+        stop_worker(net_a, server_a);
+        stop_worker(net_b, server_b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graceful re-shard: join a worker, drain the old one. Every session moves
+// via suspend → carry ticket → resume with zero divergence.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn joining_a_worker_and_draining_the_old_one_migrates_without_divergence() {
+    let exec = ExecMode::Batched;
+    let window = cpu_cfg(exec).hyper.window;
+    let (server_a, net_a) = start_worker(exec, 1 << 32);
+    let (server_b, net_b) = start_worker(exec, 2 << 32);
+    let router = test_router(vec![net_a.addr().to_string()]);
+    let addr = router.addr().to_string();
+
+    let mut sessions = Vec::new();
+    for i in 0..4 {
+        let ds = tiny("drain", 320, 3, 200 + i as u64);
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.open(ds.d, Some(1), ds.warmup(window)).unwrap();
+        sessions.push((client, ds, Vec::<f32>::new()));
+    }
+
+    let cut = 160 * 3;
+    for (client, ds, scores) in &mut sessions {
+        for block in ds.data[..cut].chunks(25 * ds.d) {
+            scores.extend(client.push(block).unwrap());
+        }
+    }
+
+    // B joins the ring; A drains. Every session's owner is now B, and the
+    // next push per session triggers the clean suspend-carry-resume hop.
+    router.add_worker(&net_b.addr().to_string());
+    assert!(router.drain_worker(&net_a.addr().to_string()));
+
+    for (client, ds, scores) in &mut sessions {
+        for block in ds.data[cut..].chunks(25 * ds.d) {
+            scores.extend(client.push(block).unwrap());
+        }
+        let closed = client.close().unwrap();
+        scores.extend(closed.scores);
+    }
+
+    for (client, ds, scores) in &mut sessions {
+        let reference = reference_scores(exec, ds);
+        assert_eq!(scores, &reference, "a drained session diverged while migrating");
+        let notices = client.take_notices();
+        assert!(
+            notices.iter().any(|n| n.code == STATUS_REROUTED),
+            "every session must report its migration off the draining worker"
+        );
+    }
+
+    let stats = router.stats();
+    assert!(stats.rerouted >= sessions.len() as u64, "{stats:?}");
+    assert_eq!(stats.lost, 0, "{stats:?}");
+
+    drop(sessions);
+    router.stop();
+    stop_worker(net_a, server_a);
+    stop_worker(net_b, server_b);
+}
+
+// ---------------------------------------------------------------------------
+// The real thing: kill -9 an actual `fsead net` worker process and let the
+// survivors absorb its sessions. Gated on the binary being built (cargo
+// sets CARGO_BIN_EXE_fsead for integration tests when the bin target
+// exists); skipped silently otherwise so library-only builds stay green.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kill_minus_nine_of_a_worker_process_reshards_onto_survivors() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_fsead") else {
+        eprintln!("skipping: no fsead binary in this build");
+        return;
+    };
+    let exec = ExecMode::Batched;
+
+    // The workers must run the exact config the in-process reference uses.
+    let cfg_path = std::env::temp_dir().join(format!(
+        "fsead-router-resilience-{}.toml",
+        std::process::id()
+    ));
+    std::fs::write(
+        &cfg_path,
+        "[fabric]\nuse_fpga = false\nchunk = 16\nexec = \"batched\"\n\n\
+         [fabric.server]\nsessions_per_partition = 64\n\n\
+         [pblock.1]\nrm = \"loda\"\nr = 2\nstream = 0\n",
+    )
+    .unwrap();
+
+    let mut children = Vec::new();
+    let mut addrs = Vec::new();
+    for i in 0..3u64 {
+        let child = std::process::Command::new(bin)
+            .arg("net")
+            .arg("127.0.0.1:0")
+            .arg(&cfg_path)
+            .arg("--session-base")
+            .arg(((i + 1) << 32).to_string())
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn fsead net worker");
+        children.push(child);
+    }
+    for child in &mut children {
+        let stdout = child.stdout.take().expect("worker stdout piped");
+        let mut lines = std::io::BufReader::new(stdout).lines();
+        let addr = loop {
+            let line = lines
+                .next()
+                .expect("worker exited before announcing its address")
+                .expect("worker stdout read");
+            if let Some(rest) = line.strip_prefix("net plane on ") {
+                break rest.split_whitespace().next().unwrap().to_string();
+            }
+        };
+        addrs.push(addr);
+    }
+
+    let router = test_router(addrs.clone());
+    let addr = router.addr().to_string();
+    let window = cpu_cfg(exec).hyper.window;
+
+    let mut sessions = Vec::new();
+    for i in 0..6 {
+        let ds = tiny("process-kill", 320, 3, 300 + i as u64);
+        let mut client = NetClient::connect(&addr).unwrap();
+        let id = client.open(ds.d, Some(1), ds.warmup(window)).unwrap();
+        let owner = owner_addr(&router, id);
+        sessions.push((client, ds, Vec::<f32>::new(), owner));
+    }
+
+    let cut = 160 * 3;
+    for (client, ds, scores, _) in &mut sessions {
+        for block in ds.data[..cut].chunks(25 * ds.d) {
+            scores.extend(client.push(block).unwrap());
+        }
+    }
+
+    // Kill the worker that owns session 0 — for real, no cleanup handlers.
+    let victim_addr = sessions[0].3.clone();
+    let victim = addrs.iter().position(|a| *a == victim_addr).unwrap();
+    children[victim].kill().unwrap();
+    children[victim].wait().unwrap();
+
+    for (client, ds, scores, _) in &mut sessions {
+        for block in ds.data[cut..].chunks(25 * ds.d) {
+            scores.extend(client.push(block).unwrap());
+        }
+        let closed = client.close().unwrap();
+        scores.extend(closed.scores);
+    }
+
+    for (client, ds, scores, owner) in &mut sessions {
+        let reference = reference_scores(exec, ds);
+        assert_eq!(
+            scores, &reference,
+            "a session (owner {owner}) diverged after the worker was killed"
+        );
+        if *owner == victim_addr {
+            assert!(
+                client.take_notices().iter().any(|n| n.code == STATUS_REROUTED),
+                "the killed worker's client never saw the rerouted notice"
+            );
+        }
+    }
+
+    let stats = router.stats();
+    assert!(stats.rerouted >= 1, "{stats:?}");
+    assert_eq!(stats.lost, 0, "{stats:?}");
+
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while router.stats().ejections == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(router.stats().ejections >= 1, "the killed process was never ejected");
+
+    drop(sessions);
+    router.stop();
+    for mut child in children {
+        if let Some(mut stdin) = child.stdin.take() {
+            let _ = stdin.write_all(b"quit\n");
+        }
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    let _ = std::fs::remove_file(&cfg_path);
+}
